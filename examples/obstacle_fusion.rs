@@ -1,0 +1,67 @@
+//! Obstacle detection with RGB ⊕ thermal Bayesian fusion (the Fig. 4
+//! application), swept across visibility conditions — shows exactly when
+//! and why fusion rescues each single modality.
+//!
+//! ```bash
+//! cargo run --release --example obstacle_fusion -- [frames_per_condition]
+//! ```
+
+use bayes_mem::bayes::FusionOperator;
+use bayes_mem::scene::{
+    fusion_input, DetectorModel, Modality, SceneGenerator, Visibility,
+};
+use bayes_mem::stochastic::{SneBank, SneConfig};
+use bayes_mem::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let frames: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(300);
+    let rgb = DetectorModel::new(Modality::Rgb);
+    let thermal = DetectorModel::new(Modality::Thermal);
+    let fusion = FusionOperator::default();
+    let mut bank = SneBank::new(SneConfig { n_bits: 1_000, ..Default::default() }, 3)?;
+    let mut rng = Rng::seeded(4);
+
+    println!("condition     obstacles   rgb-rate  thermal-rate  fused-rate   rescue(rgb) rescue(th)");
+    for vis in Visibility::ALL {
+        let mut gen = SceneGenerator::with_condition(11, vis);
+        let (mut n, mut hr, mut ht, mut hf) = (0usize, 0usize, 0usize, 0usize);
+        let mut rescued_from_rgb = 0usize; // fused detects, rgb missed
+        let mut rescued_from_th = 0usize;
+        for frame in gen.frames(frames) {
+            for o in &frame.obstacles {
+                n += 1;
+                let p_rgb = rgb.detect(o, vis, &mut rng);
+                let p_th = thermal.detect(o, vis, &mut rng);
+                // Stochastic hardware fusion on the prior-filled inputs.
+                let fused =
+                    fusion.fuse2(&mut bank, fusion_input(p_rgb), fusion_input(p_th))?.fused;
+                let (dr, dt, df) = (p_rgb > 0.5, p_th > 0.5, fused > 0.5);
+                hr += dr as usize;
+                ht += dt as usize;
+                hf += df as usize;
+                rescued_from_rgb += (df && !dr) as usize;
+                rescued_from_th += (df && !dt) as usize;
+            }
+        }
+        let pct = |x: usize| x as f64 / n as f64 * 100.0;
+        println!(
+            "{:<12}  {:>9}   {:>7.1}%  {:>11.1}%  {:>9.1}%   {:>10}  {:>9}",
+            format!("{vis:?}"),
+            n,
+            pct(hr),
+            pct(ht),
+            pct(hf),
+            rescued_from_rgb,
+            rescued_from_th,
+        );
+    }
+    println!("\npaper (Fig. 4b): thermal misses cold obstacles; RGB misses at night;");
+    println!("fusion resolves both target-missing modes and raises confidence.");
+    println!(
+        "hardware: {} fusion decisions, {:.1} ms virtual time, {:.1} µJ",
+        bank.ledger().decisions,
+        bank.ledger().clock.elapsed_ms(),
+        bank.ledger().energy_nj / 1e3
+    );
+    Ok(())
+}

@@ -1,0 +1,134 @@
+//! END-TO-END driver (EXPERIMENTS.md §E2E): the full three-layer system
+//! on a real small workload.
+//!
+//! Pipeline per frame (Movie S1 at system scale):
+//!
+//! ```text
+//! scene generator ─► RGB+thermal detector models ─► ref-31 prior fill
+//!        ─► coordinator (dynamic batcher) ─► fusion operator
+//!             ├─ native backend: memristor-simulator bitstreams
+//!             └─ pjrt backend:   AOT JAX/Pallas artifact (L1 kernel
+//!                                inside the compiled HLO)
+//! ```
+//!
+//! Run both backends and compare: detection gains (paper: +85 % vs
+//! thermal, +19 % vs RGB), decision accuracy vs exact Bayes, software
+//! throughput vs the 2,500 fps virtual hardware rate.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example video_pipeline -- 500
+//! ```
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use bayes_mem::config::{AppConfig, Backend};
+use bayes_mem::coordinator::{Coordinator, DecisionKind};
+use bayes_mem::scene::{fusion_input, VideoWorkload};
+use bayes_mem::util::stats::{mean, quantile};
+
+struct RunReport {
+    backend: &'static str,
+    obstacles: usize,
+    rgb_rate: f64,
+    th_rate: f64,
+    fused_rate: f64,
+    mae: f64,
+    p50_us: f64,
+    p99_us: f64,
+    decisions_per_s: f64,
+}
+
+fn run_backend(backend: Backend, label: &'static str, frames: usize) -> anyhow::Result<RunReport> {
+    let mut cfg = AppConfig::default();
+    cfg.coordinator.backend = backend;
+    cfg.coordinator.max_batch = 16;
+    let coord = Coordinator::start(&cfg)?;
+    let handle = coord.handle();
+    let mut wl = VideoWorkload::new(1234);
+    let t0 = Instant::now();
+    let (mut n, mut hr, mut ht, mut hf) = (0usize, 0usize, 0usize, 0usize);
+    let mut errors = Vec::new();
+    let mut lat = Vec::new();
+    for _ in 0..frames {
+        let det = wl.next_detections();
+        let pending: Vec<_> = det
+            .confidences
+            .iter()
+            .map(|&(r, t)| {
+                (
+                    r,
+                    t,
+                    handle.submit(DecisionKind::Fusion {
+                        posteriors: vec![fusion_input(r), fusion_input(t)],
+                    }),
+                )
+            })
+            .collect();
+        for (p_rgb, p_th, submitted) in pending {
+            n += 1;
+            hr += (p_rgb > 0.5) as usize;
+            ht += (p_th > 0.5) as usize;
+            let d = submitted?.wait_timeout(Duration::from_secs(30))?;
+            hf += (d.posterior > 0.5) as usize;
+            errors.push(d.abs_error());
+            lat.push(d.latency.as_secs_f64() * 1e6);
+        }
+    }
+    let elapsed = t0.elapsed();
+    coord.shutdown();
+    Ok(RunReport {
+        backend: label,
+        obstacles: n,
+        rgb_rate: hr as f64 / n as f64,
+        th_rate: ht as f64 / n as f64,
+        fused_rate: hf as f64 / n as f64,
+        mae: mean(&errors),
+        p50_us: quantile(&lat, 0.5),
+        p99_us: quantile(&lat, 0.99),
+        decisions_per_s: n as f64 / elapsed.as_secs_f64(),
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let frames: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(500);
+    println!("end-to-end video pipeline: {frames} frames per backend\n");
+
+    let mut reports = vec![run_backend(Backend::Native, "native", frames)?];
+    if Path::new("artifacts/manifest.toml").exists() {
+        reports.push(run_backend(Backend::Pjrt, "pjrt", frames)?);
+    } else {
+        println!("(pjrt backend skipped: run `make artifacts` first)\n");
+    }
+
+    println!(
+        "{:<8} {:>9} {:>8} {:>8} {:>8} {:>10} {:>9} {:>9} {:>12}",
+        "backend", "obstacles", "rgb", "thermal", "fused", "MAE", "p50 µs", "p99 µs", "decisions/s"
+    );
+    for r in &reports {
+        println!(
+            "{:<8} {:>9} {:>7.1}% {:>7.1}% {:>7.1}% {:>10.4} {:>9.0} {:>9.0} {:>12.0}",
+            r.backend,
+            r.obstacles,
+            r.rgb_rate * 100.0,
+            r.th_rate * 100.0,
+            r.fused_rate * 100.0,
+            r.mae,
+            r.p50_us,
+            r.p99_us,
+            r.decisions_per_s,
+        );
+    }
+    let r = &reports[0];
+    println!(
+        "\nfusion gains (native): {:+.0} % vs thermal, {:+.0} % vs RGB   (paper: +85 % / +19 %)",
+        (r.fused_rate / r.th_rate - 1.0) * 100.0,
+        (r.fused_rate / r.rgb_rate - 1.0) * 100.0
+    );
+    println!(
+        "virtual hardware: 0.4 ms/decision (2,500 fps/operator); software pipeline \
+         delivers {:.0}× that rate on the native backend",
+        r.decisions_per_s / 2_500.0
+    );
+    Ok(())
+}

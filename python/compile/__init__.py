@@ -1,0 +1,5 @@
+"""Build-time Python: JAX/Pallas model authoring + AOT lowering.
+
+Never imported at runtime — the Rust binary loads the HLO-text artifacts
+this package emits via ``python -m compile.aot``.
+"""

@@ -1,0 +1,125 @@
+"""AOT lowering: JAX/Pallas model -> HLO *text* artifacts for the Rust
+PJRT runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` crate binds) rejects; the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and gen_hlo.py there.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+
+Emits one ``<name>.hlo.txt`` per entrypoint variant plus a
+``manifest.json`` describing shapes, so the Rust side can marshal inputs
+without guessing.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def entrypoints():
+    """name -> (fn, example_args). Tuple outputs (return_tuple=True)."""
+    eps = {}
+
+    def add_inference(batch, n_bits):
+        name = f"inference_b{batch}_n{n_bits}"
+        eps[name] = (
+            lambda p, u: (model.inference_pipeline(p, u),),
+            (f32(batch, 3), f32(batch, 3, n_bits)),
+        )
+
+    def add_fusion(batch, modalities, n_bits):
+        name = f"fusion_b{batch}_m{modalities}_n{n_bits}"
+        eps[name] = (
+            lambda p, u: (model.fusion_pipeline(p, u),),
+            (f32(batch, modalities), f32(batch, modalities + 1, n_bits)),
+        )
+
+    # The paper's 100-bit operators (single decision) plus batched
+    # serving shapes for the coordinator.
+    add_inference(1, 100)
+    add_inference(16, 256)
+    add_inference(64, 256)
+    add_fusion(1, 2, 100)
+    add_fusion(16, 2, 256)
+    add_fusion(64, 2, 256)
+    add_fusion(16, 3, 256)  # three-modal generalisation (Eq. 5)
+
+    eps["detector_b64"] = (
+        lambda x: (model.detector_confidences(x),),
+        (f32(64, model.FEATURE_DIM),),
+    )
+    eps["scene_b64_n256"] = (
+        lambda x, u: (model.scene_pipeline(x, u),),
+        (f32(64, model.FEATURE_DIM), f32(64, 3, 256)),
+    )
+    return eps
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated subset")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    only = set(args.only.split(",")) if args.only else None
+    for name, (fn, specs) in entrypoints().items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [{"shape": list(s.shape), "dtype": "f32"} for s in specs],
+            "outputs": 1,
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    man_path = os.path.join(args.out_dir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {man_path} ({len(manifest)} entrypoints)")
+
+    # TOML-subset manifest for the Rust runtime (parsed by util::tomlmini).
+    toml_path = os.path.join(args.out_dir, "manifest.toml")
+    with open(toml_path, "w") as f:
+        for name in sorted(manifest):
+            ent = manifest[name]
+            f.write(f"[{name}]\n")
+            f.write(f'file = "{ent["file"]}"\n')
+            f.write(f"inputs = {len(ent['inputs'])}\n")
+            for i, spec in enumerate(ent["inputs"]):
+                dims = ",".join(str(d) for d in spec["shape"])
+                f.write(f'input{i} = "{dims}"\n')
+            f.write("\n")
+    print(f"wrote {toml_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Layer-1 kernels: Pallas stochastic-computing datapath + jnp oracle."""
+
+from . import ref, sc_ops  # noqa: F401

@@ -1,0 +1,68 @@
+"""Pure-jnp oracle for the L1 Pallas kernels.
+
+Same datapath as :mod:`sc_ops`, written with plain vectorised jnp (CORDIV
+via ``lax.scan``). pytest asserts the Pallas kernels match this module
+bit-for-bit on identical uniform inputs, which is the core correctness
+signal for Layer 1.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def encode_ref(probs, uniforms):
+    """Bernoulli bits: (B, S) probs + (B, S, N) uniforms -> (B, S, N)."""
+    return (uniforms < probs[..., None]).astype(jnp.float32)
+
+
+def cordiv_ref(num, den):
+    """CORDIV over the last axis via scan (bit-serial DFF)."""
+
+    def step(dff, nd):
+        nk, dk = nd
+        q = dk * nk + (1.0 - dk) * dff
+        return q, q
+
+    # Move the bit axis to the front for scan.
+    num_t = jnp.moveaxis(num, -1, 0)
+    den_t = jnp.moveaxis(den, -1, 0)
+    dff0 = jnp.zeros(num.shape[:-1], jnp.float32)
+    _, out = jax.lax.scan(step, dff0, (num_t, den_t))
+    return jnp.moveaxis(out, 0, -1)
+
+
+def fusion_ref(probs, uniforms):
+    """Reference for :func:`sc_ops.fusion_stochastic`."""
+    m = probs.shape[1]
+    streams = encode_ref(probs, uniforms[:, :m, :])
+    half = (uniforms[:, m, :] < 0.5).astype(jnp.float32)
+    prod = jnp.prod(streams, axis=1)
+    cprod = jnp.prod(1.0 - streams, axis=1)
+    num = prod * half
+    den = half * prod + (1.0 - half) * cprod
+    quot = cordiv_ref(num, den)
+    return jnp.mean(quot, axis=-1)
+
+
+def inference_ref(probs, uniforms):
+    """Reference for :func:`sc_ops.inference_stochastic`."""
+    a = encode_ref(probs[:, 0:1], uniforms[:, 0:1, :])[:, 0, :]
+    b1 = encode_ref(probs[:, 1:2], uniforms[:, 1:2, :])[:, 0, :]
+    b0 = encode_ref(probs[:, 2:3], uniforms[:, 2:3, :])[:, 0, :]
+    num = a * b1
+    den = a * b1 + (1.0 - a) * b0
+    quot = cordiv_ref(num, den)
+    return jnp.stack([jnp.mean(quot, axis=-1), jnp.mean(den, axis=-1)], axis=-1)
+
+
+def exact_fusion(probs):
+    """Closed-form M-modal fusion with uniform prior (Eq. 5 normalized)."""
+    num = jnp.prod(probs, axis=-1)
+    cnum = jnp.prod(1.0 - probs, axis=-1)
+    return num / (num + cnum)
+
+
+def exact_posterior(pa, pba, pbna):
+    """Closed-form Eq. 1 posterior."""
+    num = pa * pba
+    return num / (num + (1.0 - pa) * pbna)

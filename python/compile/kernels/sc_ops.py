@@ -1,0 +1,210 @@
+"""Layer-1 Pallas kernels: the stochastic-computing datapath.
+
+The compute hot-spot of the paper's system is the bit-level Bayesian
+operator datapath: encode Bernoulli streams from uniform randoms, run the
+probabilistic-logic network (AND multiplier, MUX weighted adder), divide
+with CORDIV (MUX + D-flip-flop), and pop-count the quotient. These kernels
+execute that datapath for a whole *batch* of decisions at once.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): bits live on the last
+(lane) axis so the VPU sees 8x128 tiles of bit words; the batch axis is
+the Pallas grid dimension; each grid step holds its ``(TB, ...)`` block in
+VMEM; the CORDIV carry is a ``(TB,)`` vector register walked across the
+bit axis by a ``fori_loop``. ``interpret=True`` everywhere: the CPU PJRT
+plugin cannot run Mosaic custom-calls, and the AOT artifact must execute
+on the Rust CPU client (see /opt/xla-example/README.md).
+
+Bits are carried as ``float32`` 0.0/1.0 — on TPU these would be packed
+lanes; in interpret mode f32 keeps XLA's elementwise ops trivially
+correct, and the logic algebra (AND = a*b, NOT = 1-a, MUX = s*b+(1-s)*a)
+is exact on {0,1}.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default batch tile; callers may pass a smaller batch which pads up.
+BATCH_TILE = 16
+
+
+def _encode(u, p):
+    """Bernoulli bits from uniforms: bit_k = 1[u_k < p] (broadcast p)."""
+    return (u < p[..., None]).astype(jnp.float32)
+
+
+def _cordiv(num, den):
+    """CORDIV over the last axis: q_k = den_k ? num_k : DFF.
+
+    ``num``/``den`` are (..., N) float 0/1 tensors. The D-flip-flop carry
+    makes this inherently bit-serial, so it is a ``fori_loop`` across the
+    bit axis with a (...,)-shaped carry held in registers.
+    """
+    n_bits = num.shape[-1]
+    out0 = jnp.zeros_like(num)
+    dff0 = jnp.zeros(num.shape[:-1], jnp.float32)
+
+    def body(k, carry):
+        out, dff = carry
+        nk = jax.lax.dynamic_index_in_dim(num, k, axis=-1, keepdims=False)
+        dk = jax.lax.dynamic_index_in_dim(den, k, axis=-1, keepdims=False)
+        q = dk * nk + (1.0 - dk) * dff
+        dff = dk * nk + (1.0 - dk) * dff
+        out = jax.lax.dynamic_update_index_in_dim(out, q, k, axis=-1)
+        return out, dff
+
+    out, _ = jax.lax.fori_loop(0, n_bits, body, (out0, dff0))
+    return out
+
+
+def _fusion_kernel(p_ref, u_ref, o_ref):
+    """Fusion datapath for one batch tile.
+
+    p_ref: (TB, M)      per-modality posteriors P(y|x_i)
+    u_ref: (TB, M+1, N) uniforms — one SNE stream per modality + the
+                        half-select stream of the normalizing MUX
+    o_ref: (TB,)        fused posterior estimates
+    """
+    p = p_ref[...]
+    u = u_ref[...]
+    m = p.shape[1]
+    # SNE array: stream i encodes p_i; the last uniform block is the 1/2
+    # select (encode at exactly 0.5).
+    streams = _encode(u[:, :m, :], p)  # (TB, M, N)
+    half = (u[:, m, :] < 0.5).astype(jnp.float32)  # (TB, N)
+    # Chained probabilistic ANDs: ∏ p_i and ∏ (1-p_i).
+    prod = jnp.prod(streams, axis=1)  # (TB, N)
+    cprod = jnp.prod(1.0 - streams, axis=1)
+    # Normalizing denominator (MUX, select = half) and numerator (AND with
+    # the same select -> bitwise subset: the CORDIV precondition).
+    num = prod * half
+    den = half * prod + (1.0 - half) * cprod
+    quot = _cordiv(num, den)
+    o_ref[...] = jnp.mean(quot, axis=-1)
+
+
+def _inference_kernel(p_ref, u_ref, o_ref):
+    """Bayesian-inference datapath (Eq. 1) for one batch tile.
+
+    p_ref: (TB, 3)    [P(A), P(B|A), P(B|notA)]
+    u_ref: (TB, 3, N) uniforms, one per SNE
+    o_ref: (TB, 2)    [posterior, marginal] estimates
+    """
+    p = p_ref[...]
+    u = u_ref[...]
+    a = _encode(u[:, 0, :], p[:, 0])
+    b1 = _encode(u[:, 1, :], p[:, 1])
+    b0 = _encode(u[:, 2, :], p[:, 2])
+    num = a * b1                                # AND multiplier
+    den = a * b1 + (1.0 - a) * b0               # MUX weighted adder (sel=a)
+    quot = _cordiv(num, den)
+    o_ref[...] = jnp.stack(
+        [jnp.mean(quot, axis=-1), jnp.mean(den, axis=-1)], axis=-1
+    )
+
+
+def _encode_kernel(p_ref, u_ref, o_ref):
+    """Plain SNE array: encode a (TB, S) matrix of probabilities."""
+    o_ref[...] = _encode(u_ref[...], p_ref[...])
+
+
+def _grid_call(kernel, out_shape, batch, tile, *operands):
+    """Launch ``kernel`` over a 1-D batch grid with ``tile`` rows/step."""
+    grid = (batch // tile,)
+
+    def bspec(rank):
+        # Block covers the full trailing axes; batch axis is tiled.
+        return pl.BlockSpec(
+            (tile,) + (None,) * 0,  # placeholder; real specs built below
+        )
+
+    del bspec  # specs built explicitly per operand below
+    in_specs = []
+    for op in operands:
+        block = (tile,) + op.shape[1:]
+        in_specs.append(
+            pl.BlockSpec(block, lambda i, _nd=len(block): (i,) + (0,) * (_nd - 1))
+        )
+    out_block = (tile,) + out_shape.shape[1:]
+    out_spec = pl.BlockSpec(
+        out_block, lambda i, _nd=len(out_block): (i,) + (0,) * (_nd - 1)
+    )
+    return pl.pallas_call(
+        kernel,
+        out_shape=out_shape,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        interpret=True,
+    )(*operands)
+
+
+def _pad_batch(x, tile):
+    b = x.shape[0]
+    pad = (-b) % tile
+    if pad == 0:
+        return x
+    return jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def fusion_stochastic(probs, uniforms, tile=BATCH_TILE):
+    """Batched stochastic Bayesian fusion.
+
+    probs:    (B, M) float32 in [0, 1]
+    uniforms: (B, M+1, N) float32 in [0, 1)
+    returns:  (B,) fused posterior estimates
+    """
+    b = probs.shape[0]
+    probs_p = _pad_batch(probs.astype(jnp.float32), tile)
+    unis_p = _pad_batch(uniforms.astype(jnp.float32), tile)
+    out = _grid_call(
+        _fusion_kernel,
+        jax.ShapeDtypeStruct((probs_p.shape[0],), jnp.float32),
+        probs_p.shape[0],
+        tile,
+        probs_p,
+        unis_p,
+    )
+    return out[:b]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def inference_stochastic(probs, uniforms, tile=BATCH_TILE):
+    """Batched stochastic Bayesian inference (Eq. 1).
+
+    probs:    (B, 3) float32 — [P(A), P(B|A), P(B|notA)] rows
+    uniforms: (B, 3, N) float32
+    returns:  (B, 2) — [posterior, marginal] rows
+    """
+    b = probs.shape[0]
+    probs_p = _pad_batch(probs.astype(jnp.float32), tile)
+    unis_p = _pad_batch(uniforms.astype(jnp.float32), tile)
+    out = _grid_call(
+        _inference_kernel,
+        jax.ShapeDtypeStruct((probs_p.shape[0], 2), jnp.float32),
+        probs_p.shape[0],
+        tile,
+        probs_p,
+        unis_p,
+    )
+    return out[:b]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def encode_stochastic(probs, uniforms, tile=BATCH_TILE):
+    """Batched SNE encode: (B, S) probs + (B, S, N) uniforms -> bit tensor."""
+    b = probs.shape[0]
+    probs_p = _pad_batch(probs.astype(jnp.float32), tile)
+    unis_p = _pad_batch(uniforms.astype(jnp.float32), tile)
+    out = _grid_call(
+        _encode_kernel,
+        jax.ShapeDtypeStruct(unis_p.shape, jnp.float32),
+        probs_p.shape[0],
+        tile,
+        probs_p,
+        unis_p,
+    )
+    return out[:b]

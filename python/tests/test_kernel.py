@@ -1,0 +1,125 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle, plus
+convergence of the stochastic datapath to closed-form Bayes.
+
+Hypothesis sweeps shapes, bit-lengths and probability ranges; the kernel
+and the oracle must agree *bit-for-bit* on identical uniforms.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, sc_ops
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand(seed, *shape):
+    return np.random.default_rng(seed).uniform(0, 1, shape).astype(np.float32)
+
+
+@given(
+    batch=st.integers(1, 33),
+    modalities=st.integers(2, 4),
+    n_bits=st.sampled_from([32, 100, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fusion_kernel_matches_ref(batch, modalities, n_bits, seed):
+    rng = np.random.default_rng(seed)
+    p = rng.uniform(0.02, 0.98, (batch, modalities)).astype(np.float32)
+    u = _rand(seed + 1, batch, modalities + 1, n_bits)
+    got = sc_ops.fusion_stochastic(jnp.array(p), jnp.array(u), tile=min(16, batch))
+    want = ref.fusion_ref(jnp.array(p), jnp.array(u))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0, rtol=0)
+
+
+@given(
+    batch=st.integers(1, 33),
+    n_bits=st.sampled_from([32, 100, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_inference_kernel_matches_ref(batch, n_bits, seed):
+    rng = np.random.default_rng(seed)
+    p = rng.uniform(0.05, 0.95, (batch, 3)).astype(np.float32)
+    u = _rand(seed + 1, batch, 3, n_bits)
+    got = sc_ops.inference_stochastic(jnp.array(p), jnp.array(u), tile=min(16, batch))
+    want = ref.inference_ref(jnp.array(p), jnp.array(u))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0, rtol=0)
+
+
+@given(
+    batch=st.integers(1, 17),
+    streams=st.integers(1, 5),
+    n_bits=st.sampled_from([64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_encode_kernel_matches_ref(batch, streams, n_bits, seed):
+    rng = np.random.default_rng(seed)
+    p = rng.uniform(0, 1, (batch, streams)).astype(np.float32)
+    u = _rand(seed + 1, batch, streams, n_bits)
+    got = sc_ops.encode_stochastic(jnp.array(p), jnp.array(u), tile=min(16, batch))
+    want = ref.encode_ref(jnp.array(p), jnp.array(u))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=0, rtol=0)
+    # Bits are exactly {0, 1} and mean ~ p.
+    bits = np.asarray(got)
+    assert set(np.unique(bits)).issubset({0.0, 1.0})
+
+
+def test_encode_density_matches_probability():
+    p = jnp.array([[0.1, 0.5, 0.9]], jnp.float32)
+    u = jnp.array(_rand(7, 1, 3, 20_000))
+    bits = sc_ops.encode_stochastic(p, u, tile=1)
+    dens = np.asarray(bits.mean(axis=-1))[0]
+    np.testing.assert_allclose(dens, [0.1, 0.5, 0.9], atol=0.02)
+
+
+def test_fusion_converges_to_exact():
+    rng = np.random.default_rng(3)
+    p = rng.uniform(0.2, 0.9, (8, 2)).astype(np.float32)
+    u = jnp.array(_rand(4, 8, 3, 65_536))
+    got = np.asarray(sc_ops.fusion_stochastic(jnp.array(p), u, tile=8))
+    want = np.asarray(ref.exact_fusion(jnp.array(p)))
+    np.testing.assert_allclose(got, want, atol=0.03)
+
+
+def test_inference_converges_to_exact():
+    rng = np.random.default_rng(5)
+    p = rng.uniform(0.2, 0.9, (8, 3)).astype(np.float32)
+    u = jnp.array(_rand(6, 8, 3, 65_536))
+    got = np.asarray(sc_ops.inference_stochastic(jnp.array(p), u, tile=8))
+    want = np.asarray(ref.exact_posterior(p[:, 0], p[:, 1], p[:, 2]))
+    np.testing.assert_allclose(got[:, 0], want, atol=0.03)
+    marg = p[:, 0] * p[:, 1] + (1 - p[:, 0]) * p[:, 2]
+    np.testing.assert_allclose(got[:, 1], marg, atol=0.02)
+
+
+def test_fig3b_scenario_through_kernel():
+    # P(A)=0.57, P(B|A)=0.77, P(B|notA)=0.655 -> posterior ~0.609, P(B)~0.72.
+    p = jnp.array([[0.57, 0.77, 0.655]], jnp.float32)
+    u = jnp.array(_rand(8, 1, 3, 65_536))
+    got = np.asarray(sc_ops.inference_stochastic(p, u, tile=1))[0]
+    assert abs(got[0] - 0.609) < 0.03, got
+    assert abs(got[1] - 0.720) < 0.02, got
+
+
+def test_cordiv_ref_divides_nested_streams():
+    rng = np.random.default_rng(9)
+    n = 50_000
+    u = rng.uniform(0, 1, (1, n)).astype(np.float32)
+    a = (u < 0.3).astype(np.float32)
+    b = (u < 0.6).astype(np.float32)
+    q = np.asarray(ref.cordiv_ref(jnp.array(a), jnp.array(b)))
+    assert abs(q.mean() - 0.5) < 0.02  # 0.3/0.6
+
+
+@pytest.mark.parametrize("batch", [1, 5, 16, 40])
+def test_batch_padding_is_transparent(batch):
+    # Results for row i must not depend on the batch padding.
+    p = np.full((batch, 2), 0.7, np.float32)
+    u = _rand(11, batch, 3, 128)
+    got = np.asarray(sc_ops.fusion_stochastic(jnp.array(p), jnp.array(u), tile=min(16, batch)))
+    want = np.asarray(ref.fusion_ref(jnp.array(p), jnp.array(u)))
+    np.testing.assert_allclose(got, want, atol=0, rtol=0)
+    assert got.shape == (batch,)

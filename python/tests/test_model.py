@@ -1,0 +1,84 @@
+"""L2 model tests: detector heads, pipelines, and AOT round-trip."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def test_detector_weights_mirror_rust_constants():
+    # These constants MUST equal rust/src/scene/detector.rs.
+    np.testing.assert_allclose(
+        np.asarray(model.W_RGB), [0.0, 3.2, 3.8, -3.0, -2.2, 1.0]
+    )
+    np.testing.assert_allclose(float(model.B_RGB), -2.6, rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(model.W_THERMAL), [6.0, 0.0, 0.0, -1.5, -3.2, 0.8]
+    )
+    np.testing.assert_allclose(float(model.B_THERMAL), -2.7, rtol=1e-6)
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_detector_confidences_bounded(seed):
+    x = np.random.default_rng(seed).uniform(0, 1, (9, 6)).astype(np.float32)
+    c = np.asarray(model.detector_confidences(jnp.array(x)))
+    assert c.shape == (9, 2)
+    assert ((c > 0) & (c < 1)).all()
+
+
+def test_fusion_input_prior_fill():
+    raw = jnp.array([0.2, 0.5, 0.51, 0.99], jnp.float32)
+    out = np.asarray(model.fusion_input(raw))
+    np.testing.assert_allclose(out, [0.5, 0.5, 0.51, 0.98], atol=1e-6)
+
+
+def test_scene_pipeline_shapes_and_semantics():
+    rng = np.random.default_rng(2)
+    feats = rng.uniform(0, 1, (16, 6)).astype(np.float32)
+    u = rng.uniform(0, 1, (16, 3, 256)).astype(np.float32)
+    out = np.asarray(model.scene_pipeline(jnp.array(feats), jnp.array(u)))
+    assert out.shape == (16, 3)
+    conf = np.asarray(model.detector_confidences(jnp.array(feats)))
+    np.testing.assert_allclose(out[:, :2], conf, atol=1e-6)
+    # Fused column approximates exact fusion of the prior-filled inputs.
+    fin = np.asarray(model.fusion_input(jnp.array(conf)))
+    exact = np.asarray(ref.exact_fusion(jnp.array(fin)))
+    assert np.abs(out[:, 2] - exact).mean() < 0.1  # 256-bit precision
+
+
+def test_exact_pipelines():
+    p = jnp.array([[0.8, 0.7], [0.5, 0.5]], jnp.float32)
+    f = np.asarray(model.exact_fusion_pipeline(p))
+    np.testing.assert_allclose(f, [0.56 / (0.56 + 0.06), 0.5], atol=1e-6)
+    q = jnp.array([[0.57, 0.77, 0.655]], jnp.float32)
+    post = np.asarray(model.exact_inference_pipeline(q))
+    assert abs(post[0] - 0.609) < 0.005
+
+
+def test_aot_emits_parseable_artifacts():
+    with tempfile.TemporaryDirectory() as td:
+        subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", td,
+             "--only", "fusion_b1_m2_n100,detector_b64"],
+            check=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+        with open(os.path.join(td, "manifest.json")) as f:
+            man = json.load(f)
+        assert set(man) == {"fusion_b1_m2_n100", "detector_b64"}
+        hlo = open(os.path.join(td, "fusion_b1_m2_n100.hlo.txt")).read()
+        assert "HloModule" in hlo
+        toml = open(os.path.join(td, "manifest.toml")).read()
+        assert "[detector_b64]" in toml
+        assert 'input0 = "64,6"' in toml

@@ -1,0 +1,100 @@
+//! Coordinator / serving-layer benches: end-to-end decision latency and
+//! throughput under batching — the Movie S1 "high-throughput video"
+//! serving claim, measured as software wall-clock against the 2,500 fps
+//! virtual hardware rate.
+
+use std::time::{Duration, Instant};
+
+use bayes_mem::benchkit::Bench;
+use bayes_mem::config::AppConfig;
+use bayes_mem::device::WearPolicy;
+use bayes_mem::coordinator::{Batcher, Coordinator, DecisionKind};
+use bayes_mem::scene::{fusion_input, VideoWorkload};
+
+fn inference_kind() -> DecisionKind {
+    DecisionKind::Inference { prior: 0.57, likelihood: 0.77, likelihood_not: 0.655 }
+}
+
+/// Probe-station config: full-window benches push banks far past the
+/// 10^6-cycle endurance budget by design, so wear rotation is disabled.
+fn bench_config() -> AppConfig {
+    let mut cfg = AppConfig::default();
+    cfg.sne.wear_policy = WearPolicy::Ignore;
+    cfg
+}
+
+fn main() {
+    let mut b = Bench::new("coordinator");
+
+    // Closed-loop single-stream latency: submit + wait, one in flight.
+    let cfg = bench_config();
+    let coord = Coordinator::start(&cfg).unwrap();
+    let handle = coord.handle();
+    b.bench("closed_loop_decision", || {
+        std::hint::black_box(handle.decide(inference_kind()).unwrap().posterior);
+    });
+
+    // Open-loop batched throughput: 256 in flight.
+    b.bench("open_loop_256_inflight", || {
+        let pending: Vec<_> =
+            (0..256).map(|_| handle.submit(inference_kind()).unwrap()).collect();
+        for p in pending {
+            std::hint::black_box(p.wait().unwrap().posterior);
+        }
+    });
+    coord.shutdown();
+
+    // Movie S1 end-to-end: video frames -> fusion decisions through the
+    // coordinator; report decisions/s (one iteration = one frame).
+    let cfg = bench_config();
+    let coord = Coordinator::start(&cfg).unwrap();
+    let handle = coord.handle();
+    let mut wl = VideoWorkload::new(9);
+    let t0 = Instant::now();
+    let mut decisions = 0usize;
+    b.bench("movie_s1_frame_via_coordinator", || {
+        let det = wl.next_detections();
+        let pending: Vec<_> = det
+            .confidences
+            .iter()
+            .map(|&(r, t)| {
+                handle
+                    .submit(DecisionKind::Fusion {
+                        posteriors: vec![fusion_input(r), fusion_input(t)],
+                    })
+                    .unwrap()
+            })
+            .collect();
+        decisions += pending.len();
+        for p in pending {
+            std::hint::black_box(p.wait().unwrap().posterior);
+        }
+    });
+    let rate = decisions as f64 / t0.elapsed().as_secs_f64();
+    println!(
+        "  movie_s1 software decision rate: {rate:.0} decisions/s \
+         (virtual hardware target: 2,500 fps/operator)"
+    );
+    coord.shutdown();
+
+    // Batcher microbenchmark (no threads): push+flush cycle.
+    let mut batcher = Batcher::new(16, Duration::from_micros(400));
+    let (tx, _rx) = std::sync::mpsc::channel();
+    std::mem::forget(_rx);
+    let mut id = 0u64;
+    b.bench("batcher_push", || {
+        id += 1;
+        let req = bayes_mem::coordinator::DecisionRequest {
+            id,
+            kind: inference_kind(),
+            enqueued: Instant::now(),
+            deadline: None,
+            reply: tx.clone(),
+        };
+        if let Some(batch) = batcher.push(req) {
+            std::hint::black_box(batch.len());
+        }
+    });
+
+    b.finish();
+}

@@ -1,0 +1,44 @@
+//! Device-model benches — the memristor simulator substrate (Fig. 1/S2
+//! harness costs) and the RNG hot path underneath the SNE fast path.
+
+use bayes_mem::benchkit::Bench;
+use bayes_mem::device::{DeviceParams, Memristor, TransientModel};
+use bayes_mem::util::Rng;
+
+fn main() {
+    let mut b = Bench::new("device");
+    let mut rng = Rng::seeded(1);
+
+    b.bench("rng_next_u64", || {
+        std::hint::black_box(rng.next_u64());
+    });
+    b.bench("rng_normal", || {
+        std::hint::black_box(rng.normal());
+    });
+
+    // Full pulse-by-pulse device model (the slow path the SNE fast path
+    // bypasses when drift_coupling == 0).
+    let mut dev = Memristor::new(DeviceParams::default());
+    b.bench("memristor_pulse", || {
+        std::hint::black_box(dev.pulse(2.3, &mut rng).switched);
+    });
+
+    let mut dev_drift =
+        Memristor::new(DeviceParams { drift_coupling: 0.5, ..Default::default() });
+    b.bench("memristor_pulse_with_drift", || {
+        std::hint::black_box(dev_drift.pulse(2.3, &mut rng).switched);
+    });
+
+    // Fig. 1b harness unit: one 64-point sweep cycle.
+    b.bench("memristor_sweep_cycle_64pt", || {
+        std::hint::black_box(dev.sweep_cycle(2.5, 64, &mut rng).vth);
+    });
+
+    // Fig. S2 harness unit: one 2 µs transient at 1 ns resolution.
+    let tm = TransientModel::new(DeviceParams::default());
+    b.bench("transient_pulse_response_2us", || {
+        std::hint::black_box(tm.pulse_response(2.5, 2_000.0, 1.0, &mut rng).switch_energy_nj);
+    });
+
+    b.finish();
+}

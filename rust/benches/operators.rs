@@ -1,0 +1,86 @@
+//! Operator-level benches — the per-decision costs behind every paper
+//! latency/throughput claim (§II 0.4 ms / 2,500 fps, bit-length ablation)
+//! plus the SC primitive micro-benchmarks.
+
+use bayes_mem::bayes::{FusionOperator, InferenceOperator};
+use bayes_mem::benchkit::Bench;
+use bayes_mem::device::WearPolicy;
+use bayes_mem::logic::{cordiv, BooleanOp, CorrelationMode, ProbGate};
+use bayes_mem::stochastic::{pearson, scc, SneBank, SneConfig};
+
+fn bank(n_bits: usize, seed: u64) -> SneBank {
+    // Probe-station mode: benches push devices far past the 10^6-cycle
+    // endurance budget by design, so wear rotation is disabled.
+    let cfg = SneConfig { n_bits, wear_policy: WearPolicy::Ignore, ..Default::default() };
+    SneBank::new(cfg, seed).unwrap()
+}
+
+fn main() {
+    let mut b = Bench::new("operators");
+
+    // §II / Fig. 3b: one 100-bit inference decision (paper hardware:
+    // 0.4 ms virtual; the simulator must be far faster than that so the
+    // virtual clock dominates).
+    let mut bank100 = bank(100, 1);
+    let inf = InferenceOperator::default();
+    b.bench("inference_decision_100bit", || {
+        let r = inf.infer_with_likelihoods(&mut bank100, 0.57, 0.77, 0.655);
+        std::hint::black_box(r.posterior);
+    });
+
+    // Fig. 4 / Movie S1: one 100-bit two-modal fusion decision.
+    let fus = FusionOperator::default();
+    b.bench("fusion2_decision_100bit", || {
+        let r = fus.fuse2(&mut bank100, 0.8, 0.7).unwrap();
+        std::hint::black_box(r.fused);
+    });
+
+    // Eq. 5 generalisation: four-modal fusion.
+    b.bench("fusion4_decision_100bit", || {
+        let r = fus.fuse(&mut bank100, &[0.8, 0.7, 0.6, 0.9]).unwrap();
+        std::hint::black_box(r.fused);
+    });
+
+    // Bit-length ablation (precision ↔ cost): decision cost vs N.
+    for n_bits in [16usize, 256, 1024, 4096] {
+        let mut bk = bank(n_bits, 2);
+        b.bench(&format!("inference_decision_{n_bits}bit"), || {
+            let r = inf.infer_with_likelihoods(&mut bk, 0.57, 0.77, 0.655);
+            std::hint::black_box(r.posterior);
+        });
+    }
+
+    // SC primitives: encode (SNE array), gate ops, CORDIV, correlation.
+    let mut bank64k = bank(65_536, 3);
+    b.bench_units("sne_encode_64kbit", 65_536.0, "bits", || {
+        let s = bank64k.encode(0.57).unwrap();
+        std::hint::black_box(s.count_ones());
+    });
+    let a = bank64k.encode(0.6).unwrap();
+    let c = bank64k.encode(0.7).unwrap();
+    b.bench_units("bitstream_and_64kbit", 65_536.0, "bits", || {
+        std::hint::black_box(a.and(&c).unwrap().count_ones());
+    });
+    let num = a.and(&c).unwrap();
+    b.bench_units("cordiv_64kbit", 65_536.0, "bits", || {
+        std::hint::black_box(cordiv(&num, &c).unwrap().count_ones());
+    });
+    b.bench("pearson_scc_64kbit", || {
+        std::hint::black_box((pearson(&a, &c).unwrap(), scc(&a, &c).unwrap()));
+    });
+
+    // Table S1 hardware-path gate evaluation (encode + gate + popcount).
+    let gate = ProbGate::new(BooleanOp::And, CorrelationMode::Uncorrelated);
+    let mut bank10k = bank(10_000, 4);
+    b.bench("prob_and_uncorrelated_10kbit", || {
+        let (_, m, _) = gate.evaluate(&mut bank10k, 0.5, 0.5).unwrap();
+        std::hint::black_box(m);
+    });
+    let gate_pos = ProbGate::new(BooleanOp::And, CorrelationMode::Positive);
+    b.bench("prob_and_correlated_10kbit", || {
+        let (_, m, _) = gate_pos.evaluate(&mut bank10k, 0.3, 0.7).unwrap();
+        std::hint::black_box(m);
+    });
+
+    b.finish();
+}

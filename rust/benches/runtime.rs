@@ -1,0 +1,54 @@
+//! PJRT runtime benches: AOT-artifact execute latency per batch shape,
+//! and the native-vs-PJRT per-decision comparison that motivates the
+//! router's batch thresholds.
+
+use std::path::Path;
+
+use bayes_mem::bayes::FusionOperator;
+use bayes_mem::benchkit::Bench;
+use bayes_mem::runtime::Runtime;
+use bayes_mem::stochastic::{SneBank, SneConfig};
+use bayes_mem::util::Rng;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.toml").exists() {
+        println!("runtime bench skipped: run `make artifacts` first");
+        return;
+    }
+    let mut b = Bench::new("runtime");
+    let rt = Runtime::load_subset(
+        dir,
+        &["fusion_b1_m2_n100", "fusion_b16_m2_n256", "fusion_b64_m2_n256", "inference_b16_n256"],
+    )
+    .unwrap();
+    let mut rng = Rng::seeded(1);
+
+    b.bench("pjrt_fusion_b1_n100", || {
+        std::hint::black_box(rt.fusion("fusion_b1_m2_n100", &[0.8, 0.7], &mut rng).unwrap());
+    });
+
+    let probs16: Vec<f32> = (0..16).flat_map(|i| [0.5 + 0.02 * i as f32, 0.7]).collect();
+    b.bench_units("pjrt_fusion_b16_n256", 16.0, "decisions", || {
+        std::hint::black_box(rt.fusion("fusion_b16_m2_n256", &probs16, &mut rng).unwrap());
+    });
+
+    let probs64: Vec<f32> = (0..64).flat_map(|i| [0.3 + 0.01 * i as f32, 0.7]).collect();
+    b.bench_units("pjrt_fusion_b64_n256", 64.0, "decisions", || {
+        std::hint::black_box(rt.fusion("fusion_b64_m2_n256", &probs64, &mut rng).unwrap());
+    });
+
+    let iprobs: Vec<f32> = (0..16).flat_map(|_| [0.57, 0.77, 0.655]).collect();
+    b.bench_units("pjrt_inference_b16_n256", 16.0, "decisions", || {
+        std::hint::black_box(rt.inference("inference_b16_n256", &iprobs, &mut rng).unwrap());
+    });
+
+    // Native comparison point: 256-bit fusion decision on the simulator.
+    let mut bank = SneBank::new(SneConfig { n_bits: 256, ..Default::default() }, 2).unwrap();
+    let fus = FusionOperator::default();
+    b.bench("native_fusion_256bit", || {
+        std::hint::black_box(fus.fuse2(&mut bank, 0.8, 0.7).unwrap().fused);
+    });
+
+    b.finish();
+}

@@ -1,0 +1,95 @@
+//! Precision–cost analysis: the paper's bit-length trade-off discussion
+//! ("a longer bit length renders a higher precision … with a higher
+//! computational cost"). Drives the `ablation_bits` bench.
+
+
+use crate::device::DeviceParams;
+use crate::stochastic::{SneBank, SneConfig};
+
+use super::{FusionOperator, InferenceOperator};
+
+/// One row of the bit-length ablation table.
+#[derive(Debug, Clone)]
+pub struct BitLengthRow {
+    /// Stream length in bits.
+    pub n_bits: usize,
+    /// Mean |posterior − exact| over the trial set (inference operator).
+    pub inference_mae: f64,
+    /// Mean |fused − exact| over the trial set (fusion operator).
+    pub fusion_mae: f64,
+    /// Hardware latency per decision, ms (4 µs/bit).
+    pub latency_ms: f64,
+    /// Equivalent decision rate, fps.
+    pub fps: f64,
+    /// Mean switching energy per decision, nJ.
+    pub energy_nj: f64,
+}
+
+/// Sweep stream length over `lengths`, measuring operator accuracy against
+/// closed-form Bayes on `trials` random scenarios per length.
+pub fn bit_length_sweep(lengths: &[usize], trials: usize, seed: u64) -> Vec<BitLengthRow> {
+    let params = DeviceParams::default();
+    lengths
+        .iter()
+        .map(|&n_bits| {
+            let cfg = SneConfig { n_bits, ..Default::default() };
+            let mut bank = SneBank::new(cfg, seed ^ n_bits as u64).expect("valid config");
+            let inf = InferenceOperator::default();
+            let fus = FusionOperator::default();
+            let mut inf_err = 0.0;
+            let mut fus_err = 0.0;
+            // Deterministic scenario grid (same across lengths).
+            for t in 0..trials {
+                let x = (t as f64 + 0.5) / trials as f64;
+                let pa = 0.2 + 0.6 * x;
+                let pba = 0.9 - 0.5 * x;
+                let pbna = 0.2 + 0.4 * x;
+                let r = inf.infer_with_likelihoods(&mut bank, pa, pba, pbna);
+                inf_err += r.abs_error();
+                let f = fus.fuse2(&mut bank, pba, 1.0 - pbna).expect("valid probs");
+                fus_err += f.abs_error();
+            }
+            let decisions = (2 * trials) as f64;
+            let ledger = bank.ledger();
+            BitLengthRow {
+                n_bits,
+                inference_mae: inf_err / trials as f64,
+                fusion_mae: fus_err / trials as f64,
+                latency_ms: params.stream_latency_ns(n_bits) / 1e6,
+                fps: params.frame_rate(n_bits),
+                energy_nj: ledger.energy_nj / decisions,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_improves_with_bit_length() {
+        let rows = bit_length_sweep(&[16, 256, 4096], 24, 99);
+        assert_eq!(rows.len(), 3);
+        // Monte-Carlo error ~ 1/sqrt(N): 16 -> 4096 must improve clearly.
+        assert!(
+            rows[0].inference_mae > rows[2].inference_mae * 2.0,
+            "16-bit {} vs 4096-bit {}",
+            rows[0].inference_mae,
+            rows[2].inference_mae
+        );
+        assert!(rows[2].inference_mae < 0.02);
+        assert!(rows[2].fusion_mae < 0.02);
+    }
+
+    #[test]
+    fn latency_and_energy_scale_linearly() {
+        let rows = bit_length_sweep(&[100, 200], 4, 7);
+        assert!((rows[0].latency_ms - 0.4).abs() < 1e-9);
+        assert!((rows[0].fps - 2500.0).abs() < 1e-6);
+        assert!((rows[1].latency_ms - 0.8).abs() < 1e-9);
+        // Energy roughly doubles with stream length.
+        let ratio = rows[1].energy_nj / rows[0].energy_nj;
+        assert!(ratio > 1.5 && ratio < 2.5, "ratio {ratio}");
+    }
+}

@@ -1,0 +1,86 @@
+//! Closed-form floating-point Bayes — the accuracy baseline every
+//! stochastic operator is scored against (and the "conventional
+//! deterministic computing" comparator in the cost benches).
+
+/// Marginal `P(B) = P(A)P(B|A) + P(¬A)P(B|¬A)`.
+pub fn exact_marginal(pa: f64, pb_given_a: f64, pb_given_na: f64) -> f64 {
+    pa * pb_given_a + (1.0 - pa) * pb_given_na
+}
+
+/// Posterior `P(A|B)` by Eq. 1.
+pub fn exact_posterior(pa: f64, pb_given_a: f64, pb_given_na: f64) -> f64 {
+    let num = pa * pb_given_a;
+    let den = exact_marginal(pa, pb_given_a, pb_given_na);
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+/// Two-modal normalized fusion with uniform binary prior:
+/// `p₁p₂ / (p₁p₂ + (1−p₁)(1−p₂))` (Eq. 4 + Fig. S10 normalization).
+pub fn exact_fusion(p1: f64, p2: f64) -> f64 {
+    let num = p1 * p2;
+    let den = num + (1.0 - p1) * (1.0 - p2);
+    if den == 0.0 {
+        0.5
+    } else {
+        num / den
+    }
+}
+
+/// M-modal normalized fusion (Eq. 5, uniform binary prior):
+/// `∏pᵢ / (∏pᵢ + ∏(1−pᵢ))`.
+pub fn exact_fusion_m(ps: &[f64]) -> f64 {
+    let num: f64 = ps.iter().product();
+    let cnum: f64 = ps.iter().map(|p| 1.0 - p).product();
+    let den = num + cnum;
+    if den == 0.0 {
+        0.5
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn posterior_matches_hand_computation() {
+        // The Fig. 3b scenario constants (see inference.rs docs).
+        let post = exact_posterior(0.57, 0.77, 0.655);
+        assert!((post - 0.609).abs() < 5e-3, "{post}");
+        let pb = exact_marginal(0.57, 0.77, 0.655);
+        assert!((pb - 0.72).abs() < 5e-3, "{pb}");
+    }
+
+    #[test]
+    fn posterior_edge_cases() {
+        assert_eq!(exact_posterior(0.0, 0.9, 0.1), 0.0);
+        assert_eq!(exact_posterior(1.0, 0.9, 0.1), 1.0);
+        assert_eq!(exact_posterior(0.5, 0.0, 0.0), 0.0); // degenerate
+    }
+
+    #[test]
+    fn fusion_agreement_amplifies_confidence() {
+        // Two agreeing 0.8s fuse above either single modality.
+        let f = exact_fusion(0.8, 0.8);
+        assert!((f - 0.64 / (0.64 + 0.04)).abs() < 1e-12);
+        assert!(f > 0.9);
+        // A confident + an uninformative modality ≈ the confident one.
+        assert!((exact_fusion(0.8, 0.5) - 0.8).abs() < 1e-12);
+        // Disagreement cancels.
+        assert!((exact_fusion(0.8, 0.2) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fusion_m_generalises_fusion_2() {
+        assert!((exact_fusion_m(&[0.7, 0.6]) - exact_fusion(0.7, 0.6)).abs() < 1e-12);
+        // Three agreeing weak detectors beat each alone.
+        let f3 = exact_fusion_m(&[0.6, 0.6, 0.6]);
+        assert!(f3 > 0.6 && f3 < 1.0);
+        assert_eq!(exact_fusion_m(&[1.0, 0.0]), 0.5); // degenerate
+    }
+}

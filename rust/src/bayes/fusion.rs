@@ -1,0 +1,257 @@
+//! The Bayesian fusion operator (Eqs. 2–5, Fig. 4a, Figs. S9/S10).
+//!
+//! Fuses per-modality detector posteriors `P(y|xᵢ)` into
+//! `P(y|x₁…x_M) ∝ ∏ᵢ P(y|xᵢ) / P(y)^{M−1}` (Eq. 5). With the paper's
+//! uniform binary prior, the normalized two-class form is
+//!
+//! ```text
+//! P(y|x₁…x_M) = ∏ pᵢ / (∏ pᵢ + ∏ (1−pᵢ))
+//! ```
+//!
+//! Circuit (Fig. S10a): chained probabilistic ANDs build `∏pᵢ` and
+//! `∏(1−pᵢ)` (the NOT gates are free — Fig. S5), a ½-weighted MUX forms
+//! the normalizing denominator, and CORDIV divides. As in the inference
+//! operator, the numerator is wired as a bitwise subset of the
+//! denominator, so CORDIV's correlation precondition holds by
+//! construction. Without the normalization module the raw Eq. 4 output
+//! `∏pᵢ / P(y)^{M−1}` can exceed one — reproduced by
+//! [`FusionOperator::fuse_unnormalized`] for the Fig. S10 harness.
+
+
+use crate::logic::Cordiv;
+use crate::stochastic::{Bitstream, CorrelationReport, SneBank};
+use crate::{Error, Result};
+
+use super::exact::exact_fusion_m;
+
+/// Configuration of the fusion operator.
+#[derive(Debug, Clone)]
+pub struct FusionConfig {
+    /// Keep intermediate node streams (Fig. S10b/c/d artefacts).
+    pub keep_streams: bool,
+}
+
+impl Default for FusionConfig {
+    fn default() -> Self {
+        Self { keep_streams: false }
+    }
+}
+
+/// Output of one fusion decision.
+#[derive(Debug, Clone)]
+pub struct FusionResult {
+    /// Measured fused posterior.
+    pub fused: f64,
+    /// Closed-form fused posterior (Eq. 5, uniform prior).
+    pub exact: f64,
+    /// The single-modality inputs.
+    pub inputs: Vec<f64>,
+    /// Node streams when configured.
+    pub streams: Option<Vec<(&'static str, Bitstream)>>,
+}
+
+impl FusionResult {
+    /// |measured − exact|.
+    pub fn abs_error(&self) -> f64 {
+        (self.fused - self.exact).abs()
+    }
+
+    /// Correlation matrices over kept node streams (Fig. S10c/d).
+    pub fn correlation_report(&self) -> Option<CorrelationReport> {
+        let streams = self.streams.as_ref()?;
+        let names: Vec<&str> = streams.iter().map(|(n, _)| *n).collect();
+        let refs: Vec<&Bitstream> = streams.iter().map(|(_, s)| s).collect();
+        CorrelationReport::compute(&names, &refs).ok()
+    }
+}
+
+/// The M-modal Bayesian fusion operator with normalization module.
+#[derive(Debug, Clone, Default)]
+pub struct FusionOperator {
+    config: FusionConfig,
+}
+
+impl FusionOperator {
+    /// Build from config.
+    pub fn new(config: FusionConfig) -> Self {
+        Self { config }
+    }
+
+    /// Fuse two modalities (the Fig. 4 RGB ⊕ thermal case).
+    pub fn fuse2(&self, bank: &mut SneBank, p1: f64, p2: f64) -> Result<FusionResult> {
+        self.fuse(bank, &[p1, p2])
+    }
+
+    /// Fuse `M ≥ 2` modalities (Eq. 5).
+    pub fn fuse(&self, bank: &mut SneBank, ps: &[f64]) -> Result<FusionResult> {
+        if ps.len() < 2 {
+            return Err(Error::Config("fusion needs >= 2 modalities".into()));
+        }
+        for &p in ps {
+            Error::check_prob("p_i", p)?;
+        }
+
+        // One parallel SNE per modality: mutually uncorrelated streams.
+        let streams: Vec<Bitstream> =
+            ps.iter().map(|&p| bank.encode(p)).collect::<Result<_>>()?;
+
+        // ∏ pᵢ and ∏ (1−pᵢ): chained ANDs; the complement streams reuse
+        // the SAME SNE outputs through NOT gates (hardware-free sharing).
+        let mut prod = streams[0].clone();
+        let mut cprod = streams[0].not();
+        for s in &streams[1..] {
+            prod.and_assign(s)?;
+            cprod.and_assign(&s.not())?;
+        }
+
+        // Normalizing denominator: ½·∏pᵢ + ½·∏(1−pᵢ) via MUX with a fresh
+        // uncorrelated ½ select; numerator shares the select so num ⊆ den.
+        let half = bank.encode(0.5)?;
+        let num = prod.and(&half)?;
+        let den = cprod.mux(&prod, &half)?;
+        let quot = Cordiv::new().divide(&num, &den)?;
+
+        bank.finish_decision();
+
+        let kept = self.config.keep_streams.then(|| {
+            let mut v: Vec<(&'static str, Bitstream)> = Vec::new();
+            let names: [&'static str; 4] = ["P(y|x1)", "P(y|x2)", "P(y|x3)", "P(y|x4)"];
+            for (i, s) in streams.iter().enumerate().take(4) {
+                v.push((names[i], s.clone()));
+            }
+            v.push(("∏p", prod.clone()));
+            v.push(("∏(1-p)", cprod.clone()));
+            v.push(("sel½", half.clone()));
+            v.push(("num", num.clone()));
+            v.push(("den", den.clone()));
+            v.push(("fused", quot.clone()));
+            v
+        });
+
+        Ok(FusionResult {
+            fused: quot.value(),
+            exact: exact_fusion_m(ps),
+            inputs: ps.to_vec(),
+            streams: kept,
+        })
+    }
+
+    /// Raw Eq. 4 output **without** the normalization module:
+    /// `∏pᵢ / P(y)^{M−1}` with `P(y) = ½`, computed by CORDIV against a
+    /// ½-density divisor. When the true value exceeds 1 the stream
+    /// saturates — the failure Fig. S10's normalization module exists to
+    /// fix. Returns `(measured, true_unnormalized_value)`.
+    pub fn fuse_unnormalized(&self, bank: &mut SneBank, ps: &[f64]) -> Result<(f64, f64)> {
+        if ps.len() < 2 {
+            return Err(Error::Config("fusion needs >= 2 modalities".into()));
+        }
+        for &p in ps {
+            Error::check_prob("p_i", p)?;
+        }
+        let streams: Vec<Bitstream> =
+            ps.iter().map(|&p| bank.encode(p)).collect::<Result<_>>()?;
+        let mut prod = streams[0].clone();
+        for s in &streams[1..] {
+            prod.and_assign(s)?;
+        }
+        // Divide by P(y)^{M-1}: chain M−1 CORDIVs against ½ streams.
+        // Note: prod ⊄ divisor here — the correlation precondition fails,
+        // which is part of why the raw form is unreliable in hardware.
+        let mut q = prod;
+        for _ in 0..ps.len() - 1 {
+            let half = bank.encode(0.5)?;
+            q = Cordiv::new().divide(&q, &half)?;
+        }
+        bank.finish_decision();
+        let truth: f64 = ps.iter().product::<f64>() / 0.5f64.powi(ps.len() as i32 - 1);
+        Ok((q.value(), truth))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stochastic::SneConfig;
+
+    fn bank(n_bits: usize, seed: u64) -> SneBank {
+        SneBank::new(SneConfig { n_bits, ..Default::default() }, seed).unwrap()
+    }
+
+    #[test]
+    fn two_modal_fusion_converges_to_exact() {
+        let mut bank = bank(100_000, 50);
+        let op = FusionOperator::default();
+        for &(p1, p2) in &[(0.8, 0.7), (0.6, 0.9), (0.3, 0.8), (0.5, 0.5), (0.2, 0.3)] {
+            let r = op.fuse2(&mut bank, p1, p2).unwrap();
+            assert!(
+                r.abs_error() < 0.025,
+                "({p1},{p2}): got {} want {}",
+                r.fused,
+                r.exact
+            );
+        }
+    }
+
+    #[test]
+    fn fusion_raises_confidence_of_agreeing_detectors() {
+        // The paper's low-confidence fix: two 0.7s fuse to ~0.84.
+        let mut bank = bank(50_000, 51);
+        let op = FusionOperator::default();
+        let r = op.fuse2(&mut bank, 0.7, 0.7).unwrap();
+        assert!(r.fused > 0.8, "{}", r.fused);
+    }
+
+    #[test]
+    fn fusion_recovers_target_missed_by_one_modality() {
+        // Thermal misses (p≈0.5 uninformative) but RGB is confident:
+        // fused ≈ RGB, resolving the target-missing issue.
+        let mut bank = bank(50_000, 52);
+        let op = FusionOperator::default();
+        let r = op.fuse2(&mut bank, 0.85, 0.5).unwrap();
+        assert!((r.exact - 0.85).abs() < 1e-9);
+        assert!((r.fused - 0.85).abs() < 0.03, "{}", r.fused);
+    }
+
+    #[test]
+    fn three_and_four_modal_fusion() {
+        let mut bank = bank(100_000, 53);
+        let op = FusionOperator::default();
+        let r = op.fuse(&mut bank, &[0.7, 0.6, 0.8]).unwrap();
+        assert!(r.abs_error() < 0.03, "3-modal err {}", r.abs_error());
+        let r = op.fuse(&mut bank, &[0.7, 0.6, 0.8, 0.55]).unwrap();
+        assert!(r.abs_error() < 0.03, "4-modal err {}", r.abs_error());
+    }
+
+    #[test]
+    fn unnormalized_form_saturates_above_one() {
+        let mut bank = bank(50_000, 54);
+        let op = FusionOperator::default();
+        let (measured, truth) = op.fuse_unnormalized(&mut bank, &[0.9, 0.8]).unwrap();
+        assert!(truth > 1.0, "truth {truth}"); // 0.72/0.5 = 1.44
+        assert!(measured <= 1.0, "stream can't exceed 1: {measured}");
+        // The normalized path handles the same inputs fine.
+        let r = op.fuse2(&mut bank, 0.9, 0.8).unwrap();
+        assert!(r.abs_error() < 0.03);
+    }
+
+    #[test]
+    fn correlation_report_confirms_cordiv_precondition() {
+        let mut bank = bank(20_000, 55);
+        let op = FusionOperator::new(FusionConfig { keep_streams: true });
+        let r = op.fuse2(&mut bank, 0.8, 0.7).unwrap();
+        let rep = r.correlation_report().unwrap();
+        let idx = |n: &str| rep.names.iter().position(|x| x == n).unwrap();
+        assert!(rep.scc[idx("num")][idx("den")] > 0.95);
+        // Modality inputs uncorrelated.
+        assert!(rep.scc[idx("P(y|x1)")][idx("P(y|x2)")].abs() < 0.1);
+    }
+
+    #[test]
+    fn validation() {
+        let mut b = bank(100, 56);
+        let op = FusionOperator::default();
+        assert!(op.fuse(&mut b, &[0.5]).is_err());
+        assert!(op.fuse(&mut b, &[0.5, 1.5]).is_err());
+        assert!(op.fuse_unnormalized(&mut b, &[0.5]).is_err());
+    }
+}

@@ -1,0 +1,253 @@
+//! The Bayesian inference operator (Eq. 1, Fig. 3a, Fig. S7).
+//!
+//! Circuit:
+//!
+//! ```text
+//!   SNE_a  ──────────────┬────────────► AND ──► N = a·b₁        (numerator)
+//!   SNE_b1 ── P(B|A)  ───┤sel          ▲
+//!                        ▼             │
+//!   SNE_b0 ── P(B|¬A) ─► MUX ──► D = a?b₁:b₀  = P(B) (denominator)
+//!                                      │
+//!                 N, D ──► CORDIV (MUX + DFF) ──► Q ≈ P(A|B)
+//! ```
+//!
+//! Sharing the prior stream `a` between the numerator AND and the
+//! denominator MUX-select makes `N ⊆ D` bitwise, which is precisely the
+//! correlation CORDIV requires — the whole divider is one MUX and one
+//! flip-flop. This is the paper's "maximise the sharing of the SNEs".
+
+
+use crate::logic::Cordiv;
+use crate::stochastic::{Bitstream, CorrelationReport, SneBank};
+use crate::{Error, Result};
+
+use super::exact::{exact_marginal, exact_posterior};
+
+/// Configuration of the inference operator.
+#[derive(Debug, Clone)]
+pub struct InferenceConfig {
+    /// Keep the intermediate node streams in the result (needed for the
+    /// Fig. 3c/d correlation matrices; costs memory on the hot path).
+    pub keep_streams: bool,
+}
+
+impl Default for InferenceConfig {
+    fn default() -> Self {
+        Self { keep_streams: false }
+    }
+}
+
+/// Output of one inference decision.
+#[derive(Debug, Clone)]
+pub struct InferenceResult {
+    /// Measured posterior `P(A|B)` — the decision confidence.
+    pub posterior: f64,
+    /// Measured marginal `P(B)` at the denominator node.
+    pub marginal: f64,
+    /// Closed-form posterior for the same inputs.
+    pub exact: f64,
+    /// Closed-form marginal.
+    pub exact_marginal: f64,
+    /// Node streams `[a, b1, b0, num, den, quot]` when
+    /// [`InferenceConfig::keep_streams`] is set.
+    pub streams: Option<Vec<(&'static str, Bitstream)>>,
+}
+
+impl InferenceResult {
+    /// Absolute error of the stochastic posterior vs the exact one.
+    pub fn abs_error(&self) -> f64 {
+        (self.posterior - self.exact).abs()
+    }
+
+    /// Correlation matrices over the kept node streams (Fig. 3c/d).
+    pub fn correlation_report(&self) -> Option<CorrelationReport> {
+        let streams = self.streams.as_ref()?;
+        let names: Vec<&str> = streams.iter().map(|(n, _)| *n).collect();
+        let refs: Vec<&Bitstream> = streams.iter().map(|(_, s)| s).collect();
+        CorrelationReport::compute(&names, &refs).ok()
+    }
+}
+
+/// The one-parent-one-child Bayesian inference operator (`A → B`).
+#[derive(Debug, Clone, Default)]
+pub struct InferenceOperator {
+    config: InferenceConfig,
+}
+
+impl InferenceOperator {
+    /// Build from config.
+    pub fn new(config: InferenceConfig) -> Self {
+        Self { config }
+    }
+
+    /// Run one decision: prior `P(A)`, likelihoods `P(B|A)`, `P(B|¬A)`.
+    ///
+    /// Encodes three mutually-uncorrelated streams on the bank's parallel
+    /// SNEs, evaluates the shared-stream circuit above, and returns the
+    /// measured posterior alongside the closed-form value.
+    pub fn infer_with_likelihoods(
+        &self,
+        bank: &mut SneBank,
+        p_a: f64,
+        p_b_given_a: f64,
+        p_b_given_na: f64,
+    ) -> InferenceResult {
+        self.try_infer(bank, p_a, p_b_given_a, p_b_given_na)
+            .expect("valid probabilities")
+    }
+
+    /// Fallible variant of [`Self::infer_with_likelihoods`].
+    pub fn try_infer(
+        &self,
+        bank: &mut SneBank,
+        p_a: f64,
+        p_b_given_a: f64,
+        p_b_given_na: f64,
+    ) -> Result<InferenceResult> {
+        Error::check_prob("p_a", p_a)?;
+        Error::check_prob("p_b_given_a", p_b_given_a)?;
+        Error::check_prob("p_b_given_na", p_b_given_na)?;
+
+        // Three parallel SNEs -> mutually uncorrelated streams.
+        let a = bank.encode(p_a)?;
+        let b1 = bank.encode(p_b_given_a)?;
+        let b0 = bank.encode(p_b_given_na)?;
+
+        // Numerator: P(A)·P(B|A) (uncorrelated AND = multiplier).
+        let num = a.and(&b1)?;
+        // Denominator: P(B) by weighted addition (MUX with select = a).
+        let den = b0.mux(&b1, &a)?;
+        // Division: CORDIV, valid because num ⊆ den by construction.
+        let quot = Cordiv::new().divide(&num, &den)?;
+
+        bank.finish_decision();
+
+        let streams = self.config.keep_streams.then(|| {
+            vec![
+                ("P(A)", a),
+                ("P(B|A)", b1),
+                ("P(B|¬A)", b0),
+                ("num", num.clone()),
+                ("den", den.clone()),
+                ("P(A|B)", quot.clone()),
+            ]
+        });
+
+        Ok(InferenceResult {
+            posterior: quot.value(),
+            marginal: den.value(),
+            exact: exact_posterior(p_a, p_b_given_a, p_b_given_na),
+            exact_marginal: exact_marginal(p_a, p_b_given_a, p_b_given_na),
+            streams,
+        })
+    }
+
+    /// The paper's Fig. 3b route-planning scenario.
+    ///
+    /// The paper initialises the operator with `P(A) = 57 %` (belief the
+    /// red vehicle can cut in) and reports the new-information marginal as
+    /// `P(B) = 72 %`; the hardware returns `P(A|B) = 63 %` vs a ~61 %
+    /// theoretical value. Eq. 1 needs the conditional pair rather than the
+    /// marginal, so we pin `P(B|A) = 0.77`, `P(B|¬A) = 0.655` — which
+    /// reproduce both published numbers: `P(B) = 0.720` and
+    /// `P(A|B) = 0.609 ≈ 61 %`.
+    pub const FIG3B_PRIOR: f64 = 0.57;
+    /// `P(B|A)` pinned for the Fig. 3b scenario (see [`Self::FIG3B_PRIOR`]).
+    pub const FIG3B_LIKELIHOOD: f64 = 0.77;
+    /// `P(B|¬A)` pinned for the Fig. 3b scenario.
+    pub const FIG3B_LIKELIHOOD_NOT: f64 = 0.655;
+
+    /// Run the Fig. 3b lane-change decision.
+    pub fn fig3b(&self, bank: &mut SneBank) -> InferenceResult {
+        self.infer_with_likelihoods(
+            bank,
+            Self::FIG3B_PRIOR,
+            Self::FIG3B_LIKELIHOOD,
+            Self::FIG3B_LIKELIHOOD_NOT,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stochastic::SneConfig;
+
+    fn bank(n_bits: usize, seed: u64) -> SneBank {
+        SneBank::new(SneConfig { n_bits, ..Default::default() }, seed).unwrap()
+    }
+
+    #[test]
+    fn fig3b_reproduces_paper_numbers() {
+        let mut bank = bank(100, 42);
+        let op = InferenceOperator::new(InferenceConfig::default());
+        let r = op.fig3b(&mut bank);
+        // Theory: P(B)=0.72, P(A|B)=0.609 (~61 %). At the paper's 100-bit
+        // precision the hardware lands within a few percent (paper: 63 %).
+        assert!((r.exact_marginal - 0.72).abs() < 0.005, "{}", r.exact_marginal);
+        assert!((r.exact - 0.609).abs() < 0.005, "{}", r.exact);
+        assert!((r.posterior - r.exact).abs() < 0.12, "100-bit posterior {}", r.posterior);
+        // Decision direction must match the paper: belief increased.
+        assert!(r.posterior > 0.5);
+    }
+
+    #[test]
+    fn long_streams_converge_to_exact() {
+        let mut bank = bank(100_000, 43);
+        let op = InferenceOperator::default();
+        for &(pa, pba, pbna) in &[(0.57, 0.77, 0.655), (0.3, 0.9, 0.2), (0.8, 0.6, 0.4)] {
+            let r = op.infer_with_likelihoods(&mut bank, pa, pba, pbna);
+            assert!(
+                r.abs_error() < 0.02,
+                "pa={pa}: got {} want {} (err {})",
+                r.posterior,
+                r.exact,
+                r.abs_error()
+            );
+            assert!((r.marginal - r.exact_marginal).abs() < 0.01);
+        }
+    }
+
+    #[test]
+    fn posterior_can_also_decrease_belief() {
+        // Paper: "when P(A) > P(A|B) … maintain its current lane".
+        let mut bank = bank(50_000, 44);
+        let op = InferenceOperator::default();
+        // Unlikely evidence given A: posterior drops below prior.
+        let r = op.infer_with_likelihoods(&mut bank, 0.57, 0.2, 0.8);
+        assert!(r.exact < 0.57);
+        assert!(r.posterior < 0.5);
+    }
+
+    #[test]
+    fn correlation_report_shows_designed_correlations() {
+        let mut bank = bank(20_000, 45);
+        let op = InferenceOperator::new(InferenceConfig { keep_streams: true });
+        let r = op.fig3b(&mut bank);
+        let rep = r.correlation_report().expect("streams kept");
+        let idx = |n: &str| rep.names.iter().position(|x| x == n).unwrap();
+        // Inputs mutually uncorrelated (parallel SNEs).
+        let (ia, ib1, ib0) = (idx("P(A)"), idx("P(B|A)"), idx("P(B|¬A)"));
+        assert!(rep.scc[ia][ib1].abs() < 0.1);
+        assert!(rep.scc[ia][ib0].abs() < 0.1);
+        // num ⊆ den: SCC = +1 (the CORDIV precondition).
+        let (inum, iden) = (idx("num"), idx("den"));
+        assert!(rep.scc[inum][iden] > 0.95, "scc(num,den) = {}", rep.scc[inum][iden]);
+    }
+
+    #[test]
+    fn invalid_probabilities_rejected() {
+        let mut bank = bank(100, 46);
+        let op = InferenceOperator::default();
+        assert!(op.try_infer(&mut bank, 1.5, 0.5, 0.5).is_err());
+        assert!(op.try_infer(&mut bank, 0.5, -0.1, 0.5).is_err());
+    }
+
+    #[test]
+    fn streams_not_kept_by_default() {
+        let mut bank = bank(100, 47);
+        let op = InferenceOperator::default();
+        let r = op.fig3b(&mut bank);
+        assert!(r.streams.is_none());
+    }
+}

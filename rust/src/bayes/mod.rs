@@ -1,0 +1,23 @@
+//! The paper's headline contribution: lightweight Bayesian **inference**
+//! (Eq. 1, Fig. 3) and **fusion** (Eqs. 2–5, Fig. 4) operators built from
+//! memristor-backed probabilistic logic.
+//!
+//! The key circuit trick (why the operators can "maximise the sharing of
+//! the SNEs", Fig. 3c/d): with the prior stream `a` used *both* as the MUX
+//! select of the denominator and as an AND operand of the numerator, the
+//! numerator stream is a **bitwise subset** of the denominator stream — the
+//! exact precondition CORDIV needs for correct division. No extra
+//! decorrelation circuitry is required, which is the cost advantage over
+//! LFSR-based stochastic computing.
+
+mod analysis;
+mod exact;
+mod fusion;
+mod inference;
+mod topology;
+
+pub use analysis::{bit_length_sweep, BitLengthRow};
+pub use exact::{exact_fusion, exact_marginal, exact_posterior, exact_fusion_m};
+pub use fusion::{FusionConfig, FusionOperator, FusionResult};
+pub use inference::{InferenceConfig, InferenceOperator, InferenceResult};
+pub use topology::{OneParentTwoChild, Topology, TopologyResult, TwoParentOneChild};

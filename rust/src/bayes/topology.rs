@@ -1,0 +1,258 @@
+//! Inference-network topologies beyond one-parent-one-child (Fig. S8).
+//!
+//! * `A → B` — one parent, one child: a 2×1 MUX (see
+//!   [`super::InferenceOperator`]).
+//! * `A₁ → B ← A₂` — two parents, one child: a 4×1 MUX whose two select
+//!   lines are the parent streams.
+//! * `B₁ ← A → B₂` — one parent, two children: two 2×1 MUXes sharing the
+//!   parent stream as select.
+
+
+use crate::logic::Cordiv;
+use crate::stochastic::SneBank;
+use crate::{Error, Result};
+
+/// Which Fig. S8 dependency structure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// `A → B`.
+    OneParentOneChild,
+    /// `A₁ → B ← A₂`.
+    TwoParentOneChild,
+    /// `B₁ ← A → B₂`.
+    OneParentTwoChild,
+}
+
+/// Result of a topology evaluation.
+#[derive(Debug, Clone)]
+pub struct TopologyResult {
+    /// Which structure was evaluated.
+    pub topology: Topology,
+    /// Measured posterior for the queried parent.
+    pub posterior: f64,
+    /// Measured marginal/evidence at the denominator node.
+    pub marginal: f64,
+    /// Closed-form posterior.
+    pub exact: f64,
+    /// Closed-form marginal.
+    pub exact_marginal: f64,
+}
+
+impl TopologyResult {
+    /// |measured − exact| on the posterior.
+    pub fn abs_error(&self) -> f64 {
+        (self.posterior - self.exact).abs()
+    }
+}
+
+/// Two-parent-one-child network: query `P(A₁ | B=1)`.
+///
+/// Circuit: a 4×1 probabilistic MUX (Fig. S8b) selects among the four
+/// conditionals `P(B|A₁,A₂)` with the parent streams as select lines,
+/// producing the evidence stream `P(B)`; the numerator AND-gates the
+/// `A₁` select path, staying a bitwise subset of the evidence for CORDIV.
+#[derive(Debug, Clone)]
+pub struct TwoParentOneChild {
+    /// Prior `P(A₁)`.
+    pub p_a1: f64,
+    /// Prior `P(A₂)`.
+    pub p_a2: f64,
+    /// Conditionals `P(B | A₁=i, A₂=j)` indexed `[i][j]`, i,j ∈ {0,1}.
+    pub p_b_given: [[f64; 2]; 2],
+}
+
+impl TwoParentOneChild {
+    /// Closed-form evidence `P(B)`.
+    pub fn exact_marginal(&self) -> f64 {
+        let (pa1, pa2) = (self.p_a1, self.p_a2);
+        let g = &self.p_b_given;
+        pa1 * pa2 * g[1][1]
+            + pa1 * (1.0 - pa2) * g[1][0]
+            + (1.0 - pa1) * pa2 * g[0][1]
+            + (1.0 - pa1) * (1.0 - pa2) * g[0][0]
+    }
+
+    /// Closed-form `P(A₁|B)`.
+    pub fn exact_posterior(&self) -> f64 {
+        let num = self.p_a1
+            * (self.p_a2 * self.p_b_given[1][1] + (1.0 - self.p_a2) * self.p_b_given[1][0]);
+        let den = self.exact_marginal();
+        if den == 0.0 {
+            0.0
+        } else {
+            num / den
+        }
+    }
+
+    /// Evaluate on the stochastic hardware path.
+    pub fn evaluate(&self, bank: &mut SneBank) -> Result<TopologyResult> {
+        Error::check_prob("p_a1", self.p_a1)?;
+        Error::check_prob("p_a2", self.p_a2)?;
+        for row in &self.p_b_given {
+            for &p in row {
+                Error::check_prob("p_b_given", p)?;
+            }
+        }
+        let a1 = bank.encode(self.p_a1)?;
+        let a2 = bank.encode(self.p_a2)?;
+        let g = &self.p_b_given;
+        let b00 = bank.encode(g[0][0])?;
+        let b01 = bank.encode(g[0][1])?;
+        let b10 = bank.encode(g[1][0])?;
+        let b11 = bank.encode(g[1][1])?;
+
+        // 4×1 MUX: first stage selects on a2 within each a1 branch, second
+        // stage selects the branch on a1.
+        let branch_a1_high = b10.mux(&b11, &a2)?; // P(B|A1=1, A2)
+        let branch_a1_low = b00.mux(&b01, &a2)?; // P(B|A1=0, A2)
+        let den = branch_a1_low.mux(&branch_a1_high, &a1)?; // evidence P(B)
+        let num = a1.and(&branch_a1_high)?; // P(A1, B)
+        let quot = Cordiv::new().divide(&num, &den)?;
+        bank.finish_decision();
+
+        Ok(TopologyResult {
+            topology: Topology::TwoParentOneChild,
+            posterior: quot.value(),
+            marginal: den.value(),
+            exact: self.exact_posterior(),
+            exact_marginal: self.exact_marginal(),
+        })
+    }
+}
+
+/// One-parent-two-child network: query `P(A | B₁=1, B₂=1)`.
+///
+/// Circuit: two 2×1 MUXes share the parent stream as select (Fig. S8c),
+/// their AND forms the joint evidence `P(B₁,B₂)`.
+#[derive(Debug, Clone)]
+pub struct OneParentTwoChild {
+    /// Prior `P(A)`.
+    pub p_a: f64,
+    /// `P(B₁|A)`, `P(B₁|¬A)`.
+    pub p_b1: (f64, f64),
+    /// `P(B₂|A)`, `P(B₂|¬A)`.
+    pub p_b2: (f64, f64),
+}
+
+impl OneParentTwoChild {
+    /// Closed-form joint evidence `P(B₁,B₂)`.
+    pub fn exact_marginal(&self) -> f64 {
+        self.p_a * self.p_b1.0 * self.p_b2.0 + (1.0 - self.p_a) * self.p_b1.1 * self.p_b2.1
+    }
+
+    /// Closed-form posterior `P(A|B₁,B₂)`.
+    pub fn exact_posterior(&self) -> f64 {
+        let num = self.p_a * self.p_b1.0 * self.p_b2.0;
+        let den = self.exact_marginal();
+        if den == 0.0 {
+            0.0
+        } else {
+            num / den
+        }
+    }
+
+    /// Evaluate on the stochastic hardware path.
+    pub fn evaluate(&self, bank: &mut SneBank) -> Result<TopologyResult> {
+        Error::check_prob("p_a", self.p_a)?;
+        for &p in [self.p_b1.0, self.p_b1.1, self.p_b2.0, self.p_b2.1].iter() {
+            Error::check_prob("p_b", p)?;
+        }
+        let a = bank.encode(self.p_a)?;
+        let b1a = bank.encode(self.p_b1.0)?;
+        let b1n = bank.encode(self.p_b1.1)?;
+        let b2a = bank.encode(self.p_b2.0)?;
+        let b2n = bank.encode(self.p_b2.1)?;
+
+        // Two MUXes share the parent select; their AND is the evidence.
+        let m1 = b1n.mux(&b1a, &a)?;
+        let m2 = b2n.mux(&b2a, &a)?;
+        let den = m1.and(&m2)?;
+        // Numerator: a ∧ B1|A ∧ B2|A ⊆ den.
+        let num = a.and(&b1a)?.and(&b2a)?;
+        let quot = Cordiv::new().divide(&num, &den)?;
+        bank.finish_decision();
+
+        Ok(TopologyResult {
+            topology: Topology::OneParentTwoChild,
+            posterior: quot.value(),
+            marginal: den.value(),
+            exact: self.exact_posterior(),
+            exact_marginal: self.exact_marginal(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stochastic::SneConfig;
+
+    fn bank(n_bits: usize, seed: u64) -> SneBank {
+        SneBank::new(SneConfig { n_bits, ..Default::default() }, seed).unwrap()
+    }
+
+    #[test]
+    fn two_parent_converges_to_exact() {
+        let mut bank = bank(100_000, 60);
+        let net = TwoParentOneChild {
+            p_a1: 0.6,
+            p_a2: 0.4,
+            p_b_given: [[0.1, 0.5], [0.6, 0.9]],
+        };
+        let r = net.evaluate(&mut bank).unwrap();
+        assert!(r.abs_error() < 0.02, "err {}", r.abs_error());
+        assert!((r.marginal - r.exact_marginal).abs() < 0.01);
+    }
+
+    #[test]
+    fn two_parent_exact_sanity() {
+        // Independent parents, child = A1 exactly.
+        let net = TwoParentOneChild {
+            p_a1: 0.3,
+            p_a2: 0.5,
+            p_b_given: [[0.0, 0.0], [1.0, 1.0]],
+        };
+        assert!((net.exact_marginal() - 0.3).abs() < 1e-12);
+        assert!((net.exact_posterior() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn one_parent_two_child_converges_to_exact() {
+        let mut bank = bank(100_000, 61);
+        let net = OneParentTwoChild {
+            p_a: 0.57,
+            p_b1: (0.8, 0.3),
+            p_b2: (0.7, 0.4),
+        };
+        let r = net.evaluate(&mut bank).unwrap();
+        assert!(r.abs_error() < 0.02, "err {}", r.abs_error());
+        // Two agreeing children push the posterior above the prior.
+        assert!(r.exact > 0.57);
+    }
+
+    #[test]
+    fn hundred_bit_topologies_stay_reasonable() {
+        // At the paper's 100-bit precision errors should stay ~O(10%).
+        let mut bank = bank(100, 62);
+        let net = TwoParentOneChild {
+            p_a1: 0.6,
+            p_a2: 0.4,
+            p_b_given: [[0.1, 0.5], [0.6, 0.9]],
+        };
+        let r = net.evaluate(&mut bank).unwrap();
+        assert!(r.abs_error() < 0.25, "100-bit err {}", r.abs_error());
+    }
+
+    #[test]
+    fn invalid_probabilities_rejected() {
+        let mut b = bank(100, 63);
+        let bad = TwoParentOneChild {
+            p_a1: 1.4,
+            p_a2: 0.4,
+            p_b_given: [[0.1, 0.5], [0.6, 0.9]],
+        };
+        assert!(bad.evaluate(&mut b).is_err());
+        let bad = OneParentTwoChild { p_a: 0.5, p_b1: (1.2, 0.1), p_b2: (0.5, 0.5) };
+        assert!(bad.evaluate(&mut b).is_err());
+    }
+}

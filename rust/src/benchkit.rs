@@ -1,0 +1,186 @@
+//! Minimal benchmarking harness (criterion is not vendored offline).
+//!
+//! Usage in a `harness = false` bench target:
+//!
+//! ```no_run
+//! use bayes_mem::benchkit::Bench;
+//! let mut b = Bench::new("operators");
+//! b.bench("fusion_100bit", || { /* one decision */ });
+//! b.finish();
+//! ```
+//!
+//! Each benchmark is warmed up, then timed over adaptive batches until the
+//! measurement window is filled; the report prints mean / p50 / p99 per
+//! iteration plus derived throughput. Honors `BENCH_FILTER=substring` and
+//! `BENCH_FAST=1` (shorter windows for CI smoke runs).
+
+use std::time::{Duration, Instant};
+
+/// Collected result for one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark name.
+    pub name: String,
+    /// Mean ns/iteration.
+    pub mean_ns: f64,
+    /// Median ns/iteration.
+    pub p50_ns: f64,
+    /// 99th-percentile ns/iteration.
+    pub p99_ns: f64,
+    /// Iterations measured.
+    pub iters: u64,
+}
+
+impl BenchResult {
+    /// Iterations per second at the mean.
+    pub fn throughput(&self) -> f64 {
+        if self.mean_ns == 0.0 {
+            0.0
+        } else {
+            1e9 / self.mean_ns
+        }
+    }
+}
+
+/// A group of benchmarks sharing a report.
+pub struct Bench {
+    group: String,
+    warmup: Duration,
+    window: Duration,
+    results: Vec<BenchResult>,
+    filter: Option<String>,
+}
+
+impl Bench {
+    /// New group with default windows (0.3 s warmup, 1 s measure; 10× less
+    /// under `BENCH_FAST=1`).
+    pub fn new(group: &str) -> Self {
+        let fast = std::env::var("BENCH_FAST").is_ok();
+        println!("\n== bench group: {group} ==");
+        Self {
+            group: group.to_string(),
+            warmup: if fast { Duration::from_millis(30) } else { Duration::from_millis(300) },
+            window: if fast { Duration::from_millis(100) } else { Duration::from_secs(1) },
+            results: Vec::new(),
+            filter: std::env::var("BENCH_FILTER").ok(),
+        }
+    }
+
+    /// Benchmark a closure; one call = one iteration.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Option<BenchResult> {
+        if let Some(filter) = &self.filter {
+            if !name.contains(filter.as_str()) && !self.group.contains(filter.as_str()) {
+                return None;
+            }
+        }
+        // Warmup.
+        let start = Instant::now();
+        let mut warm_iters = 0u64;
+        while start.elapsed() < self.warmup {
+            f();
+            warm_iters += 1;
+        }
+        // Choose a batch size that keeps timer overhead <1 %.
+        let per_iter = (self.warmup.as_nanos() as f64 / warm_iters.max(1) as f64).max(1.0);
+        let batch = ((100_000.0 / per_iter).ceil() as u64).clamp(1, 10_000);
+        // Measure batches until the window closes.
+        let mut samples: Vec<f64> = Vec::new();
+        let mut iters = 0u64;
+        let begin = Instant::now();
+        while begin.elapsed() < self.window {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / batch as f64;
+            samples.push(dt);
+            iters += batch;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let pick = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+        let result = BenchResult {
+            name: name.to_string(),
+            mean_ns: mean,
+            p50_ns: pick(0.5),
+            p99_ns: pick(0.99),
+            iters,
+        };
+        println!(
+            "  {:<44} {:>12} /iter   p50 {:>10}   p99 {:>10}   {:>14}",
+            result.name,
+            fmt_ns(result.mean_ns),
+            fmt_ns(result.p50_ns),
+            fmt_ns(result.p99_ns),
+            format!("{:.0} it/s", result.throughput()),
+        );
+        self.results.push(result.clone());
+        Some(result)
+    }
+
+    /// Benchmark with a supplementary throughput unit (e.g. bits/s):
+    /// `units_per_iter` scales the reported rate.
+    pub fn bench_units<F: FnMut()>(
+        &mut self,
+        name: &str,
+        units_per_iter: f64,
+        unit: &str,
+        f: F,
+    ) -> Option<BenchResult> {
+        let r = self.bench(name, f)?;
+        println!(
+            "  {:<44} {:>12.3e} {unit}/s",
+            format!("  └ {}", name),
+            r.throughput() * units_per_iter
+        );
+        Some(r)
+    }
+
+    /// Print the trailer and return all results.
+    pub fn finish(self) -> Vec<BenchResult> {
+        println!("== end group: {} ({} benchmarks) ==", self.group, self.results.len());
+        self.results
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.2} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.2} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.2} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_and_reports() {
+        std::env::set_var("BENCH_FAST", "1");
+        let mut b = Bench::new("selftest");
+        let mut acc = 0u64;
+        let r = b
+            .bench("noop-ish", || {
+                acc = acc.wrapping_add(std::hint::black_box(1));
+            })
+            .unwrap();
+        assert!(r.iters > 0);
+        assert!(r.mean_ns >= 0.0);
+        assert!(r.p99_ns >= r.p50_ns * 0.5);
+        let all = b.finish();
+        assert_eq!(all.len(), 1);
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(1.2e4).contains("µs"));
+        assert!(fmt_ns(3.4e6).contains("ms"));
+        assert!(fmt_ns(2.1e9).contains(" s"));
+    }
+}

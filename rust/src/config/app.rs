@@ -1,0 +1,269 @@
+//! Application configuration.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use crate::device::{DeviceParams, WearPolicy};
+use crate::stochastic::SneConfig;
+use crate::util::tomlmini::Document;
+use crate::{Error, Result};
+
+/// Which execution backend serves decisions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust bit-parallel simulator (the memristor hardware model).
+    Native,
+    /// AOT-compiled JAX/Pallas artifacts through PJRT.
+    Pjrt,
+}
+
+impl Backend {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "pjrt" => Ok(Backend::Pjrt),
+            other => Err(Error::Config(format!("unknown backend {other:?}"))),
+        }
+    }
+}
+
+/// Coordinator (serving-layer) settings.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Worker threads (each owns an SNE bank on the native backend).
+    pub workers: usize,
+    /// Maximum decisions per batch.
+    pub max_batch: usize,
+    /// Maximum time a request may wait for its batch to fill.
+    pub max_wait: Duration,
+    /// Bounded queue capacity (backpressure threshold).
+    pub queue_capacity: usize,
+    /// Execution backend.
+    pub backend: Backend,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            max_batch: 16,
+            max_wait: Duration::from_micros(400),
+            queue_capacity: 4096,
+            backend: Backend::Native,
+        }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Debug, Clone)]
+pub struct AppConfig {
+    /// SNE bank settings (stream length, bank size, device params, wear).
+    pub sne: SneConfig,
+    /// Serving-layer settings.
+    pub coordinator: CoordinatorConfig,
+    /// Where `make artifacts` put the AOT outputs.
+    pub artifacts_dir: PathBuf,
+    /// Master seed for all banks/workloads.
+    pub seed: u64,
+}
+
+impl Default for AppConfig {
+    fn default() -> Self {
+        Self {
+            sne: SneConfig::default(),
+            coordinator: CoordinatorConfig::default(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            seed: 42,
+        }
+    }
+}
+
+impl AppConfig {
+    /// Keys this config understands (for unknown-key warnings).
+    const KNOWN: &'static [&'static str] = &[
+        "seed",
+        "artifacts.dir",
+        "sne.n_bits",
+        "sne.n_snes",
+        "sne.wear_policy",
+        "device.vth_mean",
+        "device.vth_std",
+        "device.vhold_mean",
+        "device.vhold_std",
+        "device.d2d_cov",
+        "device.drift_coupling",
+        "device.endurance_cycles",
+        "coordinator.workers",
+        "coordinator.max_batch",
+        "coordinator.max_wait_us",
+        "coordinator.queue_capacity",
+        "coordinator.backend",
+    ];
+
+    /// Load from a TOML file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let doc = Document::load(path)?;
+        Self::from_document(&doc)
+    }
+
+    /// Build from a parsed document, with defaults for absent keys.
+    /// Unknown keys are an error (catches typos early).
+    pub fn from_document(doc: &Document) -> Result<Self> {
+        let unknown = doc.unknown_keys(Self::KNOWN);
+        if !unknown.is_empty() {
+            return Err(Error::Config(format!("unknown config keys: {unknown:?}")));
+        }
+        let defaults = Self::default();
+        let dp = DeviceParams::default();
+        let device = DeviceParams {
+            vth_mean: doc.f64_or("device.vth_mean", dp.vth_mean),
+            vth_std: doc.f64_or("device.vth_std", dp.vth_std),
+            vhold_mean: doc.f64_or("device.vhold_mean", dp.vhold_mean),
+            vhold_std: doc.f64_or("device.vhold_std", dp.vhold_std),
+            d2d_cov: doc.f64_or("device.d2d_cov", dp.d2d_cov),
+            drift_coupling: doc.f64_or("device.drift_coupling", dp.drift_coupling),
+            endurance_cycles: doc.usize_or(
+                "device.endurance_cycles",
+                dp.endurance_cycles as usize,
+            ) as u64,
+            ..dp
+        };
+        let wear_policy = match doc.str_or("sne.wear_policy", "rotate") {
+            "rotate" => WearPolicy::Rotate,
+            "ignore" => WearPolicy::Ignore,
+            "fail" => WearPolicy::Fail,
+            other => return Err(Error::Config(format!("unknown wear_policy {other:?}"))),
+        };
+        let sne = SneConfig {
+            n_bits: doc.usize_or("sne.n_bits", defaults.sne.n_bits),
+            n_snes: doc.usize_or("sne.n_snes", defaults.sne.n_snes),
+            params: device,
+            wear_policy,
+        };
+        let coordinator = CoordinatorConfig {
+            workers: doc.usize_or("coordinator.workers", defaults.coordinator.workers),
+            max_batch: doc.usize_or("coordinator.max_batch", defaults.coordinator.max_batch),
+            max_wait: Duration::from_micros(doc.usize_or(
+                "coordinator.max_wait_us",
+                defaults.coordinator.max_wait.as_micros() as usize,
+            ) as u64),
+            queue_capacity: doc
+                .usize_or("coordinator.queue_capacity", defaults.coordinator.queue_capacity),
+            backend: Backend::parse(doc.str_or("coordinator.backend", "native"))?,
+        };
+        let cfg = Self {
+            sne,
+            coordinator,
+            artifacts_dir: PathBuf::from(doc.str_or("artifacts.dir", "artifacts")),
+            seed: doc.i64_or("seed", defaults.seed as i64) as u64,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Validate cross-field constraints.
+    pub fn validate(&self) -> Result<()> {
+        self.sne.validate()?;
+        let c = &self.coordinator;
+        if c.workers == 0 {
+            return Err(Error::Config("coordinator.workers must be > 0".into()));
+        }
+        if c.max_batch == 0 {
+            return Err(Error::Config("coordinator.max_batch must be > 0".into()));
+        }
+        if c.queue_capacity < c.max_batch {
+            return Err(Error::Config(
+                "coordinator.queue_capacity must be >= max_batch".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// A documented example config (shipped by `bayes-mem config --example`).
+    pub fn example_toml() -> &'static str {
+        r#"# bayes-mem configuration (TOML subset: sections + scalar values)
+seed = 42
+
+[artifacts]
+dir = "artifacts"            # output of `make artifacts`
+
+[sne]
+n_bits = 100                 # stochastic-number length (paper: 100)
+n_snes = 16                  # physical SNEs per bank
+wear_policy = "rotate"       # rotate | ignore | fail
+
+[device]                     # paper-calibrated hBN memristor parameters
+vth_mean = 2.08
+vth_std = 0.28
+vhold_mean = 0.98
+vhold_std = 0.30
+d2d_cov = 0.08
+drift_coupling = 0.0         # >0 injects cycle-to-cycle drift nonideality
+endurance_cycles = 1_000_000
+
+[coordinator]
+workers = 4
+max_batch = 16
+max_wait_us = 400            # one 100-bit frame time at 4 us/bit
+queue_capacity = 4096
+backend = "native"           # native | pjrt
+"#
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn example_config_parses_to_defaults() {
+        let doc = Document::parse(AppConfig::example_toml()).unwrap();
+        let cfg = AppConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.sne.n_bits, 100);
+        assert_eq!(cfg.coordinator.max_batch, 16);
+        assert_eq!(cfg.coordinator.backend, Backend::Native);
+        assert_eq!(cfg.seed, 42);
+        assert!((cfg.sne.params.vth_mean - 2.08).abs() < 1e-12);
+    }
+
+    #[test]
+    fn defaults_when_empty() {
+        let cfg = AppConfig::from_document(&Document::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.sne.n_bits, 100);
+        assert_eq!(cfg.coordinator.workers, 4);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let doc = Document::parse(
+            "[sne]\nn_bits = 256\n[coordinator]\nbackend = \"pjrt\"\nmax_wait_us = 1000",
+        )
+        .unwrap();
+        let cfg = AppConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.sne.n_bits, 256);
+        assert_eq!(cfg.coordinator.backend, Backend::Pjrt);
+        assert_eq!(cfg.coordinator.max_wait, Duration::from_millis(1));
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let doc = Document::parse("[sne]\nn_bitz = 100").unwrap();
+        let err = AppConfig::from_document(&doc).unwrap_err();
+        assert!(err.to_string().contains("n_bitz"), "{err}");
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        for bad in [
+            "[coordinator]\nworkers = 0",
+            "[coordinator]\nmax_batch = 0",
+            "[coordinator]\nqueue_capacity = 2\nmax_batch = 16",
+            "[coordinator]\nbackend = \"gpu\"",
+            "[sne]\nwear_policy = \"explode\"",
+            "[sne]\nn_bits = 0",
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(AppConfig::from_document(&doc).is_err(), "should reject: {bad}");
+        }
+    }
+}

@@ -1,0 +1,6 @@
+//! Configuration system: TOML files (the `util::tomlmini` subset) with
+//! defaults, validation, and profile overlays for every subsystem.
+
+mod app;
+
+pub use app::{AppConfig, Backend, CoordinatorConfig};

@@ -1,0 +1,199 @@
+//! Dynamic batcher: groups compatible requests (same batching class) into
+//! batches bounded by `max_batch` size and `max_wait` age.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use super::request::DecisionRequest;
+
+/// A batch of same-class requests ready for execution.
+#[derive(Debug)]
+pub struct Batch {
+    /// Batching class (see [`super::DecisionKind::class`]).
+    pub class: u8,
+    /// The member requests.
+    pub requests: Vec<DecisionRequest>,
+}
+
+impl Batch {
+    /// Number of member requests.
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// Is the batch empty?
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+/// Size/deadline dynamic batcher.
+///
+/// `push` returns a full batch as soon as a class reaches `max_batch`;
+/// `flush_due` releases partially-filled batches whose *oldest* member has
+/// waited `max_wait` (so tail latency is bounded by queueing + execute).
+#[derive(Debug)]
+pub struct Batcher {
+    max_batch: usize,
+    max_wait: Duration,
+    pending: BTreeMap<u8, Vec<DecisionRequest>>,
+}
+
+impl Batcher {
+    /// Build a batcher.
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        assert!(max_batch > 0, "max_batch must be > 0");
+        Self { max_batch, max_wait, pending: BTreeMap::new() }
+    }
+
+    /// Configured batch-size cap.
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Configured wait cap.
+    pub fn max_wait(&self) -> Duration {
+        self.max_wait
+    }
+
+    /// Total queued (not yet released) requests.
+    pub fn queued(&self) -> usize {
+        self.pending.values().map(Vec::len).sum()
+    }
+
+    /// Add a request; returns a batch if its class just filled up.
+    pub fn push(&mut self, req: DecisionRequest) -> Option<Batch> {
+        let class = req.kind.class();
+        let q = self.pending.entry(class).or_default();
+        q.push(req);
+        if q.len() >= self.max_batch {
+            let requests = std::mem::take(q);
+            Some(Batch { class, requests })
+        } else {
+            None
+        }
+    }
+
+    /// Release every class whose oldest request has aged past `max_wait`.
+    pub fn flush_due(&mut self, now: Instant) -> Vec<Batch> {
+        let due: Vec<u8> = self
+            .pending
+            .iter()
+            .filter(|(_, q)| {
+                q.first()
+                    .map(|r| now.duration_since(r.enqueued) >= self.max_wait)
+                    .unwrap_or(false)
+            })
+            .map(|(&c, _)| c)
+            .collect();
+        due.into_iter()
+            .filter_map(|class| {
+                let requests = std::mem::take(self.pending.get_mut(&class)?);
+                (!requests.is_empty()).then_some(Batch { class, requests })
+            })
+            .collect()
+    }
+
+    /// Release everything immediately (shutdown path).
+    pub fn flush_all(&mut self) -> Vec<Batch> {
+        std::mem::take(&mut self.pending)
+            .into_iter()
+            .filter(|(_, q)| !q.is_empty())
+            .map(|(class, requests)| Batch { class, requests })
+            .collect()
+    }
+
+    /// Time until the next deadline flush is needed, if anything is queued.
+    pub fn next_due(&self, now: Instant) -> Option<Duration> {
+        self.pending
+            .values()
+            .filter_map(|q| q.first())
+            .map(|r| {
+                self.max_wait
+                    .saturating_sub(now.saturating_duration_since(r.enqueued))
+            })
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::DecisionKind;
+    use std::sync::mpsc;
+
+    fn req(id: u64, kind: DecisionKind) -> DecisionRequest {
+        let (tx, _rx) = mpsc::channel();
+        // Keep _rx alive is unnecessary for batcher tests: the batcher
+        // never replies.
+        std::mem::forget(_rx);
+        DecisionRequest { id, kind, enqueued: Instant::now(), deadline: None, reply: tx }
+    }
+
+    fn inf(id: u64) -> DecisionRequest {
+        req(id, DecisionKind::Inference { prior: 0.5, likelihood: 0.7, likelihood_not: 0.2 })
+    }
+
+    fn fus(id: u64) -> DecisionRequest {
+        req(id, DecisionKind::Fusion { posteriors: vec![0.8, 0.6] })
+    }
+
+    #[test]
+    fn fills_batches_by_class() {
+        let mut b = Batcher::new(3, Duration::from_millis(10));
+        assert!(b.push(inf(1)).is_none());
+        assert!(b.push(fus(2)).is_none());
+        assert!(b.push(inf(3)).is_none());
+        let full = b.push(inf(4)).expect("third inference fills the batch");
+        assert_eq!(full.len(), 3);
+        assert_eq!(full.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3, 4]);
+        assert_eq!(b.queued(), 1); // the fusion request remains
+    }
+
+    #[test]
+    fn flush_due_respects_age() {
+        let mut b = Batcher::new(10, Duration::from_millis(5));
+        b.push(inf(1));
+        assert!(b.flush_due(Instant::now()).is_empty(), "too young to flush");
+        let later = Instant::now() + Duration::from_millis(6);
+        let flushed = b.flush_due(later);
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].len(), 1);
+        assert_eq!(b.queued(), 0);
+    }
+
+    #[test]
+    fn next_due_tracks_oldest() {
+        let mut b = Batcher::new(10, Duration::from_millis(5));
+        assert!(b.next_due(Instant::now()).is_none());
+        b.push(inf(1));
+        let due = b.next_due(Instant::now()).unwrap();
+        assert!(due <= Duration::from_millis(5));
+        // After the deadline, due time is zero.
+        let later = Instant::now() + Duration::from_millis(10);
+        assert_eq!(b.next_due(later).unwrap(), Duration::ZERO);
+    }
+
+    #[test]
+    fn flush_all_drains_everything() {
+        let mut b = Batcher::new(10, Duration::from_secs(1));
+        b.push(inf(1));
+        b.push(fus(2));
+        b.push(fus(3));
+        let all = b.flush_all();
+        let total: usize = all.iter().map(Batch::len).sum();
+        assert_eq!(total, 3);
+        assert_eq!(b.queued(), 0);
+        assert!(b.flush_all().is_empty());
+    }
+
+    #[test]
+    fn classes_never_mix() {
+        let mut b = Batcher::new(2, Duration::from_secs(1));
+        b.push(inf(1));
+        let full = b.push(fus(2)).map(|_| ()).is_some();
+        assert!(!full, "fusion must not complete an inference batch");
+        let batch = b.push(fus(3)).expect("two fusions fill");
+        assert!(batch.requests.iter().all(|r| r.kind.class() == batch.class));
+    }
+}

@@ -1,0 +1,217 @@
+//! Lock-free metrics registry for the serving layer.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Latency histogram buckets, µs upper bounds (last bucket = overflow).
+pub const LATENCY_BUCKETS_US: [u64; 10] =
+    [50, 100, 200, 400, 800, 1_600, 3_200, 6_400, 12_800, u64::MAX];
+
+/// Shared atomic counters. All methods are thread-safe; snapshots are
+/// consistent-enough reads for reporting.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    rejected: AtomicU64,
+    failed: AtomicU64,
+    batches: AtomicU64,
+    batched_requests: AtomicU64,
+    latency_us_sum: AtomicU64,
+    latency_buckets: [AtomicU64; 10],
+    hardware_ns: AtomicU64,
+}
+
+impl Metrics {
+    /// Fresh registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A request entered the queue.
+    pub fn on_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request was shed at admission (queue full / invalid).
+    pub fn on_reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A batch was dispatched.
+    pub fn on_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
+    }
+
+    /// A decision completed successfully.
+    pub fn on_complete(&self, latency: Duration, hardware_ns: f64) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        let us = latency.as_micros() as u64;
+        self.latency_us_sum.fetch_add(us, Ordering::Relaxed);
+        let idx = LATENCY_BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(9);
+        self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.hardware_ns.fetch_add(hardware_ns as u64, Ordering::Relaxed);
+    }
+
+    /// A decision failed.
+    pub fn on_fail(&self) {
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Consistent-enough snapshot for reporting.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let buckets: Vec<u64> =
+            self.latency_buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_requests: self.batched_requests.load(Ordering::Relaxed),
+            latency_us_sum: self.latency_us_sum.load(Ordering::Relaxed),
+            latency_buckets: buckets,
+            hardware_ns: self.hardware_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time view of the counters.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    /// Requests admitted to the queue.
+    pub submitted: u64,
+    /// Requests answered successfully.
+    pub completed: u64,
+    /// Requests shed at admission.
+    pub rejected: u64,
+    /// Requests that errored during execution.
+    pub failed: u64,
+    /// Batches dispatched.
+    pub batches: u64,
+    /// Total requests across all batches.
+    pub batched_requests: u64,
+    /// Sum of completion latencies, µs.
+    pub latency_us_sum: u64,
+    /// Histogram counts per [`LATENCY_BUCKETS_US`] bucket.
+    pub latency_buckets: Vec<u64>,
+    /// Accumulated virtual hardware time, ns.
+    pub hardware_ns: u64,
+}
+
+impl MetricsSnapshot {
+    /// Mean completion latency, µs.
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.latency_us_sum as f64 / self.completed as f64
+        }
+    }
+
+    /// Mean batch occupancy.
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batches as f64
+        }
+    }
+
+    /// Approximate latency quantile from the histogram (upper bound of the
+    /// bucket containing the q-quantile).
+    pub fn latency_quantile_us(&self, q: f64) -> u64 {
+        let total: u64 = self.latency_buckets.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.latency_buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return LATENCY_BUCKETS_US[i];
+            }
+        }
+        u64::MAX
+    }
+
+    /// Virtual-hardware decision rate: completed / hardware time (the
+    /// paper's fps metric).
+    pub fn virtual_fps(&self) -> f64 {
+        if self.hardware_ns == 0 {
+            0.0
+        } else {
+            self.completed as f64 * 1e9 / self.hardware_ns as f64
+        }
+    }
+
+    /// Render a compact text report.
+    pub fn to_table(&self) -> String {
+        format!(
+            "submitted {}  completed {}  rejected {}  failed {}\n\
+             batches {}  mean batch {:.2}\n\
+             latency mean {:.1} µs  p50 ≤{} µs  p99 ≤{} µs\n\
+             virtual hardware fps {:.0}",
+            self.submitted,
+            self.completed,
+            self.rejected,
+            self.failed,
+            self.batches,
+            self.mean_batch_size(),
+            self.mean_latency_us(),
+            self.latency_quantile_us(0.5),
+            self.latency_quantile_us(0.99),
+            self.virtual_fps(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_reject();
+        m.on_batch(2);
+        m.on_complete(Duration::from_micros(120), 400_000.0);
+        m.on_complete(Duration::from_micros(80), 400_000.0);
+        m.on_fail();
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.completed, 2);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.mean_batch_size(), 2.0);
+        assert!((s.mean_latency_us() - 100.0).abs() < 1e-9);
+        // 2 decisions over 0.8 ms of virtual hardware time = 2,500 fps.
+        assert!((s.virtual_fps() - 2_500.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn quantiles_from_histogram() {
+        let m = Metrics::new();
+        for _ in 0..99 {
+            m.on_complete(Duration::from_micros(60), 0.0);
+        }
+        m.on_complete(Duration::from_micros(5_000), 0.0);
+        let s = m.snapshot();
+        assert_eq!(s.latency_quantile_us(0.5), 100);
+        assert_eq!(s.latency_quantile_us(0.99), 100);
+        assert_eq!(s.latency_quantile_us(1.0), 6_400);
+    }
+
+    #[test]
+    fn empty_snapshot_is_safe() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.mean_latency_us(), 0.0);
+        assert_eq!(s.latency_quantile_us(0.99), 0);
+        assert_eq!(s.virtual_fps(), 0.0);
+        assert!(s.to_table().contains("submitted 0"));
+    }
+}

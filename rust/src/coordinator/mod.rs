@@ -1,0 +1,33 @@
+//! Layer-3 coordinator: the serving system around the Bayesian operators.
+//!
+//! Architecture (vLLM-router-like, sized for this paper's workload):
+//!
+//! ```text
+//!   submit() ──► bounded queue ──► dispatcher thread (dynamic batcher)
+//!                                    │  batches by kind, max_batch /
+//!                                    │  max_wait deadline policy
+//!                                    ▼
+//!                          worker threads (round-robin)
+//!                     native: SneBank + operators (bit-parallel sim)
+//!                     pjrt:   shared Runtime (AOT JAX/Pallas artifacts)
+//!                                    │
+//!                                    ▼
+//!                      reply channels + metrics registry
+//! ```
+//!
+//! Backpressure: `submit` fails fast with `Error::Coordinator` once the
+//! bounded queue is full — callers see load shedding instead of latency
+//! collapse. Each completed decision also advances the virtual hardware
+//! ledger (4 µs/bit), which is what the paper's 2,500 fps claim measures.
+
+mod batcher;
+mod metrics;
+mod request;
+mod router;
+mod server;
+
+pub use batcher::{Batch, Batcher};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use request::{Decision, DecisionKind, DecisionRequest, PendingDecision};
+pub use router::{ExecPlan, Router};
+pub use server::{Coordinator, CoordinatorHandle};

@@ -1,0 +1,183 @@
+//! Request/response types of the serving layer.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use crate::{Error, Result};
+
+/// What kind of Bayesian decision a request wants.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DecisionKind {
+    /// Eq.-1 inference: `[P(A), P(B|A), P(B|¬A)]`.
+    Inference {
+        /// Prior `P(A)`.
+        prior: f64,
+        /// Likelihood `P(B|A)`.
+        likelihood: f64,
+        /// Likelihood `P(B|¬A)`.
+        likelihood_not: f64,
+    },
+    /// M-modal fusion of detector posteriors.
+    Fusion {
+        /// Per-modality `P(y|xᵢ)`.
+        posteriors: Vec<f64>,
+    },
+}
+
+impl DecisionKind {
+    /// Validate all probabilities.
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            DecisionKind::Inference { prior, likelihood, likelihood_not } => {
+                Error::check_prob("prior", *prior)?;
+                Error::check_prob("likelihood", *likelihood)?;
+                Error::check_prob("likelihood_not", *likelihood_not)?;
+            }
+            DecisionKind::Fusion { posteriors } => {
+                if posteriors.len() < 2 {
+                    return Err(Error::Coordinator("fusion needs >= 2 modalities".into()));
+                }
+                for &p in posteriors {
+                    Error::check_prob("posterior", p)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Batching class: requests only batch with the same class.
+    pub fn class(&self) -> u8 {
+        match self {
+            DecisionKind::Inference { .. } => 0,
+            DecisionKind::Fusion { posteriors } => {
+                debug_assert!(posteriors.len() < 250);
+                10 + posteriors.len() as u8
+            }
+        }
+    }
+
+    /// Closed-form result (the accuracy reference carried in responses).
+    pub fn exact(&self) -> f64 {
+        match self {
+            DecisionKind::Inference { prior, likelihood, likelihood_not } => {
+                crate::bayes::exact_posterior(*prior, *likelihood, *likelihood_not)
+            }
+            DecisionKind::Fusion { posteriors } => crate::bayes::exact_fusion_m(posteriors),
+        }
+    }
+}
+
+/// A queued decision request.
+#[derive(Debug)]
+pub struct DecisionRequest {
+    /// Monotone request id.
+    pub id: u64,
+    /// The decision to make.
+    pub kind: DecisionKind,
+    /// When the request entered the queue.
+    pub enqueued: Instant,
+    /// Optional completion deadline (measured from `enqueued`).
+    pub deadline: Option<Duration>,
+    /// Reply channel.
+    pub reply: mpsc::Sender<Result<Decision>>,
+}
+
+/// A completed decision.
+#[derive(Debug, Clone)]
+pub struct Decision {
+    /// Request id this answers.
+    pub id: u64,
+    /// The stochastic posterior (the hardware answer).
+    pub posterior: f64,
+    /// Closed-form posterior for the same inputs.
+    pub exact: f64,
+    /// Wall-clock queue+execute latency.
+    pub latency: Duration,
+    /// Virtual hardware time for the decision, ns (4 µs/bit × n_bits).
+    pub hardware_ns: f64,
+    /// How many requests shared this decision's batch.
+    pub batch_size: usize,
+}
+
+impl Decision {
+    /// |stochastic − exact|.
+    pub fn abs_error(&self) -> f64 {
+        (self.posterior - self.exact).abs()
+    }
+}
+
+/// Caller-side handle to an in-flight decision.
+#[derive(Debug)]
+pub struct PendingDecision {
+    pub(crate) id: u64,
+    pub(crate) rx: mpsc::Receiver<Result<Decision>>,
+}
+
+impl PendingDecision {
+    /// Request id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the decision arrives.
+    pub fn wait(self) -> Result<Decision> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::Coordinator("coordinator dropped the request".into()))?
+    }
+
+    /// Block with a timeout.
+    pub fn wait_timeout(self, timeout: Duration) -> Result<Decision> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => r,
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(Error::Deadline(timeout)),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(Error::Coordinator("coordinator dropped the request".into()))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_validate() {
+        assert!(DecisionKind::Inference { prior: 0.5, likelihood: 0.7, likelihood_not: 0.2 }
+            .validate()
+            .is_ok());
+        assert!(DecisionKind::Inference { prior: 1.5, likelihood: 0.7, likelihood_not: 0.2 }
+            .validate()
+            .is_err());
+        assert!(DecisionKind::Fusion { posteriors: vec![0.8] }.validate().is_err());
+        assert!(DecisionKind::Fusion { posteriors: vec![0.8, 1.2] }.validate().is_err());
+        assert!(DecisionKind::Fusion { posteriors: vec![0.8, 0.6, 0.7] }.validate().is_ok());
+    }
+
+    #[test]
+    fn batching_classes_separate_kinds_and_arity() {
+        let inf = DecisionKind::Inference { prior: 0.5, likelihood: 0.7, likelihood_not: 0.2 };
+        let f2 = DecisionKind::Fusion { posteriors: vec![0.8, 0.6] };
+        let f3 = DecisionKind::Fusion { posteriors: vec![0.8, 0.6, 0.5] };
+        assert_ne!(inf.class(), f2.class());
+        assert_ne!(f2.class(), f3.class());
+    }
+
+    #[test]
+    fn exact_values_match_bayes_module() {
+        let inf = DecisionKind::Inference { prior: 0.57, likelihood: 0.77, likelihood_not: 0.655 };
+        assert!((inf.exact() - 0.609).abs() < 0.005);
+        let fus = DecisionKind::Fusion { posteriors: vec![0.8, 0.7] };
+        assert!((fus.exact() - 0.56 / 0.62).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pending_decision_timeout() {
+        let (_tx, rx) = mpsc::channel();
+        let pending = PendingDecision { id: 1, rx };
+        assert_eq!(pending.id(), 1);
+        let err = pending.wait_timeout(Duration::from_millis(5)).unwrap_err();
+        assert!(matches!(err, Error::Deadline(_)));
+    }
+}

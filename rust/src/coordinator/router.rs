@@ -1,0 +1,122 @@
+//! Router: picks the execution plan (backend + AOT entrypoint + chunking)
+//! for a batch of a given class.
+
+use crate::config::Backend;
+
+use super::request::DecisionKind;
+
+/// How a batch should be executed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExecPlan {
+    /// Native bit-parallel simulator on the worker's SNE bank.
+    Native,
+    /// PJRT entrypoint `entry`, processing `chunk` requests per call
+    /// (batches larger than `chunk` are split; smaller ones are padded).
+    Pjrt {
+        /// Artifact entrypoint name.
+        entry: String,
+        /// Requests per PJRT call.
+        chunk: usize,
+    },
+}
+
+/// Maps (kind, batch length) to an execution plan.
+#[derive(Debug, Clone)]
+pub struct Router {
+    backend: Backend,
+}
+
+impl Router {
+    /// Router for a backend.
+    pub fn new(backend: Backend) -> Self {
+        Self { backend }
+    }
+
+    /// Selected backend.
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Plan execution for a batch whose representative request is `kind`.
+    ///
+    /// PJRT entrypoints exist for batch 16 and 64 (plus the paper's
+    /// single-decision 100-bit shapes); the router picks the smallest
+    /// artifact that covers the batch to minimise padding waste.
+    pub fn route(&self, kind: &DecisionKind, batch_len: usize) -> ExecPlan {
+        match self.backend {
+            Backend::Native => ExecPlan::Native,
+            Backend::Pjrt => {
+                let chunk = if batch_len > 16 { 64 } else { 16 };
+                let entry = match kind {
+                    DecisionKind::Inference { .. } => format!("inference_b{chunk}_n256"),
+                    DecisionKind::Fusion { posteriors } => {
+                        let m = posteriors.len();
+                        if m == 3 {
+                            // Only the b16 three-modal artifact is built.
+                            return ExecPlan::Pjrt {
+                                entry: "fusion_b16_m3_n256".into(),
+                                chunk: 16,
+                            };
+                        }
+                        format!("fusion_b{chunk}_m{m}_n256")
+                    }
+                };
+                ExecPlan::Pjrt { entry, chunk }
+            }
+        }
+    }
+
+    /// Entrypoints a PJRT worker must preload to serve any batch this
+    /// router can produce for 2-modal fusion + inference workloads.
+    pub fn required_entrypoints(&self) -> Vec<&'static str> {
+        match self.backend {
+            Backend::Native => vec![],
+            Backend::Pjrt => vec![
+                "inference_b16_n256",
+                "inference_b64_n256",
+                "fusion_b16_m2_n256",
+                "fusion_b64_m2_n256",
+                "fusion_b16_m3_n256",
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inf() -> DecisionKind {
+        DecisionKind::Inference { prior: 0.5, likelihood: 0.7, likelihood_not: 0.2 }
+    }
+
+    #[test]
+    fn native_backend_routes_native() {
+        let r = Router::new(Backend::Native);
+        assert_eq!(r.route(&inf(), 5), ExecPlan::Native);
+        assert!(r.required_entrypoints().is_empty());
+    }
+
+    #[test]
+    fn pjrt_picks_smallest_covering_artifact() {
+        let r = Router::new(Backend::Pjrt);
+        assert_eq!(
+            r.route(&inf(), 4),
+            ExecPlan::Pjrt { entry: "inference_b16_n256".into(), chunk: 16 }
+        );
+        assert_eq!(
+            r.route(&inf(), 17),
+            ExecPlan::Pjrt { entry: "inference_b64_n256".into(), chunk: 64 }
+        );
+        let f2 = DecisionKind::Fusion { posteriors: vec![0.8, 0.6] };
+        assert_eq!(
+            r.route(&f2, 16),
+            ExecPlan::Pjrt { entry: "fusion_b16_m2_n256".into(), chunk: 16 }
+        );
+        let f3 = DecisionKind::Fusion { posteriors: vec![0.8, 0.6, 0.5] };
+        assert_eq!(
+            r.route(&f3, 40),
+            ExecPlan::Pjrt { entry: "fusion_b16_m3_n256".into(), chunk: 16 }
+        );
+    }
+}

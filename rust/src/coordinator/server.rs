@@ -1,0 +1,534 @@
+//! The coordinator itself: bounded admission queue, dispatcher thread
+//! running the dynamic batcher, and a pool of worker threads executing
+//! batches on the native simulator or the PJRT runtime.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::bayes::{FusionOperator, InferenceOperator};
+use crate::config::{AppConfig, Backend};
+use crate::runtime::Runtime;
+use crate::stochastic::SneBank;
+use crate::util::Rng;
+use crate::{Error, Result};
+
+use super::batcher::{Batch, Batcher};
+use super::metrics::Metrics;
+use super::request::{Decision, DecisionKind, DecisionRequest, PendingDecision};
+use super::router::{ExecPlan, Router};
+
+/// Message into the dispatcher.
+enum Msg {
+    Req(DecisionRequest),
+    Shutdown,
+}
+
+/// Caller-side handle: submit decisions, read metrics.
+#[derive(Clone)]
+pub struct CoordinatorHandle {
+    tx: mpsc::SyncSender<Msg>,
+    next_id: Arc<AtomicU64>,
+    metrics: Arc<Metrics>,
+}
+
+impl CoordinatorHandle {
+    /// Submit a decision request. Fails fast (backpressure) when the
+    /// admission queue is full.
+    pub fn submit(&self, kind: DecisionKind) -> Result<PendingDecision> {
+        self.submit_with_deadline(kind, None)
+    }
+
+    /// Submit with a completion deadline; the worker drops the decision
+    /// (replying with [`Error::Deadline`]) if it can't meet it.
+    pub fn submit_with_deadline(
+        &self,
+        kind: DecisionKind,
+        deadline: Option<Duration>,
+    ) -> Result<PendingDecision> {
+        kind.validate().inspect_err(|_| self.metrics.on_reject())?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = mpsc::channel();
+        let req =
+            DecisionRequest { id, kind, enqueued: Instant::now(), deadline, reply };
+        match self.tx.try_send(Msg::Req(req)) {
+            Ok(()) => {
+                self.metrics.on_submit();
+                Ok(PendingDecision { id, rx })
+            }
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.metrics.on_reject();
+                Err(Error::Coordinator("admission queue full (backpressure)".into()))
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                Err(Error::Coordinator("coordinator is shut down".into()))
+            }
+        }
+    }
+
+    /// Convenience: submit and wait.
+    pub fn decide(&self, kind: DecisionKind) -> Result<Decision> {
+        self.submit(kind)?.wait()
+    }
+
+    /// Metrics registry.
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+}
+
+/// The running coordinator (owns the threads).
+pub struct Coordinator {
+    handle: CoordinatorHandle,
+    dispatcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start dispatcher + workers per `config`.
+    ///
+    /// On the PJRT backend every worker compiles its own copy of the
+    /// required entrypoints (PJRT executables are not shared across
+    /// threads); on the native backend every worker owns an SNE bank
+    /// seeded from `config.seed`.
+    pub fn start(config: &AppConfig) -> Result<Self> {
+        config.validate()?;
+        let metrics = Arc::new(Metrics::new());
+        let router = Router::new(config.coordinator.backend);
+        let (tx, rx) = mpsc::sync_channel::<Msg>(config.coordinator.queue_capacity);
+
+        // Per-worker channels; dispatcher round-robins batches.
+        let mut worker_txs = Vec::new();
+        let mut workers = Vec::new();
+        for w in 0..config.coordinator.workers {
+            let (btx, brx) = mpsc::channel::<Batch>();
+            worker_txs.push(btx);
+            let metrics = Arc::clone(&metrics);
+            let router = router.clone();
+            let config = config.clone();
+            // PJRT clients are not Send: each worker builds its own
+            // context (bank or runtime) inside its thread.
+            workers.push(std::thread::spawn(move || {
+                match WorkerContext::build(&config, &router, w as u64) {
+                    Ok(ctx) => worker_loop(ctx, brx, router, metrics),
+                    Err(e) => {
+                        // Startup failure: reply the error to every batch.
+                        let msg = e.to_string();
+                        while let Ok(batch) = brx.recv() {
+                            for req in batch.requests {
+                                metrics.on_fail();
+                                let _ = req
+                                    .reply
+                                    .send(Err(Error::Coordinator(msg.clone())));
+                            }
+                        }
+                    }
+                }
+            }));
+        }
+
+        let max_batch = config.coordinator.max_batch;
+        let max_wait = config.coordinator.max_wait;
+        let metrics_d = Arc::clone(&metrics);
+        let dispatcher = std::thread::spawn(move || {
+            dispatcher_loop(rx, worker_txs, max_batch, max_wait, metrics_d)
+        });
+
+        Ok(Self {
+            handle: CoordinatorHandle { tx, next_id: Arc::new(AtomicU64::new(0)), metrics },
+            dispatcher: Some(dispatcher),
+            workers,
+        })
+    }
+
+    /// Cloneable submission handle.
+    pub fn handle(&self) -> CoordinatorHandle {
+        self.handle.clone()
+    }
+
+    /// Graceful shutdown: stop admissions, drain in-flight work, join
+    /// threads. Requests still queued are answered before exit.
+    pub fn shutdown(mut self) {
+        // Blocking `send` so the signal gets through even when the queue
+        // is momentarily full.
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn dispatcher_loop(
+    rx: mpsc::Receiver<Msg>,
+    worker_txs: Vec<mpsc::Sender<Batch>>,
+    max_batch: usize,
+    max_wait: Duration,
+    metrics: Arc<Metrics>,
+) {
+    let mut batcher = Batcher::new(max_batch, max_wait);
+    let mut next_worker = 0usize;
+    let dispatch = |batch: Batch, next_worker: &mut usize| {
+        metrics.on_batch(batch.len());
+        // Round-robin; skip dead workers.
+        for _ in 0..worker_txs.len() {
+            let idx = *next_worker % worker_txs.len();
+            *next_worker += 1;
+            if worker_txs[idx].send(batch).is_ok() {
+                return;
+            }
+            unreachable!("worker channel closed before dispatcher shutdown");
+        }
+    };
+    let mut shutdown = false;
+    while !shutdown {
+        let wait = batcher
+            .next_due(Instant::now())
+            .unwrap_or(Duration::from_millis(50))
+            .max(Duration::from_micros(50));
+        match rx.recv_timeout(wait) {
+            Ok(Msg::Req(req)) => {
+                if let Some(batch) = batcher.push(req) {
+                    dispatch(batch, &mut next_worker);
+                }
+                // Burst handling: drain the whole backlog non-blocking
+                // BEFORE any deadline flush, so a queue that built up
+                // while workers were busy still forms full batches
+                // instead of degenerating to batch-of-1 (each queued
+                // request is individually past max_wait by now).
+                loop {
+                    match rx.try_recv() {
+                        Ok(Msg::Req(req)) => {
+                            if let Some(batch) = batcher.push(req) {
+                                dispatch(batch, &mut next_worker);
+                            }
+                        }
+                        Ok(Msg::Shutdown) => {
+                            shutdown = true;
+                            break;
+                        }
+                        Err(_) => break,
+                    }
+                }
+            }
+            Ok(Msg::Shutdown) | Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+        }
+        for batch in batcher.flush_due(Instant::now()) {
+            dispatch(batch, &mut next_worker);
+        }
+    }
+    for batch in batcher.flush_all() {
+        dispatch(batch, &mut next_worker);
+    }
+    // worker_txs drop here -> workers drain and exit.
+}
+
+/// Per-worker execution context.
+enum WorkerContext {
+    Native { bank: SneBank, inference: InferenceOperator, fusion: FusionOperator },
+    Pjrt { runtime: Runtime, rng: Rng, n_bits: usize },
+}
+
+impl WorkerContext {
+    fn build(config: &AppConfig, router: &Router, worker_idx: u64) -> Result<Self> {
+        match router.backend() {
+            Backend::Native => Ok(WorkerContext::Native {
+                bank: SneBank::new(config.sne.clone(), config.seed ^ (worker_idx << 32))?,
+                inference: InferenceOperator::default(),
+                fusion: FusionOperator::default(),
+            }),
+            Backend::Pjrt => {
+                let runtime = Runtime::load_subset(
+                    &config.artifacts_dir,
+                    &router.required_entrypoints(),
+                )?;
+                Ok(WorkerContext::Pjrt {
+                    runtime,
+                    rng: Rng::seeded(config.seed ^ (worker_idx << 32) ^ 0xFACE),
+                    n_bits: 256,
+                })
+            }
+        }
+    }
+
+    fn hardware_ns(&self) -> f64 {
+        let n_bits = match self {
+            WorkerContext::Native { bank, .. } => bank.n_bits(),
+            WorkerContext::Pjrt { n_bits, .. } => *n_bits,
+        };
+        crate::device::DeviceParams::BIT_PERIOD_NS * n_bits as f64
+    }
+}
+
+fn worker_loop(
+    mut ctx: WorkerContext,
+    rx: mpsc::Receiver<Batch>,
+    router: Router,
+    metrics: Arc<Metrics>,
+) {
+    while let Ok(batch) = rx.recv() {
+        execute_batch(&mut ctx, batch, &router, &metrics);
+    }
+}
+
+fn execute_batch(ctx: &mut WorkerContext, batch: Batch, router: &Router, metrics: &Metrics) {
+    let Some(first) = batch.requests.first() else { return };
+    let plan = router.route(&first.kind, batch.len());
+    let batch_size = batch.len();
+    let hardware_ns = ctx.hardware_ns();
+
+    // Compute posteriors for the whole batch up-front.
+    let posteriors: Vec<Result<f64>> = match (&plan, &mut *ctx) {
+        (ExecPlan::Native, WorkerContext::Native { bank, inference, fusion }) => batch
+            .requests
+            .iter()
+            .map(|req| match &req.kind {
+                DecisionKind::Inference { prior, likelihood, likelihood_not } => inference
+                    .try_infer(bank, *prior, *likelihood, *likelihood_not)
+                    .map(|r| r.posterior),
+                DecisionKind::Fusion { posteriors } => {
+                    fusion.fuse(bank, posteriors).map(|r| r.fused)
+                }
+            })
+            .collect(),
+        (ExecPlan::Pjrt { entry, chunk }, WorkerContext::Pjrt { runtime, rng, .. }) => {
+            execute_pjrt(runtime, rng, entry, *chunk, &batch)
+        }
+        // Plan/context mismatch is a construction bug.
+        _ => batch
+            .requests
+            .iter()
+            .map(|_| Err(Error::Coordinator("backend/plan mismatch".into())))
+            .collect(),
+    };
+
+    for (req, result) in batch.requests.into_iter().zip(posteriors) {
+        let latency = req.enqueued.elapsed();
+        let response = match result {
+            Ok(_) if req.deadline.is_some_and(|d| latency > d) => {
+                metrics.on_fail();
+                Err(Error::Deadline(req.deadline.unwrap()))
+            }
+            Ok(posterior) => {
+                metrics.on_complete(latency, hardware_ns);
+                Ok(Decision {
+                    id: req.id,
+                    posterior,
+                    exact: req.kind.exact(),
+                    latency,
+                    hardware_ns,
+                    batch_size,
+                })
+            }
+            Err(e) => {
+                metrics.on_fail();
+                Err(e)
+            }
+        };
+        let _ = req.reply.send(response); // caller may have gone away
+    }
+}
+
+/// Run a batch through a PJRT entrypoint in `chunk`-sized slices, padding
+/// the tail with zeros (padded rows are discarded).
+fn execute_pjrt(
+    runtime: &Runtime,
+    rng: &mut Rng,
+    entry: &str,
+    chunk: usize,
+    batch: &Batch,
+) -> Vec<Result<f64>> {
+    let mut out = Vec::with_capacity(batch.len());
+    for slice in batch.requests.chunks(chunk) {
+        // Row width from the kind (3 for inference, M for fusion).
+        let (width, is_inference) = match &slice[0].kind {
+            DecisionKind::Inference { .. } => (3, true),
+            DecisionKind::Fusion { posteriors } => (posteriors.len(), false),
+        };
+        let mut probs = vec![0f32; chunk * width];
+        for (i, req) in slice.iter().enumerate() {
+            match &req.kind {
+                DecisionKind::Inference { prior, likelihood, likelihood_not } => {
+                    probs[i * width] = *prior as f32;
+                    probs[i * width + 1] = *likelihood as f32;
+                    probs[i * width + 2] = *likelihood_not as f32;
+                }
+                DecisionKind::Fusion { posteriors } => {
+                    for (j, &p) in posteriors.iter().enumerate() {
+                        probs[i * width + j] = p as f32;
+                    }
+                }
+            }
+        }
+        let result = if is_inference {
+            runtime.inference(entry, &probs, rng)
+        } else {
+            runtime.fusion(entry, &probs, rng)
+        };
+        match result {
+            Ok(flat) => {
+                // inference returns B×2 rows, fusion returns B values.
+                let stride = if is_inference { 2 } else { 1 };
+                for i in 0..slice.len() {
+                    out.push(Ok(flat[i * stride] as f64));
+                }
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                for _ in 0..slice.len() {
+                    out.push(Err(Error::Runtime(msg.clone())));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn config(workers: usize, max_batch: usize) -> AppConfig {
+        let mut cfg = AppConfig::default();
+        cfg.coordinator.workers = workers;
+        cfg.coordinator.max_batch = max_batch;
+        cfg.coordinator.max_wait = Duration::from_micros(200);
+        cfg
+    }
+
+    fn inference_kind() -> DecisionKind {
+        DecisionKind::Inference { prior: 0.57, likelihood: 0.77, likelihood_not: 0.655 }
+    }
+
+    #[test]
+    fn serves_single_decision() {
+        let coord = Coordinator::start(&config(1, 4)).unwrap();
+        let d = coord.handle().decide(inference_kind()).unwrap();
+        assert!((d.exact - 0.609).abs() < 0.005);
+        assert!((d.posterior - d.exact).abs() < 0.25); // 100-bit noise
+        assert!((d.hardware_ns - 400_000.0).abs() < 1e-6);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn serves_concurrent_mixed_load() {
+        let coord = Coordinator::start(&config(2, 8)).unwrap();
+        let h = coord.handle();
+        let mut pending = Vec::new();
+        for i in 0..64 {
+            let kind = if i % 2 == 0 {
+                inference_kind()
+            } else {
+                DecisionKind::Fusion { posteriors: vec![0.8, 0.7] }
+            };
+            pending.push(h.submit(kind).unwrap());
+        }
+        let mut completed = 0;
+        for p in pending {
+            let d = p.wait_timeout(Duration::from_secs(5)).unwrap();
+            assert!((0.0..=1.0).contains(&d.posterior));
+            completed += 1;
+        }
+        assert_eq!(completed, 64);
+        let snap = h.metrics().snapshot();
+        assert_eq!(snap.completed, 64);
+        assert!(snap.mean_batch_size() > 1.0, "batching never engaged");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn every_request_is_answered_exactly_once() {
+        // Conservation: ids of responses == ids submitted.
+        let coord = Coordinator::start(&config(3, 5)).unwrap();
+        let h = coord.handle();
+        let pending: Vec<_> =
+            (0..41).map(|_| h.submit(inference_kind()).unwrap()).collect();
+        let mut ids: Vec<u64> = pending
+            .into_iter()
+            .map(|p| {
+                let id = p.id();
+                let d = p.wait_timeout(Duration::from_secs(5)).unwrap();
+                assert_eq!(d.id, id);
+                id
+            })
+            .collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 41);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn invalid_requests_rejected_at_admission() {
+        let coord = Coordinator::start(&config(1, 4)).unwrap();
+        let h = coord.handle();
+        let err = h
+            .submit(DecisionKind::Inference { prior: 1.5, likelihood: 0.5, likelihood_not: 0.5 })
+            .unwrap_err();
+        assert!(matches!(err, Error::ProbabilityRange { .. }));
+        assert_eq!(h.metrics().snapshot().rejected, 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn backpressure_sheds_load() {
+        let mut cfg = config(1, 4);
+        cfg.coordinator.queue_capacity = 4;
+        cfg.coordinator.max_wait = Duration::from_millis(200); // slow drain
+        let coord = Coordinator::start(&cfg).unwrap();
+        let h = coord.handle();
+        let mut accepted = Vec::new();
+        let mut rejections = 0;
+        for _ in 0..5_000 {
+            match h.submit(inference_kind()) {
+                Ok(p) => accepted.push(p),
+                Err(Error::Coordinator(_)) => rejections += 1,
+                Err(e) => panic!("unexpected error {e}"),
+            }
+        }
+        assert!(rejections > 0, "queue never filled");
+        // Accepted requests still complete.
+        for p in accepted {
+            let _ = p.wait_timeout(Duration::from_secs(10)).unwrap();
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn deadline_misses_are_reported() {
+        let coord = Coordinator::start(&config(1, 1)).unwrap();
+        let h = coord.handle();
+        let p = h
+            .submit_with_deadline(inference_kind(), Some(Duration::from_nanos(1)))
+            .unwrap();
+        let err = p.wait_timeout(Duration::from_secs(5)).unwrap_err();
+        assert!(matches!(err, Error::Deadline(_)));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn pjrt_backend_serves_if_artifacts_present() {
+        let dir = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        if !dir.join("manifest.toml").exists() {
+            return;
+        }
+        let mut cfg = config(1, 8);
+        cfg.coordinator.backend = Backend::Pjrt;
+        cfg.artifacts_dir = dir.to_path_buf();
+        let coord = Coordinator::start(&cfg).unwrap();
+        let h = coord.handle();
+        let pending: Vec<_> = (0..16)
+            .map(|_| h.submit(DecisionKind::Fusion { posteriors: vec![0.8, 0.7] }).unwrap())
+            .collect();
+        for p in pending {
+            let d = p.wait_timeout(Duration::from_secs(10)).unwrap();
+            // 256-bit stochastic fusion: loose envelope around 0.903.
+            assert!((d.posterior - 0.903).abs() < 0.25, "posterior {}", d.posterior);
+        }
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,212 @@
+//! Crossbar array of memristors and the paper's sampling test (Fig. 1a/c/d,
+//! Fig. S3).
+
+use crate::util::Rng;
+
+use super::{DeviceParams, Memristor, SweepCycle};
+
+/// Aggregate switching statistics over devices × cycles (Fig. 1c).
+#[derive(Debug, Clone)]
+pub struct ArrayStats {
+    /// Mean of all measured `V_th` samples, V.
+    pub vth_mean: f64,
+    /// Std-dev of all measured `V_th` samples, V.
+    pub vth_std: f64,
+    /// Mean of all measured `V_hold` samples, V.
+    pub vhold_mean: f64,
+    /// Std-dev of all measured `V_hold` samples, V.
+    pub vhold_std: f64,
+    /// Device-to-device coefficient of variation of per-device mean `V_th`
+    /// (the paper's ~8 % uniformity figure, Fig. 1d).
+    pub d2d_cov_vth: f64,
+    /// Number of devices sampled.
+    pub devices: usize,
+    /// Sweep cycles per device.
+    pub cycles: usize,
+}
+
+/// Per-device traces from a sampling test (Fig. 1d / S3 / S4).
+#[derive(Debug, Clone)]
+pub struct SamplingReport {
+    /// `(row, col)` of each sampled device.
+    pub coords: Vec<(usize, usize)>,
+    /// Per-device `V_th` trace across cycles.
+    pub vth_traces: Vec<Vec<f64>>,
+    /// Per-device `V_hold` trace across cycles.
+    pub vhold_traces: Vec<Vec<f64>>,
+    /// Aggregate statistics.
+    pub stats: ArrayStats,
+}
+
+/// A `rows × cols` crossbar of independently-sampled memristors.
+///
+/// The paper fabricates a 12×12 array (Fig. 1a) with ~100 % yield and uses
+/// randomly-sampled devices for its statistics; SNE banks draw devices from
+/// an array of this type.
+pub struct MemristorArray {
+    rows: usize,
+    cols: usize,
+    devices: Vec<Memristor>,
+}
+
+impl MemristorArray {
+    /// Fabricate an array with device-to-device variability drawn from
+    /// `params.d2d_cov`.
+    pub fn fabricate(
+        rows: usize,
+        cols: usize,
+        params: DeviceParams,
+        rng: &mut Rng,
+    ) -> Self {
+        let devices =
+            (0..rows * cols).map(|_| Memristor::sampled(params.clone(), rng)).collect();
+        Self { rows, cols, devices }
+    }
+
+    /// The paper's array: 12×12, default parameters.
+    pub fn paper_array(rng: &mut Rng) -> Self {
+        Self::fabricate(12, 12, DeviceParams::default(), rng)
+    }
+
+    /// Array dimensions `(rows, cols)`.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Total number of devices.
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Is the array empty?
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Borrow the device at `(row, col)`.
+    pub fn device(&self, row: usize, col: usize) -> &Memristor {
+        &self.devices[row * self.cols + col]
+    }
+
+    /// Mutably borrow the device at `(row, col)`.
+    pub fn device_mut(&mut self, row: usize, col: usize) -> &mut Memristor {
+        &mut self.devices[row * self.cols + col]
+    }
+
+    /// Take `n` devices out of the array (for building SNE banks).
+    pub fn take_devices(&mut self, n: usize) -> Vec<Memristor> {
+        let n = n.min(self.devices.len());
+        self.devices.drain(..n).collect()
+    }
+
+    /// Fraction of devices still within their endurance budget.
+    pub fn yield_fraction(&self) -> f64 {
+        if self.devices.is_empty() {
+            return 0.0;
+        }
+        let ok = self.devices.iter().filter(|d| !d.is_worn()).count();
+        ok as f64 / self.devices.len() as f64
+    }
+
+    /// The paper's sampling test (Fig. 1c/d, S3): sweep `n_devices`
+    /// randomly-selected devices for `cycles` cycles each and report the
+    /// per-device traces plus aggregate statistics.
+    pub fn sampling_test(
+        &mut self,
+        n_devices: usize,
+        cycles: usize,
+        rng: &mut Rng,
+    ) -> SamplingReport {
+        let n_devices = n_devices.min(self.devices.len());
+        let picked: Vec<usize> = rng.sample_indices(self.devices.len(), n_devices);
+        let mut coords = Vec::with_capacity(n_devices);
+        let mut vth_traces = Vec::with_capacity(n_devices);
+        let mut vhold_traces = Vec::with_capacity(n_devices);
+        for &idx in &picked {
+            coords.push((idx / self.cols, idx % self.cols));
+            let dev = &mut self.devices[idx];
+            let runs: Vec<SweepCycle> =
+                (0..cycles).map(|_| dev.sweep_cycle(2.5, 32, rng)).collect();
+            vth_traces.push(runs.iter().map(|c| c.vth).collect());
+            vhold_traces.push(runs.iter().map(|c| c.vhold).collect());
+        }
+        let stats = Self::stats_from_traces(&vth_traces, &vhold_traces);
+        SamplingReport { coords, vth_traces, vhold_traces, stats }
+    }
+
+    fn stats_from_traces(vth: &[Vec<f64>], vhold: &[Vec<f64>]) -> ArrayStats {
+        let flat = |tr: &[Vec<f64>]| -> Vec<f64> { tr.iter().flatten().copied().collect() };
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+        let std = |v: &[f64]| {
+            let m = mean(v);
+            (v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len().max(1) as f64).sqrt()
+        };
+        let vth_all = flat(vth);
+        let vhold_all = flat(vhold);
+        let per_dev_means: Vec<f64> = vth.iter().map(|t| mean(t)).collect();
+        let d2d = if per_dev_means.len() > 1 {
+            std(&per_dev_means) / mean(&per_dev_means)
+        } else {
+            0.0
+        };
+        ArrayStats {
+            vth_mean: mean(&vth_all),
+            vth_std: std(&vth_all),
+            vhold_mean: mean(&vhold_all),
+            vhold_std: std(&vhold_all),
+            d2d_cov_vth: d2d,
+            devices: vth.len(),
+            cycles: vth.first().map_or(0, |t| t.len()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fabricate_paper_array() {
+        let mut rng = Rng::seeded(9);
+        let arr = MemristorArray::paper_array(&mut rng);
+        assert_eq!(arr.shape(), (12, 12));
+        assert_eq!(arr.len(), 144);
+        assert_eq!(arr.yield_fraction(), 1.0);
+    }
+
+    #[test]
+    fn sampling_test_reproduces_fig1_statistics() {
+        let mut rng = Rng::seeded(10);
+        let mut arr = MemristorArray::paper_array(&mut rng);
+        // Paper: 10 devices × 128 cycles.
+        let rep = arr.sampling_test(10, 128, &mut rng);
+        assert_eq!(rep.coords.len(), 10);
+        assert_eq!(rep.vth_traces[0].len(), 128);
+        let s = &rep.stats;
+        assert!((s.vth_mean - 2.08).abs() < 0.15, "vth mean {}", s.vth_mean);
+        assert!((s.vhold_mean - 0.98).abs() < 0.15, "vhold mean {}", s.vhold_mean);
+        // Device-to-device CoV in the ballpark of the paper's ~8 %.
+        assert!(s.d2d_cov_vth > 0.01 && s.d2d_cov_vth < 0.20, "d2d {}", s.d2d_cov_vth);
+    }
+
+    #[test]
+    fn take_devices_shrinks_array() {
+        let mut rng = Rng::seeded(11);
+        let mut arr = MemristorArray::fabricate(4, 4, DeviceParams::default(), &mut rng);
+        let taken = arr.take_devices(5);
+        assert_eq!(taken.len(), 5);
+        assert_eq!(arr.len(), 11);
+        // Over-taking is clamped.
+        let rest = arr.take_devices(100);
+        assert_eq!(rest.len(), 11);
+        assert!(arr.is_empty());
+    }
+
+    #[test]
+    fn sampling_more_devices_than_array_is_clamped() {
+        let mut rng = Rng::seeded(12);
+        let mut arr = MemristorArray::fabricate(2, 2, DeviceParams::default(), &mut rng);
+        let rep = arr.sampling_test(50, 8, &mut rng);
+        assert_eq!(rep.coords.len(), 4);
+    }
+}

@@ -1,0 +1,376 @@
+//! Single volatile memristor: quasi-static sweeps and pulsed operation.
+
+use crate::util::Rng;
+
+use super::{DeviceParams, DeviceState, OrnsteinUhlenbeck};
+
+/// One quasi-static sweep cycle (Fig. 1b): the sampled thresholds and the
+/// synthesised current-voltage trace.
+#[derive(Debug, Clone)]
+pub struct SweepCycle {
+    /// Sampled SET threshold for this cycle, V.
+    pub vth: f64,
+    /// Sampled hold voltage for this cycle, V.
+    pub vhold: f64,
+    /// (voltage, current) points of the up-then-down sweep.
+    pub iv: Vec<(f64, f64)>,
+}
+
+/// Outcome of one voltage pulse applied to the device.
+#[derive(Debug, Clone, Copy)]
+pub struct SwitchEvent {
+    /// Did the device switch ON during the pulse?
+    pub switched: bool,
+    /// Analog output node voltage seen by the comparator chain, V.
+    /// `0.0` when the device stayed OFF.
+    pub analog_out: f64,
+    /// Energy dissipated, nJ (switching events only).
+    pub energy_nj: f64,
+    /// Time consumed by the pulse + relaxation, ns.
+    pub latency_ns: f64,
+}
+
+/// A volatile filamentary memristor.
+///
+/// The device carries (a) a slow Ornstein-Uhlenbeck component modelling the
+/// cycle-to-cycle threshold drift the paper measures in Fig. S4, and (b)
+/// fast per-pulse stochasticity (logistic, per the Fig. 2b calibration)
+/// from filament nucleation. Volatility is intrinsic: every pulse ends with
+/// the device relaxed OFF after `relax_time_ns` — there is no reset step.
+#[derive(Debug, Clone)]
+pub struct Memristor {
+    params: DeviceParams,
+    /// Per-device mean threshold (device-to-device variability).
+    vth_mu: f64,
+    /// Per-device mean hold voltage.
+    vhold_mu: f64,
+    /// Slow threshold dynamics (Fig. S4).
+    ou: OrnsteinUhlenbeck,
+    state: DeviceState,
+    cycles: u64,
+}
+
+impl Memristor {
+    /// A nominal device (no device-to-device offset).
+    pub fn new(params: DeviceParams) -> Self {
+        let ou = OrnsteinUhlenbeck::from_params(&params, params.vth_mean);
+        Self {
+            vth_mu: params.vth_mean,
+            vhold_mu: params.vhold_mean,
+            ou,
+            params,
+            state: DeviceState::Off,
+            cycles: 0,
+        }
+    }
+
+    /// A device drawn from the array's device-to-device distribution
+    /// (CoV ≈ 8 % on `V_th`, Fig. 1d).
+    pub fn sampled(params: DeviceParams, rng: &mut Rng) -> Self {
+        let vth_mu = rng
+            .normal_with(params.vth_mean, params.d2d_cov * params.vth_mean)
+            .max(params.vhold_mean + 0.1);
+        let vhold_mu = rng
+            .normal_with(params.vhold_mean, params.d2d_cov * params.vhold_mean)
+            .max(0.05);
+        let mut ou = OrnsteinUhlenbeck::from_params(&params, vth_mu);
+        ou.reset_stationary(rng);
+        Self { vth_mu, vhold_mu, ou, params, state: DeviceState::Off, cycles: 0 }
+    }
+
+    /// Device parameters.
+    pub fn params(&self) -> &DeviceParams {
+        &self.params
+    }
+
+    /// Per-device mean threshold voltage.
+    pub fn vth_mu(&self) -> f64 {
+        self.vth_mu
+    }
+
+    /// Per-device mean hold voltage.
+    pub fn vhold_mu(&self) -> f64 {
+        self.vhold_mu
+    }
+
+    /// Conduction state.
+    pub fn state(&self) -> DeviceState {
+        self.state
+    }
+
+    /// Total switching cycles experienced.
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Record `n` switching events performed outside [`Self::pulse`]
+    /// (the SNE fast path samples switching statistically but must still
+    /// age the device).
+    pub(crate) fn record_switches(&mut self, n: u64) {
+        self.cycles += n;
+    }
+
+    /// Remaining endurance fraction in `[0, 1]`.
+    pub fn endurance_left(&self) -> f64 {
+        1.0 - (self.cycles as f64 / self.params.endurance_cycles as f64).min(1.0)
+    }
+
+    /// Is the device past its endurance budget?
+    pub fn is_worn(&self) -> bool {
+        self.cycles >= self.params.endurance_cycles
+    }
+
+    /// Run one quasi-static I-V sweep cycle `0 → vmax → 0` (Fig. 1b).
+    ///
+    /// Samples this cycle's `V_th` from the OU process and `V_hold` from
+    /// the measured Gaussian, then synthesises the compliance-limited I-V
+    /// trace with `points_per_leg` points per sweep direction.
+    pub fn sweep_cycle(
+        &mut self,
+        vmax: f64,
+        points_per_leg: usize,
+        rng: &mut Rng,
+    ) -> SweepCycle {
+        let vth = self.ou.step(rng).clamp(self.vhold_mu + 0.05, vmax.max(self.vhold_mu + 0.1));
+        let vhold = rng
+            .normal_with(self.vhold_mu, self.params.vhold_std)
+            .clamp(0.05, vth - 0.01);
+        let mut iv = Vec::with_capacity(points_per_leg * 2);
+        let mut on = false;
+        // Up leg: device SETs when V crosses vth.
+        for i in 0..points_per_leg {
+            let v = vmax * i as f64 / (points_per_leg - 1).max(1) as f64;
+            if !on && v >= vth {
+                on = true;
+            }
+            iv.push((v, self.leak_or_on_current(v, on)));
+        }
+        // Down leg: device holds until V drops below vhold.
+        for i in (0..points_per_leg).rev() {
+            let v = vmax * i as f64 / (points_per_leg - 1).max(1) as f64;
+            if on && v <= vhold {
+                on = false;
+            }
+            iv.push((v, self.leak_or_on_current(v, on)));
+        }
+        self.state = DeviceState::Off; // volatile: self-reset at 0 bias
+        self.cycles += 1;
+        SweepCycle { vth, vhold, iv }
+    }
+
+    fn leak_or_on_current(&self, v: f64, on: bool) -> f64 {
+        if on {
+            (v / self.params.r_on).min(self.params.compliance_a)
+        } else {
+            v / self.params.r_off
+        }
+    }
+
+    /// Apply one encode pulse of amplitude `v_in` (the SNE hot path).
+    ///
+    /// The per-pulse effective threshold is
+    /// `V̂ = center + drift_coupling·(OU − μ_dev) + (μ_dev − μ_nom) + Logistic(0, s)`;
+    /// the device switches iff `v_in > V̂`. With the default calibration
+    /// this reproduces the paper's Fig. 2b curve
+    /// `P_unc = σ(3.56·(V_in − 2.24))` exactly in expectation.
+    ///
+    /// When the device switches, the analog output node settles at a
+    /// logistic-distributed voltage (Fig. 2c calibration) that downstream
+    /// comparators binarise — this is what makes same-SNE streams
+    /// correlated and distinct-SNE streams independent.
+    pub fn pulse(&mut self, v_in: f64, rng: &mut Rng) -> SwitchEvent {
+        let p = &self.params;
+        // Slow drift: advance the OU process one pulse-cycle.
+        let slow = self.ou.step(rng) - self.vth_mu;
+        // Device-to-device offset shifts the pulsed curve the same way it
+        // shifts the sweep Gaussian.
+        let d2d = self.vth_mu - p.vth_mean;
+        let noise = rng.logistic() * p.pulse_vth_scale;
+        let vth_eff = p.pulse_vth_center + p.drift_coupling * slow + d2d + noise;
+        let switched = v_in > vth_eff;
+        let (analog_out, energy) = if switched {
+            self.cycles += 1;
+            self.state = DeviceState::Off; // relaxes before the next bit slot
+            (p.analog_out_center + rng.logistic() * p.analog_out_scale, p.switch_energy_nj)
+        } else {
+            (0.0, 0.0)
+        };
+        SwitchEvent {
+            switched,
+            analog_out,
+            energy_nj: energy,
+            latency_ns: DeviceParams::BIT_PERIOD_NS,
+        }
+    }
+
+    /// Theoretical pulsed switching probability at `v_in` (Fig. 2b fit).
+    pub fn switch_probability(&self, v_in: f64) -> f64 {
+        let p = &self.params;
+        let center = p.pulse_vth_center + (self.vth_mu - p.vth_mean);
+        logistic_cdf(v_in, center, p.pulse_vth_scale)
+    }
+
+    /// Inverse of [`Self::switch_probability`]: the pulse amplitude that
+    /// encodes probability `prob` on this device (SNE calibration).
+    pub fn voltage_for_probability(&self, prob: f64) -> f64 {
+        let p = &self.params;
+        let center = p.pulse_vth_center + (self.vth_mu - p.vth_mean);
+        let q = prob.clamp(1e-9, 1.0 - 1e-9);
+        center + p.pulse_vth_scale * (q / (1.0 - q)).ln()
+    }
+}
+
+/// Logistic CDF with location `mu`, scale `s`.
+pub(crate) fn logistic_cdf(x: f64, mu: f64, s: f64) -> f64 {
+    1.0 / (1.0 + (-(x - mu) / s).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::seeded(1234)
+    }
+
+    #[test]
+    fn sweep_thresholds_match_paper_gaussians() {
+        let mut r = rng();
+        let mut m = Memristor::new(DeviceParams::default());
+        let cycles: Vec<SweepCycle> = (0..2000).map(|_| m.sweep_cycle(2.5, 64, &mut r)).collect();
+        let vth: Vec<f64> = cycles.iter().map(|c| c.vth).collect();
+        let vhold: Vec<f64> = cycles.iter().map(|c| c.vhold).collect();
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        let std = |v: &[f64]| {
+            let m = mean(v);
+            (v.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / v.len() as f64).sqrt()
+        };
+        assert!((mean(&vth) - 2.08).abs() < 0.05, "vth mean {}", mean(&vth));
+        assert!((std(&vth) - 0.28).abs() < 0.06, "vth std {}", std(&vth));
+        assert!((mean(&vhold) - 0.98).abs() < 0.05, "vhold mean {}", mean(&vhold));
+    }
+
+    #[test]
+    fn sweep_iv_shows_threshold_switching_and_ratio() {
+        let mut r = rng();
+        let mut m = Memristor::new(DeviceParams::default());
+        let c = m.sweep_cycle(2.5, 128, &mut r);
+        // At max bias the device is ON and compliance-limited.
+        let i_max = c.iv.iter().map(|&(_, i)| i).fold(0.0f64, f64::max);
+        assert!((i_max - 100e-9).abs() < 1e-12, "compliance not hit: {i_max}");
+        // Early in the up-sweep (below vhold for sure) it is OFF: tiny leak.
+        let (v0, i0) = c.iv[1];
+        assert!(v0 < 0.1 && i0 < 1e-11);
+        // Volatile: back at 0 V the device is OFF again.
+        assert_eq!(m.state(), DeviceState::Off);
+    }
+
+    #[test]
+    fn pulse_probability_matches_fig2b_sigmoid() {
+        let mut r = rng();
+        let mut m = Memristor::new(DeviceParams::default());
+        for &v_in in &[1.8, 2.24, 2.6] {
+            let n = 20_000;
+            let hits = (0..n).filter(|_| m.pulse(v_in, &mut r).switched).count();
+            let p_hat = hits as f64 / n as f64;
+            let p_theory = 1.0 / (1.0 + (-3.56 * (v_in - 2.24)).exp());
+            assert!(
+                (p_hat - p_theory).abs() < 0.015,
+                "v_in={v_in}: got {p_hat}, want {p_theory}"
+            );
+        }
+    }
+
+    #[test]
+    fn voltage_for_probability_inverts_switch_probability() {
+        let m = Memristor::new(DeviceParams::default());
+        for &p in &[0.05, 0.3, 0.57, 0.72, 0.95] {
+            let v = m.voltage_for_probability(p);
+            assert!((m.switch_probability(v) - p).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn pulse_energy_and_latency_accounting() {
+        let mut r = rng();
+        let mut m = Memristor::new(DeviceParams::default());
+        // Strong pulse: always switches; costs the switching energy.
+        let ev = m.pulse(10.0, &mut r);
+        assert!(ev.switched);
+        assert!((ev.energy_nj - 0.16).abs() < 1e-12);
+        assert!((ev.latency_ns - 4_000.0).abs() < 1e-9);
+        // Weak pulse: never switches; free of switching energy.
+        let ev = m.pulse(0.1, &mut r);
+        assert!(!ev.switched);
+        assert_eq!(ev.energy_nj, 0.0);
+        assert_eq!(ev.analog_out, 0.0);
+    }
+
+    #[test]
+    fn analog_out_distribution_matches_fig2c() {
+        let mut r = rng();
+        let mut m = Memristor::new(DeviceParams::default());
+        // Drive hard so every pulse switches; check P(analog > vref).
+        let n = 20_000;
+        for &vref in &[0.45, 0.57, 0.7] {
+            let hits = (0..n)
+                .map(|_| m.pulse(10.0, &mut r))
+                .filter(|e| e.analog_out > vref)
+                .count();
+            let p_hat = hits as f64 / n as f64;
+            let p_theory = 1.0 - 1.0 / (1.0 + (-11.5 * (vref - 0.57)).exp());
+            assert!(
+                (p_hat - p_theory).abs() < 0.015,
+                "vref={vref}: got {p_hat}, want {p_theory}"
+            );
+        }
+    }
+
+    #[test]
+    fn sampled_devices_have_d2d_spread() {
+        let mut r = rng();
+        let p = DeviceParams::default();
+        let devices: Vec<Memristor> = (0..200).map(|_| Memristor::sampled(p.clone(), &mut r)).collect();
+        let mus: Vec<f64> = devices.iter().map(|d| d.vth_mu()).collect();
+        let mean = mus.iter().sum::<f64>() / mus.len() as f64;
+        let std =
+            (mus.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / mus.len() as f64).sqrt();
+        let cov = std / mean;
+        assert!((cov - 0.08).abs() < 0.025, "d2d CoV {cov}");
+    }
+
+    #[test]
+    fn drift_coupling_injects_autocorrelation() {
+        let mut r = rng();
+        let ideal = DeviceParams::default();
+        let drifty = DeviceParams { drift_coupling: 1.0, ..Default::default() };
+        let lag1 = |params: DeviceParams, r: &mut Rng| {
+            let mut m = Memristor::new(params);
+            let v = m.voltage_for_probability(0.5);
+            let bits: Vec<f64> =
+                (0..8000).map(|_| if m.pulse(v, r).switched { 1.0 } else { 0.0 }).collect();
+            let mean = bits.iter().sum::<f64>() / bits.len() as f64;
+            let num: f64 =
+                bits.windows(2).map(|w| (w[0] - mean) * (w[1] - mean)).sum();
+            let den: f64 = bits.iter().map(|b| (b - mean) * (b - mean)).sum();
+            num / den
+        };
+        let ac_ideal = lag1(ideal, &mut r);
+        let ac_drift = lag1(drifty, &mut r);
+        assert!(ac_ideal.abs() < 0.05, "ideal bits autocorrelated: {ac_ideal}");
+        assert!(ac_drift > ac_ideal + 0.02, "drift did not raise autocorr: {ac_drift}");
+    }
+
+    #[test]
+    fn endurance_counting() {
+        let mut r = rng();
+        let p = DeviceParams { endurance_cycles: 10, ..Default::default() };
+        let mut m = Memristor::new(p);
+        assert!(!m.is_worn());
+        for _ in 0..10 {
+            m.pulse(10.0, &mut r);
+        }
+        assert!(m.is_worn());
+        assert_eq!(m.endurance_left(), 0.0);
+    }
+}

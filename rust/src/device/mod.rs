@@ -1,0 +1,41 @@
+//! Stochastic physics model of the paper's volatile hBN memristors.
+//!
+//! The paper's hardware substrate is a 12×12 crossbar of
+//! Au/Pt/hBN/HfOx/Ag filamentary memristors with **volatile threshold
+//! switching**: the device turns ON when the bias exceeds a stochastic
+//! threshold `V_th` and spontaneously relaxes OFF when the bias falls below
+//! a stochastic hold voltage `V_hold` (self-reset — no reset circuitry).
+//! All computational claims in the paper derive from the switching
+//! *statistics* measured in Fig. 1 / S2 / S4:
+//!
+//! | quantity | paper value | where |
+//! |---|---|---|
+//! | `V_th`  | 2.08 ± 0.28 V (Gaussian) | Fig. 1c |
+//! | `V_hold`| 0.98 ± 0.30 V (Gaussian) | Fig. 1c |
+//! | device-to-device CoV of `V_th` | ~8 % | Fig. 1d |
+//! | switching time | ~50 ns | Fig. S2 |
+//! | relaxation time | ~1,100 ns | Fig. S2 |
+//! | switching energy | ~0.16 nJ | Fig. S2 |
+//! | on/off ratio | ~10⁵ | Fig. 1b |
+//! | endurance | >10⁶ cycles | Fig. 1e |
+//! | cycle-to-cycle `V_th` dynamics | Ornstein-Uhlenbeck | Fig. S4 |
+//!
+//! This module samples those statistics faithfully, so everything built on
+//! top (SNEs, probabilistic logic, Bayesian operators) sees the same
+//! stochastic behaviour the breadboard did.
+
+mod array;
+mod ledger;
+mod memristor;
+mod ou;
+mod params;
+mod transient;
+mod wear;
+
+pub use array::{ArrayStats, MemristorArray, SamplingReport};
+pub use ledger::{EnergyTimeLedger, HardwareClock};
+pub use memristor::{Memristor, SweepCycle, SwitchEvent};
+pub use ou::{OrnsteinUhlenbeck, OuFit};
+pub use params::{DeviceParams, DeviceState};
+pub use transient::{TransientTrace, TransientModel};
+pub use wear::{EnduranceModel, EnduranceSample, WearPolicy};

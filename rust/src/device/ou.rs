@@ -1,0 +1,197 @@
+//! Ornstein-Uhlenbeck process — the paper's model for cycle-to-cycle
+//! threshold-voltage dynamics (Fig. S4).
+//!
+//! `dV = θ(μ − V) dt + σ dW`. Fig. S4 fits the measured per-cycle `V_th`
+//! traces of 10 sampled devices to this process and argues the
+//! mean-reversion proves long-term stability of the switching
+//! stochasticity. We both *simulate* the process (driving each device's
+//! per-cycle threshold) and *fit* it back from traces (the Fig. S4
+//! experiment) with an exact AR(1) maximum-likelihood estimator.
+
+use crate::util::Rng;
+
+/// An Ornstein-Uhlenbeck process sampled at unit (per-cycle) intervals.
+#[derive(Debug, Clone)]
+pub struct OrnsteinUhlenbeck {
+    /// Mean-reversion rate θ (per cycle).
+    pub theta: f64,
+    /// Asymptotic mean μ.
+    pub mu: f64,
+    /// Volatility σ.
+    pub sigma: f64,
+    /// Current value of the process.
+    value: f64,
+}
+
+impl OrnsteinUhlenbeck {
+    /// Create a process started at its stationary mean.
+    pub fn new(theta: f64, mu: f64, sigma: f64) -> Self {
+        Self { theta, mu, sigma, value: mu }
+    }
+
+    /// Build the V_th process for a device with per-device mean `mu`,
+    /// matching the paper's cycle-to-cycle std via the stationary
+    /// distribution (see [`super::DeviceParams::ou_sigma`]).
+    pub fn from_params(params: &super::DeviceParams, mu: f64) -> Self {
+        Self::new(params.ou_theta, mu, params.ou_sigma())
+    }
+
+    /// Stationary standard deviation `σ / sqrt(2θ)`.
+    pub fn stationary_std(&self) -> f64 {
+        self.sigma / (2.0 * self.theta).sqrt()
+    }
+
+    /// Current value.
+    pub fn value(&self) -> f64 {
+        self.value
+    }
+
+    /// Re-initialise at a draw from the stationary distribution.
+    pub fn reset_stationary(&mut self, rng: &mut Rng) {
+        self.value = rng.normal_with(self.mu, self.stationary_std());
+    }
+
+    /// Advance one cycle with the *exact* discretisation of the OU
+    /// transition density (not Euler-Maruyama), so arbitrarily large θ
+    /// stays stable:
+    /// `V' = μ + (V − μ)e^{−θ} + σ sqrt((1 − e^{−2θ})/(2θ)) ξ`.
+    pub fn step(&mut self, rng: &mut Rng) -> f64 {
+        let decay = (-self.theta).exp();
+        let noise_std = self.sigma * ((1.0 - (-2.0 * self.theta).exp()) / (2.0 * self.theta)).sqrt();
+        let xi: f64 = rng.normal();
+        self.value = self.mu + (self.value - self.mu) * decay + noise_std * xi;
+        self.value
+    }
+
+    /// Generate a trace of `n` consecutive cycles.
+    pub fn trace(&mut self, n: usize, rng: &mut Rng) -> Vec<f64> {
+        (0..n).map(|_| self.step(rng)).collect()
+    }
+}
+
+/// Result of fitting an OU process to a measured trace (Fig. S4).
+#[derive(Debug, Clone, Copy)]
+pub struct OuFit {
+    /// Estimated mean-reversion rate θ̂.
+    pub theta: f64,
+    /// Estimated asymptotic mean μ̂.
+    pub mu: f64,
+    /// Estimated volatility σ̂.
+    pub sigma: f64,
+    /// AR(1) lag-one autocorrelation of the trace.
+    pub ar1: f64,
+    /// Number of samples used.
+    pub n: usize,
+}
+
+impl OuFit {
+    /// Exact-discretisation MLE via the AR(1) regression
+    /// `x_{t+1} = a x_t + b + ε`, with `a = e^{−θ}`.
+    ///
+    /// Returns `None` for traces shorter than 3 points or with a
+    /// non-mean-reverting estimate (`a ∉ (0, 1)`).
+    pub fn fit(trace: &[f64]) -> Option<OuFit> {
+        let n = trace.len();
+        if n < 3 {
+            return None;
+        }
+        let x = &trace[..n - 1];
+        let y = &trace[1..];
+        let m = (n - 1) as f64;
+        let sx: f64 = x.iter().sum();
+        let sy: f64 = y.iter().sum();
+        let sxx: f64 = x.iter().map(|v| v * v).sum();
+        let sxy: f64 = x.iter().zip(y).map(|(a, b)| a * b).sum();
+        let denom = m * sxx - sx * sx;
+        if denom.abs() < 1e-12 {
+            return None;
+        }
+        let a = (m * sxy - sx * sy) / denom;
+        let b = (sy - a * sx) / m;
+        if a <= 0.0 || a >= 1.0 {
+            return None;
+        }
+        let theta = -a.ln();
+        let mu = b / (1.0 - a);
+        // Residual variance -> sigma via the exact transition variance.
+        let var_eps: f64 = x
+            .iter()
+            .zip(y)
+            .map(|(xi, yi)| {
+                let r = yi - (a * xi + b);
+                r * r
+            })
+            .sum::<f64>()
+            / m;
+        let sigma = (var_eps * 2.0 * theta / (1.0 - a * a)).sqrt();
+        let ar1 = a;
+        Some(OuFit { theta, mu, sigma, ar1, n })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stationary_std_matches_formula() {
+        let ou = OrnsteinUhlenbeck::new(0.15, 2.08, 0.153);
+        assert!((ou.stationary_std() - 0.153 / (0.3f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fit_recovers_generating_parameters() {
+        let mut rng = Rng::seeded(7);
+        let mut ou = OrnsteinUhlenbeck::new(0.2, 2.08, 0.18);
+        ou.reset_stationary(&mut rng);
+        let trace = ou.trace(20_000, &mut rng);
+        let fit = OuFit::fit(&trace).unwrap();
+        assert!((fit.theta - 0.2).abs() < 0.03, "theta {}", fit.theta);
+        assert!((fit.mu - 2.08).abs() < 0.02, "mu {}", fit.mu);
+        assert!((fit.sigma - 0.18).abs() < 0.02, "sigma {}", fit.sigma);
+    }
+
+    #[test]
+    fn fit_on_paper_length_trace_is_mean_reverting() {
+        // Fig. S4 uses 128-cycle traces; the fit must still find a
+        // mean-reverting process (theta > 0) at that length.
+        let mut rng = Rng::seeded(11);
+        let p = crate::device::DeviceParams::default();
+        let mut ou = OrnsteinUhlenbeck::from_params(&p, p.vth_mean);
+        ou.reset_stationary(&mut rng);
+        let trace = ou.trace(128, &mut rng);
+        let fit = OuFit::fit(&trace).expect("fit");
+        assert!(fit.theta > 0.0);
+        assert!((fit.mu - p.vth_mean).abs() < 0.3);
+    }
+
+    #[test]
+    fn trace_stays_near_mean() {
+        let mut rng = Rng::seeded(3);
+        let mut ou = OrnsteinUhlenbeck::new(0.15, 2.08, 0.153);
+        let trace = ou.trace(5_000, &mut rng);
+        let mean = trace.iter().sum::<f64>() / trace.len() as f64;
+        assert!((mean - 2.08).abs() < 0.05, "mean drifted: {mean}");
+        // No sample should wander absurdly far (5+ stationary sigmas).
+        let sd = ou.stationary_std();
+        assert!(trace.iter().all(|v| (v - 2.08).abs() < 6.0 * sd));
+    }
+
+    #[test]
+    fn fit_rejects_degenerate_traces() {
+        assert!(OuFit::fit(&[1.0, 2.0]).is_none());
+        assert!(OuFit::fit(&[2.0; 50]).is_none()); // zero variance
+        // A pure random walk (a≈1) should be rejected or give tiny theta.
+        let mut rng = Rng::seeded(5);
+        let mut v = 0.0;
+        let walk: Vec<f64> = (0..500)
+            .map(|_| {
+                v += rng.normal();
+                v
+            })
+            .collect();
+        if let Some(fit) = OuFit::fit(&walk) {
+            assert!(fit.theta < 0.1);
+        }
+    }
+}

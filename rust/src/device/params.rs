@@ -1,0 +1,187 @@
+//! Device parameter set — the numbers published in Fig. 1 / S2 of the paper.
+
+
+/// Conduction state of a volatile memristor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceState {
+    /// High-resistance state (filament ruptured).
+    Off,
+    /// Low-resistance state (silver filament formed).
+    On,
+}
+
+/// Physical parameters of one volatile hBN memristor.
+///
+/// Defaults are the paper's measured values (Fig. 1b–d, Fig. S2). All
+/// voltages in volts, times in nanoseconds, energies in nanojoules,
+/// resistances in ohms.
+#[derive(Debug, Clone)]
+pub struct DeviceParams {
+    /// Mean threshold (SET) voltage, V. Paper: 2.08 V.
+    pub vth_mean: f64,
+    /// Cycle-to-cycle std-dev of the threshold voltage, V. Paper: 0.28 V.
+    pub vth_std: f64,
+    /// Mean hold voltage below which the filament ruptures, V. Paper: 0.98 V.
+    pub vhold_mean: f64,
+    /// Cycle-to-cycle std-dev of the hold voltage, V. Paper: 0.30 V.
+    pub vhold_std: f64,
+    /// Device-to-device coefficient of variation of `vth_mean`. Paper: ~8 %.
+    pub d2d_cov: f64,
+    /// Filament formation (switching) time, ns. Paper: ~50 ns.
+    pub switch_time_ns: f64,
+    /// Spontaneous relaxation time after bias removal, ns. Paper: ~1,100 ns.
+    pub relax_time_ns: f64,
+    /// Energy dissipated per switching event, nJ. Paper: ~0.16 nJ.
+    pub switch_energy_nj: f64,
+    /// Low-resistance (ON) state, Ω.
+    pub r_on: f64,
+    /// High-resistance (OFF) state, Ω. `r_off / r_on` is the paper's ~10⁵
+    /// switching ratio.
+    pub r_off: f64,
+    /// Compliance current during sweeps, A. Paper: 100 nA.
+    pub compliance_a: f64,
+    /// Endurance budget in switching cycles. Paper: >10⁶ demonstrated.
+    pub endurance_cycles: u64,
+    /// Mean-reversion rate of the OU process governing cycle-to-cycle
+    /// `V_th` (per cycle). Fitted so traces match Fig. S4.
+    pub ou_theta: f64,
+    /// Centre of the *pulsed* switching probability curve, V.
+    ///
+    /// Under fast (µs) pulses, filament nucleation is kinetically limited,
+    /// so the effective threshold is shifted and broadened relative to the
+    /// quasi-static sweep Gaussian. The paper's Fig. 2b fit is
+    /// `P_unc = σ(3.56·(V_in − 2.24))`, i.e. a logistic threshold with
+    /// centre 2.24 V — which is what we sample here.
+    pub pulse_vth_center: f64,
+    /// Logistic scale of the pulsed threshold, V. Fig. 2b: 1/3.56 ≈ 0.281 V.
+    pub pulse_vth_scale: f64,
+    /// Coupling of the slow OU drift into the pulsed threshold (0 = ideal
+    /// iid Bernoulli bits; >0 injects the real device's cycle-to-cycle
+    /// autocorrelation as a nonideality).
+    pub drift_coupling: f64,
+    /// Centre of the switched-state analog output distribution, V.
+    /// The correlated-SNE comparator chain binarises this node against
+    /// `V_ref`; Fig. 2c fits `P_corr = 1 − σ(11.5·(V_ref − 0.57))`,
+    /// i.e. a logistic analog output centred at 0.57 V.
+    pub analog_out_center: f64,
+    /// Logistic scale of the analog output, V. Fig. 2c: 1/11.5 ≈ 0.087 V.
+    pub analog_out_scale: f64,
+}
+
+impl Default for DeviceParams {
+    fn default() -> Self {
+        // OU stationary std = sigma / sqrt(2*theta) must equal vth_std; we
+        // store theta and derive sigma in `OrnsteinUhlenbeck::from_params`.
+        Self {
+            vth_mean: 2.08,
+            vth_std: 0.28,
+            vhold_mean: 0.98,
+            vhold_std: 0.30,
+            d2d_cov: 0.08,
+            switch_time_ns: 50.0,
+            relax_time_ns: 1_100.0,
+            switch_energy_nj: 0.16,
+            r_on: 1.0e6,
+            r_off: 1.0e11,
+            compliance_a: 100e-9,
+            endurance_cycles: 1_000_000,
+            ou_theta: 0.15,
+            pulse_vth_center: 2.24,
+            pulse_vth_scale: 1.0 / 3.56,
+            drift_coupling: 0.0,
+            analog_out_center: 0.57,
+            analog_out_scale: 1.0 / 11.5,
+        }
+    }
+}
+
+impl DeviceParams {
+    /// The paper's per-bit SC clock: one encode pulse plus relaxation
+    /// head-room, "<4 µs in total per bit" (Fig. S2 discussion). Every
+    /// latency claim (0.4 ms / 100-bit frame, 2,500 fps) derives from this.
+    pub const BIT_PERIOD_NS: f64 = 4_000.0;
+
+    /// Switching (on/off) resistance ratio — paper reports ~10⁵.
+    pub fn switching_ratio(&self) -> f64 {
+        self.r_off / self.r_on
+    }
+
+    /// OU volatility `sigma` such that the stationary distribution matches
+    /// the measured cycle-to-cycle `vth_std`.
+    pub fn ou_sigma(&self) -> f64 {
+        self.vth_std * (2.0 * self.ou_theta).sqrt()
+    }
+
+    /// Hardware latency of an `n_bits`-long stochastic number, in ns.
+    pub fn stream_latency_ns(&self, n_bits: usize) -> f64 {
+        Self::BIT_PERIOD_NS * n_bits as f64
+    }
+
+    /// Equivalent frame rate for one decision of `n_bits`, in fps.
+    pub fn frame_rate(&self, n_bits: usize) -> f64 {
+        1e9 / self.stream_latency_ns(n_bits)
+    }
+
+    /// Validate physical consistency.
+    pub fn validate(&self) -> crate::Result<()> {
+        if self.vth_mean <= self.vhold_mean {
+            return Err(crate::Error::Config(format!(
+                "vth_mean ({}) must exceed vhold_mean ({})",
+                self.vth_mean, self.vhold_mean
+            )));
+        }
+        for (name, v) in [
+            ("vth_std", self.vth_std),
+            ("vhold_std", self.vhold_std),
+            ("switch_time_ns", self.switch_time_ns),
+            ("relax_time_ns", self.relax_time_ns),
+            ("switch_energy_nj", self.switch_energy_nj),
+            ("ou_theta", self.ou_theta),
+        ] {
+            if v <= 0.0 || !v.is_finite() {
+                return Err(crate::Error::Config(format!("{name} must be positive, got {v}")));
+            }
+        }
+        if self.r_off <= self.r_on {
+            return Err(crate::Error::Config("r_off must exceed r_on".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let p = DeviceParams::default();
+        assert!((p.vth_mean - 2.08).abs() < 1e-9);
+        assert!((p.vhold_mean - 0.98).abs() < 1e-9);
+        assert!((p.switching_ratio() - 1e5).abs() / 1e5 < 1e-9);
+        p.validate().unwrap();
+    }
+
+    #[test]
+    fn paper_latency_claims_hold() {
+        let p = DeviceParams::default();
+        // 100-bit stochastic numbers => 0.4 ms per decision, 2,500 fps.
+        assert!((p.stream_latency_ns(100) - 400_000.0).abs() < 1e-6);
+        assert!((p.frame_rate(100) - 2_500.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ou_sigma_gives_stationary_std() {
+        let p = DeviceParams::default();
+        let stationary = p.ou_sigma() / (2.0 * p.ou_theta).sqrt();
+        assert!((stationary - p.vth_std).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validation_rejects_inverted_thresholds() {
+        let p = DeviceParams { vth_mean: 0.5, ..Default::default() };
+        assert!(p.validate().is_err());
+        let p = DeviceParams { r_off: 1.0, r_on: 2.0, ..Default::default() };
+        assert!(p.validate().is_err());
+    }
+}

@@ -1,0 +1,139 @@
+//! Endurance model (Fig. 1e): 10⁶-cycle pulsed cycling with stable
+//! HRS/LRS, plus a wear policy for long-running deployments.
+
+use crate::util::Rng;
+
+use super::DeviceParams;
+
+/// One endurance-test sample: the resistance states read after a
+/// program/read pulse pair.
+#[derive(Debug, Clone, Copy)]
+pub struct EnduranceSample {
+    /// Cycle index.
+    pub cycle: u64,
+    /// High-resistance state readout, Ω.
+    pub hrs: f64,
+    /// Low-resistance state readout, Ω.
+    pub lrs: f64,
+}
+
+/// What the coordinator should do with devices that exceed their budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WearPolicy {
+    /// Keep using the device (paper's devices stay stable at 10⁶).
+    Ignore,
+    /// Rotate the device out of the SNE bank and map in a spare.
+    Rotate,
+    /// Fail the request with [`crate::Error::DeviceWorn`].
+    Fail,
+}
+
+impl Default for WearPolicy {
+    fn default() -> Self {
+        WearPolicy::Rotate
+    }
+}
+
+/// Endurance simulator for the Fig. 1e experiment.
+///
+/// The paper programs with 20 µs / 10 V pulses and reads with 80 µs /
+/// 0.1 V pulses for 10⁶ cycles; both states stay stable. We model the
+/// readouts as log-normal around the nominal HRS/LRS with mild cycle-to-
+/// cycle read noise and *no* drift inside the endurance budget; past the
+/// budget an optional drift term narrows the window (so failure-injection
+/// tests have something to detect).
+#[derive(Debug, Clone)]
+pub struct EnduranceModel {
+    params: DeviceParams,
+    /// Multiplicative read-noise sigma (log-domain).
+    pub read_noise: f64,
+    /// Post-budget fractional LRS drift per decade of cycles.
+    pub post_budget_drift: f64,
+}
+
+impl EnduranceModel {
+    /// Paper-calibrated endurance model.
+    pub fn new(params: DeviceParams) -> Self {
+        Self { params, read_noise: 0.05, post_budget_drift: 0.3 }
+    }
+
+    /// Read the two states at `cycle`.
+    pub fn sample(&self, cycle: u64, rng: &mut Rng) -> EnduranceSample {
+        let p = &self.params;
+        let mut lrs = p.r_on * rng.log_normal(0.0, self.read_noise);
+        let mut hrs = p.r_off * rng.log_normal(0.0, self.read_noise);
+        if cycle > p.endurance_cycles {
+            // Window closes slowly after the demonstrated budget.
+            let decades = ((cycle as f64) / (p.endurance_cycles as f64)).log10();
+            let closure = 1.0 + self.post_budget_drift * decades;
+            lrs *= closure;
+            hrs /= closure;
+            // And reads get noisier.
+            let extra = rng.normal_with(1.0, 0.1 * decades).max(0.1);
+            lrs *= extra;
+        }
+        EnduranceSample { cycle, hrs, lrs }
+    }
+
+    /// Run the full Fig. 1e sweep: `n_cycles` cycles, sampling
+    /// `n_points` log-spaced readouts.
+    pub fn run(
+        &self,
+        n_cycles: u64,
+        n_points: usize,
+        rng: &mut Rng,
+    ) -> Vec<EnduranceSample> {
+        let n_points = n_points.max(2);
+        (0..n_points)
+            .map(|k| {
+                // Log-spaced cycle indices from 1 to n_cycles.
+                let frac = k as f64 / (n_points - 1) as f64;
+                let cycle = (10f64.powf(frac * (n_cycles as f64).log10())).round() as u64;
+                self.sample(cycle.max(1), rng)
+            })
+            .collect()
+    }
+
+    /// Does the trace keep a healthy switching window (ratio above
+    /// `min_ratio`) across all samples? The paper's Fig. 1e claim.
+    pub fn window_stable(samples: &[EnduranceSample], min_ratio: f64) -> bool {
+        samples.iter().all(|s| s.hrs / s.lrs >= min_ratio)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endurance_window_stays_open_through_1e6() {
+        let mut rng = Rng::seeded(17);
+        let model = EnduranceModel::new(DeviceParams::default());
+        let trace = model.run(1_000_000, 64, &mut rng);
+        assert_eq!(trace.len(), 64);
+        assert_eq!(trace.last().unwrap().cycle, 1_000_000);
+        // Paper shows ~1e5 ratio throughout; allow read-noise slack.
+        assert!(EnduranceModel::window_stable(&trace, 1e4));
+    }
+
+    #[test]
+    fn post_budget_drift_closes_window() {
+        let mut rng = Rng::seeded(18);
+        let model = EnduranceModel::new(DeviceParams::default());
+        let fresh = model.sample(1_000, &mut rng);
+        let worn = model.sample(1_000_000_000, &mut rng); // 3 decades past
+        assert!(worn.hrs / worn.lrs < fresh.hrs / fresh.lrs);
+    }
+
+    #[test]
+    fn log_spaced_cycle_grid() {
+        let mut rng = Rng::seeded(19);
+        let model = EnduranceModel::new(DeviceParams::default());
+        let trace = model.run(1_000_000, 7, &mut rng);
+        let cycles: Vec<u64> = trace.iter().map(|s| s.cycle).collect();
+        assert_eq!(cycles[0], 1);
+        // Monotone non-decreasing, roughly decade-spaced.
+        assert!(cycles.windows(2).all(|w| w[1] >= w[0]));
+        assert_eq!(*cycles.last().unwrap(), 1_000_000);
+    }
+}

@@ -1,0 +1,87 @@
+//! Unified error type for the crate.
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Errors surfaced by the bayes-mem stack.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// A probability argument fell outside `[0, 1]`.
+    #[error("probability out of range: {name} = {value}")]
+    ProbabilityRange { name: &'static str, value: f64 },
+
+    /// Bitstream length mismatch between operands of a bitwise op.
+    #[error("bitstream length mismatch: {lhs} vs {rhs}")]
+    LengthMismatch { lhs: usize, rhs: usize },
+
+    /// Configuration failed validation.
+    #[error("invalid config: {0}")]
+    Config(String),
+
+    /// A memristor device exceeded its endurance budget.
+    #[error("device {row},{col} worn out after {cycles} cycles")]
+    DeviceWorn { row: usize, col: usize, cycles: u64 },
+
+    /// Artifact (AOT HLO) discovery / loading failure.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT runtime failure (compile or execute).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Coordinator rejected or dropped a request.
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+
+    /// Deadline exceeded while waiting for a decision.
+    #[error("deadline exceeded after {0:?}")]
+    Deadline(std::time::Duration),
+
+    /// Underlying I/O error.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    /// TOML parse error.
+    #[error("toml parse error: {0}")]
+    Toml(String),
+}
+
+impl Error {
+    /// Helper: validate a probability is in `[0, 1]`.
+    pub fn check_prob(name: &'static str, value: f64) -> Result<f64> {
+        if (0.0..=1.0).contains(&value) && value.is_finite() {
+            Ok(value)
+        } else {
+            Err(Error::ProbabilityRange { name, value })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_prob_accepts_bounds() {
+        assert!(Error::check_prob("p", 0.0).is_ok());
+        assert!(Error::check_prob("p", 1.0).is_ok());
+        assert!(Error::check_prob("p", 0.5).is_ok());
+    }
+
+    #[test]
+    fn check_prob_rejects_out_of_range() {
+        assert!(Error::check_prob("p", -0.01).is_err());
+        assert!(Error::check_prob("p", 1.01).is_err());
+        assert!(Error::check_prob("p", f64::NAN).is_err());
+        assert!(Error::check_prob("p", f64::INFINITY).is_err());
+    }
+
+    #[test]
+    fn error_display_is_informative() {
+        let e = Error::ProbabilityRange { name: "pa", value: 1.5 };
+        assert!(e.to_string().contains("pa"));
+        let e = Error::DeviceWorn { row: 3, col: 4, cycles: 1_000_000 };
+        assert!(e.to_string().contains("worn"));
+    }
+}

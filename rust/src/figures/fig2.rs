@@ -1,0 +1,186 @@
+//! Fig. 2 / S6 / Table S1 — SNE calibration curves and probabilistic
+//! logic.
+
+use crate::device::EnergyTimeLedger;
+use crate::logic::{BooleanOp, CorrelationMode, MuxAdder, ProbGate};
+use crate::stochastic::{Sne, SneBank, SneConfig};
+use crate::util::stats::fit_sigmoid;
+use crate::util::Rng;
+use crate::Result;
+
+use super::row;
+
+fn bank(seed: u64, n_bits: usize) -> Result<SneBank> {
+    SneBank::new(SneConfig { n_bits, ..Default::default() }, seed)
+}
+
+/// Fig. 2b: P_uncorrelated vs V_in; fit `σ(3.56·(V_in − 2.24))`.
+pub fn fig2b(seed: u64) -> Result<String> {
+    let mut rng = Rng::seeded(seed);
+    let mut ledger = EnergyTimeLedger::new();
+    let sne = Sne::new(crate::device::Memristor::new(Default::default()));
+    let n_bits = 4_000;
+    let mut points = Vec::new();
+    for i in 0..25 {
+        let v_in = 1.2 + 2.0 * i as f64 / 24.0;
+        // Drive the device directly at v_in and count switches.
+        let device = sne.device().clone();
+        let p_theory = device.switch_probability(v_in);
+        let _ = p_theory;
+        let mut hits = 0usize;
+        let mut dev = device;
+        for _ in 0..n_bits {
+            if dev.pulse(v_in, &mut rng).switched {
+                hits += 1;
+            }
+        }
+        ledger.record_decision(n_bits);
+        points.push((v_in, hits as f64 / n_bits as f64));
+    }
+    let (k, x0) = fit_sigmoid(&points).unwrap_or((0.0, 0.0));
+    let mut out = String::from("Fig. 2b — uncorrelated SNE calibration (V_in sweep)\n");
+    out.push_str(&row("sigmoid slope k", "3.56", &format!("{k:.2}")));
+    out.push_str(&row("sigmoid centre x0 (V)", "2.24", &format!("{x0:.3}")));
+    out.push_str("  (V_in, P) samples:");
+    for (v, p) in points.iter().step_by(5) {
+        out.push_str(&format!(" ({v:.2}, {p:.2})"));
+    }
+    out.push('\n');
+    Ok(out)
+}
+
+/// Fig. 2c: P_correlated vs V_ref; fit `1 − σ(11.5·(V_ref − 0.57))`.
+pub fn fig2c(seed: u64) -> Result<String> {
+    let mut rng = Rng::seeded(seed);
+    let mut dev = crate::device::Memristor::new(Default::default());
+    let n_bits = 4_000;
+    let v_drive = dev.voltage_for_probability(1.0 - 1e-9);
+    let mut points = Vec::new();
+    for i in 0..25 {
+        let v_ref = 0.30 + 0.55 * i as f64 / 24.0;
+        let mut hits = 0usize;
+        for _ in 0..n_bits {
+            let ev = dev.pulse(v_drive, &mut rng);
+            if ev.switched && ev.analog_out > v_ref {
+                hits += 1;
+            }
+        }
+        points.push((v_ref, hits as f64 / n_bits as f64));
+    }
+    // The curve is a *descending* sigmoid: fit on 1-P and negate.
+    let flipped: Vec<(f64, f64)> = points.iter().map(|&(v, p)| (v, 1.0 - p)).collect();
+    let (k, x0) = fit_sigmoid(&flipped).unwrap_or((0.0, 0.0));
+    let mut out = String::from("Fig. 2c — correlated SNE calibration (V_ref sweep)\n");
+    out.push_str(&row("sigmoid slope k", "11.5", &format!("{k:.1}")));
+    out.push_str(&row("sigmoid centre x0 (V)", "0.57", &format!("{x0:.3}")));
+    out.push_str("  (V_ref, P) samples:");
+    for (v, p) in points.iter().step_by(5) {
+        out.push_str(&format!(" ({v:.2}, {p:.2})"));
+    }
+    out.push('\n');
+    Ok(out)
+}
+
+/// Fig. 2e: probabilistic AND and MUX in both correlation regimes.
+pub fn fig2e(seed: u64) -> Result<String> {
+    let mut b = bank(seed, 10_000)?;
+    let mut out = String::from("Fig. 2e — probabilistic logic hardware test (P(a)=0.5, P(b)=0.5)\n");
+    let (pa, pb) = (0.5, 0.5);
+    let gate = ProbGate::new(BooleanOp::And, CorrelationMode::Uncorrelated);
+    let (_, m, p) = gate.evaluate(&mut b, pa, pb)?;
+    out.push_str(&row("AND uncorrelated P(c)=P(a)P(b)", &format!("{p:.2}"), &format!("{m:.3}")));
+    let gate = ProbGate::new(BooleanOp::And, CorrelationMode::Positive);
+    let (_, m, p) = gate.evaluate(&mut b, 0.3, 0.7)?;
+    out.push_str(&row("AND correlated P(c)=min(0.3,0.7)", &format!("{p:.2}"), &format!("{m:.3}")));
+    let adder = MuxAdder::new(0.5)?;
+    let (_, m, p) = adder.evaluate(&mut b, 0.2, 0.8)?;
+    out.push_str(&row("MUX ½·0.2 + ½·0.8", &format!("{p:.2}"), &format!("{m:.3}")));
+    let ledger = b.ledger();
+    out.push_str(&format!(
+        "  hardware cost: {} pulses, {:.1} nJ, {:.2} ms virtual time\n",
+        ledger.pulses, ledger.energy_nj, ledger.clock.elapsed_ms()
+    ));
+    Ok(out)
+}
+
+/// Table S1: all gates × correlation regimes over a probability grid.
+pub fn tables1(seed: u64) -> Result<String> {
+    let mut b = bank(seed, 20_000)?;
+    let mut out = String::from("Table S1 — probabilistic logic algebra (max |measured − theory|)\n");
+    let grid = [(0.2, 0.4), (0.3, 0.7), (0.5, 0.5), (0.8, 0.6), (0.9, 0.9)];
+    for op in [BooleanOp::And, BooleanOp::Or, BooleanOp::Xor] {
+        for mode in
+            [CorrelationMode::Uncorrelated, CorrelationMode::Positive, CorrelationMode::Negative]
+        {
+            let gate = ProbGate::new(op, mode);
+            let mut worst: f64 = 0.0;
+            for &(pa, pb) in &grid {
+                let (_, measured, predicted) = gate.evaluate(&mut b, pa, pb)?;
+                worst = worst.max((measured - predicted).abs());
+            }
+            out.push_str(&row(
+                &format!("{op:?} / {mode:?}"),
+                "matches Table S1",
+                &format!("max err {worst:.3}"),
+            ));
+        }
+    }
+    // MUX row (uncorrelated select only, per the table's footnote).
+    let adder = MuxAdder::new(0.25)?;
+    let mut worst: f64 = 0.0;
+    for &(pa, pb) in &grid {
+        let (_, m, p) = adder.evaluate(&mut b, pa, pb)?;
+        worst = worst.max((m - p).abs());
+    }
+    out.push_str(&row("MUX / uncorrelated select", "matches Table S1", &format!("max err {worst:.3}")));
+    Ok(out)
+}
+
+/// Fig. S6: correlated select corrupts the MUX weighted addition.
+pub fn figs6(seed: u64) -> Result<String> {
+    let mut b = bank(seed, 20_000)?;
+    let adder = MuxAdder::new(0.5)?;
+    let (_, proper_m, proper_p) = adder.evaluate(&mut b, 0.1, 0.9)?;
+    let (corrupt_m, corrupt_p) = adder.evaluate_corrupted(&mut b, 0.1, 0.9)?;
+    let mut out = String::from("Fig. S6 — MUX select correlation counterexample\n");
+    out.push_str(&row("uncorrelated select (weighted add)", &format!("{proper_p:.2}"),
+        &format!("{proper_m:.3}")));
+    out.push_str(&row("correlated select (corrupted)",
+        &format!("≠ {corrupt_p:.2}"), &format!("{corrupt_m:.3}")));
+    out.push_str(&format!(
+        "  corruption magnitude: {:.3} (must be >> sampling noise)\n",
+        (corrupt_m - corrupt_p).abs()
+    ));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2b_recovers_paper_constants() {
+        let out = fig2b(11).unwrap();
+        // Extract k from the report and check the paper band.
+        let k_line = out.lines().find(|l| l.contains("slope")).unwrap();
+        let k: f64 = k_line.split_whitespace().last().unwrap().parse().unwrap();
+        assert!((k - 3.56).abs() < 0.4, "{out}");
+    }
+
+    #[test]
+    fn fig2c_recovers_paper_constants() {
+        let out = fig2c(12).unwrap();
+        let k_line = out.lines().find(|l| l.contains("slope")).unwrap();
+        let k: f64 = k_line.split_whitespace().last().unwrap().parse().unwrap();
+        assert!((k - 11.5).abs() < 1.5, "{out}");
+    }
+
+    #[test]
+    fn tables1_errors_are_small() {
+        let out = tables1(13).unwrap();
+        for line in out.lines().filter(|l| l.contains("max err")) {
+            let err: f64 = line.split_whitespace().last().unwrap().parse().unwrap();
+            assert!(err < 0.03, "{line}");
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! Fig. 3 / S8 — Bayesian inference operator experiments.
+
+use crate::bayes::{InferenceConfig, InferenceOperator, OneParentTwoChild, TwoParentOneChild};
+use crate::stochastic::{SneBank, SneConfig};
+use crate::util::stats::mean;
+use crate::Result;
+
+use super::row;
+
+/// Fig. 3b: the route-planning decision, at the paper's 100-bit precision
+/// (single-shot) and averaged across repeats (statistical check).
+pub fn fig3b(seed: u64) -> Result<String> {
+    let op = InferenceOperator::new(InferenceConfig::default());
+    // Single 100-bit hardware shot, like the paper's breadboard run.
+    let mut bank100 = SneBank::new(SneConfig { n_bits: 100, ..Default::default() }, seed)?;
+    let single = op.fig3b(&mut bank100);
+    // 200 repeats for the sampling distribution.
+    let posteriors: Vec<f64> = (0..200).map(|_| op.fig3b(&mut bank100).posterior).collect();
+    let mut out = String::from("Fig. 3b — route planning (P(A)=57 %, P(B)=72 %)\n");
+    out.push_str(&row("marginal P(B)", "72 %", &format!("{:.1} % (exact {:.1} %)",
+        single.marginal * 100.0, single.exact_marginal * 100.0)));
+    out.push_str(&row("posterior P(A|B), theory", "~61 %", &format!("{:.1} %", single.exact * 100.0)));
+    out.push_str(&row("posterior, single 100-bit shot", "63 %", &format!("{:.1} %", single.posterior * 100.0)));
+    out.push_str(&row("posterior, mean of 200 shots", "→ theory", &format!("{:.1} %", mean(&posteriors) * 100.0)));
+    out.push_str(&row("decision (P(A|B) > P(A))", "cut in", if mean(&posteriors) > 0.57 { "cut in" } else { "hold lane" }));
+    let ledger = bank100.ledger();
+    out.push_str(&format!(
+        "  hardware: {:.2} ms / decision ({:.0} fps), {:.2} nJ / decision\n",
+        0.4,
+        2_500.0,
+        ledger.energy_per_decision_nj()
+    ));
+    Ok(out)
+}
+
+/// Fig. 3c/d: pairwise Pearson + SCC matrices at the operator's nodes.
+pub fn fig3cd(seed: u64) -> Result<String> {
+    let op = InferenceOperator::new(InferenceConfig { keep_streams: true });
+    let mut bank = SneBank::new(SneConfig { n_bits: 20_000, ..Default::default() }, seed)?;
+    let r = op.fig3b(&mut bank);
+    let rep = r.correlation_report().expect("streams kept");
+    let idx = |n: &str| rep.names.iter().position(|x| x == n).unwrap();
+    let mut out = String::from("Fig. 3c/d — node correlations in the inference operator\n");
+    out.push_str(&row("SCC(P(A), P(B|A)) [inputs]", "≈0", &format!("{:.3}", rep.scc[idx("P(A)")][idx("P(B|A)")])));
+    out.push_str(&row("SCC(num, den) [CORDIV precondition]", "≈+1", &format!("{:.3}", rep.scc[idx("num")][idx("den")])));
+    out.push_str(&row("Pearson(P(B|A), P(B|¬A))", "≈0", &format!("{:.3}", rep.pearson[idx("P(B|A)")][idx("P(B|¬A)")])));
+    out.push('\n');
+    out.push_str(&rep.to_table());
+    Ok(out)
+}
+
+/// Fig. S8: the three dependency topologies vs closed-form Bayes.
+pub fn figs8(seed: u64) -> Result<String> {
+    let mut bank = SneBank::new(SneConfig { n_bits: 20_000, ..Default::default() }, seed)?;
+    let mut out = String::from("Fig. S8 — inference topologies (20k-bit streams)\n");
+
+    // (a) one-parent-one-child: the Fig. 3 operator.
+    let op = InferenceOperator::default();
+    let r = op.infer_with_likelihoods(&mut bank, 0.57, 0.77, 0.655);
+    out.push_str(&row("A→B posterior", &format!("exact {:.3}", r.exact), &format!("{:.3}", r.posterior)));
+
+    // (b) two-parent-one-child via 4×1 MUX.
+    let net2 = TwoParentOneChild { p_a1: 0.6, p_a2: 0.4, p_b_given: [[0.1, 0.5], [0.6, 0.9]] };
+    let r2 = net2.evaluate(&mut bank)?;
+    out.push_str(&row("A1→B←A2 posterior P(A1|B)", &format!("exact {:.3}", r2.exact), &format!("{:.3}", r2.posterior)));
+
+    // (c) one-parent-two-child via two shared-select MUXes.
+    let net3 = OneParentTwoChild { p_a: 0.57, p_b1: (0.8, 0.3), p_b2: (0.7, 0.4) };
+    let r3 = net3.evaluate(&mut bank)?;
+    out.push_str(&row("B1←A→B2 posterior P(A|B1,B2)", &format!("exact {:.3}", r3.exact), &format!("{:.3}", r3.posterior)));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3b_matches_paper_numbers() {
+        let out = fig3b(42).unwrap();
+        assert!(out.contains("cut in"), "{out}");
+        // Mean-of-shots line must be close to 60.9 %.
+        let line = out.lines().find(|l| l.contains("mean of 200")).unwrap();
+        let pct: f64 = line
+            .split_whitespace()
+            .filter_map(|t| t.trim_matches(['%', '(', ')', '+']).parse().ok())
+            .next_back()
+            .unwrap();
+        assert!((pct - 60.9).abs() < 2.0, "{out}");
+    }
+
+    #[test]
+    fn figs8_all_topologies_accurate() {
+        let out = figs8(43).unwrap();
+        // Every row: |measured - exact| < 0.05 at 20k bits.
+        for line in out.lines().filter(|l| l.contains("exact")) {
+            let nums: Vec<f64> = line
+                .split_whitespace()
+                .filter_map(|t| t.parse().ok())
+                .collect();
+            let exact = nums[nums.len() - 2];
+            let measured = nums[nums.len() - 1];
+            assert!((exact - measured).abs() < 0.05, "{line}");
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! Figure/table reproduction harnesses — one per paper artefact
+//! (DESIGN.md §4 experiment index). Each harness runs the relevant
+//! workload and renders a text report with the paper's value next to the
+//! measured one, so `bayes-mem fig --all` regenerates the entire
+//! evaluation section.
+
+mod ablation;
+mod fig1;
+mod fig2;
+mod fig3;
+mod fig4;
+
+use crate::Result;
+
+/// A reproducible figure/table experiment.
+pub struct Figure {
+    /// Identifier used by `bayes-mem fig --id <id>`.
+    pub id: &'static str,
+    /// What the paper artefact shows.
+    pub title: &'static str,
+    /// Run the experiment and render the report.
+    pub run: fn(seed: u64) -> Result<String>,
+}
+
+/// The full registry, in paper order.
+pub fn registry() -> Vec<Figure> {
+    vec![
+        Figure { id: "fig1b", title: "128-cycle I-V switching, ~1e5 ratio", run: fig1::fig1b },
+        Figure {
+            id: "fig1cd",
+            title: "V_th/V_hold Gaussians + device-to-device CoV",
+            run: fig1::fig1cd,
+        },
+        Figure { id: "fig1e", title: "10^6-cycle pulsed endurance", run: fig1::fig1e },
+        Figure { id: "figs2", title: "transient switching time/energy", run: fig1::figs2 },
+        Figure { id: "figs4", title: "Ornstein-Uhlenbeck fit of V_th traces", run: fig1::figs4 },
+        Figure { id: "fig2b", title: "P_uncorrelated vs V_in sigmoid", run: fig2::fig2b },
+        Figure { id: "fig2c", title: "P_correlated vs V_ref sigmoid", run: fig2::fig2c },
+        Figure { id: "fig2e", title: "probabilistic AND / MUX hardware test", run: fig2::fig2e },
+        Figure { id: "tables1", title: "Table S1 gate algebra × correlations", run: fig2::tables1 },
+        Figure { id: "fig3b", title: "route-planning Bayesian inference", run: fig3::fig3b },
+        Figure { id: "fig3cd", title: "inference node correlation matrices", run: fig3::fig3cd },
+        Figure { id: "figs6", title: "MUX select-correlation counterexample", run: fig2::figs6 },
+        Figure { id: "figs8", title: "inference topologies (1p1c/2p1c/1p2c)", run: fig3::figs8 },
+        Figure { id: "fig4b", title: "RGB+thermal fusion across visibility", run: fig4::fig4b },
+        Figure { id: "figs10", title: "fusion + normalization module", run: fig4::figs10 },
+        Figure { id: "movies1", title: "large-scale video fusion (Movie S1)", run: fig4::movies1 },
+        Figure {
+            id: "latency",
+            title: "decision latency vs human / ADAS (§II)",
+            run: ablation::latency_table,
+        },
+        Figure {
+            id: "ablation_bits",
+            title: "bit-length precision/cost trade-off",
+            run: ablation::bits,
+        },
+        Figure {
+            id: "ablation_lfsr",
+            title: "LFSR-encoder baseline (improper correlation)",
+            run: ablation::lfsr,
+        },
+        Figure {
+            id: "ablation_drift",
+            title: "OU drift-coupling nonideality sweep",
+            run: ablation::drift,
+        },
+    ]
+}
+
+/// Run one figure by id.
+pub fn run(id: &str, seed: u64) -> Result<String> {
+    let reg = registry();
+    let fig = reg
+        .iter()
+        .find(|f| f.id == id)
+        .ok_or_else(|| crate::Error::Config(format!("unknown figure id {id:?}")))?;
+    (fig.run)(seed)
+}
+
+/// Render a two-column paper-vs-measured table row.
+pub(crate) fn row(label: &str, paper: &str, measured: &str) -> String {
+    format!("  {label:<42} paper: {paper:<18} measured: {measured}\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_are_unique_and_nonempty() {
+        let reg = registry();
+        assert!(reg.len() >= 19, "registry shrank: {}", reg.len());
+        let mut ids: Vec<&str> = reg.iter().map(|f| f.id).collect();
+        ids.sort_unstable();
+        let n = ids.len();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "duplicate figure ids");
+    }
+
+    #[test]
+    fn unknown_id_is_an_error() {
+        assert!(run("nope", 1).is_err());
+    }
+
+    #[test]
+    fn every_figure_runs_and_reports() {
+        // Smoke-run the full registry; every harness must succeed and
+        // include a measured column.
+        for fig in registry() {
+            let report = (fig.run)(7).unwrap_or_else(|e| panic!("{} failed: {e}", fig.id));
+            assert!(
+                report.contains("measured"),
+                "{} report lacks measured column:\n{report}",
+                fig.id
+            );
+        }
+    }
+}

@@ -1,0 +1,56 @@
+//! # bayes-mem
+//!
+//! Full-system reproduction of *"Hardware implementation of timely reliable
+//! Bayesian decision-making using memristors"* (Song et al., Advanced
+//! Electronic Materials 2024).
+//!
+//! The paper builds Bayesian inference and fusion operators out of
+//! *stochastic computing* (SC) primitives whose randomness comes from the
+//! volatile threshold switching of solution-processed hBN memristors. This
+//! crate reproduces the entire stack in software:
+//!
+//! * [`device`] — stochastic physics model of the volatile memristors
+//!   (Ornstein-Uhlenbeck threshold dynamics, transient switching, wear,
+//!   energy/time ledger).
+//! * [`stochastic`] — stochastic number encoders (SNEs), packed bitstreams,
+//!   correlation metrics, and an LFSR baseline encoder.
+//! * [`logic`] — probabilistic Boolean gates (AND/OR/XOR/MUX) in all
+//!   correlation regimes of Table S1, plus the CORDIV divider.
+//! * [`bayes`] — the paper's headline contribution: lightweight Bayesian
+//!   inference (Eq. 1, Fig. 3) and fusion (Eqs. 2–5, Fig. 4) operators.
+//! * [`scene`] — synthetic road-scene workloads standing in for the FLIR
+//!   RGB-thermal dataset and YOLO-class detectors.
+//! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas
+//!   artifacts (HLO text) and executes them from the Rust hot path.
+//! * [`coordinator`] — the serving layer: frame router, dynamic batcher,
+//!   operator pool, SNE bank manager, metrics.
+//! * [`figures`] — one harness per paper figure/table (the experiment
+//!   index of `DESIGN.md` §4).
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use bayes_mem::bayes::{InferenceOperator, InferenceConfig};
+//! use bayes_mem::stochastic::SneBank;
+//!
+//! // The Fig. 3b experiment: P(A)=0.57, P(B)=0.72.
+//! let mut bank = SneBank::seeded(42);
+//! let op = InferenceOperator::new(InferenceConfig::default());
+//! let post = op.infer_with_likelihoods(&mut bank, 0.57, 0.9, 0.3);
+//! assert!(post.posterior > 0.0 && post.posterior < 1.0);
+//! ```
+
+pub mod bayes;
+pub mod benchkit;
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod error;
+pub mod figures;
+pub mod logic;
+pub mod runtime;
+pub mod scene;
+pub mod stochastic;
+pub mod util;
+
+pub use error::{Error, Result};

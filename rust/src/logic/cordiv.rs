@@ -1,0 +1,181 @@
+//! CORDIV — the correlated stochastic divider of Chen & Hayes (ISVLSI'16),
+//! used by both Bayesian operators for the final division (Figs. S7, S9).
+//!
+//! Hardware: a 2×1 MUX whose select is the divisor stream plus a
+//! D-flip-flop holding the last quotient bit:
+//!
+//! ```text
+//! q_k = b_k ? a_k : DFF        (DFF ← a_k whenever b_k = 1)
+//! ```
+//!
+//! When the dividend stream `a` is a bitwise **subset** of the divisor
+//! stream `b` (maximal positive correlation, which the operators guarantee
+//! by construction — see [`crate::bayes`]), `P(q) → P(a)/P(b)`.
+
+use crate::stochastic::Bitstream;
+use crate::{Error, Result};
+
+/// Stateful CORDIV divider (the D-flip-flop is the state).
+#[derive(Debug, Clone, Default)]
+pub struct Cordiv {
+    dff: bool,
+}
+
+impl Cordiv {
+    /// Divider with the DFF cleared.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current flip-flop contents.
+    pub fn state(&self) -> bool {
+        self.dff
+    }
+
+    /// Divide `a` by `b`, streaming bit-serially through the MUX + DFF.
+    ///
+    /// Returns the quotient stream; `P(quotient) ≈ P(a)/P(b)` when
+    /// `a ⊆ b` bitwise. Degenerate all-zero divisors yield the DFF's
+    /// held value repeated (hardware would do the same).
+    pub fn divide(&mut self, a: &Bitstream, b: &Bitstream) -> Result<Bitstream> {
+        if a.len() != b.len() {
+            return Err(Error::LengthMismatch { lhs: a.len(), rhs: b.len() });
+        }
+        let mut q = Bitstream::zeros(a.len());
+        // Observe that q_k equals the DFF *after* slot k: the quotient is
+        // the "last defined value" fill of (a at the positions where b=1),
+        // seeded by the carried DFF. That fill is bit-parallel per word
+        // via Hillis-Steele doubling (6 rounds instead of a 64-step
+        // serial loop — §Perf L3-1): after round r every lane knows the
+        // value of the nearest divisor slot within 2^r below it.
+        for (wi, (&wa, &wb)) in a.words().iter().zip(b.words()).enumerate() {
+            let mut val = wa & wb; // marker values
+            let mut def = wb; // defined lanes
+            let mut s = 1u32;
+            while s < 64 {
+                val |= (val << s) & !def;
+                def |= def << s;
+                s <<= 1;
+            }
+            // Lanes before the first marker hold the carried DFF.
+            let carry = if self.dff { !def } else { 0 };
+            let wq = val | carry;
+            self.dff = (wq >> 63) & 1 == 1;
+            q.words_mut()[wi] = wq;
+        }
+        q.mask_tail();
+        Ok(q)
+    }
+}
+
+/// One-shot division with a fresh divider.
+pub fn cordiv(a: &Bitstream, b: &Bitstream) -> Result<Bitstream> {
+    Cordiv::new().divide(a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Build correlated (nested) streams with P(a)=pa ⊆ P(b)=pb via shared
+    /// uniforms — the quantile construction the SNEs implement physically.
+    fn nested(pa: f64, pb: f64, n: usize, seed: u64) -> (Bitstream, Bitstream) {
+        let mut rng = Rng::seeded(seed);
+        let mut a = Bitstream::zeros(n);
+        let mut b = Bitstream::zeros(n);
+        for i in 0..n {
+            let u: f64 = rng.f64();
+            if u < pa {
+                a.set(i, true);
+            }
+            if u < pb {
+                b.set(i, true);
+            }
+        }
+        (a, b)
+    }
+
+    #[test]
+    fn divides_nested_streams() {
+        for &(pa, pb) in &[(0.2, 0.5), (0.41, 0.72), (0.3, 0.9), (0.1, 0.2)] {
+            let (a, b) = nested(pa, pb, 50_000, 42);
+            let q = cordiv(&a, &b).unwrap();
+            let want = pa / pb;
+            assert!(
+                (q.value() - want).abs() < 0.02,
+                "{pa}/{pb}: got {} want {want}",
+                q.value()
+            );
+        }
+    }
+
+    #[test]
+    fn quotient_of_equal_streams_is_one() {
+        let (a, _) = nested(0.6, 0.6, 10_000, 1);
+        let q = cordiv(&a, &a).unwrap();
+        // a/a = 1 wherever divisor is 1; DFF holds 1s through gaps after
+        // the first hit.
+        assert!(q.value() > 0.95, "{}", q.value());
+    }
+
+    #[test]
+    fn all_zero_divisor_holds_dff() {
+        let a = Bitstream::zeros(256);
+        let b = Bitstream::zeros(256);
+        let q = cordiv(&a, &b).unwrap();
+        assert_eq!(q.value(), 0.0); // DFF initialised low
+        let mut d = Cordiv::new();
+        // Prime the DFF high, then divide by zero: output holds high.
+        let ones = Bitstream::ones(64);
+        d.divide(&ones, &ones).unwrap();
+        let q = d.divide(&a, &b).unwrap();
+        assert_eq!(q.value(), 1.0);
+    }
+
+    #[test]
+    fn bit_parallel_fill_matches_bit_serial() {
+        // Compare against a plain bit-serial reference on mixed words,
+        // including all-ones and all-zero divisor words.
+        let mut rng = Rng::seeded(9);
+        let n = 4096;
+        let mut a = Bitstream::zeros(n);
+        let mut b = Bitstream::zeros(n);
+        for i in 0..n {
+            let region = (i / 64) % 3;
+            match region {
+                0 => {
+                    b.set(i, true);
+                    a.set(i, rng.f64() < 0.4);
+                }
+                1 => { /* divisor all zero */ }
+                _ => {
+                    let bb = rng.f64() < 0.7;
+                    b.set(i, bb);
+                    a.set(i, bb && rng.f64() < 0.5);
+                }
+            }
+        }
+        let fast = cordiv(&a, &b).unwrap();
+        // Bit-serial reference.
+        let mut dff = false;
+        let mut reference = Bitstream::zeros(n);
+        for i in 0..n {
+            let bit = if b.get(i) {
+                dff = a.get(i);
+                a.get(i)
+            } else {
+                dff
+            };
+            reference.set(i, bit);
+        }
+        assert_eq!(fast, reference);
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let a = Bitstream::zeros(10);
+        let b = Bitstream::zeros(20);
+        assert!(cordiv(&a, &b).is_err());
+    }
+}

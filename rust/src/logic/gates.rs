@@ -1,0 +1,211 @@
+//! Probabilistic AND / OR / XOR gates in the three correlation regimes of
+//! Table S1, wired to the SNE bank exactly as the paper's breadboard is:
+//! uncorrelated operands come from parallel SNEs, correlated operands from
+//! one shared SNE (+ a NOT gate for negative correlation).
+
+
+use crate::stochastic::{Bitstream, SneBank};
+use crate::Result;
+
+/// Which Boolean gate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BooleanOp {
+    /// Conjunction — SC multiplier (uncorrelated).
+    And,
+    /// Disjunction.
+    Or,
+    /// Exclusive-or — SC subtractor (positively correlated).
+    Xor,
+}
+
+/// Correlation regime between the operand streams.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CorrelationMode {
+    /// Independent streams (parallel SNEs). SCC ≈ 0.
+    Uncorrelated,
+    /// Maximally overlapping streams (shared SNE). SCC ≈ +1.
+    Positive,
+    /// Maximally disjoint streams (shared SNE + NOT). SCC ≈ −1.
+    Negative,
+}
+
+/// Table S1: the arithmetic a gate computes on `(P(a), P(b))` in each
+/// correlation regime.
+pub fn expected_value(op: BooleanOp, mode: CorrelationMode, pa: f64, pb: f64) -> f64 {
+    use BooleanOp::*;
+    use CorrelationMode::*;
+    match (op, mode) {
+        (And, Uncorrelated) => pa * pb,
+        (And, Positive) => pa.min(pb),
+        (And, Negative) => (pa + pb - 1.0).max(0.0),
+        (Or, Uncorrelated) => pa + pb - pa * pb,
+        (Or, Positive) => pa.max(pb),
+        (Or, Negative) => (pa + pb).min(1.0),
+        (Xor, Uncorrelated) => pa + pb - 2.0 * pa * pb,
+        (Xor, Positive) => (pa - pb).abs(),
+        (Xor, Negative) => {
+            let s = pa + pb;
+            if s <= 1.0 {
+                s
+            } else {
+                2.0 - s
+            }
+        }
+    }
+}
+
+/// A probabilistic gate: an SNE pair (or shared SNE) feeding a Boolean
+/// gate, as in Fig. 2d.
+#[derive(Debug, Clone, Copy)]
+pub struct ProbGate {
+    /// The Boolean gate.
+    pub op: BooleanOp,
+    /// How the operand streams are generated.
+    pub mode: CorrelationMode,
+}
+
+impl ProbGate {
+    /// Build a gate descriptor.
+    pub fn new(op: BooleanOp, mode: CorrelationMode) -> Self {
+        Self { op, mode }
+    }
+
+    /// Encode `pa`, `pb` on the bank in this gate's correlation regime.
+    ///
+    /// * `Uncorrelated`: two parallel SNEs.
+    /// * `Positive`: one shared SNE, two comparator references.
+    /// * `Negative`: one shared SNE encoding `(pa, 1 − pb)`, second stream
+    ///   complemented by a NOT gate (Fig. S5's NOT option) — yielding
+    ///   SCC ≈ −1 with densities `pa`, `pb`.
+    pub fn encode_operands(
+        &self,
+        bank: &mut SneBank,
+        pa: f64,
+        pb: f64,
+    ) -> Result<(Bitstream, Bitstream)> {
+        match self.mode {
+            CorrelationMode::Uncorrelated => {
+                let a = bank.encode(pa)?;
+                let b = bank.encode(pb)?;
+                Ok((a, b))
+            }
+            CorrelationMode::Positive => {
+                let mut v = bank.encode_correlated(&[pa, pb])?;
+                let b = v.pop().expect("two streams");
+                let a = v.pop().expect("two streams");
+                Ok((a, b))
+            }
+            CorrelationMode::Negative => {
+                let mut v = bank.encode_correlated(&[pa, 1.0 - pb])?;
+                let b = v.pop().expect("two streams").not();
+                let a = v.pop().expect("two streams");
+                Ok((a, b))
+            }
+        }
+    }
+
+    /// Apply the Boolean gate to already-encoded operands.
+    pub fn apply(&self, a: &Bitstream, b: &Bitstream) -> Result<Bitstream> {
+        match self.op {
+            BooleanOp::And => a.and(b),
+            BooleanOp::Or => a.or(b),
+            BooleanOp::Xor => a.xor(b),
+        }
+    }
+
+    /// Full hardware-path evaluation: encode operands on the bank, run the
+    /// gate, return `(output stream, measured value, Table S1 prediction)`.
+    pub fn evaluate(
+        &self,
+        bank: &mut SneBank,
+        pa: f64,
+        pb: f64,
+    ) -> Result<(Bitstream, f64, f64)> {
+        let (a, b) = self.encode_operands(bank, pa, pb)?;
+        let out = self.apply(&a, &b)?;
+        let measured = out.value();
+        let predicted = expected_value(self.op, self.mode, pa, pb);
+        bank.finish_decision();
+        Ok((out, measured, predicted))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stochastic::SneConfig;
+
+    fn big_bank(seed: u64) -> SneBank {
+        SneBank::new(SneConfig { n_bits: 40_000, ..Default::default() }, seed).unwrap()
+    }
+
+    #[test]
+    fn table_s1_all_entries_verified_on_hardware_path() {
+        let mut bank = big_bank(21);
+        let cases = [(0.3, 0.6), (0.57, 0.72), (0.8, 0.8), (0.9, 0.2)];
+        for op in [BooleanOp::And, BooleanOp::Or, BooleanOp::Xor] {
+            for mode in [
+                CorrelationMode::Uncorrelated,
+                CorrelationMode::Positive,
+                CorrelationMode::Negative,
+            ] {
+                for &(pa, pb) in &cases {
+                    let gate = ProbGate::new(op, mode);
+                    let (_, measured, predicted) = gate.evaluate(&mut bank, pa, pb).unwrap();
+                    assert!(
+                        (measured - predicted).abs() < 0.02,
+                        "{op:?}/{mode:?} P(a)={pa} P(b)={pb}: measured {measured}, Table S1 {predicted}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uncorrelated_and_is_a_multiplier() {
+        // The Fig. 2e headline: P(a)P(b) ≈ P(c), one-step multiplication.
+        let mut bank = big_bank(22);
+        let gate = ProbGate::new(BooleanOp::And, CorrelationMode::Uncorrelated);
+        let (_, measured, _) = gate.evaluate(&mut bank, 0.5, 0.5).unwrap();
+        assert!((measured - 0.25).abs() < 0.02);
+    }
+
+    #[test]
+    fn correlated_and_is_min() {
+        let mut bank = big_bank(23);
+        let gate = ProbGate::new(BooleanOp::And, CorrelationMode::Positive);
+        let (_, measured, _) = gate.evaluate(&mut bank, 0.3, 0.7).unwrap();
+        assert!((measured - 0.3).abs() < 0.02);
+    }
+
+    #[test]
+    fn negative_and_is_saturating_sum_minus_one() {
+        let mut bank = big_bank(24);
+        let gate = ProbGate::new(BooleanOp::And, CorrelationMode::Negative);
+        // 0.3+0.6-1 < 0 -> 0
+        let (_, m, _) = gate.evaluate(&mut bank, 0.3, 0.6).unwrap();
+        assert!(m < 0.02, "{m}");
+        // 0.8+0.8-1 = 0.6
+        let (_, m, _) = gate.evaluate(&mut bank, 0.8, 0.8).unwrap();
+        assert!((m - 0.6).abs() < 0.02, "{m}");
+    }
+
+    #[test]
+    fn xor_positive_computes_absolute_difference() {
+        let mut bank = big_bank(25);
+        let gate = ProbGate::new(BooleanOp::Xor, CorrelationMode::Positive);
+        let (_, m, _) = gate.evaluate(&mut bank, 0.72, 0.57).unwrap();
+        assert!((m - 0.15).abs() < 0.02, "{m}");
+    }
+
+    #[test]
+    fn expected_value_edge_cases() {
+        use BooleanOp::*;
+        use CorrelationMode::*;
+        assert_eq!(expected_value(And, Negative, 0.2, 0.3), 0.0);
+        assert_eq!(expected_value(Or, Negative, 0.7, 0.8), 1.0);
+        assert_eq!(expected_value(Xor, Negative, 0.7, 0.8), 2.0 - 1.5);
+        assert_eq!(expected_value(And, Uncorrelated, 0.0, 1.0), 0.0);
+        assert_eq!(expected_value(Or, Positive, 0.0, 1.0), 1.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Probabilistic Boolean logic over stochastic numbers (Fig. 2d/e,
+//! Table S1) and the CORDIV stochastic divider.
+//!
+//! A standard Boolean gate fed with stochastic numbers computes an
+//! arithmetic function of the encoded probabilities; *which* function
+//! depends on the correlation between the operand streams:
+//!
+//! | gate | uncorrelated | positively corr. | negatively corr. |
+//! |------|--------------|------------------|------------------|
+//! | AND  | `P(a)·P(b)`  | `min(P(a),P(b))` | `max(P(a)+P(b)−1, 0)` |
+//! | OR   | `P(a)+P(b)−P(a)P(b)` | `max(P(a),P(b))` | `min(1, P(a)+P(b))` |
+//! | XOR  | `P(a)+P(b)−2P(a)P(b)` | `|P(a)−P(b)|` | `P(a)+P(b)` folded at 1 |
+//! | MUX  | `(1−P(s))·P(a)+P(s)·P(b)` (s uncorrelated with a, b) | — | — |
+
+mod cordiv;
+mod gates;
+mod mux;
+
+pub use cordiv::{cordiv, Cordiv};
+pub use gates::{expected_value, BooleanOp, CorrelationMode, ProbGate};
+pub use mux::{mux_weighted_add, MuxAdder};

@@ -1,0 +1,110 @@
+//! Probabilistic MUX — the SC weighted adder (Fig. 2d/e, S6).
+//!
+//! `P(c) = (1 − P(s))·P(a) + P(s)·P(b)` **iff** the select stream is
+//! uncorrelated with both inputs. Fig. S6's counterexample shows a select
+//! correlated with an input corrupts the addition (the MUX then simply
+//! passes that input through); [`MuxAdder::evaluate_corrupted`] reproduces
+//! that failure for the `figs6` harness.
+
+use crate::stochastic::{Bitstream, SneBank};
+use crate::{Error, Result};
+
+/// Pure stream-level weighted addition: `sel ? b : a`.
+pub fn mux_weighted_add(a: &Bitstream, b: &Bitstream, sel: &Bitstream) -> Result<Bitstream> {
+    a.mux(b, sel)
+}
+
+/// A 2×1 probabilistic MUX with its select SNE.
+#[derive(Debug, Clone, Copy)]
+pub struct MuxAdder {
+    /// Select probability — the weight on input `b`.
+    pub select_p: f64,
+}
+
+impl MuxAdder {
+    /// Weighted adder computing `(1−w)·P(a) + w·P(b)`.
+    pub fn new(select_p: f64) -> Result<Self> {
+        Error::check_prob("select_p", select_p)?;
+        Ok(Self { select_p })
+    }
+
+    /// Proper operation (Fig. S6a): inputs from parallel SNEs, select from
+    /// its own SNE — everything mutually uncorrelated.
+    pub fn evaluate(&self, bank: &mut SneBank, pa: f64, pb: f64) -> Result<(Bitstream, f64, f64)> {
+        let a = bank.encode(pa)?;
+        let b = bank.encode(pb)?;
+        let sel = bank.encode(self.select_p)?;
+        let out = a.mux(&b, &sel)?;
+        let predicted = (1.0 - self.select_p) * pa + self.select_p * pb;
+        bank.finish_decision();
+        let measured = out.value();
+        Ok((out, measured, predicted))
+    }
+
+    /// Fig. S6b counterexample: the select is (positively) correlated with
+    /// input `b`, so the MUX accepts `b` wholesale instead of sampling it.
+    /// Returns `(measured, proper_prediction)` — they diverge.
+    pub fn evaluate_corrupted(
+        &self,
+        bank: &mut SneBank,
+        pa: f64,
+        pb: f64,
+    ) -> Result<(f64, f64)> {
+        let a = bank.encode(pa)?;
+        // b and sel share one SNE: maximal positive correlation.
+        let mut pair = bank.encode_correlated(&[pb, self.select_p])?;
+        let sel = pair.pop().expect("two streams");
+        let b = pair.pop().expect("two streams");
+        let out = a.mux(&b, &sel)?;
+        let proper = (1.0 - self.select_p) * pa + self.select_p * pb;
+        bank.finish_decision();
+        Ok((out.value(), proper))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stochastic::SneConfig;
+
+    fn bank(seed: u64) -> SneBank {
+        SneBank::new(SneConfig { n_bits: 40_000, ..Default::default() }, seed).unwrap()
+    }
+
+    #[test]
+    fn mux_is_weighted_adder_when_select_uncorrelated() {
+        let mut bank = bank(31);
+        let adder = MuxAdder::new(0.5).unwrap();
+        let (_, measured, predicted) = adder.evaluate(&mut bank, 0.2, 0.8).unwrap();
+        assert!((measured - predicted).abs() < 0.02);
+        assert!((measured - 0.5).abs() < 0.02);
+
+        let adder = MuxAdder::new(0.25).unwrap();
+        let (_, measured, predicted) = adder.evaluate(&mut bank, 0.4, 0.8).unwrap();
+        assert!((measured - predicted).abs() < 0.02);
+        assert!((predicted - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn correlated_select_corrupts_the_addition() {
+        // Fig. S6b: with sel ≡ b-correlated, P(sel=1 ∧ b=1) = min(ps, pb),
+        // so the output deviates from the weighted sum.
+        let mut bank = bank(32);
+        let adder = MuxAdder::new(0.5).unwrap();
+        let (measured, proper) = adder.evaluate_corrupted(&mut bank, 0.1, 0.9).unwrap();
+        // Proper answer would be 0.5; corruption drags it toward
+        // min-like behaviour: out = sel?b:a with sel ⊆ b (ps<pb) gives
+        // P = P(sel) + P(a)(1-P(sel)) = 0.5 + 0.05 = 0.55.
+        assert!((proper - 0.5).abs() < 1e-12);
+        assert!(
+            (measured - proper).abs() > 0.03,
+            "corruption not visible: measured {measured} vs proper {proper}"
+        );
+    }
+
+    #[test]
+    fn select_probability_validated() {
+        assert!(MuxAdder::new(1.5).is_err());
+        assert!(MuxAdder::new(-0.5).is_err());
+    }
+}

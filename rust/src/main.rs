@@ -1,0 +1,332 @@
+//! `bayes-mem` CLI — leader entrypoint for the memristor Bayesian
+//! decision-making system.
+//!
+//! ```text
+//! bayes-mem fig --all | --id fig3b [--seed N]      reproduce paper figures
+//! bayes-mem serve  [--config cfg.toml] [...]       load-test the coordinator
+//! bayes-mem parse-scene [--frames N]               end-to-end scene parsing
+//! bayes-mem infer --prior P --lik P --lik-not P    one-shot inference
+//! bayes-mem fuse  --p 0.8 --p 0.7 [...]            one-shot fusion
+//! bayes-mem artifacts [--dir artifacts]            inspect AOT artifacts
+//! bayes-mem config                                 print an example config
+//! ```
+//!
+//! (Argument parsing is hand-rolled: the offline build has no clap.)
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+use std::time::{Duration, Instant};
+
+use bayes_mem::bayes::{FusionOperator, InferenceOperator};
+use bayes_mem::config::{AppConfig, Backend};
+use bayes_mem::coordinator::{Coordinator, DecisionKind};
+use bayes_mem::figures;
+use bayes_mem::runtime::Runtime;
+use bayes_mem::scene::{fusion_input, VideoWorkload};
+use bayes_mem::stochastic::SneBank;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Tiny flag parser: `--key value` pairs plus boolean `--flag`s.
+struct Flags {
+    pairs: Vec<(String, String)>,
+    bools: Vec<String>,
+}
+
+impl Flags {
+    fn parse(args: &[String]) -> Self {
+        let mut pairs = Vec::new();
+        let mut bools = Vec::new();
+        let mut it = args.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                match it.peek() {
+                    Some(v) if !v.starts_with("--") => {
+                        pairs.push((key.to_string(), it.next().unwrap().clone()));
+                    }
+                    _ => bools.push(key.to_string()),
+                }
+            }
+        }
+        Self { pairs, bools }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.pairs.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    fn get_all(&self, key: &str) -> Vec<&str> {
+        self.pairs.iter().filter(|(k, _)| k == key).map(|(_, v)| v.as_str()).collect()
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.bools.iter().any(|b| b == key)
+    }
+
+    fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn load_config(flags: &Flags) -> anyhow::Result<AppConfig> {
+    let mut cfg = match flags.get("config") {
+        Some(path) => AppConfig::load(std::path::Path::new(path))?,
+        None => AppConfig::default(),
+    };
+    if let Some(backend) = flags.get("backend") {
+        cfg.coordinator.backend = match backend {
+            "native" => Backend::Native,
+            "pjrt" => Backend::Pjrt,
+            other => anyhow::bail!("unknown backend {other}"),
+        };
+    }
+    if let Some(dir) = flags.get("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(dir);
+    }
+    cfg.seed = flags.u64_or("seed", cfg.seed);
+    Ok(cfg)
+}
+
+fn run(args: Vec<String>) -> anyhow::Result<()> {
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flags = Flags::parse(&args[1.min(args.len())..]);
+    match cmd {
+        "fig" => cmd_fig(&flags),
+        "serve" => cmd_serve(&flags),
+        "parse-scene" => cmd_parse_scene(&flags),
+        "infer" => cmd_infer(&flags),
+        "fuse" => cmd_fuse(&flags),
+        "artifacts" => cmd_artifacts(&flags),
+        "config" => {
+            print!("{}", AppConfig::example_toml());
+            Ok(())
+        }
+        _ => {
+            print!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "bayes-mem — memristor-enabled Bayesian decision-making (paper reproduction)
+
+USAGE:
+  bayes-mem fig (--all | --id <id> | --list) [--seed N]
+  bayes-mem serve [--config cfg.toml] [--backend native|pjrt]
+                  [--requests N] [--rate-fps F] [--workers N]
+  bayes-mem parse-scene [--frames N] [--seed N] [--backend native|pjrt]
+  bayes-mem infer --prior P --lik P --lik-not P [--bits N]
+  bayes-mem fuse --p P --p P [--p P ...] [--bits N]
+  bayes-mem artifacts [--artifacts DIR]
+  bayes-mem config
+";
+
+fn cmd_fig(flags: &Flags) -> anyhow::Result<()> {
+    let seed = flags.u64_or("seed", 42);
+    if flags.has("list") {
+        for f in figures::registry() {
+            println!("{:<16} {}", f.id, f.title);
+        }
+        return Ok(());
+    }
+    if flags.has("all") {
+        for f in figures::registry() {
+            println!("================================================================");
+            print!("{}", (f.run)(seed)?);
+        }
+        return Ok(());
+    }
+    let id = flags.get("id").ok_or_else(|| anyhow::anyhow!("need --id, --all or --list"))?;
+    print!("{}", figures::run(id, seed)?);
+    Ok(())
+}
+
+fn cmd_infer(flags: &Flags) -> anyhow::Result<()> {
+    let prior = flags.f64_or("prior", 0.57);
+    let lik = flags.f64_or("lik", 0.77);
+    let lik_not = flags.f64_or("lik-not", 0.655);
+    let bits = flags.usize_or("bits", 100);
+    let mut cfg = AppConfig::default();
+    cfg.sne.n_bits = bits;
+    let mut bank = SneBank::new(cfg.sne, flags.u64_or("seed", 42))?;
+    let r = InferenceOperator::default().try_infer(&mut bank, prior, lik, lik_not)?;
+    println!(
+        "P(A)={prior:.3} P(B|A)={lik:.3} P(B|¬A)={lik_not:.3}\n\
+         posterior P(A|B) = {:.4}  (exact {:.4}, |err| {:.4})\n\
+         marginal  P(B)   = {:.4}  (exact {:.4})\n\
+         hardware: {:.3} ms, {:.2} nJ",
+        r.posterior,
+        r.exact,
+        r.abs_error(),
+        r.marginal,
+        r.exact_marginal,
+        bits as f64 * 0.004,
+        bank.ledger().energy_nj,
+    );
+    Ok(())
+}
+
+fn cmd_fuse(flags: &Flags) -> anyhow::Result<()> {
+    let ps: Vec<f64> = flags.get_all("p").iter().filter_map(|v| v.parse().ok()).collect();
+    let ps = if ps.len() >= 2 { ps } else { vec![0.8, 0.7] };
+    let bits = flags.usize_or("bits", 100);
+    let mut cfg = AppConfig::default();
+    cfg.sne.n_bits = bits;
+    let mut bank = SneBank::new(cfg.sne, flags.u64_or("seed", 42))?;
+    let r = FusionOperator::default().fuse(&mut bank, &ps)?;
+    println!(
+        "inputs {:?}\nfused = {:.4}  (exact {:.4}, |err| {:.4})\nhardware: {:.3} ms, {:.2} nJ",
+        r.inputs,
+        r.fused,
+        r.exact,
+        r.abs_error(),
+        bits as f64 * 0.004,
+        bank.ledger().energy_nj,
+    );
+    Ok(())
+}
+
+fn cmd_artifacts(flags: &Flags) -> anyhow::Result<()> {
+    let dir = PathBuf::from(flags.get("artifacts").unwrap_or("artifacts"));
+    let rt = Runtime::load_dir(&dir)?;
+    println!("artifacts dir: {}", dir.display());
+    for name in rt.manifest().names() {
+        let spec = rt.manifest().get(name).unwrap();
+        println!("  {:<24} inputs {:?}", name, spec.input_shapes);
+    }
+    println!("compiled {} entrypoints OK", rt.loaded().count());
+    Ok(())
+}
+
+fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
+    let mut cfg = load_config(flags)?;
+    cfg.coordinator.workers = flags.usize_or("workers", cfg.coordinator.workers);
+    let requests = flags.usize_or("requests", 10_000);
+    let rate_fps = flags.f64_or("rate-fps", 2_500.0);
+    println!(
+        "serving {requests} requests at {rate_fps} fps offered load \
+         ({:?} backend, {} workers, batch {} / {:?})",
+        cfg.coordinator.backend,
+        cfg.coordinator.workers,
+        cfg.coordinator.max_batch,
+        cfg.coordinator.max_wait,
+    );
+    let coord = Coordinator::start(&cfg)?;
+    let handle = coord.handle();
+    let interval = Duration::from_secs_f64(1.0 / rate_fps);
+    let started = Instant::now();
+    let mut pending = Vec::with_capacity(requests);
+    let mut next = Instant::now();
+    for i in 0..requests {
+        // Open-loop arrivals at the offered rate.
+        next += interval;
+        let now = Instant::now();
+        if next > now {
+            std::thread::sleep(next - now);
+        }
+        let kind = if i % 2 == 0 {
+            DecisionKind::Inference { prior: 0.57, likelihood: 0.77, likelihood_not: 0.655 }
+        } else {
+            DecisionKind::Fusion { posteriors: vec![0.8, 0.7] }
+        };
+        match handle.submit(kind) {
+            Ok(p) => pending.push(p),
+            Err(_) => {} // shed; counted in metrics
+        }
+    }
+    let mut errors = 0usize;
+    for p in pending {
+        if p.wait_timeout(Duration::from_secs(30)).is_err() {
+            errors += 1;
+        }
+    }
+    let elapsed = started.elapsed();
+    let snap = handle.metrics().snapshot();
+    println!("{}", snap.to_table());
+    println!(
+        "wall-clock: {:.2} s -> {:.0} decisions/s software throughput ({errors} errors)",
+        elapsed.as_secs_f64(),
+        snap.completed as f64 / elapsed.as_secs_f64()
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_parse_scene(flags: &Flags) -> anyhow::Result<()> {
+    let cfg = load_config(flags)?;
+    let frames = flags.usize_or("frames", 200);
+    let coord = Coordinator::start(&cfg)?;
+    let handle = coord.handle();
+    let mut wl = VideoWorkload::new(cfg.seed);
+    let started = Instant::now();
+    let mut obstacles = 0usize;
+    let mut fused_hits = 0usize;
+    let mut rgb_hits = 0usize;
+    let mut th_hits = 0usize;
+    for _ in 0..frames {
+        let det = wl.next_detections();
+        let pending: Vec<_> = det
+            .confidences
+            .iter()
+            .map(|&(p_rgb, p_th)| {
+                let kind = DecisionKind::Fusion {
+                    posteriors: vec![fusion_input(p_rgb), fusion_input(p_th)],
+                };
+                (p_rgb, p_th, handle.submit(kind))
+            })
+            .collect();
+        for (p_rgb, p_th, submitted) in pending {
+            obstacles += 1;
+            if p_rgb > 0.5 {
+                rgb_hits += 1;
+            }
+            if p_th > 0.5 {
+                th_hits += 1;
+            }
+            if let Ok(p) = submitted {
+                if let Ok(d) = p.wait_timeout(Duration::from_secs(10)) {
+                    if d.posterior > 0.5 {
+                        fused_hits += 1;
+                    }
+                }
+            }
+        }
+    }
+    let elapsed = started.elapsed();
+    println!(
+        "parsed {frames} frames / {obstacles} obstacles in {:.2} s ({:.0} obstacles/s)",
+        elapsed.as_secs_f64(),
+        obstacles as f64 / elapsed.as_secs_f64()
+    );
+    println!(
+        "detection rates: rgb {:.2}  thermal {:.2}  fused(stochastic hw) {:.2}",
+        rgb_hits as f64 / obstacles as f64,
+        th_hits as f64 / obstacles as f64,
+        fused_hits as f64 / obstacles as f64
+    );
+    println!(
+        "fusion gain vs thermal {:+.0} %, vs rgb {:+.0} %  (paper: +85 % / +19 %)",
+        (fused_hits as f64 / th_hits.max(1) as f64 - 1.0) * 100.0,
+        (fused_hits as f64 / rgb_hits.max(1) as f64 - 1.0) * 100.0
+    );
+    println!("{}", handle.metrics().snapshot().to_table());
+    coord.shutdown();
+    Ok(())
+}

@@ -1,0 +1,198 @@
+//! Artifact manifest: which entrypoints exist and what shapes they take.
+//!
+//! `python -m compile.aot` writes `manifest.toml` in the `util::tomlmini`
+//! subset:
+//!
+//! ```toml
+//! [fusion_b16_m2_n256]
+//! file = "fusion_b16_m2_n256.hlo.txt"
+//! inputs = 2
+//! input0 = "16,2"
+//! input1 = "16,3,256"
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::tomlmini::Document;
+use crate::{Error, Result};
+
+/// Shape signature of one AOT entrypoint.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EntrypointSpec {
+    /// Entrypoint name (e.g. `fusion_b16_m2_n256`).
+    pub name: String,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: PathBuf,
+    /// Input shapes (row-major dims), all f32.
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+impl EntrypointSpec {
+    /// Total element count of input `i`.
+    pub fn input_len(&self, i: usize) -> usize {
+        self.input_shapes[i].iter().product()
+    }
+
+    /// Batch size = leading dim of the first input.
+    pub fn batch(&self) -> usize {
+        self.input_shapes.first().and_then(|s| s.first()).copied().unwrap_or(0)
+    }
+}
+
+/// Parsed `manifest.toml`.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactManifest {
+    entries: BTreeMap<String, EntrypointSpec>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.toml`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let doc = Document::load(&dir.join("manifest.toml"))
+            .map_err(|e| Error::Artifact(format!("manifest load failed: {e}")))?;
+        Self::from_document(&doc, dir)
+    }
+
+    /// Parse from an already-loaded document.
+    pub fn from_document(doc: &Document, dir: &Path) -> Result<Self> {
+        // Collect entrypoint names = unique key prefixes.
+        let mut names: Vec<String> = doc
+            .keys()
+            .filter_map(|k| k.split_once('.').map(|(s, _)| s.to_string()))
+            .collect();
+        names.sort();
+        names.dedup();
+        let mut entries = BTreeMap::new();
+        for name in names {
+            let file = doc
+                .get(&format!("{name}.file"))
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| Error::Artifact(format!("{name}: missing file")))?;
+            let n_inputs = doc.usize_or(&format!("{name}.inputs"), 0);
+            if n_inputs == 0 {
+                return Err(Error::Artifact(format!("{name}: no inputs declared")));
+            }
+            let mut input_shapes = Vec::with_capacity(n_inputs);
+            for i in 0..n_inputs {
+                let dims = doc
+                    .get(&format!("{name}.input{i}"))
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| Error::Artifact(format!("{name}: missing input{i}")))?;
+                let shape: Vec<usize> = dims
+                    .split(',')
+                    .map(|d| {
+                        d.trim()
+                            .parse::<usize>()
+                            .map_err(|_| Error::Artifact(format!("{name}: bad dim {d:?}")))
+                    })
+                    .collect::<Result<_>>()?;
+                if shape.is_empty() || shape.iter().any(|&d| d == 0) {
+                    return Err(Error::Artifact(format!("{name}: degenerate shape")));
+                }
+                input_shapes.push(shape);
+            }
+            entries.insert(
+                name.clone(),
+                EntrypointSpec { name, file: PathBuf::from(file), input_shapes },
+            );
+        }
+        if entries.is_empty() {
+            return Err(Error::Artifact("manifest has no entrypoints".into()));
+        }
+        Ok(Self { entries, dir: dir.to_path_buf() })
+    }
+
+    /// Look up an entrypoint.
+    pub fn get(&self, name: &str) -> Option<&EntrypointSpec> {
+        self.entries.get(name)
+    }
+
+    /// All entrypoint names.
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    /// Number of entrypoints.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Is the manifest empty?
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Absolute path of an entrypoint's HLO file.
+    pub fn hlo_path(&self, spec: &EntrypointSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+[fusion_b16_m2_n256]
+file = "fusion_b16_m2_n256.hlo.txt"
+inputs = 2
+input0 = "16,2"
+input1 = "16,3,256"
+
+[detector_b64]
+file = "detector_b64.hlo.txt"
+inputs = 1
+input0 = "64,6"
+"#;
+
+    #[test]
+    fn parses_manifest_subset() {
+        let doc = Document::parse(SAMPLE).unwrap();
+        let man = ArtifactManifest::from_document(&doc, Path::new("/tmp/a")).unwrap();
+        assert_eq!(man.len(), 2);
+        let f = man.get("fusion_b16_m2_n256").unwrap();
+        assert_eq!(f.input_shapes, vec![vec![16, 2], vec![16, 3, 256]]);
+        assert_eq!(f.batch(), 16);
+        assert_eq!(f.input_len(1), 16 * 3 * 256);
+        assert_eq!(
+            man.hlo_path(f),
+            PathBuf::from("/tmp/a/fusion_b16_m2_n256.hlo.txt")
+        );
+        let names: Vec<&str> = man.names().collect();
+        assert_eq!(names, vec!["detector_b64", "fusion_b16_m2_n256"]);
+    }
+
+    #[test]
+    fn rejects_malformed_manifests() {
+        for bad in [
+            "[x]\ninputs = 1\ninput0 = \"2,2\"",          // missing file
+            "[x]\nfile = \"x.hlo.txt\"\ninputs = 0",       // zero inputs
+            "[x]\nfile = \"x.hlo.txt\"\ninputs = 1",       // missing input0
+            "[x]\nfile = \"x.hlo.txt\"\ninputs = 1\ninput0 = \"a,b\"", // bad dims
+            "[x]\nfile = \"x.hlo.txt\"\ninputs = 1\ninput0 = \"0,4\"", // zero dim
+            "",                                             // empty
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(
+                ArtifactManifest::from_document(&doc, Path::new("/tmp")).is_err(),
+                "should reject: {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn loads_real_generated_manifest_if_present() {
+        // `make artifacts` output, when it exists in the workspace.
+        let dir = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        if dir.join("manifest.toml").exists() {
+            let man = ArtifactManifest::load(dir).unwrap();
+            assert!(man.get("fusion_b1_m2_n100").is_some());
+            assert!(man.get("inference_b1_n100").is_some());
+            let inf = man.get("inference_b1_n100").unwrap();
+            assert_eq!(inf.input_shapes, vec![vec![1, 3], vec![1, 3, 100]]);
+        }
+    }
+}

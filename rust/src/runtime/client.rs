@@ -1,0 +1,236 @@
+//! PJRT client wrapper: compile HLO-text artifacts once, execute many.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::Rng;
+use crate::{Error, Result};
+
+use super::{ArtifactManifest, EntrypointSpec};
+
+/// One compiled entrypoint.
+pub struct RuntimeExecutable {
+    spec: EntrypointSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl RuntimeExecutable {
+    /// The entrypoint's shape signature.
+    pub fn spec(&self) -> &EntrypointSpec {
+        &self.spec
+    }
+
+    /// Execute with f32 inputs (one flat slice per declared input).
+    ///
+    /// Lengths are validated against the manifest shapes. Returns the flat
+    /// f32 contents of the first tuple output (all our entrypoints return
+    /// one tensor, lowered with `return_tuple=True`).
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        if inputs.len() != self.spec.input_shapes.len() {
+            return Err(Error::Runtime(format!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.input_shapes.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (&flat, shape)) in inputs.iter().zip(&self.spec.input_shapes).enumerate() {
+            if flat.len() != self.spec.input_len(i) {
+                return Err(Error::Runtime(format!(
+                    "{}: input{} length {} != shape {:?}",
+                    self.spec.name,
+                    i,
+                    flat.len(),
+                    shape
+                )));
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(flat)
+                .reshape(&dims)
+                .map_err(|e| Error::Runtime(format!("reshape input{i}: {e}")))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("{}: execute: {e}", self.spec.name)))?;
+        let first = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| Error::Runtime(format!("{}: empty result", self.spec.name)))?;
+        let literal = first
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("{}: to_literal: {e}", self.spec.name)))?;
+        let out = literal
+            .to_tuple1()
+            .map_err(|e| Error::Runtime(format!("{}: tuple unwrap: {e}", self.spec.name)))?;
+        out.to_vec::<f32>()
+            .map_err(|e| Error::Runtime(format!("{}: to_vec: {e}", self.spec.name)))
+    }
+}
+
+/// The PJRT CPU runtime: one client, many compiled entrypoints.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    executables: BTreeMap<String, RuntimeExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load **all** manifest entrypoints.
+    pub fn load_dir(dir: &Path) -> Result<Self> {
+        let manifest = ArtifactManifest::load(dir)?;
+        Self::load_manifest(manifest)
+    }
+
+    /// Load a subset (faster startup for single-operator tools).
+    pub fn load_subset(dir: &Path, names: &[&str]) -> Result<Self> {
+        let manifest = ArtifactManifest::load(dir)?;
+        let client = Self::client()?;
+        let mut rt = Self { client, manifest, executables: BTreeMap::new() };
+        for name in names {
+            rt.compile_entry(name)?;
+        }
+        Ok(rt)
+    }
+
+    fn client() -> Result<xla::PjRtClient> {
+        xla::PjRtClient::cpu().map_err(|e| Error::Runtime(format!("pjrt cpu client: {e}")))
+    }
+
+    /// Compile everything in an already-parsed manifest.
+    pub fn load_manifest(manifest: ArtifactManifest) -> Result<Self> {
+        let client = Self::client()?;
+        let names: Vec<String> = manifest.names().map(str::to_string).collect();
+        let mut rt = Self { client, manifest, executables: BTreeMap::new() };
+        for name in names {
+            rt.compile_entry(&name)?;
+        }
+        Ok(rt)
+    }
+
+    fn compile_entry(&mut self, name: &str) -> Result<()> {
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("unknown entrypoint {name}")))?
+            .clone();
+        let path = self.manifest.hlo_path(&spec);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| Error::Artifact(format!("non-utf8 path {path:?}")))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .map_err(|e| Error::Artifact(format!("{name}: parse HLO: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("{name}: compile: {e}")))?;
+        self.executables.insert(name.to_string(), RuntimeExecutable { spec, exe });
+        Ok(())
+    }
+
+    /// The manifest this runtime was loaded from.
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// Names of compiled entrypoints.
+    pub fn loaded(&self) -> impl Iterator<Item = &str> {
+        self.executables.keys().map(String::as_str)
+    }
+
+    /// Borrow a compiled entrypoint.
+    pub fn get(&self, name: &str) -> Result<&RuntimeExecutable> {
+        self.executables
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("entrypoint {name} not loaded")))
+    }
+
+    /// Convenience: run batched stochastic **fusion** through an AOT
+    /// entrypoint. `probs` is `B×M` row-major; uniforms are drawn from
+    /// `rng` (the memristor randomness source on this path).
+    pub fn fusion(&self, name: &str, probs: &[f32], rng: &mut Rng) -> Result<Vec<f32>> {
+        let exe = self.get(name)?;
+        let uniforms = Self::uniforms(exe.spec().input_len(1), rng);
+        exe.run_f32(&[probs, &uniforms])
+    }
+
+    /// Convenience: run batched stochastic **inference** (Eq. 1) through
+    /// an AOT entrypoint. Output is `B×2` `[posterior, marginal]` rows.
+    pub fn inference(&self, name: &str, probs: &[f32], rng: &mut Rng) -> Result<Vec<f32>> {
+        let exe = self.get(name)?;
+        let uniforms = Self::uniforms(exe.spec().input_len(1), rng);
+        exe.run_f32(&[probs, &uniforms])
+    }
+
+    fn uniforms(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| rng.f64() as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! These tests need `make artifacts` to have run; they are skipped
+    //! (not failed) when the artifacts directory is absent so `cargo
+    //! test` works on a fresh checkout.
+    use super::*;
+
+    fn artifacts_dir() -> Option<&'static Path> {
+        let dir = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        dir.join("manifest.toml").exists().then_some(dir)
+    }
+
+    #[test]
+    fn load_and_run_inference_artifact() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::load_subset(dir, &["inference_b1_n100"]).unwrap();
+        let mut rng = Rng::seeded(42);
+        // Fig. 3b through the AOT path.
+        let out = rt.inference("inference_b1_n100", &[0.57, 0.77, 0.655], &mut rng).unwrap();
+        assert_eq!(out.len(), 2);
+        let (posterior, marginal) = (out[0], out[1]);
+        // 100-bit precision: generous envelope around the exact 0.609/0.72.
+        assert!((posterior - 0.609).abs() < 0.15, "posterior {posterior}");
+        assert!((marginal - 0.72).abs() < 0.12, "marginal {marginal}");
+    }
+
+    #[test]
+    fn fusion_artifact_converges_over_repeats() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::load_subset(dir, &["fusion_b1_m2_n100"]).unwrap();
+        let mut rng = Rng::seeded(7);
+        let exact = 0.56 / (0.56 + 0.06); // fuse(0.8, 0.7)
+        let n = 64;
+        let mean: f32 = (0..n)
+            .map(|_| rt.fusion("fusion_b1_m2_n100", &[0.8, 0.7], &mut rng).unwrap()[0])
+            .sum::<f32>()
+            / n as f32;
+        assert!((mean as f64 - exact).abs() < 0.04, "mean {mean} vs exact {exact}");
+    }
+
+    #[test]
+    fn batched_entrypoint_shapes() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::load_subset(dir, &["fusion_b16_m2_n256"]).unwrap();
+        let mut rng = Rng::seeded(8);
+        let probs: Vec<f32> = (0..16).flat_map(|i| [0.5 + 0.02 * i as f32, 0.7]).collect();
+        let out = rt.fusion("fusion_b16_m2_n256", &probs, &mut rng).unwrap();
+        assert_eq!(out.len(), 16);
+        assert!(out.iter().all(|p| (0.0..=1.0).contains(&(*p as f64))));
+    }
+
+    #[test]
+    fn input_validation_errors() {
+        let Some(dir) = artifacts_dir() else { return };
+        let rt = Runtime::load_subset(dir, &["inference_b1_n100"]).unwrap();
+        let exe = rt.get("inference_b1_n100").unwrap();
+        // Wrong arity.
+        assert!(exe.run_f32(&[&[0.5, 0.5, 0.5]]).is_err());
+        // Wrong length.
+        assert!(exe.run_f32(&[&[0.5, 0.5], &[0.0; 300]]).is_err());
+        // Unknown entrypoint.
+        assert!(rt.get("nope").is_err());
+    }
+}

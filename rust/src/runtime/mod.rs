@@ -1,0 +1,14 @@
+//! PJRT runtime — loads the AOT-compiled JAX/Pallas artifacts (HLO text)
+//! and executes them from the Rust hot path.
+//!
+//! Python runs once at build time (`make artifacts`); afterwards the Rust
+//! binary is self-contained: it parses `artifacts/manifest.toml`, compiles
+//! each `*.hlo.txt` on the PJRT CPU client, and serves decisions through
+//! the compiled executables. See /opt/xla-example/load_hlo for the
+//! reference wiring this module generalises.
+
+mod artifacts;
+mod client;
+
+pub use artifacts::{ArtifactManifest, EntrypointSpec};
+pub use client::{Runtime, RuntimeExecutable};

@@ -1,0 +1,27 @@
+//! Road-scene workloads — the synthetic stand-in for the paper's FLIR
+//! RGB-thermal dataset, YOLO-class detectors, and driving scenarios.
+//!
+//! The paper's fusion experiments consume only per-obstacle detector
+//! posteriors `P(y|x_RGB)`, `P(y|x_thermal)`; what makes fusion *useful*
+//! is the complementary failure modes of the two sensors (thermal misses
+//! cold obstacles, RGB misses at night / in glare). This module generates
+//! scenes with controllable ground truth that exhibit exactly those
+//! failure modes, calibrated so single-modal detection rates match the
+//! Movie S1 ratios (fusion ≈ +85 % over thermal-only, ≈ +19 % over
+//! RGB-only).
+//!
+//! The detector confidence model is a logistic head over a 6-feature
+//! obstacle descriptor — deliberately simple enough to mirror exactly in
+//! the L2 JAX model (`python/compile/model.py`), so the PJRT artifact and
+//! the native Rust path compute the same function (verified by an
+//! integration test).
+
+mod detector;
+mod scenario;
+mod video;
+
+pub use detector::{detector_logits, fusion_input, DetectorModel, Modality, CONFIDENCE_CEIL, FEATURE_DIM};
+pub use scenario::{
+    LaneChangeScenario, Obstacle, ObstacleClass, SceneFrame, SceneGenerator, Visibility,
+};
+pub use video::{FrameDetections, VideoStats, VideoWorkload};

@@ -1,0 +1,339 @@
+//! Scene and scenario generation.
+
+use crate::util::Rng;
+
+/// Ambient visibility condition of a frame (Fig. 4b's day/night columns
+/// plus the fog/rain cases the paper's discussion motivates).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Visibility {
+    /// Clear daylight: RGB strong, thermal indifferent.
+    Day,
+    /// Low-light night: RGB weak, thermal unaffected.
+    Night,
+    /// Fog: both degraded, thermal less so.
+    Fog,
+    /// Rain: RGB mildly degraded, thermal mildly degraded.
+    Rain,
+    /// Harsh glare (the Movie S1 running-child case): RGB strongly
+    /// degraded, thermal unaffected.
+    HarshLight,
+}
+
+impl Visibility {
+    /// All conditions, for sweeps.
+    pub const ALL: [Visibility; 5] =
+        [Visibility::Day, Visibility::Night, Visibility::Fog, Visibility::Rain, Visibility::HarshLight];
+
+    /// Ambient light level seen by the RGB camera, `[0, 1]`.
+    pub fn ambient_light(self) -> f64 {
+        match self {
+            Visibility::Day => 1.0,
+            Visibility::Night => 0.15,
+            Visibility::Fog => 0.55,
+            Visibility::Rain => 0.65,
+            Visibility::HarshLight => 0.25, // blown-out sensor ≈ low SNR
+        }
+    }
+
+    /// Atmospheric attenuation affecting both sensors, `[0, 1]`.
+    pub fn attenuation(self) -> f64 {
+        match self {
+            Visibility::Day => 0.0,
+            Visibility::Night => 0.05,
+            Visibility::Fog => 0.45,
+            Visibility::Rain => 0.25,
+            Visibility::HarshLight => 0.05,
+        }
+    }
+}
+
+/// Obstacle category with its typical thermal signature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObstacleClass {
+    /// Pedestrians: strong heat emitters, medium visual contrast.
+    Pedestrian,
+    /// Cyclists: strong heat, higher contrast.
+    Cyclist,
+    /// Running vehicles: warm (engine), high contrast.
+    Vehicle,
+    /// Parked/cold vehicles: weak heat — the thermal-miss case.
+    ParkedVehicle,
+    /// Debris/static objects: cold, low contrast — hard for both.
+    Debris,
+}
+
+impl ObstacleClass {
+    /// All classes, for sweeps.
+    pub const ALL: [ObstacleClass; 5] = [
+        ObstacleClass::Pedestrian,
+        ObstacleClass::Cyclist,
+        ObstacleClass::Vehicle,
+        ObstacleClass::ParkedVehicle,
+        ObstacleClass::Debris,
+    ];
+
+    /// Nominal heat emission, `[0, 1]`.
+    pub fn heat(self) -> f64 {
+        match self {
+            ObstacleClass::Pedestrian => 0.9,
+            ObstacleClass::Cyclist => 0.85,
+            ObstacleClass::Vehicle => 0.7,
+            ObstacleClass::ParkedVehicle => 0.15,
+            ObstacleClass::Debris => 0.08,
+        }
+    }
+
+    /// Nominal visual contrast, `[0, 1]`.
+    pub fn contrast(self) -> f64 {
+        match self {
+            ObstacleClass::Pedestrian => 0.55,
+            ObstacleClass::Cyclist => 0.65,
+            ObstacleClass::Vehicle => 0.85,
+            ObstacleClass::ParkedVehicle => 0.8,
+            ObstacleClass::Debris => 0.35,
+        }
+    }
+
+    /// Nominal angular size, `[0, 1]`.
+    pub fn size(self) -> f64 {
+        match self {
+            ObstacleClass::Pedestrian => 0.35,
+            ObstacleClass::Cyclist => 0.45,
+            ObstacleClass::Vehicle => 0.9,
+            ObstacleClass::ParkedVehicle => 0.9,
+            ObstacleClass::Debris => 0.25,
+        }
+    }
+}
+
+/// One ground-truth obstacle in a frame.
+#[derive(Debug, Clone)]
+pub struct Obstacle {
+    /// Category.
+    pub class: ObstacleClass,
+    /// Heat emission after per-instance jitter, `[0, 1]`.
+    pub heat: f64,
+    /// Visual contrast after jitter, `[0, 1]`.
+    pub contrast: f64,
+    /// Normalised distance, `[0, 1]` (1 = sensing-range limit).
+    pub distance: f64,
+    /// Angular size, `[0, 1]`.
+    pub size: f64,
+}
+
+impl Obstacle {
+    /// Sample an instance of `class` with per-instance jitter.
+    pub fn sample(class: ObstacleClass, rng: &mut Rng) -> Self {
+        let jit = |x: f64, rng: &mut Rng| (x + rng.normal_with(0.0, 0.08)).clamp(0.02, 1.0);
+        Self {
+            class,
+            heat: jit(class.heat(), rng),
+            contrast: jit(class.contrast(), rng),
+            distance: rng.range_f64(0.1, 1.0),
+            size: jit(class.size(), rng),
+        }
+    }
+
+    /// The 6-feature descriptor consumed by the detector heads (and the
+    /// L2 JAX model): `[heat, contrast, ambient, attenuation, distance,
+    /// size]`.
+    pub fn features(&self, vis: Visibility) -> [f64; 6] {
+        [
+            self.heat,
+            self.contrast,
+            vis.ambient_light(),
+            vis.attenuation(),
+            self.distance,
+            self.size,
+        ]
+    }
+}
+
+/// One frame: a visibility condition plus ground-truth obstacles.
+#[derive(Debug, Clone)]
+pub struct SceneFrame {
+    /// Monotone frame id.
+    pub id: u64,
+    /// Ambient condition.
+    pub visibility: Visibility,
+    /// Ground-truth obstacles.
+    pub obstacles: Vec<Obstacle>,
+}
+
+/// Streaming generator of scene frames.
+#[derive(Debug, Clone)]
+pub struct SceneGenerator {
+    rng: Rng,
+    next_id: u64,
+    /// Mean obstacles per frame.
+    pub mean_obstacles: f64,
+    /// Condition mix: `(visibility, weight)`.
+    pub condition_mix: Vec<(Visibility, f64)>,
+}
+
+impl SceneGenerator {
+    /// Generator with the default day/night-heavy mix.
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Rng::seeded(seed),
+            next_id: 0,
+            mean_obstacles: 3.0,
+            condition_mix: vec![
+                (Visibility::Day, 0.4),
+                (Visibility::Night, 0.3),
+                (Visibility::Fog, 0.1),
+                (Visibility::Rain, 0.1),
+                (Visibility::HarshLight, 0.1),
+            ],
+        }
+    }
+
+    /// Fix the generator to one condition (Fig. 4b per-column runs).
+    pub fn with_condition(seed: u64, vis: Visibility) -> Self {
+        let mut g = Self::new(seed);
+        g.condition_mix = vec![(vis, 1.0)];
+        g
+    }
+
+    fn sample_condition(&mut self) -> Visibility {
+        let total: f64 = self.condition_mix.iter().map(|(_, w)| w).sum();
+        let mut u = self.rng.f64() * total;
+        for &(v, w) in &self.condition_mix {
+            if u < w {
+                return v;
+            }
+            u -= w;
+        }
+        self.condition_mix.last().map(|&(v, _)| v).unwrap_or(Visibility::Day)
+    }
+
+    /// Generate the next frame.
+    pub fn next_frame(&mut self) -> SceneFrame {
+        let visibility = self.sample_condition();
+        // Poisson-ish obstacle count via thinning (knuth for small mean).
+        let mut n = 0usize;
+        let l = (-self.mean_obstacles).exp();
+        let mut p = 1.0;
+        loop {
+            p *= self.rng.f64();
+            if p <= l {
+                break;
+            }
+            n += 1;
+        }
+        let n = n.clamp(1, 8);
+        let obstacles = (0..n)
+            .map(|_| {
+                let class = ObstacleClass::ALL[self.rng.below(ObstacleClass::ALL.len())];
+                Obstacle::sample(class, &mut self.rng)
+            })
+            .collect();
+        let id = self.next_id;
+        self.next_id += 1;
+        SceneFrame { id, visibility, obstacles }
+    }
+
+    /// Generate `n` frames.
+    pub fn frames(&mut self, n: usize) -> Vec<SceneFrame> {
+        (0..n).map(|_| self.next_frame()).collect()
+    }
+}
+
+/// The Fig. 3 route-planning scenario: a vehicle weighing a lane change.
+///
+/// Maps traffic context onto the inference operator's three inputs.
+#[derive(Debug, Clone)]
+pub struct LaneChangeScenario {
+    /// Prior belief the cut-in is viable, from traffic context `P(A)`.
+    pub prior_cut_in: f64,
+    /// Probability of observing the target-lane evidence given the cut-in
+    /// is viable, `P(B|A)`.
+    pub evidence_given_viable: f64,
+    /// Same evidence probability when the cut-in is not viable, `P(B|¬A)`.
+    pub evidence_given_blocked: f64,
+}
+
+impl LaneChangeScenario {
+    /// The paper's Fig. 3b instance (P(A)=57 %, P(B)≈72 %, posterior ≈61 %).
+    pub fn fig3b() -> Self {
+        Self {
+            prior_cut_in: 0.57,
+            evidence_given_viable: 0.77,
+            evidence_given_blocked: 0.655,
+        }
+    }
+
+    /// Randomised scenario for workload generation: prior from traffic
+    /// density, likelihoods from sensor quality.
+    pub fn sample(rng: &mut Rng) -> Self {
+        let prior = rng.range_f64(0.2, 0.85);
+        let quality = rng.range_f64(0.6, 0.95);
+        Self {
+            prior_cut_in: prior,
+            evidence_given_viable: quality,
+            evidence_given_blocked: (1.0 - quality) + rng.range_f64(0.0, 0.3),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_is_deterministic_per_seed() {
+        let mut a = SceneGenerator::new(7);
+        let mut b = SceneGenerator::new(7);
+        let fa = a.next_frame();
+        let fb = b.next_frame();
+        assert_eq!(fa.obstacles.len(), fb.obstacles.len());
+        assert_eq!(fa.visibility, fb.visibility);
+        assert_eq!(fa.id, 0);
+        assert_eq!(a.next_frame().id, 1);
+    }
+
+    #[test]
+    fn frames_have_bounded_attributes() {
+        let mut g = SceneGenerator::new(8);
+        for f in g.frames(200) {
+            assert!(!f.obstacles.is_empty() && f.obstacles.len() <= 8);
+            for o in &f.obstacles {
+                for v in [o.heat, o.contrast, o.distance, o.size] {
+                    assert!((0.0..=1.0).contains(&v), "{o:?}");
+                }
+                let feats = o.features(f.visibility);
+                assert!(feats.iter().all(|x| (0.0..=1.0).contains(x)));
+            }
+        }
+    }
+
+    #[test]
+    fn condition_mix_respected() {
+        let mut g = SceneGenerator::with_condition(9, Visibility::Night);
+        assert!(g.frames(50).iter().all(|f| f.visibility == Visibility::Night));
+    }
+
+    #[test]
+    fn class_signatures_separate_modal_failure_modes() {
+        // Parked vehicles are cold but visible; pedestrians warm but lower
+        // contrast — the complementarity fusion exploits.
+        assert!(ObstacleClass::ParkedVehicle.heat() < 0.3);
+        assert!(ObstacleClass::ParkedVehicle.contrast() > 0.6);
+        assert!(ObstacleClass::Pedestrian.heat() > 0.8);
+    }
+
+    #[test]
+    fn fig3b_scenario_matches_paper_constants() {
+        let s = LaneChangeScenario::fig3b();
+        let pb = s.prior_cut_in * s.evidence_given_viable
+            + (1.0 - s.prior_cut_in) * s.evidence_given_blocked;
+        assert!((pb - 0.72).abs() < 0.005);
+        let mut rng = Rng::seeded(1);
+        for _ in 0..100 {
+            let r = LaneChangeScenario::sample(&mut rng);
+            assert!((0.0..=1.0).contains(&r.prior_cut_in));
+            assert!((0.0..=1.0).contains(&r.evidence_given_viable));
+            assert!((0.0..=1.0).contains(&r.evidence_given_blocked));
+        }
+    }
+}

@@ -1,0 +1,354 @@
+//! Packed stochastic bitstreams.
+//!
+//! Bits are packed 64-per-word so gate operations are single bitwise ops
+//! over `u64` lanes — this is the software analogue of the paper's
+//! bit-parallel hardware and the L3 hot path (see DESIGN.md §6).
+
+
+use crate::{Error, Result};
+
+/// A fixed-length stream of stochastic bits, LSB-first within each word.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Bitstream {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl Bitstream {
+    /// All-zero stream of `len` bits.
+    pub fn zeros(len: usize) -> Self {
+        Self { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    /// All-one stream of `len` bits.
+    pub fn ones(len: usize) -> Self {
+        let mut s = Self::zeros(len);
+        for w in &mut s.words {
+            *w = u64::MAX;
+        }
+        s.mask_tail();
+        s
+    }
+
+    /// Build from a bool slice.
+    pub fn from_bits(bits: &[bool]) -> Self {
+        let mut s = Self::zeros(bits.len());
+        for (i, &b) in bits.iter().enumerate() {
+            if b {
+                s.set(i, true);
+            }
+        }
+        s
+    }
+
+    /// Build from raw words (caller guarantees tail bits beyond `len` may
+    /// be dirty — they are masked here).
+    pub fn from_words(words: Vec<u64>, len: usize) -> Result<Self> {
+        if words.len() != len.div_ceil(64) {
+            return Err(Error::LengthMismatch { lhs: words.len() * 64, rhs: len });
+        }
+        let mut s = Self { words, len };
+        s.mask_tail();
+        Ok(s)
+    }
+
+    /// Number of bits.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the stream has zero bits.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Raw packed words.
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Mutable raw packed words. Callers must not set bits past `len`
+    /// (call [`Self::mask_tail`] afterwards if unsure).
+    #[inline]
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
+    /// Clear any bits beyond `len` in the last word.
+    pub fn mask_tail(&mut self) {
+        let tail = self.len % 64;
+        if tail != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << tail) - 1;
+            }
+        }
+    }
+
+    /// Get bit `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Set bit `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let (w, b) = (i / 64, i % 64);
+        if v {
+            self.words[w] |= 1 << b;
+        } else {
+            self.words[w] &= !(1 << b);
+        }
+    }
+
+    /// Number of 1 bits.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// The probability this stream encodes: density of 1s.
+    pub fn value(&self) -> f64 {
+        if self.len == 0 {
+            return 0.0;
+        }
+        self.count_ones() as f64 / self.len as f64
+    }
+
+    /// Iterator over bits.
+    pub fn iter(&self) -> impl Iterator<Item = bool> + '_ {
+        (0..self.len).map(move |i| self.get(i))
+    }
+
+    fn check_len(&self, other: &Bitstream) -> Result<()> {
+        if self.len != other.len {
+            return Err(Error::LengthMismatch { lhs: self.len, rhs: other.len });
+        }
+        Ok(())
+    }
+
+    /// Bitwise AND — the uncorrelated SC multiplier.
+    pub fn and(&self, other: &Bitstream) -> Result<Bitstream> {
+        self.check_len(other)?;
+        let words = self.words.iter().zip(&other.words).map(|(a, b)| a & b).collect();
+        Ok(Bitstream { words, len: self.len })
+    }
+
+    /// Bitwise OR.
+    pub fn or(&self, other: &Bitstream) -> Result<Bitstream> {
+        self.check_len(other)?;
+        let words = self.words.iter().zip(&other.words).map(|(a, b)| a | b).collect();
+        Ok(Bitstream { words, len: self.len })
+    }
+
+    /// Bitwise XOR.
+    pub fn xor(&self, other: &Bitstream) -> Result<Bitstream> {
+        self.check_len(other)?;
+        let words = self.words.iter().zip(&other.words).map(|(a, b)| a ^ b).collect();
+        Ok(Bitstream { words, len: self.len })
+    }
+
+    /// Bitwise NOT — SC complement `1 − p`.
+    pub fn not(&self) -> Bitstream {
+        let mut s = Bitstream {
+            words: self.words.iter().map(|w| !w).collect(),
+            len: self.len,
+        };
+        s.mask_tail();
+        s
+    }
+
+    /// MUX select: `out = (sel & b) | (!sel & a)` — the SC weighted adder
+    /// when `sel` is uncorrelated with both inputs.
+    pub fn mux(&self, other: &Bitstream, sel: &Bitstream) -> Result<Bitstream> {
+        self.check_len(other)?;
+        self.check_len(sel)?;
+        let words = self
+            .words
+            .iter()
+            .zip(&other.words)
+            .zip(&sel.words)
+            .map(|((a, b), s)| (s & b) | (!s & a))
+            .collect();
+        Ok(Bitstream { words, len: self.len })
+    }
+
+    /// In-place AND into `self` (allocation-free hot path).
+    pub fn and_assign(&mut self, other: &Bitstream) -> Result<()> {
+        self.check_len(other)?;
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+        Ok(())
+    }
+
+    /// In-place MUX into `self` (`self = sel ? b : self`).
+    pub fn mux_assign(&mut self, b: &Bitstream, sel: &Bitstream) -> Result<()> {
+        self.check_len(b)?;
+        self.check_len(sel)?;
+        for ((a, b), s) in self.words.iter_mut().zip(&b.words).zip(&sel.words) {
+            *a = (s & b) | (!s & *a);
+        }
+        Ok(())
+    }
+}
+
+/// Reusable buffer pool so the coordinator's steady state allocates
+/// nothing per decision.
+#[derive(Debug, Default)]
+pub struct BitstreamPool {
+    free: Vec<Bitstream>,
+    len: usize,
+}
+
+impl BitstreamPool {
+    /// Pool handing out streams of `len` bits.
+    pub fn new(len: usize) -> Self {
+        Self { free: Vec::new(), len }
+    }
+
+    /// Bit length of pooled streams.
+    pub fn stream_len(&self) -> usize {
+        self.len
+    }
+
+    /// Number of pooled (idle) buffers.
+    pub fn idle(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Take a zeroed stream from the pool (or allocate).
+    pub fn take(&mut self) -> Bitstream {
+        match self.free.pop() {
+            Some(mut s) => {
+                for w in s.words_mut() {
+                    *w = 0;
+                }
+                s
+            }
+            None => Bitstream::zeros(self.len),
+        }
+    }
+
+    /// Return a stream to the pool. Streams of the wrong length are dropped.
+    pub fn put(&mut self, s: Bitstream) {
+        if s.len() == self.len {
+            self.free.push(s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_ones_and_value() {
+        assert_eq!(Bitstream::zeros(100).value(), 0.0);
+        assert_eq!(Bitstream::ones(100).value(), 1.0);
+        assert_eq!(Bitstream::ones(100).count_ones(), 100);
+        // Non-multiple-of-64 lengths keep the tail clean.
+        assert_eq!(Bitstream::ones(65).count_ones(), 65);
+        assert_eq!(Bitstream::ones(63).not().count_ones(), 0);
+    }
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut s = Bitstream::zeros(130);
+        s.set(0, true);
+        s.set(64, true);
+        s.set(129, true);
+        assert!(s.get(0) && s.get(64) && s.get(129));
+        assert!(!s.get(1) && !s.get(128));
+        assert_eq!(s.count_ones(), 3);
+        s.set(64, false);
+        assert_eq!(s.count_ones(), 2);
+    }
+
+    #[test]
+    fn from_bits_roundtrip() {
+        let bits = vec![true, false, true, true, false, false, true];
+        let s = Bitstream::from_bits(&bits);
+        let back: Vec<bool> = s.iter().collect();
+        assert_eq!(bits, back);
+    }
+
+    #[test]
+    fn gate_ops_match_boolean_semantics() {
+        let a = Bitstream::from_bits(&[true, true, false, false]);
+        let b = Bitstream::from_bits(&[true, false, true, false]);
+        assert_eq!(
+            a.and(&b).unwrap(),
+            Bitstream::from_bits(&[true, false, false, false])
+        );
+        assert_eq!(
+            a.or(&b).unwrap(),
+            Bitstream::from_bits(&[true, true, true, false])
+        );
+        assert_eq!(
+            a.xor(&b).unwrap(),
+            Bitstream::from_bits(&[false, true, true, false])
+        );
+        assert_eq!(a.not(), Bitstream::from_bits(&[false, false, true, true]));
+    }
+
+    #[test]
+    fn mux_selects_b_on_high() {
+        let a = Bitstream::from_bits(&[true, true, false, false]);
+        let b = Bitstream::from_bits(&[false, false, true, true]);
+        let sel = Bitstream::from_bits(&[false, true, false, true]);
+        // sel=0 -> a, sel=1 -> b
+        assert_eq!(
+            a.mux(&b, &sel).unwrap(),
+            Bitstream::from_bits(&[true, false, false, true])
+        );
+    }
+
+    #[test]
+    fn length_mismatch_is_error() {
+        let a = Bitstream::zeros(10);
+        let b = Bitstream::zeros(11);
+        assert!(a.and(&b).is_err());
+        assert!(a.mux(&a, &b).is_err());
+        let mut c = a.clone();
+        assert!(c.and_assign(&b).is_err());
+    }
+
+    #[test]
+    fn in_place_ops_match_pure_ops() {
+        let a = Bitstream::from_bits(&[true, false, true, true, false]);
+        let b = Bitstream::from_bits(&[true, true, false, true, false]);
+        let sel = Bitstream::from_bits(&[false, true, true, false, true]);
+        let mut x = a.clone();
+        x.and_assign(&b).unwrap();
+        assert_eq!(x, a.and(&b).unwrap());
+        let mut y = a.clone();
+        y.mux_assign(&b, &sel).unwrap();
+        assert_eq!(y, a.mux(&b, &sel).unwrap());
+    }
+
+    #[test]
+    fn pool_reuses_buffers() {
+        let mut pool = BitstreamPool::new(128);
+        let mut s = pool.take();
+        s.set(5, true);
+        pool.put(s);
+        assert_eq!(pool.idle(), 1);
+        let s2 = pool.take(); // must come back zeroed
+        assert_eq!(s2.count_ones(), 0);
+        assert_eq!(pool.idle(), 0);
+        // Wrong-length returns are dropped.
+        pool.put(Bitstream::zeros(64));
+        assert_eq!(pool.idle(), 0);
+    }
+
+    #[test]
+    fn from_words_validates_and_masks() {
+        assert!(Bitstream::from_words(vec![u64::MAX], 65).is_err());
+        let s = Bitstream::from_words(vec![u64::MAX], 10).unwrap();
+        assert_eq!(s.count_ones(), 10);
+    }
+}

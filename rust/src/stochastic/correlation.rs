@@ -1,0 +1,243 @@
+//! Stochastic-number correlation metrics — the paper's Methods section:
+//! Pearson correlation `ρ` and the stochastic-computing correlation `SCC`
+//! of Alaghi & Hayes, both computed from the 2×2 pair counts of two
+//! streams. Used for the Fig. 3c/d and S10c/d correlation matrices.
+
+
+use crate::{Error, Result};
+
+use super::Bitstream;
+
+/// Counts of (1,1), (1,0), (0,1), (0,0) bit pairs: `a, b, c, d` in the
+/// paper's notation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PairCounts {
+    /// # of positions where both streams are 1.
+    pub a: u64,
+    /// # of positions where x=1, y=0.
+    pub b: u64,
+    /// # of positions where x=0, y=1.
+    pub c: u64,
+    /// # of positions where both are 0.
+    pub d: u64,
+}
+
+impl PairCounts {
+    /// Total pairs.
+    pub fn n(&self) -> u64 {
+        self.a + self.b + self.c + self.d
+    }
+}
+
+/// Count bit pairs between two equal-length streams (word-parallel).
+pub fn pair_counts(x: &Bitstream, y: &Bitstream) -> Result<PairCounts> {
+    if x.len() != y.len() {
+        return Err(Error::LengthMismatch { lhs: x.len(), rhs: y.len() });
+    }
+    let mut a = 0u64;
+    let mut b = 0u64;
+    let mut c = 0u64;
+    for (&wx, &wy) in x.words().iter().zip(y.words()) {
+        a += (wx & wy).count_ones() as u64;
+        b += (wx & !wy).count_ones() as u64;
+        c += (!wx & wy).count_ones() as u64;
+    }
+    let n = x.len() as u64;
+    let d = n - a - b - c;
+    Ok(PairCounts { a, b, c, d })
+}
+
+/// Pearson correlation of two bitstreams (paper Methods, Eq. for ρ):
+/// `(ad − bc) / sqrt((a+b)(a+c)(b+d)(c+d))`. Returns 0 for degenerate
+/// (constant) streams.
+pub fn pearson(x: &Bitstream, y: &Bitstream) -> Result<f64> {
+    let pc = pair_counts(x, y)?;
+    Ok(pearson_from_counts(&pc))
+}
+
+/// Pearson ρ from pre-computed pair counts.
+pub fn pearson_from_counts(pc: &PairCounts) -> f64 {
+    let (a, b, c, d) = (pc.a as f64, pc.b as f64, pc.c as f64, pc.d as f64);
+    let denom = ((a + b) * (a + c) * (b + d) * (c + d)).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        (a * d - b * c) / denom
+    }
+}
+
+/// SC correlation (SCC) of Alaghi & Hayes (paper Methods):
+///
+/// ```text
+/// SCC = (ad − bc) / (n·min(a+b, a+c) − (a+b)(a+c))        if ad ≥ bc
+///     = (ad − bc) / ((a+b)(a+c) − n·max(a − d, 0))         otherwise
+/// ```
+///
+/// `+1` means maximal positive correlation (overlapping streams), `−1`
+/// maximal negative, `0` independence. Degenerate denominators yield 0.
+pub fn scc(x: &Bitstream, y: &Bitstream) -> Result<f64> {
+    let pc = pair_counts(x, y)?;
+    Ok(scc_from_counts(&pc))
+}
+
+/// SCC from pre-computed pair counts.
+pub fn scc_from_counts(pc: &PairCounts) -> f64 {
+    let (a, b, c, d) = (pc.a as f64, pc.b as f64, pc.c as f64, pc.d as f64);
+    let n = a + b + c + d;
+    let num = a * d - b * c;
+    let denom = if num >= 0.0 {
+        n * (a + b).min(a + c) - (a + b) * (a + c)
+    } else {
+        (a + b) * (a + c) - n * (a - d).max(0.0)
+    };
+    if denom == 0.0 {
+        0.0
+    } else {
+        num / denom
+    }
+}
+
+/// Pairwise correlation matrices over a set of named streams — the
+/// Fig. 3c/d and Fig. S10c/d artefacts.
+#[derive(Debug, Clone)]
+pub struct CorrelationReport {
+    /// Node names in matrix order.
+    pub names: Vec<String>,
+    /// Pearson ρ matrix (row-major).
+    pub pearson: Vec<Vec<f64>>,
+    /// SCC matrix (row-major).
+    pub scc: Vec<Vec<f64>>,
+}
+
+impl CorrelationReport {
+    /// Compute both matrices over `streams`.
+    pub fn compute(names: &[&str], streams: &[&Bitstream]) -> Result<Self> {
+        assert_eq!(names.len(), streams.len());
+        let k = streams.len();
+        let mut pm = vec![vec![0.0; k]; k];
+        let mut sm = vec![vec![0.0; k]; k];
+        for i in 0..k {
+            for j in 0..k {
+                if i == j {
+                    pm[i][j] = 1.0;
+                    sm[i][j] = 1.0;
+                } else {
+                    let pc = pair_counts(streams[i], streams[j])?;
+                    pm[i][j] = pearson_from_counts(&pc);
+                    sm[i][j] = scc_from_counts(&pc);
+                }
+            }
+        }
+        Ok(Self {
+            names: names.iter().map(|s| s.to_string()).collect(),
+            pearson: pm,
+            scc: sm,
+        })
+    }
+
+    /// Render as an aligned text table (used by the figure CLI).
+    pub fn to_table(&self) -> String {
+        let mut out = String::new();
+        for (title, m) in [("Pearson ρ", &self.pearson), ("SCC", &self.scc)] {
+            out.push_str(&format!("{title}:\n        "));
+            for n in &self.names {
+                out.push_str(&format!("{n:>8}"));
+            }
+            out.push('\n');
+            for (i, row) in m.iter().enumerate() {
+                out.push_str(&format!("{:>8}", self.names[i]));
+                for v in row {
+                    out.push_str(&format!("{v:>8.3}"));
+                }
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bs(bits: &[u8]) -> Bitstream {
+        Bitstream::from_bits(&bits.iter().map(|&b| b == 1).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn pair_counts_basic() {
+        let x = bs(&[1, 1, 0, 0, 1]);
+        let y = bs(&[1, 0, 1, 0, 1]);
+        let pc = pair_counts(&x, &y).unwrap();
+        assert_eq!(pc, PairCounts { a: 2, b: 1, c: 1, d: 1 });
+        assert_eq!(pc.n(), 5);
+    }
+
+    #[test]
+    fn identical_streams_have_unit_correlation() {
+        let x = bs(&[1, 0, 1, 1, 0, 0, 1, 0]);
+        assert!((pearson(&x, &x).unwrap() - 1.0).abs() < 1e-12);
+        assert!((scc(&x, &x).unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn complementary_streams_have_negative_correlation() {
+        let x = bs(&[1, 0, 1, 1, 0, 0, 1, 0]);
+        let y = x.not();
+        assert!((pearson(&x, &y).unwrap() + 1.0).abs() < 1e-12);
+        assert!((scc(&x, &y).unwrap() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlapping_streams_scc_is_plus_one() {
+        // y ⊂ x (comonotone quantile encoding): SCC must be +1 even though
+        // Pearson is < 1.
+        let x = bs(&[1, 1, 1, 1, 0, 0, 0, 0]);
+        let y = bs(&[1, 1, 0, 0, 0, 0, 0, 0]);
+        assert!((scc(&x, &y).unwrap() - 1.0).abs() < 1e-12);
+        assert!(pearson(&x, &y).unwrap() < 1.0);
+    }
+
+    #[test]
+    fn degenerate_streams_give_zero() {
+        let x = bs(&[1, 1, 1, 1]);
+        let y = bs(&[1, 0, 1, 0]);
+        assert_eq!(pearson(&x, &y).unwrap(), 0.0);
+        assert_eq!(scc(&x, &y).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn metrics_bounded() {
+        // Exhaustive over all 6-bit stream pairs: ρ, SCC ∈ [−1, 1].
+        for xv in 0u8..64 {
+            for yv in 0u8..64 {
+                let x = bs(&(0..6).map(|i| (xv >> i) & 1).collect::<Vec<_>>());
+                let y = bs(&(0..6).map(|i| (yv >> i) & 1).collect::<Vec<_>>());
+                let p = pearson(&x, &y).unwrap();
+                let s = scc(&x, &y).unwrap();
+                assert!((-1.0..=1.0).contains(&p), "rho {p} for {xv},{yv}");
+                assert!((-1.0 - 1e-9..=1.0 + 1e-9).contains(&s), "scc {s} for {xv},{yv}");
+            }
+        }
+    }
+
+    #[test]
+    fn length_mismatch_rejected() {
+        let x = Bitstream::zeros(8);
+        let y = Bitstream::zeros(9);
+        assert!(pair_counts(&x, &y).is_err());
+    }
+
+    #[test]
+    fn report_has_unit_diagonal_and_is_symmetric_enough() {
+        let x = bs(&[1, 0, 1, 1, 0, 0, 1, 0]);
+        let y = bs(&[1, 1, 0, 1, 0, 1, 0, 0]);
+        let r = CorrelationReport::compute(&["x", "y"], &[&x, &y]).unwrap();
+        assert_eq!(r.pearson[0][0], 1.0);
+        assert_eq!(r.scc[1][1], 1.0);
+        assert!((r.pearson[0][1] - r.pearson[1][0]).abs() < 1e-12);
+        let table = r.to_table();
+        assert!(table.contains("Pearson"));
+        assert!(table.contains("SCC"));
+    }
+}

@@ -1,0 +1,184 @@
+//! LFSR-based stochastic number generation — the *baseline* encoder.
+//!
+//! The paper's introduction contrasts memristor SNEs with classic
+//! linear-feedback-shift-register stochastic circuits, which need careful
+//! pre-/post-processing because LFSR streams sharing one register (or with
+//! related seeds) carry **improper correlations** that corrupt SC results.
+//! We implement a Fibonacci LFSR encoder so the ablation benches can
+//! measure exactly that failure mode (and its hardware-cost difference:
+//! an n-bit LFSR + comparator per stream vs one memristor + comparator).
+
+
+use crate::{Error, Result};
+
+use super::Bitstream;
+
+/// Maximal-length tap masks for Fibonacci LFSRs (XOR form), indexed by
+/// register width. Source: standard primitive-polynomial tables.
+const TAPS: &[(u32, u64)] = &[
+    (8, 0b1011_1000),                  // x^8 + x^6 + x^5 + x^4 + 1
+    (16, 0b1101_0000_0000_1000),       // x^16 + x^15 + x^13 + x^4 + 1
+    (24, 0xE1_0000),                   // x^24 + x^23 + x^22 + x^17 + 1
+    (32, 0x8020_0003),                 // x^32 + x^22 + x^2 + x + 1
+];
+
+/// A Fibonacci LFSR over `width` bits.
+#[derive(Debug, Clone)]
+pub struct Lfsr {
+    state: u64,
+    taps: u64,
+    width: u32,
+}
+
+impl Lfsr {
+    /// Create an LFSR of the given width (8, 16, 24 or 32) and nonzero seed.
+    pub fn new(width: u32, seed: u64) -> Result<Self> {
+        let taps = TAPS
+            .iter()
+            .find(|&&(w, _)| w == width)
+            .map(|&(_, t)| t)
+            .ok_or_else(|| Error::Config(format!("unsupported LFSR width {width}")))?;
+        let mask = (1u64 << width) - 1;
+        let state = seed & mask;
+        if state == 0 {
+            return Err(Error::Config("LFSR seed must be nonzero".into()));
+        }
+        Ok(Self { state, taps, width })
+    }
+
+    /// Advance one step and return the new state.
+    pub fn step(&mut self) -> u64 {
+        let fb = (self.state & self.taps).count_ones() as u64 & 1;
+        self.state = ((self.state << 1) | fb) & ((1u64 << self.width) - 1);
+        if self.state == 0 {
+            // Unreachable for maximal-length taps, but stay safe.
+            self.state = 1;
+        }
+        self.state
+    }
+
+    /// Current state.
+    pub fn state(&self) -> u64 {
+        self.state
+    }
+
+    /// Register width.
+    pub fn width(&self) -> u32 {
+        self.width
+    }
+
+    /// Period of a maximal-length LFSR: `2^width − 1`.
+    pub fn period(&self) -> u64 {
+        (1u64 << self.width) - 1
+    }
+}
+
+/// Stochastic number encoder driven by an LFSR + digital comparator.
+#[derive(Debug, Clone)]
+pub struct LfsrEncoder {
+    lfsr: Lfsr,
+}
+
+impl LfsrEncoder {
+    /// Encoder with its own register.
+    pub fn new(width: u32, seed: u64) -> Result<Self> {
+        Ok(Self { lfsr: Lfsr::new(width, seed)? })
+    }
+
+    /// Encode `p` as `n_bits`: bit_k = (state_k < p·2^width).
+    pub fn encode(&mut self, p: f64, n_bits: usize) -> Result<Bitstream> {
+        Error::check_prob("p", p)?;
+        let threshold = (p * (self.lfsr.period() + 1) as f64) as u64;
+        let mut out = Bitstream::zeros(n_bits);
+        for i in 0..n_bits {
+            if self.lfsr.step() < threshold {
+                out.set(i, true);
+            }
+        }
+        Ok(out)
+    }
+
+    /// The classic shared-register pitfall: encode two probabilities from
+    /// the *same* LFSR states (one comparator each). The streams are
+    /// maximally correlated — exactly the "improper correlation" the paper
+    /// says corrupts uncorrelated SC arithmetic.
+    pub fn encode_shared(&mut self, ps: &[f64], n_bits: usize) -> Result<Vec<Bitstream>> {
+        for &p in ps {
+            Error::check_prob("p", p)?;
+        }
+        let thresholds: Vec<u64> =
+            ps.iter().map(|&p| (p * (self.lfsr.period() + 1) as f64) as u64).collect();
+        let mut outs: Vec<Bitstream> = ps.iter().map(|_| Bitstream::zeros(n_bits)).collect();
+        for i in 0..n_bits {
+            let s = self.lfsr.step();
+            for (out, &t) in outs.iter_mut().zip(&thresholds) {
+                if s < t {
+                    out.set(i, true);
+                }
+            }
+        }
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stochastic::scc;
+
+    #[test]
+    fn lfsr_is_maximal_length() {
+        let mut l = Lfsr::new(16, 0xACE1).unwrap();
+        let start = l.state();
+        let mut period = 0u64;
+        loop {
+            l.step();
+            period += 1;
+            if l.state() == start {
+                break;
+            }
+            assert!(period <= l.period(), "period exceeded 2^16-1");
+        }
+        assert_eq!(period, 65_535);
+    }
+
+    #[test]
+    fn encoder_hits_probability() {
+        let mut e = LfsrEncoder::new(16, 0xBEEF).unwrap();
+        for &p in &[0.25, 0.5, 0.72] {
+            let s = e.encode(p, 20_000).unwrap();
+            assert!((s.value() - p).abs() < 0.02, "p={p} got {}", s.value());
+        }
+    }
+
+    #[test]
+    fn shared_register_streams_are_improperly_correlated() {
+        let mut e = LfsrEncoder::new(16, 0x1234).unwrap();
+        let ss = e.encode_shared(&[0.5, 0.6], 10_000).unwrap();
+        // The defect under test: SCC ≈ +1, so AND(x,y) = min, not product.
+        let c = scc(&ss[0], &ss[1]).unwrap();
+        assert!(c > 0.9, "shared-LFSR SCC should be ~1, got {c}");
+        let and = ss[0].and(&ss[1]).unwrap();
+        assert!((and.value() - 0.5).abs() < 0.03, "AND acted like min()");
+        assert!((and.value() - 0.3).abs() > 0.1, "AND should NOT equal product");
+    }
+
+    #[test]
+    fn distinct_seeds_reduce_but_dont_eliminate_structure() {
+        // Two LFSRs with different seeds: same sequence, shifted phase.
+        let mut e1 = LfsrEncoder::new(16, 0x0001).unwrap();
+        let mut e2 = LfsrEncoder::new(16, 0x8011).unwrap();
+        let s1 = e1.encode(0.5, 20_000).unwrap();
+        let s2 = e2.encode(0.5, 20_000).unwrap();
+        let c = scc(&s1, &s2).unwrap();
+        // Phase-shifted m-sequences decorrelate fairly well…
+        assert!(c.abs() < 0.2, "scc {c}");
+    }
+
+    #[test]
+    fn invalid_construction_rejected() {
+        assert!(Lfsr::new(12, 1).is_err());
+        assert!(Lfsr::new(16, 0).is_err());
+        assert!(LfsrEncoder::new(16, 1).unwrap().encode(1.5, 10).is_err());
+    }
+}

@@ -1,0 +1,21 @@
+//! Stochastic-number machinery: packed bitstreams, memristor-backed
+//! stochastic number encoders (SNEs), correlation metrics, and the LFSR
+//! baseline encoder the paper's introduction argues against.
+//!
+//! A *stochastic number* encodes a probability `p` as a stream of `n`
+//! Bernoulli bits whose density of 1s is `p` (unipolar format). Boolean
+//! gates over such streams compute arithmetic on the probabilities — which
+//! gate computes what depends on the *correlation* between the operand
+//! streams (Table S1), so correlation control is a first-class concern:
+//! one SNE produces correlated streams, parallel SNEs produce
+//! uncorrelated streams.
+
+mod bitstream;
+mod correlation;
+mod lfsr;
+mod sne;
+
+pub use bitstream::{Bitstream, BitstreamPool};
+pub use correlation::{pair_counts, pearson, scc, CorrelationReport, PairCounts};
+pub use lfsr::{Lfsr, LfsrEncoder};
+pub use sne::{Sne, SneBank, SneConfig};

@@ -1,0 +1,457 @@
+//! Stochastic number encoders (SNEs) — Fig. 2a/S5.
+//!
+//! An SNE is a volatile memristor plus a comparator chain. Pulsing the
+//! memristor at `V_in` yields stochastic switching; the comparator
+//! binarises the output against `V_ref`. Two regimes:
+//!
+//! * **Uncorrelated** — parallel SNEs (one memristor each) produce
+//!   independent streams; the encoded probability is set by `V_in`
+//!   (Fig. 2b: `P_unc = σ(3.56·(V_in − 2.24))`).
+//! * **Correlated** — one SNE feeds several comparators with different
+//!   `V_ref`; all streams binarise the *same* analog sample, so they are
+//!   maximally positively correlated (SCC → +1); the probability is set by
+//!   `V_ref` (Fig. 2c: `P_corr = 1 − σ(11.5·(V_ref − 0.57))`).
+//!
+//! The paper's operators "maximise the sharing of the SNEs"; [`SneBank`]
+//! is that shared pool, with wear rotation and an energy/time ledger.
+
+
+use crate::device::{DeviceParams, EnergyTimeLedger, Memristor, WearPolicy};
+use crate::util::Rng;
+use crate::{Error, Result};
+
+use super::Bitstream;
+
+/// SNE/bank configuration.
+#[derive(Debug, Clone)]
+pub struct SneConfig {
+    /// Bits per stochastic number. Paper demos use 100.
+    pub n_bits: usize,
+    /// Device parameter set.
+    pub params: DeviceParams,
+    /// Number of physical SNEs in the bank.
+    pub n_snes: usize,
+    /// What to do when a device exceeds its endurance budget.
+    pub wear_policy: WearPolicy,
+}
+
+impl Default for SneConfig {
+    fn default() -> Self {
+        Self {
+            n_bits: 100,
+            params: DeviceParams::default(),
+            n_snes: 16,
+            wear_policy: WearPolicy::Rotate,
+        }
+    }
+}
+
+impl SneConfig {
+    /// Validate the configuration.
+    pub fn validate(&self) -> Result<()> {
+        if self.n_bits == 0 {
+            return Err(Error::Config("n_bits must be > 0".into()));
+        }
+        if self.n_snes == 0 {
+            return Err(Error::Config("n_snes must be > 0".into()));
+        }
+        self.params.validate()
+    }
+}
+
+/// One stochastic number encoder.
+#[derive(Debug, Clone)]
+pub struct Sne {
+    device: Memristor,
+}
+
+impl Sne {
+    /// Wrap a memristor as an SNE.
+    pub fn new(device: Memristor) -> Self {
+        Self { device }
+    }
+
+    /// The underlying device.
+    pub fn device(&self) -> &Memristor {
+        &self.device
+    }
+
+    /// Pulse amplitude that encodes probability `p` (uncorrelated mode).
+    pub fn voltage_for(&self, p: f64) -> f64 {
+        self.device.voltage_for_probability(p)
+    }
+
+    /// Comparator reference that encodes probability `p` (correlated mode):
+    /// `V_ref` such that `P(analog_out > V_ref) = p` given the device
+    /// switched (inverse of the Fig. 2c curve).
+    pub fn ref_for(&self, p: f64) -> f64 {
+        let d = self.device.params();
+        let q = p.clamp(1e-9, 1.0 - 1e-9);
+        d.analog_out_center + d.analog_out_scale * ((1.0 - q) / q).ln()
+    }
+
+    /// Encode `p` as an `n_bits` uncorrelated stream by pulsing the device.
+    ///
+    /// With `drift_coupling == 0` (the default, ideal-device setting) the
+    /// per-pulse switching is i.i.d. Bernoulli with exactly the Fig. 2b
+    /// probability, so we take a vectorised fast path; otherwise we walk
+    /// the full pulse-by-pulse device model.
+    pub fn encode(
+        &mut self,
+        p: f64,
+        n_bits: usize,
+        ledger: &mut EnergyTimeLedger,
+        rng: &mut Rng,
+    ) -> Result<Bitstream> {
+        Error::check_prob("p", p)?;
+        let energy = self.device.params().switch_energy_nj;
+        let mut out = Bitstream::zeros(n_bits);
+        if self.device.params().drift_coupling == 0.0 {
+            // Fast path: per-pulse switching is i.i.d. Bernoulli with the
+            // Fig. 2b probability, so generate whole 64-bit words by the
+            // binary-expansion construction: with prob quantised to
+            // q/2^16, z starts at 0 and folds one random word per bit of
+            // q (LSB→MSB): z = bit ? z|r : z&!r, giving P(z_k=1) = q/2^16
+            // with ≤16 RNG draws per word instead of 64 (§Perf L3-2).
+            let v_in = self.voltage_for(p);
+            let prob = self.device.switch_probability(v_in);
+            let q = (prob * 65536.0).round() as u32; // 2^-16 resolution
+            if q >= 65536 {
+                for w in out.words_mut() {
+                    *w = u64::MAX;
+                }
+            } else if q > 0 {
+                let lo = q.trailing_zeros(); // z stays 0 below the lowest set bit
+                for w in out.words_mut() {
+                    let mut z = 0u64;
+                    for i in lo..16 {
+                        let r = rng.next_u64();
+                        z = if (q >> i) & 1 == 1 { z | r } else { z & !r };
+                    }
+                    *w = z;
+                }
+            }
+            out.mask_tail();
+            let switches = out.count_ones();
+            self.device.record_switches(switches as u64);
+            ledger.pulses += n_bits as u64;
+            ledger.switch_events += switches as u64;
+            ledger.energy_nj += switches as f64 * energy;
+        } else {
+            let v_in = self.voltage_for(p);
+            for i in 0..n_bits {
+                let ev = self.device.pulse(v_in, rng);
+                ledger.record_pulse(ev.switched, ev.energy_nj);
+                if ev.switched {
+                    out.set(i, true);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Encode several probabilities as **maximally correlated** streams
+    /// from this single SNE: every bit slot shares one analog sample,
+    /// binarised against per-stream references.
+    pub fn encode_correlated(
+        &mut self,
+        probs: &[f64],
+        n_bits: usize,
+        ledger: &mut EnergyTimeLedger,
+        rng: &mut Rng,
+    ) -> Result<Vec<Bitstream>> {
+        for &p in probs {
+            Error::check_prob("p", p)?;
+        }
+        let mut outs: Vec<Bitstream> = probs.iter().map(|_| Bitstream::zeros(n_bits)).collect();
+        if self.device.params().drift_coupling == 0.0 {
+            // Fast path (§Perf L3-3): driven hard, the device switches
+            // every slot and the analog node is an i.i.d. logistic
+            // sample; `bit_i = analog > ref_for(p_i)` is comonotone in
+            // the sample's CDF value u, i.e. exactly `bit_i = u < p_i`
+            // with ONE shared uniform per slot. Same joint law as the
+            // pulse-by-pulse model, ~25× cheaper.
+            let thresholds: Vec<u64> =
+                probs.iter().map(|&p| (p * u64::MAX as f64) as u64).collect();
+            // Word-at-a-time: build all streams' words in registers to
+            // avoid per-bit bounds checks.
+            let n_words = n_bits.div_ceil(64);
+            let mut acc = vec![0u64; thresholds.len()];
+            for w in 0..n_words {
+                acc.iter_mut().for_each(|a| *a = 0);
+                for k in 0..64 {
+                    let u = rng.next_u64();
+                    for (a, &thr) in acc.iter_mut().zip(&thresholds) {
+                        *a |= ((u <= thr) as u64) << k;
+                    }
+                }
+                for (out, &a) in outs.iter_mut().zip(&acc) {
+                    out.words_mut()[w] = a;
+                }
+            }
+            for out in outs.iter_mut() {
+                out.mask_tail();
+            }
+            let energy = self.device.params().switch_energy_nj;
+            self.device.record_switches(n_bits as u64);
+            ledger.pulses += n_bits as u64;
+            ledger.switch_events += n_bits as u64;
+            ledger.energy_nj += n_bits as f64 * energy;
+        } else {
+            let refs: Vec<f64> = probs.iter().map(|&p| self.ref_for(p)).collect();
+            // Drive hard so the device switches every slot: the encoded
+            // probability lives entirely in the comparator references.
+            let v_drive = self.voltage_for(1.0 - 1e-9);
+            for i in 0..n_bits {
+                let ev = self.device.pulse(v_drive, rng);
+                ledger.record_pulse(ev.switched, ev.energy_nj);
+                if ev.switched {
+                    for (out, &r) in outs.iter_mut().zip(&refs) {
+                        if ev.analog_out > r {
+                            out.set(i, true);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(outs)
+    }
+
+    /// Is the device worn out?
+    pub fn is_worn(&self) -> bool {
+        self.device.is_worn()
+    }
+}
+
+/// A pool of SNEs with an owned RNG, wear rotation and a shared ledger.
+///
+/// Streams drawn from *different* `encode_*` calls use distinct SNEs in
+/// round-robin, mirroring the paper's parallel-SNE uncorrelated wiring.
+pub struct SneBank {
+    config: SneConfig,
+    snes: Vec<Sne>,
+    spares: Vec<Sne>,
+    next: usize,
+    ledger: EnergyTimeLedger,
+    rng: Rng,
+}
+
+impl SneBank {
+    /// Build a bank from a config and seed. Fabricates `2×n_snes`
+    /// devices: half active, half spares for wear rotation.
+    pub fn new(config: SneConfig, seed: u64) -> Result<Self> {
+        config.validate()?;
+        let mut rng = Rng::seeded(seed);
+        let mk = |rng: &mut Rng| Sne::new(Memristor::sampled(config.params.clone(), rng));
+        let snes = (0..config.n_snes).map(|_| mk(&mut rng)).collect();
+        let spares = (0..config.n_snes).map(|_| mk(&mut rng)).collect();
+        Ok(Self { config, snes, spares, next: 0, ledger: EnergyTimeLedger::new(), rng })
+    }
+
+    /// Default-config bank from a seed.
+    pub fn seeded(seed: u64) -> Self {
+        Self::new(SneConfig::default(), seed).expect("default config is valid")
+    }
+
+    /// Bank configuration.
+    pub fn config(&self) -> &SneConfig {
+        &self.config
+    }
+
+    /// The shared energy/time ledger.
+    pub fn ledger(&self) -> &EnergyTimeLedger {
+        &self.ledger
+    }
+
+    /// Stream length this bank encodes.
+    pub fn n_bits(&self) -> usize {
+        self.config.n_bits
+    }
+
+    /// Count of active (non-spare) SNEs.
+    pub fn n_snes(&self) -> usize {
+        self.snes.len()
+    }
+
+    /// Remaining spares.
+    pub fn n_spares(&self) -> usize {
+        self.spares.len()
+    }
+
+    fn next_sne(&mut self) -> Result<usize> {
+        let idx = self.next % self.snes.len();
+        self.next = self.next.wrapping_add(1);
+        if self.snes[idx].is_worn() {
+            match self.config.wear_policy {
+                WearPolicy::Ignore => {}
+                WearPolicy::Rotate => {
+                    if let Some(spare) = self.spares.pop() {
+                        self.snes[idx] = spare;
+                    } else {
+                        let dev = self.snes[idx].device();
+                        return Err(Error::DeviceWorn { row: 0, col: idx, cycles: dev.cycles() });
+                    }
+                }
+                WearPolicy::Fail => {
+                    let dev = self.snes[idx].device();
+                    return Err(Error::DeviceWorn { row: 0, col: idx, cycles: dev.cycles() });
+                }
+            }
+        }
+        Ok(idx)
+    }
+
+    /// Encode `p` on the next SNE (uncorrelated w.r.t. other calls).
+    pub fn encode(&mut self, p: f64) -> Result<Bitstream> {
+        let n_bits = self.config.n_bits;
+        let idx = self.next_sne()?;
+        let Self { snes, ledger, rng, .. } = self;
+        snes[idx].encode(p, n_bits, ledger, rng)
+    }
+
+    /// Encode `p` with an explicit bit length.
+    pub fn encode_with_len(&mut self, p: f64, n_bits: usize) -> Result<Bitstream> {
+        let idx = self.next_sne()?;
+        let Self { snes, ledger, rng, .. } = self;
+        snes[idx].encode(p, n_bits, ledger, rng)
+    }
+
+    /// Encode a group of mutually **uncorrelated** streams (parallel SNEs).
+    pub fn encode_group(&mut self, probs: &[f64]) -> Result<Vec<Bitstream>> {
+        probs.iter().map(|&p| self.encode(p)).collect()
+    }
+
+    /// Encode a group of maximally **correlated** streams (one shared SNE).
+    pub fn encode_correlated(&mut self, probs: &[f64]) -> Result<Vec<Bitstream>> {
+        let n_bits = self.config.n_bits;
+        let idx = self.next_sne()?;
+        let Self { snes, ledger, rng, .. } = self;
+        snes[idx].encode_correlated(probs, n_bits, ledger, rng)
+    }
+
+    /// Mark one complete decision on the ledger (advances the virtual
+    /// hardware clock by one stream time — all SNEs pulse in parallel).
+    pub fn finish_decision(&mut self) {
+        self.ledger.record_decision(self.config.n_bits);
+    }
+
+    /// Direct access to the RNG (used by gates needing auxiliary select
+    /// streams and by tests).
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stochastic::{pearson, scc};
+
+    #[test]
+    fn encode_hits_target_probability() {
+        let mut bank = SneBank::new(
+            SneConfig { n_bits: 20_000, ..Default::default() },
+            7,
+        )
+        .unwrap();
+        for &p in &[0.05, 0.3, 0.57, 0.72, 0.95] {
+            let s = bank.encode(p).unwrap();
+            assert!((s.value() - p).abs() < 0.015, "p={p} got {}", s.value());
+        }
+    }
+
+    #[test]
+    fn parallel_streams_are_uncorrelated() {
+        let mut bank =
+            SneBank::new(SneConfig { n_bits: 20_000, ..Default::default() }, 8).unwrap();
+        let g = bank.encode_group(&[0.5, 0.5]).unwrap();
+        let rho = pearson(&g[0], &g[1]).unwrap();
+        assert!(rho.abs() < 0.03, "pearson {rho}");
+        let s = scc(&g[0], &g[1]).unwrap();
+        assert!(s.abs() < 0.05, "scc {s}");
+    }
+
+    #[test]
+    fn shared_sne_streams_are_maximally_correlated() {
+        let mut bank =
+            SneBank::new(SneConfig { n_bits: 20_000, ..Default::default() }, 9).unwrap();
+        let g = bank.encode_correlated(&[0.3, 0.7]).unwrap();
+        assert!((g[0].value() - 0.3).abs() < 0.02);
+        assert!((g[1].value() - 0.7).abs() < 0.02);
+        // Comonotone: the 0.3-stream is a subset of the 0.7-stream.
+        let s = scc(&g[0], &g[1]).unwrap();
+        assert!(s > 0.95, "scc {s}");
+        let and = g[0].and(&g[1]).unwrap();
+        assert!((and.value() - 0.3).abs() < 0.02, "min() law broken");
+    }
+
+    #[test]
+    fn correlated_refs_invert_fig2c() {
+        let bank = SneBank::seeded(1);
+        let sne = &bank.snes[0];
+        for &p in &[0.1, 0.5, 0.9] {
+            let vref = sne.ref_for(p);
+            // Fig. 2c: P = 1 − σ(11.5 (V_ref − 0.57)) (nominal device).
+            let d2d = sne.device().vth_mu() - 2.08; // ref_for is per-device
+            let _ = d2d;
+            let p_back = 1.0 - 1.0 / (1.0 + (-(vref - 0.57) / (1.0 / 11.5)).exp());
+            assert!((p_back - p).abs() < 1e-9, "p={p} back={p_back}");
+        }
+    }
+
+    #[test]
+    fn wear_rotation_swaps_in_spares() {
+        let params = DeviceParams { endurance_cycles: 50, ..Default::default() };
+        let cfg = SneConfig { n_bits: 100, n_snes: 1, params, ..Default::default() };
+        let mut bank = SneBank::new(cfg, 3).unwrap();
+        assert_eq!(bank.n_spares(), 1);
+        // Each 100-bit encode at p=0.99 burns ~99 cycles > the 50 budget.
+        bank.encode(0.99).unwrap();
+        bank.encode(0.99).unwrap(); // triggers rotation onto the spare
+        assert_eq!(bank.n_spares(), 0);
+        // The spare is now worn too and nothing is left -> error.
+        let err = bank.encode(0.99).unwrap_err();
+        assert!(matches!(err, Error::DeviceWorn { .. }));
+    }
+
+    #[test]
+    fn wear_fail_policy_errors_immediately() {
+        let params = DeviceParams { endurance_cycles: 10, ..Default::default() };
+        let cfg = SneConfig {
+            n_bits: 100,
+            n_snes: 1,
+            params,
+            wear_policy: WearPolicy::Fail,
+        };
+        let mut bank = SneBank::new(cfg, 4).unwrap();
+        bank.encode(0.99).unwrap();
+        assert!(bank.encode(0.99).is_err());
+    }
+
+    #[test]
+    fn ledger_tracks_energy_and_time() {
+        let mut bank = SneBank::seeded(5);
+        let s = bank.encode(0.5).unwrap();
+        bank.finish_decision();
+        let l = bank.ledger();
+        assert_eq!(l.pulses, 100);
+        assert_eq!(l.switch_events as usize, s.count_ones());
+        assert!((l.clock.elapsed_ms() - 0.4).abs() < 1e-12);
+        assert!((l.energy_nj - 0.16 * s.count_ones() as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn invalid_probability_rejected() {
+        let mut bank = SneBank::seeded(6);
+        assert!(bank.encode(1.2).is_err());
+        assert!(bank.encode(-0.1).is_err());
+        assert!(bank.encode_correlated(&[0.5, 1.5]).is_err());
+    }
+
+    #[test]
+    fn config_validation() {
+        assert!(SneConfig { n_bits: 0, ..Default::default() }.validate().is_err());
+        assert!(SneConfig { n_snes: 0, ..Default::default() }.validate().is_err());
+        assert!(SneConfig::default().validate().is_ok());
+    }
+}

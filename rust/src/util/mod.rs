@@ -1,0 +1,18 @@
+//! In-tree utility substrates.
+//!
+//! The build environment is fully offline with a minimal vendored crate
+//! set, so the pieces a crates.io project would pull in (`rand`,
+//! `serde`/`toml`, `clap`, `proptest`) are implemented here instead:
+//!
+//! * [`rng`] — seedable xoshiro256++ PRNG with normal/logistic samplers.
+//! * [`stats`] — mean/std/quantile/histogram helpers shared by figures.
+//! * [`tomlmini`] — the TOML subset used by the config system.
+//! * [`proptest_lite`] — randomized property-test driver for the
+//!   invariant suites.
+
+pub mod proptest_lite;
+pub mod rng;
+pub mod stats;
+pub mod tomlmini;
+
+pub use rng::Rng;

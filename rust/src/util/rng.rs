@@ -1,0 +1,235 @@
+//! Seedable PRNG: xoshiro256++ seeded through SplitMix64, plus the
+//! distribution samplers the device model needs (normal, logistic) and
+//! small conveniences (Bernoulli, ranges, index sampling).
+//!
+//! xoshiro256++ passes BigCrush, is trivially seedable/clonable, and emits
+//! one `u64` per 4 rotate/xor ops — fast enough that bit-stream encoding
+//! is memory-bound, not RNG-bound (see EXPERIMENTS.md §Perf).
+
+/// Seedable, clonable PRNG (xoshiro256++).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second Box-Muller normal sample.
+    spare_normal: Option<f64>,
+}
+
+impl Rng {
+    /// Seed via SplitMix64 expansion (any seed, including 0, is fine).
+    pub fn seeded(seed: u64) -> Self {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Self { s: [next(), next(), next(), next()], spare_normal: None }
+    }
+
+    /// Split off an independently-seeded child RNG (for parallel workers).
+    pub fn split(&mut self) -> Rng {
+        Rng::seeded(self.next_u64() ^ 0xA5A5_5A5A_DEAD_BEEF)
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform `f64` in `[0, 1)` (53-bit resolution).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f64` in the open interval `(0, 1)` (safe for `ln`).
+    #[inline]
+    pub fn f64_open(&mut self) -> f64 {
+        loop {
+            let u = self.f64();
+            if u > 0.0 {
+                return u;
+            }
+        }
+    }
+
+    /// Bernoulli draw with probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Uniform integer in `[0, n)`.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection-free-enough method.
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    #[inline]
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.f64()
+    }
+
+    /// Uniform integer in `[lo, hi)`.
+    pub fn range_usize(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi > lo);
+        lo + self.below(hi - lo)
+    }
+
+    /// Standard normal via Box-Muller (with spare caching).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        let u1 = self.f64_open();
+        let u2 = self.f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Normal with mean `mu`, std-dev `sigma`.
+    #[inline]
+    pub fn normal_with(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.normal()
+    }
+
+    /// Standard logistic sample (location 0, scale 1).
+    pub fn logistic(&mut self) -> f64 {
+        let u = self.f64_open();
+        (u / (1.0 - u)).ln()
+    }
+
+    /// Log-normal with log-domain parameters `mu`, `sigma`.
+    pub fn log_normal(&mut self, mu: f64, sigma: f64) -> f64 {
+        self.normal_with(mu, sigma).exp()
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (Floyd's algorithm).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let k = k.min(n);
+        let mut chosen: Vec<usize> = Vec::with_capacity(k);
+        for j in n - k..n {
+            let t = self.below(j + 1);
+            if chosen.contains(&t) {
+                chosen.push(j);
+            } else {
+                chosen.push(t);
+            }
+        }
+        chosen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::{mean, std_dev};
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let mut a = Rng::seeded(1);
+        let mut b = Rng::seeded(1);
+        let mut c = Rng::seeded(2);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn uniform_moments() {
+        let mut r = Rng::seeded(3);
+        let xs: Vec<f64> = (0..100_000).map(|_| r.f64()).collect();
+        assert!((mean(&xs) - 0.5).abs() < 0.005);
+        assert!((std_dev(&xs) - (1.0f64 / 12.0).sqrt()).abs() < 0.005);
+        assert!(xs.iter().all(|&x| (0.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seeded(4);
+        let xs: Vec<f64> = (0..100_000).map(|_| r.normal_with(2.08, 0.28)).collect();
+        assert!((mean(&xs) - 2.08).abs() < 0.01);
+        assert!((std_dev(&xs) - 0.28).abs() < 0.01);
+    }
+
+    #[test]
+    fn logistic_moments() {
+        // Var of standard logistic = π²/3.
+        let mut r = Rng::seeded(5);
+        let xs: Vec<f64> = (0..100_000).map(|_| r.logistic()).collect();
+        assert!(mean(&xs).abs() < 0.03);
+        let want = std::f64::consts::PI / 3f64.sqrt();
+        assert!((std_dev(&xs) - want).abs() < 0.05);
+    }
+
+    #[test]
+    fn bernoulli_frequency() {
+        let mut r = Rng::seeded(6);
+        let hits = (0..100_000).filter(|_| r.bernoulli(0.57)).count();
+        assert!((hits as f64 / 1e5 - 0.57).abs() < 0.01);
+    }
+
+    #[test]
+    fn below_is_uniform_and_in_range() {
+        let mut r = Rng::seeded(7);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            counts[r.below(10)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "bucket {c}");
+        }
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_bounded() {
+        let mut r = Rng::seeded(8);
+        for _ in 0..100 {
+            let idx = r.sample_indices(144, 10);
+            assert_eq!(idx.len(), 10);
+            let mut sorted = idx.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 10, "duplicates in {idx:?}");
+            assert!(idx.iter().all(|&i| i < 144));
+        }
+        // k > n clamps.
+        assert_eq!(r.sample_indices(3, 10).len(), 3);
+    }
+
+    #[test]
+    fn split_streams_are_decorrelated() {
+        let mut r = Rng::seeded(9);
+        let mut child = r.split();
+        let xs: Vec<f64> = (0..10_000).map(|_| r.f64()).collect();
+        let ys: Vec<f64> = (0..10_000).map(|_| child.f64()).collect();
+        let mx = mean(&xs);
+        let my = mean(&ys);
+        let cov: f64 = xs.iter().zip(&ys).map(|(x, y)| (x - mx) * (y - my)).sum::<f64>()
+            / xs.len() as f64;
+        let corr = cov / (std_dev(&xs) * std_dev(&ys));
+        assert!(corr.abs() < 0.03, "corr {corr}");
+    }
+}

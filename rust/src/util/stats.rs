@@ -1,0 +1,156 @@
+//! Small statistics helpers shared by the device model, figure harnesses
+//! and benches.
+
+/// Arithmetic mean (0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Coefficient of variation `σ/μ` (0 when the mean is 0).
+pub fn cov(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 {
+        0.0
+    } else {
+        std_dev(xs) / m
+    }
+}
+
+/// Quantile by linear interpolation on the sorted copy, `q ∈ [0, 1]`.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (pos - lo as f64)
+    }
+}
+
+/// Fixed-width histogram over `[lo, hi)` with `bins` buckets. Out-of-range
+/// samples clamp into the edge buckets.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    let mut h = vec![0usize; bins.max(1)];
+    if xs.is_empty() || hi <= lo {
+        return h;
+    }
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        let idx = (((x - lo) / w) as isize).clamp(0, bins as isize - 1) as usize;
+        h[idx] += 1;
+    }
+    h
+}
+
+/// Render a histogram as a unicode sparkline row (for figure CLI output).
+pub fn sparkline(h: &[usize]) -> String {
+    const GLYPHS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let max = h.iter().copied().max().unwrap_or(0).max(1);
+    h.iter()
+        .map(|&c| GLYPHS[(c * (GLYPHS.len() - 1) + max / 2) / max])
+        .collect()
+}
+
+/// Least-squares fit of a logistic `1/(1+exp(-k(x-x0)))` to `(x, p)`
+/// samples via logit-domain linear regression; returns `(k, x0)`.
+/// Samples with `p` outside `(0.005, 0.995)` are ignored (logit blows up).
+pub fn fit_sigmoid(points: &[(f64, f64)]) -> Option<(f64, f64)> {
+    let usable: Vec<(f64, f64)> = points
+        .iter()
+        .filter(|(_, p)| (0.005..=0.995).contains(p))
+        .map(|&(x, p)| (x, (p / (1.0 - p)).ln()))
+        .collect();
+    if usable.len() < 3 {
+        return None;
+    }
+    let n = usable.len() as f64;
+    let sx: f64 = usable.iter().map(|(x, _)| x).sum();
+    let sy: f64 = usable.iter().map(|(_, y)| y).sum();
+    let sxx: f64 = usable.iter().map(|(x, _)| x * x).sum();
+    let sxy: f64 = usable.iter().map(|(x, y)| x * y).sum();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return None;
+    }
+    let k = (n * sxy - sx * sy) / denom;
+    let b = (sy - k * sx) / n;
+    if k == 0.0 {
+        return None;
+    }
+    Some((k, -b / k))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((std_dev(&xs) - (1.25f64).sqrt()).abs() < 1e-12);
+        assert!((cov(&xs) - (1.25f64).sqrt() / 2.5).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert_eq!(quantile(&xs, 0.5), 2.5);
+    }
+
+    #[test]
+    fn histogram_clamps_and_counts() {
+        let xs = [-1.0, 0.1, 0.5, 0.9, 2.0];
+        let h = histogram(&xs, 0.0, 1.0, 2);
+        assert_eq!(h, vec![2, 3]); // -1 clamps low, 0.5/0.9/2.0 land high
+        assert_eq!(histogram(&[], 0.0, 1.0, 4), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn sparkline_shape() {
+        let s = sparkline(&[0, 5, 10]);
+        assert_eq!(s.chars().count(), 3);
+    }
+
+    #[test]
+    fn sigmoid_fit_recovers_fig2b_constants() {
+        // Sample the paper's own curve and refit.
+        let pts: Vec<(f64, f64)> = (0..40)
+            .map(|i| {
+                let v = 1.0 + 2.5 * i as f64 / 39.0;
+                (v, 1.0 / (1.0 + (-3.56 * (v - 2.24)).exp()))
+            })
+            .collect();
+        let (k, x0) = fit_sigmoid(&pts).unwrap();
+        assert!((k - 3.56).abs() < 0.05, "k {k}");
+        assert!((x0 - 2.24).abs() < 0.02, "x0 {x0}");
+    }
+
+    #[test]
+    fn sigmoid_fit_degenerate_inputs() {
+        assert!(fit_sigmoid(&[(0.0, 0.5)]).is_none());
+        assert!(fit_sigmoid(&[(0.0, 0.999), (1.0, 0.001), (2.0, 1.0)]).is_none());
+    }
+}

@@ -1,0 +1,257 @@
+//! Minimal TOML-subset parser for the config system.
+//!
+//! Supports the subset config files actually use: `[section]` and
+//! `[section.sub]` headers, `key = value` pairs with string / integer /
+//! float / boolean values, `#` comments and blank lines. Keys are exposed
+//! flattened as `section.sub.key`.
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// Integer literal.
+    Int(i64),
+    /// Float literal.
+    Float(f64),
+    /// `true` / `false`.
+    Bool(bool),
+}
+
+impl Value {
+    /// As f64 (ints widen).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    /// As i64.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// As string slice.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// A flattened `section.key → value` document.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Document {
+    entries: BTreeMap<String, Value>,
+}
+
+impl Document {
+    /// Parse a TOML-subset string.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| Error::Toml(format!("line {}: unterminated section", lineno + 1)))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(Error::Toml(format!("line {}: empty section name", lineno + 1)));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                Error::Toml(format!("line {}: expected `key = value`", lineno + 1))
+            })?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(Error::Toml(format!("line {}: empty key", lineno + 1)));
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            let parsed = parse_value(value.trim())
+                .ok_or_else(|| Error::Toml(format!("line {}: bad value {value:?}", lineno + 1)))?;
+            entries.insert(full, parsed);
+        }
+        Ok(Self { entries })
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &std::path::Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Raw value lookup by flattened key.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    /// Typed getters with default fallbacks.
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    /// Integer-typed getter.
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    /// usize-typed getter (negative values fall back to the default).
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        match self.get(key).and_then(Value::as_i64) {
+            Some(v) if v >= 0 => v as usize,
+            _ => default,
+        }
+    }
+
+    /// Bool-typed getter.
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// String-typed getter.
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    /// All keys (flattened, sorted).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    /// Keys not in `known` — config-validation support.
+    pub fn unknown_keys<'a>(&'a self, known: &[&str]) -> Vec<&'a str> {
+        self.keys().filter(|k| !known.contains(k)).collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect `#` inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"')?;
+        return Some(Value::Str(inner.to_string()));
+    }
+    match s {
+        "true" => return Some(Value::Bool(true)),
+        "false" => return Some(Value::Bool(false)),
+        _ => {}
+    }
+    let cleaned = s.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Some(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Some(Value::Float(f));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# bayes-mem config
+title = "demo"
+
+[sne]
+n_bits = 100
+n_snes = 16
+
+[device]
+vth_mean = 2.08     # volts
+drift_coupling = 0.0
+ideal = true
+
+[coordinator.batcher]
+max_batch = 32
+deadline_us = 1_000
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let d = Document::parse(SAMPLE).unwrap();
+        assert_eq!(d.str_or("title", ""), "demo");
+        assert_eq!(d.usize_or("sne.n_bits", 0), 100);
+        assert_eq!(d.f64_or("device.vth_mean", 0.0), 2.08);
+        assert!(d.bool_or("device.ideal", false));
+        assert_eq!(d.i64_or("coordinator.batcher.deadline_us", 0), 1000);
+    }
+
+    #[test]
+    fn defaults_apply_for_missing_keys() {
+        let d = Document::parse(SAMPLE).unwrap();
+        assert_eq!(d.usize_or("sne.missing", 7), 7);
+        assert_eq!(d.f64_or("nope", 1.5), 1.5);
+        assert!(!d.bool_or("device.missing", false));
+    }
+
+    #[test]
+    fn comments_inside_strings_are_kept() {
+        let d = Document::parse(r##"name = "a # b" # trailing"##).unwrap();
+        assert_eq!(d.str_or("name", ""), "a # b");
+    }
+
+    #[test]
+    fn error_cases() {
+        assert!(Document::parse("[unterminated").is_err());
+        assert!(Document::parse("= 5").is_err());
+        assert!(Document::parse("key = what?").is_err());
+        assert!(Document::parse("[]").is_err());
+        assert!(Document::parse("novalue").is_err());
+    }
+
+    #[test]
+    fn unknown_key_detection() {
+        let d = Document::parse("[a]\nx = 1\ny = 2").unwrap();
+        let unknown = d.unknown_keys(&["a.x"]);
+        assert_eq!(unknown, vec!["a.y"]);
+    }
+
+    #[test]
+    fn type_mismatches_yield_none() {
+        let d = Document::parse("x = 5").unwrap();
+        assert!(d.get("x").unwrap().as_bool().is_none());
+        assert!(d.get("x").unwrap().as_str().is_none());
+        assert_eq!(d.get("x").unwrap().as_f64(), Some(5.0));
+    }
+}

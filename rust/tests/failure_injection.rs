@@ -1,0 +1,153 @@
+//! Failure injection: worn-out devices, poisoned artifacts, deadline
+//! misses, malformed configs — the coordinator must degrade loudly and
+//! predictably, never silently.
+
+use std::io::Write;
+use std::time::Duration;
+
+use bayes_mem::config::{AppConfig, Backend};
+use bayes_mem::coordinator::{Coordinator, DecisionKind};
+use bayes_mem::device::{DeviceParams, WearPolicy};
+use bayes_mem::runtime::Runtime;
+use bayes_mem::stochastic::{SneBank, SneConfig};
+use bayes_mem::Error;
+
+fn inference_kind() -> DecisionKind {
+    DecisionKind::Inference { prior: 0.57, likelihood: 0.77, likelihood_not: 0.655 }
+}
+
+/// Wear-out with `Fail` policy surfaces `DeviceWorn` through the serving
+/// path instead of silently producing garbage.
+#[test]
+fn worn_bank_fails_requests_with_device_error() {
+    let mut cfg = AppConfig::default();
+    cfg.sne.params = DeviceParams { endurance_cycles: 60, ..Default::default() };
+    cfg.sne.n_snes = 1;
+    cfg.sne.wear_policy = WearPolicy::Fail;
+    cfg.coordinator.workers = 1;
+    cfg.coordinator.max_batch = 1;
+    let coord = Coordinator::start(&cfg).unwrap();
+    let handle = coord.handle();
+    // Burn through the single device; eventually every response is a
+    // DeviceWorn error (100-bit encodes at ~57 % switch ~57 cycles each).
+    let mut saw_worn = false;
+    for _ in 0..40 {
+        match handle.decide(inference_kind()) {
+            Ok(_) => {}
+            Err(Error::DeviceWorn { .. }) => {
+                saw_worn = true;
+                break;
+            }
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert!(saw_worn, "wear-out never surfaced");
+    assert!(handle.metrics().snapshot().failed > 0);
+    coord.shutdown();
+}
+
+/// Rotate policy keeps serving through wear by mapping in spares, then
+/// fails once spares are exhausted.
+#[test]
+fn rotate_policy_extends_service_life() {
+    let params = DeviceParams { endurance_cycles: 60, ..Default::default() };
+    let cfg = SneConfig {
+        n_bits: 100,
+        n_snes: 2,
+        params,
+        wear_policy: WearPolicy::Rotate,
+    };
+    let mut bank = SneBank::new(cfg, 5).unwrap();
+    let mut successes = 0;
+    loop {
+        match bank.encode(0.9) {
+            Ok(_) => successes += 1,
+            Err(Error::DeviceWorn { .. }) => break,
+            Err(e) => panic!("unexpected {e}"),
+        }
+        assert!(successes < 1000, "never wore out");
+    }
+    // 2 active + 2 spares, each lasting ~1 encode at p=0.9/100 bits ≥ 60
+    // cycles: at least 4 encodes must have succeeded.
+    assert!(successes >= 4, "only {successes} encodes before failure");
+}
+
+/// A corrupted HLO artifact fails at load, with the entrypoint named.
+#[test]
+fn poisoned_artifact_fails_loudly() {
+    let dir = tempdir();
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut manifest = std::fs::File::create(dir.join("manifest.toml")).unwrap();
+    writeln!(
+        manifest,
+        "[broken]\nfile = \"broken.hlo.txt\"\ninputs = 1\ninput0 = \"2,2\"\n"
+    )
+    .unwrap();
+    std::fs::write(dir.join("broken.hlo.txt"), "HloModule utter garbage ((").unwrap();
+    let err = match Runtime::load_dir(&dir) {
+        Err(e) => e,
+        Ok(_) => panic!("poisoned artifact compiled successfully"),
+    };
+    let msg = err.to_string();
+    assert!(msg.contains("broken"), "unhelpful error: {msg}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Missing artifacts directory on the PJRT backend: the coordinator still
+/// starts (workers build lazily) but every decision errors.
+#[test]
+fn missing_artifacts_surface_as_request_errors() {
+    let mut cfg = AppConfig::default();
+    cfg.coordinator.backend = Backend::Pjrt;
+    cfg.coordinator.workers = 1;
+    cfg.artifacts_dir = tempdir(); // does not exist
+    let coord = Coordinator::start(&cfg).unwrap();
+    let handle = coord.handle();
+    let err = handle
+        .submit(inference_kind())
+        .unwrap()
+        .wait_timeout(Duration::from_secs(10))
+        .unwrap_err();
+    assert!(matches!(err, Error::Coordinator(_)), "got {err}");
+    coord.shutdown();
+}
+
+/// Deadlines: a request with an impossible deadline is answered with
+/// `Error::Deadline`, and counted as failed, not completed.
+#[test]
+fn impossible_deadline_reported() {
+    let cfg = AppConfig::default();
+    let coord = Coordinator::start(&cfg).unwrap();
+    let handle = coord.handle();
+    let p = handle
+        .submit_with_deadline(inference_kind(), Some(Duration::from_nanos(1)))
+        .unwrap();
+    assert!(matches!(
+        p.wait_timeout(Duration::from_secs(10)).unwrap_err(),
+        Error::Deadline(_)
+    ));
+    let snap = handle.metrics().snapshot();
+    assert_eq!(snap.failed, 1);
+    coord.shutdown();
+}
+
+/// Config files with bad values are rejected before any thread spawns.
+#[test]
+fn bad_config_rejected_at_startup() {
+    let mut cfg = AppConfig::default();
+    cfg.coordinator.workers = 0;
+    assert!(Coordinator::start(&cfg).is_err());
+    let mut cfg = AppConfig::default();
+    cfg.sne.n_bits = 0;
+    assert!(Coordinator::start(&cfg).is_err());
+}
+
+fn tempdir() -> std::path::PathBuf {
+    let mut p = std::env::temp_dir();
+    p.push(format!(
+        "bayes-mem-test-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    p
+}

@@ -1,0 +1,189 @@
+//! End-to-end integration: artifacts → PJRT runtime → coordinator →
+//! scene workload, plus native-vs-PJRT parity checks.
+//!
+//! PJRT-dependent tests no-op (pass vacuously) when `make artifacts` has
+//! not been run, so a fresh checkout still gets a green `cargo test`.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use bayes_mem::bayes::{exact_fusion, FusionOperator, InferenceOperator};
+use bayes_mem::config::{AppConfig, Backend};
+use bayes_mem::coordinator::{Coordinator, DecisionKind};
+use bayes_mem::runtime::Runtime;
+use bayes_mem::scene::{
+    detector_logits, fusion_input, DetectorModel, Modality, SceneGenerator, VideoWorkload,
+};
+use bayes_mem::stochastic::{SneBank, SneConfig};
+use bayes_mem::util::stats::mean;
+use bayes_mem::util::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.toml").exists().then_some(dir)
+}
+
+/// The detector head compiled into the AOT artifact must equal the native
+/// Rust implementation (same published weights).
+#[test]
+fn detector_artifact_matches_native_model() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load_subset(&dir, &["detector_b64"]).unwrap();
+    let mut gen = SceneGenerator::new(5);
+    let rgb = DetectorModel::new(Modality::Rgb);
+    let th = DetectorModel::new(Modality::Thermal);
+
+    // Build a 64-row feature batch from real scene obstacles.
+    let mut feats = Vec::with_capacity(64 * 6);
+    let mut native = Vec::with_capacity(64 * 2);
+    'outer: loop {
+        let frame = gen.next_frame();
+        for o in &frame.obstacles {
+            let f = o.features(frame.visibility);
+            feats.extend(f.iter().map(|&x| x as f32));
+            native.push(rgb.confidence(o, frame.visibility));
+            native.push(th.confidence(o, frame.visibility));
+            if native.len() == 128 {
+                break 'outer;
+            }
+        }
+    }
+    let out = rt.get("detector_b64").unwrap().run_f32(&[&feats]).unwrap();
+    assert_eq!(out.len(), 128);
+    for (i, (&got, &want)) in out.iter().zip(&native).enumerate() {
+        assert!(
+            (got as f64 - want).abs() < 1e-5,
+            "row {i}: artifact {got} vs native {want}"
+        );
+    }
+    // Belt & braces: the weights the artifact was built from.
+    let (w, b) = detector_logits(Modality::Rgb);
+    assert_eq!(w[1], 3.2);
+    assert_eq!(b, -2.6);
+}
+
+/// The AOT stochastic-fusion kernel and the native bit-parallel simulator
+/// must agree with closed-form Bayes (and hence each other) in mean.
+#[test]
+fn pjrt_and_native_fusion_agree_in_distribution() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load_subset(&dir, &["fusion_b16_m2_n256"]).unwrap();
+    let mut rng = Rng::seeded(11);
+    let cases = [(0.8f64, 0.7f64), (0.6, 0.9), (0.55, 0.55)];
+    let mut bank = SneBank::new(SneConfig { n_bits: 256, ..Default::default() }, 12).unwrap();
+    let fus = FusionOperator::default();
+    for &(p1, p2) in &cases {
+        let probs: Vec<f32> = (0..16).flat_map(|_| [p1 as f32, p2 as f32]).collect();
+        let mut pjrt_samples = Vec::new();
+        for _ in 0..8 {
+            pjrt_samples
+                .extend(rt.fusion("fusion_b16_m2_n256", &probs, &mut rng).unwrap().iter().map(|&x| x as f64));
+        }
+        let native_samples: Vec<f64> =
+            (0..64).map(|_| fus.fuse2(&mut bank, p1, p2).unwrap().fused).collect();
+        let exact = exact_fusion(p1, p2);
+        let pjrt_mean = mean(&pjrt_samples);
+        let native_mean = mean(&native_samples);
+        assert!((pjrt_mean - exact).abs() < 0.03, "pjrt {pjrt_mean} vs exact {exact}");
+        assert!((native_mean - exact).abs() < 0.03, "native {native_mean} vs exact {exact}");
+        assert!((pjrt_mean - native_mean).abs() < 0.05);
+    }
+}
+
+/// Full serving path on the PJRT backend: scene → coordinator → decisions.
+#[test]
+fn pjrt_coordinator_serves_scene_workload() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut cfg = AppConfig::default();
+    cfg.coordinator.backend = Backend::Pjrt;
+    cfg.coordinator.workers = 1;
+    cfg.artifacts_dir = dir;
+    let coord = Coordinator::start(&cfg).unwrap();
+    let handle = coord.handle();
+    let mut wl = VideoWorkload::new(21);
+    let mut served = 0;
+    for _ in 0..10 {
+        let det = wl.next_detections();
+        let pending: Vec<_> = det
+            .confidences
+            .iter()
+            .map(|&(r, t)| {
+                handle
+                    .submit(DecisionKind::Fusion {
+                        posteriors: vec![fusion_input(r), fusion_input(t)],
+                    })
+                    .unwrap()
+            })
+            .collect();
+        for p in pending {
+            let d = p.wait_timeout(Duration::from_secs(30)).unwrap();
+            assert!((0.0..=1.0).contains(&d.posterior));
+            served += 1;
+        }
+    }
+    assert!(served >= 10);
+    assert_eq!(handle.metrics().snapshot().completed, served);
+    coord.shutdown();
+}
+
+/// Native end-to-end: inference + fusion accuracy through the coordinator
+/// at paper precision, across a mixed workload.
+#[test]
+fn native_end_to_end_accuracy() {
+    let mut cfg = AppConfig::default();
+    cfg.sne.n_bits = 1_000;
+    let coord = Coordinator::start(&cfg).unwrap();
+    let handle = coord.handle();
+    let mut rng = Rng::seeded(31);
+    let mut errors = Vec::new();
+    let pending: Vec<_> = (0..200)
+        .map(|i| {
+            let kind = if i % 2 == 0 {
+                DecisionKind::Inference {
+                    prior: rng.range_f64(0.2, 0.8),
+                    likelihood: rng.range_f64(0.5, 0.95),
+                    likelihood_not: rng.range_f64(0.05, 0.5),
+                }
+            } else {
+                DecisionKind::Fusion {
+                    posteriors: vec![rng.range_f64(0.3, 0.9), rng.range_f64(0.3, 0.9)],
+                }
+            };
+            handle.submit(kind).unwrap()
+        })
+        .collect();
+    for p in pending {
+        let d = p.wait_timeout(Duration::from_secs(30)).unwrap();
+        errors.push(d.abs_error());
+    }
+    let mae = mean(&errors);
+    assert!(mae < 0.04, "1000-bit MAE {mae}");
+    coord.shutdown();
+}
+
+/// Direct operators and the coordinator path must produce the same
+/// statistics for the Fig. 3b scenario.
+#[test]
+fn coordinator_matches_direct_operator_statistics() {
+    let cfg = AppConfig::default();
+    let coord = Coordinator::start(&cfg).unwrap();
+    let handle = coord.handle();
+    let via_coord: Vec<f64> = (0..300)
+        .map(|_| {
+            handle
+                .decide(DecisionKind::Inference {
+                    prior: 0.57,
+                    likelihood: 0.77,
+                    likelihood_not: 0.655,
+                })
+                .unwrap()
+                .posterior
+        })
+        .collect();
+    coord.shutdown();
+    let mut bank = SneBank::seeded(99);
+    let op = InferenceOperator::default();
+    let direct: Vec<f64> = (0..300).map(|_| op.fig3b(&mut bank).posterior).collect();
+    assert!((mean(&via_coord) - mean(&direct)).abs() < 0.03);
+    assert!((mean(&via_coord) - 0.609).abs() < 0.03);
+}

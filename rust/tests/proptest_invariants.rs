@@ -1,0 +1,207 @@
+//! Property-based invariant suites (via the in-tree `proptest_lite`
+//! driver): stochastic-computing algebra, CORDIV, correlation metrics,
+//! batcher/router behaviour, config round-trips.
+
+use std::time::{Duration, Instant};
+
+use bayes_mem::bayes::{exact_fusion_m, exact_posterior, FusionOperator, InferenceOperator};
+use bayes_mem::coordinator::{Batcher, DecisionKind, DecisionRequest};
+use bayes_mem::logic::cordiv;
+use bayes_mem::stochastic::{pair_counts, pearson, scc, Bitstream, SneBank, SneConfig};
+use bayes_mem::util::proptest_lite::check;
+use bayes_mem::util::Rng;
+
+fn random_stream(rng: &mut Rng, n: usize) -> Bitstream {
+    let p = rng.f64();
+    let mut s = Bitstream::zeros(n);
+    for i in 0..n {
+        if rng.bernoulli(p) {
+            s.set(i, true);
+        }
+    }
+    s
+}
+
+#[test]
+fn prop_bitstream_roundtrip_and_complement() {
+    check("bitstream pack/unpack + complement", 128, |rng| {
+        let n = rng.range_usize(1, 400);
+        let s = random_stream(rng, n);
+        let bits: Vec<bool> = s.iter().collect();
+        assert_eq!(Bitstream::from_bits(&bits), s);
+        // Complement density.
+        assert_eq!(s.count_ones() + s.not().count_ones(), n);
+        // Double complement is identity.
+        assert_eq!(s.not().not(), s);
+    });
+}
+
+#[test]
+fn prop_gate_bounds() {
+    check("AND ≤ min, OR ≥ max, XOR bounds", 96, |rng| {
+        let n = rng.range_usize(64, 512);
+        let a = random_stream(rng, n);
+        let b = random_stream(rng, n);
+        let and = a.and(&b).unwrap();
+        let or = a.or(&b).unwrap();
+        let xor = a.xor(&b).unwrap();
+        assert!(and.value() <= a.value().min(b.value()) + 1e-12);
+        assert!(or.value() >= a.value().max(b.value()) - 1e-12);
+        // AND + OR = A + B exactly (inclusion-exclusion at bit level).
+        assert!((and.value() + or.value() - a.value() - b.value()).abs() < 1e-12);
+        // XOR = OR − AND.
+        assert!((xor.value() - (or.value() - and.value())).abs() < 1e-12);
+    });
+}
+
+#[test]
+fn prop_mux_bounded_by_and_or() {
+    // Bitwise, out_k ∈ {a_k, b_k}: so AND(a,b) ⊆ out ⊆ OR(a,b) exactly
+    // (the convex-combination law holds only in expectation).
+    check("MUX between AND and OR", 96, |rng| {
+        let n = rng.range_usize(64, 512);
+        let a = random_stream(rng, n);
+        let b = random_stream(rng, n);
+        let sel = random_stream(rng, n);
+        let out = a.mux(&b, &sel).unwrap();
+        let and = a.and(&b).unwrap();
+        let or = a.or(&b).unwrap();
+        // Subset checks are exact bit algebra.
+        assert_eq!(and.and(&out).unwrap(), and, "AND ⊄ out");
+        assert_eq!(or.or(&out).unwrap(), or, "out ⊄ OR");
+        assert!(out.value() >= and.value() && out.value() <= or.value());
+    });
+}
+
+#[test]
+fn prop_cordiv_output_is_probability() {
+    check("CORDIV stays in [0,1] and respects subsets", 96, |rng| {
+        let n = rng.range_usize(64, 1024);
+        let b = random_stream(rng, n);
+        let mask = random_stream(rng, n);
+        let a = b.and(&mask).unwrap(); // a ⊆ b by construction
+        let q = cordiv(&a, &b).unwrap();
+        let v = q.value();
+        assert!((0.0..=1.0).contains(&v));
+        // With a ⊆ b and enough divisor mass, q approximates a/b.
+        if b.count_ones() > 32 {
+            let want = a.value() / b.value();
+            assert!((v - want).abs() < 0.35, "q {v} vs {want}");
+        }
+    });
+}
+
+#[test]
+fn prop_correlation_metrics_bounded_and_consistent() {
+    check("ρ, SCC ∈ [−1,1]; counts sum to n", 128, |rng| {
+        let n = rng.range_usize(8, 600);
+        let x = random_stream(rng, n);
+        let y = random_stream(rng, n);
+        let pc = pair_counts(&x, &y).unwrap();
+        assert_eq!(pc.n() as usize, n);
+        assert_eq!((pc.a + pc.b) as usize, x.count_ones());
+        assert_eq!((pc.a + pc.c) as usize, y.count_ones());
+        let r = pearson(&x, &y).unwrap();
+        let s = scc(&x, &y).unwrap();
+        assert!((-1.0 - 1e-9..=1.0 + 1e-9).contains(&r));
+        assert!((-1.0 - 1e-9..=1.0 + 1e-9).contains(&s));
+        // Symmetry of both metrics.
+        assert!((pearson(&y, &x).unwrap() - r).abs() < 1e-12);
+        assert!((scc(&y, &x).unwrap() - s).abs() < 1e-12);
+    });
+}
+
+#[test]
+fn prop_operators_track_exact_bayes() {
+    check("operators within MC error of exact Bayes", 24, |rng| {
+        let n_bits = 20_000;
+        let mut bank =
+            SneBank::new(SneConfig { n_bits, ..Default::default() }, rng.next_u64()).unwrap();
+        let pa = rng.range_f64(0.05, 0.95);
+        let pba = rng.range_f64(0.05, 0.95);
+        let pbna = rng.range_f64(0.05, 0.95);
+        let r = InferenceOperator::default().try_infer(&mut bank, pa, pba, pbna).unwrap();
+        let tol = 0.08; // CORDIV variance blows up for tiny denominators
+        assert!(
+            (r.posterior - exact_posterior(pa, pba, pbna)).abs() < tol,
+            "inference ({pa:.2},{pba:.2},{pbna:.2}): {} vs {}",
+            r.posterior,
+            exact_posterior(pa, pba, pbna)
+        );
+        let p1 = rng.range_f64(0.1, 0.9);
+        let p2 = rng.range_f64(0.1, 0.9);
+        let f = FusionOperator::default().fuse2(&mut bank, p1, p2).unwrap();
+        assert!(
+            (f.fused - exact_fusion_m(&[p1, p2])).abs() < tol,
+            "fusion ({p1:.2},{p2:.2}): {} vs {}",
+            f.fused,
+            exact_fusion_m(&[p1, p2])
+        );
+    });
+}
+
+#[test]
+fn prop_posterior_monotone_in_prior() {
+    check("posterior increases with prior (exact)", 64, |rng| {
+        let pba = rng.range_f64(0.1, 0.9);
+        let pbna = rng.range_f64(0.1, 0.9);
+        let p1 = rng.range_f64(0.0, 0.5);
+        let p2 = p1 + rng.range_f64(0.0, 0.5);
+        assert!(exact_posterior(p2, pba, pbna) >= exact_posterior(p1, pba, pbna) - 1e-12);
+    });
+}
+
+fn req(rng: &mut Rng, id: u64) -> DecisionRequest {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::mem::forget(rx);
+    let kind = if rng.bernoulli(0.5) {
+        DecisionKind::Inference {
+            prior: rng.f64(),
+            likelihood: rng.f64(),
+            likelihood_not: rng.f64(),
+        }
+    } else {
+        DecisionKind::Fusion { posteriors: vec![rng.f64(), rng.f64()] }
+    };
+    DecisionRequest { id, kind, enqueued: Instant::now(), deadline: None, reply: tx }
+}
+
+#[test]
+fn prop_batcher_conserves_requests() {
+    check("batcher: no request lost or duplicated, caps respected", 64, |rng| {
+        let max_batch = rng.range_usize(1, 9);
+        let mut batcher = Batcher::new(max_batch, Duration::from_millis(1));
+        let n = rng.range_usize(1, 120);
+        let mut out_ids = Vec::new();
+        for id in 0..n as u64 {
+            if let Some(batch) = batcher.push(req(rng, id)) {
+                assert!(batch.len() <= max_batch);
+                assert!(batch.requests.iter().all(|r| r.kind.class() == batch.class));
+                out_ids.extend(batch.requests.iter().map(|r| r.id));
+            }
+        }
+        for batch in batcher.flush_all() {
+            out_ids.extend(batch.requests.iter().map(|r| r.id));
+        }
+        out_ids.sort_unstable();
+        let expect: Vec<u64> = (0..n as u64).collect();
+        assert_eq!(out_ids, expect);
+    });
+}
+
+#[test]
+fn prop_config_document_roundtrip() {
+    use bayes_mem::util::tomlmini::Document;
+    check("tomlmini parses what it prints", 64, |rng| {
+        let n_bits = rng.range_usize(1, 100_000);
+        let workers = rng.range_usize(1, 64);
+        let vth = rng.range_f64(1.5, 3.0);
+        let text = format!(
+            "[sne]\nn_bits = {n_bits}\n[coordinator]\nworkers = {workers}\n[device]\nvth_mean = {vth}\n"
+        );
+        let doc = Document::parse(&text).unwrap();
+        assert_eq!(doc.usize_or("sne.n_bits", 0), n_bits);
+        assert_eq!(doc.usize_or("coordinator.workers", 0), workers);
+        assert!((doc.f64_or("device.vth_mean", 0.0) - vth).abs() < 1e-9);
+    });
+}
