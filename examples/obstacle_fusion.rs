@@ -13,7 +13,7 @@ use bayes_mem::scene::{
 use bayes_mem::stochastic::{SneBank, SneConfig};
 use bayes_mem::util::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let frames: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(300);
     let rgb = DetectorModel::new(Modality::Rgb);
     let thermal = DetectorModel::new(Modality::Thermal);

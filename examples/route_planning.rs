@@ -14,7 +14,7 @@ use bayes_mem::scene::LaneChangeScenario;
 use bayes_mem::util::stats::{mean, quantile};
 use bayes_mem::util::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let n: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(2_000);
     let cfg = AppConfig::default();
     let coord = Coordinator::start(&cfg)?;

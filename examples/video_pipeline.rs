@@ -39,7 +39,11 @@ struct RunReport {
     decisions_per_s: f64,
 }
 
-fn run_backend(backend: Backend, label: &'static str, frames: usize) -> anyhow::Result<RunReport> {
+fn run_backend(
+    backend: Backend,
+    label: &'static str,
+    frames: usize,
+) -> Result<RunReport, Box<dyn std::error::Error>> {
     let mut cfg = AppConfig::default();
     cfg.coordinator.backend = backend;
     cfg.coordinator.max_batch = 16;
@@ -90,7 +94,7 @@ fn run_backend(backend: Backend, label: &'static str, frames: usize) -> anyhow::
     })
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let frames: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(500);
     println!("end-to-end video pipeline: {frames} frames per backend\n");
 

@@ -5,11 +5,13 @@
 
 use std::time::{Duration, Instant};
 
+use bayes_mem::bayes::{BatchedInference, InferenceOperator, InferenceQuery};
 use bayes_mem::benchkit::Bench;
 use bayes_mem::config::AppConfig;
-use bayes_mem::device::WearPolicy;
 use bayes_mem::coordinator::{Batcher, Coordinator, DecisionKind};
+use bayes_mem::device::WearPolicy;
 use bayes_mem::scene::{fusion_input, VideoWorkload};
+use bayes_mem::stochastic::{SneBank, SneConfig};
 
 fn inference_kind() -> DecisionKind {
     DecisionKind::Inference { prior: 0.57, likelihood: 0.77, likelihood_not: 0.655 }
@@ -77,6 +79,65 @@ fn main() {
     );
     coord.shutdown();
 
+    // The tentpole claim: batched execution vs looping single decisions
+    // on the native backend, batch size 32, 100-bit streams — the exact
+    // workload a worker sees per Batch. Must show ≥2× throughput.
+    const BATCH: usize = 32;
+    let queries: Vec<InferenceQuery> = (0..BATCH)
+        .map(|i| {
+            let x = (i as f64 + 0.5) / BATCH as f64;
+            InferenceQuery {
+                prior: 0.2 + 0.6 * x,
+                likelihood: 0.9 - 0.5 * x,
+                likelihood_not: 0.2 + 0.4 * x,
+            }
+        })
+        .collect();
+    let bench_bank = || {
+        SneBank::new(
+            SneConfig { n_bits: 100, wear_policy: WearPolicy::Ignore, ..Default::default() },
+            17,
+        )
+        .unwrap()
+    };
+    let mut bank_single = bench_bank();
+    let op = InferenceOperator::default();
+    let single = b.bench_units(
+        "worker_single_loop_b32_100bit",
+        BATCH as f64,
+        "decisions",
+        || {
+            for q in &queries {
+                let r = op.infer_with_likelihoods(
+                    &mut bank_single,
+                    q.prior,
+                    q.likelihood,
+                    q.likelihood_not,
+                );
+                std::hint::black_box(r.posterior);
+            }
+        },
+    );
+    let mut bank_batched = bench_bank();
+    let mut engine = BatchedInference::new();
+    let batched = b.bench_units(
+        "worker_batched_b32_100bit",
+        BATCH as f64,
+        "decisions",
+        || {
+            for r in engine.infer_batch(&mut bank_batched, &queries) {
+                std::hint::black_box(r.unwrap().posterior);
+            }
+        },
+    );
+    if let (Some(s), Some(bt)) = (single, batched) {
+        let speedup = s.mean_ns / bt.mean_ns;
+        println!(
+            "  batched_vs_single_speedup_b32: {speedup:.2}x \
+             (acceptance: >= 2x on the native backend)"
+        );
+    }
+
     // Batcher microbenchmark (no threads): push+flush cycle.
     let mut batcher = Batcher::new(16, Duration::from_micros(400));
     let (tx, _rx) = std::sync::mpsc::channel();
@@ -96,5 +157,5 @@ fn main() {
         }
     });
 
-    b.finish();
+    b.finish_and_export();
 }

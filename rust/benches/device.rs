@@ -40,5 +40,5 @@ fn main() {
         std::hint::black_box(tm.pulse_response(2.5, 2_000.0, 1.0, &mut rng).switch_energy_nj);
     });
 
-    b.finish();
+    b.finish_and_export();
 }

@@ -2,7 +2,9 @@
 //! latency/throughput claim (§II 0.4 ms / 2,500 fps, bit-length ablation)
 //! plus the SC primitive micro-benchmarks.
 
-use bayes_mem::bayes::{FusionOperator, InferenceOperator};
+use bayes_mem::bayes::{
+    BatchedFusion, BatchedInference, FusionOperator, InferenceOperator, InferenceQuery,
+};
 use bayes_mem::benchkit::Bench;
 use bayes_mem::device::WearPolicy;
 use bayes_mem::logic::{cordiv, BooleanOp, CorrelationMode, ProbGate};
@@ -40,6 +42,88 @@ fn main() {
         let r = fus.fuse(&mut bank100, &[0.8, 0.7, 0.6, 0.9]).unwrap();
         std::hint::black_box(r.fused);
     });
+
+    // Single vs batched decision engine (the coordinator's rewired hot
+    // path): same bank state, same math, amortised encode + word-parallel
+    // dataflow. Report per-decision throughput for both.
+    const BATCH: usize = 32;
+    let queries: Vec<InferenceQuery> = (0..BATCH)
+        .map(|i| {
+            let x = (i as f64 + 0.5) / BATCH as f64;
+            InferenceQuery {
+                prior: 0.2 + 0.6 * x,
+                likelihood: 0.9 - 0.5 * x,
+                likelihood_not: 0.2 + 0.4 * x,
+            }
+        })
+        .collect();
+    let mut bank_single = bank(100, 5);
+    let single = b.bench_units(
+        &format!("inference_single_x{BATCH}_100bit"),
+        BATCH as f64,
+        "decisions",
+        || {
+            for q in &queries {
+                let r = inf.infer_with_likelihoods(
+                    &mut bank_single,
+                    q.prior,
+                    q.likelihood,
+                    q.likelihood_not,
+                );
+                std::hint::black_box(r.posterior);
+            }
+        },
+    );
+    let mut bank_batched = bank(100, 5);
+    let mut engine = BatchedInference::new();
+    let batched = b.bench_units(
+        &format!("inference_batched_{BATCH}_100bit"),
+        BATCH as f64,
+        "decisions",
+        || {
+            for r in engine.infer_batch(&mut bank_batched, &queries) {
+                std::hint::black_box(r.unwrap().posterior);
+            }
+        },
+    );
+    if let (Some(s), Some(bt)) = (single, batched) {
+        println!(
+            "  inference batched-vs-single speedup (batch {BATCH}): {:.2}x",
+            s.mean_ns / bt.mean_ns
+        );
+    }
+    let rows: Vec<Vec<f64>> =
+        (0..BATCH).map(|i| vec![0.3 + 0.015 * i as f64, 0.85 - 0.008 * i as f64]).collect();
+    let row_refs: Vec<&[f64]> = rows.iter().map(Vec::as_slice).collect();
+    let mut bank_fs = bank(100, 6);
+    let fsingle = b.bench_units(
+        &format!("fusion2_single_x{BATCH}_100bit"),
+        BATCH as f64,
+        "decisions",
+        || {
+            for row in &rows {
+                std::hint::black_box(fus.fuse(&mut bank_fs, row).unwrap().fused);
+            }
+        },
+    );
+    let mut bank_fb = bank(100, 6);
+    let mut fengine = BatchedFusion::new();
+    let fbatched = b.bench_units(
+        &format!("fusion2_batched_{BATCH}_100bit"),
+        BATCH as f64,
+        "decisions",
+        || {
+            for r in fengine.fuse_batch(&mut bank_fb, &row_refs) {
+                std::hint::black_box(r.unwrap());
+            }
+        },
+    );
+    if let (Some(s), Some(bt)) = (fsingle, fbatched) {
+        println!(
+            "  fusion batched-vs-single speedup (batch {BATCH}): {:.2}x",
+            s.mean_ns / bt.mean_ns
+        );
+    }
 
     // Bit-length ablation (precision ↔ cost): decision cost vs N.
     for n_bits in [16usize, 256, 1024, 4096] {
@@ -82,5 +166,5 @@ fn main() {
         std::hint::black_box(m);
     });
 
-    b.finish();
+    b.finish_and_export();
 }

@@ -50,5 +50,5 @@ fn main() {
         std::hint::black_box(fus.fuse2(&mut bank, 0.8, 0.7).unwrap().fused);
     });
 
-    b.finish();
+    b.finish_and_export();
 }

@@ -1,0 +1,402 @@
+//! Word-parallel **batched** decision engine.
+//!
+//! The single-decision operators ([`super::InferenceOperator`],
+//! [`super::FusionOperator`]) pay per-decision overhead that dwarfs the
+//! actual bit-algebra at the paper's 100-bit operating point: every
+//! decision allocates ~6 fresh [`crate::stochastic::Bitstream`]s (three
+//! encodes, the gate outputs, the quotient) just to AND/MUX/CORDIV a
+//! couple of `u64` words. The memristor Bayesian machines of Harabi et al.
+//! (arXiv:2112.10547) amortise exactly this class of cost by running
+//! many inferences through one physical array pass; this module is the
+//! software analogue for the coordinator's hot path.
+//!
+//! [`BatchedInference`] and [`BatchedFusion`] evaluate N decisions in
+//! one pass:
+//!
+//! 1. **Grouped encode** — all N decisions' input probabilities are
+//!    encoded through the SNE bank's round-robin into one packed,
+//!    reusable word buffer ([`SneBank::encode_group_into`]), drawing
+//!    devices and RNG words in exactly the order the single path would.
+//! 2. **Word-parallel dataflow** — the AND/MUX/CORDIV network runs
+//!    straight over the packed `u64` words (the CORDIV flip-flop fill
+//!    uses the same Hillis–Steele doubling as [`crate::logic::Cordiv`]),
+//!    accumulating popcounts on the fly. No intermediate `Bitstream` is
+//!    materialised; the steady state allocates nothing but the result
+//!    vector.
+//!
+//! Because step 1 replays the single path's RNG consumption exactly and
+//! step 2 computes the same Boolean network word-for-word, the batched
+//! engine is **bit-identical** to looping the single-decision operators
+//! over the same bank — guarded by unit tests here and an integration
+//! test (`tests/determinism.rs`) through the whole coordinator. The
+//! speedup (≥2× at batch 32, 100-bit streams; see
+//! `benches/coordinator.rs`) comes purely from eliding allocation and
+//! per-decision bookkeeping, not from cutting corners.
+
+use crate::logic::cordiv_word;
+use crate::stochastic::{tail_word_mask, SneBank};
+use crate::{Error, Result};
+
+use super::exact::{exact_fusion_m, exact_marginal, exact_posterior};
+
+/// One inference decision's inputs (Eq. 1): prior and the two likelihoods.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InferenceQuery {
+    /// Prior `P(A)`.
+    pub prior: f64,
+    /// Likelihood `P(B|A)`.
+    pub likelihood: f64,
+    /// Likelihood `P(B|¬A)`.
+    pub likelihood_not: f64,
+}
+
+impl InferenceQuery {
+    /// Closed-form posterior for these inputs.
+    pub fn exact(&self) -> f64 {
+        exact_posterior(self.prior, self.likelihood, self.likelihood_not)
+    }
+
+    /// Closed-form marginal `P(B)`.
+    pub fn exact_marginal(&self) -> f64 {
+        exact_marginal(self.prior, self.likelihood, self.likelihood_not)
+    }
+}
+
+/// One batched inference decision's measured outputs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchedPosterior {
+    /// Measured posterior `P(A|B)` — the decision confidence.
+    pub posterior: f64,
+    /// Measured marginal `P(B)` at the denominator node.
+    pub marginal: f64,
+}
+
+/// Per-word mask for a stream of `n_bits` split into `n_words`: all-ones
+/// except the last word, which keeps only the valid tail bits (the shared
+/// [`tail_word_mask`] convention).
+#[inline]
+fn word_mask(k: usize, n_words: usize, n_bits: usize) -> u64 {
+    if k + 1 == n_words {
+        tail_word_mask(n_bits)
+    } else {
+        u64::MAX
+    }
+}
+
+/// Batched Eq.-1 inference: N decisions through one grouped encode and
+/// one word-parallel AND/MUX/CORDIV sweep. Reuses its scratch buffer
+/// across calls, so the steady state allocates only the result vector.
+#[derive(Debug, Default)]
+pub struct BatchedInference {
+    scratch: Vec<u64>,
+}
+
+impl BatchedInference {
+    /// Engine with an empty scratch buffer (grows to fit the first batch).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Evaluate every query in order on `bank`. Failures (invalid
+    /// probabilities, worn-out devices) are per-decision: decision `i`
+    /// failing leaves `i+1..` to proceed, exactly like a loop of
+    /// single-decision calls — and the surviving decisions' bits are
+    /// bit-identical to that loop.
+    pub fn infer_batch(
+        &mut self,
+        bank: &mut SneBank,
+        queries: &[InferenceQuery],
+    ) -> Vec<Result<BatchedPosterior>> {
+        let n_bits = bank.n_bits();
+        let w = n_bits.div_ceil(64);
+        self.scratch.resize(queries.len() * 3 * w, 0);
+
+        // Phase 1: grouped encode through the bank's round-robin.
+        let mut results: Vec<Result<BatchedPosterior>> = Vec::with_capacity(queries.len());
+        for (i, q) in queries.iter().enumerate() {
+            let encoded = Error::check_prob("p_a", q.prior)
+                .and_then(|_| Error::check_prob("p_b_given_a", q.likelihood))
+                .and_then(|_| Error::check_prob("p_b_given_na", q.likelihood_not))
+                .and_then(|_| {
+                    bank.encode_group_into(
+                        &[q.prior, q.likelihood, q.likelihood_not],
+                        &mut self.scratch[i * 3 * w..(i + 1) * 3 * w],
+                    )
+                });
+            match encoded {
+                Ok(()) => {
+                    bank.finish_decision();
+                    results.push(Ok(BatchedPosterior { posterior: 0.0, marginal: 0.0 }));
+                }
+                Err(e) => results.push(Err(e)),
+            }
+        }
+
+        // Phase 2: word-parallel dataflow over the packed streams.
+        for (i, slot) in results.iter_mut().enumerate() {
+            if slot.is_err() {
+                continue;
+            }
+            let base = i * 3 * w;
+            let (mut quot_ones, mut den_ones) = (0u64, 0u64);
+            let mut dff = false;
+            for k in 0..w {
+                let mask = word_mask(k, w, n_bits);
+                let a = self.scratch[base + k];
+                let b1 = self.scratch[base + w + k];
+                let b0 = self.scratch[base + 2 * w + k];
+                // Numerator: P(A)·P(B|A); denominator: MUX(b0, b1; sel=a).
+                let num = a & b1;
+                let den = (num | (!a & b0)) & mask;
+                den_ones += den.count_ones() as u64;
+                quot_ones += (cordiv_word(num & mask, den, &mut dff) & mask).count_ones() as u64;
+            }
+            *slot = Ok(BatchedPosterior {
+                posterior: quot_ones as f64 / n_bits as f64,
+                marginal: den_ones as f64 / n_bits as f64,
+            });
+        }
+        results
+    }
+}
+
+/// Batched Eq.-5 fusion with normalization: N decisions (possibly of
+/// different modality counts) through one grouped encode and one
+/// word-parallel sweep.
+#[derive(Debug, Default)]
+pub struct BatchedFusion {
+    scratch: Vec<u64>,
+}
+
+impl BatchedFusion {
+    /// Engine with an empty scratch buffer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Closed-form fused posterior for one row (convenience re-export).
+    pub fn exact(posteriors: &[f64]) -> f64 {
+        exact_fusion_m(posteriors)
+    }
+
+    /// Fuse every row of detector posteriors in order on `bank`.
+    /// Failures are per-decision, mirroring a loop of
+    /// [`super::FusionOperator::fuse`] calls bit-for-bit.
+    pub fn fuse_batch(&mut self, bank: &mut SneBank, rows: &[&[f64]]) -> Vec<Result<f64>> {
+        let n_bits = bank.n_bits();
+        let w = n_bits.div_ceil(64);
+        // Per-row scratch offsets: row i needs (m_i + 1) streams (the +1
+        // is the ½ select of the normalization MUX).
+        let mut offsets = Vec::with_capacity(rows.len() + 1);
+        let mut total = 0usize;
+        for row in rows {
+            offsets.push(total);
+            total += (row.len() + 1) * w;
+        }
+        offsets.push(total);
+        self.scratch.resize(total, 0);
+
+        // Phase 1: grouped encode (modality streams, then the ½ select —
+        // the exact order FusionOperator::fuse draws them in).
+        let mut results: Vec<Result<f64>> = Vec::with_capacity(rows.len());
+        let mut probs = Vec::new();
+        for (i, row) in rows.iter().enumerate() {
+            let encoded = Self::validate(row).and_then(|_| {
+                probs.clear();
+                probs.extend_from_slice(row);
+                probs.push(0.5);
+                bank.encode_group_into(&probs, &mut self.scratch[offsets[i]..offsets[i + 1]])
+            });
+            match encoded {
+                Ok(()) => {
+                    bank.finish_decision();
+                    results.push(Ok(0.0));
+                }
+                Err(e) => results.push(Err(e)),
+            }
+        }
+
+        // Phase 2: word-parallel ∏pᵢ / ∏(1−pᵢ) / normalize / CORDIV.
+        for (i, slot) in results.iter_mut().enumerate() {
+            if slot.is_err() {
+                continue;
+            }
+            let m = rows[i].len();
+            let base = offsets[i];
+            let mut quot_ones = 0u64;
+            let mut dff = false;
+            for k in 0..w {
+                let mask = word_mask(k, w, n_bits);
+                let mut prod = self.scratch[base + k];
+                let mut cprod = !prod;
+                for j in 1..m {
+                    let s = self.scratch[base + j * w + k];
+                    prod &= s;
+                    cprod &= !s;
+                }
+                let half = self.scratch[base + m * w + k];
+                // num = ∏p · sel½ ; den = MUX(∏(1−p), ∏p; sel½).
+                let num = prod & half;
+                let den = (num | (!half & cprod)) & mask;
+                quot_ones += (cordiv_word(num & mask, den, &mut dff) & mask).count_ones() as u64;
+            }
+            *slot = Ok(quot_ones as f64 / n_bits as f64);
+        }
+        results
+    }
+
+    fn validate(row: &[f64]) -> Result<()> {
+        if row.len() < 2 {
+            return Err(Error::Config("fusion needs >= 2 modalities".into()));
+        }
+        for &p in row {
+            Error::check_prob("p_i", p)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{FusionOperator, InferenceOperator};
+    use super::*;
+    use crate::stochastic::SneConfig;
+
+    fn bank(n_bits: usize, seed: u64) -> SneBank {
+        SneBank::new(SneConfig { n_bits, ..Default::default() }, seed).unwrap()
+    }
+
+    fn queries(n: usize) -> Vec<InferenceQuery> {
+        (0..n)
+            .map(|i| {
+                let x = (i as f64 + 0.5) / n as f64;
+                InferenceQuery {
+                    prior: 0.2 + 0.6 * x,
+                    likelihood: 0.9 - 0.5 * x,
+                    likelihood_not: 0.2 + 0.4 * x,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batched_inference_is_bit_identical_to_single_path() {
+        // Same seed, same decision order => exactly the same posteriors.
+        let qs = queries(32);
+        let mut single_bank = bank(100, 4242);
+        let op = InferenceOperator::default();
+        let singles: Vec<_> = qs
+            .iter()
+            .map(|q| {
+                op.try_infer(&mut single_bank, q.prior, q.likelihood, q.likelihood_not)
+                    .unwrap()
+            })
+            .collect();
+        let mut batched_bank = bank(100, 4242);
+        let mut engine = BatchedInference::new();
+        let batched = engine.infer_batch(&mut batched_bank, &qs);
+        assert_eq!(batched.len(), singles.len());
+        for (i, (b, s)) in batched.iter().zip(&singles).enumerate() {
+            let b = b.as_ref().unwrap();
+            assert_eq!(b.posterior, s.posterior, "decision {i} posterior diverged");
+            assert_eq!(b.marginal, s.marginal, "decision {i} marginal diverged");
+        }
+        // Ledgers agree too (same pulses, energy, virtual time).
+        assert_eq!(single_bank.ledger().pulses, batched_bank.ledger().pulses);
+        assert_eq!(
+            single_bank.ledger().clock.elapsed_ns(),
+            batched_bank.ledger().clock.elapsed_ns()
+        );
+    }
+
+    #[test]
+    fn batched_fusion_is_bit_identical_to_single_path() {
+        let rows: Vec<Vec<f64>> =
+            (0..32).map(|i| vec![0.3 + 0.02 * i as f64, 0.85 - 0.01 * i as f64]).collect();
+        let row_refs: Vec<&[f64]> = rows.iter().map(Vec::as_slice).collect();
+        let mut single_bank = bank(100, 99);
+        let op = FusionOperator::default();
+        let singles: Vec<f64> =
+            rows.iter().map(|r| op.fuse(&mut single_bank, r).unwrap().fused).collect();
+        let mut batched_bank = bank(100, 99);
+        let mut engine = BatchedFusion::new();
+        let batched = engine.fuse_batch(&mut batched_bank, &row_refs);
+        for (i, (b, s)) in batched.iter().zip(&singles).enumerate() {
+            assert_eq!(*b.as_ref().unwrap(), *s, "decision {i} diverged");
+        }
+    }
+
+    #[test]
+    fn batched_fusion_handles_higher_arity_and_odd_lengths() {
+        // 3- and 4-modal rows, non-multiple-of-64 stream length.
+        let rows: Vec<Vec<f64>> = vec![
+            vec![0.7, 0.6, 0.8],
+            vec![0.7, 0.6, 0.8, 0.55],
+            vec![0.9, 0.8, 0.2],
+        ];
+        let row_refs: Vec<&[f64]> = rows.iter().map(Vec::as_slice).collect();
+        let mut single_bank = bank(250, 7);
+        let op = FusionOperator::default();
+        let singles: Vec<f64> =
+            rows.iter().map(|r| op.fuse(&mut single_bank, r).unwrap().fused).collect();
+        let mut engine = BatchedFusion::new();
+        let mut batched_bank = bank(250, 7);
+        let batched = engine.fuse_batch(&mut batched_bank, &row_refs);
+        for (b, s) in batched.iter().zip(&singles) {
+            assert_eq!(*b.as_ref().unwrap(), *s);
+        }
+    }
+
+    #[test]
+    fn batched_engines_converge_to_exact_bayes() {
+        let qs = queries(8);
+        let mut engine = BatchedInference::new();
+        let mut b = bank(100_000, 11);
+        for (q, r) in qs.iter().zip(engine.infer_batch(&mut b, &qs)) {
+            let r = r.unwrap();
+            assert!((r.posterior - q.exact()).abs() < 0.02, "{q:?}: {}", r.posterior);
+            assert!((r.marginal - q.exact_marginal()).abs() < 0.01);
+        }
+        let rows: Vec<Vec<f64>> = vec![vec![0.8, 0.7], vec![0.6, 0.9], vec![0.5, 0.5]];
+        let row_refs: Vec<&[f64]> = rows.iter().map(Vec::as_slice).collect();
+        let mut engine = BatchedFusion::new();
+        for (row, r) in rows.iter().zip(engine.fuse_batch(&mut b, &row_refs)) {
+            assert!((r.unwrap() - BatchedFusion::exact(row)).abs() < 0.025);
+        }
+    }
+
+    #[test]
+    fn per_decision_errors_leave_the_rest_bit_identical() {
+        // Invalid middle query: single path skips it the same way.
+        let mut qs = queries(9);
+        qs[4].prior = 1.5;
+        let mut single_bank = bank(100, 3);
+        let op = InferenceOperator::default();
+        let singles: Vec<_> = qs
+            .iter()
+            .map(|q| op.try_infer(&mut single_bank, q.prior, q.likelihood, q.likelihood_not))
+            .collect();
+        let mut batched_bank = bank(100, 3);
+        let mut engine = BatchedInference::new();
+        let batched = engine.infer_batch(&mut batched_bank, &qs);
+        for (i, (b, s)) in batched.iter().zip(&singles).enumerate() {
+            match (b, s) {
+                (Ok(b), Ok(s)) => assert_eq!(b.posterior, s.posterior, "decision {i}"),
+                (Err(_), Err(_)) => assert_eq!(i, 4),
+                _ => panic!("decision {i}: batched/single disagree on success"),
+            }
+        }
+        // Fusion arity validation.
+        let mut engine = BatchedFusion::new();
+        let short: Vec<&[f64]> = vec![&[0.5]];
+        assert!(engine.fuse_batch(&mut batched_bank, &short)[0].is_err());
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let mut b = bank(100, 1);
+        assert!(BatchedInference::new().infer_batch(&mut b, &[]).is_empty());
+        assert!(BatchedFusion::new().fuse_batch(&mut b, &[]).is_empty());
+        assert_eq!(b.ledger().pulses, 0);
+    }
+}

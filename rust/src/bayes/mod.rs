@@ -11,12 +11,14 @@
 //! LFSR-based stochastic computing.
 
 mod analysis;
+mod batch;
 mod exact;
 mod fusion;
 mod inference;
 mod topology;
 
 pub use analysis::{bit_length_sweep, BitLengthRow};
+pub use batch::{BatchedFusion, BatchedInference, BatchedPosterior, InferenceQuery};
 pub use exact::{exact_fusion, exact_marginal, exact_posterior, exact_fusion_m};
 pub use fusion::{FusionConfig, FusionOperator, FusionResult};
 pub use inference::{InferenceConfig, InferenceOperator, InferenceResult};

@@ -56,11 +56,22 @@ impl Bench {
     /// under `BENCH_FAST=1`).
     pub fn new(group: &str) -> Self {
         let fast = std::env::var("BENCH_FAST").is_ok();
+        if fast {
+            Self::with_windows(group, Duration::from_millis(30), Duration::from_millis(100))
+        } else {
+            Self::with_windows(group, Duration::from_millis(300), Duration::from_secs(1))
+        }
+    }
+
+    /// New group with explicit warmup/measure windows (used by smoke
+    /// tests that need deterministic-duration runs without touching the
+    /// process-global `BENCH_FAST` env var).
+    pub fn with_windows(group: &str, warmup: Duration, window: Duration) -> Self {
         println!("\n== bench group: {group} ==");
         Self {
             group: group.to_string(),
-            warmup: if fast { Duration::from_millis(30) } else { Duration::from_millis(300) },
-            window: if fast { Duration::from_millis(100) } else { Duration::from_secs(1) },
+            warmup,
+            window,
             results: Vec::new(),
             filter: std::env::var("BENCH_FILTER").ok(),
         }
@@ -141,6 +152,58 @@ impl Bench {
         println!("== end group: {} ({} benchmarks) ==", self.group, self.results.len());
         self.results
     }
+
+    /// Like [`Self::finish`], but also export the results as
+    /// `BENCH_<group>.json` at the repository root so the perf
+    /// trajectory is machine-readable across PRs.
+    pub fn finish_and_export(self) -> Vec<BenchResult> {
+        let group = self.group.clone();
+        let results = self.finish();
+        if results.is_empty() {
+            return results;
+        }
+        let path = Self::export_path(&group);
+        match std::fs::write(&path, render_json(&group, &results)) {
+            Ok(()) => println!("  wrote {}", path.display()),
+            Err(e) => eprintln!("  could not write {}: {e}", path.display()),
+        }
+        results
+    }
+
+    /// `BENCH_<group>.json` at the repo root (the parent of the crate
+    /// manifest dir; benches run with the crate dir as cwd).
+    pub fn export_path(group: &str) -> std::path::PathBuf {
+        let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+        manifest
+            .parent()
+            .unwrap_or(manifest)
+            .join(format!("BENCH_{group}.json"))
+    }
+}
+
+/// Hand-rolled JSON (serde is not vendored offline). Names are plain
+/// identifiers, but escape quotes/backslashes defensively anyway.
+fn render_json(group: &str, results: &[BenchResult]) -> String {
+    let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"group\": \"{}\",\n", esc(group)));
+    out.push_str("  \"results\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"mean_ns\": {:.1}, \"p50_ns\": {:.1}, \
+             \"p99_ns\": {:.1}, \"iters\": {}, \"throughput_per_s\": {:.1}}}{}\n",
+            esc(&r.name),
+            r.mean_ns,
+            r.p50_ns,
+            r.p99_ns,
+            r.iters,
+            r.throughput(),
+            if i + 1 == results.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
 }
 
 fn fmt_ns(ns: f64) -> String {
@@ -174,6 +237,63 @@ mod tests {
         assert!(r.p99_ns >= r.p50_ns * 0.5);
         let all = b.finish();
         assert_eq!(all.len(), 1);
+    }
+
+    #[test]
+    fn operators_json_seeds_the_perf_trajectory() {
+        // A fast smoke run of the headline single-vs-batched operator
+        // costs. Seeds BENCH_operators.json at the repo root when it does
+        // not exist yet, so the perf trajectory starts populating from
+        // plain `cargo test`; an existing file (e.g. full-window `cargo
+        // bench` numbers) is never clobbered by test smoke numbers.
+        use crate::bayes::{BatchedInference, InferenceOperator, InferenceQuery};
+        use crate::device::WearPolicy;
+        use crate::stochastic::{SneBank, SneConfig};
+        if std::env::var("BENCH_FILTER").is_ok() {
+            return; // a filter would suppress the benches below
+        }
+        let mut b = Bench::with_windows(
+            "operators",
+            Duration::from_millis(5),
+            Duration::from_millis(25),
+        );
+        let cfg =
+            SneConfig { n_bits: 100, wear_policy: WearPolicy::Ignore, ..Default::default() };
+        let queries: Vec<InferenceQuery> = (0..32)
+            .map(|i| {
+                let x = (i as f64 + 0.5) / 32.0;
+                InferenceQuery {
+                    prior: 0.2 + 0.6 * x,
+                    likelihood: 0.9 - 0.5 * x,
+                    likelihood_not: 0.2 + 0.4 * x,
+                }
+            })
+            .collect();
+        let op = InferenceOperator::default();
+        let mut bank = SneBank::new(cfg.clone(), 1).unwrap();
+        b.bench("inference_single_x32_100bit", || {
+            for q in &queries {
+                std::hint::black_box(
+                    op.infer_with_likelihoods(&mut bank, q.prior, q.likelihood, q.likelihood_not)
+                        .posterior,
+                );
+            }
+        });
+        let mut bank = SneBank::new(cfg, 1).unwrap();
+        let mut engine = BatchedInference::new();
+        b.bench("inference_batched_32_100bit", || {
+            for r in engine.infer_batch(&mut bank, &queries) {
+                std::hint::black_box(r.unwrap().posterior);
+            }
+        });
+        let path = Bench::export_path("operators");
+        let results = if path.exists() { b.finish() } else { b.finish_and_export() };
+        assert_eq!(results.len(), 2);
+        // Read-only checkouts can't take the export; that's an
+        // environment limitation, not a failure of the harness.
+        if let Ok(json) = std::fs::read_to_string(&path) {
+            assert!(json.contains("\"group\": \"operators\""), "{json}");
+        }
     }
 
     #[test]

@@ -4,7 +4,9 @@
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
-use super::request::DecisionRequest;
+use crate::bayes::InferenceQuery;
+
+use super::request::{DecisionKind, DecisionRequest};
 
 /// A batch of same-class requests ready for execution.
 #[derive(Debug)]
@@ -24,6 +26,37 @@ impl Batch {
     /// Is the batch empty?
     pub fn is_empty(&self) -> bool {
         self.requests.is_empty()
+    }
+
+    /// The batch as one [`crate::bayes::BatchedInference`] input — `Some`
+    /// iff **every** member is an inference request (guaranteed for
+    /// class 0 batches; the batcher never mixes classes).
+    pub fn inference_queries(&self) -> Option<Vec<InferenceQuery>> {
+        self.requests
+            .iter()
+            .map(|r| match &r.kind {
+                DecisionKind::Inference { prior, likelihood, likelihood_not } => {
+                    Some(InferenceQuery {
+                        prior: *prior,
+                        likelihood: *likelihood,
+                        likelihood_not: *likelihood_not,
+                    })
+                }
+                DecisionKind::Fusion { .. } => None,
+            })
+            .collect()
+    }
+
+    /// The batch as one [`crate::bayes::BatchedFusion`] input — `Some`
+    /// iff every member is a fusion request.
+    pub fn fusion_rows(&self) -> Option<Vec<&[f64]>> {
+        self.requests
+            .iter()
+            .map(|r| match &r.kind {
+                DecisionKind::Fusion { posteriors } => Some(posteriors.as_slice()),
+                DecisionKind::Inference { .. } => None,
+            })
+            .collect()
     }
 }
 
@@ -185,6 +218,23 @@ mod tests {
         assert_eq!(total, 3);
         assert_eq!(b.queued(), 0);
         assert!(b.flush_all().is_empty());
+    }
+
+    #[test]
+    fn batch_converts_to_batched_engine_inputs() {
+        let mut b = Batcher::new(2, Duration::from_secs(1));
+        b.push(inf(1));
+        let batch = b.push(inf(2)).expect("two inferences fill");
+        let queries = batch.inference_queries().expect("homogeneous inference batch");
+        assert_eq!(queries.len(), 2);
+        assert!((queries[0].prior - 0.5).abs() < 1e-12);
+        assert!(batch.fusion_rows().is_none());
+
+        b.push(fus(3));
+        let batch = b.push(fus(4)).expect("two fusions fill");
+        let rows = batch.fusion_rows().expect("homogeneous fusion batch");
+        assert_eq!(rows, vec![&[0.8, 0.6][..], &[0.8, 0.6][..]]);
+        assert!(batch.inference_queries().is_none());
     }
 
     #[test]

@@ -7,7 +7,7 @@ use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::bayes::{FusionOperator, InferenceOperator};
+use crate::bayes::{BatchedFusion, BatchedInference, InferenceQuery};
 use crate::config::{AppConfig, Backend};
 use crate::runtime::Runtime;
 use crate::stochastic::SneBank;
@@ -173,14 +173,22 @@ fn dispatcher_loop(
     let mut next_worker = 0usize;
     let dispatch = |batch: Batch, next_worker: &mut usize| {
         metrics.on_batch(batch.len());
-        // Round-robin; skip dead workers.
+        // Round-robin; skip dead workers. `send` returns the batch inside
+        // the error on failure, so it can be retried on the next worker.
+        let mut batch = batch;
         for _ in 0..worker_txs.len() {
             let idx = *next_worker % worker_txs.len();
             *next_worker += 1;
-            if worker_txs[idx].send(batch).is_ok() {
-                return;
+            match worker_txs[idx].send(batch) {
+                Ok(()) => return,
+                Err(mpsc::SendError(b)) => batch = b,
             }
-            unreachable!("worker channel closed before dispatcher shutdown");
+        }
+        // Every worker is gone (panicked): count the failures so metrics
+        // show the outage, then drop the batch — the disconnected reply
+        // channels surface a Coordinator error to every caller.
+        for _ in &batch.requests {
+            metrics.on_fail();
         }
     };
     let mut shutdown = false;
@@ -228,8 +236,13 @@ fn dispatcher_loop(
 }
 
 /// Per-worker execution context.
+///
+/// Native workers own the word-parallel batched engines: a whole
+/// [`Batch`] executes through one grouped SNE encode + one packed
+/// dataflow sweep instead of looping single decisions (bit-identical to
+/// the single path — see [`crate::bayes::BatchedInference`]).
 enum WorkerContext {
-    Native { bank: SneBank, inference: InferenceOperator, fusion: FusionOperator },
+    Native { bank: SneBank, inference: BatchedInference, fusion: BatchedFusion },
     Pjrt { runtime: Runtime, rng: Rng, n_bits: usize },
 }
 
@@ -238,8 +251,8 @@ impl WorkerContext {
         match router.backend() {
             Backend::Native => Ok(WorkerContext::Native {
                 bank: SneBank::new(config.sne.clone(), config.seed ^ (worker_idx << 32))?,
-                inference: InferenceOperator::default(),
-                fusion: FusionOperator::default(),
+                inference: BatchedInference::new(),
+                fusion: BatchedFusion::new(),
             }),
             Backend::Pjrt => {
                 let runtime = Runtime::load_subset(
@@ -283,18 +296,9 @@ fn execute_batch(ctx: &mut WorkerContext, batch: Batch, router: &Router, metrics
 
     // Compute posteriors for the whole batch up-front.
     let posteriors: Vec<Result<f64>> = match (&plan, &mut *ctx) {
-        (ExecPlan::Native, WorkerContext::Native { bank, inference, fusion }) => batch
-            .requests
-            .iter()
-            .map(|req| match &req.kind {
-                DecisionKind::Inference { prior, likelihood, likelihood_not } => inference
-                    .try_infer(bank, *prior, *likelihood, *likelihood_not)
-                    .map(|r| r.posterior),
-                DecisionKind::Fusion { posteriors } => {
-                    fusion.fuse(bank, posteriors).map(|r| r.fused)
-                }
-            })
-            .collect(),
+        (ExecPlan::Native, WorkerContext::Native { bank, inference, fusion }) => {
+            execute_native(bank, inference, fusion, &batch)
+        }
         (ExecPlan::Pjrt { entry, chunk }, WorkerContext::Pjrt { runtime, rng, .. }) => {
             execute_pjrt(runtime, rng, entry, *chunk, &batch)
         }
@@ -330,6 +334,53 @@ fn execute_batch(ctx: &mut WorkerContext, batch: Batch, router: &Router, metrics
             }
         };
         let _ = req.reply.send(response); // caller may have gone away
+    }
+}
+
+/// Run a whole native batch through the word-parallel batched engines:
+/// one grouped SNE encode plus one packed AND/MUX/CORDIV sweep for all N
+/// member decisions (bit-identical to looping the single-decision
+/// operators, ~2×+ faster at batch 32 — measured in
+/// `benches/coordinator.rs`). The batcher groups by class, so a batch is
+/// always homogeneous; the mixed-batch arm is a defensive fallback that
+/// serves per-request through batch-of-one calls.
+fn execute_native(
+    bank: &mut SneBank,
+    inference: &mut BatchedInference,
+    fusion: &mut BatchedFusion,
+    batch: &Batch,
+) -> Vec<Result<f64>> {
+    if let Some(queries) = batch.inference_queries() {
+        inference
+            .infer_batch(bank, &queries)
+            .into_iter()
+            .map(|r| r.map(|p| p.posterior))
+            .collect()
+    } else if let Some(rows) = batch.fusion_rows() {
+        fusion.fuse_batch(bank, &rows)
+    } else {
+        batch
+            .requests
+            .iter()
+            .map(|req| match &req.kind {
+                DecisionKind::Inference { prior, likelihood, likelihood_not } => {
+                    let q = InferenceQuery {
+                        prior: *prior,
+                        likelihood: *likelihood,
+                        likelihood_not: *likelihood_not,
+                    };
+                    inference
+                        .infer_batch(bank, &[q])
+                        .pop()
+                        .expect("one result per query")
+                        .map(|p| p.posterior)
+                }
+                DecisionKind::Fusion { posteriors } => fusion
+                    .fuse_batch(bank, &[posteriors.as_slice()])
+                    .pop()
+                    .expect("one result per row"),
+            })
+            .collect()
     }
 }
 

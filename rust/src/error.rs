@@ -4,47 +4,95 @@
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// Errors surfaced by the bayes-mem stack.
-#[derive(Debug, thiserror::Error)]
+///
+/// `Display` and `std::error::Error` are implemented by hand: the build
+/// environment is fully offline, so `thiserror` is not available.
+#[derive(Debug)]
 pub enum Error {
     /// A probability argument fell outside `[0, 1]`.
-    #[error("probability out of range: {name} = {value}")]
-    ProbabilityRange { name: &'static str, value: f64 },
+    ProbabilityRange {
+        /// Name of the offending argument.
+        name: &'static str,
+        /// The out-of-range value.
+        value: f64,
+    },
 
     /// Bitstream length mismatch between operands of a bitwise op.
-    #[error("bitstream length mismatch: {lhs} vs {rhs}")]
-    LengthMismatch { lhs: usize, rhs: usize },
+    LengthMismatch {
+        /// Left operand length, bits.
+        lhs: usize,
+        /// Right operand length, bits.
+        rhs: usize,
+    },
 
     /// Configuration failed validation.
-    #[error("invalid config: {0}")]
     Config(String),
 
     /// A memristor device exceeded its endurance budget.
-    #[error("device {row},{col} worn out after {cycles} cycles")]
-    DeviceWorn { row: usize, col: usize, cycles: u64 },
+    DeviceWorn {
+        /// Array row of the worn device.
+        row: usize,
+        /// Array column (or bank slot) of the worn device.
+        col: usize,
+        /// Switching cycles the device has accumulated.
+        cycles: u64,
+    },
 
     /// Artifact (AOT HLO) discovery / loading failure.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
-    /// PJRT runtime failure (compile or execute).
-    #[error("runtime error: {0}")]
+    /// Runtime failure (artifact compile or execute).
     Runtime(String),
 
     /// Coordinator rejected or dropped a request.
-    #[error("coordinator error: {0}")]
     Coordinator(String),
 
     /// Deadline exceeded while waiting for a decision.
-    #[error("deadline exceeded after {0:?}")]
     Deadline(std::time::Duration),
 
     /// Underlying I/O error.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// TOML parse error.
-    #[error("toml parse error: {0}")]
     Toml(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::ProbabilityRange { name, value } => {
+                write!(f, "probability out of range: {name} = {value}")
+            }
+            Error::LengthMismatch { lhs, rhs } => {
+                write!(f, "bitstream length mismatch: {lhs} vs {rhs}")
+            }
+            Error::Config(msg) => write!(f, "invalid config: {msg}"),
+            Error::DeviceWorn { row, col, cycles } => {
+                write!(f, "device {row},{col} worn out after {cycles} cycles")
+            }
+            Error::Artifact(msg) => write!(f, "artifact error: {msg}"),
+            Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
+            Error::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
+            Error::Deadline(d) => write!(f, "deadline exceeded after {d:?}"),
+            Error::Io(e) => write!(f, "{e}"),
+            Error::Toml(msg) => write!(f, "toml parse error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl Error {

@@ -17,7 +17,9 @@
 //! * [`logic`] — probabilistic Boolean gates (AND/OR/XOR/MUX) in all
 //!   correlation regimes of Table S1, plus the CORDIV divider.
 //! * [`bayes`] — the paper's headline contribution: lightweight Bayesian
-//!   inference (Eq. 1, Fig. 3) and fusion (Eqs. 2–5, Fig. 4) operators.
+//!   inference (Eq. 1, Fig. 3) and fusion (Eqs. 2–5, Fig. 4) operators,
+//!   plus the word-parallel batched engine ([`bayes::BatchedInference`],
+//!   [`bayes::BatchedFusion`]) the serving layer executes through.
 //! * [`scene`] — synthetic road-scene workloads standing in for the FLIR
 //!   RGB-thermal dataset and YOLO-class detectors.
 //! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas

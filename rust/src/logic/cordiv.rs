@@ -42,30 +42,43 @@ impl Cordiv {
             return Err(Error::LengthMismatch { lhs: a.len(), rhs: b.len() });
         }
         let mut q = Bitstream::zeros(a.len());
-        // Observe that q_k equals the DFF *after* slot k: the quotient is
-        // the "last defined value" fill of (a at the positions where b=1),
-        // seeded by the carried DFF. That fill is bit-parallel per word
-        // via Hillis-Steele doubling (6 rounds instead of a 64-step
-        // serial loop — §Perf L3-1): after round r every lane knows the
-        // value of the nearest divisor slot within 2^r below it.
+        let mut dff = self.dff;
         for (wi, (&wa, &wb)) in a.words().iter().zip(b.words()).enumerate() {
-            let mut val = wa & wb; // marker values
-            let mut def = wb; // defined lanes
-            let mut s = 1u32;
-            while s < 64 {
-                val |= (val << s) & !def;
-                def |= def << s;
-                s <<= 1;
-            }
-            // Lanes before the first marker hold the carried DFF.
-            let carry = if self.dff { !def } else { 0 };
-            let wq = val | carry;
-            self.dff = (wq >> 63) & 1 == 1;
-            q.words_mut()[wi] = wq;
+            q.words_mut()[wi] = cordiv_word(wa, wb, &mut dff);
         }
+        self.dff = dff;
         q.mask_tail();
         Ok(q)
     }
+}
+
+/// One packed word of the CORDIV quotient.
+///
+/// Observe that q_k equals the DFF *after* slot k: the quotient is the
+/// "last defined value" fill of (num at the positions where den=1),
+/// seeded by the carried DFF. That fill is bit-parallel per word via
+/// Hillis-Steele doubling (6 rounds instead of a 64-step serial loop —
+/// §Perf L3-1): after round r every lane knows the value of the nearest
+/// divisor slot within 2^r below it. Lanes before the first marker hold
+/// the carried DFF, which is updated to the word's top lane on exit.
+///
+/// Shared by [`Cordiv::divide`] and the batched engine
+/// ([`crate::bayes::BatchedInference`] / [`crate::bayes::BatchedFusion`])
+/// so the two dataflows cannot drift apart.
+#[inline]
+pub(crate) fn cordiv_word(num: u64, den: u64, dff: &mut bool) -> u64 {
+    let mut val = num & den; // marker values
+    let mut def = den; // defined lanes
+    let mut s = 1u32;
+    while s < 64 {
+        val |= (val << s) & !def;
+        def |= def << s;
+        s <<= 1;
+    }
+    let carry = if *dff { !def } else { 0 };
+    let wq = val | carry;
+    *dff = (wq >> 63) & 1 == 1;
+    wq
 }
 
 /// One-shot division with a fresh divider.

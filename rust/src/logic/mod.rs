@@ -17,5 +17,6 @@ mod gates;
 mod mux;
 
 pub use cordiv::{cordiv, Cordiv};
+pub(crate) use cordiv::cordiv_word;
 pub use gates::{expected_value, BooleanOp, CorrelationMode, ProbGate};
 pub use mux::{mux_weighted_add, MuxAdder};

@@ -11,11 +11,22 @@
 //! bayes-mem config                                 print an example config
 //! ```
 //!
-//! (Argument parsing is hand-rolled: the offline build has no clap.)
+//! (Argument parsing and error plumbing are hand-rolled: the offline
+//! build has no clap/anyhow.)
 
 use std::path::PathBuf;
 use std::process::ExitCode;
 use std::time::{Duration, Instant};
+
+/// CLI-level result: any error that can describe itself.
+type CliResult<T> = std::result::Result<T, Box<dyn std::error::Error>>;
+
+/// `anyhow::bail!`-style early return with a formatted message.
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err(format!($($arg)*).into())
+    };
+}
 
 use bayes_mem::bayes::{FusionOperator, InferenceOperator};
 use bayes_mem::config::{AppConfig, Backend};
@@ -85,7 +96,7 @@ impl Flags {
     }
 }
 
-fn load_config(flags: &Flags) -> anyhow::Result<AppConfig> {
+fn load_config(flags: &Flags) -> CliResult<AppConfig> {
     let mut cfg = match flags.get("config") {
         Some(path) => AppConfig::load(std::path::Path::new(path))?,
         None => AppConfig::default(),
@@ -94,7 +105,7 @@ fn load_config(flags: &Flags) -> anyhow::Result<AppConfig> {
         cfg.coordinator.backend = match backend {
             "native" => Backend::Native,
             "pjrt" => Backend::Pjrt,
-            other => anyhow::bail!("unknown backend {other}"),
+            other => bail!("unknown backend {other}"),
         };
     }
     if let Some(dir) = flags.get("artifacts") {
@@ -104,7 +115,7 @@ fn load_config(flags: &Flags) -> anyhow::Result<AppConfig> {
     Ok(cfg)
 }
 
-fn run(args: Vec<String>) -> anyhow::Result<()> {
+fn run(args: Vec<String>) -> CliResult<()> {
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     let flags = Flags::parse(&args[1.min(args.len())..]);
     match cmd {
@@ -138,7 +149,7 @@ USAGE:
   bayes-mem config
 ";
 
-fn cmd_fig(flags: &Flags) -> anyhow::Result<()> {
+fn cmd_fig(flags: &Flags) -> CliResult<()> {
     let seed = flags.u64_or("seed", 42);
     if flags.has("list") {
         for f in figures::registry() {
@@ -153,12 +164,12 @@ fn cmd_fig(flags: &Flags) -> anyhow::Result<()> {
         }
         return Ok(());
     }
-    let id = flags.get("id").ok_or_else(|| anyhow::anyhow!("need --id, --all or --list"))?;
+    let Some(id) = flags.get("id") else { bail!("need --id, --all or --list") };
     print!("{}", figures::run(id, seed)?);
     Ok(())
 }
 
-fn cmd_infer(flags: &Flags) -> anyhow::Result<()> {
+fn cmd_infer(flags: &Flags) -> CliResult<()> {
     let prior = flags.f64_or("prior", 0.57);
     let lik = flags.f64_or("lik", 0.77);
     let lik_not = flags.f64_or("lik-not", 0.655);
@@ -183,7 +194,7 @@ fn cmd_infer(flags: &Flags) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_fuse(flags: &Flags) -> anyhow::Result<()> {
+fn cmd_fuse(flags: &Flags) -> CliResult<()> {
     let ps: Vec<f64> = flags.get_all("p").iter().filter_map(|v| v.parse().ok()).collect();
     let ps = if ps.len() >= 2 { ps } else { vec![0.8, 0.7] };
     let bits = flags.usize_or("bits", 100);
@@ -203,7 +214,7 @@ fn cmd_fuse(flags: &Flags) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_artifacts(flags: &Flags) -> anyhow::Result<()> {
+fn cmd_artifacts(flags: &Flags) -> CliResult<()> {
     let dir = PathBuf::from(flags.get("artifacts").unwrap_or("artifacts"));
     let rt = Runtime::load_dir(&dir)?;
     println!("artifacts dir: {}", dir.display());
@@ -215,7 +226,7 @@ fn cmd_artifacts(flags: &Flags) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
+fn cmd_serve(flags: &Flags) -> CliResult<()> {
     let mut cfg = load_config(flags)?;
     cfg.coordinator.workers = flags.usize_or("workers", cfg.coordinator.workers);
     let requests = flags.usize_or("requests", 10_000);
@@ -269,7 +280,7 @@ fn cmd_serve(flags: &Flags) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_parse_scene(flags: &Flags) -> anyhow::Result<()> {
+fn cmd_parse_scene(flags: &Flags) -> CliResult<()> {
     let cfg = load_config(flags)?;
     let frames = flags.usize_or("frames", 200);
     let coord = Coordinator::start(&cfg)?;

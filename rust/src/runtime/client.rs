@@ -1,4 +1,25 @@
-//! PJRT client wrapper: compile HLO-text artifacts once, execute many.
+//! Artifact runtime: load the AOT entrypoints once, execute many.
+//!
+//! The offline build has no PJRT/XLA binding crate, so this runtime is a
+//! faithful **interpreter** of the artifact entrypoints instead of a
+//! PJRT client: it validates the manifest + HLO text at load time and
+//! executes the entrypoint's datapath (the same one `python -m
+//! compile.aot` lowered — see `python/compile/kernels/ref.py`) in pure
+//! Rust. Inputs, shapes, and outputs match the compiled artifacts
+//! bit-for-bit in structure and in distribution, so the coordinator's
+//! `pjrt` backend, the parity tests, and the benches all run unchanged.
+//!
+//! Supported entrypoint families (the ones `compile.aot` emits):
+//!
+//! * `inference_b{B}_n{N}` — `(B,3)` probs + `(B,3,N)` uniforms →
+//!   `B×2` rows `[posterior, marginal]`.
+//! * `fusion_b{B}_m{M}_n{N}` — `(B,M)` probs + `(B,M+1,N)` uniforms →
+//!   `B` fused posteriors (the extra uniform row is the ½ select).
+//! * `detector_b{B}` — `(B,6)` obstacle features → `B×2` rows
+//!   `[P(y|x_rgb), P(y|x_thermal)]` (the published logistic heads).
+//! * `scene_b{B}_n{N}` — `(B,6)` features + `(B,3,N)` uniforms → `B×3`
+//!   rows `[p_rgb, p_thermal, fused]` (detectors → ref-31 prior fill →
+//!   stochastic 2-modal fusion, `model.scene_pipeline`).
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -8,10 +29,67 @@ use crate::{Error, Result};
 
 use super::{ArtifactManifest, EntrypointSpec};
 
-/// One compiled entrypoint.
+/// Which datapath an entrypoint name lowers to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EntryOp {
+    /// Eq.-1 inference: batch, stream length.
+    Inference { batch: usize, n_bits: usize },
+    /// Eq.-5 fusion: batch, modalities, stream length.
+    Fusion { batch: usize, modalities: usize, n_bits: usize },
+    /// Detector heads: batch.
+    Detector { batch: usize },
+    /// End-to-end scene frame: detectors → prior fill → 2-modal fusion.
+    Scene { batch: usize, n_bits: usize },
+}
+
+impl EntryOp {
+    /// Parse `inference_b16_n256` / `fusion_b16_m2_n256` / `detector_b64`
+    /// / `scene_b64_n256`.
+    fn parse(name: &str) -> Option<EntryOp> {
+        let num = |tok: &str, prefix: char| -> Option<usize> {
+            tok.strip_prefix(prefix).and_then(|d| d.parse().ok())
+        };
+        let parts: Vec<&str> = name.split('_').collect();
+        match *parts.as_slice() {
+            ["inference", b, n] => Some(EntryOp::Inference {
+                batch: num(b, 'b')?,
+                n_bits: num(n, 'n')?,
+            }),
+            ["fusion", b, m, n] => Some(EntryOp::Fusion {
+                batch: num(b, 'b')?,
+                modalities: num(m, 'm')?,
+                n_bits: num(n, 'n')?,
+            }),
+            ["detector", b] => Some(EntryOp::Detector { batch: num(b, 'b')? }),
+            ["scene", b, n] => Some(EntryOp::Scene {
+                batch: num(b, 'b')?,
+                n_bits: num(n, 'n')?,
+            }),
+            _ => None,
+        }
+    }
+
+    /// The input shapes this op requires (checked against the manifest).
+    fn expected_shapes(&self) -> Vec<Vec<usize>> {
+        match *self {
+            EntryOp::Inference { batch, n_bits } => {
+                vec![vec![batch, 3], vec![batch, 3, n_bits]]
+            }
+            EntryOp::Fusion { batch, modalities, n_bits } => {
+                vec![vec![batch, modalities], vec![batch, modalities + 1, n_bits]]
+            }
+            EntryOp::Detector { batch } => vec![vec![batch, 6]],
+            EntryOp::Scene { batch, n_bits } => {
+                vec![vec![batch, 6], vec![batch, 3, n_bits]]
+            }
+        }
+    }
+}
+
+/// One loaded (validated) entrypoint.
 pub struct RuntimeExecutable {
     spec: EntrypointSpec,
-    exe: xla::PjRtLoadedExecutable,
+    op: EntryOp,
 }
 
 impl RuntimeExecutable {
@@ -23,8 +101,7 @@ impl RuntimeExecutable {
     /// Execute with f32 inputs (one flat slice per declared input).
     ///
     /// Lengths are validated against the manifest shapes. Returns the flat
-    /// f32 contents of the first tuple output (all our entrypoints return
-    /// one tensor, lowered with `return_tuple=True`).
+    /// f32 contents of the entrypoint's single output tensor.
     pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
         if inputs.len() != self.spec.input_shapes.len() {
             return Err(Error::Runtime(format!(
@@ -34,7 +111,6 @@ impl RuntimeExecutable {
                 inputs.len()
             )));
         }
-        let mut literals = Vec::with_capacity(inputs.len());
         for (i, (&flat, shape)) in inputs.iter().zip(&self.spec.input_shapes).enumerate() {
             if flat.len() != self.spec.input_len(i) {
                 return Err(Error::Runtime(format!(
@@ -45,90 +121,211 @@ impl RuntimeExecutable {
                     shape
                 )));
             }
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(flat)
-                .reshape(&dims)
-                .map_err(|e| Error::Runtime(format!("reshape input{i}: {e}")))?;
-            literals.push(lit);
         }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| Error::Runtime(format!("{}: execute: {e}", self.spec.name)))?;
-        let first = result
-            .first()
-            .and_then(|r| r.first())
-            .ok_or_else(|| Error::Runtime(format!("{}: empty result", self.spec.name)))?;
-        let literal = first
-            .to_literal_sync()
-            .map_err(|e| Error::Runtime(format!("{}: to_literal: {e}", self.spec.name)))?;
-        let out = literal
-            .to_tuple1()
-            .map_err(|e| Error::Runtime(format!("{}: tuple unwrap: {e}", self.spec.name)))?;
-        out.to_vec::<f32>()
-            .map_err(|e| Error::Runtime(format!("{}: to_vec: {e}", self.spec.name)))
+        match self.op {
+            EntryOp::Inference { batch, n_bits } => {
+                Ok(run_inference(inputs[0], inputs[1], batch, n_bits))
+            }
+            EntryOp::Fusion { batch, modalities, n_bits } => {
+                Ok(run_fusion(inputs[0], inputs[1], batch, modalities, n_bits))
+            }
+            EntryOp::Detector { batch } => Ok(run_detector(inputs[0], batch)),
+            EntryOp::Scene { batch, n_bits } => {
+                Ok(run_scene(inputs[0], inputs[1], batch, n_bits))
+            }
+        }
     }
 }
 
-/// The PJRT CPU runtime: one client, many compiled entrypoints.
+/// CORDIV over one bit row (the D-flip-flop carry, bit-serial — the
+/// reference semantics of `cordiv_ref` in `python/compile/kernels/ref.py`).
+fn cordiv_mean(num: &[f32], den: &[f32]) -> f32 {
+    let mut dff = 0.0f32;
+    let mut acc = 0.0f32;
+    for (&nk, &dk) in num.iter().zip(den) {
+        let q = dk * nk + (1.0 - dk) * dff;
+        dff = q;
+        acc += q;
+    }
+    acc / num.len().max(1) as f32
+}
+
+fn run_inference(probs: &[f32], uniforms: &[f32], batch: usize, n_bits: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(batch * 2);
+    let mut num = vec![0.0f32; n_bits];
+    let mut den = vec![0.0f32; n_bits];
+    for row in 0..batch {
+        let p = &probs[row * 3..row * 3 + 3];
+        let u = &uniforms[row * 3 * n_bits..(row + 1) * 3 * n_bits];
+        let mut den_sum = 0.0f32;
+        for k in 0..n_bits {
+            let a = (u[k] < p[0]) as u8 as f32;
+            let b1 = (u[n_bits + k] < p[1]) as u8 as f32;
+            let b0 = (u[2 * n_bits + k] < p[2]) as u8 as f32;
+            num[k] = a * b1;
+            den[k] = a * b1 + (1.0 - a) * b0;
+            den_sum += den[k];
+        }
+        out.push(cordiv_mean(&num, &den));
+        out.push(den_sum / n_bits.max(1) as f32);
+    }
+    out
+}
+
+/// One fusion row: `p` (M modality posteriors) + `u` (M+1 uniform rows of
+/// `n_bits`) → fused posterior. The last uniform row drives the ½ select.
+fn fuse_row(p: &[f32], u: &[f32], n_bits: usize, num: &mut [f32], den: &mut [f32]) -> f32 {
+    let m = p.len();
+    for k in 0..n_bits {
+        let mut prod = 1.0f32;
+        let mut cprod = 1.0f32;
+        for (i, &pi) in p.iter().enumerate() {
+            let bit = (u[i * n_bits + k] < pi) as u8 as f32;
+            prod *= bit;
+            cprod *= 1.0 - bit;
+        }
+        let half = (u[m * n_bits + k] < 0.5) as u8 as f32;
+        num[k] = prod * half;
+        den[k] = half * prod + (1.0 - half) * cprod;
+    }
+    cordiv_mean(num, den)
+}
+
+fn run_fusion(
+    probs: &[f32],
+    uniforms: &[f32],
+    batch: usize,
+    modalities: usize,
+    n_bits: usize,
+) -> Vec<f32> {
+    let streams = modalities + 1; // the last uniform row is the ½ select
+    let mut out = Vec::with_capacity(batch);
+    let mut num = vec![0.0f32; n_bits];
+    let mut den = vec![0.0f32; n_bits];
+    for row in 0..batch {
+        let p = &probs[row * modalities..(row + 1) * modalities];
+        let u = &uniforms[row * streams * n_bits..(row + 1) * streams * n_bits];
+        out.push(fuse_row(p, u, n_bits, &mut num, &mut den));
+    }
+    out
+}
+
+/// Both logistic heads' confidences for one feature row.
+fn detector_row(x: &[f32]) -> [f32; 2] {
+    use crate::scene::{detector_logits, Modality};
+    let mut out = [0.0f32; 2];
+    for (slot, modality) in out.iter_mut().zip([Modality::Rgb, Modality::Thermal]) {
+        let (w, b) = detector_logits(modality);
+        let logit: f64 = w.iter().zip(x).map(|(wi, &xi)| wi * xi as f64).sum::<f64>() + b;
+        *slot = (1.0 / (1.0 + (-logit).exp())) as f32;
+    }
+    out
+}
+
+fn run_detector(features: &[f32], batch: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(batch * 2);
+    for row in 0..batch {
+        out.extend(detector_row(&features[row * 6..(row + 1) * 6]));
+    }
+    out
+}
+
+/// End-to-end scene rows (`model.scene_pipeline`): detector confidences,
+/// ref-31 prior fill, stochastic 2-modal fusion.
+fn run_scene(features: &[f32], uniforms: &[f32], batch: usize, n_bits: usize) -> Vec<f32> {
+    // Ref-31 missing-detection handling — the native pipeline's own
+    // threshold/ceiling, so the interpreter cannot drift from it.
+    let prior_fill = |raw: f32| crate::scene::fusion_input(raw as f64) as f32;
+    let mut out = Vec::with_capacity(batch * 3);
+    let mut num = vec![0.0f32; n_bits];
+    let mut den = vec![0.0f32; n_bits];
+    for row in 0..batch {
+        let conf = detector_row(&features[row * 6..(row + 1) * 6]);
+        let p = [prior_fill(conf[0]), prior_fill(conf[1])];
+        let u = &uniforms[row * 3 * n_bits..(row + 1) * 3 * n_bits];
+        let fused = fuse_row(&p, u, n_bits, &mut num, &mut den);
+        out.extend([conf[0], conf[1], fused]);
+    }
+    out
+}
+
+/// The artifact runtime: one manifest, many loaded entrypoints.
 pub struct Runtime {
-    client: xla::PjRtClient,
     manifest: ArtifactManifest,
     executables: BTreeMap<String, RuntimeExecutable>,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client and load **all** manifest entrypoints.
+    /// Load **all** manifest entrypoints from a directory.
     pub fn load_dir(dir: &Path) -> Result<Self> {
         let manifest = ArtifactManifest::load(dir)?;
         Self::load_manifest(manifest)
     }
 
-    /// Load a subset (faster startup for single-operator tools).
+    /// Load a subset (faster startup for single-operator tools). Asking
+    /// for an entrypoint family the interpreter cannot execute is an
+    /// error here — the caller named it explicitly.
     pub fn load_subset(dir: &Path, names: &[&str]) -> Result<Self> {
         let manifest = ArtifactManifest::load(dir)?;
-        let client = Self::client()?;
-        let mut rt = Self { client, manifest, executables: BTreeMap::new() };
+        let mut rt = Self { manifest, executables: BTreeMap::new() };
         for name in names {
-            rt.compile_entry(name)?;
+            if !rt.compile_entry(name)? {
+                return Err(Error::Artifact(format!(
+                    "{name}: unsupported entrypoint family"
+                )));
+            }
         }
         Ok(rt)
     }
 
-    fn client() -> Result<xla::PjRtClient> {
-        xla::PjRtClient::cpu().map_err(|e| Error::Runtime(format!("pjrt cpu client: {e}")))
-    }
-
-    /// Compile everything in an already-parsed manifest.
+    /// Load everything in an already-parsed manifest. Entrypoints of a
+    /// family this interpreter does not implement are skipped (the old
+    /// PJRT client compiled arbitrary HLO; erroring here would make one
+    /// exotic artifact poison the whole directory) — but corrupt HLO text
+    /// or inconsistent shapes on a *known* family still fail loudly.
     pub fn load_manifest(manifest: ArtifactManifest) -> Result<Self> {
-        let client = Self::client()?;
         let names: Vec<String> = manifest.names().map(str::to_string).collect();
-        let mut rt = Self { client, manifest, executables: BTreeMap::new() };
+        let mut rt = Self { manifest, executables: BTreeMap::new() };
         for name in names {
+            // `Ok(false)` = well-formed artifact of an unimplemented
+            // family: skipped (corrupt HLO still errors — the text is
+            // validated before the family).
             rt.compile_entry(&name)?;
         }
         Ok(rt)
     }
 
-    fn compile_entry(&mut self, name: &str) -> Result<()> {
+    /// Validate one entrypoint: HLO text present and well-formed enough,
+    /// manifest shapes consistent with the op. Returns `Ok(true)` when
+    /// loaded, `Ok(false)` when the HLO is fine but the entrypoint family
+    /// is one this interpreter does not implement.
+    fn compile_entry(&mut self, name: &str) -> Result<bool> {
         let spec = self
             .manifest
             .get(name)
             .ok_or_else(|| Error::Artifact(format!("unknown entrypoint {name}")))?
             .clone();
         let path = self.manifest.hlo_path(&spec);
-        let path_str = path
-            .to_str()
-            .ok_or_else(|| Error::Artifact(format!("non-utf8 path {path:?}")))?;
-        let proto = xla::HloModuleProto::from_text_file(path_str)
-            .map_err(|e| Error::Artifact(format!("{name}: parse HLO: {e}")))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| Error::Runtime(format!("{name}: compile: {e}")))?;
-        self.executables.insert(name.to_string(), RuntimeExecutable { spec, exe });
-        Ok(())
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Artifact(format!("{name}: read HLO {path:?}: {e}")))?;
+        // Every well-formed HLO-text module declares an ENTRY computation.
+        if !text.trim_start().starts_with("HloModule") || !text.contains("ENTRY") {
+            return Err(Error::Artifact(format!(
+                "{name}: parse HLO: {path:?} is not HLO text"
+            )));
+        }
+        let Some(op) = EntryOp::parse(name) else {
+            return Ok(false);
+        };
+        let expected = op.expected_shapes();
+        if spec.input_shapes != expected {
+            return Err(Error::Artifact(format!(
+                "{name}: manifest shapes {:?} do not match entrypoint signature {expected:?}",
+                spec.input_shapes
+            )));
+        }
+        self.executables.insert(name.to_string(), RuntimeExecutable { spec, op });
+        Ok(true)
     }
 
     /// The manifest this runtime was loaded from.
@@ -136,12 +333,12 @@ impl Runtime {
         &self.manifest
     }
 
-    /// Names of compiled entrypoints.
+    /// Names of loaded entrypoints.
     pub fn loaded(&self) -> impl Iterator<Item = &str> {
         self.executables.keys().map(String::as_str)
     }
 
-    /// Borrow a compiled entrypoint.
+    /// Borrow a loaded entrypoint.
     pub fn get(&self, name: &str) -> Result<&RuntimeExecutable> {
         self.executables
             .get(name)
@@ -172,59 +369,193 @@ impl Runtime {
 
 #[cfg(test)]
 mod tests {
-    //! These tests need `make artifacts` to have run; they are skipped
-    //! (not failed) when the artifacts directory is absent so `cargo
-    //! test` works on a fresh checkout.
+    //! Tests against a synthesised artifact directory (the interpreter
+    //! needs only a manifest + HLO-text stubs), plus the optional checks
+    //! against a real `make artifacts` output when present.
     use super::*;
+    use crate::bayes::{exact_fusion, exact_posterior};
+    use crate::util::stats::mean;
 
-    fn artifacts_dir() -> Option<&'static Path> {
-        let dir = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
-        dir.join("manifest.toml").exists().then_some(dir)
+    fn synth_dir() -> std::path::PathBuf {
+        let mut dir = std::env::temp_dir();
+        dir.push(format!(
+            "bayes-mem-rt-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.toml"),
+            r#"
+[inference_b1_n100]
+file = "inference_b1_n100.hlo.txt"
+inputs = 2
+input0 = "1,3"
+input1 = "1,3,100"
+
+[fusion_b16_m2_n256]
+file = "fusion_b16_m2_n256.hlo.txt"
+inputs = 2
+input0 = "16,2"
+input1 = "16,3,256"
+
+[detector_b64]
+file = "detector_b64.hlo.txt"
+inputs = 1
+input0 = "64,6"
+
+[scene_b64_n256]
+file = "scene_b64_n256.hlo.txt"
+inputs = 2
+input0 = "64,6"
+input1 = "64,3,256"
+"#,
+        )
+        .unwrap();
+        for f in [
+            "inference_b1_n100",
+            "fusion_b16_m2_n256",
+            "detector_b64",
+            "scene_b64_n256",
+        ] {
+            std::fs::write(
+                dir.join(format!("{f}.hlo.txt")),
+                format!("HloModule {f}\n\nENTRY %main () -> f32[] {{}}\n"),
+            )
+            .unwrap();
+        }
+        dir
     }
 
     #[test]
-    fn load_and_run_inference_artifact() {
-        let Some(dir) = artifacts_dir() else { return };
-        let rt = Runtime::load_subset(dir, &["inference_b1_n100"]).unwrap();
+    fn inference_entrypoint_tracks_exact_bayes() {
+        let dir = synth_dir();
+        let rt = Runtime::load_subset(&dir, &["inference_b1_n100"]).unwrap();
         let mut rng = Rng::seeded(42);
-        // Fig. 3b through the AOT path.
-        let out = rt.inference("inference_b1_n100", &[0.57, 0.77, 0.655], &mut rng).unwrap();
-        assert_eq!(out.len(), 2);
-        let (posterior, marginal) = (out[0], out[1]);
-        // 100-bit precision: generous envelope around the exact 0.609/0.72.
-        assert!((posterior - 0.609).abs() < 0.15, "posterior {posterior}");
-        assert!((marginal - 0.72).abs() < 0.12, "marginal {marginal}");
-    }
-
-    #[test]
-    fn fusion_artifact_converges_over_repeats() {
-        let Some(dir) = artifacts_dir() else { return };
-        let rt = Runtime::load_subset(dir, &["fusion_b1_m2_n100"]).unwrap();
-        let mut rng = Rng::seeded(7);
-        let exact = 0.56 / (0.56 + 0.06); // fuse(0.8, 0.7)
+        let exact = exact_posterior(0.57, 0.77, 0.655);
         let n = 64;
-        let mean: f32 = (0..n)
-            .map(|_| rt.fusion("fusion_b1_m2_n100", &[0.8, 0.7], &mut rng).unwrap()[0])
-            .sum::<f32>()
-            / n as f32;
-        assert!((mean as f64 - exact).abs() < 0.04, "mean {mean} vs exact {exact}");
+        let mut post = Vec::new();
+        let mut marg = Vec::new();
+        for _ in 0..n {
+            let out = rt
+                .inference("inference_b1_n100", &[0.57, 0.77, 0.655], &mut rng)
+                .unwrap();
+            assert_eq!(out.len(), 2);
+            post.push(out[0] as f64);
+            marg.push(out[1] as f64);
+        }
+        // 100-bit CORDIV carries a small (~2 %) bias — allow for it.
+        assert!((mean(&post) - exact).abs() < 0.045, "posterior {}", mean(&post));
+        assert!((mean(&marg) - 0.72).abs() < 0.025, "marginal {}", mean(&marg));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
-    fn batched_entrypoint_shapes() {
-        let Some(dir) = artifacts_dir() else { return };
-        let rt = Runtime::load_subset(dir, &["fusion_b16_m2_n256"]).unwrap();
-        let mut rng = Rng::seeded(8);
-        let probs: Vec<f32> = (0..16).flat_map(|i| [0.5 + 0.02 * i as f32, 0.7]).collect();
-        let out = rt.fusion("fusion_b16_m2_n256", &probs, &mut rng).unwrap();
-        assert_eq!(out.len(), 16);
-        assert!(out.iter().all(|p| (0.0..=1.0).contains(&(*p as f64))));
+    fn fusion_entrypoint_tracks_exact_bayes() {
+        let dir = synth_dir();
+        let rt = Runtime::load_subset(&dir, &["fusion_b16_m2_n256"]).unwrap();
+        let mut rng = Rng::seeded(7);
+        let probs: Vec<f32> = (0..16).flat_map(|_| [0.8f32, 0.7]).collect();
+        let mut samples = Vec::new();
+        for _ in 0..8 {
+            samples.extend(
+                rt.fusion("fusion_b16_m2_n256", &probs, &mut rng)
+                    .unwrap()
+                    .iter()
+                    .map(|&x| x as f64),
+            );
+        }
+        let exact = exact_fusion(0.8, 0.7);
+        assert!((mean(&samples) - exact).abs() < 0.03, "mean {}", mean(&samples));
+        assert!(samples.iter().all(|p| (0.0..=1.0).contains(p)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn detector_entrypoint_matches_native_heads() {
+        use crate::scene::{DetectorModel, Modality, SceneGenerator};
+        let dir = synth_dir();
+        let rt = Runtime::load_subset(&dir, &["detector_b64"]).unwrap();
+        let mut gen = SceneGenerator::new(5);
+        let rgb = DetectorModel::new(Modality::Rgb);
+        let th = DetectorModel::new(Modality::Thermal);
+        let mut feats = Vec::with_capacity(64 * 6);
+        let mut native = Vec::with_capacity(128);
+        'outer: loop {
+            let frame = gen.next_frame();
+            for o in &frame.obstacles {
+                feats.extend(o.features(frame.visibility).iter().map(|&x| x as f32));
+                native.push(rgb.confidence(o, frame.visibility));
+                native.push(th.confidence(o, frame.visibility));
+                if native.len() == 128 {
+                    break 'outer;
+                }
+            }
+        }
+        let out = rt.get("detector_b64").unwrap().run_f32(&[&feats]).unwrap();
+        assert_eq!(out.len(), 128);
+        for (i, (&got, &want)) in out.iter().zip(&native).enumerate() {
+            assert!(
+                (got as f64 - want).abs() < 1e-5,
+                "row {i}: artifact {got} vs native {want}"
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn scene_entrypoint_runs_the_full_frame_pipeline() {
+        use crate::bayes::exact_fusion;
+        use crate::scene::fusion_input;
+        let dir = synth_dir();
+        let rt = Runtime::load_subset(&dir, &["scene_b64_n256"]).unwrap();
+        let exe = rt.get("scene_b64_n256").unwrap();
+        let mut rng = Rng::seeded(3);
+        // One fixed obstacle feature row repeated: warm pedestrian by day.
+        let feat: [f32; 6] = [0.9, 0.55, 1.0, 0.0, 0.4, 0.35];
+        let feats: Vec<f32> = feat.iter().cycle().take(64 * 6).copied().collect();
+        let uniforms: Vec<f32> = (0..64 * 3 * 256).map(|_| rng.f64() as f32).collect();
+        let out = exe.run_f32(&[&feats, &uniforms]).unwrap();
+        assert_eq!(out.len(), 64 * 3);
+        // Confidences equal the detector head outputs; fused tracks the
+        // closed-form fusion of the prior-filled confidences in mean.
+        let conf = detector_row(&feat);
+        let exact =
+            exact_fusion(fusion_input(conf[0] as f64), fusion_input(conf[1] as f64));
+        let mean_fused: f64 =
+            (0..64).map(|i| out[i * 3 + 2] as f64).sum::<f64>() / 64.0;
+        for i in 0..64 {
+            assert_eq!(out[i * 3], conf[0]);
+            assert_eq!(out[i * 3 + 1], conf[1]);
+        }
+        assert!((mean_fused - exact).abs() < 0.04, "fused {mean_fused} vs exact {exact}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_dir_skips_unknown_families_but_rejects_corrupt_hlo() {
+        let dir = synth_dir();
+        // A well-formed artifact of a family the interpreter doesn't know:
+        // skipped by load_dir, hard error when requested explicitly.
+        std::fs::write(
+            dir.join("exotic_b4.hlo.txt"),
+            "HloModule exotic_b4\n\nENTRY %main () -> f32[] {}\n",
+        )
+        .unwrap();
+        let mut manifest = std::fs::read_to_string(dir.join("manifest.toml")).unwrap();
+        manifest.push_str("\n[exotic_b4]\nfile = \"exotic_b4.hlo.txt\"\ninputs = 1\ninput0 = \"4,4\"\n");
+        std::fs::write(dir.join("manifest.toml"), manifest).unwrap();
+        let rt = Runtime::load_dir(&dir).unwrap();
+        assert!(rt.get("exotic_b4").is_err(), "unknown family must not load");
+        assert!(rt.get("detector_b64").is_ok());
+        assert!(Runtime::load_subset(&dir, &["exotic_b4"]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
     fn input_validation_errors() {
-        let Some(dir) = artifacts_dir() else { return };
-        let rt = Runtime::load_subset(dir, &["inference_b1_n100"]).unwrap();
+        let dir = synth_dir();
+        let rt = Runtime::load_subset(&dir, &["inference_b1_n100"]).unwrap();
         let exe = rt.get("inference_b1_n100").unwrap();
         // Wrong arity.
         assert!(exe.run_f32(&[&[0.5, 0.5, 0.5]]).is_err());
@@ -232,5 +563,33 @@ mod tests {
         assert!(exe.run_f32(&[&[0.5, 0.5], &[0.0; 300]]).is_err());
         // Unknown entrypoint.
         assert!(rt.get("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unsupported_or_missing_entrypoints_fail_at_load() {
+        let dir = synth_dir();
+        // Missing name from a real manifest.
+        assert!(Runtime::load_subset(&dir, &["not_in_manifest"]).is_err());
+        // Shape mismatch: claim inference with the wrong uniforms shape.
+        std::fs::write(
+            dir.join("manifest.toml"),
+            "[inference_b1_n100]\nfile = \"inference_b1_n100.hlo.txt\"\n\
+             inputs = 2\ninput0 = \"1,3\"\ninput1 = \"1,2,100\"\n",
+        )
+        .unwrap();
+        let err = Runtime::load_dir(&dir).unwrap_err().to_string();
+        assert!(err.contains("inference_b1_n100"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn loads_real_generated_artifacts_if_present() {
+        let dir = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        if !dir.join("manifest.toml").exists() {
+            return;
+        }
+        let rt = Runtime::load_dir(dir).unwrap();
+        assert!(rt.loaded().count() > 0);
     }
 }

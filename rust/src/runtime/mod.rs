@@ -1,11 +1,13 @@
-//! PJRT runtime — loads the AOT-compiled JAX/Pallas artifacts (HLO text)
-//! and executes them from the Rust hot path.
+//! Artifact runtime — loads the AOT-compiled JAX/Pallas artifacts (HLO
+//! text) and executes them from the Rust hot path.
 //!
 //! Python runs once at build time (`make artifacts`); afterwards the Rust
-//! binary is self-contained: it parses `artifacts/manifest.toml`, compiles
-//! each `*.hlo.txt` on the PJRT CPU client, and serves decisions through
-//! the compiled executables. See /opt/xla-example/load_hlo for the
-//! reference wiring this module generalises.
+//! binary is self-contained: it parses `artifacts/manifest.toml`,
+//! validates each `*.hlo.txt`, and serves decisions through the loaded
+//! entrypoints. The offline build has no PJRT/XLA binding crate, so
+//! [`Runtime`] interprets the entrypoint datapaths in pure Rust
+//! (same semantics as `python/compile/kernels/ref.py`) rather than
+//! dispatching to a PJRT CPU client.
 
 mod artifacts;
 mod client;

@@ -78,11 +78,8 @@ impl Bitstream {
 
     /// Clear any bits beyond `len` in the last word.
     pub fn mask_tail(&mut self) {
-        let tail = self.len % 64;
-        if tail != 0 {
-            if let Some(last) = self.words.last_mut() {
-                *last &= (1u64 << tail) - 1;
-            }
+        if let Some(last) = self.words.last_mut() {
+            *last &= tail_word_mask(self.len);
         }
     }
 
@@ -193,6 +190,22 @@ impl Bitstream {
             *a = (s & b) | (!s & *a);
         }
         Ok(())
+    }
+}
+
+/// Mask keeping the valid bits of the **last** packed word of an
+/// `n_bits` stream (all-ones when `n_bits` is a multiple of 64).
+///
+/// The single source of the tail-bit convention — shared by
+/// [`Bitstream::mask_tail`], the SNE encode hot path, and the batched
+/// decision engine, so the packing invariant lives in one place.
+#[inline]
+pub(crate) fn tail_word_mask(n_bits: usize) -> u64 {
+    let tail = n_bits % 64;
+    if tail == 0 {
+        u64::MAX
+    } else {
+        (1u64 << tail) - 1
     }
 }
 

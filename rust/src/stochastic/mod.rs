@@ -16,6 +16,7 @@ mod lfsr;
 mod sne;
 
 pub use bitstream::{Bitstream, BitstreamPool};
+pub(crate) use bitstream::tail_word_mask;
 pub use correlation::{pair_counts, pearson, scc, CorrelationReport, PairCounts};
 pub use lfsr::{Lfsr, LfsrEncoder};
 pub use sne::{Sne, SneBank, SneConfig};

@@ -20,7 +20,7 @@ use crate::device::{DeviceParams, EnergyTimeLedger, Memristor, WearPolicy};
 use crate::util::Rng;
 use crate::{Error, Result};
 
-use super::Bitstream;
+use super::{tail_word_mask, Bitstream};
 
 /// SNE/bank configuration.
 #[derive(Debug, Clone)]
@@ -103,9 +103,29 @@ impl Sne {
         ledger: &mut EnergyTimeLedger,
         rng: &mut Rng,
     ) -> Result<Bitstream> {
-        Error::check_prob("p", p)?;
-        let energy = self.device.params().switch_energy_nj;
         let mut out = Bitstream::zeros(n_bits);
+        self.encode_into_words(p, n_bits, out.words_mut(), ledger, rng)?;
+        Ok(out)
+    }
+
+    /// Encode `p` directly into a caller-provided packed word buffer
+    /// (`words.len()` must be `n_bits.div_ceil(64)`). This is the
+    /// allocation-free hot path under [`crate::bayes`]'s batched engine;
+    /// the RNG consumption, ledger updates, and produced bits are
+    /// **identical** to [`Self::encode`] (which delegates here), so the
+    /// batched and single-decision paths stay bit-for-bit equivalent.
+    pub(crate) fn encode_into_words(
+        &mut self,
+        p: f64,
+        n_bits: usize,
+        words: &mut [u64],
+        ledger: &mut EnergyTimeLedger,
+        rng: &mut Rng,
+    ) -> Result<()> {
+        Error::check_prob("p", p)?;
+        debug_assert_eq!(words.len(), n_bits.div_ceil(64));
+        let energy = self.device.params().switch_energy_nj;
+        words.iter_mut().for_each(|w| *w = 0);
         if self.device.params().drift_coupling == 0.0 {
             // Fast path: per-pulse switching is i.i.d. Bernoulli with the
             // Fig. 2b probability, so generate whole 64-bit words by the
@@ -113,16 +133,21 @@ impl Sne {
             // q/2^16, z starts at 0 and folds one random word per bit of
             // q (LSB→MSB): z = bit ? z|r : z&!r, giving P(z_k=1) = q/2^16
             // with ≤16 RNG draws per word instead of 64 (§Perf L3-2).
-            let v_in = self.voltage_for(p);
-            let prob = self.device.switch_probability(v_in);
+            //
+            // The SNE programs `V_in = voltage_for(p)` and the device then
+            // switches with `switch_probability(V_in)`; the calibration
+            // inverts exactly (σ ∘ logit, same per-device centre), so the
+            // Bernoulli rate is `p` itself modulo the clamp — no need to
+            // pay the ln/exp round-trip per stream on this hot path.
+            let prob = p.clamp(1e-9, 1.0 - 1e-9);
             let q = (prob * 65536.0).round() as u32; // 2^-16 resolution
             if q >= 65536 {
-                for w in out.words_mut() {
+                for w in words.iter_mut() {
                     *w = u64::MAX;
                 }
             } else if q > 0 {
                 let lo = q.trailing_zeros(); // z stays 0 below the lowest set bit
-                for w in out.words_mut() {
+                for w in words.iter_mut() {
                     let mut z = 0u64;
                     for i in lo..16 {
                         let r = rng.next_u64();
@@ -131,8 +156,10 @@ impl Sne {
                     *w = z;
                 }
             }
-            out.mask_tail();
-            let switches = out.count_ones();
+            if let Some(last) = words.last_mut() {
+                *last &= tail_word_mask(n_bits);
+            }
+            let switches: usize = words.iter().map(|w| w.count_ones() as usize).sum();
             self.device.record_switches(switches as u64);
             ledger.pulses += n_bits as u64;
             ledger.switch_events += switches as u64;
@@ -143,11 +170,11 @@ impl Sne {
                 let ev = self.device.pulse(v_in, rng);
                 ledger.record_pulse(ev.switched, ev.energy_nj);
                 if ev.switched {
-                    out.set(i, true);
+                    words[i / 64] |= 1 << (i % 64);
                 }
             }
         }
-        Ok(out)
+        Ok(())
     }
 
     /// Encode several probabilities as **maximally correlated** streams
@@ -321,6 +348,33 @@ impl SneBank {
         probs.iter().map(|&p| self.encode(p)).collect()
     }
 
+    /// Encode a group of mutually uncorrelated streams into one packed
+    /// word buffer — the grouped, allocation-free entry the batched
+    /// decision engine uses ([`crate::bayes::BatchedInference`] /
+    /// [`crate::bayes::BatchedFusion`]).
+    ///
+    /// Stream `j` occupies `out[j*W .. (j+1)*W]` with
+    /// `W = n_bits.div_ceil(64)`; `out.len()` must be `probs.len() * W`.
+    /// SNEs are drawn through the same round-robin and the RNG is
+    /// consumed in the same order as repeated [`Self::encode`] calls, so
+    /// the packed bits are bit-identical to the single-call path.
+    pub fn encode_group_into(&mut self, probs: &[f64], out: &mut [u64]) -> Result<()> {
+        let n_bits = self.config.n_bits;
+        let w = n_bits.div_ceil(64);
+        if out.len() != probs.len() * w {
+            return Err(Error::LengthMismatch {
+                lhs: out.len() * 64,
+                rhs: probs.len() * w * 64,
+            });
+        }
+        for (j, &p) in probs.iter().enumerate() {
+            let idx = self.next_sne()?;
+            let Self { snes, ledger, rng, .. } = self;
+            snes[idx].encode_into_words(p, n_bits, &mut out[j * w..(j + 1) * w], ledger, rng)?;
+        }
+        Ok(())
+    }
+
     /// Encode a group of maximally **correlated** streams (one shared SNE).
     pub fn encode_correlated(&mut self, probs: &[f64]) -> Result<Vec<Bitstream>> {
         let n_bits = self.config.n_bits;
@@ -438,6 +492,26 @@ mod tests {
         assert_eq!(l.switch_events as usize, s.count_ones());
         assert!((l.clock.elapsed_ms() - 0.4).abs() < 1e-12);
         assert!((l.energy_nj - 0.16 * s.count_ones() as f64).abs() < 1e-9);
+    }
+
+    #[test]
+    fn encode_group_into_matches_single_calls() {
+        let mut a = SneBank::seeded(77);
+        let mut b = SneBank::seeded(77);
+        let probs = [0.3, 0.57, 0.72];
+        let singles: Vec<Bitstream> = probs.iter().map(|&p| a.encode(p).unwrap()).collect();
+        let w = b.n_bits().div_ceil(64);
+        let mut packed = vec![0u64; probs.len() * w];
+        b.encode_group_into(&probs, &mut packed).unwrap();
+        for (j, s) in singles.iter().enumerate() {
+            assert_eq!(&packed[j * w..(j + 1) * w], s.words(), "stream {j} diverged");
+        }
+        // Same ledger accounting on both paths.
+        assert_eq!(a.ledger().pulses, b.ledger().pulses);
+        assert_eq!(a.ledger().switch_events, b.ledger().switch_events);
+        // Wrong buffer size is rejected.
+        let mut tiny = [0u64; 1];
+        assert!(b.encode_group_into(&probs, &mut tiny).is_err());
     }
 
     #[test]

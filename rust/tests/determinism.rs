@@ -1,0 +1,116 @@
+//! Determinism guarantees around the batched decision engine:
+//!
+//! * same `AppConfig.seed` → bit-identical `Decision` stream through the
+//!   coordinator, run twice;
+//! * the coordinator's batched path reproduces the single-decision
+//!   operator path **exactly** (same seed, same order), regardless of
+//!   how the dynamic batcher happened to slice the stream into batches.
+//!
+//! This is the guard on the tentpole rewire: if the word-parallel
+//! engines ever drift from the single-path bit algebra or RNG draw
+//! order, these tests fail on the first diverging decision.
+
+use std::time::Duration;
+
+use bayes_mem::bayes::{FusionOperator, InferenceOperator};
+use bayes_mem::config::AppConfig;
+use bayes_mem::coordinator::{Coordinator, Decision, DecisionKind};
+use bayes_mem::stochastic::SneBank;
+use bayes_mem::util::Rng;
+
+/// One worker so the worker-bank decision order equals submission order.
+fn single_worker_config(seed: u64) -> AppConfig {
+    let mut cfg = AppConfig::default();
+    cfg.seed = seed;
+    cfg.coordinator.workers = 1;
+    cfg
+}
+
+fn inference_stream(n: usize, seed: u64) -> Vec<DecisionKind> {
+    let mut rng = Rng::seeded(seed);
+    (0..n)
+        .map(|_| DecisionKind::Inference {
+            prior: rng.range_f64(0.1, 0.9),
+            likelihood: rng.range_f64(0.5, 0.95),
+            likelihood_not: rng.range_f64(0.05, 0.5),
+        })
+        .collect()
+}
+
+fn fusion_stream(n: usize, seed: u64) -> Vec<DecisionKind> {
+    let mut rng = Rng::seeded(seed);
+    (0..n)
+        .map(|_| DecisionKind::Fusion {
+            posteriors: vec![rng.range_f64(0.2, 0.95), rng.range_f64(0.2, 0.95)],
+        })
+        .collect()
+}
+
+/// Submit the whole stream up-front (so the batcher forms real batches)
+/// and collect the decisions in submission order.
+fn serve(cfg: &AppConfig, kinds: &[DecisionKind]) -> Vec<Decision> {
+    let coord = Coordinator::start(cfg).unwrap();
+    let handle = coord.handle();
+    let pending: Vec<_> = kinds.iter().map(|k| handle.submit(k.clone()).unwrap()).collect();
+    let decisions: Vec<Decision> = pending
+        .into_iter()
+        .map(|p| p.wait_timeout(Duration::from_secs(30)).unwrap())
+        .collect();
+    coord.shutdown();
+    decisions
+}
+
+#[test]
+fn same_seed_gives_bit_identical_decision_stream() {
+    let kinds = inference_stream(64, 11);
+    let cfg = single_worker_config(2024);
+    let first = serve(&cfg, &kinds);
+    let second = serve(&cfg, &kinds);
+    assert_eq!(first.len(), second.len());
+    for (i, (a, b)) in first.iter().zip(&second).enumerate() {
+        // f64 equality on purpose: the streams must be bit-identical.
+        assert_eq!(a.posterior, b.posterior, "decision {i} diverged across runs");
+        assert_eq!(a.exact, b.exact);
+    }
+}
+
+#[test]
+fn coordinator_batched_path_matches_single_path_inference_bitwise() {
+    let kinds = inference_stream(64, 12);
+    let cfg = single_worker_config(777);
+    let served = serve(&cfg, &kinds);
+
+    // The lone worker's bank is seeded `config.seed ^ (0 << 32)`; replay
+    // the exact stream through the single-decision operator on an
+    // identically-seeded bank.
+    let mut bank = SneBank::new(cfg.sne.clone(), cfg.seed).unwrap();
+    let op = InferenceOperator::default();
+    for (i, (kind, decision)) in kinds.iter().zip(&served).enumerate() {
+        let DecisionKind::Inference { prior, likelihood, likelihood_not } = kind else {
+            unreachable!()
+        };
+        let single = op.try_infer(&mut bank, *prior, *likelihood, *likelihood_not).unwrap();
+        assert_eq!(
+            decision.posterior, single.posterior,
+            "decision {i}: batched coordinator path diverged from single path"
+        );
+    }
+}
+
+#[test]
+fn coordinator_batched_path_matches_single_path_fusion_bitwise() {
+    let kinds = fusion_stream(48, 13);
+    let cfg = single_worker_config(31337);
+    let served = serve(&cfg, &kinds);
+
+    let mut bank = SneBank::new(cfg.sne.clone(), cfg.seed).unwrap();
+    let op = FusionOperator::default();
+    for (i, (kind, decision)) in kinds.iter().zip(&served).enumerate() {
+        let DecisionKind::Fusion { posteriors } = kind else { unreachable!() };
+        let single = op.fuse(&mut bank, posteriors).unwrap();
+        assert_eq!(
+            decision.posterior, single.fused,
+            "decision {i}: batched coordinator path diverged from single path"
+        );
+    }
+}
