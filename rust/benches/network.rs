@@ -1,0 +1,82 @@
+//! Network-compiler benches: compile cost, end-to-end decisions at the
+//! paper's 100-bit operating point, and the ISSUE-2 acceptance — the
+//! word-parallel netlist evaluator must beat a per-bit reference walk of
+//! the same netlist by ≥2×. Exports `BENCH_network.json` at the repo
+//! root.
+
+use bayes_mem::benchkit::Bench;
+use bayes_mem::device::WearPolicy;
+use bayes_mem::network::{compile_query, BayesNet, NetlistEvaluator};
+use bayes_mem::stochastic::{SneBank, SneConfig};
+
+fn bank(n_bits: usize, seed: u64) -> SneBank {
+    // Probe-station mode: benches push devices far past the endurance
+    // budget by design, so wear rotation is disabled.
+    let cfg = SneConfig { n_bits, wear_policy: WearPolicy::Ignore, ..Default::default() };
+    SneBank::new(cfg, seed).unwrap()
+}
+
+/// The intersection scene, loaded from its single source of truth so
+/// the bench cannot drift from what the CLI/example/tests exercise.
+fn intersection() -> BayesNet {
+    let spec =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../specs/intersection.toml");
+    BayesNet::load(&spec).expect("specs/intersection.toml parses and validates")
+}
+
+fn main() {
+    let mut b = Bench::new("network");
+
+    let net = intersection();
+    let evidence = [("detection", false), ("visibility", true)];
+
+    // Spec -> netlist lowering cost (5-node scene).
+    b.bench("network_compile_5node", || {
+        std::hint::black_box(compile_query(&net, "occlusion", &evidence).unwrap());
+    });
+    let netlist = compile_query(&net, "occlusion", &evidence).unwrap();
+
+    // One compiled decision at the paper's 100-bit operating point.
+    let mut eval = NetlistEvaluator::new();
+    let mut bank100 = bank(100, 1);
+    b.bench("network_decision_100bit", || {
+        std::hint::black_box(eval.evaluate(&mut bank100, &netlist).unwrap().posterior);
+    });
+
+    // ISSUE-2 acceptance: word-parallel sweep vs per-bit reference walk
+    // of the SAME netlist (same encode, same gates, same CORDIV math).
+    let mut bank_word = bank(4096, 2);
+    let word = b.bench_units("network_eval_word_parallel_4096bit", 4096.0, "bits", || {
+        std::hint::black_box(eval.evaluate(&mut bank_word, &netlist).unwrap().posterior);
+    });
+    let mut bank_bit = bank(4096, 2);
+    let per_bit = b.bench_units("network_eval_per_bit_4096bit", 4096.0, "bits", || {
+        std::hint::black_box(
+            eval.evaluate_reference(&mut bank_bit, &netlist).unwrap().posterior,
+        );
+    });
+    if let (Some(w), Some(p)) = (word, per_bit) {
+        println!(
+            "  network_word_parallel_vs_per_bit_speedup: {:.2}x (acceptance >= 2x)",
+            p.mean_ns / w.mean_ns
+        );
+    }
+
+    // Deeper shape: an 8-node ladder exercising 2-parent MUX trees.
+    let mut ladder = BayesNet::named("ladder");
+    ladder.add_root("n0", 0.5).unwrap();
+    ladder.add_root("n1", 0.35).unwrap();
+    for i in 2..8 {
+        let (p1, p2) = (format!("n{}", i - 2), format!("n{}", i - 1));
+        ladder
+            .add_node(&format!("n{i}"), &[&p1, &p2], &[0.15, 0.4, 0.6, 0.85])
+            .unwrap();
+    }
+    let deep = compile_query(&ladder, "n0", &[("n7", true), ("n6", false)]).unwrap();
+    let mut bank_deep = bank(1024, 3);
+    b.bench("network_decision_8node_ladder_1024bit", || {
+        std::hint::black_box(eval.evaluate(&mut bank_deep, &deep).unwrap().posterior);
+    });
+
+    b.finish_and_export();
+}

@@ -6,9 +6,17 @@
 //!   lines are the parent streams.
 //! * `B₁ ← A → B₂` — one parent, two children: two 2×1 MUXes sharing the
 //!   parent stream as select.
+//!
+//! Since PR 2 these shapes are no longer hand-wired: each `evaluate`
+//! lowers its [`crate::network::BayesNet`] spec through the general
+//! netlist compiler ([`crate::network::compile_query`]) and runs the
+//! word-parallel evaluator. The CPT rows are declared in the original
+//! hand-wired SNE encode order, so the compiled circuits are
+//! **bit-identical** to the pre-compiler implementation — pinned by the
+//! regression tests below, which keep a copy of the hand-wired dataflow
+//! and assert exact `f64` equality on the same seed.
 
-
-use crate::logic::Cordiv;
+use crate::network::{compile_query, BayesNet, NetlistEvaluator};
 use crate::stochastic::SneBank;
 use crate::{Error, Result};
 
@@ -47,10 +55,11 @@ impl TopologyResult {
 
 /// Two-parent-one-child network: query `P(A₁ | B=1)`.
 ///
-/// Circuit: a 4×1 probabilistic MUX (Fig. S8b) selects among the four
-/// conditionals `P(B|A₁,A₂)` with the parent streams as select lines,
-/// producing the evidence stream `P(B)`; the numerator AND-gates the
-/// `A₁` select path, staying a bitwise subset of the evidence for CORDIV.
+/// Circuit (via the netlist compiler): a 4×1 probabilistic MUX
+/// (Fig. S8b) selects among the four conditionals `P(B|A₁,A₂)` with the
+/// parent streams as select lines, producing the evidence stream `P(B)`;
+/// the numerator ANDs the query stream with the evidence, staying a
+/// bitwise subset of it for CORDIV.
 #[derive(Debug, Clone)]
 pub struct TwoParentOneChild {
     /// Prior `P(A₁)`.
@@ -84,6 +93,22 @@ impl TwoParentOneChild {
         }
     }
 
+    /// This shape as a declarative network. CPT rows are declared in the
+    /// hand-wired encode order (`b00, b01, b10, b11`), which keeps the
+    /// compiled evaluation bit-identical to the original circuit.
+    pub fn network(&self) -> Result<BayesNet> {
+        let g = &self.p_b_given;
+        let mut net = BayesNet::named("two_parent_one_child");
+        net.add_root("a1", self.p_a1)?;
+        net.add_root("a2", self.p_a2)?;
+        net.add_node_rows(
+            "b",
+            &["a1", "a2"],
+            &[(0b00, g[0][0]), (0b01, g[0][1]), (0b10, g[1][0]), (0b11, g[1][1])],
+        )?;
+        Ok(net)
+    }
+
     /// Evaluate on the stochastic hardware path.
     pub fn evaluate(&self, bank: &mut SneBank) -> Result<TopologyResult> {
         Error::check_prob("p_a1", self.p_a1)?;
@@ -93,27 +118,12 @@ impl TwoParentOneChild {
                 Error::check_prob("p_b_given", p)?;
             }
         }
-        let a1 = bank.encode(self.p_a1)?;
-        let a2 = bank.encode(self.p_a2)?;
-        let g = &self.p_b_given;
-        let b00 = bank.encode(g[0][0])?;
-        let b01 = bank.encode(g[0][1])?;
-        let b10 = bank.encode(g[1][0])?;
-        let b11 = bank.encode(g[1][1])?;
-
-        // 4×1 MUX: first stage selects on a2 within each a1 branch, second
-        // stage selects the branch on a1.
-        let branch_a1_high = b10.mux(&b11, &a2)?; // P(B|A1=1, A2)
-        let branch_a1_low = b00.mux(&b01, &a2)?; // P(B|A1=0, A2)
-        let den = branch_a1_low.mux(&branch_a1_high, &a1)?; // evidence P(B)
-        let num = a1.and(&branch_a1_high)?; // P(A1, B)
-        let quot = Cordiv::new().divide(&num, &den)?;
-        bank.finish_decision();
-
+        let netlist = compile_query(&self.network()?, "a1", &[("b", true)])?;
+        let r = NetlistEvaluator::new().evaluate(bank, &netlist)?;
         Ok(TopologyResult {
             topology: Topology::TwoParentOneChild,
-            posterior: quot.value(),
-            marginal: den.value(),
+            posterior: r.posterior,
+            marginal: r.marginal,
             exact: self.exact_posterior(),
             exact_marginal: self.exact_marginal(),
         })
@@ -122,8 +132,9 @@ impl TwoParentOneChild {
 
 /// One-parent-two-child network: query `P(A | B₁=1, B₂=1)`.
 ///
-/// Circuit: two 2×1 MUXes share the parent stream as select (Fig. S8c),
-/// their AND forms the joint evidence `P(B₁,B₂)`.
+/// Circuit (via the netlist compiler): two 2×1 MUXes share the parent
+/// stream as select (Fig. S8c), their AND forms the joint evidence
+/// `P(B₁,B₂)`.
 #[derive(Debug, Clone)]
 pub struct OneParentTwoChild {
     /// Prior `P(A)`.
@@ -151,31 +162,29 @@ impl OneParentTwoChild {
         }
     }
 
+    /// This shape as a declarative network. Each child's CPT declares
+    /// the `A=1` row first — the hand-wired encode order (`b1a, b1n,
+    /// b2a, b2n`), which keeps compiled evaluation bit-identical.
+    pub fn network(&self) -> Result<BayesNet> {
+        let mut net = BayesNet::named("one_parent_two_child");
+        net.add_root("a", self.p_a)?;
+        net.add_node_rows("b1", &["a"], &[(1, self.p_b1.0), (0, self.p_b1.1)])?;
+        net.add_node_rows("b2", &["a"], &[(1, self.p_b2.0), (0, self.p_b2.1)])?;
+        Ok(net)
+    }
+
     /// Evaluate on the stochastic hardware path.
     pub fn evaluate(&self, bank: &mut SneBank) -> Result<TopologyResult> {
         Error::check_prob("p_a", self.p_a)?;
         for &p in [self.p_b1.0, self.p_b1.1, self.p_b2.0, self.p_b2.1].iter() {
             Error::check_prob("p_b", p)?;
         }
-        let a = bank.encode(self.p_a)?;
-        let b1a = bank.encode(self.p_b1.0)?;
-        let b1n = bank.encode(self.p_b1.1)?;
-        let b2a = bank.encode(self.p_b2.0)?;
-        let b2n = bank.encode(self.p_b2.1)?;
-
-        // Two MUXes share the parent select; their AND is the evidence.
-        let m1 = b1n.mux(&b1a, &a)?;
-        let m2 = b2n.mux(&b2a, &a)?;
-        let den = m1.and(&m2)?;
-        // Numerator: a ∧ B1|A ∧ B2|A ⊆ den.
-        let num = a.and(&b1a)?.and(&b2a)?;
-        let quot = Cordiv::new().divide(&num, &den)?;
-        bank.finish_decision();
-
+        let netlist = compile_query(&self.network()?, "a", &[("b1", true), ("b2", true)])?;
+        let r = NetlistEvaluator::new().evaluate(bank, &netlist)?;
         Ok(TopologyResult {
             topology: Topology::OneParentTwoChild,
-            posterior: quot.value(),
-            marginal: den.value(),
+            posterior: r.posterior,
+            marginal: r.marginal,
             exact: self.exact_posterior(),
             exact_marginal: self.exact_marginal(),
         })
@@ -185,10 +194,114 @@ impl OneParentTwoChild {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::logic::Cordiv;
     use crate::stochastic::SneConfig;
 
     fn bank(n_bits: usize, seed: u64) -> SneBank {
         SneBank::new(SneConfig { n_bits, ..Default::default() }, seed).unwrap()
+    }
+
+    /// The pre-PR-2 hand-wired Fig. S8b circuit, kept verbatim as the
+    /// bit-identity regression reference for the compiled path.
+    fn hand_wired_two_parent(net: &TwoParentOneChild, bank: &mut SneBank) -> (f64, f64) {
+        let a1 = bank.encode(net.p_a1).unwrap();
+        let a2 = bank.encode(net.p_a2).unwrap();
+        let g = &net.p_b_given;
+        let b00 = bank.encode(g[0][0]).unwrap();
+        let b01 = bank.encode(g[0][1]).unwrap();
+        let b10 = bank.encode(g[1][0]).unwrap();
+        let b11 = bank.encode(g[1][1]).unwrap();
+        let branch_a1_high = b10.mux(&b11, &a2).unwrap();
+        let branch_a1_low = b00.mux(&b01, &a2).unwrap();
+        let den = branch_a1_low.mux(&branch_a1_high, &a1).unwrap();
+        let num = a1.and(&branch_a1_high).unwrap();
+        let quot = Cordiv::new().divide(&num, &den).unwrap();
+        bank.finish_decision();
+        (quot.value(), den.value())
+    }
+
+    /// The pre-PR-2 hand-wired Fig. S8c circuit (regression reference).
+    fn hand_wired_one_parent_two_child(
+        net: &OneParentTwoChild,
+        bank: &mut SneBank,
+    ) -> (f64, f64) {
+        let a = bank.encode(net.p_a).unwrap();
+        let b1a = bank.encode(net.p_b1.0).unwrap();
+        let b1n = bank.encode(net.p_b1.1).unwrap();
+        let b2a = bank.encode(net.p_b2.0).unwrap();
+        let b2n = bank.encode(net.p_b2.1).unwrap();
+        let m1 = b1n.mux(&b1a, &a).unwrap();
+        let m2 = b2n.mux(&b2a, &a).unwrap();
+        let den = m1.and(&m2).unwrap();
+        let num = a.and(&b1a).unwrap().and(&b2a).unwrap();
+        let quot = Cordiv::new().divide(&num, &den).unwrap();
+        bank.finish_decision();
+        (quot.value(), den.value())
+    }
+
+    #[test]
+    fn compiled_two_parent_is_bit_identical_to_hand_wired() {
+        let net = TwoParentOneChild {
+            p_a1: 0.6,
+            p_a2: 0.4,
+            p_b_given: [[0.1, 0.5], [0.6, 0.9]],
+        };
+        // Odd lengths stress the packed tail; multiple seeds the RNG/SNE
+        // round-robin.
+        for (n_bits, seed) in [(100usize, 60u64), (130, 7), (1000, 4242), (64, 1)] {
+            let mut hand_bank = bank(n_bits, seed);
+            let (hp, hm) = hand_wired_two_parent(&net, &mut hand_bank);
+            let mut comp_bank = bank(n_bits, seed);
+            let r = net.evaluate(&mut comp_bank).unwrap();
+            assert_eq!(r.posterior, hp, "posterior diverged @ {n_bits} bits seed {seed}");
+            assert_eq!(r.marginal, hm, "marginal diverged @ {n_bits} bits seed {seed}");
+            assert_eq!(hand_bank.ledger().pulses, comp_bank.ledger().pulses);
+            assert_eq!(
+                hand_bank.ledger().clock.elapsed_ns(),
+                comp_bank.ledger().clock.elapsed_ns()
+            );
+        }
+    }
+
+    #[test]
+    fn compiled_one_parent_two_child_is_bit_identical_to_hand_wired() {
+        let net = OneParentTwoChild {
+            p_a: 0.57,
+            p_b1: (0.8, 0.3),
+            p_b2: (0.7, 0.4),
+        };
+        for (n_bits, seed) in [(100usize, 61u64), (130, 8), (1000, 99)] {
+            let mut hand_bank = bank(n_bits, seed);
+            let (hp, hm) = hand_wired_one_parent_two_child(&net, &mut hand_bank);
+            let mut comp_bank = bank(n_bits, seed);
+            let r = net.evaluate(&mut comp_bank).unwrap();
+            assert_eq!(r.posterior, hp, "posterior diverged @ {n_bits} bits seed {seed}");
+            assert_eq!(r.marginal, hm, "marginal diverged @ {n_bits} bits seed {seed}");
+            assert_eq!(hand_bank.ledger().pulses, comp_bank.ledger().pulses);
+        }
+    }
+
+    #[test]
+    fn compiled_one_parent_one_child_matches_inference_operator() {
+        // The third Fig. S8 shape is the Eq.-1 operator itself: the same
+        // 2-node network compiled through the generic path must be
+        // bit-identical to InferenceOperator on the same seed.
+        use super::super::InferenceOperator;
+        let (pa, pb1, pb0) = (0.57, 0.77, 0.655);
+        let mut net = BayesNet::named("one_parent_one_child");
+        net.add_root("a", pa).unwrap();
+        net.add_node_rows("b", &["a"], &[(1, pb1), (0, pb0)]).unwrap();
+        let nl = compile_query(&net, "a", &[("b", true)]).unwrap();
+        for (n_bits, seed) in [(100usize, 42u64), (130, 3), (1000, 17)] {
+            let mut op_bank = bank(n_bits, seed);
+            let single = InferenceOperator::default()
+                .try_infer(&mut op_bank, pa, pb1, pb0)
+                .unwrap();
+            let mut net_bank = bank(n_bits, seed);
+            let r = NetlistEvaluator::new().evaluate(&mut net_bank, &nl).unwrap();
+            assert_eq!(r.posterior, single.posterior, "@ {n_bits} bits seed {seed}");
+            assert_eq!(r.marginal, single.marginal, "@ {n_bits} bits seed {seed}");
+        }
     }
 
     #[test]
@@ -228,6 +341,35 @@ mod tests {
         assert!(r.abs_error() < 0.02, "err {}", r.abs_error());
         // Two agreeing children push the posterior above the prior.
         assert!(r.exact > 0.57);
+    }
+
+    #[test]
+    fn closed_forms_match_full_joint_enumeration() {
+        // The struct-level closed forms and the generic exact engine are
+        // independent derivations; they must agree on the same spec.
+        let two = TwoParentOneChild {
+            p_a1: 0.6,
+            p_a2: 0.4,
+            p_b_given: [[0.1, 0.5], [0.6, 0.9]],
+        };
+        let (post, p_ev) = crate::network::exact_posterior_by_name(
+            &two.network().unwrap(),
+            "a1",
+            &[("b", true)],
+        )
+        .unwrap();
+        assert!((post - two.exact_posterior()).abs() < 1e-12);
+        assert!((p_ev - two.exact_marginal()).abs() < 1e-12);
+
+        let one = OneParentTwoChild { p_a: 0.57, p_b1: (0.8, 0.3), p_b2: (0.7, 0.4) };
+        let (post, p_ev) = crate::network::exact_posterior_by_name(
+            &one.network().unwrap(),
+            "a",
+            &[("b1", true), ("b2", true)],
+        )
+        .unwrap();
+        assert!((post - one.exact_posterior()).abs() < 1e-12);
+        assert!((p_ev - one.exact_marginal()).abs() < 1e-12);
     }
 
     #[test]

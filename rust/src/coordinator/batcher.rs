@@ -42,7 +42,7 @@ impl Batch {
                         likelihood_not: *likelihood_not,
                     })
                 }
-                DecisionKind::Fusion { .. } => None,
+                DecisionKind::Fusion { .. } | DecisionKind::Network { .. } => None,
             })
             .collect()
     }
@@ -54,7 +54,7 @@ impl Batch {
             .iter()
             .map(|r| match &r.kind {
                 DecisionKind::Fusion { posteriors } => Some(posteriors.as_slice()),
-                DecisionKind::Inference { .. } => None,
+                DecisionKind::Inference { .. } | DecisionKind::Network { .. } => None,
             })
             .collect()
     }

@@ -7,6 +7,21 @@ use std::time::Duration;
 pub const LATENCY_BUCKETS_US: [u64; 10] =
     [50, 100, 200, 400, 800, 1_600, 3_200, 6_400, 12_800, u64::MAX];
 
+/// Which decision family a completed request belonged to — the index
+/// into the per-kind completion counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KindTag {
+    /// Eq.-1 inference.
+    Inference = 0,
+    /// M-modal fusion.
+    Fusion = 1,
+    /// Compiled Bayesian-network query.
+    Network = 2,
+}
+
+/// Number of [`KindTag`] variants.
+pub const N_KINDS: usize = 3;
+
 /// Shared atomic counters. All methods are thread-safe; snapshots are
 /// consistent-enough reads for reporting.
 #[derive(Debug, Default)]
@@ -20,6 +35,7 @@ pub struct Metrics {
     latency_us_sum: AtomicU64,
     latency_buckets: [AtomicU64; 10],
     hardware_ns: AtomicU64,
+    completed_by_kind: [AtomicU64; N_KINDS],
 }
 
 impl Metrics {
@@ -45,8 +61,9 @@ impl Metrics {
     }
 
     /// A decision completed successfully.
-    pub fn on_complete(&self, latency: Duration, hardware_ns: f64) {
+    pub fn on_complete(&self, latency: Duration, hardware_ns: f64, kind: KindTag) {
         self.completed.fetch_add(1, Ordering::Relaxed);
+        self.completed_by_kind[kind as usize].fetch_add(1, Ordering::Relaxed);
         let us = latency.as_micros() as u64;
         self.latency_us_sum.fetch_add(us, Ordering::Relaxed);
         let idx = LATENCY_BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(9);
@@ -63,6 +80,10 @@ impl Metrics {
     pub fn snapshot(&self) -> MetricsSnapshot {
         let buckets: Vec<u64> =
             self.latency_buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let mut completed_by_kind = [0u64; N_KINDS];
+        for (out, c) in completed_by_kind.iter_mut().zip(&self.completed_by_kind) {
+            *out = c.load(Ordering::Relaxed);
+        }
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -73,6 +94,7 @@ impl Metrics {
             latency_us_sum: self.latency_us_sum.load(Ordering::Relaxed),
             latency_buckets: buckets,
             hardware_ns: self.hardware_ns.load(Ordering::Relaxed),
+            completed_by_kind,
         }
     }
 }
@@ -98,6 +120,8 @@ pub struct MetricsSnapshot {
     pub latency_buckets: Vec<u64>,
     /// Accumulated virtual hardware time, ns.
     pub hardware_ns: u64,
+    /// Completions per decision family, indexed by [`KindTag`].
+    pub completed_by_kind: [u64; N_KINDS],
 }
 
 impl MetricsSnapshot {
@@ -108,6 +132,11 @@ impl MetricsSnapshot {
         } else {
             self.latency_us_sum as f64 / self.completed as f64
         }
+    }
+
+    /// Completions for one decision family.
+    pub fn completed_for(&self, kind: KindTag) -> u64 {
+        self.completed_by_kind[kind as usize]
     }
 
     /// Mean batch occupancy.
@@ -151,6 +180,7 @@ impl MetricsSnapshot {
     pub fn to_table(&self) -> String {
         format!(
             "submitted {}  completed {}  rejected {}  failed {}\n\
+             by kind: inference {}  fusion {}  network {}\n\
              batches {}  mean batch {:.2}\n\
              latency mean {:.1} µs  p50 ≤{} µs  p99 ≤{} µs\n\
              virtual hardware fps {:.0}",
@@ -158,6 +188,9 @@ impl MetricsSnapshot {
             self.completed,
             self.rejected,
             self.failed,
+            self.completed_for(KindTag::Inference),
+            self.completed_for(KindTag::Fusion),
+            self.completed_for(KindTag::Network),
             self.batches,
             self.mean_batch_size(),
             self.mean_latency_us(),
@@ -179,14 +212,17 @@ mod tests {
         m.on_submit();
         m.on_reject();
         m.on_batch(2);
-        m.on_complete(Duration::from_micros(120), 400_000.0);
-        m.on_complete(Duration::from_micros(80), 400_000.0);
+        m.on_complete(Duration::from_micros(120), 400_000.0, KindTag::Inference);
+        m.on_complete(Duration::from_micros(80), 400_000.0, KindTag::Network);
         m.on_fail();
         let s = m.snapshot();
         assert_eq!(s.submitted, 2);
         assert_eq!(s.rejected, 1);
         assert_eq!(s.completed, 2);
         assert_eq!(s.failed, 1);
+        assert_eq!(s.completed_for(KindTag::Inference), 1);
+        assert_eq!(s.completed_for(KindTag::Fusion), 0);
+        assert_eq!(s.completed_for(KindTag::Network), 1);
         assert_eq!(s.mean_batch_size(), 2.0);
         assert!((s.mean_latency_us() - 100.0).abs() < 1e-9);
         // 2 decisions over 0.8 ms of virtual hardware time = 2,500 fps.
@@ -197,9 +233,9 @@ mod tests {
     fn quantiles_from_histogram() {
         let m = Metrics::new();
         for _ in 0..99 {
-            m.on_complete(Duration::from_micros(60), 0.0);
+            m.on_complete(Duration::from_micros(60), 0.0, KindTag::Fusion);
         }
-        m.on_complete(Duration::from_micros(5_000), 0.0);
+        m.on_complete(Duration::from_micros(5_000), 0.0, KindTag::Fusion);
         let s = m.snapshot();
         assert_eq!(s.latency_quantile_us(0.5), 100);
         assert_eq!(s.latency_quantile_us(0.99), 100);
@@ -213,5 +249,6 @@ mod tests {
         assert_eq!(s.latency_quantile_us(0.99), 0);
         assert_eq!(s.virtual_fps(), 0.0);
         assert!(s.to_table().contains("submitted 0"));
+        assert!(s.to_table().contains("network 0"));
     }
 }

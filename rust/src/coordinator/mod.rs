@@ -27,7 +27,7 @@ mod router;
 mod server;
 
 pub use batcher::{Batch, Batcher};
-pub use metrics::{Metrics, MetricsSnapshot};
+pub use metrics::{KindTag, Metrics, MetricsSnapshot};
 pub use request::{Decision, DecisionKind, DecisionRequest, PendingDecision};
 pub use router::{ExecPlan, Router};
 pub use server::{Coordinator, CoordinatorHandle};

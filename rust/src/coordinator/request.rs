@@ -1,9 +1,13 @@
 //! Request/response types of the serving layer.
 
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::network::BayesNet;
 use crate::{Error, Result};
+
+use super::metrics::KindTag;
 
 /// What kind of Bayesian decision a request wants.
 #[derive(Debug, Clone, PartialEq)]
@@ -21,6 +25,18 @@ pub enum DecisionKind {
     Fusion {
         /// Per-modality `P(y|xᵢ)`.
         posteriors: Vec<f64>,
+    },
+    /// Posterior of one node of a declarative Bayesian network given
+    /// evidence, compiled to a stochastic netlist and evaluated
+    /// word-parallel on the worker's SNE bank (native backend only).
+    Network {
+        /// The network spec (shared across requests — cloning is an
+        /// `Arc` bump).
+        net: Arc<BayesNet>,
+        /// Queried node name.
+        query: String,
+        /// Observed nodes `(name, value)`.
+        evidence: Vec<(String, bool)>,
     },
 }
 
@@ -41,6 +57,15 @@ impl DecisionKind {
                     Error::check_prob("posterior", p)?;
                 }
             }
+            DecisionKind::Network { net, query, evidence } => {
+                net.validate()?;
+                net.resolve(query)?;
+                let ev: Vec<(usize, bool)> = evidence
+                    .iter()
+                    .map(|(name, v)| net.resolve(name).map(|i| (i, *v)))
+                    .collect::<Result<_>>()?;
+                crate::network::check_evidence(net, &ev)?;
+            }
         }
         Ok(())
     }
@@ -49,10 +74,20 @@ impl DecisionKind {
     pub fn class(&self) -> u8 {
         match self {
             DecisionKind::Inference { .. } => 0,
+            DecisionKind::Network { .. } => 1,
             DecisionKind::Fusion { posteriors } => {
                 debug_assert!(posteriors.len() < 250);
                 10 + posteriors.len() as u8
             }
+        }
+    }
+
+    /// Which per-kind metrics counter this decision belongs to.
+    pub fn tag(&self) -> KindTag {
+        match self {
+            DecisionKind::Inference { .. } => KindTag::Inference,
+            DecisionKind::Fusion { .. } => KindTag::Fusion,
+            DecisionKind::Network { .. } => KindTag::Network,
         }
     }
 
@@ -63,6 +98,13 @@ impl DecisionKind {
                 crate::bayes::exact_posterior(*prior, *likelihood, *likelihood_not)
             }
             DecisionKind::Fusion { posteriors } => crate::bayes::exact_fusion_m(posteriors),
+            DecisionKind::Network { net, query, evidence } => {
+                let ev: Vec<(&str, bool)> =
+                    evidence.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+                crate::network::exact_posterior_by_name(net, query, &ev)
+                    .map(|(p, _)| p)
+                    .unwrap_or(f64::NAN)
+            }
         }
     }
 }
@@ -141,6 +183,59 @@ impl PendingDecision {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn chain_net() -> Arc<BayesNet> {
+        let mut net = BayesNet::named("chain");
+        net.add_root("a", 0.3).unwrap();
+        net.add_node("b", &["a"], &[0.2, 0.9]).unwrap();
+        Arc::new(net)
+    }
+
+    fn network_kind() -> DecisionKind {
+        DecisionKind::Network {
+            net: chain_net(),
+            query: "a".into(),
+            evidence: vec![("b".into(), true)],
+        }
+    }
+
+    #[test]
+    fn network_kind_validates_and_tags() {
+        let kind = network_kind();
+        kind.validate().unwrap();
+        assert_eq!(kind.tag(), crate::coordinator::KindTag::Network);
+        // Unknown query node.
+        let bad = DecisionKind::Network {
+            net: chain_net(),
+            query: "zz".into(),
+            evidence: vec![],
+        };
+        assert!(matches!(bad.validate().unwrap_err(), Error::Network(_)));
+        // Duplicate evidence.
+        let bad = DecisionKind::Network {
+            net: chain_net(),
+            query: "a".into(),
+            evidence: vec![("b".into(), true), ("b".into(), false)],
+        };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn network_kind_exact_matches_enumeration() {
+        let kind = network_kind();
+        // Same inputs as a 2-node chain: Eq.-1 closed form.
+        let want = crate::bayes::exact_posterior(0.3, 0.9, 0.2);
+        assert!((kind.exact() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn network_class_is_distinct() {
+        let inf = DecisionKind::Inference { prior: 0.5, likelihood: 0.7, likelihood_not: 0.2 };
+        let f2 = DecisionKind::Fusion { posteriors: vec![0.8, 0.6] };
+        let net = network_kind();
+        assert_ne!(net.class(), inf.class());
+        assert_ne!(net.class(), f2.class());
+    }
 
     #[test]
     fn kinds_validate() {

@@ -48,6 +48,10 @@ impl Router {
             Backend::Pjrt => {
                 let chunk = if batch_len > 16 { 64 } else { 16 };
                 let entry = match kind {
+                    // Compiled networks have no AOT artifact family; they
+                    // always run on the native simulator (a PJRT worker
+                    // answers them with a typed error).
+                    DecisionKind::Network { .. } => return ExecPlan::Native,
                     DecisionKind::Inference { .. } => format!("inference_b{chunk}_n256"),
                     DecisionKind::Fusion { posteriors } => {
                         let m = posteriors.len();
@@ -95,6 +99,19 @@ mod tests {
         let r = Router::new(Backend::Native);
         assert_eq!(r.route(&inf(), 5), ExecPlan::Native);
         assert!(r.required_entrypoints().is_empty());
+    }
+
+    #[test]
+    fn network_kind_always_routes_native() {
+        let mut net = crate::network::BayesNet::new();
+        net.add_root("a", 0.5).unwrap();
+        let kind = DecisionKind::Network {
+            net: std::sync::Arc::new(net),
+            query: "a".into(),
+            evidence: vec![],
+        };
+        assert_eq!(Router::new(Backend::Native).route(&kind, 4), ExecPlan::Native);
+        assert_eq!(Router::new(Backend::Pjrt).route(&kind, 4), ExecPlan::Native);
     }
 
     #[test]

@@ -9,6 +9,7 @@ use std::time::{Duration, Instant};
 
 use crate::bayes::{BatchedFusion, BatchedInference, InferenceQuery};
 use crate::config::{AppConfig, Backend};
+use crate::network::{compile_query, BayesNet, Netlist, NetlistEvaluator};
 use crate::runtime::Runtime;
 use crate::stochastic::SneBank;
 use crate::util::Rng;
@@ -242,8 +243,103 @@ fn dispatcher_loop(
 /// dataflow sweep instead of looping single decisions (bit-identical to
 /// the single path — see [`crate::bayes::BatchedInference`]).
 enum WorkerContext {
-    Native { bank: SneBank, inference: BatchedInference, fusion: BatchedFusion },
+    Native {
+        bank: SneBank,
+        inference: BatchedInference,
+        fusion: BatchedFusion,
+        network: NetworkEngine,
+    },
     Pjrt { runtime: Runtime, rng: Rng, n_bits: usize },
+}
+
+/// Entries kept in a worker's compiled-query cache. Small because each
+/// entry pins its `Arc<BayesNet>`; FIFO eviction beyond the cap.
+const NETWORK_CACHE_CAP: usize = 8;
+
+/// Per-worker network executor: the word-parallel evaluator plus a
+/// small compiled-query cache. Serving loads reuse a handful of shared
+/// `Arc<BayesNet>` query tuples across many requests, so the common
+/// case skips re-validation and re-compilation, and the `2^n`
+/// full-joint exact annotation is enumerated lazily at most once per
+/// cached tuple. Each entry holds its `Arc`, which keeps the network
+/// alive and makes `Arc::ptr_eq` a sound identity check (no address
+/// reuse while cached).
+#[derive(Default)]
+struct NetworkEngine {
+    evaluator: NetlistEvaluator,
+    cache: Vec<CachedQuery>,
+}
+
+struct CachedQuery {
+    net: Arc<BayesNet>,
+    query: String,
+    evidence: Vec<(String, bool)>,
+    netlist: Netlist,
+    /// Lazily memoized full-joint exact posterior (reply-time cost).
+    exact: Option<f64>,
+}
+
+impl NetworkEngine {
+    fn entry_index(
+        &self,
+        net: &Arc<BayesNet>,
+        query: &str,
+        evidence: &[(String, bool)],
+    ) -> Option<usize> {
+        self.cache.iter().position(|c| {
+            Arc::ptr_eq(&c.net, net) && c.query == query && c.evidence.as_slice() == evidence
+        })
+    }
+
+    fn decide(
+        &mut self,
+        bank: &mut SneBank,
+        net: &Arc<BayesNet>,
+        query: &str,
+        evidence: &[(String, bool)],
+    ) -> Result<f64> {
+        let idx = match self.entry_index(net, query, evidence) {
+            Some(idx) => idx,
+            None => {
+                let ev: Vec<(&str, bool)> =
+                    evidence.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+                let netlist = compile_query(net, query, &ev)?;
+                if self.cache.len() == NETWORK_CACHE_CAP {
+                    self.cache.remove(0); // evict the oldest entry
+                }
+                self.cache.push(CachedQuery {
+                    net: Arc::clone(net),
+                    query: query.to_string(),
+                    evidence: evidence.to_vec(),
+                    netlist,
+                    exact: None,
+                });
+                self.cache.len() - 1
+            }
+        };
+        let netlist = &self.cache[idx].netlist;
+        self.evaluator.evaluate(bank, netlist).map(|r| r.posterior)
+    }
+
+    /// Closed-form posterior for a cached query, enumerated once per
+    /// cached tuple and memoized (None when the tuple is not cached or
+    /// enumeration fails — callers fall back to `DecisionKind::exact`).
+    fn exact_for(
+        &mut self,
+        net: &Arc<BayesNet>,
+        query: &str,
+        evidence: &[(String, bool)],
+    ) -> Option<f64> {
+        let idx = self.entry_index(net, query, evidence)?;
+        if self.cache[idx].exact.is_none() {
+            let ev: Vec<(&str, bool)> =
+                evidence.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+            self.cache[idx].exact = crate::network::exact_posterior_by_name(net, query, &ev)
+                .ok()
+                .map(|(p, _)| p);
+        }
+        self.cache[idx].exact
+    }
 }
 
 impl WorkerContext {
@@ -253,6 +349,7 @@ impl WorkerContext {
                 bank: SneBank::new(config.sne.clone(), config.seed ^ (worker_idx << 32))?,
                 inference: BatchedInference::new(),
                 fusion: BatchedFusion::new(),
+                network: NetworkEngine::default(),
             }),
             Backend::Pjrt => {
                 let runtime = Runtime::load_subset(
@@ -296,12 +393,23 @@ fn execute_batch(ctx: &mut WorkerContext, batch: Batch, router: &Router, metrics
 
     // Compute posteriors for the whole batch up-front.
     let posteriors: Vec<Result<f64>> = match (&plan, &mut *ctx) {
-        (ExecPlan::Native, WorkerContext::Native { bank, inference, fusion }) => {
-            execute_native(bank, inference, fusion, &batch)
+        (ExecPlan::Native, WorkerContext::Native { bank, inference, fusion, network }) => {
+            execute_native(bank, inference, fusion, network, &batch)
         }
         (ExecPlan::Pjrt { entry, chunk }, WorkerContext::Pjrt { runtime, rng, .. }) => {
             execute_pjrt(runtime, rng, entry, *chunk, &batch)
         }
+        // Network batches route Native even on the PJRT backend (no AOT
+        // artifact family exists for compiled netlists).
+        (ExecPlan::Native, WorkerContext::Pjrt { .. }) => batch
+            .requests
+            .iter()
+            .map(|_| {
+                Err(Error::Coordinator(
+                    "network decisions require the native backend".into(),
+                ))
+            })
+            .collect(),
         // Plan/context mismatch is a construction bug.
         _ => batch
             .requests
@@ -318,11 +426,22 @@ fn execute_batch(ctx: &mut WorkerContext, batch: Batch, router: &Router, metrics
                 Err(Error::Deadline(req.deadline.unwrap()))
             }
             Ok(posterior) => {
-                metrics.on_complete(latency, hardware_ns);
+                metrics.on_complete(latency, hardware_ns, req.kind.tag());
+                // Network exacts cost a 2^n enumeration: memoize it in
+                // the engine's query cache instead of paying per reply.
+                let exact = match (&req.kind, &mut *ctx) {
+                    (
+                        DecisionKind::Network { net, query, evidence },
+                        WorkerContext::Native { network, .. },
+                    ) => network
+                        .exact_for(net, query, evidence)
+                        .unwrap_or_else(|| req.kind.exact()),
+                    _ => req.kind.exact(),
+                };
                 Ok(Decision {
                     id: req.id,
                     posterior,
-                    exact: req.kind.exact(),
+                    exact,
                     latency,
                     hardware_ns,
                     batch_size,
@@ -341,13 +460,17 @@ fn execute_batch(ctx: &mut WorkerContext, batch: Batch, router: &Router, metrics
 /// one grouped SNE encode plus one packed AND/MUX/CORDIV sweep for all N
 /// member decisions (bit-identical to looping the single-decision
 /// operators, ~2×+ faster at batch 32 — measured in
-/// `benches/coordinator.rs`). The batcher groups by class, so a batch is
-/// always homogeneous; the mixed-batch arm is a defensive fallback that
-/// serves per-request through batch-of-one calls.
+/// `benches/coordinator.rs`). Network batches evaluate word-parallel
+/// through the worker's [`NetworkEngine`] (reusable scratch plus a
+/// compiled-netlist cache, so repeated queries on one shared
+/// `Arc<BayesNet>` compile once). The batcher groups by class, so a
+/// batch is always homogeneous; the per-request arm also doubles as a
+/// defensive fallback for mixed batches.
 fn execute_native(
     bank: &mut SneBank,
     inference: &mut BatchedInference,
     fusion: &mut BatchedFusion,
+    network: &mut NetworkEngine,
     batch: &Batch,
 ) -> Vec<Result<f64>> {
     if let Some(queries) = batch.inference_queries() {
@@ -379,6 +502,9 @@ fn execute_native(
                     .fuse_batch(bank, &[posteriors.as_slice()])
                     .pop()
                     .expect("one result per row"),
+                DecisionKind::Network { net, query, evidence } => {
+                    network.decide(bank, net, query, evidence)
+                }
             })
             .collect()
     }
@@ -399,6 +525,16 @@ fn execute_pjrt(
         let (width, is_inference) = match &slice[0].kind {
             DecisionKind::Inference { .. } => (3, true),
             DecisionKind::Fusion { posteriors } => (posteriors.len(), false),
+            // Unreachable in practice: the router plans Network batches
+            // as Native. Defensive for exhaustiveness.
+            DecisionKind::Network { .. } => {
+                for _ in 0..slice.len() {
+                    out.push(Err(Error::Coordinator(
+                        "network decisions require the native backend".into(),
+                    )));
+                }
+                continue;
+            }
         };
         let mut probs = vec![0f32; chunk * width];
         for (i, req) in slice.iter().enumerate() {
@@ -413,6 +549,9 @@ fn execute_pjrt(
                         probs[i * width + j] = p as f32;
                     }
                 }
+                // Cannot appear in a slice whose head is not Network
+                // (the batcher never mixes classes); leave the row zero.
+                DecisionKind::Network { .. } => {}
             }
         }
         let result = if is_inference {
@@ -462,6 +601,27 @@ mod tests {
         assert!((d.exact - 0.609).abs() < 0.005);
         assert!((d.posterior - d.exact).abs() < 0.25); // 100-bit noise
         assert!((d.hardware_ns - 400_000.0).abs() < 1e-6);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn serves_network_decisions() {
+        let mut net = crate::network::BayesNet::named("chain");
+        net.add_root("a", 0.57).unwrap();
+        net.add_node("b", &["a"], &[0.655, 0.77]).unwrap();
+        let net = Arc::new(net);
+        let coord = Coordinator::start(&config(1, 4)).unwrap();
+        let kind = DecisionKind::Network {
+            net,
+            query: "a".into(),
+            evidence: vec![("b".into(), true)],
+        };
+        let d = coord.handle().decide(kind).unwrap();
+        // Same inputs as the Fig. 3b chain: exact posterior ~0.609.
+        assert!((d.exact - 0.609).abs() < 0.005);
+        assert!((d.posterior - d.exact).abs() < 0.25); // 100-bit noise
+        let snap = coord.handle().metrics().snapshot();
+        assert_eq!(snap.completed_for(crate::coordinator::KindTag::Network), 1);
         coord.shutdown();
     }
 

@@ -47,6 +47,10 @@ pub enum Error {
     /// Coordinator rejected or dropped a request.
     Coordinator(String),
 
+    /// Bayesian-network spec/validation/compile failure (bad DAG,
+    /// incomplete CPT, unknown node, ...).
+    Network(String),
+
     /// Deadline exceeded while waiting for a decision.
     Deadline(std::time::Duration),
 
@@ -73,6 +77,7 @@ impl std::fmt::Display for Error {
             Error::Artifact(msg) => write!(f, "artifact error: {msg}"),
             Error::Runtime(msg) => write!(f, "runtime error: {msg}"),
             Error::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
+            Error::Network(msg) => write!(f, "network error: {msg}"),
             Error::Deadline(d) => write!(f, "deadline exceeded after {d:?}"),
             Error::Io(e) => write!(f, "{e}"),
             Error::Toml(msg) => write!(f, "toml parse error: {msg}"),
@@ -131,5 +136,7 @@ mod tests {
         assert!(e.to_string().contains("pa"));
         let e = Error::DeviceWorn { row: 3, col: 4, cycles: 1_000_000 };
         assert!(e.to_string().contains("worn"));
+        let e = Error::Network("node 'b': cycle".into());
+        assert!(e.to_string().contains("network error"));
     }
 }

@@ -20,6 +20,10 @@
 //!   inference (Eq. 1, Fig. 3) and fusion (Eqs. 2–5, Fig. 4) operators,
 //!   plus the word-parallel batched engine ([`bayes::BatchedInference`],
 //!   [`bayes::BatchedFusion`]) the serving layer executes through.
+//! * [`network`] — the Bayesian-network compiler: declarative DAG specs
+//!   ([`network::BayesNet`], on-disk TOML format), validation, lowering
+//!   to MUX/AND/CORDIV netlists generalising Fig. S8, a word-parallel
+//!   evaluator, and a full-joint exact baseline.
 //! * [`scene`] — synthetic road-scene workloads standing in for the FLIR
 //!   RGB-thermal dataset and YOLO-class detectors.
 //! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas
@@ -50,6 +54,7 @@ pub mod device;
 pub mod error;
 pub mod figures;
 pub mod logic;
+pub mod network;
 pub mod runtime;
 pub mod scene;
 pub mod stochastic;

@@ -7,6 +7,8 @@
 //! bayes-mem parse-scene [--frames N]               end-to-end scene parsing
 //! bayes-mem infer --prior P --lik P --lik-not P    one-shot inference
 //! bayes-mem fuse  --p 0.8 --p 0.7 [...]            one-shot fusion
+//! bayes-mem network --spec net.toml --query A --evidence B=1
+//!                                                  compiled-network query
 //! bayes-mem artifacts [--dir artifacts]            inspect AOT artifacts
 //! bayes-mem config                                 print an example config
 //! ```
@@ -32,6 +34,7 @@ use bayes_mem::bayes::{FusionOperator, InferenceOperator};
 use bayes_mem::config::{AppConfig, Backend};
 use bayes_mem::coordinator::{Coordinator, DecisionKind};
 use bayes_mem::figures;
+use bayes_mem::network::{compile_query, exact_posterior_by_name, BayesNet, NetlistEvaluator};
 use bayes_mem::runtime::Runtime;
 use bayes_mem::scene::{fusion_input, VideoWorkload};
 use bayes_mem::stochastic::SneBank;
@@ -124,6 +127,7 @@ fn run(args: Vec<String>) -> CliResult<()> {
         "parse-scene" => cmd_parse_scene(&flags),
         "infer" => cmd_infer(&flags),
         "fuse" => cmd_fuse(&flags),
+        "network" => cmd_network(&flags),
         "artifacts" => cmd_artifacts(&flags),
         "config" => {
             print!("{}", AppConfig::example_toml());
@@ -145,6 +149,8 @@ USAGE:
   bayes-mem parse-scene [--frames N] [--seed N] [--backend native|pjrt]
   bayes-mem infer --prior P --lik P --lik-not P [--bits N]
   bayes-mem fuse --p P --p P [--p P ...] [--bits N]
+  bayes-mem network --spec net.toml --query NODE [--evidence NODE=1 ...]
+                    [--bits N] [--seed N]
   bayes-mem artifacts [--artifacts DIR]
   bayes-mem config
 ";
@@ -209,6 +215,59 @@ fn cmd_fuse(flags: &Flags) -> CliResult<()> {
         r.exact,
         r.abs_error(),
         bits as f64 * 0.004,
+        bank.ledger().energy_nj,
+    );
+    Ok(())
+}
+
+fn cmd_network(flags: &Flags) -> CliResult<()> {
+    let Some(spec) = flags.get("spec") else { bail!("need --spec <net.toml>") };
+    let net = BayesNet::load(std::path::Path::new(spec))?;
+    let Some(query) = flags.get("query") else { bail!("need --query <node>") };
+    let mut evidence: Vec<(String, bool)> = Vec::new();
+    for e in flags.get_all("evidence") {
+        let Some((name, val)) = e.split_once('=') else {
+            bail!("evidence must be <node>=0|1, got {e:?}")
+        };
+        let val = match val.trim() {
+            "1" | "true" => true,
+            "0" | "false" => false,
+            other => bail!("evidence value must be 0/1/true/false, got {other:?}"),
+        };
+        evidence.push((name.trim().to_string(), val));
+    }
+    let bits = flags.usize_or("bits", 100);
+    let mut cfg = AppConfig::default();
+    cfg.sne.n_bits = bits;
+    let mut bank = SneBank::new(cfg.sne, flags.u64_or("seed", 42))?;
+    let ev_refs: Vec<(&str, bool)> = evidence.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+    let netlist = compile_query(&net, query, &ev_refs)?;
+    let r = NetlistEvaluator::new().evaluate(&mut bank, &netlist)?;
+    let (exact, exact_ev) = exact_posterior_by_name(&net, query, &ev_refs)?;
+    let given = if evidence.is_empty() {
+        "no evidence".to_string()
+    } else {
+        evidence
+            .iter()
+            .map(|(n, v)| format!("{n}={}", *v as u8))
+            .collect::<Vec<_>>()
+            .join(", ")
+    };
+    let display_name = if net.name().is_empty() { spec } else { net.name() };
+    println!(
+        "network '{display_name}': {} nodes -> {} gates, {} SNE streams\n\
+         P({query}=1 | {given}) = {:.4}  (exact {:.4}, |err| {:.4})\n\
+         P(evidence)          = {:.4}  (exact {:.4})\n\
+         hardware: {:.3} ms, {:.2} nJ",
+        net.len(),
+        netlist.ops().len(),
+        netlist.inputs().len(),
+        r.posterior,
+        exact,
+        (r.posterior - exact).abs(),
+        r.marginal,
+        exact_ev,
+        bank.ledger().clock.elapsed_ms(),
         bank.ledger().energy_nj,
     );
     Ok(())

@@ -1,0 +1,346 @@
+//! DAG → stochastic gate-netlist lowering (the Fig. S8 construction,
+//! generalised).
+//!
+//! For each node in topological order the compiler emits the same
+//! circuit the paper hand-wires for its three example shapes:
+//!
+//! 1. **Encode** — every CPT row becomes one uncorrelated SNE stream
+//!    (parallel SNEs, Fig. 2b), drawn in the row's declaration order.
+//! 2. **Ancestral-sampling MUX tree** (Fig. S8b) — a node with `k`
+//!    parents selects among its `2^k` row streams with the parent
+//!    sample streams as select lines, folding the **last** parent out
+//!    first. Parent streams are *shared* wherever the parent fans out
+//!    (Fig. S8c), which is what keeps child samples correlation-correct
+//!    without any decorrelation circuitry.
+//! 3. **Evidence AND chain** — the denominator is the conjunction of
+//!    the observed nodes' indicator streams (stream for `X=1`, its
+//!    complement for `X=0`); with no evidence it degenerates to the
+//!    all-ones stream and the readout is the query's marginal.
+//! 4. **CORDIV readout** (Fig. S7/S9) — the numerator is
+//!    `query ∧ evidence`, a bitwise **subset** of the denominator by
+//!    construction — exactly the correlation CORDIV requires, so the
+//!    posterior needs only one MUX and one flip-flop, evaluated by
+//!    [`super::NetlistEvaluator`].
+
+use crate::{Error, Result};
+
+use super::spec::BayesNet;
+use super::validate;
+
+/// One gate of a compiled netlist, operating on stream slots.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GateOp {
+    /// `dst = (sel & hi) | (!sel & lo)` — the ancestral-sampling select.
+    Mux {
+        /// Output slot.
+        dst: usize,
+        /// Input selected when `sel = 0`.
+        lo: usize,
+        /// Input selected when `sel = 1`.
+        hi: usize,
+        /// Select-line slot (a parent sample stream).
+        sel: usize,
+    },
+    /// `dst = a & b`.
+    And {
+        /// Output slot.
+        dst: usize,
+        /// Left operand.
+        a: usize,
+        /// Right operand.
+        b: usize,
+    },
+    /// `dst = !a` (tail-masked) — negative-evidence indicator.
+    Not {
+        /// Output slot.
+        dst: usize,
+        /// Operand.
+        a: usize,
+    },
+    /// `dst = all-ones` — the empty-evidence denominator.
+    Const1 {
+        /// Output slot.
+        dst: usize,
+    },
+}
+
+/// A compiled query: SNE input plan, gate netlist, and CORDIV taps.
+///
+/// Slots `0..inputs.len()` hold the encoded input streams (one grouped
+/// [`crate::stochastic::SneBank::encode_group_into`] pass); gate outputs
+/// occupy the remaining slots in `ops` order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Netlist {
+    pub(crate) inputs: Vec<f64>,
+    pub(crate) ops: Vec<GateOp>,
+    pub(crate) n_slots: usize,
+    pub(crate) num: usize,
+    pub(crate) den: usize,
+    pub(crate) node_slot: Vec<usize>,
+}
+
+impl Netlist {
+    /// SNE input probabilities, in encode order.
+    pub fn inputs(&self) -> &[f64] {
+        &self.inputs
+    }
+
+    /// The gates, in evaluation order.
+    pub fn ops(&self) -> &[GateOp] {
+        &self.ops
+    }
+
+    /// Total stream slots (inputs + gate outputs).
+    pub fn n_slots(&self) -> usize {
+        self.n_slots
+    }
+
+    /// Numerator tap (`query ∧ evidence`).
+    pub fn num_slot(&self) -> usize {
+        self.num
+    }
+
+    /// Denominator tap (the evidence stream).
+    pub fn den_slot(&self) -> usize {
+        self.den
+    }
+
+    /// Slot carrying network node `i`'s ancestral sample stream.
+    pub fn node_slot(&self, node: usize) -> usize {
+        self.node_slot[node]
+    }
+}
+
+/// Compile `P(query=1 | evidence)` with nodes referenced by name.
+pub fn compile_query(
+    net: &BayesNet,
+    query: &str,
+    evidence: &[(&str, bool)],
+) -> Result<Netlist> {
+    let q = net.resolve(query)?;
+    let ev: Vec<(usize, bool)> = evidence
+        .iter()
+        .map(|&(name, v)| net.resolve(name).map(|i| (i, v)))
+        .collect::<Result<_>>()?;
+    compile(net, q, &ev)
+}
+
+/// Evidence well-formedness: indices in range, no node observed twice.
+/// Shared by [`compile`] and the coordinator's admission validation so
+/// the two layers cannot drift.
+pub fn check_evidence(net: &BayesNet, evidence: &[(usize, bool)]) -> Result<()> {
+    for (j, &(e, _)) in evidence.iter().enumerate() {
+        if e >= net.len() {
+            return Err(Error::Network(format!("evidence node index {e} out of range")));
+        }
+        if evidence[..j].iter().any(|&(e2, _)| e2 == e) {
+            return Err(Error::Network(format!(
+                "duplicate evidence on node '{}'",
+                net.nodes()[e].name
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Compile `P(query=1 | evidence)` with nodes referenced by index.
+///
+/// Every node of the network is lowered, including descendants barren
+/// to the query/evidence: retaining them keeps the SNE encode order a
+/// function of the spec alone (the bit-reproducibility contract) at the
+/// cost of a few extra streams on small scene graphs.
+pub fn compile(net: &BayesNet, query: usize, evidence: &[(usize, bool)]) -> Result<Netlist> {
+    net.validate()?;
+    let n = net.len();
+    if query >= n {
+        return Err(Error::Network(format!("query node index {query} out of range")));
+    }
+    check_evidence(net, evidence)?;
+    let order = validate::topo_order(net)?;
+
+    // Pass 1: input slots 0..n_inputs, CPT rows in declaration order,
+    // nodes in topological order — the SNE encode plan.
+    let mut inputs: Vec<f64> = Vec::new();
+    let mut input_base = vec![0usize; n];
+    for &i in &order {
+        input_base[i] = inputs.len();
+        inputs.extend(net.nodes()[i].cpt.iter().map(|&(_, p)| p));
+    }
+    let mut n_slots = inputs.len();
+
+    // Pass 2: one MUX tree per non-root node, folding the last parent
+    // out first (a 4×1 MUX for two parents — Fig. S8b's wiring).
+    let mut ops: Vec<GateOp> = Vec::new();
+    let mut node_slot = vec![usize::MAX; n];
+    for &i in &order {
+        let node = &net.nodes()[i];
+        let k = node.parents.len();
+        if k == 0 {
+            node_slot[i] = input_base[i];
+            continue;
+        }
+        let mut level = vec![0usize; 1 << k];
+        for (r, &(a, _)) in node.cpt.iter().enumerate() {
+            level[a as usize] = input_base[i] + r;
+        }
+        let mut pj = k;
+        while level.len() > 1 {
+            pj -= 1;
+            let sel = node_slot[node.parents[pj]];
+            let mut next = Vec::with_capacity(level.len() / 2);
+            for pair in level.chunks(2) {
+                let dst = n_slots;
+                n_slots += 1;
+                ops.push(GateOp::Mux { dst, lo: pair[0], hi: pair[1], sel });
+                next.push(dst);
+            }
+            level = next;
+        }
+        node_slot[i] = level[0];
+    }
+
+    // Pass 3: evidence stream (denominator) and the numerator subset.
+    let den = if evidence.is_empty() {
+        let dst = n_slots;
+        n_slots += 1;
+        ops.push(GateOp::Const1 { dst });
+        dst
+    } else {
+        let mut acc: Option<usize> = None;
+        for &(e, val) in evidence {
+            let ind = if val {
+                node_slot[e]
+            } else {
+                let dst = n_slots;
+                n_slots += 1;
+                ops.push(GateOp::Not { dst, a: node_slot[e] });
+                dst
+            };
+            acc = Some(match acc {
+                None => ind,
+                Some(prev) => {
+                    let dst = n_slots;
+                    n_slots += 1;
+                    ops.push(GateOp::And { dst, a: prev, b: ind });
+                    dst
+                }
+            });
+        }
+        acc.expect("non-empty evidence")
+    };
+    let num = n_slots;
+    n_slots += 1;
+    ops.push(GateOp::And { dst: num, a: node_slot[query], b: den });
+
+    Ok(Netlist { inputs, ops, n_slots, num, den, node_slot })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> BayesNet {
+        let mut net = BayesNet::new();
+        net.add_root("a", 0.4).unwrap();
+        net.add_node("b", &["a"], &[0.2, 0.9]).unwrap();
+        net.add_node("c", &["a"], &[0.7, 0.1]).unwrap();
+        net.add_node("d", &["b", "c"], &[0.1, 0.5, 0.6, 0.95]).unwrap();
+        net
+    }
+
+    #[test]
+    fn single_node_marginal_compiles_to_const1_denominator() {
+        let mut net = BayesNet::new();
+        net.add_root("a", 0.3).unwrap();
+        let nl = compile_query(&net, "a", &[]).unwrap();
+        assert_eq!(nl.inputs(), &[0.3]);
+        // Const1 denominator + the numerator AND.
+        assert_eq!(nl.ops().len(), 2);
+        assert!(matches!(nl.ops()[0], GateOp::Const1 { .. }));
+        assert!(matches!(nl.ops()[1], GateOp::And { .. }));
+        assert_eq!(nl.n_slots(), 3);
+        assert_eq!(nl.node_slot(0), 0);
+    }
+
+    #[test]
+    fn diamond_compiles_with_shared_parent_streams() {
+        let net = diamond();
+        let nl = compile_query(&net, "a", &[("d", true)]).unwrap();
+        // Inputs: a, b's 2 rows, c's 2 rows, d's 4 rows.
+        assert_eq!(nl.inputs().len(), 9);
+        assert_eq!(nl.inputs()[0], 0.4);
+        assert_eq!(&nl.inputs()[5..], &[0.1, 0.5, 0.6, 0.95]);
+        // Gates: 1 MUX for b, 1 for c, 3 for d's tree, + numerator AND.
+        assert_eq!(nl.ops().len(), 6);
+        // Both b's and c's MUX select on a's shared stream (slot 0).
+        let sels: Vec<usize> = nl
+            .ops()
+            .iter()
+            .filter_map(|op| match *op {
+                GateOp::Mux { sel, .. } => Some(sel),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(sels.iter().filter(|&&s| s == 0).count(), 2, "a fans out twice");
+        // Evidence d=1: denominator IS d's sample stream (no extra gate).
+        assert_eq!(nl.den_slot(), nl.node_slot(3));
+        assert!(matches!(
+            nl.ops()[nl.ops().len() - 1],
+            GateOp::And { dst, .. } if dst == nl.num_slot()
+        ));
+    }
+
+    #[test]
+    fn negative_evidence_inserts_a_not() {
+        let net = diamond();
+        let nl = compile_query(&net, "a", &[("b", false), ("c", true)]).unwrap();
+        let nots = nl.ops().iter().filter(|op| matches!(op, GateOp::Not { .. })).count();
+        assert_eq!(nots, 1);
+        // b=0 and c=1 indicators must AND into the denominator.
+        let ands = nl.ops().iter().filter(|op| matches!(op, GateOp::And { .. })).count();
+        assert_eq!(ands, 2, "evidence AND + numerator AND");
+    }
+
+    #[test]
+    fn mux_tree_folds_last_parent_first() {
+        let net = diamond();
+        let nl = compile_query(&net, "d", &[]).unwrap();
+        // d's first tree level pairs rows by the LAST parent (c): its two
+        // MUXes select on c's stream; the second level selects on b's.
+        let (b_slot, c_slot) = (nl.node_slot(1), nl.node_slot(2));
+        let d_muxes: Vec<usize> = nl
+            .ops()
+            .iter()
+            .filter_map(|op| match *op {
+                GateOp::Mux { sel, .. } if sel == b_slot || sel == c_slot => Some(sel),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(d_muxes, vec![c_slot, c_slot, b_slot]);
+    }
+
+    #[test]
+    fn compile_errors_are_typed() {
+        let net = diamond();
+        assert!(matches!(
+            compile_query(&net, "zz", &[]).unwrap_err(),
+            Error::Network(_)
+        ));
+        assert!(matches!(
+            compile_query(&net, "a", &[("zz", true)]).unwrap_err(),
+            Error::Network(_)
+        ));
+        let err = compile_query(&net, "a", &[("d", true), ("d", false)]).unwrap_err();
+        assert!(err.to_string().contains("duplicate evidence"), "{err}");
+        // Invalid nets refuse to compile.
+        let bad = BayesNet::from_parts(
+            "",
+            vec![crate::network::NodeSpec {
+                name: "a".into(),
+                parents: vec![0],
+                cpt: vec![(0, 0.1), (1, 0.9)],
+            }],
+        );
+        assert!(compile(&bad, 0, &[]).is_err());
+    }
+}

@@ -1,0 +1,244 @@
+//! Netlist evaluation: the word-parallel engine the serving layer uses,
+//! plus a bit-serial reference walk (the accuracy/perf comparator in
+//! `benches/network.rs`).
+//!
+//! The word-parallel path follows the `bayes::batch` conventions: one
+//! grouped SNE encode ([`SneBank::encode_group_into`]) straight into a
+//! reusable packed scratch buffer, every gate a bitwise op over `u64`
+//! lanes, the CORDIV readout through the shared
+//! [`crate::logic::cordiv_word`] Hillis–Steele word step, and tails
+//! masked by the shared `tail_word_mask` convention. The steady state
+//! allocates nothing: the scratch buffer is reused across calls.
+
+use crate::logic::cordiv_word;
+use crate::stochastic::{tail_word_mask, SneBank};
+use crate::Result;
+
+use super::compile::{GateOp, Netlist};
+
+/// Measured outputs of one compiled-network decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkPosterior {
+    /// Measured `P(query=1 | evidence)` — the CORDIV quotient density.
+    pub posterior: f64,
+    /// Measured `P(evidence)` — the denominator-stream density (1.0 for
+    /// evidence-free marginal queries).
+    pub marginal: f64,
+}
+
+/// Reusable netlist evaluator (owns the packed scratch buffer).
+#[derive(Debug, Default)]
+pub struct NetlistEvaluator {
+    scratch: Vec<u64>,
+}
+
+impl NetlistEvaluator {
+    /// Evaluator with an empty scratch buffer (grows to fit the first
+    /// netlist, then is reused).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Evaluate word-parallel on `bank`: one grouped encode, one bitwise
+    /// sweep per gate, one CORDIV pass. Draws SNEs/RNG words in exactly
+    /// the order repeated single `encode` calls would, so results are
+    /// bit-identical to the hand-wired circuits it replaces.
+    pub fn evaluate(&mut self, bank: &mut SneBank, netlist: &Netlist) -> Result<NetworkPosterior> {
+        let n_bits = bank.n_bits();
+        let w = n_bits.div_ceil(64);
+        self.scratch.resize(netlist.n_slots() * w, 0);
+        let n_in = netlist.inputs().len();
+        bank.encode_group_into(netlist.inputs(), &mut self.scratch[..n_in * w])?;
+        for op in netlist.ops() {
+            match *op {
+                GateOp::Mux { dst, lo, hi, sel } => {
+                    for k in 0..w {
+                        let s = self.scratch[sel * w + k];
+                        self.scratch[dst * w + k] =
+                            (s & self.scratch[hi * w + k]) | (!s & self.scratch[lo * w + k]);
+                    }
+                }
+                GateOp::And { dst, a, b } => {
+                    for k in 0..w {
+                        self.scratch[dst * w + k] =
+                            self.scratch[a * w + k] & self.scratch[b * w + k];
+                    }
+                }
+                GateOp::Not { dst, a } => {
+                    for k in 0..w {
+                        self.scratch[dst * w + k] = !self.scratch[a * w + k];
+                    }
+                    self.scratch[dst * w + w - 1] &= tail_word_mask(n_bits);
+                }
+                GateOp::Const1 { dst } => {
+                    for k in 0..w {
+                        self.scratch[dst * w + k] = u64::MAX;
+                    }
+                    self.scratch[dst * w + w - 1] &= tail_word_mask(n_bits);
+                }
+            }
+        }
+        // CORDIV readout over the num/den taps, accumulating popcounts.
+        let (num, den) = (netlist.num_slot(), netlist.den_slot());
+        let mut dff = false;
+        let (mut q_ones, mut d_ones) = (0u64, 0u64);
+        for k in 0..w {
+            let mask = if k + 1 == w { tail_word_mask(n_bits) } else { u64::MAX };
+            let nw = self.scratch[num * w + k] & mask;
+            let dw = self.scratch[den * w + k] & mask;
+            d_ones += dw.count_ones() as u64;
+            q_ones += (cordiv_word(nw, dw, &mut dff) & mask).count_ones() as u64;
+        }
+        bank.finish_decision();
+        Ok(NetworkPosterior {
+            posterior: q_ones as f64 / n_bits as f64,
+            marginal: d_ones as f64 / n_bits as f64,
+        })
+    }
+
+    /// Bit-serial reference walk of the same netlist: identical encode
+    /// (same SNE/RNG draws), then every gate and the CORDIV flip-flop
+    /// stepped one bit at a time — the "conventional" dataflow the
+    /// word-parallel sweep must beat ≥2× (`benches/network.rs`) while
+    /// matching bit-for-bit (pinned by tests here).
+    pub fn evaluate_reference(
+        &mut self,
+        bank: &mut SneBank,
+        netlist: &Netlist,
+    ) -> Result<NetworkPosterior> {
+        let n_bits = bank.n_bits();
+        let w = n_bits.div_ceil(64);
+        let n_in = netlist.inputs().len();
+        let mut packed = vec![0u64; n_in * w];
+        bank.encode_group_into(netlist.inputs(), &mut packed)?;
+        let mut slots = vec![false; netlist.n_slots()];
+        let mut dff = false;
+        let (mut q_ones, mut d_ones) = (0u64, 0u64);
+        for i in 0..n_bits {
+            for (j, slot) in slots.iter_mut().take(n_in).enumerate() {
+                *slot = (packed[j * w + i / 64] >> (i % 64)) & 1 == 1;
+            }
+            for op in netlist.ops() {
+                match *op {
+                    GateOp::Mux { dst, lo, hi, sel } => {
+                        slots[dst] = if slots[sel] { slots[hi] } else { slots[lo] }
+                    }
+                    GateOp::And { dst, a, b } => slots[dst] = slots[a] && slots[b],
+                    GateOp::Not { dst, a } => slots[dst] = !slots[a],
+                    GateOp::Const1 { dst } => slots[dst] = true,
+                }
+            }
+            let (nb, db) = (slots[netlist.num_slot()], slots[netlist.den_slot()]);
+            if db {
+                d_ones += 1;
+                dff = nb;
+            }
+            let q = if db { nb } else { dff };
+            if q {
+                q_ones += 1;
+            }
+        }
+        bank.finish_decision();
+        Ok(NetworkPosterior {
+            posterior: q_ones as f64 / n_bits as f64,
+            marginal: d_ones as f64 / n_bits as f64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::compile::compile_query;
+    use super::super::spec::BayesNet;
+    use super::*;
+    use crate::stochastic::SneConfig;
+
+    fn bank(n_bits: usize, seed: u64) -> SneBank {
+        SneBank::new(SneConfig { n_bits, ..Default::default() }, seed).unwrap()
+    }
+
+    fn diamond() -> BayesNet {
+        let mut net = BayesNet::new();
+        net.add_root("a", 0.4).unwrap();
+        net.add_node("b", &["a"], &[0.2, 0.9]).unwrap();
+        net.add_node("c", &["a"], &[0.7, 0.1]).unwrap();
+        net.add_node("d", &["b", "c"], &[0.1, 0.5, 0.6, 0.95]).unwrap();
+        net
+    }
+
+    #[test]
+    fn word_parallel_matches_bit_serial_reference_exactly() {
+        let net = diamond();
+        for (query, evidence) in [
+            ("a", vec![("d", true)]),
+            ("b", vec![("a", true), ("d", false)]),
+            ("d", vec![]),
+            ("c", vec![("b", false)]),
+        ] {
+            let nl = compile_query(&net, query, &evidence).unwrap();
+            // Odd lengths stress the tail-mask convention.
+            for n_bits in [64usize, 100, 130, 1024, 1000] {
+                let mut bw = bank(n_bits, 31);
+                let word = NetlistEvaluator::new().evaluate(&mut bw, &nl).unwrap();
+                let mut br = bank(n_bits, 31);
+                let bit = NetlistEvaluator::new().evaluate_reference(&mut br, &nl).unwrap();
+                assert_eq!(word, bit, "{query} @ {n_bits} bits diverged");
+                assert_eq!(bw.ledger().pulses, br.ledger().pulses);
+            }
+        }
+    }
+
+    #[test]
+    fn posterior_converges_to_exact_enumeration() {
+        let net = diamond();
+        let evidence = [("d", true)];
+        let nl = compile_query(&net, "a", &evidence).unwrap();
+        let (exact, p_ev) =
+            super::super::exact::posterior_by_name(&net, "a", &evidence).unwrap();
+        let mut b = bank(200_000, 5);
+        let r = NetlistEvaluator::new().evaluate(&mut b, &nl).unwrap();
+        assert!((r.posterior - exact).abs() < 0.01, "{} vs {exact}", r.posterior);
+        assert!((r.marginal - p_ev).abs() < 0.01, "{} vs {p_ev}", r.marginal);
+    }
+
+    #[test]
+    fn marginal_query_has_unit_denominator() {
+        let mut net = BayesNet::new();
+        net.add_root("a", 0.3).unwrap();
+        let nl = compile_query(&net, "a", &[]).unwrap();
+        let mut b = bank(50_000, 6);
+        let r = NetlistEvaluator::new().evaluate(&mut b, &nl).unwrap();
+        assert_eq!(r.marginal, 1.0);
+        assert!((r.posterior - 0.3).abs() < 0.01);
+    }
+
+    #[test]
+    fn scratch_is_reused_across_calls() {
+        let net = diamond();
+        let nl = compile_query(&net, "a", &[("d", true)]).unwrap();
+        let mut eval = NetlistEvaluator::new();
+        let mut b = bank(1000, 7);
+        let first = eval.evaluate(&mut b, &nl).unwrap();
+        // A second decision on the same bank advances the stream but the
+        // evaluator state (scratch) carries nothing over.
+        let second = eval.evaluate(&mut b, &nl).unwrap();
+        let mut b2 = bank(1000, 7);
+        let mut eval2 = NetlistEvaluator::new();
+        assert_eq!(first, eval2.evaluate(&mut b2, &nl).unwrap());
+        assert_eq!(second, eval2.evaluate(&mut b2, &nl).unwrap());
+    }
+
+    #[test]
+    fn impossible_evidence_yields_zero() {
+        // b is a deterministic copy of a; evidence a=1, b=0 never occurs.
+        let mut net = BayesNet::new();
+        net.add_root("a", 0.5).unwrap();
+        net.add_node("b", &["a"], &[0.0, 1.0]).unwrap();
+        let nl = compile_query(&net, "a", &[("a", true), ("b", false)]).unwrap();
+        let mut b = bank(10_000, 8);
+        let r = NetlistEvaluator::new().evaluate(&mut b, &nl).unwrap();
+        assert_eq!(r.marginal, 0.0);
+        // All-zero divisor: CORDIV holds the cleared DFF -> 0.
+        assert_eq!(r.posterior, 0.0);
+    }
+}

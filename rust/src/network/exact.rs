@@ -1,0 +1,158 @@
+//! Full-joint exact inference — the accuracy baseline every compiled
+//! netlist is scored against (generalising [`crate::bayes::exact_posterior`]
+//! from one edge to whole DAGs).
+//!
+//! Enumerates all `2^n` assignments (the validator caps `n` at
+//! [`super::MAX_NODES`]), multiplying CPT entries per the chain rule.
+
+use crate::{Error, Result};
+
+use super::spec::BayesNet;
+use super::validate;
+
+/// `(P(query=1 | evidence), P(evidence))` by full-joint enumeration,
+/// nodes referenced by index. `P(query=1 | evidence)` is 0 when the
+/// evidence has zero probability — the same convention as
+/// [`crate::bayes::exact_posterior`] and the CORDIV hardware (a cleared
+/// flip-flop dividing by an all-zero stream).
+pub fn posterior(
+    net: &BayesNet,
+    query: usize,
+    evidence: &[(usize, bool)],
+) -> Result<(f64, f64)> {
+    validate::validate(net)?;
+    let n = net.len();
+    if query >= n {
+        return Err(Error::Network(format!("query node index {query} out of range")));
+    }
+    for &(e, _) in evidence {
+        if e >= n {
+            return Err(Error::Network(format!("evidence node index {e} out of range")));
+        }
+    }
+    // Per-node CPT lookup tables indexed by parent assignment.
+    let tables: Vec<Vec<f64>> = net
+        .nodes()
+        .iter()
+        .map(|node| {
+            let mut t = vec![0.0; 1 << node.parents.len()];
+            for &(a, p) in &node.cpt {
+                t[a as usize] = p;
+            }
+            t
+        })
+        .collect();
+    let mut p_ev = 0.0;
+    let mut p_q_ev = 0.0;
+    for assign in 0u32..(1u32 << n) {
+        let val = |i: usize| (assign >> i) & 1 == 1;
+        if evidence.iter().any(|&(e, v)| val(e) != v) {
+            continue;
+        }
+        let mut p = 1.0;
+        for (i, node) in net.nodes().iter().enumerate() {
+            let mut a = 0usize;
+            for &pj in &node.parents {
+                a = (a << 1) | val(pj) as usize;
+            }
+            let pi = tables[i][a];
+            p *= if val(i) { pi } else { 1.0 - pi };
+        }
+        p_ev += p;
+        if val(query) {
+            p_q_ev += p;
+        }
+    }
+    let post = if p_ev == 0.0 { 0.0 } else { p_q_ev / p_ev };
+    Ok((post, p_ev))
+}
+
+/// [`posterior`] with nodes referenced by name.
+pub fn posterior_by_name(
+    net: &BayesNet,
+    query: &str,
+    evidence: &[(&str, bool)],
+) -> Result<(f64, f64)> {
+    let q = net.resolve(query)?;
+    let ev: Vec<(usize, bool)> = evidence
+        .iter()
+        .map(|&(name, v)| net.resolve(name).map(|i| (i, v)))
+        .collect::<Result<_>>()?;
+    posterior(net, q, &ev)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bayes;
+
+    #[test]
+    fn chain_matches_the_eq1_closed_form() {
+        let (pa, pb1, pb0) = (0.57, 0.77, 0.655);
+        let mut net = BayesNet::new();
+        net.add_root("a", pa).unwrap();
+        net.add_node("b", &["a"], &[pb0, pb1]).unwrap();
+        let (post, p_ev) = posterior_by_name(&net, "a", &[("b", true)]).unwrap();
+        assert!((post - bayes::exact_posterior(pa, pb1, pb0)).abs() < 1e-12);
+        assert!((p_ev - bayes::exact_marginal(pa, pb1, pb0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_evidence_is_the_marginal() {
+        let mut net = BayesNet::new();
+        net.add_root("a", 0.3).unwrap();
+        net.add_node("b", &["a"], &[0.2, 0.8]).unwrap();
+        let (post, p_ev) = posterior_by_name(&net, "b", &[]).unwrap();
+        assert!((p_ev - 1.0).abs() < 1e-12);
+        // P(b) = 0.7*0.2 + 0.3*0.8 = 0.38.
+        assert!((post - 0.38).abs() < 1e-12);
+    }
+
+    #[test]
+    fn v_structure_explains_away() {
+        // Two independent causes of one effect: observing the effect and
+        // one cause lowers belief in the other cause.
+        let mut net = BayesNet::new();
+        net.add_root("c1", 0.3).unwrap();
+        net.add_root("c2", 0.3).unwrap();
+        net.add_node("e", &["c1", "c2"], &[0.05, 0.8, 0.8, 0.95]).unwrap();
+        let (given_e, _) = posterior_by_name(&net, "c1", &[("e", true)]).unwrap();
+        let (given_e_c2, _) =
+            posterior_by_name(&net, "c1", &[("e", true), ("c2", true)]).unwrap();
+        assert!(given_e > 0.3, "effect raises belief in the cause");
+        assert!(given_e_c2 < given_e, "the other cause explains it away");
+    }
+
+    #[test]
+    fn impossible_evidence_returns_zero() {
+        let mut net = BayesNet::new();
+        net.add_root("a", 0.5).unwrap();
+        net.add_node("b", &["a"], &[0.0, 1.0]).unwrap();
+        let (post, p_ev) =
+            posterior_by_name(&net, "a", &[("a", true), ("b", false)]).unwrap();
+        assert_eq!(p_ev, 0.0);
+        assert_eq!(post, 0.0);
+    }
+
+    #[test]
+    fn evidence_on_the_query_is_consistent() {
+        let mut net = BayesNet::new();
+        net.add_root("a", 0.4).unwrap();
+        let (p1, _) = posterior_by_name(&net, "a", &[("a", true)]).unwrap();
+        let (p0, _) = posterior_by_name(&net, "a", &[("a", false)]).unwrap();
+        assert_eq!(p1, 1.0);
+        assert_eq!(p0, 0.0);
+    }
+
+    #[test]
+    fn index_errors_are_typed() {
+        let mut net = BayesNet::new();
+        net.add_root("a", 0.5).unwrap();
+        assert!(matches!(posterior(&net, 3, &[]).unwrap_err(), Error::Network(_)));
+        assert!(matches!(
+            posterior(&net, 0, &[(9, true)]).unwrap_err(),
+            Error::Network(_)
+        ));
+        assert!(posterior_by_name(&net, "zz", &[]).is_err());
+    }
+}

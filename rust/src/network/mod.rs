@@ -1,0 +1,52 @@
+//! Stochastic Bayesian-**network** compiler: arbitrary binary DAGs →
+//! word-parallel MUX/AND/CORDIV gate netlists.
+//!
+//! The paper hand-wires exactly three dependency shapes (Fig. S8; see
+//! [`crate::bayes::TwoParentOneChild`]). This subsystem generalises that
+//! construction so *any* declared DAG becomes a stochastic circuit —
+//! the same generalisation memristor Bayesian machines make in hardware
+//! (Harabi et al., arXiv:2112.10547; Faria et al., arXiv:2003.01767 for
+//! the p-bit equivalent). Pipeline:
+//!
+//! 1. **Spec** ([`BayesNet`]) — binary nodes, edges, CPT rows; built in
+//!    code or parsed from the TOML-subset on-disk format
+//!    (`specs/*.toml`).
+//! 2. **Validate** ([`validate`]) — acyclicity, CPT completeness,
+//!    probability ranges, size caps; typed [`crate::Error::Network`]
+//!    diagnostics.
+//! 3. **Compile** ([`compile_query`]) — lower the DAG in topological
+//!    order to a [`Netlist`]. Each step is the paper's Fig. S8
+//!    construction, generalised:
+//!    * every CPT row → one uncorrelated SNE stream (parallel SNEs,
+//!      Fig. 2b), encoded in declaration order;
+//!    * each node with `k` parents → a `2^k × 1` probabilistic MUX tree
+//!      whose select lines are the parent sample streams (Fig. S8b is
+//!      the `k = 2` instance);
+//!    * parent streams are **shared** across children (Fig. S8c), which
+//!      keeps sibling samples correlation-correct with zero extra
+//!      hardware;
+//!    * the numerator `query ∧ evidence` is a bitwise subset of the
+//!      evidence stream — the CORDIV precondition (Fig. S7/S9) — so the
+//!      posterior readout is one MUX plus one flip-flop.
+//! 4. **Evaluate** ([`NetlistEvaluator`]) — run the netlist over packed
+//!    `u64` words (the `bayes::batch` conventions: grouped encode,
+//!    shared `cordiv_word`/`tail_word_mask`, zero steady-state
+//!    allocation), or bit-serially via the reference walk.
+//! 5. **Exact** ([`exact_posterior`]) — full-joint enumeration baseline
+//!    for ≤ [`MAX_NODES`]-node networks.
+//!
+//! The serving layer routes these through
+//! [`crate::coordinator::DecisionKind::Network`], and the CLI exposes
+//! `bayes-mem network --spec net.toml --query A --evidence B=1`.
+
+mod compile;
+mod eval;
+mod exact;
+mod spec;
+mod validate;
+
+pub use compile::{check_evidence, compile, compile_query, GateOp, Netlist};
+pub use eval::{NetlistEvaluator, NetworkPosterior};
+pub use exact::{posterior as exact_posterior, posterior_by_name as exact_posterior_by_name};
+pub use spec::{BayesNet, NodeSpec};
+pub use validate::{topo_order, validate, MAX_NODES, MAX_PARENTS};

@@ -1,0 +1,393 @@
+//! Declarative Bayesian-network specs: the [`BayesNet`] builder API and
+//! the on-disk TOML-subset format.
+//!
+//! A network is a DAG of **binary** nodes. Each node carries a CPT with
+//! one row per parent assignment: `P(node=1 | parents)`. Roots are the
+//! degenerate case (a single row — the prior). CPT rows are stored in
+//! **declaration order**, which is the order the compiler encodes their
+//! SNE streams in — part of the bit-reproducibility contract that lets
+//! the hand-wired Fig. S8 circuits of [`crate::bayes`] be re-expressed
+//! through the compiler without changing a single output bit.
+//!
+//! On-disk format (parsed with [`crate::util::tomlmini`]):
+//!
+//! ```toml
+//! [network]
+//! name = "intersection"
+//!
+//! [nodes.fog]
+//! prior = 0.15
+//!
+//! [nodes.occlusion]
+//! prior = 0.25
+//!
+//! [nodes.visibility]
+//! parents = "fog"
+//! cpt = [0.9, 0.3]        # P(vis | fog=0), P(vis | fog=1)
+//!
+//! [nodes.detection]
+//! parents = "visibility, occlusion"
+//! cpt = [0.55, 0.2, 0.95, 0.5]   # indexed (visibility << 1) | occlusion
+//! ```
+//!
+//! CPT arrays are indexed by the parent assignment with the **first**
+//! listed parent as the most-significant bit.
+
+use std::path::Path;
+
+use crate::util::tomlmini::Document;
+use crate::{Error, Result};
+
+use super::validate::{self, MAX_PARENTS};
+
+/// One binary node of a [`BayesNet`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    /// Node name (unique within the network).
+    pub name: String,
+    /// Parent node indices; the first parent is the most-significant bit
+    /// of the CPT assignment index.
+    pub parents: Vec<usize>,
+    /// CPT rows `(parent assignment, P(node=1 | assignment))` in
+    /// declaration order (the compiler's SNE encode order).
+    pub cpt: Vec<(u32, f64)>,
+}
+
+impl NodeSpec {
+    /// `P(node=1 | assignment)`, or `None` when the row is missing.
+    pub fn prob_given(&self, assignment: u32) -> Option<f64> {
+        self.cpt.iter().find(|&&(a, _)| a == assignment).map(|&(_, p)| p)
+    }
+
+    /// Number of parents.
+    pub fn arity(&self) -> usize {
+        self.parents.len()
+    }
+}
+
+/// A declarative Bayesian network over binary nodes.
+///
+/// Built either through the fallible builder methods ([`Self::add_root`],
+/// [`Self::add_node`], [`Self::add_node_rows`]) — which keep the network
+/// acyclic by construction since parents must already exist — or loaded
+/// from the on-disk format ([`Self::load`]) and checked by
+/// [`Self::validate`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct BayesNet {
+    name: String,
+    nodes: Vec<NodeSpec>,
+}
+
+impl BayesNet {
+    /// Empty unnamed network.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Empty network with a display name.
+    pub fn named(name: &str) -> Self {
+        Self { name: name.to_string(), nodes: Vec::new() }
+    }
+
+    /// Assemble from raw parts **without** any checking — the escape
+    /// hatch the TOML loader and the validator's negative tests use.
+    /// Call [`Self::validate`] before compiling.
+    pub fn from_parts(name: &str, nodes: Vec<NodeSpec>) -> Self {
+        Self { name: name.to_string(), nodes }
+    }
+
+    /// Display name ("" when unnamed).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The nodes in declaration order.
+    pub fn nodes(&self) -> &[NodeSpec] {
+        &self.nodes
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True when the network has no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Index of a node by name.
+    pub fn node_index(&self, name: &str) -> Option<usize> {
+        self.nodes.iter().position(|n| n.name == name)
+    }
+
+    /// Index of a node by name, as a typed diagnostic on failure.
+    pub fn resolve(&self, name: &str) -> Result<usize> {
+        self.node_index(name)
+            .ok_or_else(|| Error::Network(format!("unknown node '{name}'")))
+    }
+
+    /// Add a parentless node with prior `P(node=1) = prior`.
+    pub fn add_root(&mut self, name: &str, prior: f64) -> Result<usize> {
+        self.add_node_rows(name, &[], &[(0, prior)])
+    }
+
+    /// Add a node whose CPT is given **by assignment index**:
+    /// `cpt[a] = P(node=1 | assignment a)` with the first parent as the
+    /// most-significant bit (`cpt.len()` must be `2^parents.len()`).
+    pub fn add_node(&mut self, name: &str, parents: &[&str], cpt: &[f64]) -> Result<usize> {
+        let rows: Vec<(u32, f64)> =
+            cpt.iter().enumerate().map(|(a, &p)| (a as u32, p)).collect();
+        self.add_node_rows(name, parents, &rows)
+    }
+
+    /// Add a node with explicit `(assignment, probability)` CPT rows.
+    ///
+    /// Row order controls the compiler's SNE encode order — this is how
+    /// [`crate::bayes::TwoParentOneChild`] / [`crate::bayes::OneParentTwoChild`]
+    /// stay bit-identical to their pre-compiler hand-wired circuits.
+    pub fn add_node_rows(
+        &mut self,
+        name: &str,
+        parents: &[&str],
+        rows: &[(u32, f64)],
+    ) -> Result<usize> {
+        if name.is_empty() {
+            return Err(Error::Network("empty node name".into()));
+        }
+        if self.node_index(name).is_some() {
+            return Err(Error::Network(format!("duplicate node '{name}'")));
+        }
+        let parent_idx: Vec<usize> =
+            parents.iter().map(|p| self.resolve(p)).collect::<Result<_>>()?;
+        let node = NodeSpec {
+            name: name.to_string(),
+            parents: parent_idx,
+            cpt: rows.to_vec(),
+        };
+        validate::check_cpt(&node)?;
+        self.nodes.push(node);
+        Ok(self.nodes.len() - 1)
+    }
+
+    /// Full structural validation (acyclicity, CPT completeness,
+    /// probability ranges, size caps) — see [`super::validate`].
+    pub fn validate(&self) -> Result<()> {
+        validate::validate(self)
+    }
+
+    /// Parse the on-disk TOML-subset format from a string.
+    pub fn from_toml_str(text: &str) -> Result<Self> {
+        Self::from_document(&Document::parse(text)?)
+    }
+
+    /// Load the on-disk format from a file.
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_document(&Document::load(path)?)
+    }
+
+    /// Build from a parsed [`Document`]. Node sections are read in the
+    /// document's flattened key order (alphabetical), which is
+    /// deterministic; the validator then checks the full structure.
+    pub fn from_document(doc: &Document) -> Result<Self> {
+        let name = doc.str_or("network.name", "").to_string();
+        let mut names: Vec<String> = Vec::new();
+        for key in doc.keys() {
+            if let Some(rest) = key.strip_prefix("nodes.") {
+                match rest.split_once('.') {
+                    Some((node, _)) => {
+                        if !names.iter().any(|n| n == node) {
+                            names.push(node.to_string());
+                        }
+                    }
+                    // `[nodes]\nfoo = ...` would otherwise vanish silently.
+                    None => {
+                        return Err(Error::Network(format!(
+                            "key 'nodes.{rest}' is not a node field; declare \
+                             [nodes.{rest}] with `prior` or `parents` + `cpt`"
+                        )))
+                    }
+                }
+            }
+        }
+        if names.is_empty() {
+            return Err(Error::Network("spec declares no [nodes.*] sections".into()));
+        }
+        let mut nodes = Vec::with_capacity(names.len());
+        for n in &names {
+            for key in doc.keys() {
+                if let Some(rest) = key.strip_prefix("nodes.") {
+                    if let Some((node, field)) = rest.split_once('.') {
+                        if node == n && !matches!(field, "prior" | "parents" | "cpt") {
+                            return Err(Error::Network(format!(
+                                "node '{n}': unknown key '{field}'"
+                            )));
+                        }
+                    }
+                }
+            }
+            let prior = doc.get(&format!("nodes.{n}.prior"));
+            let parents = doc.get(&format!("nodes.{n}.parents"));
+            let cpt = doc.get(&format!("nodes.{n}.cpt"));
+            let spec = match (prior, parents, cpt) {
+                (Some(p), None, None) => {
+                    let p = p.as_f64().ok_or_else(|| {
+                        Error::Network(format!("node '{n}': prior must be a number"))
+                    })?;
+                    NodeSpec { name: n.clone(), parents: Vec::new(), cpt: vec![(0, p)] }
+                }
+                (None, Some(ps), Some(rows)) => {
+                    let ps = ps.as_str().ok_or_else(|| {
+                        Error::Network(format!(
+                            "node '{n}': parents must be a comma-separated string"
+                        ))
+                    })?;
+                    let parent_names: Vec<&str> = ps.split(',').map(str::trim).collect();
+                    if parent_names.iter().any(|p| p.is_empty()) {
+                        return Err(Error::Network(format!("node '{n}': empty parent name")));
+                    }
+                    let mut parent_idx = Vec::with_capacity(parent_names.len());
+                    for p in &parent_names {
+                        let idx = names.iter().position(|m| m == p).ok_or_else(|| {
+                            Error::Network(format!("node '{n}': unknown parent '{p}'"))
+                        })?;
+                        parent_idx.push(idx);
+                    }
+                    if parent_idx.len() > MAX_PARENTS {
+                        return Err(Error::Network(format!(
+                            "node '{n}': {} parents exceeds the {MAX_PARENTS}-parent cap",
+                            parent_idx.len()
+                        )));
+                    }
+                    let rows = rows.as_f64_array().ok_or_else(|| {
+                        Error::Network(format!("node '{n}': cpt must be a numeric array"))
+                    })?;
+                    let want = 1usize << parent_idx.len();
+                    if rows.len() != want {
+                        return Err(Error::Network(format!(
+                            "node '{n}': cpt has {} entries, needs {want} \
+                             (one per parent assignment)",
+                            rows.len()
+                        )));
+                    }
+                    let cpt = rows.iter().enumerate().map(|(a, &p)| (a as u32, p)).collect();
+                    NodeSpec { name: n.clone(), parents: parent_idx, cpt }
+                }
+                _ => {
+                    return Err(Error::Network(format!(
+                        "node '{n}': declare either `prior = p` or \
+                         `parents = \"..\"` plus `cpt = [..]`"
+                    )))
+                }
+            };
+            nodes.push(spec);
+        }
+        let net = Self::from_parts(&name, nodes);
+        net.validate()?;
+        Ok(net)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain() -> BayesNet {
+        let mut net = BayesNet::named("chain");
+        net.add_root("a", 0.3).unwrap();
+        net.add_node("b", &["a"], &[0.2, 0.9]).unwrap();
+        net
+    }
+
+    #[test]
+    fn builder_constructs_valid_networks() {
+        let net = chain();
+        assert_eq!(net.len(), 2);
+        assert_eq!(net.name(), "chain");
+        assert_eq!(net.node_index("b"), Some(1));
+        assert_eq!(net.nodes()[1].parents, vec![0]);
+        assert_eq!(net.nodes()[1].prob_given(1), Some(0.9));
+        assert_eq!(net.nodes()[1].prob_given(2), None);
+        net.validate().unwrap();
+    }
+
+    #[test]
+    fn builder_rejects_bad_inputs() {
+        let mut net = chain();
+        assert!(net.add_root("a", 0.5).is_err(), "duplicate name");
+        assert!(net.add_root("", 0.5).is_err(), "empty name");
+        assert!(net.add_node("c", &["nope"], &[0.1, 0.2]).is_err(), "unknown parent");
+        assert!(net.add_node("c", &["a"], &[0.1]).is_err(), "short CPT");
+        assert!(net.add_node("c", &["a"], &[0.1, 1.2]).is_err(), "prob out of range");
+        assert!(net.add_root("c", f64::NAN).is_err(), "NaN prior");
+        // Duplicate-assignment rows.
+        assert!(net.add_node_rows("c", &["a"], &[(1, 0.2), (1, 0.3)]).is_err());
+    }
+
+    #[test]
+    fn explicit_row_order_is_preserved() {
+        let mut net = BayesNet::new();
+        net.add_root("a", 0.5).unwrap();
+        net.add_node_rows("b", &["a"], &[(1, 0.8), (0, 0.1)]).unwrap();
+        assert_eq!(net.nodes()[1].cpt, vec![(1, 0.8), (0, 0.1)]);
+    }
+
+    const SPEC: &str = r#"
+[network]
+name = "demo"
+
+[nodes.a]
+prior = 0.3
+
+[nodes.b]
+parents = "a"
+cpt = [0.2, 0.9]   # P(b|!a), P(b|a)
+
+[nodes.c]
+parents = "a, b"
+cpt = [0.1, 0.2, 0.3, 0.4]
+"#;
+
+    #[test]
+    fn toml_spec_round_trips() {
+        let net = BayesNet::from_toml_str(SPEC).unwrap();
+        assert_eq!(net.name(), "demo");
+        assert_eq!(net.len(), 3);
+        // Alphabetical node order from the flattened document.
+        assert_eq!(net.node_index("a"), Some(0));
+        let c = &net.nodes()[net.node_index("c").unwrap()];
+        assert_eq!(c.parents, vec![0, 1]);
+        assert_eq!(c.prob_given(0b10), Some(0.3)); // a=1, b=0
+        net.validate().unwrap();
+    }
+
+    #[test]
+    fn toml_spec_errors_are_typed() {
+        let cases = [
+            ("x = 1", "no nodes"),
+            ("[nodes.a]\nprior = 0.2\nparents = \"a\"\ncpt = [0.1, 0.2]", "both forms"),
+            ("[nodes.a]\nparents = \"a\"", "missing cpt"),
+            ("[nodes.a]\nprior = \"hi\"", "non-numeric prior"),
+            ("[nodes.a]\nprior = 0.5\n[nodes.b]\nparents = \"zz\"\ncpt = [0.1, 0.2]", "unknown parent"),
+            ("[nodes.a]\nprior = 0.5\n[nodes.b]\nparents = \"a\"\ncpt = [0.1]", "wrong cpt len"),
+            ("[nodes.a]\nprior = 0.5\n[nodes.b]\nparents = \"a\"\ncpt = 0.5", "cpt not array"),
+            ("[nodes.a]\nprior = 0.5\nbogus = 1", "unknown key"),
+            ("[nodes]\na = 0.5", "field directly under [nodes]"),
+            ("[nodes.a]\nprior = 0.5\n[nodes.b]\nparents = \"a,\"\ncpt = [0.1, 0.2]", "empty parent"),
+        ];
+        for (text, why) in cases {
+            let err = BayesNet::from_toml_str(text).unwrap_err();
+            assert!(matches!(err, Error::Network(_)), "{why}: {err}");
+        }
+    }
+
+    #[test]
+    fn toml_cycles_are_rejected_by_validation() {
+        // b -> c -> b is expressible on disk (the builder can't make it).
+        let text = "[nodes.b]\nparents = \"c\"\ncpt = [0.1, 0.2]\n\
+                    [nodes.c]\nparents = \"b\"\ncpt = [0.3, 0.4]";
+        let err = BayesNet::from_toml_str(text).unwrap_err();
+        assert!(matches!(err, Error::Network(_)));
+        assert!(err.to_string().contains("cycle"), "{err}");
+    }
+}

@@ -1,0 +1,275 @@
+//! Structural validation of [`BayesNet`] specs: acyclicity, CPT
+//! completeness, probability ranges, and size caps — every failure is a
+//! typed [`Error::Network`] diagnostic naming the offending node.
+
+use crate::{Error, Result};
+
+use super::spec::{BayesNet, NodeSpec};
+
+/// Node-count cap: the full-joint exact baseline ([`super::exact`])
+/// enumerates `2^n` assignments, so networks are kept enumerable.
+pub const MAX_NODES: usize = 20;
+
+/// Per-node parent cap: a node with `k` parents compiles to `2^k`
+/// encoded CPT streams plus a `2^k − 1`-gate MUX tree.
+pub const MAX_PARENTS: usize = 8;
+
+/// CPT shape check for one node: parent cap, exactly one row per parent
+/// assignment, probabilities inside `[0, 1]`.
+pub(crate) fn check_cpt(node: &NodeSpec) -> Result<()> {
+    let k = node.parents.len();
+    if k > MAX_PARENTS {
+        return Err(Error::Network(format!(
+            "node '{}': {k} parents exceeds the {MAX_PARENTS}-parent cap",
+            node.name
+        )));
+    }
+    let rows = 1usize << k;
+    if node.cpt.len() != rows {
+        return Err(Error::Network(format!(
+            "node '{}': CPT has {} rows, needs exactly {rows} (one per parent assignment)",
+            node.name,
+            node.cpt.len()
+        )));
+    }
+    let mut seen = vec![false; rows];
+    for &(a, p) in &node.cpt {
+        if (a as usize) >= rows {
+            return Err(Error::Network(format!(
+                "node '{}': CPT row for assignment {a:#b} out of range",
+                node.name
+            )));
+        }
+        if seen[a as usize] {
+            return Err(Error::Network(format!(
+                "node '{}': duplicate CPT row for assignment {a:#b}",
+                node.name
+            )));
+        }
+        seen[a as usize] = true;
+        if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+            return Err(Error::Network(format!(
+                "node '{}': P(·|{a:#b}) = {p} outside [0, 1]",
+                node.name
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Full structural validation of a network.
+pub fn validate(net: &BayesNet) -> Result<()> {
+    let n = net.len();
+    if n == 0 {
+        return Err(Error::Network("network has no nodes".into()));
+    }
+    if n > MAX_NODES {
+        return Err(Error::Network(format!(
+            "{n} nodes exceeds the {MAX_NODES}-node cap (full-joint exact baseline)"
+        )));
+    }
+    for (i, node) in net.nodes().iter().enumerate() {
+        if node.name.is_empty() {
+            return Err(Error::Network(format!("node {i} has an empty name")));
+        }
+        if net.nodes()[..i].iter().any(|other| other.name == node.name) {
+            return Err(Error::Network(format!("duplicate node '{}'", node.name)));
+        }
+        for (j, &p) in node.parents.iter().enumerate() {
+            if p >= n {
+                return Err(Error::Network(format!(
+                    "node '{}': parent index {p} out of range",
+                    node.name
+                )));
+            }
+            if p == i {
+                return Err(Error::Network(format!(
+                    "node '{}': self-loop",
+                    node.name
+                )));
+            }
+            if node.parents[..j].contains(&p) {
+                return Err(Error::Network(format!(
+                    "node '{}': duplicate parent '{}'",
+                    node.name,
+                    net.nodes()[p].name
+                )));
+            }
+        }
+        check_cpt(node)?;
+    }
+    topo_order(net).map(|_| ())
+}
+
+/// Deterministic topological order (Kahn sweep, index-ascending within
+/// each sweep). When the declaration order is already topological —
+/// always true for builder-constructed networks — the result **is** the
+/// declaration order, which pins the compiler's SNE encode order.
+pub fn topo_order(net: &BayesNet) -> Result<Vec<usize>> {
+    let n = net.len();
+    let mut indeg = vec![0usize; n];
+    let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, node) in net.nodes().iter().enumerate() {
+        indeg[i] = node.parents.len();
+        for &p in &node.parents {
+            if p >= n {
+                return Err(Error::Network(format!(
+                    "node '{}': parent index {p} out of range",
+                    node.name
+                )));
+            }
+            children[p].push(i);
+        }
+    }
+    let mut order = Vec::with_capacity(n);
+    let mut placed = vec![false; n];
+    while order.len() < n {
+        let mut advanced = false;
+        for i in 0..n {
+            if !placed[i] && indeg[i] == 0 {
+                placed[i] = true;
+                order.push(i);
+                for &c in &children[i] {
+                    indeg[c] -= 1;
+                }
+                advanced = true;
+            }
+        }
+        if !advanced {
+            let stuck: Vec<&str> = (0..n)
+                .filter(|&i| !placed[i])
+                .map(|i| net.nodes()[i].name.as_str())
+                .collect();
+            return Err(Error::Network(format!("cycle through nodes {stuck:?}")));
+        }
+    }
+    Ok(order)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn node(name: &str, parents: Vec<usize>, cpt: Vec<(u32, f64)>) -> NodeSpec {
+        NodeSpec { name: name.to_string(), parents, cpt }
+    }
+
+    #[test]
+    fn valid_networks_pass() {
+        let mut net = BayesNet::new();
+        net.add_root("a", 0.5).unwrap();
+        net.add_node("b", &["a"], &[0.1, 0.9]).unwrap();
+        net.add_node("c", &["a", "b"], &[0.1, 0.2, 0.3, 0.4]).unwrap();
+        validate(&net).unwrap();
+        assert_eq!(topo_order(&net).unwrap(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn declaration_order_out_of_topo_still_sorts() {
+        // b declared before its parent a: order must put a first.
+        let net = BayesNet::from_parts(
+            "",
+            vec![
+                node("b", vec![1], vec![(0, 0.1), (1, 0.9)]),
+                node("a", vec![], vec![(0, 0.5)]),
+            ],
+        );
+        validate(&net).unwrap();
+        assert_eq!(topo_order(&net).unwrap(), vec![1, 0]);
+    }
+
+    #[test]
+    fn cycles_are_rejected_with_node_names() {
+        let net = BayesNet::from_parts(
+            "",
+            vec![
+                node("a", vec![1], vec![(0, 0.1), (1, 0.9)]),
+                node("b", vec![0], vec![(0, 0.2), (1, 0.8)]),
+            ],
+        );
+        let err = validate(&net).unwrap_err();
+        assert!(matches!(err, Error::Network(_)));
+        let msg = err.to_string();
+        assert!(msg.contains("cycle") && msg.contains('a') && msg.contains('b'), "{msg}");
+    }
+
+    #[test]
+    fn self_loops_are_rejected() {
+        let net = BayesNet::from_parts(
+            "",
+            vec![node("a", vec![0], vec![(0, 0.1), (1, 0.9)])],
+        );
+        assert!(validate(&net).unwrap_err().to_string().contains("self-loop"));
+    }
+
+    #[test]
+    fn cpt_defects_are_rejected() {
+        // Missing row.
+        let net = BayesNet::from_parts(
+            "",
+            vec![
+                node("a", vec![], vec![(0, 0.5)]),
+                node("b", vec![0], vec![(0, 0.1)]),
+            ],
+        );
+        assert!(validate(&net).is_err());
+        // Duplicate row (right count, wrong coverage).
+        let net = BayesNet::from_parts(
+            "",
+            vec![
+                node("a", vec![], vec![(0, 0.5)]),
+                node("b", vec![0], vec![(0, 0.1), (0, 0.2)]),
+            ],
+        );
+        assert!(validate(&net).unwrap_err().to_string().contains("duplicate CPT row"));
+        // Assignment out of range.
+        let net = BayesNet::from_parts(
+            "",
+            vec![
+                node("a", vec![], vec![(0, 0.5)]),
+                node("b", vec![0], vec![(0, 0.1), (3, 0.2)]),
+            ],
+        );
+        assert!(validate(&net).is_err());
+        // Probability out of range.
+        let net = BayesNet::from_parts("", vec![node("a", vec![], vec![(0, 1.5)])]);
+        assert!(validate(&net).unwrap_err().to_string().contains("outside [0, 1]"));
+    }
+
+    #[test]
+    fn structural_defects_are_rejected() {
+        assert!(validate(&BayesNet::new()).is_err(), "empty network");
+        // Duplicate names.
+        let net = BayesNet::from_parts(
+            "",
+            vec![
+                node("a", vec![], vec![(0, 0.5)]),
+                node("a", vec![], vec![(0, 0.5)]),
+            ],
+        );
+        assert!(validate(&net).unwrap_err().to_string().contains("duplicate node"));
+        // Parent index out of range.
+        let net = BayesNet::from_parts(
+            "",
+            vec![node("a", vec![7], vec![(0, 0.1), (1, 0.9)])],
+        );
+        assert!(validate(&net).is_err());
+        // Duplicate parents.
+        let net = BayesNet::from_parts(
+            "",
+            vec![
+                node("a", vec![], vec![(0, 0.5)]),
+                node(
+                    "b",
+                    vec![0, 0],
+                    vec![(0, 0.1), (1, 0.2), (2, 0.3), (3, 0.4)],
+                ),
+            ],
+        );
+        assert!(validate(&net).unwrap_err().to_string().contains("duplicate parent"));
+        // Node-count cap.
+        let many: Vec<NodeSpec> =
+            (0..MAX_NODES + 1).map(|i| node(&format!("n{i}"), vec![], vec![(0, 0.5)])).collect();
+        assert!(validate(&BayesNet::from_parts("", many)).is_err());
+    }
+}

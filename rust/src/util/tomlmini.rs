@@ -2,8 +2,9 @@
 //!
 //! Supports the subset config files actually use: `[section]` and
 //! `[section.sub]` headers, `key = value` pairs with string / integer /
-//! float / boolean values, `#` comments and blank lines. Keys are exposed
-//! flattened as `section.sub.key`.
+//! float / boolean / numeric-array values (`key = [0.1, 0.2]`, needed by
+//! the CPT rows of network spec files), `#` comments and blank lines.
+//! Keys are exposed flattened as `section.sub.key`.
 
 use std::collections::BTreeMap;
 
@@ -20,6 +21,8 @@ pub enum Value {
     Float(f64),
     /// `true` / `false`.
     Bool(bool),
+    /// Single-line numeric array `[0.1, 0.2]` (ints widen to floats).
+    Array(Vec<f64>),
 }
 
 impl Value {
@@ -52,6 +55,14 @@ impl Value {
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// As numeric array.
+    pub fn as_f64_array(&self) -> Option<&[f64]> {
+        match self {
+            Value::Array(v) => Some(v),
             _ => None,
         }
     }
@@ -170,6 +181,18 @@ fn parse_value(s: &str) -> Option<Value> {
         let inner = rest.strip_suffix('"')?;
         return Some(Value::Str(inner.to_string()));
     }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']')?.trim();
+        if inner.is_empty() {
+            return Some(Value::Array(Vec::new()));
+        }
+        let mut vals = Vec::new();
+        for item in inner.split(',') {
+            let cleaned = item.trim().replace('_', "");
+            vals.push(cleaned.parse::<f64>().ok()?);
+        }
+        return Some(Value::Array(vals));
+    }
     match s {
         "true" => return Some(Value::Bool(true)),
         "false" => return Some(Value::Bool(false)),
@@ -238,6 +261,27 @@ deadline_us = 1_000
         assert!(Document::parse("key = what?").is_err());
         assert!(Document::parse("[]").is_err());
         assert!(Document::parse("novalue").is_err());
+    }
+
+    #[test]
+    fn float_arrays_parse() {
+        let d = Document::parse("[cpt]\nrow = [0.1, 0.2, 1, 0.9]\nempty = []").unwrap();
+        assert_eq!(d.get("cpt.row").unwrap().as_f64_array(), Some(&[0.1, 0.2, 1.0, 0.9][..]));
+        assert_eq!(d.get("cpt.empty").unwrap().as_f64_array(), Some(&[][..]));
+        // Underscore separators widen like scalar numbers do.
+        let d = Document::parse("x = [1_000, 0.5]").unwrap();
+        assert_eq!(d.get("x").unwrap().as_f64_array(), Some(&[1000.0, 0.5][..]));
+        // Arrays are not scalars.
+        assert!(d.get("x").unwrap().as_f64().is_none());
+    }
+
+    #[test]
+    fn malformed_arrays_are_errors() {
+        assert!(Document::parse("x = [0.1, 0.2").is_err()); // unterminated
+        assert!(Document::parse("x = [0.1, oops]").is_err()); // non-numeric item
+        assert!(Document::parse("x = [0.1 0.2]").is_err()); // missing comma
+        assert!(Document::parse("x = [0.1,]").is_err()); // trailing comma
+        assert!(Document::parse("x = [,]").is_err()); // empty items
     }
 
     #[test]

@@ -1,12 +1,15 @@
 //! Property-based invariant suites (via the in-tree `proptest_lite`
 //! driver): stochastic-computing algebra, CORDIV, correlation metrics,
-//! batcher/router behaviour, config round-trips.
+//! batcher/router behaviour, config round-trips, and the
+//! Bayesian-network compiler (random-DAG convergence + validator
+//! rejection of injected defects).
 
 use std::time::{Duration, Instant};
 
 use bayes_mem::bayes::{exact_fusion_m, exact_posterior, FusionOperator, InferenceOperator};
 use bayes_mem::coordinator::{Batcher, DecisionKind, DecisionRequest};
 use bayes_mem::logic::cordiv;
+use bayes_mem::network::{self, compile_query, BayesNet, NetlistEvaluator, NodeSpec};
 use bayes_mem::stochastic::{pair_counts, pearson, scc, Bitstream, SneBank, SneConfig};
 use bayes_mem::util::proptest_lite::check;
 use bayes_mem::util::Rng;
@@ -203,5 +206,111 @@ fn prop_config_document_roundtrip() {
         assert_eq!(doc.usize_or("sne.n_bits", 0), n_bits);
         assert_eq!(doc.usize_or("coordinator.workers", 0), workers);
         assert!((doc.f64_or("device.vth_mean", 0.0) - vth).abs() < 1e-9);
+    });
+}
+
+/// Random valid DAG over `n` binary nodes: each node takes up to 3 of
+/// the earlier nodes as parents, CPT probabilities in `[0.15, 0.85]` so
+/// no evidence configuration becomes vanishingly rare.
+fn random_net_parts(rng: &mut Rng, n: usize) -> Vec<NodeSpec> {
+    let mut nodes = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut parents = Vec::new();
+        for j in 0..i {
+            if rng.bernoulli(0.4) {
+                parents.push(j);
+            }
+        }
+        parents.truncate(3);
+        let k = parents.len();
+        let cpt: Vec<(u32, f64)> =
+            (0..(1u32 << k)).map(|a| (a, 0.15 + 0.7 * rng.f64())).collect();
+        nodes.push(NodeSpec { name: format!("n{i}"), parents, cpt });
+    }
+    nodes
+}
+
+#[test]
+fn prop_compiled_network_converges_to_exact_enumeration() {
+    // Random 3-7-node DAGs: the compiled-netlist posterior approaches
+    // the full-joint exact posterior as the stream length grows. Judged
+    // on mean error across cases (any single stochastic readout has
+    // irreducible sampling noise).
+    let mut err_short = Vec::new();
+    let mut err_long = Vec::new();
+    check("compiled netlist converges to exact posterior", 16, |rng| {
+        let n = rng.range_usize(3, 8);
+        let net = BayesNet::from_parts("rand", random_net_parts(rng, n));
+        net.validate().unwrap();
+        let query = "n0";
+        let last = format!("n{}", n - 1);
+        let evidence = [(last.as_str(), true)];
+        let netlist = compile_query(&net, query, &evidence).unwrap();
+        let (exact, p_ev) =
+            network::exact_posterior_by_name(&net, query, &evidence).unwrap();
+        assert!(p_ev > 0.1, "CPT range keeps evidence probable, got {p_ev}");
+        let seed = rng.next_u64();
+        for (n_bits, errs) in
+            [(512usize, &mut err_short), (16_384, &mut err_long)]
+        {
+            let cfg = SneConfig { n_bits, ..Default::default() };
+            let mut bank = SneBank::new(cfg, seed).unwrap();
+            let r = NetlistEvaluator::new().evaluate(&mut bank, &netlist).unwrap();
+            assert!((0.0..=1.0).contains(&r.posterior));
+            errs.push((r.posterior - exact).abs());
+        }
+    });
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    let (short, long) = (mean(&err_short), mean(&err_long));
+    assert!(long < short, "no convergence: 512-bit {short:.4} vs 16384-bit {long:.4}");
+    assert!(long < 0.02, "16384-bit mean abs error {long:.4} >= 0.02");
+}
+
+#[test]
+fn prop_validator_rejects_injected_cycles() {
+    check("validator rejects randomly injected cycles", 48, |rng| {
+        let n = rng.range_usize(3, 8);
+        let mut nodes = random_net_parts(rng, n);
+        // Find a (parent -> child) edge and add the reverse edge,
+        // expanding the parent's CPT so only the cycle is defective.
+        let Some(child) = (0..n).filter(|&i| !nodes[i].parents.is_empty()).last() else {
+            return; // all-roots draw: nothing to cycle
+        };
+        let parent = nodes[child].parents[0];
+        let old_cpt: Vec<f64> =
+            nodes[parent].cpt.iter().map(|&(_, p)| p).collect();
+        nodes[parent].parents.push(child);
+        nodes[parent].cpt = (0..old_cpt.len() as u32 * 2)
+            .map(|a| (a, old_cpt[(a >> 1) as usize]))
+            .collect();
+        let net = BayesNet::from_parts("cyclic", nodes);
+        let err = net.validate().unwrap_err();
+        assert!(err.to_string().contains("cycle"), "{err}");
+        assert!(compile_query(&net, "n0", &[]).is_err());
+    });
+}
+
+#[test]
+fn prop_validator_rejects_incomplete_cpts() {
+    check("validator rejects missing/duplicate CPT rows", 48, |rng| {
+        let n = rng.range_usize(3, 8);
+        let mut nodes = random_net_parts(rng, n);
+        let victim = rng.below(n);
+        if rng.bernoulli(0.5) || nodes[victim].cpt.len() == 1 {
+            // Drop a random row -> wrong row count.
+            let drop = rng.below(nodes[victim].cpt.len());
+            nodes[victim].cpt.remove(drop);
+            if nodes[victim].cpt.is_empty() {
+                nodes[victim].cpt.push((0, 1.5)); // roots: out-of-range prob instead
+            }
+        } else {
+            // Re-point one row at another assignment -> duplicate row.
+            let a = nodes[victim].cpt[0].0;
+            let last = nodes[victim].cpt.len() - 1;
+            nodes[victim].cpt[last].0 = a;
+        }
+        let net = BayesNet::from_parts("defective", nodes);
+        assert!(net.validate().is_err());
+        assert!(compile_query(&net, "n0", &[]).is_err());
     });
 }
