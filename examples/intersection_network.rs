@@ -21,7 +21,10 @@
 //! Run: `cargo run --release --example intersection_network`
 
 use std::path::Path;
+use std::sync::Arc;
 
+use bayes_mem::config::AppConfig;
+use bayes_mem::coordinator::{Coordinator, DecisionParams, PlanSpec};
 use bayes_mem::network::{compile_query, exact_posterior_by_name, BayesNet, NetlistEvaluator};
 use bayes_mem::stochastic::{SneBank, SneConfig};
 
@@ -86,5 +89,31 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         "\nspecs/intersection.toml agrees with the in-code network \
          (P(occlusion|no detection) = {from_file:.4})"
     );
+
+    // Serve the same diagnostic question through the coordinator's
+    // plan-centric API: the netlist (and the 2^n exact reference) are
+    // compiled once at prepare time; every request afterwards is just a
+    // word-parallel sweep on a worker bank.
+    let coord = Coordinator::start(&AppConfig::default())?;
+    let handle = coord.handle();
+    let plan = handle.prepare(PlanSpec::Network {
+        net: Arc::new(net),
+        query: "occlusion".into(),
+        evidence: vec![("detection".into(), false), ("visibility".into(), true)],
+    })?;
+    let mut stream = plan.stream();
+    for _ in 0..32 {
+        stream.push(DecisionParams::Network)?;
+    }
+    let decisions: Vec<_> = stream.drain().into_iter().collect::<Result<_, _>>()?;
+    let mean: f64 =
+        decisions.iter().map(|d| d.posterior).sum::<f64>() / decisions.len() as f64;
+    println!(
+        "\nserved 32 decisions against the prepared plan: mean P = {mean:.4} \
+         (exact {:.4}, 100-bit single shots)",
+        decisions[0].exact
+    );
+    println!("{}", handle.metrics().snapshot().to_table());
+    coord.shutdown();
     Ok(())
 }

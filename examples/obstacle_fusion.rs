@@ -6,7 +6,8 @@
 //! cargo run --release --example obstacle_fusion -- [frames_per_condition]
 //! ```
 
-use bayes_mem::bayes::FusionOperator;
+use bayes_mem::coordinator::{DecisionParams, PlanSpec, PreparedPlan};
+use bayes_mem::network::NetlistEvaluator;
 use bayes_mem::scene::{
     fusion_input, DetectorModel, Modality, SceneGenerator, Visibility,
 };
@@ -17,7 +18,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let frames: usize = std::env::args().nth(1).and_then(|a| a.parse().ok()).unwrap_or(300);
     let rgb = DetectorModel::new(Modality::Rgb);
     let thermal = DetectorModel::new(Modality::Thermal);
-    let fusion = FusionOperator::default();
+    // Prepare-once / decide-many without a coordinator: compile the
+    // 2-modal fusion plan a single time, then bind each obstacle's
+    // posteriors against it (bit-identical to the dedicated operator).
+    let plan = PreparedPlan::compile(PlanSpec::Fusion { modalities: 2 })?;
+    let mut evaluator = NetlistEvaluator::new();
     let mut bank = SneBank::new(SneConfig { n_bits: 1_000, ..Default::default() }, 3)?;
     let mut rng = Rng::seeded(4);
 
@@ -33,8 +38,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 let p_rgb = rgb.detect(o, vis, &mut rng);
                 let p_th = thermal.detect(o, vis, &mut rng);
                 // Stochastic hardware fusion on the prior-filled inputs.
-                let fused =
-                    fusion.fuse2(&mut bank, fusion_input(p_rgb), fusion_input(p_th))?.fused;
+                let params = DecisionParams::Fusion {
+                    posteriors: vec![fusion_input(p_rgb), fusion_input(p_th)],
+                };
+                let fused = plan.decide_on(&mut bank, &mut evaluator, &params)?;
                 let (dr, dt, df) = (p_rgb > 0.5, p_th > 0.5, fused > 0.5);
                 hr += dr as usize;
                 ht += dt as usize;

@@ -44,5 +44,28 @@ fn main() -> bayes_mem::Result<()> {
         ledger.virtual_fps(),
         ledger.energy_nj
     );
+
+    // --- Serving API v2: prepare once, decide many. ---
+    // The coordinator compiles the decision's netlist a single time
+    // (shared through a plan cache) and every request just binds params.
+    use bayes_mem::config::AppConfig;
+    use bayes_mem::coordinator::{Coordinator, DecisionParams, PlanSpec};
+    let coord = Coordinator::start(&AppConfig::default())?;
+    let plan = coord.handle().prepare(PlanSpec::Inference)?;
+    let decisions = plan.decide_batch(&[
+        DecisionParams::Inference { prior: 0.57, likelihood: 0.77, likelihood_not: 0.655 },
+        DecisionParams::Inference { prior: 0.30, likelihood: 0.90, likelihood_not: 0.20 },
+        DecisionParams::Inference { prior: 0.80, likelihood: 0.60, likelihood_not: 0.40 },
+    ]);
+    println!("\nserved through a prepared plan (one compile, three decisions):");
+    for d in decisions {
+        let d = d?;
+        println!(
+            "  posterior {:.3} (exact {:.3}) in {:?}, batch of {}",
+            d.posterior, d.exact, d.latency, d.batch_size
+        );
+    }
+    println!("{}", coord.handle().metrics().snapshot().to_table());
+    coord.shutdown();
     Ok(())
 }

@@ -9,7 +9,7 @@
 use std::time::{Duration, Instant};
 
 use bayes_mem::config::AppConfig;
-use bayes_mem::coordinator::{Coordinator, DecisionKind};
+use bayes_mem::coordinator::{Coordinator, DecisionParams, PlanSpec};
 use bayes_mem::scene::LaneChangeScenario;
 use bayes_mem::util::stats::{mean, quantile};
 use bayes_mem::util::Rng;
@@ -19,6 +19,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let cfg = AppConfig::default();
     let coord = Coordinator::start(&cfg)?;
     let handle = coord.handle();
+    // Prepare the Eq.-1 inference plan once; every scenario binds its
+    // own parameters against the shared compiled netlist.
+    let plan = handle.prepare(PlanSpec::Inference)?;
     let mut rng = Rng::seeded(7);
 
     println!("serving {n} lane-change decisions ({} workers, batch {})",
@@ -29,7 +32,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let pending: Vec<_> = scenarios
         .iter()
         .map(|s| {
-            handle.submit(DecisionKind::Inference {
+            plan.submit(DecisionParams::Inference {
                 prior: s.prior_cut_in,
                 likelihood: s.evidence_given_viable,
                 likelihood_not: s.evidence_given_blocked,

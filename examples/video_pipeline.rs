@@ -23,7 +23,7 @@ use std::path::Path;
 use std::time::{Duration, Instant};
 
 use bayes_mem::config::{AppConfig, Backend};
-use bayes_mem::coordinator::{Coordinator, DecisionKind};
+use bayes_mem::coordinator::{Coordinator, DecisionParams, PlanSpec};
 use bayes_mem::scene::{fusion_input, VideoWorkload};
 use bayes_mem::util::stats::{mean, quantile};
 
@@ -49,6 +49,9 @@ fn run_backend(
     cfg.coordinator.max_batch = 16;
     let coord = Coordinator::start(&cfg)?;
     let handle = coord.handle();
+    // Prepare-once / decide-many: one fusion plan serves every obstacle
+    // of every frame on this backend.
+    let plan = handle.prepare(PlanSpec::Fusion { modalities: 2 })?;
     let mut wl = VideoWorkload::new(1234);
     let t0 = Instant::now();
     let (mut n, mut hr, mut ht, mut hf) = (0usize, 0usize, 0usize, 0usize);
@@ -63,7 +66,7 @@ fn run_backend(
                 (
                     r,
                     t,
-                    handle.submit(DecisionKind::Fusion {
+                    plan.submit(DecisionParams::Fusion {
                         posteriors: vec![fusion_input(r), fusion_input(t)],
                     }),
                 )

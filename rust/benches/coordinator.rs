@@ -3,13 +3,17 @@
 //! serving claim, measured as software wall-clock against the 2,500 fps
 //! virtual hardware rate.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use bayes_mem::bayes::{BatchedInference, InferenceOperator, InferenceQuery};
 use bayes_mem::benchkit::Bench;
 use bayes_mem::config::AppConfig;
-use bayes_mem::coordinator::{Batcher, Coordinator, DecisionKind};
+use bayes_mem::coordinator::{
+    Batcher, Coordinator, DecisionKind, DecisionParams, PlanCache, PlanSpec,
+};
 use bayes_mem::device::WearPolicy;
+use bayes_mem::network::{compile_query, BayesNet, NetlistEvaluator};
 use bayes_mem::scene::{fusion_input, VideoWorkload};
 use bayes_mem::stochastic::{SneBank, SneConfig};
 
@@ -138,7 +142,10 @@ fn main() {
         );
     }
 
-    // Batcher microbenchmark (no threads): push+flush cycle.
+    // Batcher microbenchmark (no threads): push+flush cycle against a
+    // shared prepared plan (the redesigned grouping key).
+    let cache = PlanCache::new(8);
+    let inference_plan = cache.prepare(PlanSpec::Inference).unwrap();
     let mut batcher = Batcher::new(16, Duration::from_micros(400));
     let (tx, _rx) = std::sync::mpsc::channel();
     std::mem::forget(_rx);
@@ -147,9 +154,15 @@ fn main() {
         id += 1;
         let req = bayes_mem::coordinator::DecisionRequest {
             id,
-            kind: inference_kind(),
+            plan: Arc::clone(&inference_plan),
+            params: DecisionParams::Inference {
+                prior: 0.57,
+                likelihood: 0.77,
+                likelihood_not: 0.655,
+            },
             enqueued: Instant::now(),
             deadline: None,
+            bits: None,
             reply: tx.clone(),
         };
         if let Some(batch) = batcher.push(req) {
@@ -157,5 +170,78 @@ fn main() {
         }
     });
 
+    // The API-v2 headline: repeated network queries against a prepared
+    // plan vs re-validating + re-compiling per request (what the
+    // pre-redesign submission path did), batch 32, 100-bit streams.
+    let net = bench_net();
+    let query = "alarm2";
+    let evidence = vec![("cam".to_string(), false), ("vis".to_string(), true)];
+    let ev_refs: Vec<(&str, bool)> =
+        evidence.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+    let spec = || PlanSpec::Network {
+        net: Arc::clone(&net),
+        query: query.into(),
+        evidence: evidence.clone(),
+    };
+    let mut bank = SneBank::new(
+        SneConfig { n_bits: 100, wear_policy: WearPolicy::Ignore, ..Default::default() },
+        23,
+    )
+    .unwrap();
+    let mut eval = NetlistEvaluator::new();
+    let per_request = b.bench_units(
+        "network_per_request_compile_b32_100bit",
+        BATCH as f64,
+        "decisions",
+        || {
+            for _ in 0..BATCH {
+                let netlist = compile_query(&net, query, &ev_refs).unwrap();
+                std::hint::black_box(eval.evaluate(&mut bank, &netlist).unwrap().posterior);
+            }
+        },
+    );
+    let plan_cache = PlanCache::new(8);
+    plan_cache.prepare(spec()).unwrap();
+    let prepared = b.bench_units(
+        "network_prepared_plan_b32_100bit",
+        BATCH as f64,
+        "decisions",
+        || {
+            for _ in 0..BATCH {
+                // The serving hit path: structural lookup + evaluate.
+                let plan = plan_cache.prepare(spec()).unwrap();
+                std::hint::black_box(
+                    plan.decide_on(&mut bank, &mut eval, &DecisionParams::Network).unwrap(),
+                );
+            }
+        },
+    );
+    if let (Some(p), Some(q)) = (per_request, prepared) {
+        let speedup = p.mean_ns / q.mean_ns;
+        b.metric("plan_cache_hit_speedup", speedup);
+        println!(
+            "  plan_cache_hit_speedup: {speedup:.2}x \
+             (acceptance: >= 2x for repeated network queries)"
+        );
+    }
+
     b.finish_and_export();
+}
+
+/// A 10-node road-scene DAG, large enough that per-request compilation
+/// (validation + topo sort + netlist lowering) is the dominant cost the
+/// prepared plan amortises away.
+fn bench_net() -> Arc<BayesNet> {
+    let mut net = BayesNet::named("bench_scene");
+    net.add_root("fog", 0.15).unwrap();
+    net.add_root("night", 0.3).unwrap();
+    net.add_root("occl", 0.25).unwrap();
+    net.add_node("vis", &["fog", "night"], &[0.95, 0.6, 0.4, 0.1]).unwrap();
+    net.add_node("cam", &["vis", "occl"], &[0.5, 0.1, 0.9, 0.45]).unwrap();
+    net.add_node("radar", &["occl"], &[0.85, 0.7]).unwrap();
+    net.add_node("det", &["cam", "radar"], &[0.05, 0.6, 0.7, 0.97]).unwrap();
+    net.add_node("track", &["det"], &[0.08, 0.9]).unwrap();
+    net.add_node("alarm", &["track"], &[0.02, 0.95]).unwrap();
+    net.add_node("alarm2", &["alarm", "night"], &[0.01, 0.05, 0.9, 0.97]).unwrap();
+    Arc::new(net)
 }

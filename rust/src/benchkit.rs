@@ -48,6 +48,7 @@ pub struct Bench {
     warmup: Duration,
     window: Duration,
     results: Vec<BenchResult>,
+    metrics: Vec<(String, f64)>,
     filter: Option<String>,
 }
 
@@ -73,7 +74,20 @@ impl Bench {
             warmup,
             window,
             results: Vec::new(),
+            metrics: Vec::new(),
             filter: std::env::var("BENCH_FILTER").ok(),
+        }
+    }
+
+    /// Record a derived scalar metric (e.g. a speedup ratio between two
+    /// benchmarks) for the report and the JSON export's `"metrics"` map.
+    /// Re-recording a name overwrites its value.
+    pub fn metric(&mut self, name: &str, value: f64) {
+        println!("  {:<44} {value:.3}", format!("metric {name}"));
+        if let Some(slot) = self.metrics.iter_mut().find(|(n, _)| n == name) {
+            slot.1 = value;
+        } else {
+            self.metrics.push((name.to_string(), value));
         }
     }
 
@@ -158,12 +172,13 @@ impl Bench {
     /// trajectory is machine-readable across PRs.
     pub fn finish_and_export(self) -> Vec<BenchResult> {
         let group = self.group.clone();
+        let metrics = self.metrics.clone();
         let results = self.finish();
         if results.is_empty() {
             return results;
         }
         let path = Self::export_path(&group);
-        match std::fs::write(&path, render_json(&group, &results)) {
+        match std::fs::write(&path, render_json(&group, &metrics, &results)) {
             Ok(()) => println!("  wrote {}", path.display()),
             Err(e) => eprintln!("  could not write {}: {e}", path.display()),
         }
@@ -183,11 +198,17 @@ impl Bench {
 
 /// Hand-rolled JSON (serde is not vendored offline). Names are plain
 /// identifiers, but escape quotes/backslashes defensively anyway.
-fn render_json(group: &str, results: &[BenchResult]) -> String {
+fn render_json(group: &str, metrics: &[(String, f64)], results: &[BenchResult]) -> String {
     let esc = |s: &str| s.replace('\\', "\\\\").replace('"', "\\\"");
     let mut out = String::new();
     out.push_str("{\n");
     out.push_str(&format!("  \"group\": \"{}\",\n", esc(group)));
+    out.push_str("  \"metrics\": {");
+    for (i, (name, value)) in metrics.iter().enumerate() {
+        let sep = if i == 0 { "" } else { ", " };
+        out.push_str(&format!("{sep}\"{}\": {value:.4}", esc(name)));
+    }
+    out.push_str("},\n");
     out.push_str("  \"results\": [\n");
     for (i, r) in results.iter().enumerate() {
         out.push_str(&format!(
@@ -294,6 +315,21 @@ mod tests {
         if let Ok(json) = std::fs::read_to_string(&path) {
             assert!(json.contains("\"group\": \"operators\""), "{json}");
         }
+    }
+
+    #[test]
+    fn metrics_land_in_the_json_export() {
+        let mut b = Bench::with_windows(
+            "selftest_metrics",
+            Duration::from_millis(1),
+            Duration::from_millis(2),
+        );
+        b.metric("plan_cache_hit_speedup", 2.5);
+        b.metric("plan_cache_hit_speedup", 3.25); // overwrite, not duplicate
+        assert_eq!(b.metrics.len(), 1);
+        let json = render_json(&b.group, &b.metrics, &[]);
+        assert!(json.contains("\"plan_cache_hit_speedup\": 3.2500"), "{json}");
+        assert!(json.contains("\"metrics\""), "{json}");
     }
 
     #[test]

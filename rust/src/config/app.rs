@@ -40,6 +40,9 @@ pub struct CoordinatorConfig {
     pub queue_capacity: usize,
     /// Execution backend.
     pub backend: Backend,
+    /// Prepared-plan cache capacity (structural-key LRU shared by all
+    /// handle clones; see [`crate::coordinator::PlanCache`]).
+    pub plan_cache_capacity: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -50,6 +53,7 @@ impl Default for CoordinatorConfig {
             max_wait: Duration::from_micros(400),
             queue_capacity: 4096,
             backend: Backend::Native,
+            plan_cache_capacity: 32,
         }
     }
 }
@@ -98,6 +102,7 @@ impl AppConfig {
         "coordinator.max_wait_us",
         "coordinator.queue_capacity",
         "coordinator.backend",
+        "coordinator.plan_cache_capacity",
     ];
 
     /// Load from a TOML file.
@@ -150,6 +155,10 @@ impl AppConfig {
             queue_capacity: doc
                 .usize_or("coordinator.queue_capacity", defaults.coordinator.queue_capacity),
             backend: Backend::parse(doc.str_or("coordinator.backend", "native"))?,
+            plan_cache_capacity: doc.usize_or(
+                "coordinator.plan_cache_capacity",
+                defaults.coordinator.plan_cache_capacity,
+            ),
         };
         let cfg = Self {
             sne,
@@ -174,6 +183,11 @@ impl AppConfig {
         if c.queue_capacity < c.max_batch {
             return Err(Error::Config(
                 "coordinator.queue_capacity must be >= max_batch".into(),
+            ));
+        }
+        if c.plan_cache_capacity == 0 {
+            return Err(Error::Config(
+                "coordinator.plan_cache_capacity must be > 0".into(),
             ));
         }
         Ok(())
@@ -207,6 +221,7 @@ max_batch = 16
 max_wait_us = 400            # one 100-bit frame time at 4 us/bit
 queue_capacity = 4096
 backend = "native"           # native | pjrt
+plan_cache_capacity = 32     # prepared-plan LRU (prepare-once/decide-many)
 "#
     }
 }
@@ -221,6 +236,7 @@ mod tests {
         let cfg = AppConfig::from_document(&doc).unwrap();
         assert_eq!(cfg.sne.n_bits, 100);
         assert_eq!(cfg.coordinator.max_batch, 16);
+        assert_eq!(cfg.coordinator.plan_cache_capacity, 32);
         assert_eq!(cfg.coordinator.backend, Backend::Native);
         assert_eq!(cfg.seed, 42);
         assert!((cfg.sne.params.vth_mean - 2.08).abs() < 1e-12);
@@ -259,6 +275,7 @@ mod tests {
             "[coordinator]\nmax_batch = 0",
             "[coordinator]\nqueue_capacity = 2\nmax_batch = 16",
             "[coordinator]\nbackend = \"gpu\"",
+            "[coordinator]\nplan_cache_capacity = 0",
             "[sne]\nwear_policy = \"explode\"",
             "[sne]\nn_bits = 0",
         ] {

@@ -1,18 +1,30 @@
-//! Dynamic batcher: groups compatible requests (same batching class) into
-//! batches bounded by `max_batch` size and `max_wait` age.
+//! Dynamic batcher: groups compatible requests into batches bounded by
+//! `max_batch` size and `max_wait` age.
+//!
+//! Compatibility is the **plan id** (plus any stream-length override):
+//! every member of a batch shares one compiled [`PreparedPlan`], so the
+//! worker binds parameters and sweeps the same netlist word-parallel
+//! without re-deriving anything. (The pre-redesign batcher keyed on an
+//! ad-hoc `class()` byte whose fusion-arity arithmetic could wrap u8.)
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::bayes::InferenceQuery;
+use super::plan::PreparedPlan;
+use super::request::DecisionRequest;
 
-use super::request::{DecisionKind, DecisionRequest};
+/// Grouping key: (plan id, stream-length override).
+type BatchKey = (u64, Option<usize>);
 
-/// A batch of same-class requests ready for execution.
+/// A batch of same-plan requests ready for execution.
 #[derive(Debug)]
 pub struct Batch {
-    /// Batching class (see [`super::DecisionKind::class`]).
-    pub class: u8,
+    /// The compiled plan shared by every member.
+    pub plan: Arc<PreparedPlan>,
+    /// Stream-length override shared by every member (`None` = the
+    /// worker's configured bank).
+    pub bits: Option<usize>,
     /// The member requests.
     pub requests: Vec<DecisionRequest>,
 }
@@ -27,49 +39,18 @@ impl Batch {
     pub fn is_empty(&self) -> bool {
         self.requests.is_empty()
     }
-
-    /// The batch as one [`crate::bayes::BatchedInference`] input — `Some`
-    /// iff **every** member is an inference request (guaranteed for
-    /// class 0 batches; the batcher never mixes classes).
-    pub fn inference_queries(&self) -> Option<Vec<InferenceQuery>> {
-        self.requests
-            .iter()
-            .map(|r| match &r.kind {
-                DecisionKind::Inference { prior, likelihood, likelihood_not } => {
-                    Some(InferenceQuery {
-                        prior: *prior,
-                        likelihood: *likelihood,
-                        likelihood_not: *likelihood_not,
-                    })
-                }
-                DecisionKind::Fusion { .. } | DecisionKind::Network { .. } => None,
-            })
-            .collect()
-    }
-
-    /// The batch as one [`crate::bayes::BatchedFusion`] input — `Some`
-    /// iff every member is a fusion request.
-    pub fn fusion_rows(&self) -> Option<Vec<&[f64]>> {
-        self.requests
-            .iter()
-            .map(|r| match &r.kind {
-                DecisionKind::Fusion { posteriors } => Some(posteriors.as_slice()),
-                DecisionKind::Inference { .. } | DecisionKind::Network { .. } => None,
-            })
-            .collect()
-    }
 }
 
 /// Size/deadline dynamic batcher.
 ///
-/// `push` returns a full batch as soon as a class reaches `max_batch`;
+/// `push` returns a full batch as soon as a plan reaches `max_batch`;
 /// `flush_due` releases partially-filled batches whose *oldest* member has
 /// waited `max_wait` (so tail latency is bounded by queueing + execute).
 #[derive(Debug)]
 pub struct Batcher {
     max_batch: usize,
     max_wait: Duration,
-    pending: BTreeMap<u8, Vec<DecisionRequest>>,
+    pending: BTreeMap<BatchKey, Vec<DecisionRequest>>,
 }
 
 impl Batcher {
@@ -94,22 +75,36 @@ impl Batcher {
         self.pending.values().map(Vec::len).sum()
     }
 
-    /// Add a request; returns a batch if its class just filled up.
+    /// Add a request; returns a batch if its plan just filled up.
+    ///
+    /// A drained key is **removed** from the pending map (not left as an
+    /// empty queue): plan ids are monotone and never reused, so retaining
+    /// drained keys would grow the map — and the dispatcher's
+    /// `flush_due`/`next_due` scans — without bound over uptime.
     pub fn push(&mut self, req: DecisionRequest) -> Option<Batch> {
-        let class = req.kind.class();
-        let q = self.pending.entry(class).or_default();
+        let key = (req.plan.id(), req.bits);
+        let q = self.pending.entry(key).or_default();
         q.push(req);
         if q.len() >= self.max_batch {
-            let requests = std::mem::take(q);
-            Some(Batch { class, requests })
+            let requests = self.pending.remove(&key).expect("key was just filled");
+            Some(Self::batch_from(requests))
         } else {
             None
         }
     }
 
-    /// Release every class whose oldest request has aged past `max_wait`.
+    /// Wrap one plan's drained queue (the plan/bits are read off the
+    /// first member — every member shares them by construction).
+    fn batch_from(requests: Vec<DecisionRequest>) -> Batch {
+        let first = requests.first().expect("batch_from() on a non-empty queue");
+        let plan = Arc::clone(&first.plan);
+        let bits = first.bits;
+        Batch { plan, bits, requests }
+    }
+
+    /// Release every plan whose oldest request has aged past `max_wait`.
     pub fn flush_due(&mut self, now: Instant) -> Vec<Batch> {
-        let due: Vec<u8> = self
+        let due: Vec<BatchKey> = self
             .pending
             .iter()
             .filter(|(_, q)| {
@@ -117,12 +112,12 @@ impl Batcher {
                     .map(|r| now.duration_since(r.enqueued) >= self.max_wait)
                     .unwrap_or(false)
             })
-            .map(|(&c, _)| c)
+            .map(|(&k, _)| k)
             .collect();
         due.into_iter()
-            .filter_map(|class| {
-                let requests = std::mem::take(self.pending.get_mut(&class)?);
-                (!requests.is_empty()).then_some(Batch { class, requests })
+            .filter_map(|key| {
+                let q = self.pending.remove(&key)?;
+                (!q.is_empty()).then(|| Self::batch_from(q))
             })
             .collect()
     }
@@ -130,9 +125,9 @@ impl Batcher {
     /// Release everything immediately (shutdown path).
     pub fn flush_all(&mut self) -> Vec<Batch> {
         std::mem::take(&mut self.pending)
-            .into_iter()
-            .filter(|(_, q)| !q.is_empty())
-            .map(|(class, requests)| Batch { class, requests })
+            .into_values()
+            .filter(|q| !q.is_empty())
+            .map(Self::batch_from)
             .collect()
     }
 
@@ -152,54 +147,84 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::DecisionKind;
+    use crate::coordinator::plan::{DecisionParams, PlanCache, PlanSpec};
     use std::sync::mpsc;
 
-    fn req(id: u64, kind: DecisionKind) -> DecisionRequest {
+    fn cache() -> PlanCache {
+        PlanCache::new(8)
+    }
+
+    fn req(cache: &PlanCache, id: u64, spec: PlanSpec, params: DecisionParams) -> DecisionRequest {
         let (tx, _rx) = mpsc::channel();
-        // Keep _rx alive is unnecessary for batcher tests: the batcher
+        // Keeping _rx alive is unnecessary for batcher tests: the batcher
         // never replies.
         std::mem::forget(_rx);
-        DecisionRequest { id, kind, enqueued: Instant::now(), deadline: None, reply: tx }
+        DecisionRequest {
+            id,
+            plan: cache.prepare(spec).unwrap(),
+            params,
+            enqueued: Instant::now(),
+            deadline: None,
+            bits: None,
+            reply: tx,
+        }
     }
 
-    fn inf(id: u64) -> DecisionRequest {
-        req(id, DecisionKind::Inference { prior: 0.5, likelihood: 0.7, likelihood_not: 0.2 })
+    fn inf(cache: &PlanCache, id: u64) -> DecisionRequest {
+        req(
+            cache,
+            id,
+            PlanSpec::Inference,
+            DecisionParams::Inference { prior: 0.5, likelihood: 0.7, likelihood_not: 0.2 },
+        )
     }
 
-    fn fus(id: u64) -> DecisionRequest {
-        req(id, DecisionKind::Fusion { posteriors: vec![0.8, 0.6] })
+    fn fus(cache: &PlanCache, id: u64) -> DecisionRequest {
+        req(
+            cache,
+            id,
+            PlanSpec::Fusion { modalities: 2 },
+            DecisionParams::Fusion { posteriors: vec![0.8, 0.6] },
+        )
     }
 
     #[test]
-    fn fills_batches_by_class() {
+    fn fills_batches_by_plan() {
+        let c = cache();
         let mut b = Batcher::new(3, Duration::from_millis(10));
-        assert!(b.push(inf(1)).is_none());
-        assert!(b.push(fus(2)).is_none());
-        assert!(b.push(inf(3)).is_none());
-        let full = b.push(inf(4)).expect("third inference fills the batch");
+        assert!(b.push(inf(&c, 1)).is_none());
+        assert!(b.push(fus(&c, 2)).is_none());
+        assert!(b.push(inf(&c, 3)).is_none());
+        let full = b.push(inf(&c, 4)).expect("third inference fills the batch");
         assert_eq!(full.len(), 3);
         assert_eq!(full.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3, 4]);
+        assert!(full.requests.iter().all(|r| r.plan.id() == full.plan.id()));
         assert_eq!(b.queued(), 1); // the fusion request remains
+        // Drained keys are removed, not kept as empty queues (plan ids
+        // are never reused, so stale keys would accumulate forever).
+        assert_eq!(b.pending.len(), 1);
     }
 
     #[test]
     fn flush_due_respects_age() {
+        let c = cache();
         let mut b = Batcher::new(10, Duration::from_millis(5));
-        b.push(inf(1));
+        b.push(inf(&c, 1));
         assert!(b.flush_due(Instant::now()).is_empty(), "too young to flush");
         let later = Instant::now() + Duration::from_millis(6);
         let flushed = b.flush_due(later);
         assert_eq!(flushed.len(), 1);
         assert_eq!(flushed[0].len(), 1);
         assert_eq!(b.queued(), 0);
+        assert_eq!(b.pending.len(), 0, "flushed keys must be removed");
     }
 
     #[test]
     fn next_due_tracks_oldest() {
+        let c = cache();
         let mut b = Batcher::new(10, Duration::from_millis(5));
         assert!(b.next_due(Instant::now()).is_none());
-        b.push(inf(1));
+        b.push(inf(&c, 1));
         let due = b.next_due(Instant::now()).unwrap();
         assert!(due <= Duration::from_millis(5));
         // After the deadline, due time is zero.
@@ -209,10 +234,11 @@ mod tests {
 
     #[test]
     fn flush_all_drains_everything() {
+        let c = cache();
         let mut b = Batcher::new(10, Duration::from_secs(1));
-        b.push(inf(1));
-        b.push(fus(2));
-        b.push(fus(3));
+        b.push(inf(&c, 1));
+        b.push(fus(&c, 2));
+        b.push(fus(&c, 3));
         let all = b.flush_all();
         let total: usize = all.iter().map(Batch::len).sum();
         assert_eq!(total, 3);
@@ -221,29 +247,40 @@ mod tests {
     }
 
     #[test]
-    fn batch_converts_to_batched_engine_inputs() {
+    fn plans_never_mix() {
+        let c = cache();
         let mut b = Batcher::new(2, Duration::from_secs(1));
-        b.push(inf(1));
-        let batch = b.push(inf(2)).expect("two inferences fill");
-        let queries = batch.inference_queries().expect("homogeneous inference batch");
-        assert_eq!(queries.len(), 2);
-        assert!((queries[0].prior - 0.5).abs() < 1e-12);
-        assert!(batch.fusion_rows().is_none());
-
-        b.push(fus(3));
-        let batch = b.push(fus(4)).expect("two fusions fill");
-        let rows = batch.fusion_rows().expect("homogeneous fusion batch");
-        assert_eq!(rows, vec![&[0.8, 0.6][..], &[0.8, 0.6][..]]);
-        assert!(batch.inference_queries().is_none());
+        b.push(inf(&c, 1));
+        let full = b.push(fus(&c, 2)).map(|_| ()).is_some();
+        assert!(!full, "fusion must not complete an inference batch");
+        let batch = b.push(fus(&c, 3)).expect("two fusions fill");
+        assert!(batch.requests.iter().all(|r| r.plan.id() == batch.plan.id()));
     }
 
     #[test]
-    fn classes_never_mix() {
+    fn bits_override_splits_batches() {
+        // Same plan, different stream lengths: banks differ, so the
+        // batches must not mix.
+        let c = cache();
         let mut b = Batcher::new(2, Duration::from_secs(1));
-        b.push(inf(1));
-        let full = b.push(fus(2)).map(|_| ()).is_some();
-        assert!(!full, "fusion must not complete an inference batch");
-        let batch = b.push(fus(3)).expect("two fusions fill");
-        assert!(batch.requests.iter().all(|r| r.kind.class() == batch.class));
+        let mut long = inf(&c, 1);
+        long.bits = Some(1000);
+        b.push(long);
+        assert!(b.push(inf(&c, 2)).is_none(), "default-bits request must open its own batch");
+        let batch = b.push(inf(&c, 3)).expect("two default-bits fill");
+        assert_eq!(batch.bits, None);
+        assert_eq!(b.queued(), 1);
+        let mut long2 = inf(&c, 4);
+        long2.bits = Some(1000);
+        let batch = b.push(long2).expect("two 1000-bit fill");
+        assert_eq!(batch.bits, Some(1000));
+    }
+
+    #[test]
+    fn arity_separates_fusion_plans() {
+        let c = cache();
+        let f2 = c.prepare(PlanSpec::Fusion { modalities: 2 }).unwrap();
+        let f3 = c.prepare(PlanSpec::Fusion { modalities: 3 }).unwrap();
+        assert_ne!(f2.id(), f3.id());
     }
 }

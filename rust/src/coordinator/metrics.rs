@@ -1,6 +1,9 @@
-//! Lock-free metrics registry for the serving layer.
+//! Metrics registry for the serving layer: lock-free counters plus a
+//! (briefly) locked per-plan latency table.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
 
 /// Latency histogram buckets, µs upper bounds (last bucket = overflow).
@@ -22,6 +25,10 @@ pub enum KindTag {
 /// Number of [`KindTag`] variants.
 pub const N_KINDS: usize = 3;
 
+/// Most per-plan latency entries retained (the least-recently-updated
+/// entry is evicted beyond this — see [`Metrics::on_plan_complete`]).
+pub const PER_PLAN_TABLE_CAP: usize = 64;
+
 /// Shared atomic counters. All methods are thread-safe; snapshots are
 /// consistent-enough reads for reporting.
 #[derive(Debug, Default)]
@@ -36,6 +43,26 @@ pub struct Metrics {
     latency_buckets: [AtomicU64; 10],
     hardware_ns: AtomicU64,
     completed_by_kind: [AtomicU64; N_KINDS],
+    plan_hits: AtomicU64,
+    plan_misses: AtomicU64,
+    /// Per-plan completion/latency counters, keyed by plan id. Touched
+    /// once per completed decision by worker threads only (callers read
+    /// snapshots), so the lock is uncontended in practice.
+    per_plan: Mutex<PerPlanTable>,
+}
+
+#[derive(Debug, Default)]
+struct PerPlanTable {
+    /// Monotone update counter driving least-recently-updated eviction.
+    tick: u64,
+    entries: BTreeMap<u64, PlanCounters>,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+struct PlanCounters {
+    completed: u64,
+    latency_us_sum: u64,
+    last_update: u64,
 }
 
 impl Metrics {
@@ -76,6 +103,44 @@ impl Metrics {
         self.failed.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A `prepare` was answered from the plan cache.
+    pub fn on_plan_hit(&self) {
+        self.plan_hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A `prepare` compiled a fresh plan.
+    pub fn on_plan_miss(&self) {
+        self.plan_misses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A decision under plan `plan_id` completed (per-plan latency).
+    ///
+    /// The table is bounded: plan ids are monotone and never reused, so
+    /// without eviction it would grow forever on a long-running
+    /// coordinator whose plan cache churns. Beyond
+    /// [`PER_PLAN_TABLE_CAP`] the **least-recently-updated** entry is
+    /// dropped — a long-lived hot plan keeps its history no matter how
+    /// old its id, while churned ephemeral plans age out.
+    pub fn on_plan_complete(&self, plan_id: u64, latency: Duration) {
+        let mut table = self.per_plan.lock().expect("metrics poisoned");
+        table.tick += 1;
+        let tick = table.tick;
+        if table.entries.len() >= PER_PLAN_TABLE_CAP && !table.entries.contains_key(&plan_id) {
+            let stale = table
+                .entries
+                .iter()
+                .min_by_key(|(_, c)| c.last_update)
+                .map(|(&id, _)| id);
+            if let Some(id) = stale {
+                table.entries.remove(&id);
+            }
+        }
+        let c = table.entries.entry(plan_id).or_default();
+        c.completed += 1;
+        c.latency_us_sum += latency.as_micros() as u64;
+        c.last_update = tick;
+    }
+
     /// Consistent-enough snapshot for reporting.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let buckets: Vec<u64> =
@@ -84,6 +149,18 @@ impl Metrics {
         for (out, c) in completed_by_kind.iter_mut().zip(&self.completed_by_kind) {
             *out = c.load(Ordering::Relaxed);
         }
+        let per_plan: Vec<PlanLatency> = self
+            .per_plan
+            .lock()
+            .expect("metrics poisoned")
+            .entries
+            .iter()
+            .map(|(&plan_id, c)| PlanLatency {
+                plan_id,
+                completed: c.completed,
+                latency_us_sum: c.latency_us_sum,
+            })
+            .collect();
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -95,6 +172,31 @@ impl Metrics {
             latency_buckets: buckets,
             hardware_ns: self.hardware_ns.load(Ordering::Relaxed),
             completed_by_kind,
+            plan_hits: self.plan_hits.load(Ordering::Relaxed),
+            plan_misses: self.plan_misses.load(Ordering::Relaxed),
+            per_plan,
+        }
+    }
+}
+
+/// Per-plan completion/latency counters in a [`MetricsSnapshot`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanLatency {
+    /// Plan id (see [`super::PreparedPlan::id`]).
+    pub plan_id: u64,
+    /// Decisions completed under this plan.
+    pub completed: u64,
+    /// Sum of their completion latencies, µs.
+    pub latency_us_sum: u64,
+}
+
+impl PlanLatency {
+    /// Mean completion latency under this plan, µs.
+    pub fn mean_latency_us(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.latency_us_sum as f64 / self.completed as f64
         }
     }
 }
@@ -122,6 +224,12 @@ pub struct MetricsSnapshot {
     pub hardware_ns: u64,
     /// Completions per decision family, indexed by [`KindTag`].
     pub completed_by_kind: [u64; N_KINDS],
+    /// `prepare` calls answered from the plan cache.
+    pub plan_hits: u64,
+    /// `prepare` calls that compiled a fresh plan.
+    pub plan_misses: u64,
+    /// Per-plan completion/latency counters, ordered by plan id.
+    pub per_plan: Vec<PlanLatency>,
 }
 
 impl MetricsSnapshot {
@@ -137,6 +245,22 @@ impl MetricsSnapshot {
     /// Completions for one decision family.
     pub fn completed_for(&self, kind: KindTag) -> u64 {
         self.completed_by_kind[kind as usize]
+    }
+
+    /// Plan-cache hit rate over all `prepare` calls (0 when none).
+    pub fn plan_hit_rate(&self) -> f64 {
+        let total = self.plan_hits + self.plan_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.plan_hits as f64 / total as f64
+        }
+    }
+
+    /// Per-plan counters for one plan id, if any decision completed
+    /// under it.
+    pub fn plan_latency(&self, plan_id: u64) -> Option<&PlanLatency> {
+        self.per_plan.iter().find(|p| p.plan_id == plan_id)
     }
 
     /// Mean batch occupancy.
@@ -181,6 +305,7 @@ impl MetricsSnapshot {
         format!(
             "submitted {}  completed {}  rejected {}  failed {}\n\
              by kind: inference {}  fusion {}  network {}\n\
+             plan cache: {} hits / {} misses ({:.0} % hit rate, {} plans served)\n\
              batches {}  mean batch {:.2}\n\
              latency mean {:.1} µs  p50 ≤{} µs  p99 ≤{} µs\n\
              virtual hardware fps {:.0}",
@@ -191,6 +316,10 @@ impl MetricsSnapshot {
             self.completed_for(KindTag::Inference),
             self.completed_for(KindTag::Fusion),
             self.completed_for(KindTag::Network),
+            self.plan_hits,
+            self.plan_misses,
+            self.plan_hit_rate() * 100.0,
+            self.per_plan.len(),
             self.batches,
             self.mean_batch_size(),
             self.mean_latency_us(),
@@ -215,6 +344,11 @@ mod tests {
         m.on_complete(Duration::from_micros(120), 400_000.0, KindTag::Inference);
         m.on_complete(Duration::from_micros(80), 400_000.0, KindTag::Network);
         m.on_fail();
+        m.on_plan_miss();
+        m.on_plan_hit();
+        m.on_plan_hit();
+        m.on_plan_complete(7, Duration::from_micros(120));
+        m.on_plan_complete(7, Duration::from_micros(80));
         let s = m.snapshot();
         assert_eq!(s.submitted, 2);
         assert_eq!(s.rejected, 1);
@@ -227,6 +361,38 @@ mod tests {
         assert!((s.mean_latency_us() - 100.0).abs() < 1e-9);
         // 2 decisions over 0.8 ms of virtual hardware time = 2,500 fps.
         assert!((s.virtual_fps() - 2_500.0).abs() < 1.0);
+        assert_eq!((s.plan_hits, s.plan_misses), (2, 1));
+        assert!((s.plan_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        let plan = s.plan_latency(7).unwrap();
+        assert_eq!(plan.completed, 2);
+        assert_eq!(plan.latency_us_sum, 200);
+        assert!((plan.mean_latency_us() - 100.0).abs() < 1e-9);
+        assert!(s.plan_latency(8).is_none());
+    }
+
+    #[test]
+    fn per_plan_table_evicts_least_recently_updated_beyond_cap() {
+        let m = Metrics::new();
+        for id in 0..(PER_PLAN_TABLE_CAP as u64 + 5) {
+            m.on_plan_complete(id, Duration::from_micros(10));
+        }
+        let s = m.snapshot();
+        assert_eq!(s.per_plan.len(), PER_PLAN_TABLE_CAP);
+        // Each id completed once in order, so the five stalest (= five
+        // lowest) were evicted and the newest survive.
+        assert!(s.plan_latency(0).is_none());
+        assert!(s.plan_latency(4).is_none());
+        assert!(s.plan_latency(5).is_some());
+        assert!(s.plan_latency(PER_PLAN_TABLE_CAP as u64 + 4).is_some());
+        // A hot plan with an old id survives churn: refresh id 5, then
+        // overflow with a brand-new id — id 6 (now stalest) is evicted
+        // while id 5 keeps its accumulated history.
+        m.on_plan_complete(5, Duration::from_micros(10));
+        m.on_plan_complete(9_999, Duration::from_micros(10));
+        let s = m.snapshot();
+        assert!(s.plan_latency(6).is_none(), "stalest entry must be evicted");
+        assert_eq!(s.plan_latency(5).unwrap().completed, 2, "hot plan history survives");
+        assert!(s.plan_latency(9_999).is_some());
     }
 
     #[test]
@@ -248,7 +414,10 @@ mod tests {
         assert_eq!(s.mean_latency_us(), 0.0);
         assert_eq!(s.latency_quantile_us(0.99), 0);
         assert_eq!(s.virtual_fps(), 0.0);
+        assert_eq!(s.plan_hit_rate(), 0.0);
+        assert!(s.per_plan.is_empty());
         assert!(s.to_table().contains("submitted 0"));
         assert!(s.to_table().contains("network 0"));
+        assert!(s.to_table().contains("plan cache"));
     }
 }

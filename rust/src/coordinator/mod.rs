@@ -1,19 +1,34 @@
 //! Layer-3 coordinator: the serving system around the Bayesian operators.
 //!
-//! Architecture (vLLM-router-like, sized for this paper's workload):
+//! Architecture (vLLM-router-like, sized for this paper's workload),
+//! plan-centric since API v2 — **prepare once, decide many**:
 //!
 //! ```text
-//!   submit() ──► bounded queue ──► dispatcher thread (dynamic batcher)
-//!                                    │  batches by kind, max_batch /
-//!                                    │  max_wait deadline policy
-//!                                    ▼
-//!                          worker threads (round-robin)
-//!                     native: SneBank + operators (bit-parallel sim)
-//!                     pjrt:   shared Runtime (AOT JAX/Pallas artifacts)
-//!                                    │
-//!                                    ▼
-//!                      reply channels + metrics registry
+//!   prepare(spec) ──► PlanCache (structural-key LRU) ──► Arc<PreparedPlan>
+//!                                                          │ compiled netlist
+//!                                                          ▼
+//!   plan.decide(params) ──► bounded queue ──► dispatcher (dynamic batcher)
+//!                                               │  batches by plan id,
+//!                                               │  max_batch / max_wait
+//!                                               ▼
+//!                                     worker threads (round-robin)
+//!                          native: SNE-bank pool + one word-parallel
+//!                                  netlist sweep per decision
+//!                          pjrt:   shared Runtime (AOT JAX/Pallas)
+//!                                               │
+//!                                               ▼
+//!                            reply channels + metrics registry
+//!                            (plan-cache hit/miss, per-plan latency)
 //! ```
+//!
+//! Validation and netlist compilation happen once per distinct
+//! [`PlanSpec`]; requests carry their `Arc<PreparedPlan>` end to end, so
+//! the hot path binds parameters and sweeps gates — nothing else. All
+//! three decision kinds (Eq.-1 inference, M-modal fusion, compiled
+//! Bayesian-network queries) execute through the **same** netlist
+//! substrate (see [`crate::network::lower`]), bit-identical to the
+//! per-kind engines they replaced. The legacy [`DecisionKind`] submit
+//! API survives as a shim lowered onto plans (`MIGRATION.md`).
 //!
 //! Backpressure: `submit` fails fast with `Error::Coordinator` once the
 //! bounded queue is full — callers see load shedding instead of latency
@@ -22,12 +37,19 @@
 
 mod batcher;
 mod metrics;
+mod plan;
 mod request;
 mod router;
 mod server;
 
 pub use batcher::{Batch, Batcher};
-pub use metrics::{KindTag, Metrics, MetricsSnapshot};
+pub use metrics::{
+    KindTag, Metrics, MetricsSnapshot, PlanLatency, LATENCY_BUCKETS_US, PER_PLAN_TABLE_CAP,
+};
+pub use plan::{
+    DecisionParams, DecisionStream, PlanCache, PlanHandle, PlanSpec, Policy, PreparedPlan,
+    MAX_FUSION_MODALITIES, MAX_POLICY_BITS,
+};
 pub use request::{Decision, DecisionKind, DecisionRequest, PendingDecision};
 pub use router::{ExecPlan, Router};
 pub use server::{Coordinator, CoordinatorHandle};

@@ -1,0 +1,680 @@
+//! Plan-centric serving API v2: **prepare once, decide many**.
+//!
+//! The paper's "timely" claim (decisions in < 0.4 ms at 2,500 fps) only
+//! survives a serving layer when per-request work is amortised, the way
+//! the memristor array is wired once and then pulsed per decision (and
+//! the way the memristor Bayesian machine of arXiv 2112.10547 separates
+//! the stored model from the per-query readout). This module is that
+//! separation in software:
+//!
+//! * [`PlanSpec`] — *what* to prepare: the Eq.-1 inference chain, an
+//!   M-modal fusion tree, or an arbitrary compiled Bayesian-network
+//!   query. Validation and netlist compilation happen **once**, at
+//!   [`super::CoordinatorHandle::prepare`] time.
+//! * [`PreparedPlan`] — the compiled artifact: one word-parallel
+//!   [`Netlist`] (all three decision kinds lower onto the same gate
+//!   substrate via [`crate::network::lower`]) plus the closed-form
+//!   exact reference. Shared `Arc`-cheap across every request.
+//! * [`PlanCache`] — structural-key LRU shared by all handle clones, so
+//!   concurrent `prepare` calls of the same spec converge on one entry
+//!   (hit/miss counters land in [`super::MetricsSnapshot`]).
+//! * [`PlanHandle`] — the caller-side handle: [`PlanHandle::decide`],
+//!   [`PlanHandle::decide_batch`], [`PlanHandle::stream`], each
+//!   submitting [`DecisionParams`] against the prepared plan under a
+//!   per-plan [`Policy`] (deadline + stream-length override).
+//!
+//! The legacy [`super::DecisionKind`] submission API survives as a thin
+//! shim that lowers onto plans (see `MIGRATION.md` at the repo root).
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::VecDeque;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::network::{self, lower, BayesNet, Netlist, NetlistEvaluator};
+use crate::stochastic::SneBank;
+use crate::{Error, Result};
+
+use super::metrics::{KindTag, Metrics};
+use super::request::{Decision, PendingDecision};
+use super::server::CoordinatorHandle;
+
+/// Maximum fusion modalities a plan (or the legacy `DecisionKind` shim)
+/// accepts. Oversized fusion is a typed validation error — it used to
+/// silently wrap the old u8 batching-class arithmetic.
+pub const MAX_FUSION_MODALITIES: usize = 32;
+
+/// Monotone process-wide plan ids (also the batcher's grouping key).
+static NEXT_PLAN_ID: AtomicU64 = AtomicU64::new(0);
+
+/// What to prepare: the structural half of a decision. Per-decision
+/// parameters ([`DecisionParams`]) are bound at submit time.
+///
+/// Equality is structural: `Arc<BayesNet>` compares by content, so two
+/// independently built but identical network specs are equal — the
+/// contract the [`PlanCache`] and [`Self::structural_key`] rely on.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlanSpec {
+    /// The Eq.-1 inference chain `A → B`, queried as `P(A | B=1)`.
+    /// Params: `[prior, likelihood, likelihood_not]` per decision.
+    Inference,
+    /// M-modal fusion (Eq. 5 with normalization).
+    /// Params: one posterior per modality per decision.
+    Fusion {
+        /// Number of fused modalities (2..=[`MAX_FUSION_MODALITIES`]).
+        modalities: usize,
+    },
+    /// One posterior query against a declarative Bayesian network,
+    /// compiled to a netlist at prepare time. Fully baked: decisions
+    /// take [`DecisionParams::Network`] (no per-decision parameters).
+    Network {
+        /// The network spec (cloning is an `Arc` bump; cache identity is
+        /// structural, not pointer-based).
+        net: Arc<BayesNet>,
+        /// Queried node name.
+        query: String,
+        /// Observed nodes `(name, value)`.
+        evidence: Vec<(String, bool)>,
+    },
+}
+
+impl PlanSpec {
+    /// Which per-kind metrics counter decisions under this plan feed.
+    pub fn tag(&self) -> KindTag {
+        match self {
+            PlanSpec::Inference => KindTag::Inference,
+            PlanSpec::Fusion { .. } => KindTag::Fusion,
+            PlanSpec::Network { .. } => KindTag::Network,
+        }
+    }
+
+    /// Structural cache key: a content hash over everything that decides
+    /// the compiled netlist (two `Arc<BayesNet>`s with equal contents
+    /// share a key). Collisions are resolved by full [`PartialEq`]
+    /// comparison in the cache.
+    pub fn structural_key(&self) -> u64 {
+        let mut h = DefaultHasher::new();
+        match self {
+            PlanSpec::Inference => 0u8.hash(&mut h),
+            PlanSpec::Fusion { modalities } => {
+                1u8.hash(&mut h);
+                modalities.hash(&mut h);
+            }
+            PlanSpec::Network { net, query, evidence } => {
+                2u8.hash(&mut h);
+                for node in net.nodes() {
+                    node.name.hash(&mut h);
+                    node.parents.hash(&mut h);
+                    for &(a, p) in &node.cpt {
+                        a.hash(&mut h);
+                        p.to_bits().hash(&mut h);
+                    }
+                }
+                query.hash(&mut h);
+                for (name, v) in evidence {
+                    name.hash(&mut h);
+                    v.hash(&mut h);
+                }
+            }
+        }
+        h.finish()
+    }
+
+    /// Structural validation (the prepare-time half; parameter ranges are
+    /// checked per decision by [`PreparedPlan::validate_params`]).
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            PlanSpec::Inference => Ok(()),
+            PlanSpec::Fusion { modalities } => check_fusion_arity(*modalities),
+            PlanSpec::Network { net, query, evidence } => {
+                validate_network_parts(net, query, evidence)
+            }
+        }
+    }
+}
+
+/// Network-query admission checks — the single canonical validator,
+/// shared by [`PlanSpec::validate`] and the legacy
+/// [`super::DecisionKind::validate`] shim so the two APIs cannot drift.
+pub(crate) fn validate_network_parts(
+    net: &BayesNet,
+    query: &str,
+    evidence: &[(String, bool)],
+) -> Result<()> {
+    net.validate()?;
+    net.resolve(query)?;
+    let ev: Vec<(usize, bool)> = evidence
+        .iter()
+        .map(|(name, v)| net.resolve(name).map(|i| (i, *v)))
+        .collect::<Result<_>>()?;
+    network::check_evidence(net, &ev)
+}
+
+/// Typed rejection of fusion arities the plan layer cannot serve.
+/// Uses [`Error::Config`] with the same message as the engine-level
+/// checks ([`crate::bayes::BatchedFusion`],
+/// [`crate::network::lower::fusion_netlist`]) so the identical mistake
+/// surfaces identically from every entry point.
+pub(crate) fn check_fusion_arity(m: usize) -> Result<()> {
+    if m < 2 {
+        return Err(Error::Config("fusion needs >= 2 modalities".into()));
+    }
+    if m > MAX_FUSION_MODALITIES {
+        return Err(Error::Config(format!(
+            "fusion arity {m} exceeds the {MAX_FUSION_MODALITIES}-modality cap"
+        )));
+    }
+    Ok(())
+}
+
+/// Per-decision parameters bound against a prepared plan at submit time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DecisionParams {
+    /// Eq.-1 inputs for a [`PlanSpec::Inference`] plan.
+    Inference {
+        /// Prior `P(A)`.
+        prior: f64,
+        /// Likelihood `P(B|A)`.
+        likelihood: f64,
+        /// Likelihood `P(B|¬A)`.
+        likelihood_not: f64,
+    },
+    /// Per-modality posteriors for a [`PlanSpec::Fusion`] plan (length
+    /// must equal the plan's modality count).
+    Fusion {
+        /// `P(y|xᵢ)` per modality.
+        posteriors: Vec<f64>,
+    },
+    /// A [`PlanSpec::Network`] decision — everything is baked into the
+    /// plan.
+    Network,
+}
+
+/// Upper bound on [`Policy::bits`]. Worker scratch scales with
+/// `netlist slots × bits / 64` words, and `bits` is client-controlled,
+/// so it must be capped at admission like every other request input
+/// (2^22 bits ≈ 17 s of virtual hardware time per decision — far past
+/// any useful accuracy point on the paper's Fig. 3d curve).
+pub const MAX_POLICY_BITS: usize = 1 << 22;
+
+/// Per-plan serving policy, applied to every decision submitted through a
+/// [`PlanHandle`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Policy {
+    /// Completion deadline measured from enqueue; late decisions are
+    /// answered with [`Error::Deadline`].
+    pub deadline: Option<Duration>,
+    /// Stochastic stream length override (bits per decision), in
+    /// `1..=`[`MAX_POLICY_BITS`]. `None` uses the worker's configured
+    /// bank; `Some(n)` trades accuracy for latency per the paper's
+    /// Fig. 3d accuracy/length curve. Native backend only: PJRT
+    /// artifact shapes are baked at compile time, so submissions with
+    /// an override are rejected there with a typed [`Error::Config`].
+    pub bits: Option<usize>,
+}
+
+/// A validated, compiled decision plan: the shared immutable artifact
+/// behind every [`PlanHandle`] clone and every in-flight request.
+#[derive(Debug)]
+pub struct PreparedPlan {
+    id: u64,
+    spec: PlanSpec,
+    netlist: Netlist,
+    /// Exact posterior for Network plans, enumerated once at prepare
+    /// time (NaN is unreachable: enumeration errors fail `prepare`).
+    exact_network: f64,
+}
+
+impl PreparedPlan {
+    /// Validate + compile a spec outside any cache. Prefer
+    /// [`PlanCache::prepare`] (or [`super::CoordinatorHandle::prepare`])
+    /// so equal specs share one plan.
+    pub fn compile(spec: PlanSpec) -> Result<Self> {
+        spec.validate()?;
+        let (netlist, exact_network) = match &spec {
+            PlanSpec::Inference => (lower::inference_netlist(), f64::NAN),
+            PlanSpec::Fusion { modalities } => (lower::fusion_netlist(*modalities)?, f64::NAN),
+            PlanSpec::Network { net, query, evidence } => {
+                let ev: Vec<(&str, bool)> =
+                    evidence.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+                let netlist = network::compile_query(net, query, &ev)?;
+                // Enumerate the closed-form reference once, here — a
+                // typed Error::Network at prepare time instead of the
+                // old silent-NaN exact in every response.
+                let (exact, _p_ev) = network::exact_posterior_by_name(net, query, &ev)?;
+                (netlist, exact)
+            }
+        };
+        Ok(Self { id: NEXT_PLAN_ID.fetch_add(1, Ordering::Relaxed), spec, netlist, exact_network })
+    }
+
+    /// Process-unique plan id (the batcher's grouping key).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The spec this plan was prepared from.
+    pub fn spec(&self) -> &PlanSpec {
+        &self.spec
+    }
+
+    /// The compiled word-parallel netlist.
+    pub fn netlist(&self) -> &Netlist {
+        &self.netlist
+    }
+
+    /// Metrics family of decisions under this plan.
+    pub fn tag(&self) -> KindTag {
+        self.spec.tag()
+    }
+
+    /// Check params against the plan's shape and probability ranges.
+    pub fn validate_params(&self, params: &DecisionParams) -> Result<()> {
+        match (&self.spec, params) {
+            (
+                PlanSpec::Inference,
+                DecisionParams::Inference { prior, likelihood, likelihood_not },
+            ) => {
+                Error::check_prob("prior", *prior)?;
+                Error::check_prob("likelihood", *likelihood)?;
+                Error::check_prob("likelihood_not", *likelihood_not)?;
+                Ok(())
+            }
+            (PlanSpec::Fusion { modalities }, DecisionParams::Fusion { posteriors }) => {
+                if posteriors.len() != *modalities {
+                    return Err(Error::Coordinator(format!(
+                        "plan expects {modalities} modalities, got {}",
+                        posteriors.len()
+                    )));
+                }
+                for &p in posteriors {
+                    Error::check_prob("posterior", p)?;
+                }
+                Ok(())
+            }
+            (PlanSpec::Network { .. }, DecisionParams::Network) => Ok(()),
+            _ => Err(Error::Coordinator(
+                "decision params do not match the prepared plan".into(),
+            )),
+        }
+    }
+
+    /// Closed-form posterior for `params` (the accuracy reference carried
+    /// in every [`Decision`]). Network plans return the value enumerated
+    /// at prepare time.
+    pub fn exact(&self, params: &DecisionParams) -> f64 {
+        match (&self.spec, params) {
+            (
+                PlanSpec::Inference,
+                DecisionParams::Inference { prior, likelihood, likelihood_not },
+            ) => crate::bayes::exact_posterior(*prior, *likelihood, *likelihood_not),
+            (PlanSpec::Fusion { .. }, DecisionParams::Fusion { posteriors }) => {
+                crate::bayes::exact_fusion_m(posteriors)
+            }
+            _ => self.exact_network,
+        }
+    }
+
+    /// Fill the netlist input probabilities for `params`. Returns the
+    /// bound slice (borrowed from `buf`, or from the plan itself for
+    /// fully-baked Network plans). Callers must have run
+    /// [`Self::validate_params`].
+    pub fn bind_inputs<'a>(
+        &'a self,
+        params: &DecisionParams,
+        buf: &'a mut Vec<f64>,
+    ) -> &'a [f64] {
+        match params {
+            DecisionParams::Inference { prior, likelihood, likelihood_not } => {
+                buf.clear();
+                buf.extend([*prior, *likelihood, *likelihood_not]);
+                buf
+            }
+            DecisionParams::Fusion { posteriors } => {
+                buf.clear();
+                buf.extend_from_slice(posteriors);
+                buf.push(0.5); // the normalization MUX select
+                buf
+            }
+            DecisionParams::Network => self.netlist.inputs(),
+        }
+    }
+
+    /// Prepare-once / decide-many **without** a coordinator: evaluate one
+    /// decision on a caller-owned bank. Bit-identical to serving the same
+    /// params through a coordinator worker whose bank has the same seed
+    /// and position.
+    pub fn decide_on(
+        &self,
+        bank: &mut SneBank,
+        evaluator: &mut NetlistEvaluator,
+        params: &DecisionParams,
+    ) -> Result<f64> {
+        self.validate_params(params)?;
+        let mut buf = Vec::new();
+        let inputs = self.bind_inputs(params, &mut buf);
+        evaluator.evaluate_with_inputs(bank, &self.netlist, inputs).map(|r| r.posterior)
+    }
+}
+
+/// Shared structural-key LRU of prepared plans.
+///
+/// The lock is held across compilation on a miss, so concurrent
+/// `prepare` calls of the same spec serialize into exactly one compile,
+/// one cache entry, and one recorded miss — the rest hit. Eviction is
+/// least-recently-*used* (hits refresh recency), race-free under the
+/// same lock.
+///
+/// Tradeoff: while a cold prepare of a large network compiles (netlist
+/// lowering + the `2^n` exact enumeration), every other `prepare` —
+/// including the per-request lookup the legacy `DecisionKind` submit
+/// shim performs — blocks on the mutex. Plan-API callers prepare once
+/// up-front and are unaffected on the decide path; latency-sensitive
+/// shim traffic should migrate (see `MIGRATION.md`).
+#[derive(Debug)]
+pub struct PlanCache {
+    capacity: usize,
+    metrics: Arc<Metrics>,
+    inner: Mutex<CacheInner>,
+}
+
+#[derive(Debug, Default)]
+struct CacheInner {
+    entries: Vec<CacheEntry>,
+    tick: u64,
+}
+
+#[derive(Debug)]
+struct CacheEntry {
+    key: u64,
+    plan: Arc<PreparedPlan>,
+    last_used: u64,
+}
+
+impl PlanCache {
+    /// Standalone cache with its own metrics registry.
+    pub fn new(capacity: usize) -> Self {
+        Self::with_metrics(capacity, Arc::new(Metrics::new()))
+    }
+
+    /// Cache reporting hit/miss into an existing registry (the
+    /// coordinator wires its own [`Metrics`] here).
+    pub fn with_metrics(capacity: usize, metrics: Arc<Metrics>) -> Self {
+        Self { capacity: capacity.max(1), metrics, inner: Mutex::new(CacheInner::default()) }
+    }
+
+    /// Validate + compile `spec`, or return the cached plan for a
+    /// structurally equal spec prepared earlier.
+    pub fn prepare(&self, spec: PlanSpec) -> Result<Arc<PreparedPlan>> {
+        let key = spec.structural_key();
+        let mut inner = self.inner.lock().expect("plan cache poisoned");
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(entry) =
+            inner.entries.iter_mut().find(|e| e.key == key && *e.plan.spec() == spec)
+        {
+            entry.last_used = tick;
+            self.metrics.on_plan_hit();
+            return Ok(Arc::clone(&entry.plan));
+        }
+        // Compile while holding the lock (see type-level docs).
+        let plan = Arc::new(PreparedPlan::compile(spec)?);
+        self.metrics.on_plan_miss();
+        if inner.entries.len() >= self.capacity {
+            if let Some(lru) = inner
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i)
+            {
+                inner.entries.swap_remove(lru);
+            }
+        }
+        inner.entries.push(CacheEntry { key, plan: Arc::clone(&plan), last_used: tick });
+        Ok(plan)
+    }
+
+    /// Number of cached plans.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("plan cache poisoned").entries.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Configured capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Is a structurally equal spec cached? (Read-only: does not touch
+    /// recency or the hit/miss counters.)
+    pub fn contains(&self, spec: &PlanSpec) -> bool {
+        let key = spec.structural_key();
+        self.inner
+            .lock()
+            .expect("plan cache poisoned")
+            .entries
+            .iter()
+            .any(|e| e.key == key && *e.plan.spec() == *spec)
+    }
+}
+
+/// Caller-side handle to a prepared plan: submit many decisions against
+/// one compiled model. Cloning is cheap; clones share the plan and the
+/// coordinator, each carrying its own [`Policy`].
+#[derive(Debug, Clone)]
+pub struct PlanHandle {
+    plan: Arc<PreparedPlan>,
+    handle: CoordinatorHandle,
+    policy: Policy,
+}
+
+impl PlanHandle {
+    pub(super) fn new(plan: Arc<PreparedPlan>, handle: CoordinatorHandle) -> Self {
+        Self { plan, handle, policy: Policy::default() }
+    }
+
+    /// The shared compiled plan.
+    pub fn plan(&self) -> &Arc<PreparedPlan> {
+        &self.plan
+    }
+
+    /// This handle's serving policy.
+    pub fn policy(&self) -> Policy {
+        self.policy
+    }
+
+    /// Same plan under a different policy (builder style).
+    pub fn with_policy(mut self, policy: Policy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Submit one decision; fails fast under backpressure.
+    pub fn submit(&self, params: DecisionParams) -> Result<PendingDecision> {
+        self.handle.submit_prepared(&self.plan, params, self.policy)
+    }
+
+    /// Submit and wait.
+    pub fn decide(&self, params: DecisionParams) -> Result<Decision> {
+        self.submit(params)?.wait()
+    }
+
+    /// Submit a whole batch up-front (so the dynamic batcher can form
+    /// full word-parallel batches), then collect in submission order.
+    pub fn decide_batch(&self, batch: &[DecisionParams]) -> Vec<Result<Decision>> {
+        let pending: Vec<Result<PendingDecision>> =
+            batch.iter().map(|p| self.submit(p.clone())).collect();
+        pending.into_iter().map(|p| p.and_then(PendingDecision::wait)).collect()
+    }
+
+    /// Open a pipelined decision stream against this plan.
+    pub fn stream(&self) -> DecisionStream {
+        DecisionStream { handle: self.clone(), inflight: VecDeque::new() }
+    }
+}
+
+/// Pipelined decide-many: push params as they arrive, pop completed
+/// decisions in submission order — the video-pipeline shape (submit a
+/// frame's detections, drain the previous frame's posteriors).
+#[derive(Debug)]
+pub struct DecisionStream {
+    handle: PlanHandle,
+    inflight: VecDeque<PendingDecision>,
+}
+
+impl DecisionStream {
+    /// Submit one decision into the stream.
+    pub fn push(&mut self, params: DecisionParams) -> Result<()> {
+        self.inflight.push_back(self.handle.submit(params)?);
+        Ok(())
+    }
+
+    /// Decisions submitted but not yet popped.
+    pub fn pending(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Block for the oldest in-flight decision; `None` when the stream
+    /// is drained.
+    pub fn next_decision(&mut self) -> Option<Result<Decision>> {
+        self.inflight.pop_front().map(PendingDecision::wait)
+    }
+
+    /// Drain every in-flight decision in submission order.
+    pub fn drain(&mut self) -> Vec<Result<Decision>> {
+        let mut out = Vec::with_capacity(self.inflight.len());
+        while let Some(d) = self.next_decision() {
+            out.push(d);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chain_net() -> Arc<BayesNet> {
+        let mut net = BayesNet::named("chain");
+        net.add_root("a", 0.3).unwrap();
+        net.add_node("b", &["a"], &[0.2, 0.9]).unwrap();
+        Arc::new(net)
+    }
+
+    fn network_spec() -> PlanSpec {
+        PlanSpec::Network {
+            net: chain_net(),
+            query: "a".into(),
+            evidence: vec![("b".into(), true)],
+        }
+    }
+
+    #[test]
+    fn structural_keys_are_content_based() {
+        // Two independently built (different Arc) but equal nets share a key.
+        let a = network_spec();
+        let b = network_spec();
+        assert_eq!(a.structural_key(), b.structural_key());
+        assert_eq!(a, b);
+        // Different evidence -> different spec.
+        let c = PlanSpec::Network { net: chain_net(), query: "a".into(), evidence: vec![] };
+        assert_ne!(a, c);
+        assert_ne!(
+            PlanSpec::Fusion { modalities: 2 }.structural_key(),
+            PlanSpec::Fusion { modalities: 3 }.structural_key()
+        );
+    }
+
+    #[test]
+    fn cache_hits_reuse_the_same_plan() {
+        let cache = PlanCache::new(4);
+        let p1 = cache.prepare(PlanSpec::Inference).unwrap();
+        let p2 = cache.prepare(PlanSpec::Inference).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2));
+        assert_eq!(cache.len(), 1);
+        let net1 = cache.prepare(network_spec()).unwrap();
+        let net2 = cache.prepare(network_spec()).unwrap();
+        assert!(Arc::ptr_eq(&net1, &net2));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn cache_evicts_least_recently_used() {
+        let cache = PlanCache::new(2);
+        let a = PlanSpec::Fusion { modalities: 2 };
+        let b = PlanSpec::Fusion { modalities: 3 };
+        let c = PlanSpec::Fusion { modalities: 4 };
+        cache.prepare(a.clone()).unwrap();
+        cache.prepare(b.clone()).unwrap();
+        cache.prepare(a.clone()).unwrap(); // refresh a's recency
+        cache.prepare(c.clone()).unwrap(); // evicts b (LRU)
+        assert_eq!(cache.len(), 2);
+        assert!(cache.contains(&a));
+        assert!(!cache.contains(&b));
+        assert!(cache.contains(&c));
+    }
+
+    #[test]
+    fn params_are_validated_against_the_plan() {
+        let plan = PreparedPlan::compile(PlanSpec::Fusion { modalities: 2 }).unwrap();
+        assert!(plan
+            .validate_params(&DecisionParams::Fusion { posteriors: vec![0.8, 0.7] })
+            .is_ok());
+        // Wrong arity.
+        assert!(plan
+            .validate_params(&DecisionParams::Fusion { posteriors: vec![0.8, 0.7, 0.6] })
+            .is_err());
+        // Wrong kind.
+        assert!(plan.validate_params(&DecisionParams::Network).is_err());
+        // Out-of-range probability.
+        assert!(matches!(
+            plan.validate_params(&DecisionParams::Fusion { posteriors: vec![0.8, 1.7] })
+                .unwrap_err(),
+            Error::ProbabilityRange { .. }
+        ));
+    }
+
+    #[test]
+    fn oversized_fusion_is_a_typed_error() {
+        let err = PlanSpec::Fusion { modalities: MAX_FUSION_MODALITIES + 1 }
+            .validate()
+            .unwrap_err();
+        assert!(err.to_string().contains("modality cap"), "{err}");
+        assert!(PlanSpec::Fusion { modalities: MAX_FUSION_MODALITIES }.validate().is_ok());
+        assert!(PlanSpec::Fusion { modalities: 1 }.validate().is_err());
+    }
+
+    #[test]
+    fn network_prepare_errors_are_typed_not_nan() {
+        // Unknown query node: the old DecisionKind::exact() swallowed
+        // this into f64::NAN; prepare surfaces it as Error::Network.
+        let bad = PlanSpec::Network { net: chain_net(), query: "zz".into(), evidence: vec![] };
+        assert!(matches!(PreparedPlan::compile(bad).unwrap_err(), Error::Network(_)));
+        // A good plan bakes a finite exact reference.
+        let plan = PreparedPlan::compile(network_spec()).unwrap();
+        let exact = plan.exact(&DecisionParams::Network);
+        let want = crate::bayes::exact_posterior(0.3, 0.9, 0.2);
+        assert!((exact - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decide_on_matches_the_direct_netlist_path() {
+        use crate::stochastic::SneConfig;
+        let plan = PreparedPlan::compile(network_spec()).unwrap();
+        let cfg = SneConfig { n_bits: 1000, ..Default::default() };
+        let mut bank = SneBank::new(cfg.clone(), 5).unwrap();
+        let mut eval = NetlistEvaluator::new();
+        let via_plan = plan.decide_on(&mut bank, &mut eval, &DecisionParams::Network).unwrap();
+        let mut bank2 = SneBank::new(cfg, 5).unwrap();
+        let nl = network::compile_query(&chain_net(), "a", &[("b", true)]).unwrap();
+        let direct = NetlistEvaluator::new().evaluate(&mut bank2, &nl).unwrap();
+        assert_eq!(via_plan, direct.posterior);
+    }
+}

@@ -1,4 +1,11 @@
 //! Request/response types of the serving layer.
+//!
+//! Since the plan-centric redesign an in-flight [`DecisionRequest`]
+//! carries its compiled [`PreparedPlan`] plus per-decision
+//! [`DecisionParams`] — workers never re-validate or re-compile.
+//! [`DecisionKind`] survives as the legacy one-shot surface, lowered
+//! onto prepared plans by [`super::CoordinatorHandle::submit`] (see
+//! `MIGRATION.md`).
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -8,8 +15,15 @@ use crate::network::BayesNet;
 use crate::{Error, Result};
 
 use super::metrics::KindTag;
+use super::plan::{check_fusion_arity, DecisionParams, PlanSpec, PreparedPlan};
 
 /// What kind of Bayesian decision a request wants.
+///
+/// **Deprecated shim**: the plan-centric API ([`PlanSpec`] +
+/// [`super::CoordinatorHandle::prepare`] + [`super::PlanHandle`])
+/// supersedes this for serving workloads — `submit(kind)` pays a plan
+/// cache lookup per request where `plan.decide(params)` pays it once.
+/// Kept for one-shot callers and to pin the migration regression tests.
 #[derive(Debug, Clone, PartialEq)]
 pub enum DecisionKind {
     /// Eq.-1 inference: `[P(A), P(B|A), P(B|¬A)]`.
@@ -41,7 +55,9 @@ pub enum DecisionKind {
 }
 
 impl DecisionKind {
-    /// Validate all probabilities.
+    /// Validate all probabilities (and the fusion modality cap — an
+    /// oversized arity is a typed error, where it once silently wrapped
+    /// the u8 batching-class arithmetic).
     pub fn validate(&self) -> Result<()> {
         match self {
             DecisionKind::Inference { prior, likelihood, likelihood_not } => {
@@ -50,34 +66,48 @@ impl DecisionKind {
                 Error::check_prob("likelihood_not", *likelihood_not)?;
             }
             DecisionKind::Fusion { posteriors } => {
-                if posteriors.len() < 2 {
-                    return Err(Error::Coordinator("fusion needs >= 2 modalities".into()));
-                }
+                check_fusion_arity(posteriors.len())?;
                 for &p in posteriors {
                     Error::check_prob("posterior", p)?;
                 }
             }
             DecisionKind::Network { net, query, evidence } => {
-                net.validate()?;
-                net.resolve(query)?;
-                let ev: Vec<(usize, bool)> = evidence
-                    .iter()
-                    .map(|(name, v)| net.resolve(name).map(|i| (i, *v)))
-                    .collect::<Result<_>>()?;
-                crate::network::check_evidence(net, &ev)?;
+                // One canonical network validator, shared with
+                // `PlanSpec::validate` so the shim cannot drift.
+                super::plan::validate_network_parts(net, query, evidence)?;
             }
         }
         Ok(())
     }
 
-    /// Batching class: requests only batch with the same class.
+    /// Lower onto the plan-centric API: the structural spec to prepare
+    /// and the per-decision params to submit against it.
+    pub fn into_plan_parts(self) -> (PlanSpec, DecisionParams) {
+        match self {
+            DecisionKind::Inference { prior, likelihood, likelihood_not } => (
+                PlanSpec::Inference,
+                DecisionParams::Inference { prior, likelihood, likelihood_not },
+            ),
+            DecisionKind::Fusion { posteriors } => (
+                PlanSpec::Fusion { modalities: posteriors.len() },
+                DecisionParams::Fusion { posteriors },
+            ),
+            DecisionKind::Network { net, query, evidence } => {
+                (PlanSpec::Network { net, query, evidence }, DecisionParams::Network)
+            }
+        }
+    }
+
+    /// Legacy batching class. The batcher groups by plan id now; this
+    /// survives only for compatibility tests. The arity term saturates
+    /// (and [`Self::validate`] caps fusion arity) so the old silent u8
+    /// wrap past 255 is unreachable.
     pub fn class(&self) -> u8 {
         match self {
             DecisionKind::Inference { .. } => 0,
             DecisionKind::Network { .. } => 1,
             DecisionKind::Fusion { posteriors } => {
-                debug_assert!(posteriors.len() < 250);
-                10 + posteriors.len() as u8
+                10u8.saturating_add(posteriors.len().min(245) as u8)
             }
         }
     }
@@ -92,34 +122,41 @@ impl DecisionKind {
     }
 
     /// Closed-form result (the accuracy reference carried in responses).
-    pub fn exact(&self) -> f64 {
+    /// Network enumeration failures (unknown nodes, invalid nets) are
+    /// typed [`Error::Network`]s — they were silently folded into
+    /// `f64::NAN` before the plan redesign.
+    pub fn exact(&self) -> Result<f64> {
         match self {
             DecisionKind::Inference { prior, likelihood, likelihood_not } => {
-                crate::bayes::exact_posterior(*prior, *likelihood, *likelihood_not)
+                Ok(crate::bayes::exact_posterior(*prior, *likelihood, *likelihood_not))
             }
-            DecisionKind::Fusion { posteriors } => crate::bayes::exact_fusion_m(posteriors),
+            DecisionKind::Fusion { posteriors } => Ok(crate::bayes::exact_fusion_m(posteriors)),
             DecisionKind::Network { net, query, evidence } => {
                 let ev: Vec<(&str, bool)> =
                     evidence.iter().map(|(n, v)| (n.as_str(), *v)).collect();
-                crate::network::exact_posterior_by_name(net, query, &ev)
-                    .map(|(p, _)| p)
-                    .unwrap_or(f64::NAN)
+                crate::network::exact_posterior_by_name(net, query, &ev).map(|(p, _)| p)
             }
         }
     }
 }
 
-/// A queued decision request.
+/// A queued decision request: the shared compiled plan plus this
+/// decision's bound parameters.
 #[derive(Debug)]
 pub struct DecisionRequest {
     /// Monotone request id.
     pub id: u64,
-    /// The decision to make.
-    pub kind: DecisionKind,
+    /// The compiled plan this decision executes against.
+    pub plan: Arc<PreparedPlan>,
+    /// Per-decision parameters (validated at submit).
+    pub params: DecisionParams,
     /// When the request entered the queue.
     pub enqueued: Instant,
     /// Optional completion deadline (measured from `enqueued`).
     pub deadline: Option<Duration>,
+    /// Stream-length override from the plan's [`super::Policy`] (`None`
+    /// = the worker's configured bank).
+    pub bits: Option<usize>,
     /// Reply channel.
     pub reply: mpsc::Sender<Result<Decision>>,
 }
@@ -225,7 +262,17 @@ mod tests {
         let kind = network_kind();
         // Same inputs as a 2-node chain: Eq.-1 closed form.
         let want = crate::bayes::exact_posterior(0.3, 0.9, 0.2);
-        assert!((kind.exact() - want).abs() < 1e-12);
+        assert!((kind.exact().unwrap() - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn network_exact_errors_are_typed_not_nan() {
+        let bad = DecisionKind::Network {
+            net: chain_net(),
+            query: "zz".into(),
+            evidence: vec![],
+        };
+        assert!(matches!(bad.exact().unwrap_err(), Error::Network(_)));
     }
 
     #[test]
@@ -251,6 +298,20 @@ mod tests {
     }
 
     #[test]
+    fn oversized_fusion_is_rejected_not_wrapped() {
+        // 300 modalities once wrapped the u8 class arithmetic; now it is
+        // a typed validation error and class() saturates regardless.
+        let big = DecisionKind::Fusion { posteriors: vec![0.5; 300] };
+        let err = big.validate().unwrap_err();
+        assert!(err.to_string().contains("modality cap"), "{err}");
+        assert_eq!(big.class(), 255);
+        let max_ok = DecisionKind::Fusion {
+            posteriors: vec![0.5; crate::coordinator::MAX_FUSION_MODALITIES],
+        };
+        assert!(max_ok.validate().is_ok());
+    }
+
+    #[test]
     fn batching_classes_separate_kinds_and_arity() {
         let inf = DecisionKind::Inference { prior: 0.5, likelihood: 0.7, likelihood_not: 0.2 };
         let f2 = DecisionKind::Fusion { posteriors: vec![0.8, 0.6] };
@@ -262,9 +323,23 @@ mod tests {
     #[test]
     fn exact_values_match_bayes_module() {
         let inf = DecisionKind::Inference { prior: 0.57, likelihood: 0.77, likelihood_not: 0.655 };
-        assert!((inf.exact() - 0.609).abs() < 0.005);
+        assert!((inf.exact().unwrap() - 0.609).abs() < 0.005);
         let fus = DecisionKind::Fusion { posteriors: vec![0.8, 0.7] };
-        assert!((fus.exact() - 0.56 / 0.62).abs() < 1e-12);
+        assert!((fus.exact().unwrap() - 0.56 / 0.62).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kinds_lower_onto_plan_parts() {
+        let (spec, params) = DecisionKind::Fusion { posteriors: vec![0.8, 0.7] }.into_plan_parts();
+        assert_eq!(spec, PlanSpec::Fusion { modalities: 2 });
+        assert_eq!(params, DecisionParams::Fusion { posteriors: vec![0.8, 0.7] });
+        let (spec, params) = network_kind().into_plan_parts();
+        assert!(matches!(spec, PlanSpec::Network { .. }));
+        assert_eq!(params, DecisionParams::Network);
+        let (spec, _) =
+            DecisionKind::Inference { prior: 0.5, likelihood: 0.7, likelihood_not: 0.2 }
+                .into_plan_parts();
+        assert_eq!(spec, PlanSpec::Inference);
     }
 
     #[test]

@@ -1,9 +1,9 @@
 //! Router: picks the execution plan (backend + AOT entrypoint + chunking)
-//! for a batch of a given class.
+//! for a batch of a given prepared plan.
 
 use crate::config::Backend;
 
-use super::request::DecisionKind;
+use super::plan::PlanSpec;
 
 /// How a batch should be executed.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -20,7 +20,7 @@ pub enum ExecPlan {
     },
 }
 
-/// Maps (kind, batch length) to an execution plan.
+/// Maps (prepared plan, batch length) to an execution plan.
 #[derive(Debug, Clone)]
 pub struct Router {
     backend: Backend,
@@ -37,24 +37,24 @@ impl Router {
         self.backend
     }
 
-    /// Plan execution for a batch whose representative request is `kind`.
+    /// Plan execution for a batch compiled from `spec`.
     ///
     /// PJRT entrypoints exist for batch 16 and 64 (plus the paper's
     /// single-decision 100-bit shapes); the router picks the smallest
     /// artifact that covers the batch to minimise padding waste.
-    pub fn route(&self, kind: &DecisionKind, batch_len: usize) -> ExecPlan {
+    pub fn route(&self, spec: &PlanSpec, batch_len: usize) -> ExecPlan {
         match self.backend {
             Backend::Native => ExecPlan::Native,
             Backend::Pjrt => {
                 let chunk = if batch_len > 16 { 64 } else { 16 };
-                let entry = match kind {
+                let entry = match spec {
                     // Compiled networks have no AOT artifact family; they
                     // always run on the native simulator (a PJRT worker
                     // answers them with a typed error).
-                    DecisionKind::Network { .. } => return ExecPlan::Native,
-                    DecisionKind::Inference { .. } => format!("inference_b{chunk}_n256"),
-                    DecisionKind::Fusion { posteriors } => {
-                        let m = posteriors.len();
+                    PlanSpec::Network { .. } => return ExecPlan::Native,
+                    PlanSpec::Inference => format!("inference_b{chunk}_n256"),
+                    PlanSpec::Fusion { modalities } => {
+                        let m = *modalities;
                         if m == 3 {
                             // Only the b16 three-modal artifact is built.
                             return ExecPlan::Pjrt {
@@ -90,49 +90,43 @@ impl Router {
 mod tests {
     use super::*;
 
-    fn inf() -> DecisionKind {
-        DecisionKind::Inference { prior: 0.5, likelihood: 0.7, likelihood_not: 0.2 }
-    }
-
     #[test]
     fn native_backend_routes_native() {
         let r = Router::new(Backend::Native);
-        assert_eq!(r.route(&inf(), 5), ExecPlan::Native);
+        assert_eq!(r.route(&PlanSpec::Inference, 5), ExecPlan::Native);
         assert!(r.required_entrypoints().is_empty());
     }
 
     #[test]
-    fn network_kind_always_routes_native() {
+    fn network_plans_always_route_native() {
         let mut net = crate::network::BayesNet::new();
         net.add_root("a", 0.5).unwrap();
-        let kind = DecisionKind::Network {
+        let spec = PlanSpec::Network {
             net: std::sync::Arc::new(net),
             query: "a".into(),
             evidence: vec![],
         };
-        assert_eq!(Router::new(Backend::Native).route(&kind, 4), ExecPlan::Native);
-        assert_eq!(Router::new(Backend::Pjrt).route(&kind, 4), ExecPlan::Native);
+        assert_eq!(Router::new(Backend::Native).route(&spec, 4), ExecPlan::Native);
+        assert_eq!(Router::new(Backend::Pjrt).route(&spec, 4), ExecPlan::Native);
     }
 
     #[test]
     fn pjrt_picks_smallest_covering_artifact() {
         let r = Router::new(Backend::Pjrt);
         assert_eq!(
-            r.route(&inf(), 4),
+            r.route(&PlanSpec::Inference, 4),
             ExecPlan::Pjrt { entry: "inference_b16_n256".into(), chunk: 16 }
         );
         assert_eq!(
-            r.route(&inf(), 17),
+            r.route(&PlanSpec::Inference, 17),
             ExecPlan::Pjrt { entry: "inference_b64_n256".into(), chunk: 64 }
         );
-        let f2 = DecisionKind::Fusion { posteriors: vec![0.8, 0.6] };
         assert_eq!(
-            r.route(&f2, 16),
+            r.route(&PlanSpec::Fusion { modalities: 2 }, 16),
             ExecPlan::Pjrt { entry: "fusion_b16_m2_n256".into(), chunk: 16 }
         );
-        let f3 = DecisionKind::Fusion { posteriors: vec![0.8, 0.6, 0.5] };
         assert_eq!(
-            r.route(&f3, 40),
+            r.route(&PlanSpec::Fusion { modalities: 3 }, 40),
             ExecPlan::Pjrt { entry: "fusion_b16_m3_n256".into(), chunk: 16 }
         );
     }

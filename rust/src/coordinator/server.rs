@@ -1,22 +1,31 @@
 //! The coordinator itself: bounded admission queue, dispatcher thread
 //! running the dynamic batcher, and a pool of worker threads executing
 //! batches on the native simulator or the PJRT runtime.
+//!
+//! Serving is **plan-centric**: [`CoordinatorHandle::prepare`] validates
+//! and compiles a [`PlanSpec`] once (shared via the [`PlanCache`]), and
+//! every request carries its `Arc<PreparedPlan>` through the batcher to
+//! a worker, which just binds parameters and sweeps the compiled netlist
+//! word-parallel. The legacy [`DecisionKind`] submit path lowers onto
+//! the same plans.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::bayes::{BatchedFusion, BatchedInference, InferenceQuery};
 use crate::config::{AppConfig, Backend};
-use crate::network::{compile_query, BayesNet, Netlist, NetlistEvaluator};
+use crate::network::NetlistEvaluator;
 use crate::runtime::Runtime;
-use crate::stochastic::SneBank;
+use crate::stochastic::{SneBank, SneConfig};
 use crate::util::Rng;
 use crate::{Error, Result};
 
 use super::batcher::{Batch, Batcher};
 use super::metrics::Metrics;
+use super::plan::{
+    DecisionParams, PlanCache, PlanHandle, PlanSpec, Policy, PreparedPlan, MAX_POLICY_BITS,
+};
 use super::request::{Decision, DecisionKind, DecisionRequest, PendingDecision};
 use super::router::{ExecPlan, Router};
 
@@ -26,33 +35,62 @@ enum Msg {
     Shutdown,
 }
 
-/// Caller-side handle: submit decisions, read metrics.
-#[derive(Clone)]
+/// Caller-side handle: prepare plans, submit decisions, read metrics.
+#[derive(Debug, Clone)]
 pub struct CoordinatorHandle {
     tx: mpsc::SyncSender<Msg>,
     next_id: Arc<AtomicU64>,
     metrics: Arc<Metrics>,
+    plans: Arc<PlanCache>,
+    backend: Backend,
 }
 
 impl CoordinatorHandle {
-    /// Submit a decision request. Fails fast (backpressure) when the
-    /// admission queue is full.
-    pub fn submit(&self, kind: DecisionKind) -> Result<PendingDecision> {
-        self.submit_with_deadline(kind, None)
+    /// Validate + compile `spec` once (or fetch the shared plan a
+    /// structurally equal spec compiled earlier) and return a handle to
+    /// decide against it. Prepare failures count as rejections.
+    pub fn prepare(&self, spec: PlanSpec) -> Result<PlanHandle> {
+        let plan = self.plans.prepare(spec).inspect_err(|_| self.metrics.on_reject())?;
+        Ok(PlanHandle::new(plan, self.clone()))
     }
 
-    /// Submit with a completion deadline; the worker drops the decision
-    /// (replying with [`Error::Deadline`]) if it can't meet it.
-    pub fn submit_with_deadline(
+    /// Submit one decision against a prepared plan under `policy`. Fails
+    /// fast (backpressure) when the admission queue is full.
+    pub fn submit_prepared(
         &self,
-        kind: DecisionKind,
-        deadline: Option<Duration>,
+        plan: &Arc<PreparedPlan>,
+        params: DecisionParams,
+        policy: Policy,
     ) -> Result<PendingDecision> {
-        kind.validate().inspect_err(|_| self.metrics.on_reject())?;
+        plan.validate_params(&params).inspect_err(|_| self.metrics.on_reject())?;
+        // `bits` is client-controlled and sizes worker-side buffers:
+        // range-cap it at admission like every other request input.
+        if policy.bits.is_some_and(|b| b == 0 || b > MAX_POLICY_BITS) {
+            self.metrics.on_reject();
+            return Err(Error::Config(format!(
+                "policy.bits must be in 1..={MAX_POLICY_BITS}"
+            )));
+        }
+        // Typed rejection instead of silently serving at the artifact's
+        // baked stream length.
+        if policy.bits.is_some() && self.backend == Backend::Pjrt {
+            self.metrics.on_reject();
+            return Err(Error::Config(
+                "Policy.bits requires the native backend (PJRT artifact shapes are fixed)"
+                    .into(),
+            ));
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply, rx) = mpsc::channel();
-        let req =
-            DecisionRequest { id, kind, enqueued: Instant::now(), deadline, reply };
+        let req = DecisionRequest {
+            id,
+            plan: Arc::clone(plan),
+            params,
+            enqueued: Instant::now(),
+            deadline: policy.deadline,
+            bits: policy.bits,
+            reply,
+        };
         match self.tx.try_send(Msg::Req(req)) {
             Ok(()) => {
                 self.metrics.on_submit();
@@ -68,6 +106,30 @@ impl CoordinatorHandle {
         }
     }
 
+    /// Legacy one-shot submit: lowers `kind` onto a prepared plan (one
+    /// plan-cache lookup per request — prefer [`Self::prepare`] +
+    /// [`PlanHandle::submit`] on hot paths).
+    pub fn submit(&self, kind: DecisionKind) -> Result<PendingDecision> {
+        self.submit_with_deadline(kind, None)
+    }
+
+    /// Legacy submit with a completion deadline; the worker drops the
+    /// decision (replying with [`Error::Deadline`]) if it can't meet it.
+    pub fn submit_with_deadline(
+        &self,
+        kind: DecisionKind,
+        deadline: Option<Duration>,
+    ) -> Result<PendingDecision> {
+        // No up-front kind.validate(): a cache miss validates the
+        // structural half inside `PreparedPlan::compile`, and a hit
+        // proves it was already validated — so cache hits really do pay
+        // only the lookup plus the per-request param check in
+        // `submit_prepared` (errors and messages are identical).
+        let (spec, params) = kind.into_plan_parts();
+        let plan = self.plans.prepare(spec).inspect_err(|_| self.metrics.on_reject())?;
+        self.submit_prepared(&plan, params, Policy { deadline, bits: None })
+    }
+
     /// Convenience: submit and wait.
     pub fn decide(&self, kind: DecisionKind) -> Result<Decision> {
         self.submit(kind)?.wait()
@@ -76,6 +138,12 @@ impl CoordinatorHandle {
     /// Metrics registry.
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
+    }
+
+    /// The shared plan cache (hit/miss counters live in
+    /// [`Self::metrics`]).
+    pub fn plan_cache(&self) -> &PlanCache {
+        &self.plans
     }
 }
 
@@ -96,6 +164,10 @@ impl Coordinator {
     pub fn start(config: &AppConfig) -> Result<Self> {
         config.validate()?;
         let metrics = Arc::new(Metrics::new());
+        let plans = Arc::new(PlanCache::with_metrics(
+            config.coordinator.plan_cache_capacity,
+            Arc::clone(&metrics),
+        ));
         let router = Router::new(config.coordinator.backend);
         let (tx, rx) = mpsc::sync_channel::<Msg>(config.coordinator.queue_capacity);
 
@@ -137,7 +209,13 @@ impl Coordinator {
         });
 
         Ok(Self {
-            handle: CoordinatorHandle { tx, next_id: Arc::new(AtomicU64::new(0)), metrics },
+            handle: CoordinatorHandle {
+                tx,
+                next_id: Arc::new(AtomicU64::new(0)),
+                metrics,
+                plans,
+                backend: config.coordinator.backend,
+            },
             dispatcher: Some(dispatcher),
             workers,
         })
@@ -238,107 +316,59 @@ fn dispatcher_loop(
 
 /// Per-worker execution context.
 ///
-/// Native workers own the word-parallel batched engines: a whole
-/// [`Batch`] executes through one grouped SNE encode + one packed
-/// dataflow sweep instead of looping single decisions (bit-identical to
-/// the single path — see [`crate::bayes::BatchedInference`]).
+/// Native workers own a pool of SNE banks (the configured default plus
+/// lazily-built banks for per-plan `Policy.bits` overrides) and one
+/// reusable [`NetlistEvaluator`]: a batch executes as one bound-input
+/// netlist sweep per member decision — bit-identical to the
+/// pre-redesign per-kind engines (see [`crate::network::lower`]).
 enum WorkerContext {
     Native {
-        bank: SneBank,
-        inference: BatchedInference,
-        fusion: BatchedFusion,
-        network: NetworkEngine,
+        pool: BankPool,
+        evaluator: NetlistEvaluator,
+        inputs_buf: Vec<f64>,
     },
     Pjrt { runtime: Runtime, rng: Rng, n_bits: usize },
 }
 
-/// Entries kept in a worker's compiled-query cache. Small because each
-/// entry pins its `Arc<BayesNet>`; FIFO eviction beyond the cap.
-const NETWORK_CACHE_CAP: usize = 8;
-
-/// Per-worker network executor: the word-parallel evaluator plus a
-/// small compiled-query cache. Serving loads reuse a handful of shared
-/// `Arc<BayesNet>` query tuples across many requests, so the common
-/// case skips re-validation and re-compilation, and the `2^n`
-/// full-joint exact annotation is enumerated lazily at most once per
-/// cached tuple. Each entry holds its `Arc`, which keeps the network
-/// alive and makes `Arc::ptr_eq` a sound identity check (no address
-/// reuse while cached).
-#[derive(Default)]
-struct NetworkEngine {
-    evaluator: NetlistEvaluator,
-    cache: Vec<CachedQuery>,
+/// The native worker's banks, keyed by stream length. The default bank
+/// keeps the historical seed derivation (`config.seed ^ (worker << 32)`)
+/// so served decision streams stay bit-reproducible across the redesign.
+struct BankPool {
+    default_bits: usize,
+    banks: Vec<(usize, SneBank)>,
+    sne: SneConfig,
+    seed: u64,
 }
 
-struct CachedQuery {
-    net: Arc<BayesNet>,
-    query: String,
-    evidence: Vec<(String, bool)>,
-    netlist: Netlist,
-    /// Lazily memoized full-joint exact posterior (reply-time cost).
-    exact: Option<f64>,
-}
+/// Extra per-`Policy.bits` banks kept per worker beyond the default.
+/// `bits` is client-controlled, so the pool must be bounded: beyond the
+/// cap the oldest extra bank is dropped (FIFO; a later re-build restarts
+/// that length's stochastic stream, which only re-seeds fresh samples).
+const EXTRA_BANK_CAP: usize = 8;
 
-impl NetworkEngine {
-    fn entry_index(
-        &self,
-        net: &Arc<BayesNet>,
-        query: &str,
-        evidence: &[(String, bool)],
-    ) -> Option<usize> {
-        self.cache.iter().position(|c| {
-            Arc::ptr_eq(&c.net, net) && c.query == query && c.evidence.as_slice() == evidence
-        })
+impl BankPool {
+    fn new(config: &AppConfig, worker_idx: u64) -> Result<Self> {
+        let seed = config.seed ^ (worker_idx << 32);
+        let default_bits = config.sne.n_bits;
+        let bank = SneBank::new(config.sne.clone(), seed)?;
+        Ok(Self { default_bits, banks: vec![(default_bits, bank)], sne: config.sne.clone(), seed })
     }
 
-    fn decide(
-        &mut self,
-        bank: &mut SneBank,
-        net: &Arc<BayesNet>,
-        query: &str,
-        evidence: &[(String, bool)],
-    ) -> Result<f64> {
-        let idx = match self.entry_index(net, query, evidence) {
-            Some(idx) => idx,
-            None => {
-                let ev: Vec<(&str, bool)> =
-                    evidence.iter().map(|(n, v)| (n.as_str(), *v)).collect();
-                let netlist = compile_query(net, query, &ev)?;
-                if self.cache.len() == NETWORK_CACHE_CAP {
-                    self.cache.remove(0); // evict the oldest entry
-                }
-                self.cache.push(CachedQuery {
-                    net: Arc::clone(net),
-                    query: query.to_string(),
-                    evidence: evidence.to_vec(),
-                    netlist,
-                    exact: None,
-                });
-                self.cache.len() - 1
-            }
-        };
-        let netlist = &self.cache[idx].netlist;
-        self.evaluator.evaluate(bank, netlist).map(|r| r.posterior)
-    }
-
-    /// Closed-form posterior for a cached query, enumerated once per
-    /// cached tuple and memoized (None when the tuple is not cached or
-    /// enumeration fails — callers fall back to `DecisionKind::exact`).
-    fn exact_for(
-        &mut self,
-        net: &Arc<BayesNet>,
-        query: &str,
-        evidence: &[(String, bool)],
-    ) -> Option<f64> {
-        let idx = self.entry_index(net, query, evidence)?;
-        if self.cache[idx].exact.is_none() {
-            let ev: Vec<(&str, bool)> =
-                evidence.iter().map(|(n, v)| (n.as_str(), *v)).collect();
-            self.cache[idx].exact = crate::network::exact_posterior_by_name(net, query, &ev)
-                .ok()
-                .map(|(p, _)| p);
+    /// The bank serving a batch with stream-length override `bits`
+    /// (lazily built and cached; deterministically seeded per length).
+    fn bank_for(&mut self, bits: Option<usize>) -> Result<&mut SneBank> {
+        let bits = bits.unwrap_or(self.default_bits);
+        if let Some(pos) = self.banks.iter().position(|(b, _)| *b == bits) {
+            return Ok(&mut self.banks[pos].1);
         }
-        self.cache[idx].exact
+        let cfg = SneConfig { n_bits: bits, ..self.sne.clone() };
+        let bank =
+            SneBank::new(cfg, self.seed ^ (bits as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))?;
+        if self.banks.len() > EXTRA_BANK_CAP {
+            self.banks.remove(1); // index 0 is the default bank; 1 = oldest extra
+        }
+        self.banks.push((bits, bank));
+        Ok(&mut self.banks.last_mut().expect("just pushed").1)
     }
 }
 
@@ -346,10 +376,9 @@ impl WorkerContext {
     fn build(config: &AppConfig, router: &Router, worker_idx: u64) -> Result<Self> {
         match router.backend() {
             Backend::Native => Ok(WorkerContext::Native {
-                bank: SneBank::new(config.sne.clone(), config.seed ^ (worker_idx << 32))?,
-                inference: BatchedInference::new(),
-                fusion: BatchedFusion::new(),
-                network: NetworkEngine::default(),
+                pool: BankPool::new(config, worker_idx)?,
+                evaluator: NetlistEvaluator::new(),
+                inputs_buf: Vec::new(),
             }),
             Backend::Pjrt => {
                 let runtime = Runtime::load_subset(
@@ -363,14 +392,6 @@ impl WorkerContext {
                 })
             }
         }
-    }
-
-    fn hardware_ns(&self) -> f64 {
-        let n_bits = match self {
-            WorkerContext::Native { bank, .. } => bank.n_bits(),
-            WorkerContext::Pjrt { n_bits, .. } => *n_bits,
-        };
-        crate::device::DeviceParams::BIT_PERIOD_NS * n_bits as f64
     }
 }
 
@@ -386,36 +407,73 @@ fn worker_loop(
 }
 
 fn execute_batch(ctx: &mut WorkerContext, batch: Batch, router: &Router, metrics: &Metrics) {
-    let Some(first) = batch.requests.first() else { return };
-    let plan = router.route(&first.kind, batch.len());
+    if batch.is_empty() {
+        return;
+    }
+    let plan = Arc::clone(&batch.plan);
+    let exec = router.route(plan.spec(), batch.len());
     let batch_size = batch.len();
-    let hardware_ns = ctx.hardware_ns();
 
     // Compute posteriors for the whole batch up-front.
-    let posteriors: Vec<Result<f64>> = match (&plan, &mut *ctx) {
-        (ExecPlan::Native, WorkerContext::Native { bank, inference, fusion, network }) => {
-            execute_native(bank, inference, fusion, network, &batch)
+    let (posteriors, hardware_ns): (Vec<Result<f64>>, f64) = match (&exec, &mut *ctx) {
+        (ExecPlan::Native, WorkerContext::Native { pool, evaluator, inputs_buf }) => {
+            match pool.bank_for(batch.bits) {
+                Ok(bank) => {
+                    let hw = crate::device::DeviceParams::BIT_PERIOD_NS * bank.n_bits() as f64;
+                    let results = batch
+                        .requests
+                        .iter()
+                        .map(|req| {
+                            let inputs = plan.bind_inputs(&req.params, inputs_buf);
+                            evaluator
+                                .evaluate_with_inputs(bank, plan.netlist(), inputs)
+                                .map(|r| r.posterior)
+                        })
+                        .collect();
+                    (results, hw)
+                }
+                Err(e) => {
+                    let msg = e.to_string();
+                    let results = batch
+                        .requests
+                        .iter()
+                        .map(|_| Err(Error::Coordinator(msg.clone())))
+                        .collect();
+                    (results, 0.0)
+                }
+            }
         }
-        (ExecPlan::Pjrt { entry, chunk }, WorkerContext::Pjrt { runtime, rng, .. }) => {
-            execute_pjrt(runtime, rng, entry, *chunk, &batch)
+        (
+            ExecPlan::Pjrt { entry, chunk },
+            WorkerContext::Pjrt { runtime, rng, n_bits },
+        ) => {
+            let hw = crate::device::DeviceParams::BIT_PERIOD_NS * *n_bits as f64;
+            (execute_pjrt(runtime, rng, entry, *chunk, &plan, &batch), hw)
         }
         // Network batches route Native even on the PJRT backend (no AOT
         // artifact family exists for compiled netlists).
-        (ExecPlan::Native, WorkerContext::Pjrt { .. }) => batch
-            .requests
-            .iter()
-            .map(|_| {
-                Err(Error::Coordinator(
-                    "network decisions require the native backend".into(),
-                ))
-            })
-            .collect(),
+        (ExecPlan::Native, WorkerContext::Pjrt { n_bits, .. }) => {
+            let hw = crate::device::DeviceParams::BIT_PERIOD_NS * *n_bits as f64;
+            let results = batch
+                .requests
+                .iter()
+                .map(|_| {
+                    Err(Error::Coordinator(
+                        "network decisions require the native backend".into(),
+                    ))
+                })
+                .collect();
+            (results, hw)
+        }
         // Plan/context mismatch is a construction bug.
-        _ => batch
-            .requests
-            .iter()
-            .map(|_| Err(Error::Coordinator("backend/plan mismatch".into())))
-            .collect(),
+        _ => {
+            let results = batch
+                .requests
+                .iter()
+                .map(|_| Err(Error::Coordinator("backend/plan mismatch".into())))
+                .collect();
+            (results, 0.0)
+        }
     };
 
     for (req, result) in batch.requests.into_iter().zip(posteriors) {
@@ -426,22 +484,14 @@ fn execute_batch(ctx: &mut WorkerContext, batch: Batch, router: &Router, metrics
                 Err(Error::Deadline(req.deadline.unwrap()))
             }
             Ok(posterior) => {
-                metrics.on_complete(latency, hardware_ns, req.kind.tag());
-                // Network exacts cost a 2^n enumeration: memoize it in
-                // the engine's query cache instead of paying per reply.
-                let exact = match (&req.kind, &mut *ctx) {
-                    (
-                        DecisionKind::Network { net, query, evidence },
-                        WorkerContext::Native { network, .. },
-                    ) => network
-                        .exact_for(net, query, evidence)
-                        .unwrap_or_else(|| req.kind.exact()),
-                    _ => req.kind.exact(),
-                };
+                metrics.on_complete(latency, hardware_ns, plan.tag());
+                metrics.on_plan_complete(plan.id(), latency);
                 Ok(Decision {
                     id: req.id,
                     posterior,
-                    exact,
+                    // Closed form per params; Network plans carry the
+                    // value enumerated once at prepare time.
+                    exact: plan.exact(&req.params),
                     latency,
                     hardware_ns,
                     batch_size,
@@ -456,60 +506,6 @@ fn execute_batch(ctx: &mut WorkerContext, batch: Batch, router: &Router, metrics
     }
 }
 
-/// Run a whole native batch through the word-parallel batched engines:
-/// one grouped SNE encode plus one packed AND/MUX/CORDIV sweep for all N
-/// member decisions (bit-identical to looping the single-decision
-/// operators, ~2×+ faster at batch 32 — measured in
-/// `benches/coordinator.rs`). Network batches evaluate word-parallel
-/// through the worker's [`NetworkEngine`] (reusable scratch plus a
-/// compiled-netlist cache, so repeated queries on one shared
-/// `Arc<BayesNet>` compile once). The batcher groups by class, so a
-/// batch is always homogeneous; the per-request arm also doubles as a
-/// defensive fallback for mixed batches.
-fn execute_native(
-    bank: &mut SneBank,
-    inference: &mut BatchedInference,
-    fusion: &mut BatchedFusion,
-    network: &mut NetworkEngine,
-    batch: &Batch,
-) -> Vec<Result<f64>> {
-    if let Some(queries) = batch.inference_queries() {
-        inference
-            .infer_batch(bank, &queries)
-            .into_iter()
-            .map(|r| r.map(|p| p.posterior))
-            .collect()
-    } else if let Some(rows) = batch.fusion_rows() {
-        fusion.fuse_batch(bank, &rows)
-    } else {
-        batch
-            .requests
-            .iter()
-            .map(|req| match &req.kind {
-                DecisionKind::Inference { prior, likelihood, likelihood_not } => {
-                    let q = InferenceQuery {
-                        prior: *prior,
-                        likelihood: *likelihood,
-                        likelihood_not: *likelihood_not,
-                    };
-                    inference
-                        .infer_batch(bank, &[q])
-                        .pop()
-                        .expect("one result per query")
-                        .map(|p| p.posterior)
-                }
-                DecisionKind::Fusion { posteriors } => fusion
-                    .fuse_batch(bank, &[posteriors.as_slice()])
-                    .pop()
-                    .expect("one result per row"),
-                DecisionKind::Network { net, query, evidence } => {
-                    network.decide(bank, net, query, evidence)
-                }
-            })
-            .collect()
-    }
-}
-
 /// Run a batch through a PJRT entrypoint in `chunk`-sized slices, padding
 /// the tail with zeros (padded rows are discarded).
 fn execute_pjrt(
@@ -517,41 +513,44 @@ fn execute_pjrt(
     rng: &mut Rng,
     entry: &str,
     chunk: usize,
+    plan: &PreparedPlan,
     batch: &Batch,
 ) -> Vec<Result<f64>> {
+    // Row width from the plan (3 for inference, M for fusion); Network
+    // never reaches here (the router plans those batches as Native).
+    let (width, is_inference) = match plan.spec() {
+        PlanSpec::Inference => (3, true),
+        PlanSpec::Fusion { modalities } => (*modalities, false),
+        PlanSpec::Network { .. } => {
+            return batch
+                .requests
+                .iter()
+                .map(|_| {
+                    Err(Error::Coordinator(
+                        "network decisions require the native backend".into(),
+                    ))
+                })
+                .collect()
+        }
+    };
     let mut out = Vec::with_capacity(batch.len());
     for slice in batch.requests.chunks(chunk) {
-        // Row width from the kind (3 for inference, M for fusion).
-        let (width, is_inference) = match &slice[0].kind {
-            DecisionKind::Inference { .. } => (3, true),
-            DecisionKind::Fusion { posteriors } => (posteriors.len(), false),
-            // Unreachable in practice: the router plans Network batches
-            // as Native. Defensive for exhaustiveness.
-            DecisionKind::Network { .. } => {
-                for _ in 0..slice.len() {
-                    out.push(Err(Error::Coordinator(
-                        "network decisions require the native backend".into(),
-                    )));
-                }
-                continue;
-            }
-        };
         let mut probs = vec![0f32; chunk * width];
         for (i, req) in slice.iter().enumerate() {
-            match &req.kind {
-                DecisionKind::Inference { prior, likelihood, likelihood_not } => {
+            match &req.params {
+                DecisionParams::Inference { prior, likelihood, likelihood_not } => {
                     probs[i * width] = *prior as f32;
                     probs[i * width + 1] = *likelihood as f32;
                     probs[i * width + 2] = *likelihood_not as f32;
                 }
-                DecisionKind::Fusion { posteriors } => {
+                DecisionParams::Fusion { posteriors } => {
                     for (j, &p) in posteriors.iter().enumerate() {
                         probs[i * width + j] = p as f32;
                     }
                 }
-                // Cannot appear in a slice whose head is not Network
-                // (the batcher never mixes classes); leave the row zero.
-                DecisionKind::Network { .. } => {}
+                // Cannot appear under an Inference/Fusion plan (params
+                // are validated at submit); leave the row zero.
+                DecisionParams::Network => {}
             }
         }
         let result = if is_inference {
@@ -594,6 +593,10 @@ mod tests {
         DecisionKind::Inference { prior: 0.57, likelihood: 0.77, likelihood_not: 0.655 }
     }
 
+    fn inference_params() -> DecisionParams {
+        DecisionParams::Inference { prior: 0.57, likelihood: 0.77, likelihood_not: 0.655 }
+    }
+
     #[test]
     fn serves_single_decision() {
         let coord = Coordinator::start(&config(1, 4)).unwrap();
@@ -601,6 +604,93 @@ mod tests {
         assert!((d.exact - 0.609).abs() < 0.005);
         assert!((d.posterior - d.exact).abs() < 0.25); // 100-bit noise
         assert!((d.hardware_ns - 400_000.0).abs() < 1e-6);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn serves_prepared_plan_decisions() {
+        let coord = Coordinator::start(&config(1, 4)).unwrap();
+        let h = coord.handle();
+        let plan = h.prepare(PlanSpec::Inference).unwrap();
+        let d = plan.decide(inference_params()).unwrap();
+        assert!((d.exact - 0.609).abs() < 0.005);
+        assert!((d.posterior - d.exact).abs() < 0.25);
+        // Per-plan latency counters advance.
+        let snap = h.metrics().snapshot();
+        assert_eq!(snap.plan_latency(plan.plan().id()).unwrap().completed, 1);
+        assert_eq!(snap.plan_misses, 1);
+        // Re-preparing the same spec hits the cache.
+        let again = h.prepare(PlanSpec::Inference).unwrap();
+        assert!(Arc::ptr_eq(again.plan(), plan.plan()));
+        assert_eq!(h.metrics().snapshot().plan_hits, 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn prepared_plan_policy_bits_override_stream_length() {
+        let coord = Coordinator::start(&config(1, 4)).unwrap();
+        let h = coord.handle();
+        let plan = h
+            .prepare(PlanSpec::Inference)
+            .unwrap()
+            .with_policy(Policy { deadline: None, bits: Some(1000) });
+        let d = plan.decide(inference_params()).unwrap();
+        // 1000 bits × 4 µs/bit = 4 ms of virtual hardware time.
+        assert!((d.hardware_ns - 4_000_000.0).abs() < 1e-6);
+        // Longer streams, tighter posterior.
+        assert!((d.posterior - d.exact).abs() < 0.1);
+        // Out-of-range overrides are rejected at submission (0, and
+        // anything past the cap that would size worker buffers).
+        for bits in [0usize, MAX_POLICY_BITS + 1, usize::MAX] {
+            let bad = h
+                .prepare(PlanSpec::Inference)
+                .unwrap()
+                .with_policy(Policy { deadline: None, bits: Some(bits) });
+            let err = bad.decide(inference_params()).unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "bits={bits}: got {err}");
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn decide_batch_and_stream_answer_in_order() {
+        let coord = Coordinator::start(&config(2, 8)).unwrap();
+        let h = coord.handle();
+        let plan = h.prepare(PlanSpec::Fusion { modalities: 2 }).unwrap();
+        let params: Vec<DecisionParams> = (0..16)
+            .map(|i| DecisionParams::Fusion {
+                posteriors: vec![0.5 + 0.02 * i as f64, 0.8 - 0.01 * i as f64],
+            })
+            .collect();
+        let decisions = plan.decide_batch(&params);
+        assert_eq!(decisions.len(), 16);
+        let ids: Vec<u64> = decisions.iter().map(|d| d.as_ref().unwrap().id).collect();
+        assert!(ids.windows(2).all(|w| w[0] < w[1]), "answers out of order: {ids:?}");
+
+        let mut stream = plan.stream();
+        for p in &params {
+            stream.push(p.clone()).unwrap();
+        }
+        assert_eq!(stream.pending(), 16);
+        let drained = stream.drain();
+        assert_eq!(drained.len(), 16);
+        assert!(drained.iter().all(|d| d.is_ok()));
+        assert_eq!(stream.pending(), 0);
+        assert!(stream.next_decision().is_none());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn mismatched_params_are_rejected_at_submit() {
+        let coord = Coordinator::start(&config(1, 4)).unwrap();
+        let h = coord.handle();
+        let plan = h.prepare(PlanSpec::Fusion { modalities: 2 }).unwrap();
+        let err = plan
+            .submit(DecisionParams::Fusion { posteriors: vec![0.8, 0.7, 0.6] })
+            .unwrap_err();
+        assert!(err.to_string().contains("expects 2 modalities"), "{err}");
+        assert!(plan.submit(inference_params()).is_err());
+        assert!(h.metrics().snapshot().rejected >= 2);
         coord.shutdown();
     }
 
@@ -648,6 +738,10 @@ mod tests {
         let snap = h.metrics().snapshot();
         assert_eq!(snap.completed, 64);
         assert!(snap.mean_batch_size() > 1.0, "batching never engaged");
+        // The legacy shim shares plans through the cache: one miss per
+        // distinct spec, hits for every repeat.
+        assert_eq!(snap.plan_misses, 2);
+        assert_eq!(snap.plan_hits, 62);
         coord.shutdown();
     }
 
@@ -718,6 +812,13 @@ mod tests {
             .unwrap();
         let err = p.wait_timeout(Duration::from_secs(5)).unwrap_err();
         assert!(matches!(err, Error::Deadline(_)));
+        // The same policy through the plan API.
+        let plan = h
+            .prepare(PlanSpec::Inference)
+            .unwrap()
+            .with_policy(Policy { deadline: Some(Duration::from_nanos(1)), bits: None });
+        let err = plan.decide(inference_params()).unwrap_err();
+        assert!(matches!(err, Error::Deadline(_)));
         coord.shutdown();
     }
 
@@ -732,9 +833,16 @@ mod tests {
         cfg.artifacts_dir = dir.to_path_buf();
         let coord = Coordinator::start(&cfg).unwrap();
         let h = coord.handle();
-        let pending: Vec<_> = (0..16)
+        // Both the legacy shim and the prepared-plan path.
+        let plan = h.prepare(PlanSpec::Fusion { modalities: 2 }).unwrap();
+        let mut pending: Vec<_> = (0..8)
             .map(|_| h.submit(DecisionKind::Fusion { posteriors: vec![0.8, 0.7] }).unwrap())
             .collect();
+        pending.extend(
+            (0..8).map(|_| {
+                plan.submit(DecisionParams::Fusion { posteriors: vec![0.8, 0.7] }).unwrap()
+            }),
+        );
         for p in pending {
             let d = p.wait_timeout(Duration::from_secs(10)).unwrap();
             // 256-bit stochastic fusion: loose envelope around 0.903.

@@ -23,13 +23,16 @@
 //! * [`network`] — the Bayesian-network compiler: declarative DAG specs
 //!   ([`network::BayesNet`], on-disk TOML format), validation, lowering
 //!   to MUX/AND/CORDIV netlists generalising Fig. S8, a word-parallel
-//!   evaluator, and a full-joint exact baseline.
+//!   evaluator, a full-joint exact baseline, and [`network::lower`] —
+//!   the fixed inference/fusion operators as netlists, so every decision
+//!   kind shares one execution path.
 //! * [`scene`] — synthetic road-scene workloads standing in for the FLIR
 //!   RGB-thermal dataset and YOLO-class detectors.
 //! * [`runtime`] — PJRT client that loads the AOT-compiled JAX/Pallas
 //!   artifacts (HLO text) and executes them from the Rust hot path.
-//! * [`coordinator`] — the serving layer: frame router, dynamic batcher,
-//!   operator pool, SNE bank manager, metrics.
+//! * [`coordinator`] — the plan-centric serving layer (prepare-once /
+//!   decide-many): [`coordinator::PlanCache`], dynamic batcher grouped
+//!   by plan id, worker pool, per-plan policies and metrics.
 //! * [`figures`] — one harness per paper figure/table (the experiment
 //!   index of `DESIGN.md` §4).
 //!

@@ -30,11 +30,12 @@ macro_rules! bail {
     };
 }
 
-use bayes_mem::bayes::{FusionOperator, InferenceOperator};
 use bayes_mem::config::{AppConfig, Backend};
-use bayes_mem::coordinator::{Coordinator, DecisionKind};
+use bayes_mem::coordinator::{Coordinator, DecisionParams, PlanSpec};
 use bayes_mem::figures;
-use bayes_mem::network::{compile_query, exact_posterior_by_name, BayesNet, NetlistEvaluator};
+use bayes_mem::network::{
+    compile_query, exact_posterior_by_name, lower, BayesNet, NetlistEvaluator,
+};
 use bayes_mem::runtime::Runtime;
 use bayes_mem::scene::{fusion_input, VideoWorkload};
 use bayes_mem::stochastic::SneBank;
@@ -183,17 +184,25 @@ fn cmd_infer(flags: &Flags) -> CliResult<()> {
     let mut cfg = AppConfig::default();
     cfg.sne.n_bits = bits;
     let mut bank = SneBank::new(cfg.sne, flags.u64_or("seed", 42))?;
-    let r = InferenceOperator::default().try_infer(&mut bank, prior, lik, lik_not)?;
+    // The unified serving path: the Eq.-1 chain lowered to a netlist
+    // once, parameters bound per decision (bit-identical to the
+    // dedicated inference operator).
+    let netlist = lower::inference_netlist();
+    let r = NetlistEvaluator::new().evaluate_with_inputs(
+        &mut bank,
+        &netlist,
+        &[prior, lik, lik_not],
+    )?;
+    let exact = bayes_mem::bayes::exact_posterior(prior, lik, lik_not);
+    let exact_marginal = bayes_mem::bayes::exact_marginal(prior, lik, lik_not);
     println!(
         "P(A)={prior:.3} P(B|A)={lik:.3} P(B|¬A)={lik_not:.3}\n\
-         posterior P(A|B) = {:.4}  (exact {:.4}, |err| {:.4})\n\
-         marginal  P(B)   = {:.4}  (exact {:.4})\n\
+         posterior P(A|B) = {:.4}  (exact {exact:.4}, |err| {:.4})\n\
+         marginal  P(B)   = {:.4}  (exact {exact_marginal:.4})\n\
          hardware: {:.3} ms, {:.2} nJ",
         r.posterior,
-        r.exact,
-        r.abs_error(),
+        (r.posterior - exact).abs(),
         r.marginal,
-        r.exact_marginal,
         bits as f64 * 0.004,
         bank.ledger().energy_nj,
     );
@@ -207,13 +216,17 @@ fn cmd_fuse(flags: &Flags) -> CliResult<()> {
     let mut cfg = AppConfig::default();
     cfg.sne.n_bits = bits;
     let mut bank = SneBank::new(cfg.sne, flags.u64_or("seed", 42))?;
-    let r = FusionOperator::default().fuse(&mut bank, &ps)?;
+    // Same unified path: the M-modal fusion tree compiled once, inputs
+    // `[p₁ … p_m, ½]` bound per decision.
+    let netlist = lower::fusion_netlist(ps.len())?;
+    let mut inputs = ps.clone();
+    inputs.push(0.5);
+    let r = NetlistEvaluator::new().evaluate_with_inputs(&mut bank, &netlist, &inputs)?;
+    let exact = bayes_mem::bayes::exact_fusion_m(&ps);
     println!(
-        "inputs {:?}\nfused = {:.4}  (exact {:.4}, |err| {:.4})\nhardware: {:.3} ms, {:.2} nJ",
-        r.inputs,
-        r.fused,
-        r.exact,
-        r.abs_error(),
+        "inputs {ps:?}\nfused = {:.4}  (exact {exact:.4}, |err| {:.4})\nhardware: {:.3} ms, {:.2} nJ",
+        r.posterior,
+        (r.posterior - exact).abs(),
         bits as f64 * 0.004,
         bank.ledger().energy_nj,
     );
@@ -300,6 +313,10 @@ fn cmd_serve(flags: &Flags) -> CliResult<()> {
     );
     let coord = Coordinator::start(&cfg)?;
     let handle = coord.handle();
+    // Prepare once (validation + compilation amortised across the run),
+    // then submit per-decision params against the shared plans.
+    let inference_plan = handle.prepare(PlanSpec::Inference)?;
+    let fusion_plan = handle.prepare(PlanSpec::Fusion { modalities: 2 })?;
     let interval = Duration::from_secs_f64(1.0 / rate_fps);
     let started = Instant::now();
     let mut pending = Vec::with_capacity(requests);
@@ -311,12 +328,16 @@ fn cmd_serve(flags: &Flags) -> CliResult<()> {
         if next > now {
             std::thread::sleep(next - now);
         }
-        let kind = if i % 2 == 0 {
-            DecisionKind::Inference { prior: 0.57, likelihood: 0.77, likelihood_not: 0.655 }
+        let submitted = if i % 2 == 0 {
+            inference_plan.submit(DecisionParams::Inference {
+                prior: 0.57,
+                likelihood: 0.77,
+                likelihood_not: 0.655,
+            })
         } else {
-            DecisionKind::Fusion { posteriors: vec![0.8, 0.7] }
+            fusion_plan.submit(DecisionParams::Fusion { posteriors: vec![0.8, 0.7] })
         };
-        match handle.submit(kind) {
+        match submitted {
             Ok(p) => pending.push(p),
             Err(_) => {} // shed; counted in metrics
         }
@@ -344,6 +365,7 @@ fn cmd_parse_scene(flags: &Flags) -> CliResult<()> {
     let frames = flags.usize_or("frames", 200);
     let coord = Coordinator::start(&cfg)?;
     let handle = coord.handle();
+    let fusion_plan = handle.prepare(PlanSpec::Fusion { modalities: 2 })?;
     let mut wl = VideoWorkload::new(cfg.seed);
     let started = Instant::now();
     let mut obstacles = 0usize;
@@ -356,10 +378,10 @@ fn cmd_parse_scene(flags: &Flags) -> CliResult<()> {
             .confidences
             .iter()
             .map(|&(p_rgb, p_th)| {
-                let kind = DecisionKind::Fusion {
+                let params = DecisionParams::Fusion {
                     posteriors: vec![fusion_input(p_rgb), fusion_input(p_th)],
                 };
-                (p_rgb, p_th, handle.submit(kind))
+                (p_rgb, p_th, fusion_plan.submit(params))
             })
             .collect();
         for (p_rgb, p_th, submitted) in pending {

@@ -44,11 +44,32 @@ impl NetlistEvaluator {
     /// the order repeated single `encode` calls would, so results are
     /// bit-identical to the hand-wired circuits it replaces.
     pub fn evaluate(&mut self, bank: &mut SneBank, netlist: &Netlist) -> Result<NetworkPosterior> {
+        self.evaluate_with_inputs(bank, netlist, netlist.inputs())
+    }
+
+    /// [`Self::evaluate`] with the input probabilities overridden —
+    /// the prepare-once/decide-many hot path: a prepared plan reuses one
+    /// compiled netlist structure while each decision binds its own
+    /// parameters (the serving layer's [`crate::coordinator::PlanHandle`]
+    /// flows through here). `inputs` must match the netlist's input count.
+    pub fn evaluate_with_inputs(
+        &mut self,
+        bank: &mut SneBank,
+        netlist: &Netlist,
+        inputs: &[f64],
+    ) -> Result<NetworkPosterior> {
+        if inputs.len() != netlist.inputs().len() {
+            return Err(crate::Error::Network(format!(
+                "netlist expects {} input streams, got {}",
+                netlist.inputs().len(),
+                inputs.len()
+            )));
+        }
         let n_bits = bank.n_bits();
         let w = n_bits.div_ceil(64);
         self.scratch.resize(netlist.n_slots() * w, 0);
-        let n_in = netlist.inputs().len();
-        bank.encode_group_into(netlist.inputs(), &mut self.scratch[..n_in * w])?;
+        let n_in = inputs.len();
+        bank.encode_group_into(inputs, &mut self.scratch[..n_in * w])?;
         for op in netlist.ops() {
             match *op {
                 GateOp::Mux { dst, lo, hi, sel } => {

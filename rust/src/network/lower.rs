@@ -1,0 +1,242 @@
+//! Fixed-operator → netlist lowering: the Eq.-1 inference chain and the
+//! M-modal fusion tree expressed as compiled [`Netlist`]s, so the serving
+//! layer executes **one** word-parallel dataflow for every decision kind
+//! instead of three parallel code paths.
+//!
+//! Bit-reproducibility contract (pinned by tests here and in
+//! `tests/plan_api.rs`): each lowered netlist draws its SNE input streams
+//! in exactly the order the corresponding `bayes` engine does —
+//! `[prior, likelihood, likelihood_not]` for inference (the
+//! [`crate::bayes::BatchedInference`] / [`crate::bayes::InferenceOperator`]
+//! order), `[p₁ … p_m, ½]` for fusion (the
+//! [`crate::bayes::BatchedFusion`] / [`crate::bayes::FusionOperator`]
+//! order) — and its num/den CORDIV taps compute the same Boolean words.
+//! Evaluating a lowered netlist on a bank is therefore **bit-identical**
+//! to the engine it replaces, decision for decision.
+//!
+//! Inference lowers through the ordinary DAG compiler
+//! ([`super::compile_query`]): the Eq.-1 circuit *is* the 2-node chain
+//! `A → B` queried as `P(A | B=1)`, with B's CPT rows declared in the
+//! `(B|A=1), (B|A=0)` order that reproduces the hand-wired encode order.
+//! Fusion is the M-leaf naïve-Bayes DAG (`y → x₁ … x_m`, uniform root,
+//! all leaves observed true) algebraically collapsed: because
+//! `P(xᵢ|y=0) = 1 − P(xᵢ|y=1)`, each leaf's two CPT-row streams share
+//! one SNE through a complement gate — the paper's Fig. 4 wiring — which
+//! keeps the encode order (and the hardware cost) of the original fusion
+//! operator.
+
+use crate::{Error, Result};
+
+use super::compile::{compile_query, GateOp, Netlist};
+use super::spec::BayesNet;
+
+/// Input-stream layout of [`inference_netlist`]:
+/// `[prior, likelihood, likelihood_not]`.
+pub const INFERENCE_INPUTS: usize = 3;
+
+/// The Eq.-1 two-node chain `A → B` as a [`BayesNet`], with B's CPT rows
+/// declared `(B|A=1), (B|A=0)` so the compiler's SNE encode order is
+/// `[prior, likelihood, likelihood_not]` — the inference operators' order.
+pub fn inference_net(prior: f64, likelihood: f64, likelihood_not: f64) -> BayesNet {
+    let mut net = BayesNet::named("eq1");
+    net.add_root("a", prior).expect("fresh root");
+    net.add_node_rows("b", &["a"], &[(1, likelihood), (0, likelihood_not)])
+        .expect("chain child");
+    net
+}
+
+/// The Eq.-1 inference circuit `P(A | B=1)` as a compiled netlist with
+/// placeholder input probabilities. Bind real parameters per decision via
+/// [`super::NetlistEvaluator::evaluate_with_inputs`] in
+/// [`INFERENCE_INPUTS`] order.
+pub fn inference_netlist() -> Netlist {
+    compile_query(&inference_net(0.5, 0.5, 0.5), "a", &[("b", true)])
+        .expect("the Eq.-1 chain always compiles")
+}
+
+/// The M-modal fusion circuit (Eq. 5 with normalization) as a netlist
+/// with placeholder input probabilities: slots `0..m` are the modality
+/// posteriors, slot `m` is the ½ normalization select. Bind per decision
+/// as `[p₁ … p_m, 0.5]`.
+///
+/// Gate-level it is the collapsed M-leaf naïve-Bayes DAG:
+/// `num = ∏pᵢ ∧ ½`, `den = MUX(∏(1−pᵢ), ∏pᵢ; ½)` — the numerator is a
+/// bitwise subset of the denominator, as CORDIV requires.
+pub fn fusion_netlist(m: usize) -> Result<Netlist> {
+    if m < 2 {
+        return Err(Error::Config("fusion needs >= 2 modalities".into()));
+    }
+    let half = m; // slot of the ½ normalization select
+    let mut n_slots = m + 1;
+    let mut ops: Vec<GateOp> = Vec::new();
+    // ∏pᵢ over the shared modality streams.
+    let mut prod = 0usize;
+    for j in 1..m {
+        ops.push(GateOp::And { dst: n_slots, a: prod, b: j });
+        prod = n_slots;
+        n_slots += 1;
+    }
+    // ∏(1−pᵢ) over the complements of the *same* streams (Fig. 4's
+    // single-SNE-per-modality wiring; the naïve-Bayes leaves collapsed).
+    let mut nots = Vec::with_capacity(m);
+    for j in 0..m {
+        ops.push(GateOp::Not { dst: n_slots, a: j });
+        nots.push(n_slots);
+        n_slots += 1;
+    }
+    let mut cprod = nots[0];
+    for &nj in &nots[1..] {
+        ops.push(GateOp::And { dst: n_slots, a: cprod, b: nj });
+        cprod = n_slots;
+        n_slots += 1;
+    }
+    // Normalization MUX is the denominator; num = ∏pᵢ ∧ ½ ⊆ den.
+    let den = n_slots;
+    n_slots += 1;
+    ops.push(GateOp::Mux { dst: den, lo: cprod, hi: prod, sel: half });
+    let num = n_slots;
+    n_slots += 1;
+    ops.push(GateOp::And { dst: num, a: prod, b: half });
+    Ok(Netlist {
+        inputs: vec![0.5; m + 1],
+        ops,
+        n_slots,
+        num,
+        den,
+        node_slot: Vec::new(), // operator netlists carry no DAG node map
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::NetlistEvaluator;
+    use super::*;
+    use crate::bayes::{
+        BatchedFusion, BatchedInference, FusionOperator, InferenceOperator, InferenceQuery,
+    };
+    use crate::stochastic::{SneBank, SneConfig};
+
+    fn bank(n_bits: usize, seed: u64) -> SneBank {
+        SneBank::new(SneConfig { n_bits, ..Default::default() }, seed).unwrap()
+    }
+
+    #[test]
+    fn inference_netlist_encodes_in_operator_order() {
+        let nl = inference_netlist();
+        assert_eq!(nl.inputs().len(), INFERENCE_INPUTS);
+        // One MUX (the chain child) + the numerator AND.
+        assert_eq!(nl.ops().len(), 2);
+    }
+
+    #[test]
+    fn lowered_inference_is_bit_identical_to_both_engines() {
+        let nl = inference_netlist();
+        let queries: Vec<InferenceQuery> = (0..16)
+            .map(|i| {
+                let x = (i as f64 + 0.5) / 16.0;
+                InferenceQuery {
+                    prior: 0.2 + 0.6 * x,
+                    likelihood: 0.9 - 0.5 * x,
+                    likelihood_not: 0.2 + 0.4 * x,
+                }
+            })
+            .collect();
+        for n_bits in [100usize, 130] {
+            // vs the single-decision operator, decision by decision.
+            let mut b_net = bank(n_bits, 77);
+            let mut b_op = bank(n_bits, 77);
+            let mut eval = NetlistEvaluator::new();
+            let op = InferenceOperator::default();
+            for q in &queries {
+                let via_netlist = eval
+                    .evaluate_with_inputs(
+                        &mut b_net,
+                        &nl,
+                        &[q.prior, q.likelihood, q.likelihood_not],
+                    )
+                    .unwrap();
+                let single =
+                    op.try_infer(&mut b_op, q.prior, q.likelihood, q.likelihood_not).unwrap();
+                assert_eq!(via_netlist.posterior, single.posterior, "{q:?} @ {n_bits}");
+                assert_eq!(via_netlist.marginal, single.marginal, "{q:?} @ {n_bits}");
+            }
+            // vs the batched engine over the whole stream.
+            let mut b_net = bank(n_bits, 78);
+            let mut b_batch = bank(n_bits, 78);
+            let mut eval = NetlistEvaluator::new();
+            let batched = BatchedInference::new().infer_batch(&mut b_batch, &queries);
+            for (q, r) in queries.iter().zip(batched) {
+                let via_netlist = eval
+                    .evaluate_with_inputs(
+                        &mut b_net,
+                        &nl,
+                        &[q.prior, q.likelihood, q.likelihood_not],
+                    )
+                    .unwrap();
+                assert_eq!(via_netlist.posterior, r.unwrap().posterior);
+            }
+            assert_eq!(b_net.ledger().pulses, b_batch.ledger().pulses);
+        }
+    }
+
+    #[test]
+    fn lowered_fusion_is_bit_identical_to_both_engines() {
+        for (m, n_bits, seed) in [(2usize, 100usize, 9u64), (3, 100, 10), (4, 250, 11)] {
+            let nl = fusion_netlist(m).unwrap();
+            let rows: Vec<Vec<f64>> = (0..12)
+                .map(|i| (0..m).map(|j| 0.15 + 0.05 * (i + 3 * j) as f64 % 0.8).collect())
+                .collect();
+            let row_refs: Vec<&[f64]> = rows.iter().map(Vec::as_slice).collect();
+            let mut b_net = bank(n_bits, seed);
+            let mut b_op = bank(n_bits, seed);
+            let mut eval = NetlistEvaluator::new();
+            let op = FusionOperator::default();
+            let mut inputs = Vec::new();
+            for row in &rows {
+                inputs.clear();
+                inputs.extend_from_slice(row);
+                inputs.push(0.5);
+                let via_netlist =
+                    eval.evaluate_with_inputs(&mut b_net, &nl, &inputs).unwrap();
+                let single = op.fuse(&mut b_op, row).unwrap();
+                assert_eq!(via_netlist.posterior, single.fused, "m={m} row {row:?}");
+            }
+            let mut b_net = bank(n_bits, seed ^ 1);
+            let mut b_batch = bank(n_bits, seed ^ 1);
+            let mut eval = NetlistEvaluator::new();
+            let batched = BatchedFusion::new().fuse_batch(&mut b_batch, &row_refs);
+            for (row, r) in rows.iter().zip(batched) {
+                inputs.clear();
+                inputs.extend_from_slice(row);
+                inputs.push(0.5);
+                let via_netlist =
+                    eval.evaluate_with_inputs(&mut b_net, &nl, &inputs).unwrap();
+                assert_eq!(via_netlist.posterior, r.unwrap(), "m={m} row {row:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn lowered_netlists_converge_to_exact_bayes() {
+        let nl = inference_netlist();
+        let mut b = bank(100_000, 21);
+        let r = NetlistEvaluator::new()
+            .evaluate_with_inputs(&mut b, &nl, &[0.57, 0.77, 0.655])
+            .unwrap();
+        let exact = crate::bayes::exact_posterior(0.57, 0.77, 0.655);
+        assert!((r.posterior - exact).abs() < 0.01, "{} vs {exact}", r.posterior);
+        let nl = fusion_netlist(3).unwrap();
+        let r = NetlistEvaluator::new()
+            .evaluate_with_inputs(&mut b, &nl, &[0.8, 0.7, 0.6, 0.5])
+            .unwrap();
+        let exact = crate::bayes::exact_fusion_m(&[0.8, 0.7, 0.6]);
+        assert!((r.posterior - exact).abs() < 0.02, "{} vs {exact}", r.posterior);
+    }
+
+    #[test]
+    fn fusion_arity_is_validated() {
+        assert!(fusion_netlist(0).is_err());
+        assert!(fusion_netlist(1).is_err());
+        assert!(fusion_netlist(2).is_ok());
+    }
+}

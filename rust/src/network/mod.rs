@@ -11,7 +11,7 @@
 //! 1. **Spec** ([`BayesNet`]) — binary nodes, edges, CPT rows; built in
 //!    code or parsed from the TOML-subset on-disk format
 //!    (`specs/*.toml`).
-//! 2. **Validate** ([`validate`]) — acyclicity, CPT completeness,
+//! 2. **Validate** ([`validate()`]) — acyclicity, CPT completeness,
 //!    probability ranges, size caps; typed [`crate::Error::Network`]
 //!    diagnostics.
 //! 3. **Compile** ([`compile_query`]) — lower the DAG in topological
@@ -34,14 +34,22 @@
 //!    allocation), or bit-serially via the reference walk.
 //! 5. **Exact** ([`exact_posterior`]) — full-joint enumeration baseline
 //!    for ≤ [`MAX_NODES`]-node networks.
+//! 6. **Lower** ([`lower`]) — the paper's fixed operators (Eq.-1
+//!    inference, M-modal fusion) expressed as netlists on the same
+//!    substrate, bit-identical to the dedicated engines; this is what
+//!    lets the coordinator serve every decision kind through one path.
 //!
-//! The serving layer routes these through
-//! [`crate::coordinator::DecisionKind::Network`], and the CLI exposes
+//! The serving layer compiles these once per prepared plan
+//! ([`crate::coordinator::PlanSpec::Network`] via
+//! [`crate::coordinator::CoordinatorHandle::prepare`]; the legacy
+//! [`crate::coordinator::DecisionKind::Network`] shim lowers onto the
+//! same plans), and the CLI exposes
 //! `bayes-mem network --spec net.toml --query A --evidence B=1`.
 
 mod compile;
 mod eval;
 mod exact;
+pub mod lower;
 mod spec;
 mod validate;
 

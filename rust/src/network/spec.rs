@@ -171,7 +171,7 @@ impl BayesNet {
     }
 
     /// Full structural validation (acyclicity, CPT completeness,
-    /// probability ranges, size caps) — see [`super::validate`].
+    /// probability ranges, size caps) — see [`super::validate()`].
     pub fn validate(&self) -> Result<()> {
         validate::validate(self)
     }

@@ -6,7 +6,7 @@ use crate::{Error, Result};
 
 use super::spec::{BayesNet, NodeSpec};
 
-/// Node-count cap: the full-joint exact baseline ([`super::exact`])
+/// Node-count cap: the full-joint exact baseline ([`super::exact_posterior`])
 /// enumerates `2^n` assignments, so networks are kept enumerable.
 pub const MAX_NODES: usize = 20;
 

@@ -1,0 +1,353 @@
+//! Acceptance suite for the plan-centric serving API v2
+//! (prepare-once / decide-many):
+//!
+//! * decisions served through prepared plans are **bit-identical** to
+//!   the pre-redesign `bayes::batch` engines on shared seeds, for every
+//!   decision kind (the unified-netlist regression pin);
+//! * the legacy `DecisionKind` shim and the plan path agree decision for
+//!   decision;
+//! * the shared `PlanCache` behaves: concurrent `prepare` of one spec
+//!   yields one entry (hit/miss metrics asserted), eviction is LRU;
+//! * per-plan latency counters and the `Policy` knobs (deadline, bits)
+//!   are observable end to end.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use bayes_mem::bayes::{BatchedFusion, BatchedInference, InferenceQuery};
+use bayes_mem::config::AppConfig;
+use bayes_mem::coordinator::{
+    Coordinator, Decision, DecisionKind, DecisionParams, PlanSpec, Policy,
+};
+use bayes_mem::network::BayesNet;
+use bayes_mem::stochastic::SneBank;
+use bayes_mem::util::Rng;
+
+/// One worker so the worker-bank decision order equals submission order.
+fn single_worker_config(seed: u64) -> AppConfig {
+    let mut cfg = AppConfig::default();
+    cfg.seed = seed;
+    cfg.coordinator.workers = 1;
+    cfg
+}
+
+fn inference_params(n: usize, seed: u64) -> Vec<DecisionParams> {
+    let mut rng = Rng::seeded(seed);
+    (0..n)
+        .map(|_| DecisionParams::Inference {
+            prior: rng.range_f64(0.1, 0.9),
+            likelihood: rng.range_f64(0.5, 0.95),
+            likelihood_not: rng.range_f64(0.05, 0.5),
+        })
+        .collect()
+}
+
+fn fusion_params(n: usize, seed: u64) -> Vec<DecisionParams> {
+    let mut rng = Rng::seeded(seed);
+    (0..n)
+        .map(|_| DecisionParams::Fusion {
+            posteriors: vec![rng.range_f64(0.2, 0.95), rng.range_f64(0.2, 0.95)],
+        })
+        .collect()
+}
+
+fn serve_plan(cfg: &AppConfig, spec: PlanSpec, params: &[DecisionParams]) -> Vec<Decision> {
+    let coord = Coordinator::start(cfg).unwrap();
+    let plan = coord.handle().prepare(spec).unwrap();
+    let decisions = plan
+        .decide_batch(params)
+        .into_iter()
+        .map(|d| d.unwrap())
+        .collect();
+    coord.shutdown();
+    decisions
+}
+
+#[test]
+fn plan_served_inference_is_bit_identical_to_batched_engine() {
+    let params = inference_params(64, 21);
+    let cfg = single_worker_config(4242);
+    let served = serve_plan(&cfg, PlanSpec::Inference, &params);
+
+    // The lone worker's bank is seeded `config.seed ^ (0 << 32)`; replay
+    // the exact stream through the pre-redesign batched engine on an
+    // identically-seeded bank. Per-decision encode/finish order is
+    // independent of how the dynamic batcher sliced the stream.
+    let queries: Vec<InferenceQuery> = params
+        .iter()
+        .map(|p| match p {
+            DecisionParams::Inference { prior, likelihood, likelihood_not } => InferenceQuery {
+                prior: *prior,
+                likelihood: *likelihood,
+                likelihood_not: *likelihood_not,
+            },
+            _ => unreachable!(),
+        })
+        .collect();
+    let mut bank = SneBank::new(cfg.sne.clone(), cfg.seed).unwrap();
+    let batched = BatchedInference::new().infer_batch(&mut bank, &queries);
+    for (i, (d, r)) in served.iter().zip(&batched).enumerate() {
+        let r = r.as_ref().unwrap();
+        assert_eq!(
+            d.posterior, r.posterior,
+            "decision {i}: plan path diverged from BatchedInference"
+        );
+    }
+}
+
+#[test]
+fn plan_served_fusion_is_bit_identical_to_batched_engine() {
+    let params = fusion_params(48, 22);
+    let cfg = single_worker_config(31337);
+    let served = serve_plan(&cfg, PlanSpec::Fusion { modalities: 2 }, &params);
+
+    let rows: Vec<Vec<f64>> = params
+        .iter()
+        .map(|p| match p {
+            DecisionParams::Fusion { posteriors } => posteriors.clone(),
+            _ => unreachable!(),
+        })
+        .collect();
+    let row_refs: Vec<&[f64]> = rows.iter().map(Vec::as_slice).collect();
+    let mut bank = SneBank::new(cfg.sne.clone(), cfg.seed).unwrap();
+    let batched = BatchedFusion::new().fuse_batch(&mut bank, &row_refs);
+    for (i, (d, r)) in served.iter().zip(&batched).enumerate() {
+        assert_eq!(
+            d.posterior,
+            *r.as_ref().unwrap(),
+            "decision {i}: plan path diverged from BatchedFusion"
+        );
+    }
+}
+
+#[test]
+fn legacy_shim_and_plan_path_serve_identical_streams() {
+    // The same decision stream through (a) DecisionKind submission and
+    // (b) prepared-plan submission on identically-configured
+    // coordinators must be bit-identical.
+    let params = inference_params(32, 23);
+    let cfg = single_worker_config(777);
+    let via_plan = serve_plan(&cfg, PlanSpec::Inference, &params);
+
+    let coord = Coordinator::start(&cfg).unwrap();
+    let h = coord.handle();
+    let pending: Vec<_> = params
+        .iter()
+        .map(|p| {
+            let DecisionParams::Inference { prior, likelihood, likelihood_not } = *p else {
+                unreachable!()
+            };
+            h.submit(DecisionKind::Inference { prior, likelihood, likelihood_not }).unwrap()
+        })
+        .collect();
+    let via_shim: Vec<Decision> = pending
+        .into_iter()
+        .map(|p| p.wait_timeout(Duration::from_secs(30)).unwrap())
+        .collect();
+    coord.shutdown();
+
+    for (i, (a, b)) in via_plan.iter().zip(&via_shim).enumerate() {
+        assert_eq!(a.posterior, b.posterior, "decision {i} diverged across APIs");
+        assert_eq!(a.exact, b.exact);
+    }
+}
+
+fn diamond() -> Arc<BayesNet> {
+    let mut net = BayesNet::named("diamond");
+    net.add_root("a", 0.4).unwrap();
+    net.add_node("b", &["a"], &[0.2, 0.9]).unwrap();
+    net.add_node("c", &["a"], &[0.7, 0.1]).unwrap();
+    net.add_node("d", &["b", "c"], &[0.1, 0.5, 0.6, 0.95]).unwrap();
+    Arc::new(net)
+}
+
+fn diamond_spec() -> PlanSpec {
+    PlanSpec::Network {
+        net: diamond(),
+        query: "a".into(),
+        evidence: vec![("d".into(), true)],
+    }
+}
+
+#[test]
+fn prepared_network_plan_matches_direct_evaluation_stream() {
+    let cfg = single_worker_config(99);
+    let params = vec![DecisionParams::Network; 8];
+    let served = serve_plan(&cfg, diamond_spec(), &params);
+
+    // Direct netlist evaluation on an identically-seeded bank, decision
+    // after decision — the worker must behave exactly like this loop.
+    let net = diamond();
+    let nl = bayes_mem::network::compile_query(&net, "a", &[("d", true)]).unwrap();
+    let mut bank = SneBank::new(cfg.sne.clone(), cfg.seed).unwrap();
+    let mut eval = bayes_mem::network::NetlistEvaluator::new();
+    for (i, d) in served.iter().enumerate() {
+        let direct = eval.evaluate(&mut bank, &nl).unwrap();
+        assert_eq!(d.posterior, direct.posterior, "decision {i} diverged");
+    }
+    // The exact annotation is the prepare-time enumeration.
+    let (exact, _) =
+        bayes_mem::network::exact_posterior_by_name(&net, "a", &[("d", true)]).unwrap();
+    for d in &served {
+        assert_eq!(d.exact, exact);
+    }
+}
+
+#[test]
+fn concurrent_prepare_of_one_spec_yields_one_cache_entry() {
+    let coord = Coordinator::start(&single_worker_config(1)).unwrap();
+    let h = coord.handle();
+    const THREADS: usize = 8;
+    let plans: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|_| {
+                let h = h.clone();
+                // Each thread builds its own Arc<BayesNet>: cache
+                // identity must be structural, not pointer-based.
+                s.spawn(move || h.prepare(diamond_spec()).unwrap())
+            })
+            .collect();
+        handles.into_iter().map(|t| t.join().unwrap()).collect()
+    });
+    // One entry, one compile; everyone shares the same Arc.
+    assert_eq!(h.plan_cache().len(), 1);
+    let first = plans[0].plan();
+    assert!(plans.iter().all(|p| Arc::ptr_eq(p.plan(), first)));
+    let snap = h.metrics().snapshot();
+    assert_eq!(snap.plan_misses, 1, "exactly one compile");
+    assert_eq!(snap.plan_hits, (THREADS - 1) as u64);
+    coord.shutdown();
+}
+
+#[test]
+fn plan_cache_eviction_is_lru_under_concurrency() {
+    let mut cfg = single_worker_config(2);
+    cfg.coordinator.plan_cache_capacity = 2;
+    let coord = Coordinator::start(&cfg).unwrap();
+    let h = coord.handle();
+    // Concurrent prepares of distinct specs never exceed capacity and
+    // account every call as a hit or a miss.
+    std::thread::scope(|s| {
+        for m in 2..6usize {
+            let h = h.clone();
+            s.spawn(move || {
+                for _ in 0..8 {
+                    h.prepare(PlanSpec::Fusion { modalities: m }).unwrap();
+                }
+            });
+        }
+    });
+    assert!(h.plan_cache().len() <= 2);
+    let snap = h.metrics().snapshot();
+    assert_eq!(snap.plan_hits + snap.plan_misses, 32);
+    assert!(snap.plan_misses >= 4, "four distinct specs must each compile at least once");
+
+    // Deterministic LRU order: touch A, then C evicts B.
+    let a = PlanSpec::Fusion { modalities: 12 };
+    let b = PlanSpec::Fusion { modalities: 13 };
+    let c = PlanSpec::Fusion { modalities: 14 };
+    h.prepare(a.clone()).unwrap();
+    h.prepare(b.clone()).unwrap();
+    h.prepare(a.clone()).unwrap();
+    h.prepare(c.clone()).unwrap();
+    assert!(h.plan_cache().contains(&a));
+    assert!(!h.plan_cache().contains(&b));
+    assert!(h.plan_cache().contains(&c));
+    coord.shutdown();
+}
+
+#[test]
+fn per_plan_latency_counters_partition_completions() {
+    let coord = Coordinator::start(&single_worker_config(3)).unwrap();
+    let h = coord.handle();
+    let inf = h.prepare(PlanSpec::Inference).unwrap();
+    let fus = h.prepare(PlanSpec::Fusion { modalities: 2 }).unwrap();
+    for d in inf.decide_batch(&inference_params(6, 5)) {
+        d.unwrap();
+    }
+    for d in fus.decide_batch(&fusion_params(4, 6)) {
+        d.unwrap();
+    }
+    let snap = h.metrics().snapshot();
+    assert_eq!(snap.plan_latency(inf.plan().id()).unwrap().completed, 6);
+    assert_eq!(snap.plan_latency(fus.plan().id()).unwrap().completed, 4);
+    let total: u64 = snap.per_plan.iter().map(|p| p.completed).sum();
+    assert_eq!(total, snap.completed, "per-plan counters must partition completions");
+    assert!(snap.plan_latency(inf.plan().id()).unwrap().mean_latency_us() >= 0.0);
+    coord.shutdown();
+}
+
+#[test]
+fn policy_bits_and_deadline_apply_per_plan_handle() {
+    let coord = Coordinator::start(&single_worker_config(4)).unwrap();
+    let h = coord.handle();
+    let base = h.prepare(PlanSpec::Inference).unwrap();
+    let long = base
+        .clone()
+        .with_policy(Policy { deadline: None, bits: Some(2000) });
+    let d = long
+        .decide(DecisionParams::Inference { prior: 0.57, likelihood: 0.77, likelihood_not: 0.655 })
+        .unwrap();
+    // 2000 bits × 4 µs/bit = 8 ms of virtual hardware time.
+    assert!((d.hardware_ns - 8_000_000.0).abs() < 1e-6);
+    // The default-policy handle still runs at the configured 100 bits.
+    let d = base
+        .decide(DecisionParams::Inference { prior: 0.57, likelihood: 0.77, likelihood_not: 0.655 })
+        .unwrap();
+    assert!((d.hardware_ns - 400_000.0).abs() < 1e-6);
+    // Impossible deadline through the policy.
+    let strict = base
+        .clone()
+        .with_policy(Policy { deadline: Some(Duration::from_nanos(1)), bits: None });
+    let err = strict
+        .decide(DecisionParams::Inference { prior: 0.5, likelihood: 0.7, likelihood_not: 0.2 })
+        .unwrap_err();
+    assert!(matches!(err, bayes_mem::Error::Deadline(_)));
+    coord.shutdown();
+}
+
+#[test]
+fn policy_bits_is_rejected_on_the_pjrt_backend() {
+    // PJRT artifact shapes are baked at compile time: a stream-length
+    // override must be a typed rejection, not silently ignored. (The
+    // handle rejects before any worker runs, so no artifacts are needed.)
+    let mut cfg = single_worker_config(7);
+    cfg.coordinator.backend = bayes_mem::config::Backend::Pjrt;
+    let coord = Coordinator::start(&cfg).unwrap();
+    let plan = coord
+        .handle()
+        .prepare(PlanSpec::Inference)
+        .unwrap()
+        .with_policy(Policy { deadline: None, bits: Some(512) });
+    let err = plan
+        .submit(DecisionParams::Inference { prior: 0.5, likelihood: 0.7, likelihood_not: 0.2 })
+        .unwrap_err();
+    assert!(matches!(err, bayes_mem::Error::Config(_)), "got {err}");
+    assert!(err.to_string().contains("native backend"), "{err}");
+    coord.shutdown();
+}
+
+#[test]
+fn oversized_fusion_is_rejected_by_both_apis() {
+    let coord = Coordinator::start(&single_worker_config(5)).unwrap();
+    let h = coord.handle();
+    let err = h.prepare(PlanSpec::Fusion { modalities: 200 }).unwrap_err();
+    assert!(err.to_string().contains("modality cap"), "{err}");
+    let err = h.submit(DecisionKind::Fusion { posteriors: vec![0.5; 200] }).unwrap_err();
+    assert!(err.to_string().contains("modality cap"), "{err}");
+    assert!(h.metrics().snapshot().rejected >= 2);
+    coord.shutdown();
+}
+
+#[test]
+fn network_prepare_propagates_typed_errors() {
+    let coord = Coordinator::start(&single_worker_config(6)).unwrap();
+    let h = coord.handle();
+    let bad = PlanSpec::Network { net: diamond(), query: "zz".into(), evidence: vec![] };
+    assert!(matches!(h.prepare(bad).unwrap_err(), bayes_mem::Error::Network(_)));
+    // Served network decisions always carry a finite exact reference.
+    let plan = h.prepare(diamond_spec()).unwrap();
+    let d = plan.decide(DecisionParams::Network).unwrap();
+    assert!(d.exact.is_finite());
+    coord.shutdown();
+}

@@ -7,7 +7,7 @@
 use std::time::{Duration, Instant};
 
 use bayes_mem::bayes::{exact_fusion_m, exact_posterior, FusionOperator, InferenceOperator};
-use bayes_mem::coordinator::{Batcher, DecisionKind, DecisionRequest};
+use bayes_mem::coordinator::{Batcher, DecisionKind, DecisionRequest, PlanCache};
 use bayes_mem::logic::cordiv;
 use bayes_mem::network::{self, compile_query, BayesNet, NetlistEvaluator, NodeSpec};
 use bayes_mem::stochastic::{pair_counts, pearson, scc, Bitstream, SneBank, SneConfig};
@@ -154,7 +154,7 @@ fn prop_posterior_monotone_in_prior() {
     });
 }
 
-fn req(rng: &mut Rng, id: u64) -> DecisionRequest {
+fn req(cache: &PlanCache, rng: &mut Rng, id: u64) -> DecisionRequest {
     let (tx, rx) = std::sync::mpsc::channel();
     std::mem::forget(rx);
     let kind = if rng.bernoulli(0.5) {
@@ -166,20 +166,30 @@ fn req(rng: &mut Rng, id: u64) -> DecisionRequest {
     } else {
         DecisionKind::Fusion { posteriors: vec![rng.f64(), rng.f64()] }
     };
-    DecisionRequest { id, kind, enqueued: Instant::now(), deadline: None, reply: tx }
+    let (spec, params) = kind.into_plan_parts();
+    DecisionRequest {
+        id,
+        plan: cache.prepare(spec).unwrap(),
+        params,
+        enqueued: Instant::now(),
+        deadline: None,
+        bits: None,
+        reply: tx,
+    }
 }
 
 #[test]
 fn prop_batcher_conserves_requests() {
     check("batcher: no request lost or duplicated, caps respected", 64, |rng| {
+        let cache = PlanCache::new(8);
         let max_batch = rng.range_usize(1, 9);
         let mut batcher = Batcher::new(max_batch, Duration::from_millis(1));
         let n = rng.range_usize(1, 120);
         let mut out_ids = Vec::new();
         for id in 0..n as u64 {
-            if let Some(batch) = batcher.push(req(rng, id)) {
+            if let Some(batch) = batcher.push(req(&cache, rng, id)) {
                 assert!(batch.len() <= max_batch);
-                assert!(batch.requests.iter().all(|r| r.kind.class() == batch.class));
+                assert!(batch.requests.iter().all(|r| r.plan.id() == batch.plan.id()));
                 out_ids.extend(batch.requests.iter().map(|r| r.id));
             }
         }
