@@ -65,6 +65,26 @@ fn main() -> bayes_mem::Result<()> {
             d.posterior, d.exact, d.latency, d.batch_size
         );
     }
+
+    // --- Anytime decisions: stop when the answer is good enough. ---
+    // An accuracy-targeted policy sweeps a long stream in chunks and
+    // exits as soon as the confidence interval is tight: bits (and
+    // memristor pulses) the decision didn't need are never spent.
+    use bayes_mem::coordinator::Policy;
+    let anytime = plan.clone().with_policy(Policy {
+        bits: Some(16_384),
+        max_half_width: Some(0.03),
+        ..Policy::default()
+    });
+    let d = anytime.decide(DecisionParams::Inference {
+        prior: 0.57,
+        likelihood: 0.77,
+        likelihood_not: 0.655,
+    })?;
+    println!(
+        "\nanytime decision: posterior {:.3} ± {:.3} after {} of 16384 bits ({:?})",
+        d.posterior, d.confidence, d.bits_used, d.stop
+    );
     println!("{}", coord.handle().metrics().snapshot().to_table());
     coord.shutdown();
     Ok(())

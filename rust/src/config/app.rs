@@ -3,6 +3,7 @@
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
+use crate::coordinator::Policy;
 use crate::device::{DeviceParams, WearPolicy};
 use crate::stochastic::SneConfig;
 use crate::util::tomlmini::Document;
@@ -65,6 +66,11 @@ pub struct AppConfig {
     pub sne: SneConfig,
     /// Serving-layer settings.
     pub coordinator: CoordinatorConfig,
+    /// Default per-plan serving [`Policy`] (`[policy]` section) applied
+    /// by the CLI `serve`/`parse-scene` workloads: deadline, stream
+    /// length override, and the anytime early-exit knobs. All-default
+    /// (`Policy::default()`) means the legacy full sweep.
+    pub default_policy: Policy,
     /// Where `make artifacts` put the AOT outputs.
     pub artifacts_dir: PathBuf,
     /// Master seed for all banks/workloads.
@@ -76,6 +82,7 @@ impl Default for AppConfig {
         Self {
             sne: SneConfig::default(),
             coordinator: CoordinatorConfig::default(),
+            default_policy: Policy::default(),
             artifacts_dir: PathBuf::from("artifacts"),
             seed: 42,
         }
@@ -103,6 +110,11 @@ impl AppConfig {
         "coordinator.queue_capacity",
         "coordinator.backend",
         "coordinator.plan_cache_capacity",
+        "policy.deadline_us",
+        "policy.bits",
+        "policy.threshold",
+        "policy.max_half_width",
+        "policy.allow_partial",
     ];
 
     /// Load from a TOML file.
@@ -160,9 +172,28 @@ impl AppConfig {
                 defaults.coordinator.plan_cache_capacity,
             ),
         };
+        let deadline = match doc.get("policy.deadline_us").and_then(|v| v.as_i64()) {
+            Some(us) if us < 0 => {
+                return Err(Error::Config(format!(
+                    "policy.deadline_us must be >= 0, got {us}"
+                )))
+            }
+            Some(us) => Some(Duration::from_micros(us as u64)),
+            None => None,
+        };
+        let default_policy = Policy {
+            deadline,
+            // Negative bits map to 0, which Policy::validate rejects
+            // with the same typed error a per-request override gets.
+            bits: doc.get("policy.bits").and_then(|v| v.as_i64()).map(|b| b.max(0) as usize),
+            threshold: doc.get("policy.threshold").and_then(|v| v.as_f64()),
+            max_half_width: doc.get("policy.max_half_width").and_then(|v| v.as_f64()),
+            allow_partial: doc.bool_or("policy.allow_partial", false),
+        };
         let cfg = Self {
             sne,
             coordinator,
+            default_policy,
             artifacts_dir: PathBuf::from(doc.str_or("artifacts.dir", "artifacts")),
             seed: doc.i64_or("seed", defaults.seed as i64) as u64,
         };
@@ -173,6 +204,9 @@ impl AppConfig {
     /// Validate cross-field constraints.
     pub fn validate(&self) -> Result<()> {
         self.sne.validate()?;
+        // The default serving policy is range-checked exactly like a
+        // per-request policy at admission would be.
+        self.default_policy.validate()?;
         let c = &self.coordinator;
         if c.workers == 0 {
             return Err(Error::Config("coordinator.workers must be > 0".into()));
@@ -222,6 +256,13 @@ max_wait_us = 400            # one 100-bit frame time at 4 us/bit
 queue_capacity = 4096
 backend = "native"           # native | pjrt
 plan_cache_capacity = 32     # prepared-plan LRU (prepare-once/decide-many)
+
+[policy]                     # default serving policy (anytime early exit)
+# deadline_us = 400          # reply budget; late decisions stop early
+# bits = 16384               # per-decision stream-length override
+# threshold = 0.5            # stop once the CI clears this decision bound
+# max_half_width = 0.02      # stop once the CI is this tight
+allow_partial = false        # true: deadline miss -> best-so-far, not error
 "#
     }
 }
@@ -238,8 +279,39 @@ mod tests {
         assert_eq!(cfg.coordinator.max_batch, 16);
         assert_eq!(cfg.coordinator.plan_cache_capacity, 32);
         assert_eq!(cfg.coordinator.backend, Backend::Native);
+        assert_eq!(cfg.default_policy, Policy::default());
         assert_eq!(cfg.seed, 42);
         assert!((cfg.sne.params.vth_mean - 2.08).abs() < 1e-12);
+    }
+
+    #[test]
+    fn policy_section_parses_and_validates() {
+        let doc = Document::parse(
+            "[policy]\ndeadline_us = 400\nbits = 16384\nthreshold = 0.5\n\
+             max_half_width = 0.02\nallow_partial = true",
+        )
+        .unwrap();
+        let cfg = AppConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.default_policy.deadline, Some(Duration::from_micros(400)));
+        assert_eq!(cfg.default_policy.bits, Some(16_384));
+        assert_eq!(cfg.default_policy.threshold, Some(0.5));
+        assert_eq!(cfg.default_policy.max_half_width, Some(0.02));
+        assert!(cfg.default_policy.allow_partial);
+        // Absent keys mean "no knob", not zero.
+        let cfg = AppConfig::from_document(&Document::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.default_policy, Policy::default());
+        // Out-of-range knobs are config errors like every other field.
+        for bad in [
+            "[policy]\nthreshold = 1.5",
+            "[policy]\nmax_half_width = 0.0",
+            "[policy]\nmax_half_width = 0.9",
+            "[policy]\nbits = 0",
+            "[policy]\nbits = -5",
+            "[policy]\ndeadline_us = -400",
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(AppConfig::from_document(&doc).is_err(), "should reject: {bad}");
+        }
     }
 
     #[test]

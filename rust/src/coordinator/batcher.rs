@@ -166,6 +166,9 @@ mod tests {
             enqueued: Instant::now(),
             deadline: None,
             bits: None,
+            threshold: None,
+            max_half_width: None,
+            allow_partial: false,
             reply: tx,
         }
     }

@@ -1,10 +1,17 @@
 //! Metrics registry for the serving layer: lock-free counters plus a
 //! (briefly) locked per-plan latency table.
+//!
+//! Latency sums accumulate in **nanoseconds** (converted at snapshot
+//! time): sub-microsecond decisions used to floor to 0 µs and report a
+//! zero mean for fast native batches. Histogram bucket boundaries are
+//! unchanged (µs upper bounds).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
+
+use crate::network::StopReason;
 
 /// Latency histogram buckets, µs upper bounds (last bucket = overflow).
 pub const LATENCY_BUCKETS_US: [u64; 10] =
@@ -37,14 +44,21 @@ pub struct Metrics {
     completed: AtomicU64,
     rejected: AtomicU64,
     failed: AtomicU64,
+    deadline_missed: AtomicU64,
     batches: AtomicU64,
     batched_requests: AtomicU64,
-    latency_us_sum: AtomicU64,
+    latency_ns_sum: AtomicU64,
     latency_buckets: [AtomicU64; 10],
     hardware_ns: AtomicU64,
     completed_by_kind: [AtomicU64; N_KINDS],
     plan_hits: AtomicU64,
     plan_misses: AtomicU64,
+    /// Early exits by reason: `[reliable, converged, timely]`.
+    early_exits: [AtomicU64; 3],
+    /// Bits actually streamed across completed decisions.
+    bits_used_sum: AtomicU64,
+    /// Bits the same decisions would have cost at full stream length.
+    bits_full_sum: AtomicU64,
     /// Per-plan completion/latency counters, keyed by plan id. Touched
     /// once per completed decision by worker threads only (callers read
     /// snapshots), so the lock is uncontended in practice.
@@ -61,7 +75,7 @@ struct PerPlanTable {
 #[derive(Debug, Default, Clone, Copy)]
 struct PlanCounters {
     completed: u64,
-    latency_us_sum: u64,
+    latency_ns_sum: u64,
     last_update: u64,
 }
 
@@ -91,8 +105,9 @@ impl Metrics {
     pub fn on_complete(&self, latency: Duration, hardware_ns: f64, kind: KindTag) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.completed_by_kind[kind as usize].fetch_add(1, Ordering::Relaxed);
+        // Accumulate in ns so sub-µs decisions don't floor to a 0 sum.
+        self.latency_ns_sum.fetch_add(latency.as_nanos() as u64, Ordering::Relaxed);
         let us = latency.as_micros() as u64;
-        self.latency_us_sum.fetch_add(us, Ordering::Relaxed);
         let idx = LATENCY_BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(9);
         self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
         self.hardware_ns.fetch_add(hardware_ns as u64, Ordering::Relaxed);
@@ -101,6 +116,35 @@ impl Metrics {
     /// A decision failed.
     pub fn on_fail(&self) {
         self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A decision missed its deadline and was answered with
+    /// [`crate::Error::Deadline`]. Counts into the dedicated
+    /// `deadline_missed` gauge **and** `failed` (a miss is still a
+    /// failed request — it just no longer vanishes into the generic
+    /// counter).
+    pub fn on_deadline_miss(&self) {
+        self.deadline_missed.fetch_add(1, Ordering::Relaxed);
+        self.failed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Anytime accounting for one completed decision: which stop fired
+    /// and how many bits it streamed vs the full stream length.
+    pub fn on_anytime(&self, stop: StopReason, bits_used: u64, bits_full: u64) {
+        self.bits_used_sum.fetch_add(bits_used, Ordering::Relaxed);
+        self.bits_full_sum.fetch_add(bits_full, Ordering::Relaxed);
+        match stop {
+            StopReason::Exhausted => {}
+            StopReason::Reliable => {
+                self.early_exits[0].fetch_add(1, Ordering::Relaxed);
+            }
+            StopReason::Converged => {
+                self.early_exits[1].fetch_add(1, Ordering::Relaxed);
+            }
+            StopReason::Timely => {
+                self.early_exits[2].fetch_add(1, Ordering::Relaxed);
+            }
+        }
     }
 
     /// A `prepare` was answered from the plan cache.
@@ -137,7 +181,7 @@ impl Metrics {
         }
         let c = table.entries.entry(plan_id).or_default();
         c.completed += 1;
-        c.latency_us_sum += latency.as_micros() as u64;
+        c.latency_ns_sum += latency.as_nanos() as u64;
         c.last_update = tick;
     }
 
@@ -158,22 +202,30 @@ impl Metrics {
             .map(|(&plan_id, c)| PlanLatency {
                 plan_id,
                 completed: c.completed,
-                latency_us_sum: c.latency_us_sum,
+                latency_ns_sum: c.latency_ns_sum,
             })
             .collect();
+        let mut early_exits = [0u64; 3];
+        for (out, c) in early_exits.iter_mut().zip(&self.early_exits) {
+            *out = c.load(Ordering::Relaxed);
+        }
         MetricsSnapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
+            deadline_missed: self.deadline_missed.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             batched_requests: self.batched_requests.load(Ordering::Relaxed),
-            latency_us_sum: self.latency_us_sum.load(Ordering::Relaxed),
+            latency_ns_sum: self.latency_ns_sum.load(Ordering::Relaxed),
             latency_buckets: buckets,
             hardware_ns: self.hardware_ns.load(Ordering::Relaxed),
             completed_by_kind,
             plan_hits: self.plan_hits.load(Ordering::Relaxed),
             plan_misses: self.plan_misses.load(Ordering::Relaxed),
+            early_exits,
+            bits_used_sum: self.bits_used_sum.load(Ordering::Relaxed),
+            bits_full_sum: self.bits_full_sum.load(Ordering::Relaxed),
             per_plan,
         }
     }
@@ -186,8 +238,8 @@ pub struct PlanLatency {
     pub plan_id: u64,
     /// Decisions completed under this plan.
     pub completed: u64,
-    /// Sum of their completion latencies, µs.
-    pub latency_us_sum: u64,
+    /// Sum of their completion latencies, ns.
+    pub latency_ns_sum: u64,
 }
 
 impl PlanLatency {
@@ -196,7 +248,7 @@ impl PlanLatency {
         if self.completed == 0 {
             0.0
         } else {
-            self.latency_us_sum as f64 / self.completed as f64
+            self.latency_ns_sum as f64 / 1_000.0 / self.completed as f64
         }
     }
 }
@@ -210,14 +262,19 @@ pub struct MetricsSnapshot {
     pub completed: u64,
     /// Requests shed at admission.
     pub rejected: u64,
-    /// Requests that errored during execution.
+    /// Requests that errored during execution (deadline misses
+    /// included — see [`Self::deadline_missed`] for the breakout).
     pub failed: u64,
+    /// Requests answered with [`crate::Error::Deadline`] (a subset of
+    /// `failed`; it used to vanish into the generic counter).
+    pub deadline_missed: u64,
     /// Batches dispatched.
     pub batches: u64,
     /// Total requests across all batches.
     pub batched_requests: u64,
-    /// Sum of completion latencies, µs.
-    pub latency_us_sum: u64,
+    /// Sum of completion latencies, ns (accumulated in ns so sub-µs
+    /// decisions are not floored away).
+    pub latency_ns_sum: u64,
     /// Histogram counts per [`LATENCY_BUCKETS_US`] bucket.
     pub latency_buckets: Vec<u64>,
     /// Accumulated virtual hardware time, ns.
@@ -228,6 +285,13 @@ pub struct MetricsSnapshot {
     pub plan_hits: u64,
     /// `prepare` calls that compiled a fresh plan.
     pub plan_misses: u64,
+    /// Anytime early exits by reason: `[reliable, converged, timely]`
+    /// (see [`crate::network::StopReason`]).
+    pub early_exits: [u64; 3],
+    /// Bits actually streamed across completed decisions.
+    pub bits_used_sum: u64,
+    /// Bits the same decisions would have cost at full stream length.
+    pub bits_full_sum: u64,
     /// Per-plan completion/latency counters, ordered by plan id.
     pub per_plan: Vec<PlanLatency>,
 }
@@ -238,7 +302,28 @@ impl MetricsSnapshot {
         if self.completed == 0 {
             0.0
         } else {
-            self.latency_us_sum as f64 / self.completed as f64
+            self.latency_ns_sum as f64 / 1_000.0 / self.completed as f64
+        }
+    }
+
+    /// Total anytime early exits (reliable + converged + timely).
+    pub fn early_exit_total(&self) -> u64 {
+        self.early_exits.iter().sum()
+    }
+
+    /// Bits-saved gauge: stochastic bits early exits avoided streaming
+    /// (= pulses never issued on the virtual hardware).
+    pub fn bits_saved(&self) -> u64 {
+        self.bits_full_sum.saturating_sub(self.bits_used_sum)
+    }
+
+    /// Fraction of the full-length bit budget early exits saved
+    /// (0 when nothing completed).
+    pub fn bits_saved_ratio(&self) -> f64 {
+        if self.bits_full_sum == 0 {
+            0.0
+        } else {
+            self.bits_saved() as f64 / self.bits_full_sum as f64
         }
     }
 
@@ -303,9 +388,11 @@ impl MetricsSnapshot {
     /// Render a compact text report.
     pub fn to_table(&self) -> String {
         format!(
-            "submitted {}  completed {}  rejected {}  failed {}\n\
+            "submitted {}  completed {}  rejected {}  failed {}  deadline missed {}\n\
              by kind: inference {}  fusion {}  network {}\n\
              plan cache: {} hits / {} misses ({:.0} % hit rate, {} plans served)\n\
+             anytime: {} early exits (reliable {} / converged {} / timely {})  \
+             bits saved {} ({:.0} %)\n\
              batches {}  mean batch {:.2}\n\
              latency mean {:.1} µs  p50 ≤{} µs  p99 ≤{} µs\n\
              virtual hardware fps {:.0}",
@@ -313,6 +400,7 @@ impl MetricsSnapshot {
             self.completed,
             self.rejected,
             self.failed,
+            self.deadline_missed,
             self.completed_for(KindTag::Inference),
             self.completed_for(KindTag::Fusion),
             self.completed_for(KindTag::Network),
@@ -320,6 +408,12 @@ impl MetricsSnapshot {
             self.plan_misses,
             self.plan_hit_rate() * 100.0,
             self.per_plan.len(),
+            self.early_exit_total(),
+            self.early_exits[0],
+            self.early_exits[1],
+            self.early_exits[2],
+            self.bits_saved(),
+            self.bits_saved_ratio() * 100.0,
             self.batches,
             self.mean_batch_size(),
             self.mean_latency_us(),
@@ -365,9 +459,49 @@ mod tests {
         assert!((s.plan_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
         let plan = s.plan_latency(7).unwrap();
         assert_eq!(plan.completed, 2);
-        assert_eq!(plan.latency_us_sum, 200);
+        assert_eq!(plan.latency_ns_sum, 200_000);
         assert!((plan.mean_latency_us() - 100.0).abs() < 1e-9);
         assert!(s.plan_latency(8).is_none());
+    }
+
+    #[test]
+    fn sub_microsecond_latencies_accumulate_in_ns() {
+        // The old µs floor summed these to 0 and reported a 0 mean.
+        let m = Metrics::new();
+        m.on_complete(Duration::from_nanos(400), 0.0, KindTag::Inference);
+        m.on_complete(Duration::from_nanos(600), 0.0, KindTag::Inference);
+        m.on_plan_complete(3, Duration::from_nanos(500));
+        let s = m.snapshot();
+        assert_eq!(s.latency_ns_sum, 1_000);
+        assert!((s.mean_latency_us() - 0.5).abs() < 1e-9, "mean {}", s.mean_latency_us());
+        assert!((s.plan_latency(3).unwrap().mean_latency_us() - 0.5).abs() < 1e-9);
+        // Bucket boundaries unchanged: sub-µs lands in the first bucket.
+        assert_eq!(s.latency_buckets[0], 2);
+    }
+
+    #[test]
+    fn deadline_and_anytime_counters_accumulate() {
+        let m = Metrics::new();
+        m.on_deadline_miss();
+        m.on_deadline_miss();
+        m.on_fail();
+        m.on_anytime(StopReason::Exhausted, 100, 100);
+        m.on_anytime(StopReason::Reliable, 256, 16_384);
+        m.on_anytime(StopReason::Converged, 1_024, 16_384);
+        m.on_anytime(StopReason::Timely, 512, 16_384);
+        let s = m.snapshot();
+        assert_eq!(s.deadline_missed, 2);
+        assert_eq!(s.failed, 3, "misses also count as failures");
+        assert_eq!(s.early_exits, [1, 1, 1]);
+        assert_eq!(s.early_exit_total(), 3);
+        assert_eq!(s.bits_used_sum, 100 + 256 + 1_024 + 512);
+        assert_eq!(s.bits_full_sum, 100 + 3 * 16_384);
+        assert_eq!(s.bits_saved(), 3 * 16_384 - 256 - 1_024 - 512);
+        assert!(s.bits_saved_ratio() > 0.9);
+        let table = s.to_table();
+        assert!(table.contains("deadline missed 2"), "{table}");
+        assert!(table.contains("early exits"), "{table}");
+        assert!(table.contains("bits saved"), "{table}");
     }
 
     #[test]

@@ -33,7 +33,20 @@
 //! Backpressure: `submit` fails fast with `Error::Coordinator` once the
 //! bounded queue is full — callers see load shedding instead of latency
 //! collapse. Each completed decision also advances the virtual hardware
-//! ledger (4 µs/bit), which is what the paper's 2,500 fps claim measures.
+//! ledger (4 µs/bit × bits actually streamed), which is what the paper's
+//! 2,500 fps claim measures.
+//!
+//! **Timeliness is an engine feature**: [`Policy`]'s `threshold` /
+//! `max_half_width` / `allow_partial` knobs make native workers run the
+//! anytime chunked evaluator
+//! ([`crate::network::NetlistEvaluator::evaluate_anytime`]) — decisions
+//! stop as soon as their confidence interval is good enough or their
+//! deadline budget is about to expire, and the [`Decision`] is stamped
+//! with `bits_used` and `confidence`. Deadlines are enforced *before*
+//! evaluation (an already-late decision skips the sweep entirely) and —
+//! whenever any anytime knob is set — *during* it (the sweep is
+//! budgeted and stops mid-flight); misses land in the dedicated
+//! `deadline_missed` counter.
 
 mod batcher;
 mod metrics;
@@ -53,3 +66,7 @@ pub use plan::{
 pub use request::{Decision, DecisionKind, DecisionRequest, PendingDecision};
 pub use router::{ExecPlan, Router};
 pub use server::{Coordinator, CoordinatorHandle};
+
+// The anytime vocabulary lives in `network::eval`; re-exported here
+// because `Policy` and `Decision` speak it.
+pub use crate::network::{StopPolicy, StopReason};

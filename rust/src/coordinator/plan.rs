@@ -21,7 +21,9 @@
 //! * [`PlanHandle`] — the caller-side handle: [`PlanHandle::decide`],
 //!   [`PlanHandle::decide_batch`], [`PlanHandle::stream`], each
 //!   submitting [`DecisionParams`] against the prepared plan under a
-//!   per-plan [`Policy`] (deadline + stream-length override).
+//!   per-plan [`Policy`] (deadline, stream-length override, and the
+//!   anytime early-exit knobs — threshold / max half-width / partial
+//!   results).
 //!
 //! The legacy [`super::DecisionKind`] submission API survives as a thin
 //! shim that lowers onto plans (see `MIGRATION.md` at the repo root).
@@ -30,7 +32,7 @@ use std::collections::hash_map::DefaultHasher;
 use std::collections::VecDeque;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::network::{self, lower, BayesNet, Netlist, NetlistEvaluator};
@@ -201,10 +203,26 @@ pub const MAX_POLICY_BITS: usize = 1 << 22;
 
 /// Per-plan serving policy, applied to every decision submitted through a
 /// [`PlanHandle`].
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+///
+/// The anytime knobs (`threshold`, `max_half_width`, `allow_partial`)
+/// make workers run the chunked early-exit evaluator
+/// ([`crate::network::NetlistEvaluator::evaluate_anytime`]): decisions
+/// stop as soon as they are *reliable* (interval clears `threshold`),
+/// *converged* (interval width ≤ `max_half_width`), or out of time
+/// (`deadline`), and the completed [`super::Decision`] is stamped with
+/// `bits_used` and `confidence`. With every knob at its default the
+/// worker runs the legacy full sweep, bit-identical to the pre-anytime
+/// engine (regression-pinned).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct Policy {
-    /// Completion deadline measured from enqueue; late decisions are
-    /// answered with [`Error::Deadline`].
+    /// Completion deadline measured from enqueue. Without
+    /// `allow_partial` a miss is answered with [`Error::Deadline`], and
+    /// a request already late when a worker picks it up is skipped
+    /// outright (a miss costs nothing instead of a discarded full
+    /// sweep). With `allow_partial` — or any anytime knob — the worker
+    /// additionally budgets the sweep itself against the remaining
+    /// deadline, stopping mid-flight; under `allow_partial` the
+    /// truncated result is returned best-so-far with its confidence.
     pub deadline: Option<Duration>,
     /// Stochastic stream length override (bits per decision), in
     /// `1..=`[`MAX_POLICY_BITS`]. `None` uses the worker's configured
@@ -213,6 +231,56 @@ pub struct Policy {
     /// artifact shapes are baked at compile time, so submissions with
     /// an override are rejected there with a typed [`Error::Config`].
     pub bits: Option<usize>,
+    /// Anytime *reliable* stop: halt once the Wilson interval around
+    /// the evolving posterior clears this decision threshold on either
+    /// side. Must lie in `[0, 1]`. Native backend only.
+    pub threshold: Option<f64>,
+    /// Anytime *converged* stop: halt once the interval half-width
+    /// falls to this target. Must lie in `(0, 0.5]`. Native backend
+    /// only.
+    pub max_half_width: Option<f64>,
+    /// Allow deadline-truncated **partial** decisions: a decision that
+    /// runs out of `deadline` budget is answered best-so-far (stamped
+    /// `StopReason::Timely`, `bits_used < bits`) instead of
+    /// [`Error::Deadline`]. Native backend only.
+    pub allow_partial: bool,
+}
+
+impl Policy {
+    /// Admission validation — `threshold`/`max_half_width` are
+    /// client-controlled and range-checked like [`Policy::bits`].
+    pub fn validate(&self) -> Result<()> {
+        if self.bits.is_some_and(|b| b == 0 || b > MAX_POLICY_BITS) {
+            return Err(Error::Config(format!(
+                "policy.bits must be in 1..={MAX_POLICY_BITS}"
+            )));
+        }
+        if let Some(t) = self.threshold {
+            if !t.is_finite() || !(0.0..=1.0).contains(&t) {
+                return Err(Error::Config(format!(
+                    "policy.threshold must be a probability in [0, 1], got {t}"
+                )));
+            }
+        }
+        if let Some(h) = self.max_half_width {
+            if !h.is_finite() || h <= 0.0 || h > 0.5 {
+                return Err(Error::Config(format!(
+                    "policy.max_half_width must be in (0, 0.5], got {h}"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Does any knob require the native backend? (PJRT artifact shapes
+    /// and stream lengths are baked at compile time, so neither the
+    /// bits override nor anytime early exit can be honoured there.)
+    pub(crate) fn needs_native(&self) -> bool {
+        self.bits.is_some()
+            || self.threshold.is_some()
+            || self.max_half_width.is_some()
+            || self.allow_partial
+    }
 }
 
 /// A validated, compiled decision plan: the shared immutable artifact
@@ -361,28 +429,32 @@ impl PreparedPlan {
 
 /// Shared structural-key LRU of prepared plans.
 ///
-/// The lock is held across compilation on a miss, so concurrent
-/// `prepare` calls of the same spec serialize into exactly one compile,
-/// one cache entry, and one recorded miss — the rest hit. Eviction is
-/// least-recently-*used* (hits refresh recency), race-free under the
-/// same lock.
-///
-/// Tradeoff: while a cold prepare of a large network compiles (netlist
-/// lowering + the `2^n` exact enumeration), every other `prepare` —
-/// including the per-request lookup the legacy `DecisionKind` submit
-/// shim performs — blocks on the mutex. Plan-API callers prepare once
-/// up-front and are unaffected on the decide path; latency-sensitive
-/// shim traffic should migrate (see `MIGRATION.md`).
+/// Compilation happens **outside** the cache lock: a miss inserts a
+/// per-key *in-flight* marker, releases the mutex, compiles, then
+/// publishes the entry and wakes waiters on a condvar. Concurrent
+/// `prepare` calls of the **same** spec still converge on exactly one
+/// compile, one cache entry, and one recorded miss (the waiters count
+/// as hits when the plan lands) — but a cold compile of one large
+/// network no longer stalls unrelated prepares or the per-request
+/// lookups the legacy `DecisionKind` submit shim performs; only
+/// same-spec prepares serialize. Eviction is least-recently-*used*
+/// (hits refresh recency), race-free under the lock; in-flight markers
+/// are never evicted and a failed compile removes its marker so waiters
+/// retry (each surfacing the same typed error).
 #[derive(Debug)]
 pub struct PlanCache {
     capacity: usize,
     metrics: Arc<Metrics>,
     inner: Mutex<CacheInner>,
+    ready: Condvar,
 }
 
 #[derive(Debug, Default)]
 struct CacheInner {
     entries: Vec<CacheEntry>,
+    /// Specs currently compiling with the lock released (key + full spec
+    /// so hash collisions cannot alias two distinct compiles).
+    in_flight: Vec<(u64, PlanSpec)>,
     tick: u64,
 }
 
@@ -391,6 +463,30 @@ struct CacheEntry {
     key: u64,
     plan: Arc<PreparedPlan>,
     last_used: u64,
+}
+
+/// Removes the in-flight marker (and wakes waiters) even if the compile
+/// panics or errors — a leaked marker would hang same-spec waiters
+/// forever.
+struct InFlightGuard<'a> {
+    cache: &'a PlanCache,
+    key: u64,
+    spec: PlanSpec,
+}
+
+impl Drop for InFlightGuard<'_> {
+    fn drop(&mut self) {
+        let mut inner = self.cache.inner.lock().expect("plan cache poisoned");
+        if let Some(pos) = inner
+            .in_flight
+            .iter()
+            .position(|(k, s)| *k == self.key && *s == self.spec)
+        {
+            inner.in_flight.swap_remove(pos);
+        }
+        drop(inner);
+        self.cache.ready.notify_all();
+    }
 }
 
 impl PlanCache {
@@ -402,26 +498,50 @@ impl PlanCache {
     /// Cache reporting hit/miss into an existing registry (the
     /// coordinator wires its own [`Metrics`] here).
     pub fn with_metrics(capacity: usize, metrics: Arc<Metrics>) -> Self {
-        Self { capacity: capacity.max(1), metrics, inner: Mutex::new(CacheInner::default()) }
+        Self {
+            capacity: capacity.max(1),
+            metrics,
+            inner: Mutex::new(CacheInner::default()),
+            ready: Condvar::new(),
+        }
     }
 
     /// Validate + compile `spec`, or return the cached plan for a
-    /// structurally equal spec prepared earlier.
+    /// structurally equal spec prepared earlier. Same-spec concurrent
+    /// prepares wait for the one in-flight compile; everything else
+    /// proceeds without blocking on it.
     pub fn prepare(&self, spec: PlanSpec) -> Result<Arc<PreparedPlan>> {
         let key = spec.structural_key();
+        {
+            let mut inner = self.inner.lock().expect("plan cache poisoned");
+            loop {
+                inner.tick += 1;
+                let tick = inner.tick;
+                if let Some(entry) =
+                    inner.entries.iter_mut().find(|e| e.key == key && *e.plan.spec() == spec)
+                {
+                    entry.last_used = tick;
+                    self.metrics.on_plan_hit();
+                    return Ok(Arc::clone(&entry.plan));
+                }
+                if inner.in_flight.iter().any(|(k, s)| *k == key && *s == spec) {
+                    // The same spec is compiling on another thread: wait
+                    // for it (and count a hit when it lands) — the
+                    // exactly-one-compile/one-miss guarantee.
+                    inner = self.ready.wait(inner).expect("plan cache poisoned");
+                    continue;
+                }
+                inner.in_flight.push((key, spec.clone()));
+                break;
+            }
+        }
+        // Compile with the lock RELEASED.
+        let guard = InFlightGuard { cache: self, key, spec: spec.clone() };
+        let plan = Arc::new(PreparedPlan::compile(spec)?);
         let mut inner = self.inner.lock().expect("plan cache poisoned");
+        self.metrics.on_plan_miss();
         inner.tick += 1;
         let tick = inner.tick;
-        if let Some(entry) =
-            inner.entries.iter_mut().find(|e| e.key == key && *e.plan.spec() == spec)
-        {
-            entry.last_used = tick;
-            self.metrics.on_plan_hit();
-            return Ok(Arc::clone(&entry.plan));
-        }
-        // Compile while holding the lock (see type-level docs).
-        let plan = Arc::new(PreparedPlan::compile(spec)?);
-        self.metrics.on_plan_miss();
         if inner.entries.len() >= self.capacity {
             if let Some(lru) = inner
                 .entries
@@ -434,6 +554,8 @@ impl PlanCache {
             }
         }
         inner.entries.push(CacheEntry { key, plan: Arc::clone(&plan), last_used: tick });
+        drop(inner);
+        drop(guard); // removes the marker and wakes same-spec waiters
         Ok(plan)
     }
 
@@ -619,6 +741,72 @@ mod tests {
         assert!(cache.contains(&a));
         assert!(!cache.contains(&b));
         assert!(cache.contains(&c));
+    }
+
+    #[test]
+    fn policy_knobs_are_range_validated() {
+        assert!(Policy::default().validate().is_ok());
+        assert!(Policy { bits: Some(1), ..Policy::default() }.validate().is_ok());
+        assert!(Policy { bits: Some(0), ..Policy::default() }.validate().is_err());
+        assert!(Policy { bits: Some(MAX_POLICY_BITS + 1), ..Policy::default() }
+            .validate()
+            .is_err());
+        assert!(Policy { threshold: Some(0.5), ..Policy::default() }.validate().is_ok());
+        for bad in [-0.1, 1.1, f64::NAN, f64::INFINITY] {
+            let err = Policy { threshold: Some(bad), ..Policy::default() }
+                .validate()
+                .unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "threshold {bad}");
+        }
+        assert!(Policy { max_half_width: Some(0.02), ..Policy::default() }.validate().is_ok());
+        for bad in [0.0, -0.5, 0.6, f64::NAN] {
+            let err = Policy { max_half_width: Some(bad), ..Policy::default() }
+                .validate()
+                .unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "max_half_width {bad}");
+        }
+        // Backend gating: only the anytime/bits knobs need native.
+        assert!(!Policy::default().needs_native());
+        assert!(!Policy { deadline: Some(Duration::from_micros(400)), ..Policy::default() }
+            .needs_native());
+        assert!(Policy { bits: Some(100), ..Policy::default() }.needs_native());
+        assert!(Policy { threshold: Some(0.5), ..Policy::default() }.needs_native());
+        assert!(Policy { max_half_width: Some(0.1), ..Policy::default() }.needs_native());
+        assert!(Policy { allow_partial: true, ..Policy::default() }.needs_native());
+    }
+
+    #[test]
+    fn failed_compile_leaves_no_marker_or_entry() {
+        let cache = PlanCache::new(4);
+        let bad = PlanSpec::Fusion { modalities: 1 };
+        assert!(cache.prepare(bad.clone()).is_err());
+        assert!(cache.is_empty(), "failed compiles must not be cached");
+        // A second attempt must not hang on a leaked in-flight marker —
+        // it recompiles and surfaces the same typed error.
+        assert!(cache.prepare(bad).is_err());
+        // The cache still works afterwards.
+        assert!(cache.prepare(PlanSpec::Inference).is_ok());
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn concurrent_distinct_specs_compile_without_serializing() {
+        // Behavioural (not timing) pin for the out-of-lock compile: many
+        // threads preparing distinct specs all succeed, each spec
+        // compiles exactly once per miss accounting, and same-spec
+        // waiters share the in-flight compile's plan.
+        let cache = Arc::new(PlanCache::new(16));
+        std::thread::scope(|s| {
+            for m in 2..8usize {
+                for _ in 0..3 {
+                    let cache = Arc::clone(&cache);
+                    s.spawn(move || {
+                        cache.prepare(PlanSpec::Fusion { modalities: m }).unwrap()
+                    });
+                }
+            }
+        });
+        assert_eq!(cache.len(), 6, "one entry per distinct spec");
     }
 
     #[test]

@@ -11,7 +11,7 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use crate::network::BayesNet;
+use crate::network::{BayesNet, StopReason};
 use crate::{Error, Result};
 
 use super::metrics::KindTag;
@@ -157,6 +157,13 @@ pub struct DecisionRequest {
     /// Stream-length override from the plan's [`super::Policy`] (`None`
     /// = the worker's configured bank).
     pub bits: Option<usize>,
+    /// Anytime reliable-stop threshold from the plan's [`super::Policy`].
+    pub threshold: Option<f64>,
+    /// Anytime converged-stop half-width target from the plan's
+    /// [`super::Policy`].
+    pub max_half_width: Option<f64>,
+    /// Deadline-truncated partial results allowed ([`super::Policy`]).
+    pub allow_partial: bool,
     /// Reply channel.
     pub reply: mpsc::Sender<Result<Decision>>,
 }
@@ -172,16 +179,36 @@ pub struct Decision {
     pub exact: f64,
     /// Wall-clock queue+execute latency.
     pub latency: Duration,
-    /// Virtual hardware time for the decision, ns (4 µs/bit × n_bits).
+    /// Virtual hardware time for the decision, ns: 4 µs per bit
+    /// actually *pulsed* (= [`Self::bits_used`] on the ideal-device
+    /// path; the staged nonideal path pays the full stream even when
+    /// the readout stopped early).
     pub hardware_ns: f64,
     /// How many requests shared this decision's batch.
     pub batch_size: usize,
+    /// Stochastic bits actually read out — the full stream length unless
+    /// an anytime stop fired ([`super::Policy`]'s `threshold` /
+    /// `max_half_width` / `deadline` + `allow_partial` knobs).
+    pub bits_used: usize,
+    /// Wilson half-width of the confidence interval around `posterior`
+    /// (z = [`crate::network::ANYTIME_Z`]), taken over the effective
+    /// (evidence-hit) sample count at `bits_used` — smaller is tighter.
+    pub confidence: f64,
+    /// Why evaluation stopped (always
+    /// [`StopReason::Exhausted`] for full sweeps).
+    pub stop: StopReason,
 }
 
 impl Decision {
     /// |stochastic − exact|.
     pub fn abs_error(&self) -> f64 {
         (self.posterior - self.exact).abs()
+    }
+
+    /// Did an anytime criterion end this decision before the full
+    /// stream length?
+    pub fn stopped_early(&self) -> bool {
+        self.stop != StopReason::Exhausted
     }
 }
 

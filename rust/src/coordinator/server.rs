@@ -15,7 +15,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::config::{AppConfig, Backend};
-use crate::network::NetlistEvaluator;
+use crate::network::{AnytimePosterior, NetlistEvaluator, StopPolicy, StopReason};
 use crate::runtime::Runtime;
 use crate::stochastic::{SneBank, SneConfig};
 use crate::util::Rng;
@@ -23,9 +23,7 @@ use crate::{Error, Result};
 
 use super::batcher::{Batch, Batcher};
 use super::metrics::Metrics;
-use super::plan::{
-    DecisionParams, PlanCache, PlanHandle, PlanSpec, Policy, PreparedPlan, MAX_POLICY_BITS,
-};
+use super::plan::{DecisionParams, PlanCache, PlanHandle, PlanSpec, Policy, PreparedPlan};
 use super::request::{Decision, DecisionKind, DecisionRequest, PendingDecision};
 use super::router::{ExecPlan, Router};
 
@@ -63,20 +61,17 @@ impl CoordinatorHandle {
         policy: Policy,
     ) -> Result<PendingDecision> {
         plan.validate_params(&params).inspect_err(|_| self.metrics.on_reject())?;
-        // `bits` is client-controlled and sizes worker-side buffers:
-        // range-cap it at admission like every other request input.
-        if policy.bits.is_some_and(|b| b == 0 || b > MAX_POLICY_BITS) {
-            self.metrics.on_reject();
-            return Err(Error::Config(format!(
-                "policy.bits must be in 1..={MAX_POLICY_BITS}"
-            )));
-        }
+        // `bits`/`threshold`/`max_half_width` are client-controlled
+        // (bits even sizes worker-side buffers): range-check them at
+        // admission like every other request input.
+        policy.validate().inspect_err(|_| self.metrics.on_reject())?;
         // Typed rejection instead of silently serving at the artifact's
-        // baked stream length.
-        if policy.bits.is_some() && self.backend == Backend::Pjrt {
+        // baked stream length / ignoring the anytime knobs.
+        if policy.needs_native() && self.backend == Backend::Pjrt {
             self.metrics.on_reject();
             return Err(Error::Config(
-                "Policy.bits requires the native backend (PJRT artifact shapes are fixed)"
+                "Policy.bits and the anytime knobs (threshold/max_half_width/allow_partial) \
+                 require the native backend (PJRT artifact shapes are fixed)"
                     .into(),
             ));
         }
@@ -89,6 +84,9 @@ impl CoordinatorHandle {
             enqueued: Instant::now(),
             deadline: policy.deadline,
             bits: policy.bits,
+            threshold: policy.threshold,
+            max_half_width: policy.max_half_width,
+            allow_partial: policy.allow_partial,
             reply,
         };
         match self.tx.try_send(Msg::Req(req)) {
@@ -127,7 +125,7 @@ impl CoordinatorHandle {
         // `submit_prepared` (errors and messages are identical).
         let (spec, params) = kind.into_plan_parts();
         let plan = self.plans.prepare(spec).inspect_err(|_| self.metrics.on_reject())?;
-        self.submit_prepared(&plan, params, Policy { deadline, bits: None })
+        self.submit_prepared(&plan, params, Policy { deadline, ..Policy::default() })
     }
 
     /// Convenience: submit and wait.
@@ -406,6 +404,38 @@ fn worker_loop(
     }
 }
 
+/// Translate one request's policy knobs into the evaluator's
+/// [`StopPolicy`].
+///
+/// The chunked anytime path engages only when the request opted into it
+/// (a threshold / half-width target, or `allow_partial`): its chunked
+/// encode costs roughly one extra raw RNG pass over the stream (the
+/// bank cursor advances at begin *and* the per-stream cursors replay
+/// the draws), which a bare-deadline request sweeping to completion
+/// would pay for nothing. Bare deadlines therefore keep the legacy
+/// single-pass [`StopPolicy::Never`] sweep — still protected by the
+/// worker's pre-evaluation skip (already late ⇒ no sweep at all) and
+/// the post-hoc miss check. When anytime *is* on, the deadline becomes
+/// a mid-sweep budget (remaining = deadline − queueing): a late
+/// decision stops sweeping, and whether the truncated result is
+/// returned or replaced by [`Error::Deadline`] depends on
+/// `allow_partial` (handled by the caller).
+fn stop_policy_for(req: &DecisionRequest) -> StopPolicy {
+    // `allow_partial` only changes anything when there is a deadline to
+    // truncate against; on its own it must not buy the chunked path's
+    // overhead for a sweep that can never stop early.
+    let partial_deadline = req.allow_partial && req.deadline.is_some();
+    if req.threshold.is_none() && req.max_half_width.is_none() && !partial_deadline {
+        StopPolicy::Never
+    } else {
+        StopPolicy::Anytime {
+            threshold: req.threshold,
+            max_half_width: req.max_half_width,
+            budget: req.deadline.map(|d| d.saturating_sub(req.enqueued.elapsed())),
+        }
+    }
+}
+
 fn execute_batch(ctx: &mut WorkerContext, batch: Batch, router: &Router, metrics: &Metrics) {
     if batch.is_empty() {
         return;
@@ -415,22 +445,42 @@ fn execute_batch(ctx: &mut WorkerContext, batch: Batch, router: &Router, metrics
     let batch_size = batch.len();
 
     // Compute posteriors for the whole batch up-front.
-    let (posteriors, hardware_ns): (Vec<Result<f64>>, f64) = match (&exec, &mut *ctx) {
+    let (outcomes, full_bits): (Vec<Result<AnytimePosterior>>, usize) = match (&exec, &mut *ctx)
+    {
         (ExecPlan::Native, WorkerContext::Native { pool, evaluator, inputs_buf }) => {
             match pool.bank_for(batch.bits) {
                 Ok(bank) => {
-                    let hw = crate::device::DeviceParams::BIT_PERIOD_NS * bank.n_bits() as f64;
+                    let full_bits = bank.n_bits();
                     let results = batch
                         .requests
                         .iter()
                         .map(|req| {
+                            // Already past the deadline with no partial
+                            // results allowed: skip the sweep entirely —
+                            // a miss must cost nothing, not a discarded
+                            // full evaluation.
+                            if let Some(d) = req.deadline {
+                                if !req.allow_partial && req.enqueued.elapsed() >= d {
+                                    return Err(Error::Deadline(d));
+                                }
+                            }
+                            let stop = stop_policy_for(req);
                             let inputs = plan.bind_inputs(&req.params, inputs_buf);
-                            evaluator
-                                .evaluate_with_inputs(bank, plan.netlist(), inputs)
-                                .map(|r| r.posterior)
+                            let out = evaluator
+                                .evaluate_anytime(bank, plan.netlist(), inputs, &stop)?;
+                            // Ran out of budget mid-sweep without
+                            // permission to return partials: the early
+                            // stop saved the wasted bits, but the reply
+                            // is still a typed miss.
+                            if out.stop == StopReason::Timely && !req.allow_partial {
+                                return Err(Error::Deadline(
+                                    req.deadline.expect("timely stop implies a deadline"),
+                                ));
+                            }
+                            Ok(out)
                         })
                         .collect();
-                    (results, hw)
+                    (results, full_bits)
                 }
                 Err(e) => {
                     let msg = e.to_string();
@@ -439,7 +489,7 @@ fn execute_batch(ctx: &mut WorkerContext, batch: Batch, router: &Router, metrics
                         .iter()
                         .map(|_| Err(Error::Coordinator(msg.clone())))
                         .collect();
-                    (results, 0.0)
+                    (results, 0)
                 }
             }
         }
@@ -447,13 +497,22 @@ fn execute_batch(ctx: &mut WorkerContext, batch: Batch, router: &Router, metrics
             ExecPlan::Pjrt { entry, chunk },
             WorkerContext::Pjrt { runtime, rng, n_bits },
         ) => {
-            let hw = crate::device::DeviceParams::BIT_PERIOD_NS * *n_bits as f64;
-            (execute_pjrt(runtime, rng, entry, *chunk, &plan, &batch), hw)
+            let full_bits = *n_bits;
+            let results = execute_pjrt(runtime, rng, entry, *chunk, &plan, &batch)
+                .into_iter()
+                .map(|r| {
+                    // The PJRT rows don't carry the evidence marginal;
+                    // it is not surfaced in `Decision` either way.
+                    r.map(|posterior| {
+                        AnytimePosterior::exhausted(posterior, f64::NAN, full_bits)
+                    })
+                })
+                .collect();
+            (results, full_bits)
         }
         // Network batches route Native even on the PJRT backend (no AOT
         // artifact family exists for compiled netlists).
-        (ExecPlan::Native, WorkerContext::Pjrt { n_bits, .. }) => {
-            let hw = crate::device::DeviceParams::BIT_PERIOD_NS * *n_bits as f64;
+        (ExecPlan::Native, WorkerContext::Pjrt { .. }) => {
             let results = batch
                 .requests
                 .iter()
@@ -463,7 +522,7 @@ fn execute_batch(ctx: &mut WorkerContext, batch: Batch, router: &Router, metrics
                     ))
                 })
                 .collect();
-            (results, hw)
+            (results, 0)
         }
         // Plan/context mismatch is a construction bug.
         _ => {
@@ -472,30 +531,47 @@ fn execute_batch(ctx: &mut WorkerContext, batch: Batch, router: &Router, metrics
                 .iter()
                 .map(|_| Err(Error::Coordinator("backend/plan mismatch".into())))
                 .collect();
-            (results, 0.0)
+            (results, 0)
         }
     };
 
-    for (req, result) in batch.requests.into_iter().zip(posteriors) {
+    for (req, result) in batch.requests.into_iter().zip(outcomes) {
         let latency = req.enqueued.elapsed();
         let response = match result {
-            Ok(_) if req.deadline.is_some_and(|d| latency > d) => {
-                metrics.on_fail();
+            // Post-hoc miss (queueing or execution overran a deadline
+            // that forbids partials): dedicated counter, typed error.
+            Ok(_) if !req.allow_partial && req.deadline.is_some_and(|d| latency > d) => {
+                metrics.on_deadline_miss();
                 Err(Error::Deadline(req.deadline.unwrap()))
             }
-            Ok(posterior) => {
+            Ok(out) => {
+                // Hardware time and the bits-saved gauge track the bits
+                // actually *pulsed* — on the staged nonideal-device path
+                // a truncated readout still spent the whole stream, and
+                // reporting savings there would contradict the bank's
+                // own ledger.
+                let hardware_ns =
+                    crate::device::DeviceParams::BIT_PERIOD_NS * out.bits_pulsed as f64;
                 metrics.on_complete(latency, hardware_ns, plan.tag());
                 metrics.on_plan_complete(plan.id(), latency);
+                metrics.on_anytime(out.stop, out.bits_pulsed as u64, full_bits as u64);
                 Ok(Decision {
                     id: req.id,
-                    posterior,
+                    posterior: out.posterior,
                     // Closed form per params; Network plans carry the
                     // value enumerated once at prepare time.
                     exact: plan.exact(&req.params),
                     latency,
                     hardware_ns,
                     batch_size,
+                    bits_used: out.bits_used,
+                    confidence: out.half_width,
+                    stop: out.stop,
                 })
+            }
+            Err(Error::Deadline(d)) => {
+                metrics.on_deadline_miss();
+                Err(Error::Deadline(d))
             }
             Err(e) => {
                 metrics.on_fail();
@@ -535,8 +611,25 @@ fn execute_pjrt(
     };
     let mut out = Vec::with_capacity(batch.len());
     for slice in batch.requests.chunks(chunk) {
+        // The same already-late pre-skip the native arm applies: a
+        // request past its deadline at pickup is answered Deadline
+        // without its row being filled, and a slice that is *entirely*
+        // late skips the kernel call outright. (Partially-late slices
+        // still pay one fixed-shape kernel execution — PJRT batches are
+        // baked, so individual rows cannot be trimmed.)
+        let late: Vec<Option<Duration>> = slice
+            .iter()
+            .map(|req| req.deadline.filter(|&d| req.enqueued.elapsed() >= d))
+            .collect();
+        if late.iter().all(Option::is_some) {
+            out.extend(late.into_iter().map(|d| Err(Error::Deadline(d.unwrap()))));
+            continue;
+        }
         let mut probs = vec![0f32; chunk * width];
         for (i, req) in slice.iter().enumerate() {
+            if late[i].is_some() {
+                continue; // row stays zero; answered below
+            }
             match &req.params {
                 DecisionParams::Inference { prior, likelihood, likelihood_not } => {
                     probs[i * width] = *prior as f32;
@@ -562,8 +655,11 @@ fn execute_pjrt(
             Ok(flat) => {
                 // inference returns B×2 rows, fusion returns B values.
                 let stride = if is_inference { 2 } else { 1 };
-                for i in 0..slice.len() {
-                    out.push(Ok(flat[i * stride] as f64));
+                for (i, d) in late.iter().enumerate() {
+                    out.push(match d {
+                        Some(d) => Err(Error::Deadline(*d)),
+                        None => Ok(flat[i * stride] as f64),
+                    });
                 }
             }
             Err(e) => {
@@ -579,6 +675,7 @@ fn execute_pjrt(
 
 #[cfg(test)]
 mod tests {
+    use super::super::plan::MAX_POLICY_BITS;
     use super::*;
 
     fn config(workers: usize, max_batch: usize) -> AppConfig {
@@ -633,10 +730,14 @@ mod tests {
         let plan = h
             .prepare(PlanSpec::Inference)
             .unwrap()
-            .with_policy(Policy { deadline: None, bits: Some(1000) });
+            .with_policy(Policy { bits: Some(1000), ..Policy::default() });
         let d = plan.decide(inference_params()).unwrap();
         // 1000 bits × 4 µs/bit = 4 ms of virtual hardware time.
         assert!((d.hardware_ns - 4_000_000.0).abs() < 1e-6);
+        // A full sweep stamps the full length and an Exhausted stop.
+        assert_eq!(d.bits_used, 1000);
+        assert!(!d.stopped_early());
+        assert!(d.confidence > 0.0 && d.confidence < 0.1, "confidence {}", d.confidence);
         // Longer streams, tighter posterior.
         assert!((d.posterior - d.exact).abs() < 0.1);
         // Out-of-range overrides are rejected at submission (0, and
@@ -645,9 +746,18 @@ mod tests {
             let bad = h
                 .prepare(PlanSpec::Inference)
                 .unwrap()
-                .with_policy(Policy { deadline: None, bits: Some(bits) });
+                .with_policy(Policy { bits: Some(bits), ..Policy::default() });
             let err = bad.decide(inference_params()).unwrap_err();
             assert!(matches!(err, Error::Config(_)), "bits={bits}: got {err}");
+        }
+        // Out-of-range anytime knobs are rejected the same way.
+        for policy in [
+            Policy { threshold: Some(1.5), ..Policy::default() },
+            Policy { max_half_width: Some(0.0), ..Policy::default() },
+        ] {
+            let bad = h.prepare(PlanSpec::Inference).unwrap().with_policy(policy);
+            let err = bad.decide(inference_params()).unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "{policy:?}: got {err}");
         }
         coord.shutdown();
     }
@@ -813,12 +923,75 @@ mod tests {
         let err = p.wait_timeout(Duration::from_secs(5)).unwrap_err();
         assert!(matches!(err, Error::Deadline(_)));
         // The same policy through the plan API.
-        let plan = h
-            .prepare(PlanSpec::Inference)
-            .unwrap()
-            .with_policy(Policy { deadline: Some(Duration::from_nanos(1)), bits: None });
+        let plan = h.prepare(PlanSpec::Inference).unwrap().with_policy(Policy {
+            deadline: Some(Duration::from_nanos(1)),
+            ..Policy::default()
+        });
         let err = plan.decide(inference_params()).unwrap_err();
         assert!(matches!(err, Error::Deadline(_)));
+        // Misses land in the dedicated counter (they used to vanish into
+        // the generic `failed`), and still count as failures.
+        let snap = h.metrics().snapshot();
+        assert_eq!(snap.deadline_missed, 2);
+        assert!(snap.failed >= 2);
+        assert_eq!(snap.completed, 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn tight_deadline_with_allow_partial_returns_truncated_decision() {
+        let mut cfg = config(1, 4);
+        cfg.sne.n_bits = 16_384;
+        let coord = Coordinator::start(&cfg).unwrap();
+        let h = coord.handle();
+        let plan = h.prepare(PlanSpec::Inference).unwrap().with_policy(Policy {
+            deadline: Some(Duration::from_nanos(1)),
+            allow_partial: true,
+            ..Policy::default()
+        });
+        // Instead of Error::Deadline the caller gets best-so-far with
+        // its confidence: bits_used < bits, stop = Timely.
+        let d = plan.decide(inference_params()).unwrap();
+        assert!(d.bits_used < 16_384, "no truncation: used {} bits", d.bits_used);
+        assert!(d.bits_used > 0);
+        assert_eq!(d.stop, crate::network::StopReason::Timely);
+        assert!(d.stopped_early());
+        assert!(d.confidence > 0.0);
+        assert!((0.0..=1.0).contains(&d.posterior));
+        // Virtual hardware time reflects only the streamed bits.
+        let expect_ns = crate::device::DeviceParams::BIT_PERIOD_NS * d.bits_used as f64;
+        assert!((d.hardware_ns - expect_ns).abs() < 1e-6);
+        let snap = h.metrics().snapshot();
+        assert_eq!(snap.deadline_missed, 0);
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.early_exits[2], 1, "timely early exit counted");
+        assert!(snap.bits_saved() > 0);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn accuracy_targeted_policy_stops_early_and_stamps_confidence() {
+        let mut cfg = config(1, 4);
+        cfg.sne.n_bits = 16_384;
+        let coord = Coordinator::start(&cfg).unwrap();
+        let h = coord.handle();
+        let plan = h.prepare(PlanSpec::Inference).unwrap().with_policy(Policy {
+            max_half_width: Some(0.05),
+            ..Policy::default()
+        });
+        let d = plan.decide(inference_params()).unwrap();
+        assert_eq!(d.stop, crate::network::StopReason::Converged);
+        assert!(d.bits_used < 16_384, "used {} bits", d.bits_used);
+        assert!(d.confidence <= 0.05, "confidence {}", d.confidence);
+        // The truncated posterior still lands near the closed form.
+        assert!((d.posterior - d.exact).abs() < 0.2, "{} vs {}", d.posterior, d.exact);
+        let snap = h.metrics().snapshot();
+        assert_eq!(snap.early_exits[1], 1, "converged early exit counted");
+        assert!(
+            snap.bits_saved() >= 8 * 1024,
+            "expected a large saving, got {}",
+            snap.bits_saved()
+        );
         coord.shutdown();
     }
 

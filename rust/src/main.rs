@@ -34,7 +34,8 @@ use bayes_mem::config::{AppConfig, Backend};
 use bayes_mem::coordinator::{Coordinator, DecisionParams, PlanSpec};
 use bayes_mem::figures;
 use bayes_mem::network::{
-    compile_query, exact_posterior_by_name, lower, BayesNet, NetlistEvaluator,
+    compile_query, exact_posterior_by_name, lower, BayesNet, NetlistEvaluator, StopPolicy,
+    StopReason,
 };
 use bayes_mem::runtime::Runtime;
 use bayes_mem::scene::{fusion_input, VideoWorkload};
@@ -98,6 +99,38 @@ impl Flags {
     fn usize_or(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
+
+    fn f64_opt(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+}
+
+/// Shared `--threshold` / `--half-width` flags → an evaluator
+/// [`StopPolicy`] for the direct (no-coordinator) subcommands. The
+/// values go through the same range validation the serving layer
+/// applies at admission (`Policy::validate`), so a typo'd
+/// `--threshold 1.5` is an error here too instead of a sweep that
+/// "reliably" stops on the first chunk.
+fn stop_policy_from_flags(flags: &Flags) -> CliResult<StopPolicy> {
+    let threshold = flags.f64_opt("threshold");
+    let max_half_width = flags.f64_opt("half-width");
+    bayes_mem::coordinator::Policy { threshold, max_half_width, ..Default::default() }
+        .validate()?;
+    Ok(if threshold.is_none() && max_half_width.is_none() {
+        StopPolicy::Never
+    } else {
+        StopPolicy::Anytime { threshold, max_half_width, budget: None }
+    })
+}
+
+/// Human-readable stop reason for CLI reports.
+fn stop_name(stop: StopReason) -> &'static str {
+    match stop {
+        StopReason::Exhausted => "exhausted (full sweep)",
+        StopReason::Reliable => "reliable (threshold cleared)",
+        StopReason::Converged => "converged (half-width reached)",
+        StopReason::Timely => "timely (budget expired)",
+    }
 }
 
 fn load_config(flags: &Flags) -> CliResult<AppConfig> {
@@ -147,13 +180,22 @@ USAGE:
   bayes-mem fig (--all | --id <id> | --list) [--seed N]
   bayes-mem serve [--config cfg.toml] [--backend native|pjrt]
                   [--requests N] [--rate-fps F] [--workers N]
+                  [--deadline-us N] [--allow-partial] [--bits N]
+                  [--threshold P] [--half-width H]
   bayes-mem parse-scene [--frames N] [--seed N] [--backend native|pjrt]
   bayes-mem infer --prior P --lik P --lik-not P [--bits N]
+                  [--threshold P] [--half-width H]
   bayes-mem fuse --p P --p P [--p P ...] [--bits N]
+                 [--threshold P] [--half-width H]
   bayes-mem network --spec net.toml --query NODE [--evidence NODE=1 ...]
-                    [--bits N] [--seed N]
+                    [--bits N] [--seed N] [--threshold P] [--half-width H]
   bayes-mem artifacts [--artifacts DIR]
   bayes-mem config
+
+Anytime early exit: --threshold / --half-width stop a decision as soon
+as its Wilson confidence interval clears the threshold or reaches the
+target width; serve's --deadline-us budgets each decision and
+--allow-partial returns best-so-far instead of a deadline error.
 ";
 
 fn cmd_fig(flags: &Flags) -> CliResult<()> {
@@ -186,24 +228,30 @@ fn cmd_infer(flags: &Flags) -> CliResult<()> {
     let mut bank = SneBank::new(cfg.sne, flags.u64_or("seed", 42))?;
     // The unified serving path: the Eq.-1 chain lowered to a netlist
     // once, parameters bound per decision (bit-identical to the
-    // dedicated inference operator).
+    // dedicated inference operator). `--threshold` / `--half-width`
+    // switch on the anytime chunked sweep with early exit.
     let netlist = lower::inference_netlist();
-    let r = NetlistEvaluator::new().evaluate_with_inputs(
+    let r = NetlistEvaluator::new().evaluate_anytime(
         &mut bank,
         &netlist,
         &[prior, lik, lik_not],
+        &stop_policy_from_flags(flags)?,
     )?;
     let exact = bayes_mem::bayes::exact_posterior(prior, lik, lik_not);
     let exact_marginal = bayes_mem::bayes::exact_marginal(prior, lik, lik_not);
     println!(
         "P(A)={prior:.3} P(B|A)={lik:.3} P(B|¬A)={lik_not:.3}\n\
-         posterior P(A|B) = {:.4}  (exact {exact:.4}, |err| {:.4})\n\
+         posterior P(A|B) = {:.4} ± {:.4}  (exact {exact:.4}, |err| {:.4})\n\
          marginal  P(B)   = {:.4}  (exact {exact_marginal:.4})\n\
+         stream: {}/{bits} bits, {}\n\
          hardware: {:.3} ms, {:.2} nJ",
         r.posterior,
+        r.half_width,
         (r.posterior - exact).abs(),
         r.marginal,
-        bits as f64 * 0.004,
+        r.bits_used,
+        stop_name(r.stop),
+        r.bits_used as f64 * 0.004,
         bank.ledger().energy_nj,
     );
     Ok(())
@@ -221,13 +269,22 @@ fn cmd_fuse(flags: &Flags) -> CliResult<()> {
     let netlist = lower::fusion_netlist(ps.len())?;
     let mut inputs = ps.clone();
     inputs.push(0.5);
-    let r = NetlistEvaluator::new().evaluate_with_inputs(&mut bank, &netlist, &inputs)?;
+    let r = NetlistEvaluator::new().evaluate_anytime(
+        &mut bank,
+        &netlist,
+        &inputs,
+        &stop_policy_from_flags(flags)?,
+    )?;
     let exact = bayes_mem::bayes::exact_fusion_m(&ps);
     println!(
-        "inputs {ps:?}\nfused = {:.4}  (exact {exact:.4}, |err| {:.4})\nhardware: {:.3} ms, {:.2} nJ",
+        "inputs {ps:?}\nfused = {:.4} ± {:.4}  (exact {exact:.4}, |err| {:.4})\n\
+         stream: {}/{bits} bits, {}\nhardware: {:.3} ms, {:.2} nJ",
         r.posterior,
+        r.half_width,
         (r.posterior - exact).abs(),
-        bits as f64 * 0.004,
+        r.bits_used,
+        stop_name(r.stop),
+        r.bits_used as f64 * 0.004,
         bank.ledger().energy_nj,
     );
     Ok(())
@@ -255,7 +312,12 @@ fn cmd_network(flags: &Flags) -> CliResult<()> {
     let mut bank = SneBank::new(cfg.sne, flags.u64_or("seed", 42))?;
     let ev_refs: Vec<(&str, bool)> = evidence.iter().map(|(n, v)| (n.as_str(), *v)).collect();
     let netlist = compile_query(&net, query, &ev_refs)?;
-    let r = NetlistEvaluator::new().evaluate(&mut bank, &netlist)?;
+    let r = NetlistEvaluator::new().evaluate_anytime(
+        &mut bank,
+        &netlist,
+        netlist.inputs(),
+        &stop_policy_from_flags(flags)?,
+    )?;
     let (exact, exact_ev) = exact_posterior_by_name(&net, query, &ev_refs)?;
     let given = if evidence.is_empty() {
         "no evidence".to_string()
@@ -269,17 +331,21 @@ fn cmd_network(flags: &Flags) -> CliResult<()> {
     let display_name = if net.name().is_empty() { spec } else { net.name() };
     println!(
         "network '{display_name}': {} nodes -> {} gates, {} SNE streams\n\
-         P({query}=1 | {given}) = {:.4}  (exact {:.4}, |err| {:.4})\n\
+         P({query}=1 | {given}) = {:.4} ± {:.4}  (exact {:.4}, |err| {:.4})\n\
          P(evidence)          = {:.4}  (exact {:.4})\n\
+         stream: {}/{bits} bits, {}\n\
          hardware: {:.3} ms, {:.2} nJ",
         net.len(),
         netlist.ops().len(),
         netlist.inputs().len(),
         r.posterior,
+        r.half_width,
         exact,
         (r.posterior - exact).abs(),
         r.marginal,
         exact_ev,
+        r.bits_used,
+        stop_name(r.stop),
         bank.ledger().clock.elapsed_ms(),
         bank.ledger().energy_nj,
     );
@@ -303,9 +369,22 @@ fn cmd_serve(flags: &Flags) -> CliResult<()> {
     cfg.coordinator.workers = flags.usize_or("workers", cfg.coordinator.workers);
     let requests = flags.usize_or("requests", 10_000);
     let rate_fps = flags.f64_or("rate-fps", 2_500.0);
+    // Serving policy: the config's `[policy]` defaults with CLI
+    // overrides. Anytime knobs make workers stop each decision as soon
+    // as it is reliable/converged or its deadline budget runs out.
+    let mut policy = cfg.default_policy;
+    if let Some(us) = flags.f64_opt("deadline-us") {
+        policy.deadline = Some(Duration::from_micros(us.max(0.0) as u64));
+    }
+    if let Some(bits) = flags.get("bits").and_then(|v| v.parse().ok()) {
+        policy.bits = Some(bits);
+    }
+    policy.threshold = flags.f64_opt("threshold").or(policy.threshold);
+    policy.max_half_width = flags.f64_opt("half-width").or(policy.max_half_width);
+    policy.allow_partial = policy.allow_partial || flags.has("allow-partial");
     println!(
         "serving {requests} requests at {rate_fps} fps offered load \
-         ({:?} backend, {} workers, batch {} / {:?})",
+         ({:?} backend, {} workers, batch {} / {:?}, policy {policy:?})",
         cfg.coordinator.backend,
         cfg.coordinator.workers,
         cfg.coordinator.max_batch,
@@ -315,8 +394,9 @@ fn cmd_serve(flags: &Flags) -> CliResult<()> {
     let handle = coord.handle();
     // Prepare once (validation + compilation amortised across the run),
     // then submit per-decision params against the shared plans.
-    let inference_plan = handle.prepare(PlanSpec::Inference)?;
-    let fusion_plan = handle.prepare(PlanSpec::Fusion { modalities: 2 })?;
+    let inference_plan = handle.prepare(PlanSpec::Inference)?.with_policy(policy);
+    let fusion_plan =
+        handle.prepare(PlanSpec::Fusion { modalities: 2 })?.with_policy(policy);
     let interval = Duration::from_secs_f64(1.0 / rate_fps);
     let started = Instant::now();
     let mut pending = Vec::with_capacity(requests);

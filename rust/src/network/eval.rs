@@ -1,5 +1,6 @@
 //! Netlist evaluation: the word-parallel engine the serving layer uses,
-//! plus a bit-serial reference walk (the accuracy/perf comparator in
+//! an **anytime** chunked variant with confidence-bound early exit, and
+//! a bit-serial reference walk (the accuracy/perf comparator in
 //! `benches/network.rs`).
 //!
 //! The word-parallel path follows the `bayes::batch` conventions: one
@@ -9,12 +10,238 @@
 //! [`crate::logic::cordiv_word`] Hillis–Steele word step, and tails
 //! masked by the shared `tail_word_mask` convention. The steady state
 //! allocates nothing: the scratch buffer is reused across calls.
+//!
+//! The anytime path ([`NetlistEvaluator::evaluate_anytime`]) sweeps the
+//! same netlist in word-chunks — CORDIV's flip-flop already carries
+//! across words, so the sweep is naturally incremental — keeping running
+//! numerator/denominator popcounts and, after each chunk, a Wilson
+//! confidence interval on the quotient. It stops when the interval
+//! clears a decision threshold (*reliable*), falls under a target width
+//! (*converged*), or the time budget is about to expire (*timely* —
+//! best-so-far with its confidence instead of an error). This is the
+//! software twin of the short read cycles in the memristor Bayesian
+//! machine (arXiv 2112.10547) and the continuous convergence of
+//! autonomous probabilistic circuits (arXiv 2003.01767): inference stops
+//! when the answer is good enough, and bits saved are pulses saved.
+
+use std::time::{Duration, Instant};
 
 use crate::logic::cordiv_word;
 use crate::stochastic::{tail_word_mask, SneBank};
-use crate::Result;
+use crate::util::stats::wilson_half_width;
+use crate::{Error, Result};
 
 use super::compile::{GateOp, Netlist};
+
+/// Words per anytime chunk (256 bits): coarse enough that the per-chunk
+/// Wilson check is noise, fine enough that an early exit lands within a
+/// few hundred bits of the ideal stopping point.
+pub const ANYTIME_CHUNK_WORDS: usize = 4;
+
+/// Standard-normal quantile used for anytime confidence intervals
+/// (`z = 3` ≈ 99.7 % two-sided coverage of the quotient density).
+pub const ANYTIME_Z: f64 = 3.0;
+
+/// Minimum bits swept before a reliable/converged stop may fire — below
+/// this the Wilson interval is too wide to mean anything.
+pub const MIN_ANYTIME_BITS: usize = 64;
+
+/// When to stop an anytime evaluation.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub enum StopPolicy {
+    /// Sweep the full configured stream length — **bit-identical** to
+    /// [`NetlistEvaluator::evaluate_with_inputs`] (it *is* that path;
+    /// regression-pinned).
+    #[default]
+    Never,
+    /// Chunked sweep with early exit; any enabled criterion stops it.
+    Anytime {
+        /// *Reliable* stop: halt once the confidence interval clears
+        /// this decision threshold on either side.
+        threshold: Option<f64>,
+        /// *Converged* stop: halt once the interval half-width falls to
+        /// this target.
+        max_half_width: Option<f64>,
+        /// *Timely* stop: halt (returning best-so-far) when this
+        /// wall-clock budget is about to expire.
+        budget: Option<Duration>,
+    },
+}
+
+impl StopPolicy {
+    /// Anytime policy with only a decision threshold.
+    pub fn reliable(threshold: f64) -> Self {
+        StopPolicy::Anytime { threshold: Some(threshold), max_half_width: None, budget: None }
+    }
+
+    /// Anytime policy with only an accuracy (half-width) target.
+    pub fn converged(max_half_width: f64) -> Self {
+        StopPolicy::Anytime {
+            threshold: None,
+            max_half_width: Some(max_half_width),
+            budget: None,
+        }
+    }
+
+    /// Anytime policy with only a time budget.
+    pub fn timely(budget: Duration) -> Self {
+        StopPolicy::Anytime { threshold: None, max_half_width: None, budget: Some(budget) }
+    }
+}
+
+/// Why an (anytime) evaluation stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// The full configured stream length was swept — no early exit.
+    Exhausted,
+    /// The confidence interval cleared the decision threshold.
+    Reliable,
+    /// The interval half-width reached the target.
+    Converged,
+    /// The time budget was about to expire; best-so-far returned.
+    Timely,
+}
+
+/// Outcome of one anytime decision: the measured posterior plus how far
+/// the stream ran and how tight the estimate is.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AnytimePosterior {
+    /// Measured `P(query=1 | evidence)` over the bits actually swept.
+    pub posterior: f64,
+    /// Measured `P(evidence)` over the same bits.
+    pub marginal: f64,
+    /// Bits actually read out (= the bank's configured length unless an
+    /// early exit fired). The confidence below is at this length.
+    pub bits_used: usize,
+    /// Bits whose device pulses were actually spent: equals `bits_used`
+    /// on the ideal-device path, but the full stream length on the
+    /// staged nonideal path (`drift_coupling != 0` walks every pulse at
+    /// begin) — this is what hardware time/energy accounting must use.
+    pub bits_pulsed: usize,
+    /// Wilson half-width of the confidence interval around `posterior`
+    /// (z = [`ANYTIME_Z`]), computed on the **effective** sample count:
+    /// CORDIV's flip-flop only takes fresh information on slots where
+    /// the divisor (evidence) bit is 1 and *holds* everywhere else, so
+    /// the interval uses the divisor-hit count, not the raw bit count.
+    /// For marginal queries (all-ones divisor) the two coincide; for
+    /// rare-evidence queries this is what keeps the reported confidence
+    /// honest instead of ~√(1/P(evidence)) too tight.
+    pub half_width: f64,
+    /// Which criterion ended the sweep.
+    pub stop: StopReason,
+}
+
+impl AnytimePosterior {
+    /// Wrap a **full-length** (non-anytime) result, reconstructing the
+    /// confidence half-width from the measured densities — the single
+    /// place the "posterior at `n_bits` → confidence" conversion lives
+    /// (used by the [`StopPolicy::Never`] arm here and by the serving
+    /// layer for backends that only produce full sweeps). A non-finite
+    /// `marginal` (backends that don't report one) falls back to the
+    /// raw bit count.
+    pub fn exhausted(posterior: f64, marginal: f64, n_bits: usize) -> Self {
+        let d_ones = if marginal.is_finite() {
+            (marginal.clamp(0.0, 1.0) * n_bits as f64).round() as u64
+        } else {
+            n_bits as u64
+        };
+        Self {
+            posterior,
+            marginal,
+            bits_used: n_bits,
+            bits_pulsed: n_bits,
+            half_width: quotient_half_width(
+                (posterior.clamp(0.0, 1.0) * n_bits as f64).round() as u64,
+                n_bits as u64,
+                d_ones,
+            ),
+            stop: StopReason::Exhausted,
+        }
+    }
+}
+
+/// Confidence half-width for the CORDIV quotient after `bits` swept
+/// bits with `d_ones` divisor hits: the flip-flop only samples fresh
+/// information where the divisor bit is 1, so the Wilson interval is
+/// taken over that effective count (= `bits` for all-ones divisors).
+/// `d_ones = 0` means no evidence slot has been seen — no information,
+/// the interval is all of `[0, 1]`.
+fn quotient_half_width(q_ones: u64, bits: u64, d_ones: u64) -> f64 {
+    if bits == 0 {
+        return 0.5;
+    }
+    let p = q_ones as f64 / bits as f64;
+    let ones_eff = (p * d_ones as f64).round() as u64;
+    wilson_half_width(ones_eff, d_ones, ANYTIME_Z)
+}
+
+/// One word-parallel pass of the netlist gates over `words` words of
+/// `scratch` at slot stride `stride`; `tail` carries the final-word
+/// mask when this span contains the stream's last word. Shared by the
+/// one-shot sweep and the anytime chunked sweep so the interpreter
+/// exists exactly once (the bit-identity pins depend on that).
+fn run_gates(scratch: &mut [u64], ops: &[GateOp], stride: usize, words: usize, tail: Option<u64>) {
+    for op in ops {
+        match *op {
+            GateOp::Mux { dst, lo, hi, sel } => {
+                for k in 0..words {
+                    let s = scratch[sel * stride + k];
+                    scratch[dst * stride + k] =
+                        (s & scratch[hi * stride + k]) | (!s & scratch[lo * stride + k]);
+                }
+            }
+            GateOp::And { dst, a, b } => {
+                for k in 0..words {
+                    scratch[dst * stride + k] =
+                        scratch[a * stride + k] & scratch[b * stride + k];
+                }
+            }
+            GateOp::Not { dst, a } => {
+                for k in 0..words {
+                    scratch[dst * stride + k] = !scratch[a * stride + k];
+                }
+                if let Some(m) = tail {
+                    scratch[dst * stride + words - 1] &= m;
+                }
+            }
+            GateOp::Const1 { dst } => {
+                for k in 0..words {
+                    scratch[dst * stride + k] = u64::MAX;
+                }
+                if let Some(m) = tail {
+                    scratch[dst * stride + words - 1] &= m;
+                }
+            }
+        }
+    }
+}
+
+/// CORDIV readout over `words` words of the num/den slots, accumulating
+/// quotient/divisor popcounts into `q_ones`/`d_ones` with the flip-flop
+/// carried in `dff`. Same sharing rationale as [`run_gates`].
+#[allow(clippy::too_many_arguments)]
+fn cordiv_accumulate(
+    scratch: &[u64],
+    num: usize,
+    den: usize,
+    stride: usize,
+    words: usize,
+    tail: Option<u64>,
+    dff: &mut bool,
+    q_ones: &mut u64,
+    d_ones: &mut u64,
+) {
+    for k in 0..words {
+        let mask = match tail {
+            Some(m) if k + 1 == words => m,
+            _ => u64::MAX,
+        };
+        let nw = scratch[num * stride + k] & mask;
+        let dw = scratch[den * stride + k] & mask;
+        *d_ones += dw.count_ones() as u64;
+        *q_ones += (cordiv_word(nw, dw, dff) & mask).count_ones() as u64;
+    }
+}
 
 /// Measured outputs of one compiled-network decision.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -58,62 +285,161 @@ impl NetlistEvaluator {
         netlist: &Netlist,
         inputs: &[f64],
     ) -> Result<NetworkPosterior> {
-        if inputs.len() != netlist.inputs().len() {
-            return Err(crate::Error::Network(format!(
-                "netlist expects {} input streams, got {}",
-                netlist.inputs().len(),
-                inputs.len()
-            )));
-        }
+        check_inputs(netlist, inputs)?;
         let n_bits = bank.n_bits();
         let w = n_bits.div_ceil(64);
         self.scratch.resize(netlist.n_slots() * w, 0);
         let n_in = inputs.len();
-        bank.encode_group_into(inputs, &mut self.scratch[..n_in * w])?;
-        for op in netlist.ops() {
-            match *op {
-                GateOp::Mux { dst, lo, hi, sel } => {
-                    for k in 0..w {
-                        let s = self.scratch[sel * w + k];
-                        self.scratch[dst * w + k] =
-                            (s & self.scratch[hi * w + k]) | (!s & self.scratch[lo * w + k]);
-                    }
-                }
-                GateOp::And { dst, a, b } => {
-                    for k in 0..w {
-                        self.scratch[dst * w + k] =
-                            self.scratch[a * w + k] & self.scratch[b * w + k];
-                    }
-                }
-                GateOp::Not { dst, a } => {
-                    for k in 0..w {
-                        self.scratch[dst * w + k] = !self.scratch[a * w + k];
-                    }
-                    self.scratch[dst * w + w - 1] &= tail_word_mask(n_bits);
-                }
-                GateOp::Const1 { dst } => {
-                    for k in 0..w {
-                        self.scratch[dst * w + k] = u64::MAX;
-                    }
-                    self.scratch[dst * w + w - 1] &= tail_word_mask(n_bits);
-                }
-            }
+        if let Err(e) = bank.encode_group_into(inputs, &mut self.scratch[..n_in * w]) {
+            // Inputs were pre-validated, so a failure here means the
+            // encode itself aborted mid-group (device wear): some streams
+            // already pulsed. Close the decision so the bank's
+            // ledger/stream accounting stays aligned for later decisions
+            // instead of silently desyncing.
+            bank.finish_decision();
+            return Err(e);
         }
+        run_gates(&mut self.scratch, netlist.ops(), w, w, Some(tail_word_mask(n_bits)));
         // CORDIV readout over the num/den taps, accumulating popcounts.
-        let (num, den) = (netlist.num_slot(), netlist.den_slot());
         let mut dff = false;
         let (mut q_ones, mut d_ones) = (0u64, 0u64);
-        for k in 0..w {
-            let mask = if k + 1 == w { tail_word_mask(n_bits) } else { u64::MAX };
-            let nw = self.scratch[num * w + k] & mask;
-            let dw = self.scratch[den * w + k] & mask;
-            d_ones += dw.count_ones() as u64;
-            q_ones += (cordiv_word(nw, dw, &mut dff) & mask).count_ones() as u64;
-        }
+        cordiv_accumulate(
+            &self.scratch,
+            netlist.num_slot(),
+            netlist.den_slot(),
+            w,
+            w,
+            Some(tail_word_mask(n_bits)),
+            &mut dff,
+            &mut q_ones,
+            &mut d_ones,
+        );
         bank.finish_decision();
         Ok(NetworkPosterior {
             posterior: q_ones as f64 / n_bits as f64,
             marginal: d_ones as f64 / n_bits as f64,
+        })
+    }
+
+    /// **Anytime** evaluation: sweep the netlist in
+    /// [`ANYTIME_CHUNK_WORDS`]-word chunks over a chunked grouped encode
+    /// ([`SneBank::begin_group_chunks`], bit-identical draw order to the
+    /// whole-stream encode), keep running numerator/denominator
+    /// popcounts, and after each chunk test `policy`'s stop criteria
+    /// against a Wilson confidence interval on the quotient density.
+    ///
+    /// [`StopPolicy::Never`] *is* the legacy full sweep
+    /// ([`Self::evaluate_with_inputs`]) — bit-identical by construction —
+    /// and an [`StopPolicy::Anytime`] run whose criteria never fire
+    /// produces the identical posterior too (pinned by tests): the
+    /// chunked encode emits the same bits and CORDIV's flip-flop carries
+    /// across chunk boundaries exactly as it carries across words.
+    ///
+    /// An early exit leaves the unread remainder of every SNE stream
+    /// unpulsed (bits saved = hardware energy/time saved) while the
+    /// bank's RNG cursor still advances past the whole virtual stream,
+    /// so later decisions on the bank are bit-reproducible no matter
+    /// where this one stopped. The ledger records only `bits_used`.
+    pub fn evaluate_anytime(
+        &mut self,
+        bank: &mut SneBank,
+        netlist: &Netlist,
+        inputs: &[f64],
+        policy: &StopPolicy,
+    ) -> Result<AnytimePosterior> {
+        let n_bits = bank.n_bits();
+        let StopPolicy::Anytime { threshold, max_half_width, budget } = *policy else {
+            let r = self.evaluate_with_inputs(bank, netlist, inputs)?;
+            return Ok(AnytimePosterior::exhausted(r.posterior, r.marginal, n_bits));
+        };
+        check_inputs(netlist, inputs)?;
+        let w = n_bits.div_ceil(64);
+        let cw = ANYTIME_CHUNK_WORDS.min(w);
+        let n_in = inputs.len();
+        self.scratch.resize(netlist.n_slots() * cw, 0);
+        // The budget clock starts *before* the encode begins: on the
+        // staged nonideal path `begin_group_chunks` walks every pulse,
+        // and that time must count against the deadline.
+        let started = budget.map(|_| Instant::now());
+        let mut enc = match bank.begin_group_chunks(inputs) {
+            Ok(enc) => enc,
+            Err(e) => {
+                // Same bank-restore contract as `evaluate_with_inputs`:
+                // inputs were pre-validated, so this is a mid-group
+                // device failure (wear) — some streams may already have
+                // pulsed (the staged nonideal path walks every pulse at
+                // begin). Close the decision so the ledger stays aligned.
+                bank.finish_decision();
+                return Err(e);
+            }
+        };
+        let (num, den) = (netlist.num_slot(), netlist.den_slot());
+        let mut dff = false;
+        let (mut q_ones, mut d_ones) = (0u64, 0u64);
+        let mut bits_done = 0usize;
+        let mut stop = StopReason::Exhausted;
+        let mut chunks = 0u32;
+        loop {
+            let words = bank.encode_group_chunk_into(&mut enc, &mut self.scratch[..n_in * cw])?;
+            if words == 0 {
+                break;
+            }
+            chunks += 1;
+            let is_tail = enc.is_done();
+            let chunk_bits = if is_tail { n_bits - bits_done } else { words * 64 };
+            let tail = is_tail.then(|| tail_word_mask(n_bits));
+            run_gates(&mut self.scratch, netlist.ops(), cw, words, tail);
+            cordiv_accumulate(
+                &self.scratch,
+                num,
+                den,
+                cw,
+                words,
+                tail,
+                &mut dff,
+                &mut q_ones,
+                &mut d_ones,
+            );
+            bits_done += chunk_bits;
+            if bits_done >= n_bits {
+                break; // Exhausted — identical to the full sweep.
+            }
+            if bits_done >= MIN_ANYTIME_BITS && (threshold.is_some() || max_half_width.is_some())
+            {
+                let hw = quotient_half_width(q_ones, bits_done as u64, d_ones);
+                let p = q_ones as f64 / bits_done as f64;
+                if threshold.is_some_and(|t| p - hw > t || p + hw < t) {
+                    stop = StopReason::Reliable;
+                    break;
+                }
+                if max_half_width.is_some_and(|target| hw <= target) {
+                    stop = StopReason::Converged;
+                    break;
+                }
+            }
+            if let (Some(b), Some(t0)) = (budget, started) {
+                // Stop while there is still time to reply: one more
+                // mean-cost chunk must fit in the remaining budget.
+                let elapsed = t0.elapsed();
+                if elapsed + elapsed / chunks >= b {
+                    stop = StopReason::Timely;
+                    break;
+                }
+            }
+        }
+        // The clock advances by the bits actually *pulsed*: equal to the
+        // readout length on the ideal-device path, but the full stream
+        // on the staged nonideal path (whose pulses were all walked at
+        // begin — energy and time stay mutually consistent).
+        let bits_pulsed = enc.bits_pulsed();
+        bank.finish_decision_bits(bits_pulsed);
+        Ok(AnytimePosterior {
+            posterior: q_ones as f64 / bits_done as f64,
+            marginal: d_ones as f64 / bits_done as f64,
+            bits_used: bits_done,
+            bits_pulsed,
+            half_width: quotient_half_width(q_ones, bits_done as u64, d_ones),
+            stop,
         })
     }
 
@@ -131,7 +457,11 @@ impl NetlistEvaluator {
         let w = n_bits.div_ceil(64);
         let n_in = netlist.inputs().len();
         let mut packed = vec![0u64; n_in * w];
-        bank.encode_group_into(netlist.inputs(), &mut packed)?;
+        if let Err(e) = bank.encode_group_into(netlist.inputs(), &mut packed) {
+            // Same bank-restore contract as `evaluate_with_inputs`.
+            bank.finish_decision();
+            return Err(e);
+        }
         let mut slots = vec![false; netlist.n_slots()];
         let mut dff = false;
         let (mut q_ones, mut d_ones) = (0u64, 0u64);
@@ -165,6 +495,24 @@ impl NetlistEvaluator {
             marginal: d_ones as f64 / n_bits as f64,
         })
     }
+}
+
+/// Shape + range validation of decision inputs, **before** the bank is
+/// touched: the common error path (an out-of-range probability) must
+/// leave the bank's RNG/round-robin/ledger completely unchanged so later
+/// decisions are unaffected (regression-pinned).
+fn check_inputs(netlist: &Netlist, inputs: &[f64]) -> Result<()> {
+    if inputs.len() != netlist.inputs().len() {
+        return Err(Error::Network(format!(
+            "netlist expects {} input streams, got {}",
+            netlist.inputs().len(),
+            inputs.len()
+        )));
+    }
+    for &p in inputs {
+        Error::check_prob("p", p)?;
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -247,6 +595,193 @@ mod tests {
         let mut eval2 = NetlistEvaluator::new();
         assert_eq!(first, eval2.evaluate(&mut b2, &nl).unwrap());
         assert_eq!(second, eval2.evaluate(&mut b2, &nl).unwrap());
+    }
+
+    #[test]
+    fn anytime_never_is_the_full_sweep_bit_for_bit() {
+        let net = diamond();
+        let nl = compile_query(&net, "a", &[("d", true)]).unwrap();
+        for n_bits in [100usize, 130, 1024] {
+            let mut ba = bank(n_bits, 21);
+            let full = NetlistEvaluator::new().evaluate(&mut ba, &nl).unwrap();
+            let mut bb = bank(n_bits, 21);
+            let any = NetlistEvaluator::new()
+                .evaluate_anytime(&mut bb, &nl, nl.inputs(), &StopPolicy::Never)
+                .unwrap();
+            assert_eq!(any.posterior, full.posterior);
+            assert_eq!(any.marginal, full.marginal);
+            assert_eq!(any.bits_used, n_bits);
+            assert_eq!(any.stop, StopReason::Exhausted);
+            assert_eq!(ba.ledger().pulses, bb.ledger().pulses);
+        }
+    }
+
+    #[test]
+    fn anytime_exhausted_run_matches_full_sweep_bitwise() {
+        // An Anytime policy whose criteria never fire must reproduce the
+        // one-shot word sweep exactly: same bits, same CORDIV carries
+        // across chunk boundaries, same posterior/marginal/ledger.
+        let net = diamond();
+        let no_stop = StopPolicy::Anytime { threshold: None, max_half_width: None, budget: None };
+        for (query, evidence) in [
+            ("a", vec![("d", true)]),
+            ("b", vec![("a", true), ("d", false)]),
+            ("d", vec![]),
+        ] {
+            let nl = compile_query(&net, query, &evidence).unwrap();
+            for n_bits in [64usize, 100, 130, 1000, 1024] {
+                let mut bw = bank(n_bits, 31);
+                let full = NetlistEvaluator::new().evaluate(&mut bw, &nl).unwrap();
+                let mut ba = bank(n_bits, 31);
+                let any = NetlistEvaluator::new()
+                    .evaluate_anytime(&mut ba, &nl, nl.inputs(), &no_stop)
+                    .unwrap();
+                assert_eq!(any.posterior, full.posterior, "{query} @ {n_bits} bits");
+                assert_eq!(any.marginal, full.marginal, "{query} @ {n_bits} bits");
+                assert_eq!(any.bits_used, n_bits);
+                assert_eq!(any.stop, StopReason::Exhausted);
+                assert_eq!(bw.ledger().pulses, ba.ledger().pulses);
+                assert_eq!(bw.ledger().switch_events, ba.ledger().switch_events);
+            }
+        }
+    }
+
+    #[test]
+    fn anytime_converged_stops_early_within_reported_bound() {
+        let net = diamond();
+        let nl = compile_query(&net, "a", &[("d", true)]).unwrap();
+        let n_bits = 32_768;
+        let mut bfull = bank(n_bits, 5);
+        let full = NetlistEvaluator::new().evaluate(&mut bfull, &nl).unwrap();
+        let mut bany = bank(n_bits, 5);
+        let any = NetlistEvaluator::new()
+            .evaluate_anytime(&mut bany, &nl, nl.inputs(), &StopPolicy::converged(0.02))
+            .unwrap();
+        assert_eq!(any.stop, StopReason::Converged);
+        assert!(any.bits_used < n_bits, "no early exit at {} bits", any.bits_used);
+        assert!(any.bits_used >= MIN_ANYTIME_BITS);
+        assert!(any.half_width <= 0.02, "half width {}", any.half_width);
+        // The truncated estimate agrees with the full sweep within the
+        // two estimates' combined confidence bounds.
+        let full_hw = crate::util::stats::wilson_half_width(
+            (full.posterior * n_bits as f64).round() as u64,
+            n_bits as u64,
+            ANYTIME_Z,
+        );
+        assert!(
+            (any.posterior - full.posterior).abs() <= any.half_width + full_hw + 0.02,
+            "early {} vs full {} (hw {} + {})",
+            any.posterior,
+            full.posterior,
+            any.half_width,
+            full_hw
+        );
+        // Early exit saved pulses.
+        assert!(bany.ledger().pulses < bfull.ledger().pulses);
+    }
+
+    #[test]
+    fn anytime_reliable_stops_once_threshold_clears() {
+        // Marginal query on a p = 0.9 root: the interval clears a 0.5
+        // threshold almost immediately.
+        let mut net = BayesNet::new();
+        net.add_root("a", 0.9).unwrap();
+        let nl = compile_query(&net, "a", &[]).unwrap();
+        let n_bits = 16_384;
+        let mut b = bank(n_bits, 6);
+        let any = NetlistEvaluator::new()
+            .evaluate_anytime(&mut b, &nl, nl.inputs(), &StopPolicy::reliable(0.5))
+            .unwrap();
+        assert_eq!(any.stop, StopReason::Reliable);
+        assert!(any.bits_used < n_bits / 4, "used {} bits", any.bits_used);
+        assert!(any.posterior - any.half_width > 0.5, "interval must clear the threshold");
+    }
+
+    #[test]
+    fn anytime_timely_returns_best_so_far() {
+        let net = diamond();
+        let nl = compile_query(&net, "a", &[("d", true)]).unwrap();
+        let n_bits = 65_536;
+        let mut b = bank(n_bits, 7);
+        // Zero budget: one chunk runs (there is always *a* result), then
+        // the timely stop fires — never an error.
+        let any = NetlistEvaluator::new()
+            .evaluate_anytime(&mut b, &nl, nl.inputs(), &StopPolicy::timely(Duration::ZERO))
+            .unwrap();
+        assert_eq!(any.stop, StopReason::Timely);
+        assert!(any.bits_used >= ANYTIME_CHUNK_WORDS * 64);
+        assert!(any.bits_used < n_bits);
+        assert!((0.0..=1.0).contains(&any.posterior));
+        assert!(any.half_width > 0.0);
+        // The virtual clock reflects only the bits actually streamed.
+        let expect_ns = crate::device::DeviceParams::BIT_PERIOD_NS * any.bits_used as f64;
+        assert!((b.ledger().clock.elapsed_ns() - expect_ns).abs() < 1e-6);
+    }
+
+    #[test]
+    fn invalid_inputs_leave_the_bank_untouched() {
+        // The out-of-range error path must not consume RNG/SNE state:
+        // a later decision on the same bank matches a fresh bank.
+        let net = diamond();
+        let nl = compile_query(&net, "a", &[("d", true)]).unwrap();
+        let mut touched = bank(1000, 13);
+        let mut eval = NetlistEvaluator::new();
+        let mut bad = nl.inputs().to_vec();
+        bad[2] = 1.5;
+        assert!(eval.evaluate_with_inputs(&mut touched, &nl, &bad).is_err());
+        assert!(eval
+            .evaluate_anytime(&mut touched, &nl, &bad, &StopPolicy::converged(0.05))
+            .is_err());
+        assert_eq!(touched.ledger().pulses, 0, "failed validation must not pulse");
+        let after = eval.evaluate(&mut touched, &nl).unwrap();
+        let mut fresh = bank(1000, 13);
+        let expect = NetlistEvaluator::new().evaluate(&mut fresh, &nl).unwrap();
+        assert_eq!(after, expect, "error path desynced the bank");
+    }
+
+    #[test]
+    fn mid_encode_failure_still_closes_the_decision() {
+        use crate::device::{DeviceParams, WearPolicy};
+        // One SNE with a tiny endurance budget and a fail-fast policy:
+        // the first stream wears the device out, the second stream's
+        // `next_sne` errors mid-group. The evaluator must still close
+        // the decision so the ledger's clock/decision accounting stays
+        // aligned (the pulses already spent are physical).
+        let net = diamond();
+        let nl = compile_query(&net, "a", &[("d", true)]).unwrap();
+        let params = DeviceParams { endurance_cycles: 10, ..Default::default() };
+        let cfg = SneConfig {
+            n_bits: 100,
+            n_snes: 1,
+            params,
+            wear_policy: WearPolicy::Fail,
+        };
+        let mut b = SneBank::new(cfg, 17).unwrap();
+        let err = NetlistEvaluator::new().evaluate(&mut b, &nl).unwrap_err();
+        assert!(matches!(err, crate::Error::DeviceWorn { .. }));
+        assert_eq!(b.ledger().decisions, 1, "decision must be closed on the error path");
+        assert!(b.ledger().pulses > 0, "some streams pulsed before the failure");
+
+        // The anytime path honours the same contract: a nonideal-device
+        // bank whose staged encode wears out mid-group still closes the
+        // decision before surfacing the error.
+        let params = DeviceParams {
+            endurance_cycles: 10,
+            drift_coupling: 0.05,
+            ..Default::default()
+        };
+        let cfg = SneConfig {
+            n_bits: 100,
+            n_snes: 1,
+            params,
+            wear_policy: WearPolicy::Fail,
+        };
+        let mut b = SneBank::new(cfg, 18).unwrap();
+        let err = NetlistEvaluator::new()
+            .evaluate_anytime(&mut b, &nl, nl.inputs(), &StopPolicy::converged(0.05))
+            .unwrap_err();
+        assert!(matches!(err, crate::Error::DeviceWorn { .. }));
+        assert_eq!(b.ledger().decisions, 1, "anytime error path must close the decision");
     }
 
     #[test]

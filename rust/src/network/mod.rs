@@ -31,7 +31,10 @@
 //! 4. **Evaluate** ([`NetlistEvaluator`]) — run the netlist over packed
 //!    `u64` words (the `bayes::batch` conventions: grouped encode,
 //!    shared `cordiv_word`/`tail_word_mask`, zero steady-state
-//!    allocation), or bit-serially via the reference walk.
+//!    allocation), bit-serially via the reference walk, or **anytime**
+//!    in word-chunks with confidence-bound early exit
+//!    ([`NetlistEvaluator::evaluate_anytime`] under a [`StopPolicy`] —
+//!    the paper's *timely* property as an engine feature).
 //! 5. **Exact** ([`exact_posterior`]) — full-joint enumeration baseline
 //!    for ≤ [`MAX_NODES`]-node networks.
 //! 6. **Lower** ([`lower`]) — the paper's fixed operators (Eq.-1
@@ -54,7 +57,10 @@ mod spec;
 mod validate;
 
 pub use compile::{check_evidence, compile, compile_query, GateOp, Netlist};
-pub use eval::{NetlistEvaluator, NetworkPosterior};
+pub use eval::{
+    AnytimePosterior, NetlistEvaluator, NetworkPosterior, StopPolicy, StopReason,
+    ANYTIME_CHUNK_WORDS, ANYTIME_Z, MIN_ANYTIME_BITS,
+};
 pub use exact::{posterior as exact_posterior, posterior_by_name as exact_posterior_by_name};
 pub use spec::{BayesNet, NodeSpec};
 pub use validate::{topo_order, validate, MAX_NODES, MAX_PARENTS};

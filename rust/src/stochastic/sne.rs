@@ -250,6 +250,77 @@ impl Sne {
     }
 }
 
+/// An in-progress chunked grouped encode, started by
+/// [`SneBank::begin_group_chunks`] and advanced by
+/// [`SneBank::encode_group_chunk_into`].
+///
+/// Dropping the encoder before exhaustion abandons the unread remainder
+/// of every stream: those pulses are never issued (no wear, no ledger
+/// energy), which is exactly how the anytime evaluator converts an early
+/// exit into hardware savings.
+#[derive(Debug)]
+pub struct GroupChunkEncoder {
+    source: ChunkSource,
+    n_streams: usize,
+    n_bits: usize,
+    words_total: usize,
+    next_word: usize,
+}
+
+#[derive(Debug)]
+enum ChunkSource {
+    /// Ideal-device fast path: per-stream RNG cursors, pulses on demand.
+    Live(Vec<StreamCursor>),
+    /// Nonideal-device path (`drift_coupling != 0`): the full streams are
+    /// staged at begin (the pulse-by-pulse model's RNG consumption is
+    /// data-dependent, so chunk boundaries cannot reposition the RNG
+    /// without pulsing).
+    Staged(Vec<u64>),
+}
+
+#[derive(Debug)]
+struct StreamCursor {
+    rng: Rng,
+    sne: usize,
+    q: u32,
+    lo: u32,
+}
+
+impl GroupChunkEncoder {
+    /// Total bits per stream at exhaustion (the bank's configured length).
+    pub fn bits_total(&self) -> usize {
+        self.n_bits
+    }
+
+    /// Bits emitted per stream so far.
+    pub fn bits_done(&self) -> usize {
+        (self.next_word * 64).min(self.n_bits)
+    }
+
+    /// Have all words been emitted?
+    pub fn is_done(&self) -> bool {
+        self.next_word >= self.words_total
+    }
+
+    /// Bits whose device pulses have actually been issued so far: equal
+    /// to [`Self::bits_done`] on the ideal-device path, but the **full**
+    /// stream length on the staged nonideal path — every pulse was
+    /// walked at begin, so energy/wear (and the hardware clock the
+    /// caller records) cover the whole stream there regardless of how
+    /// early the readout stopped.
+    pub fn bits_pulsed(&self) -> usize {
+        match self.source {
+            ChunkSource::Staged(_) => self.n_bits,
+            ChunkSource::Live(_) => self.bits_done(),
+        }
+    }
+
+    /// Number of streams in the group.
+    pub fn n_streams(&self) -> usize {
+        self.n_streams
+    }
+}
+
 /// A pool of SNEs with an owned RNG, wear rotation and a shared ledger.
 ///
 /// Streams drawn from *different* `encode_*` calls use distinct SNEs in
@@ -383,10 +454,156 @@ impl SneBank {
         snes[idx].encode_correlated(probs, n_bits, ledger, rng)
     }
 
+    /// Begin a **chunked** grouped encode: the anytime evaluator's entry
+    /// ([`crate::network::NetlistEvaluator::evaluate_anytime`]). SNEs are
+    /// drawn through the same round-robin as [`Self::encode_group_into`],
+    /// and each stream gets an RNG cursor positioned exactly where the
+    /// whole-stream encode would read its words — so the bits emitted by
+    /// [`Self::encode_group_chunk_into`] are **bit-identical** to the
+    /// corresponding slice of the whole-stream encode (pinned by tests).
+    ///
+    /// The bank's own RNG advances to the *post-group* state up front:
+    /// the virtual stream exists in full, and an early exit simply stops
+    /// reading (and pulsing) it. Later decisions on this bank are
+    /// therefore bit-reproducible no matter where an anytime decision
+    /// stopped.
+    ///
+    /// With `drift_coupling != 0` the pulse-by-pulse device model's RNG
+    /// consumption is data-dependent, so chunk boundaries cannot
+    /// reposition the RNG without doing the pulses: the full streams are
+    /// staged here (wear and ledger recorded in full) and chunks are
+    /// served from the staging buffer — anytime then trims the readout,
+    /// not the pulses.
+    pub fn begin_group_chunks(&mut self, probs: &[f64]) -> Result<GroupChunkEncoder> {
+        for &p in probs {
+            Error::check_prob("p", p)?;
+        }
+        let n_bits = self.config.n_bits;
+        let w = n_bits.div_ceil(64);
+        if self.config.params.drift_coupling != 0.0 {
+            let mut staged = vec![0u64; probs.len() * w];
+            self.encode_group_into(probs, &mut staged)?;
+            return Ok(GroupChunkEncoder {
+                source: ChunkSource::Staged(staged),
+                n_streams: probs.len(),
+                n_bits,
+                words_total: w,
+                next_word: 0,
+            });
+        }
+        let mut streams = Vec::with_capacity(probs.len());
+        for &p in probs {
+            let sne = self.next_sne()?;
+            // The cursor starts where the bank RNG is now; the bank RNG
+            // then skips exactly this stream's fast-path draw count
+            // ((16 − lo) words per packed word — see `encode_into_words`)
+            // so the next stream's cursor, and the bank's final state,
+            // match the whole-stream encode.
+            let rng = self.rng.clone();
+            let prob = p.clamp(1e-9, 1.0 - 1e-9);
+            let q = (prob * 65536.0).round() as u32;
+            let lo = if q == 0 || q >= 65536 { 16 } else { q.trailing_zeros() };
+            for _ in 0..(16 - lo) as usize * w {
+                self.rng.next_u64();
+            }
+            streams.push(StreamCursor { rng, sne, q, lo });
+        }
+        Ok(GroupChunkEncoder {
+            source: ChunkSource::Live(streams),
+            n_streams: probs.len(),
+            n_bits,
+            words_total: w,
+            next_word: 0,
+        })
+    }
+
+    /// Encode the next chunk of every stream in `enc` into `out`:
+    /// stream `j`'s words land at `out[j*cw .. j*cw + n]` where
+    /// `cw = out.len() / n_streams` and `n` is the returned word count
+    /// (0 once the streams are exhausted). Bits and ledger pulse/switch
+    /// totals are identical to the corresponding word slice of
+    /// [`Self::encode_group_into`]; abandoning the encoder mid-stream
+    /// leaves the remaining pulses unspent (bits saved = energy saved),
+    /// while the bank RNG was already advanced at
+    /// [`Self::begin_group_chunks`].
+    ///
+    /// One deliberate divergence from the whole-stream path: wear
+    /// *checks* (`next_sne`) all happen at begin, before any of this
+    /// group's switches are recorded — so a device worn out *by this
+    /// very group* trips the wear policy on the **next** decision rather
+    /// than mid-group. Emitted bits are unaffected (the ideal-device
+    /// fast path derives them from the RNG cursor, not the device), and
+    /// the recorded switch totals are identical.
+    pub fn encode_group_chunk_into(
+        &mut self,
+        enc: &mut GroupChunkEncoder,
+        out: &mut [u64],
+    ) -> Result<usize> {
+        if enc.n_streams == 0 || enc.is_done() {
+            return Ok(0);
+        }
+        if out.is_empty() || out.len() % enc.n_streams != 0 {
+            return Err(Error::LengthMismatch { lhs: out.len(), rhs: enc.n_streams });
+        }
+        let cw = out.len() / enc.n_streams;
+        let words = cw.min(enc.words_total - enc.next_word);
+        let is_tail = enc.next_word + words == enc.words_total;
+        let chunk_bits = if is_tail { enc.n_bits - enc.next_word * 64 } else { words * 64 };
+        match &mut enc.source {
+            ChunkSource::Live(streams) => {
+                let energy = self.config.params.switch_energy_nj;
+                for (j, cur) in streams.iter_mut().enumerate() {
+                    let dst = &mut out[j * cw..j * cw + words];
+                    if cur.q >= 65536 {
+                        dst.iter_mut().for_each(|w| *w = u64::MAX);
+                    } else if cur.q == 0 {
+                        dst.iter_mut().for_each(|w| *w = 0);
+                    } else {
+                        for word in dst.iter_mut() {
+                            // The binary-expansion construction of
+                            // `encode_into_words`, replayed from this
+                            // stream's cursor.
+                            let mut z = 0u64;
+                            for i in cur.lo..16 {
+                                let r = cur.rng.next_u64();
+                                z = if (cur.q >> i) & 1 == 1 { z | r } else { z & !r };
+                            }
+                            *word = z;
+                        }
+                    }
+                    if is_tail {
+                        dst[words - 1] &= tail_word_mask(enc.n_bits);
+                    }
+                    let switches: u64 = dst.iter().map(|w| w.count_ones() as u64).sum();
+                    self.snes[cur.sne].device.record_switches(switches);
+                    self.ledger.pulses += chunk_bits as u64;
+                    self.ledger.switch_events += switches;
+                    self.ledger.energy_nj += switches as f64 * energy;
+                }
+            }
+            ChunkSource::Staged(staged) => {
+                for j in 0..enc.n_streams {
+                    let src = &staged[j * enc.words_total + enc.next_word..][..words];
+                    out[j * cw..j * cw + words].copy_from_slice(src);
+                }
+            }
+        }
+        enc.next_word += words;
+        Ok(words)
+    }
+
     /// Mark one complete decision on the ledger (advances the virtual
     /// hardware clock by one stream time — all SNEs pulse in parallel).
     pub fn finish_decision(&mut self) {
         self.ledger.record_decision(self.config.n_bits);
+    }
+
+    /// [`Self::finish_decision`] with an explicit bit count: the anytime
+    /// evaluator's early-exit path records only the bits actually
+    /// streamed, so the virtual hardware clock reflects the time the
+    /// truncated decision really took.
+    pub fn finish_decision_bits(&mut self, n_bits: usize) {
+        self.ledger.record_decision(n_bits);
     }
 
     /// Direct access to the RNG (used by gates needing auxiliary select
@@ -512,6 +729,133 @@ mod tests {
         // Wrong buffer size is rejected.
         let mut tiny = [0u64; 1];
         assert!(b.encode_group_into(&probs, &mut tiny).is_err());
+    }
+
+    #[test]
+    fn chunked_group_encode_is_bit_identical_to_whole_stream() {
+        // Odd lengths stress the tail mask; probs include the q = 0 and
+        // q = 65536 extremes (no RNG draws) between ordinary streams so
+        // the per-stream cursor positioning is exercised across them.
+        let probs = [0.3, 0.0, 0.57, 1.0, 0.72];
+        for n_bits in [64usize, 100, 130, 1000, 1024] {
+            let cfg = SneConfig { n_bits, ..Default::default() };
+            let mut whole = SneBank::new(cfg.clone(), 99).unwrap();
+            let mut chunked = SneBank::new(cfg, 99).unwrap();
+            let w = n_bits.div_ceil(64);
+            let mut expect = vec![0u64; probs.len() * w];
+            whole.encode_group_into(&probs, &mut expect).unwrap();
+
+            let mut enc = chunked.begin_group_chunks(&probs).unwrap();
+            assert_eq!(enc.n_streams(), probs.len());
+            assert_eq!(enc.bits_total(), n_bits);
+            let cw = 2usize.min(w); // tiny chunks stress the boundaries
+            let mut got = vec![0u64; probs.len() * w];
+            let mut chunk = vec![0u64; probs.len() * cw];
+            let mut done = 0usize;
+            loop {
+                let n = chunked.encode_group_chunk_into(&mut enc, &mut chunk).unwrap();
+                if n == 0 {
+                    break;
+                }
+                for j in 0..probs.len() {
+                    got[j * w + done..j * w + done + n]
+                        .copy_from_slice(&chunk[j * cw..j * cw + n]);
+                }
+                done += n;
+            }
+            assert!(enc.is_done());
+            assert_eq!(enc.bits_done(), n_bits);
+            assert_eq!(got, expect, "chunked bits diverged at {n_bits} bits");
+            // Same wear/energy accounting on both paths.
+            assert_eq!(whole.ledger().pulses, chunked.ledger().pulses);
+            assert_eq!(whole.ledger().switch_events, chunked.ledger().switch_events);
+            assert!((whole.ledger().energy_nj - chunked.ledger().energy_nj).abs() < 1e-9);
+            // Both banks sit at the identical RNG/round-robin position:
+            // the next decision's stream must match bit for bit.
+            let a = whole.encode(0.41).unwrap();
+            let b = chunked.encode(0.41).unwrap();
+            assert_eq!(a, b, "post-encode bank state diverged at {n_bits} bits");
+        }
+    }
+
+    #[test]
+    fn abandoned_chunk_encode_keeps_later_decisions_identical() {
+        let probs = [0.3, 0.57, 0.72];
+        let cfg = SneConfig { n_bits: 1024, ..Default::default() };
+        let mut whole = SneBank::new(cfg.clone(), 7).unwrap();
+        let mut early = SneBank::new(cfg, 7).unwrap();
+        let w = 1024usize.div_ceil(64);
+        let mut buf = vec![0u64; probs.len() * w];
+        whole.encode_group_into(&probs, &mut buf).unwrap();
+        whole.finish_decision();
+
+        // Early exit: read one 4-word chunk, then abandon the encoder.
+        let mut enc = early.begin_group_chunks(&probs).unwrap();
+        let mut chunk = vec![0u64; probs.len() * 4];
+        let n = early.encode_group_chunk_into(&mut enc, &mut chunk).unwrap();
+        assert_eq!(n, 4);
+        let bits_done = enc.bits_done();
+        drop(enc);
+        early.finish_decision_bits(bits_done);
+
+        // Fewer pulses were spent…
+        assert!(early.ledger().pulses < whole.ledger().pulses);
+        assert!(early.ledger().clock.elapsed_ns() < whole.ledger().clock.elapsed_ns());
+        // …but the RNG cursor advanced past the whole virtual stream, so
+        // the next decision is bit-identical on both banks.
+        let a = whole.encode_group(&probs).unwrap();
+        let b = early.encode_group(&probs).unwrap();
+        assert_eq!(a, b, "early exit desynced the bank");
+    }
+
+    #[test]
+    fn chunk_encode_rejects_bad_buffers_and_probs() {
+        let mut bank = SneBank::seeded(3);
+        assert!(bank.begin_group_chunks(&[0.5, 1.5]).is_err());
+        let mut enc = bank.begin_group_chunks(&[0.5, 0.6]).unwrap();
+        // Buffer not divisible by the stream count.
+        let mut bad = [0u64; 3];
+        assert!(bank.encode_group_chunk_into(&mut enc, &mut bad).is_err());
+        let mut empty: [u64; 0] = [];
+        assert!(bank.encode_group_chunk_into(&mut enc, &mut empty).is_err());
+        // Exhaustion returns 0 instead of erroring.
+        let mut ok = [0u64; 4];
+        while bank.encode_group_chunk_into(&mut enc, &mut ok).unwrap() > 0 {}
+        assert!(enc.is_done());
+        assert_eq!(bank.encode_group_chunk_into(&mut enc, &mut ok).unwrap(), 0);
+    }
+
+    #[test]
+    fn chunked_encode_stages_whole_streams_under_drift() {
+        // Nonideal devices pulse bit by bit: the chunked path stages the
+        // full streams at begin (identical bits, full wear recorded) and
+        // serves chunks from the buffer.
+        let params = DeviceParams { drift_coupling: 0.05, ..Default::default() };
+        let cfg = SneConfig { n_bits: 256, params, ..Default::default() };
+        let mut whole = SneBank::new(cfg.clone(), 11).unwrap();
+        let mut chunked = SneBank::new(cfg, 11).unwrap();
+        let probs = [0.4, 0.8];
+        let w = 4;
+        let mut expect = vec![0u64; probs.len() * w];
+        whole.encode_group_into(&probs, &mut expect).unwrap();
+        let mut enc = chunked.begin_group_chunks(&probs).unwrap();
+        // Ledger already reflects the full pulse walk.
+        assert_eq!(whole.ledger().pulses, chunked.ledger().pulses);
+        let mut got = vec![0u64; probs.len() * w];
+        let mut chunk = vec![0u64; probs.len() * 2];
+        let mut done = 0usize;
+        loop {
+            let n = chunked.encode_group_chunk_into(&mut enc, &mut chunk).unwrap();
+            if n == 0 {
+                break;
+            }
+            for j in 0..probs.len() {
+                got[j * w + done..j * w + done + n]
+                    .copy_from_slice(&chunk[j * 2..j * 2 + n]);
+            }
+            done += n;
+        }
+        assert_eq!(got, expect);
     }
 
     #[test]

@@ -69,6 +69,25 @@ pub fn sparkline(h: &[usize]) -> String {
         .collect()
 }
 
+/// Half-width of the Wilson score interval for `ones` successes in `n`
+/// Bernoulli trials at `z` standard-normal quantiles (`z = 3` ≈ 99.7 %
+/// two-sided coverage). Returns 0.5 for `n = 0` — no information, the
+/// interval is all of `[0, 1]`.
+///
+/// This is the anytime evaluator's confidence bound on the CORDIV
+/// quotient density ([`crate::network::NetlistEvaluator::evaluate_anytime`]):
+/// unlike the plain normal approximation it stays sane at extreme counts
+/// (`ones = 0` or `ones = n` still give a positive width ~`z²/2n`).
+pub fn wilson_half_width(ones: u64, n: u64, z: f64) -> f64 {
+    if n == 0 {
+        return 0.5;
+    }
+    let n = n as f64;
+    let p = ones as f64 / n;
+    let z2 = z * z;
+    (z / (1.0 + z2 / n)) * (p * (1.0 - p) / n + z2 / (4.0 * n * n)).sqrt()
+}
+
 /// Least-squares fit of a logistic `1/(1+exp(-k(x-x0)))` to `(x, p)`
 /// samples via logit-domain linear regression; returns `(k, x0)`.
 /// Samples with `p` outside `(0.005, 0.995)` are ignored (logit blows up).
@@ -132,6 +151,25 @@ mod tests {
     fn sparkline_shape() {
         let s = sparkline(&[0, 5, 10]);
         assert_eq!(s.chars().count(), 3);
+    }
+
+    #[test]
+    fn wilson_half_width_behaves() {
+        // No data: the interval is everything.
+        assert_eq!(wilson_half_width(0, 0, 3.0), 0.5);
+        // Large n at p = 0.5 approaches z·√(p(1−p)/n).
+        let hw = wilson_half_width(50_000, 100_000, 3.0);
+        let approx = 3.0 * (0.25f64 / 100_000.0).sqrt();
+        assert!((hw - approx).abs() < 1e-4, "hw {hw} vs {approx}");
+        // Width shrinks with n.
+        assert!(wilson_half_width(500, 1_000, 3.0) > wilson_half_width(5_000, 10_000, 3.0));
+        // Extreme counts still give a positive, sane width.
+        let hw0 = wilson_half_width(0, 1_000, 3.0);
+        assert!(hw0 > 0.0 && hw0 < 0.02, "hw0 {hw0}");
+        let hw1 = wilson_half_width(1_000, 1_000, 3.0);
+        assert!((hw0 - hw1).abs() < 1e-12, "symmetric at the extremes");
+        // Wider z, wider interval.
+        assert!(wilson_half_width(300, 1_000, 3.0) > wilson_half_width(300, 1_000, 1.96));
     }
 
     #[test]

@@ -128,6 +128,10 @@ fn impossible_deadline_reported() {
     ));
     let snap = handle.metrics().snapshot();
     assert_eq!(snap.failed, 1);
+    // The miss also lands in its dedicated counter (it used to vanish
+    // into the generic `failed`).
+    assert_eq!(snap.deadline_missed, 1);
+    assert_eq!(snap.completed, 0);
     coord.shutdown();
 }
 

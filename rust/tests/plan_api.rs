@@ -284,7 +284,7 @@ fn policy_bits_and_deadline_apply_per_plan_handle() {
     let base = h.prepare(PlanSpec::Inference).unwrap();
     let long = base
         .clone()
-        .with_policy(Policy { deadline: None, bits: Some(2000) });
+        .with_policy(Policy { bits: Some(2000), ..Policy::default() });
     let d = long
         .decide(DecisionParams::Inference { prior: 0.57, likelihood: 0.77, likelihood_not: 0.655 })
         .unwrap();
@@ -298,7 +298,7 @@ fn policy_bits_and_deadline_apply_per_plan_handle() {
     // Impossible deadline through the policy.
     let strict = base
         .clone()
-        .with_policy(Policy { deadline: Some(Duration::from_nanos(1)), bits: None });
+        .with_policy(Policy { deadline: Some(Duration::from_nanos(1)), ..Policy::default() });
     let err = strict
         .decide(DecisionParams::Inference { prior: 0.5, likelihood: 0.7, likelihood_not: 0.2 })
         .unwrap_err();
@@ -318,12 +318,55 @@ fn policy_bits_is_rejected_on_the_pjrt_backend() {
         .handle()
         .prepare(PlanSpec::Inference)
         .unwrap()
-        .with_policy(Policy { deadline: None, bits: Some(512) });
+        .with_policy(Policy { bits: Some(512), ..Policy::default() });
     let err = plan
         .submit(DecisionParams::Inference { prior: 0.5, likelihood: 0.7, likelihood_not: 0.2 })
         .unwrap_err();
     assert!(matches!(err, bayes_mem::Error::Config(_)), "got {err}");
     assert!(err.to_string().contains("native backend"), "{err}");
+    // The anytime knobs need the native backend for the same reason.
+    for policy in [
+        Policy { threshold: Some(0.5), ..Policy::default() },
+        Policy { max_half_width: Some(0.05), ..Policy::default() },
+        Policy {
+            allow_partial: true,
+            deadline: Some(Duration::from_micros(400)),
+            ..Policy::default()
+        },
+    ] {
+        let plan = coord.handle().prepare(PlanSpec::Inference).unwrap().with_policy(policy);
+        let err = plan
+            .submit(DecisionParams::Inference { prior: 0.5, likelihood: 0.7, likelihood_not: 0.2 })
+            .unwrap_err();
+        assert!(err.to_string().contains("native backend"), "{policy:?}: {err}");
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn anytime_policy_applies_through_plan_handles() {
+    // A network plan served under an accuracy-targeted policy: decisions
+    // stop early, stamped with bits_used/confidence, and the non-anytime
+    // handle on the same plan still runs the full sweep.
+    let mut cfg = single_worker_config(8);
+    cfg.sne.n_bits = 16_384;
+    let coord = Coordinator::start(&cfg).unwrap();
+    let h = coord.handle();
+    let base = h.prepare(diamond_spec()).unwrap();
+    let anytime = base
+        .clone()
+        .with_policy(Policy { max_half_width: Some(0.05), ..Policy::default() });
+    let d = anytime.decide(DecisionParams::Network).unwrap();
+    assert!(d.stopped_early(), "stop {:?}", d.stop);
+    assert!(d.bits_used < 16_384);
+    assert!(d.confidence <= 0.05);
+    assert!((d.posterior - d.exact).abs() < 0.25, "{} vs {}", d.posterior, d.exact);
+    let full = base.decide(DecisionParams::Network).unwrap();
+    assert_eq!(full.bits_used, 16_384);
+    assert!(!full.stopped_early());
+    let snap = h.metrics().snapshot();
+    assert_eq!(snap.early_exit_total(), 1);
+    assert!(snap.bits_saved() > 0);
     coord.shutdown();
 }
 

@@ -174,6 +174,9 @@ fn req(cache: &PlanCache, rng: &mut Rng, id: u64) -> DecisionRequest {
         enqueued: Instant::now(),
         deadline: None,
         bits: None,
+        threshold: None,
+        max_half_width: None,
+        allow_partial: false,
         reply: tx,
     }
 }
@@ -274,6 +277,63 @@ fn prop_compiled_network_converges_to_exact_enumeration() {
     let (short, long) = (mean(&err_short), mean(&err_long));
     assert!(long < short, "no convergence: 512-bit {short:.4} vs 16384-bit {long:.4}");
     assert!(long < 0.02, "16384-bit mean abs error {long:.4} >= 0.02");
+}
+
+#[test]
+fn prop_anytime_early_exit_stays_within_reported_half_width() {
+    // Random 3-7-node DAGs: an accuracy-targeted anytime stop must (a)
+    // reproduce the full sweep exactly when its criteria never fire, and
+    // (b) when it exits early, land within the combined confidence
+    // bounds of the truncated and full-length posteriors. Marginal
+    // queries keep the CORDIV quotient i.i.d. (all-ones denominator), so
+    // the Wilson interval is the right yardstick.
+    use bayes_mem::network::StopPolicy;
+    check("anytime early exit within reported half-width", 16, |rng| {
+        let n = rng.range_usize(3, 8);
+        let net = BayesNet::from_parts("rand", random_net_parts(rng, n));
+        let query = format!("n{}", n - 1); // deepest node: real MUX trees
+        let netlist = compile_query(&net, &query, &[]).unwrap();
+        let n_bits = 16_384usize;
+        let seed = rng.next_u64();
+        let cfg = SneConfig { n_bits, ..Default::default() };
+
+        let mut bank_full = SneBank::new(cfg.clone(), seed).unwrap();
+        let full =
+            NetlistEvaluator::new().evaluate(&mut bank_full, &netlist).unwrap();
+
+        let mut bank_any = SneBank::new(cfg, seed).unwrap();
+        let any = NetlistEvaluator::new()
+            .evaluate_anytime(
+                &mut bank_any,
+                &netlist,
+                netlist.inputs(),
+                &StopPolicy::converged(0.03),
+            )
+            .unwrap();
+        assert!(any.bits_used <= n_bits);
+        assert!((0.0..=1.0).contains(&any.posterior));
+        if any.bits_used == n_bits {
+            // Criteria never fired: must equal the full sweep bitwise.
+            assert_eq!(any.posterior, full.posterior);
+        } else {
+            assert!(any.half_width <= 0.03, "half width {}", any.half_width);
+            let full_hw = bayes_mem::util::stats::wilson_half_width(
+                (full.posterior * n_bits as f64).round() as u64,
+                n_bits as u64,
+                bayes_mem::network::ANYTIME_Z,
+            );
+            assert!(
+                (any.posterior - full.posterior).abs()
+                    <= any.half_width + full_hw + 0.01,
+                "early {} (hw {}) vs full {} (hw {full_hw})",
+                any.posterior,
+                any.half_width,
+                full.posterior
+            );
+            // Early exit spends fewer pulses.
+            assert!(bank_any.ledger().pulses < bank_full.ledger().pulses);
+        }
+    });
 }
 
 #[test]
