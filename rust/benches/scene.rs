@@ -1,0 +1,88 @@
+//! Scene-parsing service bench: the Movie S1 video workload streamed
+//! through prepared plans end to end (`scene::pipeline`).
+//!
+//! Two passes:
+//!
+//! * **Throughput** — the default scenario at the paper's operating
+//!   point (100-bit streams, batch 32, 400 µs deadline, anytime on).
+//!   Exports `hardware_fps`, the virtual-hardware decision rate
+//!   (completed decisions over accumulated hardware time at 4 µs/bit;
+//!   full 100-bit sweeps = the paper's 2,500 fps, early exits push it
+//!   higher), plus the software `wall_fps` actually sustained.
+//! * **Accuracy** — every registered scenario at 2^14-bit streams on the
+//!   deterministic preset. Exports `fused_rate_mae_vs_oracle` (mean
+//!   per-scenario |hardware − oracle| fused detection-rate gap) and the
+//!   hardware-measured `fusion_gain_vs_thermal` / `fusion_gain_vs_rgb`
+//!   on the default mix (paper: +85 % / +19 %).
+
+use bayes_mem::benchkit::Bench;
+use bayes_mem::scene::pipeline;
+use bayes_mem::scene::{PipelineConfig, ScenarioSpec};
+
+fn main() {
+    let fast = std::env::var("BENCH_FAST").is_ok();
+    let mut b = Bench::new("scene");
+
+    // Throughput pass: free-running (no fps pacing) so the software
+    // rate is the measured maximum, not the pacer's.
+    let throughput_cfg = PipelineConfig {
+        frames: if fast { 48 } else { 192 },
+        fps_target: None,
+        ..PipelineConfig::default()
+    };
+    b.bench("parse_video_default_scenario", || {
+        let r = pipeline::run(&throughput_cfg).unwrap();
+        std::hint::black_box(r.hardware.fused_detections);
+    });
+    let report = pipeline::run(&throughput_cfg).unwrap();
+    println!(
+        "  default scenario: {} obstacles, fused hw {:.3} vs oracle {:.3}, \
+         {:.0} fps software / {:.0} fps virtual hardware",
+        report.hardware.obstacles,
+        report.hardware.rate(report.hardware.fused_detections),
+        report.oracle.rate(report.oracle.fused_detections),
+        report.wall_fps,
+        report.hardware_fps,
+    );
+    b.metric("hardware_fps", report.hardware_fps);
+    b.metric("wall_fps", report.wall_fps);
+
+    // Accuracy pass: per-scenario fused rates vs the closed-form oracle
+    // at 2^14 bits (the Fig. 3d long-stream operating point), served
+    // through the same plan path.
+    let acc_frames = if fast { 32 } else { 96 };
+    let mut gaps = Vec::new();
+    let mut gain_th = f64::NAN;
+    let mut gain_rgb = f64::NAN;
+    for spec in ScenarioSpec::all() {
+        let name = spec.name;
+        let cfg = PipelineConfig::deterministic(spec, acc_frames, 4242, 1 << 14);
+        let r = pipeline::run(&cfg).unwrap();
+        println!(
+            "  {:<18} fused hw {:.3} vs oracle {:.3} (gap {:.4}, {} obstacles)",
+            name,
+            r.hardware.rate(r.hardware.fused_detections),
+            r.oracle.rate(r.oracle.fused_detections),
+            r.fused_rate_gap(),
+            r.hardware.obstacles,
+        );
+        gaps.push(r.fused_rate_gap());
+        if name == "mixed" {
+            gain_th = r.hardware.gain_vs_thermal();
+            gain_rgb = r.hardware.gain_vs_rgb();
+        }
+    }
+    let mae = gaps.iter().sum::<f64>() / gaps.len() as f64;
+    b.metric("fused_rate_mae_vs_oracle", mae);
+    b.metric("fusion_gain_vs_thermal", gain_th);
+    b.metric("fusion_gain_vs_rgb", gain_rgb);
+    println!(
+        "  acceptance: hardware_fps >= 2500 (got {:.0}), fused-rate MAE <= 0.03 (got {mae:.4}), \
+         gains vs paper +85 %/+19 % (got {:+.0} %/{:+.0} %)",
+        report.hardware_fps,
+        gain_th * 100.0,
+        gain_rgb * 100.0,
+    );
+
+    b.finish_and_export();
+}

@@ -43,6 +43,7 @@ pub struct Metrics {
     submitted: AtomicU64,
     completed: AtomicU64,
     rejected: AtomicU64,
+    blocked: AtomicU64,
     failed: AtomicU64,
     deadline_missed: AtomicU64,
     batches: AtomicU64,
@@ -93,6 +94,14 @@ impl Metrics {
     /// A request was shed at admission (queue full / invalid).
     pub fn on_reject(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A blocking submit found the queue full and waited for space
+    /// instead of shedding (see
+    /// [`super::CoordinatorHandle::submit_prepared_blocking`]) — the
+    /// backpressure-visibility counter for streaming callers.
+    pub fn on_block(&self) {
+        self.blocked.fetch_add(1, Ordering::Relaxed);
     }
 
     /// A batch was dispatched.
@@ -213,6 +222,7 @@ impl Metrics {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            blocked: self.blocked.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
             deadline_missed: self.deadline_missed.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
@@ -262,6 +272,9 @@ pub struct MetricsSnapshot {
     pub completed: u64,
     /// Requests shed at admission.
     pub rejected: u64,
+    /// Blocking submits that had to wait for queue space (admitted, not
+    /// shed — the streaming-path backpressure signal).
+    pub blocked: u64,
     /// Requests that errored during execution (deadline misses
     /// included — see [`Self::deadline_missed`] for the breakout).
     pub failed: u64,
@@ -388,7 +401,8 @@ impl MetricsSnapshot {
     /// Render a compact text report.
     pub fn to_table(&self) -> String {
         format!(
-            "submitted {}  completed {}  rejected {}  failed {}  deadline missed {}\n\
+            "submitted {}  completed {}  rejected {}  blocked {}  failed {}  \
+             deadline missed {}\n\
              by kind: inference {}  fusion {}  network {}\n\
              plan cache: {} hits / {} misses ({:.0} % hit rate, {} plans served)\n\
              anytime: {} early exits (reliable {} / converged {} / timely {})  \
@@ -399,6 +413,7 @@ impl MetricsSnapshot {
             self.submitted,
             self.completed,
             self.rejected,
+            self.blocked,
             self.failed,
             self.deadline_missed,
             self.completed_for(KindTag::Inference),
@@ -434,6 +449,7 @@ mod tests {
         m.on_submit();
         m.on_submit();
         m.on_reject();
+        m.on_block();
         m.on_batch(2);
         m.on_complete(Duration::from_micros(120), 400_000.0, KindTag::Inference);
         m.on_complete(Duration::from_micros(80), 400_000.0, KindTag::Network);
@@ -446,6 +462,7 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.submitted, 2);
         assert_eq!(s.rejected, 1);
+        assert_eq!(s.blocked, 1, "blocking-submit waits are counted, not shed");
         assert_eq!(s.completed, 2);
         assert_eq!(s.failed, 1);
         assert_eq!(s.completed_for(KindTag::Inference), 1);

@@ -146,12 +146,15 @@ pub(crate) fn validate_network_parts(
     evidence: &[(String, bool)],
 ) -> Result<()> {
     net.validate()?;
-    net.resolve(query)?;
+    let q = net.resolve(query)?;
     let ev: Vec<(usize, bool)> = evidence
         .iter()
         .map(|(name, v)| net.resolve(name).map(|i| (i, *v)))
         .collect::<Result<_>>()?;
-    network::check_evidence(net, &ev)
+    // Duplicate observations and query-in-evidence are both rejected
+    // here — the same `check_query_evidence` the compiler runs, so the
+    // admission layer and the netlist lowering cannot drift.
+    network::check_query_evidence(net, q, &ev)
 }
 
 /// Typed rejection of fusion arities the plan layer cannot serve.
@@ -623,6 +626,13 @@ impl PlanHandle {
         self.handle.submit_prepared(&self.plan, params, self.policy)
     }
 
+    /// Submit one decision, waiting for queue space instead of
+    /// shedding — the streaming-workload flavor (see
+    /// [`CoordinatorHandle::submit_prepared_blocking`]).
+    pub fn submit_blocking(&self, params: DecisionParams) -> Result<PendingDecision> {
+        self.handle.submit_prepared_blocking(&self.plan, params, self.policy)
+    }
+
     /// Submit and wait.
     pub fn decide(&self, params: DecisionParams) -> Result<Decision> {
         self.submit(params)?.wait()
@@ -655,6 +665,13 @@ impl DecisionStream {
     /// Submit one decision into the stream.
     pub fn push(&mut self, params: DecisionParams) -> Result<()> {
         self.inflight.push_back(self.handle.submit(params)?);
+        Ok(())
+    }
+
+    /// Submit one decision into the stream, waiting for queue space
+    /// instead of shedding (see [`PlanHandle::submit_blocking`]).
+    pub fn push_blocking(&mut self, params: DecisionParams) -> Result<()> {
+        self.inflight.push_back(self.handle.submit_blocking(params)?);
         Ok(())
     }
 

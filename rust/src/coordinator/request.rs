@@ -282,6 +282,16 @@ mod tests {
             evidence: vec![("b".into(), true), ("b".into(), false)],
         };
         assert!(bad.validate().is_err());
+        // Query observed as evidence: rejected at admission with the
+        // same typed diagnostic the compiler gives.
+        let bad = DecisionKind::Network {
+            net: chain_net(),
+            query: "a".into(),
+            evidence: vec![("a".into(), true)],
+        };
+        let err = bad.validate().unwrap_err();
+        assert!(matches!(err, Error::Network(_)));
+        assert!(err.to_string().contains("also observed"), "{err}");
     }
 
     #[test]

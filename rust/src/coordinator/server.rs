@@ -52,14 +52,15 @@ impl CoordinatorHandle {
         Ok(PlanHandle::new(plan, self.clone()))
     }
 
-    /// Submit one decision against a prepared plan under `policy`. Fails
-    /// fast (backpressure) when the admission queue is full.
-    pub fn submit_prepared(
+    /// Validate one decision and build its queue entry (the shared
+    /// admission half of [`Self::submit_prepared`] and
+    /// [`Self::submit_prepared_blocking`]).
+    fn admit(
         &self,
         plan: &Arc<PreparedPlan>,
         params: DecisionParams,
         policy: Policy,
-    ) -> Result<PendingDecision> {
+    ) -> Result<(DecisionRequest, mpsc::Receiver<Result<Decision>>)> {
         plan.validate_params(&params).inspect_err(|_| self.metrics.on_reject())?;
         // `bits`/`threshold`/`max_half_width` are client-controlled
         // (bits even sizes worker-side buffers): range-check them at
@@ -89,19 +90,65 @@ impl CoordinatorHandle {
             allow_partial: policy.allow_partial,
             reply,
         };
+        Ok((req, rx))
+    }
+
+    /// Enqueue an admitted request. `block` picks the queue-full
+    /// behavior: wait for space (counted in the `blocked` metric) or
+    /// shed with a backpressure error — everything else is shared so
+    /// the two submit flavors cannot drift.
+    fn enqueue(
+        &self,
+        req: DecisionRequest,
+        rx: mpsc::Receiver<Result<Decision>>,
+        block: bool,
+    ) -> Result<PendingDecision> {
+        let id = req.id;
+        let shut_down = || Error::Coordinator("coordinator is shut down".into());
         match self.tx.try_send(Msg::Req(req)) {
-            Ok(()) => {
-                self.metrics.on_submit();
-                Ok(PendingDecision { id, rx })
+            Ok(()) => {}
+            Err(mpsc::TrySendError::Full(msg)) if block => {
+                self.metrics.on_block();
+                self.tx.send(msg).map_err(|_| shut_down())?;
             }
             Err(mpsc::TrySendError::Full(_)) => {
                 self.metrics.on_reject();
-                Err(Error::Coordinator("admission queue full (backpressure)".into()))
+                return Err(Error::Coordinator("admission queue full (backpressure)".into()));
             }
-            Err(mpsc::TrySendError::Disconnected(_)) => {
-                Err(Error::Coordinator("coordinator is shut down".into()))
-            }
+            Err(mpsc::TrySendError::Disconnected(_)) => return Err(shut_down()),
         }
+        self.metrics.on_submit();
+        Ok(PendingDecision { id, rx })
+    }
+
+    /// Submit one decision against a prepared plan under `policy`. Fails
+    /// fast (backpressure) when the admission queue is full.
+    pub fn submit_prepared(
+        &self,
+        plan: &Arc<PreparedPlan>,
+        params: DecisionParams,
+        policy: Policy,
+    ) -> Result<PendingDecision> {
+        let (req, rx) = self.admit(plan, params, policy)?;
+        self.enqueue(req, rx, false)
+    }
+
+    /// Submit one decision, **waiting** for queue space instead of
+    /// shedding load — the streaming-workload flavor of
+    /// [`Self::submit_prepared`]: a frame pipeline would rather apply
+    /// backpressure to its producer than drop frames. Queue-full waits
+    /// land in [`super::MetricsSnapshot::blocked`]. The deadline clock
+    /// (`enqueued`) starts at admission into this call, so time spent
+    /// blocked counts against a policy deadline exactly like queueing
+    /// time.
+    pub fn submit_prepared_blocking(
+        &self,
+        plan: &Arc<PreparedPlan>,
+        params: DecisionParams,
+        policy: Policy,
+    ) -> Result<PendingDecision> {
+        let (req, rx) = self.admit(plan, params, policy)?;
+        self.enqueue(req, rx, true)
     }
 
     /// Legacy one-shot submit: lowers `kind` onto a prepared plan (one
@@ -910,6 +957,35 @@ mod tests {
         for p in accepted {
             let _ = p.wait_timeout(Duration::from_secs(10)).unwrap();
         }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn blocking_submit_waits_instead_of_shedding() {
+        // Same overload shape as `backpressure_sheds_load`, but through
+        // the blocking submit path: every request is eventually
+        // admitted and answered, none are rejected.
+        let mut cfg = config(1, 4);
+        cfg.coordinator.queue_capacity = 4;
+        cfg.coordinator.max_wait = Duration::from_millis(200); // slow drain
+        let coord = Coordinator::start(&cfg).unwrap();
+        let h = coord.handle();
+        let plan = h.prepare(PlanSpec::Inference).unwrap();
+        let pending: Vec<_> =
+            (0..3_000).map(|_| plan.submit_blocking(inference_params()).unwrap()).collect();
+        for p in pending {
+            p.wait_timeout(Duration::from_secs(30)).unwrap();
+        }
+        let snap = h.metrics().snapshot();
+        assert_eq!(snap.completed, 3_000);
+        assert_eq!(snap.rejected, 0, "blocking submit must not shed load");
+        assert_eq!(snap.submitted, 3_000);
+        // Invalid params are still rejected up front, never enqueued.
+        let err = plan
+            .submit_blocking(DecisionParams::Fusion { posteriors: vec![0.5, 0.5] })
+            .unwrap_err();
+        assert!(err.to_string().contains("do not match"), "{err}");
+        assert_eq!(h.metrics().snapshot().rejected, 1);
         coord.shutdown();
     }
 

@@ -5,6 +5,8 @@
 //! bayes-mem fig --all | --id fig3b [--seed N]      reproduce paper figures
 //! bayes-mem serve  [--config cfg.toml] [...]       load-test the coordinator
 //! bayes-mem parse-scene [--frames N]               end-to-end scene parsing
+//! bayes-mem parse-video --frames N --fps-target 2500 --deadline-us 400
+//!                       [--scenario <name>]        streaming scene service
 //! bayes-mem infer --prior P --lik P --lik-not P    one-shot inference
 //! bayes-mem fuse  --p 0.8 --p 0.7 [...]            one-shot fusion
 //! bayes-mem network --spec net.toml --query A --evidence B=1
@@ -38,7 +40,7 @@ use bayes_mem::network::{
     StopReason,
 };
 use bayes_mem::runtime::Runtime;
-use bayes_mem::scene::{fusion_input, VideoWorkload};
+use bayes_mem::scene::{fusion_input, pipeline, PipelineConfig, ScenarioSpec, VideoWorkload};
 use bayes_mem::stochastic::SneBank;
 
 fn main() -> ExitCode {
@@ -159,6 +161,7 @@ fn run(args: Vec<String>) -> CliResult<()> {
         "fig" => cmd_fig(&flags),
         "serve" => cmd_serve(&flags),
         "parse-scene" => cmd_parse_scene(&flags),
+        "parse-video" => cmd_parse_video(&flags),
         "infer" => cmd_infer(&flags),
         "fuse" => cmd_fuse(&flags),
         "network" => cmd_network(&flags),
@@ -183,6 +186,11 @@ USAGE:
                   [--deadline-us N] [--allow-partial] [--bits N]
                   [--threshold P] [--half-width H]
   bayes-mem parse-scene [--frames N] [--seed N] [--backend native|pjrt]
+  bayes-mem parse-video [--frames N] [--scenario NAME | --list-scenarios]
+                        [--fps-target F] [--deadline-us N] [--bits N]
+                        [--threshold P] [--seed N] [--workers N]
+                        [--submitters N] [--batch N] [--inflight N]
+                        [--no-anytime] [--strict-deadline]
   bayes-mem infer --prior P --lik P --lik-not P [--bits N]
                   [--threshold P] [--half-width H]
   bayes-mem fuse --p P --p P [--p P ...] [--bits N]
@@ -437,6 +445,60 @@ fn cmd_serve(flags: &Flags) -> CliResult<()> {
         snap.completed as f64 / elapsed.as_secs_f64()
     );
     coord.shutdown();
+    Ok(())
+}
+
+/// `parse-video`: the Movie S1 video workload streamed through prepared
+/// plans on the serving stack (hardware posteriors, per-frame deadlines,
+/// anytime early exit), reported against the closed-form oracle. See
+/// `scene::pipeline`.
+fn cmd_parse_video(flags: &Flags) -> CliResult<()> {
+    if flags.has("list-scenarios") {
+        for s in ScenarioSpec::all() {
+            println!("{:<18} {}", s.name, s.description);
+        }
+        return Ok(());
+    }
+    let name = flags.get("scenario").unwrap_or("mixed");
+    let Some(scenario) = ScenarioSpec::by_name(name) else {
+        bail!("unknown scenario {name:?} (try --list-scenarios)")
+    };
+    let defaults = PipelineConfig::default();
+    let deadline_us = flags.f64_or("deadline-us", 400.0);
+    let fps = flags.f64_or("fps-target", 2_500.0);
+    let cfg = PipelineConfig {
+        scenario,
+        frames: flags.usize_or("frames", defaults.frames),
+        seed: flags.u64_or("seed", defaults.seed),
+        bits: flags.usize_or("bits", defaults.bits),
+        workers: flags.usize_or("workers", defaults.workers),
+        submitters: flags.usize_or("submitters", defaults.submitters),
+        inflight_frames: flags.usize_or("inflight", defaults.inflight_frames),
+        max_batch: flags.usize_or("batch", defaults.max_batch),
+        // from_secs_f64 keeps fractional-µs deadlines (from_micros would
+        // truncate `--deadline-us 0.5` to an instant-miss zero).
+        deadline: (deadline_us > 0.0).then_some(Duration::from_secs_f64(deadline_us * 1e-6)),
+        anytime: !flags.has("no-anytime"),
+        allow_partial: !flags.has("strict-deadline"),
+        threshold: flags.f64_or("threshold", defaults.threshold),
+        fps_target: (fps > 0.0).then_some(fps),
+    };
+    println!(
+        "parse-video: scenario '{}', {} frames, {} bits/decision, {} workers x {} submitters, \
+         batch {}, deadline {:?}, anytime {}, fps target {:?}",
+        cfg.scenario.name,
+        cfg.frames,
+        cfg.bits,
+        cfg.workers,
+        cfg.submitters,
+        cfg.max_batch,
+        cfg.deadline,
+        cfg.anytime,
+        cfg.fps_target,
+    );
+    let report = pipeline::run(&cfg)?;
+    print!("{}", report.to_table());
+    println!("{}", report.snapshot.to_table());
     Ok(())
 }
 

@@ -126,8 +126,9 @@ pub fn compile_query(
 }
 
 /// Evidence well-formedness: indices in range, no node observed twice.
-/// Shared by [`compile`] and the coordinator's admission validation so
-/// the two layers cannot drift.
+/// Duplicate observations of one node would silently AND the chain into
+/// a constant (a contradictory pair yields an all-zero denominator, so
+/// CORDIV reads pure noise) — rejected with a typed diagnostic instead.
 pub fn check_evidence(net: &BayesNet, evidence: &[(usize, bool)]) -> Result<()> {
     for (j, &(e, _)) in evidence.iter().enumerate() {
         if e >= net.len() {
@@ -139,6 +140,27 @@ pub fn check_evidence(net: &BayesNet, evidence: &[(usize, bool)]) -> Result<()> 
                 net.nodes()[e].name
             )));
         }
+    }
+    Ok(())
+}
+
+/// [`check_evidence`] plus the query/evidence overlap check: observing
+/// the queried node makes the posterior a constant 1 or 0 the stochastic
+/// readout can only approximate badly — a caller mistake, not a query.
+/// Shared by [`compile`] and the coordinator's admission validation
+/// (`validate_network_parts`) so the two layers cannot drift.
+pub fn check_query_evidence(
+    net: &BayesNet,
+    query: usize,
+    evidence: &[(usize, bool)],
+) -> Result<()> {
+    check_evidence(net, evidence)?;
+    if evidence.iter().any(|&(e, _)| e == query) {
+        return Err(Error::Network(format!(
+            "query node '{}' is also observed as evidence; drop the observation or query \
+             another node",
+            net.nodes().get(query).map(|n| n.name.as_str()).unwrap_or("?")
+        )));
     }
     Ok(())
 }
@@ -155,7 +177,7 @@ pub fn compile(net: &BayesNet, query: usize, evidence: &[(usize, bool)]) -> Resu
     if query >= n {
         return Err(Error::Network(format!("query node index {query} out of range")));
     }
-    check_evidence(net, evidence)?;
+    check_query_evidence(net, query, evidence)?;
     let order = validate::topo_order(net)?;
 
     // Pass 1: input slots 0..n_inputs, CPT rows in declaration order,
@@ -200,33 +222,37 @@ pub fn compile(net: &BayesNet, query: usize, evidence: &[(usize, bool)]) -> Resu
     }
 
     // Pass 3: evidence stream (denominator) and the numerator subset.
-    let den = if evidence.is_empty() {
-        let dst = n_slots;
-        n_slots += 1;
-        ops.push(GateOp::Const1 { dst });
-        dst
-    } else {
-        let mut acc: Option<usize> = None;
-        for &(e, val) in evidence {
-            let ind = if val {
-                node_slot[e]
-            } else {
+    // Folding the (possibly empty) evidence list leaves `None` exactly
+    // when there is nothing observed, which lowers to the all-ones
+    // Const1 denominator — no unreachable-panic arm.
+    let mut acc: Option<usize> = None;
+    for &(e, val) in evidence {
+        let ind = if val {
+            node_slot[e]
+        } else {
+            let dst = n_slots;
+            n_slots += 1;
+            ops.push(GateOp::Not { dst, a: node_slot[e] });
+            dst
+        };
+        acc = Some(match acc {
+            None => ind,
+            Some(prev) => {
                 let dst = n_slots;
                 n_slots += 1;
-                ops.push(GateOp::Not { dst, a: node_slot[e] });
+                ops.push(GateOp::And { dst, a: prev, b: ind });
                 dst
-            };
-            acc = Some(match acc {
-                None => ind,
-                Some(prev) => {
-                    let dst = n_slots;
-                    n_slots += 1;
-                    ops.push(GateOp::And { dst, a: prev, b: ind });
-                    dst
-                }
-            });
+            }
+        });
+    }
+    let den = match acc {
+        Some(slot) => slot,
+        None => {
+            let dst = n_slots;
+            n_slots += 1;
+            ops.push(GateOp::Const1 { dst });
+            dst
         }
-        acc.expect("non-empty evidence")
     };
     let num = n_slots;
     n_slots += 1;
@@ -332,6 +358,13 @@ mod tests {
         ));
         let err = compile_query(&net, "a", &[("d", true), ("d", false)]).unwrap_err();
         assert!(err.to_string().contains("duplicate evidence"), "{err}");
+        // Observing the queried node is a typed error (either value: the
+        // posterior would be a degenerate 1 or 0).
+        for val in [true, false] {
+            let err = compile_query(&net, "a", &[("b", true), ("a", val)]).unwrap_err();
+            assert!(matches!(err, Error::Network(_)), "a={val}: {err}");
+            assert!(err.to_string().contains("also observed"), "{err}");
+        }
         // Invalid nets refuse to compile.
         let bad = BayesNet::from_parts(
             "",

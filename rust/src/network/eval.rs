@@ -786,11 +786,15 @@ mod tests {
 
     #[test]
     fn impossible_evidence_yields_zero() {
-        // b is a deterministic copy of a; evidence a=1, b=0 never occurs.
+        // b deterministically copies a and c negates it, so the
+        // evidence b=1 ∧ c=1 never occurs on any sample. (Observing the
+        // *query* node itself is rejected at compile time now, so the
+        // contradiction is built from two non-query nodes.)
         let mut net = BayesNet::new();
         net.add_root("a", 0.5).unwrap();
         net.add_node("b", &["a"], &[0.0, 1.0]).unwrap();
-        let nl = compile_query(&net, "a", &[("a", true), ("b", false)]).unwrap();
+        net.add_node("c", &["a"], &[1.0, 0.0]).unwrap();
+        let nl = compile_query(&net, "a", &[("b", true), ("c", true)]).unwrap();
         let mut b = bank(10_000, 8);
         let r = NetlistEvaluator::new().evaluate(&mut b, &nl).unwrap();
         assert_eq!(r.marginal, 0.0);

@@ -56,7 +56,9 @@ pub mod lower;
 mod spec;
 mod validate;
 
-pub use compile::{check_evidence, compile, compile_query, GateOp, Netlist};
+pub use compile::{
+    check_evidence, check_query_evidence, compile, compile_query, GateOp, Netlist,
+};
 pub use eval::{
     AnytimePosterior, NetlistEvaluator, NetworkPosterior, StopPolicy, StopReason,
     ANYTIME_CHUNK_WORDS, ANYTIME_Z, MIN_ANYTIME_BITS,

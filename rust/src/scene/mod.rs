@@ -15,13 +15,22 @@
 //! the L2 JAX model (`python/compile/model.py`), so the PJRT artifact and
 //! the native Rust path compute the same function (verified by an
 //! integration test).
+//!
+//! Two consumption paths exist for the video workload:
+//! [`VideoWorkload::run`] is the **closed-form oracle** fold, while
+//! [`pipeline`] streams the same frames through prepared plans on the
+//! serving stack — hardware posteriors, per-frame deadlines, anytime
+//! early exit, and scenario scripts ([`ScenarioSpec`]).
 
 mod detector;
+pub mod pipeline;
 mod scenario;
 mod video;
 
 pub use detector::{detector_logits, fusion_input, DetectorModel, Modality, CONFIDENCE_CEIL, FEATURE_DIM};
+pub use pipeline::{scenario_network, PipelineConfig, PipelineReport, ScenarioContext};
 pub use scenario::{
-    LaneChangeScenario, Obstacle, ObstacleClass, SceneFrame, SceneGenerator, Visibility,
+    LaneChangeScenario, Obstacle, ObstacleClass, ScenarioPhase, ScenarioSpec, SceneFrame,
+    SceneGenerator, Visibility,
 };
 pub use video::{FrameDetections, VideoStats, VideoWorkload};

@@ -1,0 +1,649 @@
+//! Streaming scene-parsing **service** layer: the Movie S1 video
+//! workload routed through the real serving stack end to end.
+//!
+//! [`super::VideoWorkload::run`] folds every frame through the
+//! closed-form [`crate::bayes::exact_fusion`] oracle — it never touches
+//! the stochastic netlist path, the coordinator, or the anytime
+//! policies. This module is the hardware-path counterpart:
+//!
+//! ```text
+//!  scenario script ─► producer thread (scene gen + detector heads)
+//!        │ bounded frame channel (overlaps generation with decisions)
+//!        ▼
+//!  submitter threads ──► prepared fusion plan (CoordinatorHandle::prepare)
+//!        │ PlanHandle::submit_blocking per proposed obstacle,
+//!        │ bounded in-flight frame window per submitter
+//!        ▼
+//!  coordinator (dynamic batcher, batch ≥ 32) ─► word-parallel netlist
+//!        │ per-decision deadline + anytime reliable-stop Policy
+//!        ▼
+//!  frame-ordered fold ─► hardware VideoStats ∥ oracle VideoStats
+//! ```
+//!
+//! One visibility-conditioned [`BayesNet`] detection plan per scenario
+//! condition is prepared (and decided) up front — the scenario-level
+//! hazard context the network path serves.
+//!
+//! **Throughput accounting.** [`PipelineReport::hardware_fps`] is the
+//! virtual-hardware decision rate (completed decisions over accumulated
+//! hardware time at 4 µs/bit): at the paper's 100-bit operating point a
+//! full sweep is 0.4 ms/decision = the paper's 2,500 fps, and anytime
+//! early exits only push the rate up. [`PipelineReport::wall_fps`] is
+//! the software frame rate actually sustained by this process.
+//!
+//! **Determinism.** With one coordinator worker, one submitter, and no
+//! wall-clock deadline ([`PipelineConfig::deterministic`]) the whole
+//! threaded pipeline is bit-reproducible: frames arrive in generation
+//! order, decisions enter the single worker's bank in submission order,
+//! and the anytime reliable stop is data-dependent only. Multiple
+//! submitters/workers trade that for throughput (the interleaving at
+//! the shared banks varies run to run).
+
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::bayes::exact_fusion;
+use crate::config::AppConfig;
+use crate::coordinator::{
+    Coordinator, DecisionParams, MetricsSnapshot, PendingDecision, PlanHandle, PlanSpec, Policy,
+};
+use crate::network::BayesNet;
+use crate::{Error, Result};
+
+use super::detector::fusion_input;
+use super::{FrameDetections, ScenarioSpec, VideoStats, VideoWorkload, Visibility};
+
+/// Shared handle the submitter threads pull `(frame index, detections)`
+/// work items from.
+type FrameFeed = Arc<Mutex<mpsc::Receiver<(usize, FrameDetections)>>>;
+
+/// How a scene-parsing run is served.
+#[derive(Debug, Clone)]
+pub struct PipelineConfig {
+    /// The scenario script to stream.
+    pub scenario: ScenarioSpec,
+    /// Frames to parse.
+    pub frames: usize,
+    /// Master seed (scene generator, detector noise, worker banks).
+    pub seed: u64,
+    /// Stochastic stream length per decision. The paper's operating
+    /// point is 100 bits = 0.4 ms/decision = 2,500 fps of virtual
+    /// hardware; larger values trade fps for accuracy (Fig. 3d).
+    pub bits: usize,
+    /// Coordinator worker threads.
+    pub workers: usize,
+    /// Submitter threads pumping frames into the prepared plan.
+    pub submitters: usize,
+    /// Frames each submitter keeps in flight before draining the
+    /// oldest (the pipelining depth).
+    pub inflight_frames: usize,
+    /// Dynamic-batcher size (the acceptance runs use ≥ 32).
+    pub max_batch: usize,
+    /// Per-decision completion deadline, measured from submission.
+    pub deadline: Option<Duration>,
+    /// Anytime reliable-stop at [`Self::threshold`]: decisions halt as
+    /// soon as their confidence interval clears the detection bound.
+    pub anytime: bool,
+    /// Deadline misses return best-so-far partials instead of errors.
+    pub allow_partial: bool,
+    /// Detection threshold on posteriors.
+    pub threshold: f64,
+    /// Pace frame arrivals at this rate (`None` = free-run).
+    pub fps_target: Option<f64>,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            scenario: ScenarioSpec::mixed_traffic(),
+            frames: 256,
+            seed: 42,
+            bits: 100,
+            workers: 2,
+            submitters: 2,
+            inflight_frames: 8,
+            max_batch: 32,
+            deadline: Some(Duration::from_micros(400)),
+            anytime: true,
+            allow_partial: true,
+            threshold: 0.5,
+            fps_target: None,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// A bit-reproducible configuration: one worker, one submitter, no
+    /// wall-clock deadline (anytime early exit stays on — it is
+    /// data-dependent, so it cannot break reproducibility).
+    pub fn deterministic(scenario: ScenarioSpec, frames: usize, seed: u64, bits: usize) -> Self {
+        Self {
+            scenario,
+            frames,
+            seed,
+            bits,
+            workers: 1,
+            submitters: 1,
+            deadline: None,
+            allow_partial: false,
+            fps_target: None,
+            ..Self::default()
+        }
+    }
+
+    /// Does this configuration guarantee bit-identical stats across
+    /// runs on the same seed?
+    pub fn is_deterministic(&self) -> bool {
+        self.workers == 1 && self.submitters == 1 && self.deadline.is_none()
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.frames == 0 {
+            return Err(Error::Config("pipeline.frames must be > 0".into()));
+        }
+        if self.workers == 0 || self.submitters == 0 {
+            return Err(Error::Config("pipeline workers/submitters must be > 0".into()));
+        }
+        if !(0.0..=1.0).contains(&self.threshold) {
+            return Err(Error::Config(format!(
+                "pipeline.threshold must be a probability, got {}",
+                self.threshold
+            )));
+        }
+        if self.fps_target.is_some_and(|fps| !fps.is_finite() || fps <= 0.0) {
+            return Err(Error::Config(format!(
+                "pipeline.fps_target must be > 0, got {:?}",
+                self.fps_target
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// The scenario-level hazard context served through one
+/// visibility-conditioned network plan.
+#[derive(Debug, Clone)]
+pub struct ScenarioContext {
+    /// The condition this context was evaluated under.
+    pub visibility: Visibility,
+    /// Hardware posterior `P(hazard | alert = 1)`.
+    pub posterior: f64,
+    /// Closed-form reference (enumerated once at prepare time).
+    pub exact: f64,
+}
+
+/// What a scene-parsing run measured.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    /// Scenario name.
+    pub scenario: String,
+    /// Frames parsed.
+    pub frames: usize,
+    /// Detection stats with fused posteriors from the **stochastic
+    /// hardware path** (plan-served decisions).
+    pub hardware: VideoStats,
+    /// The same obstacles folded through the closed-form oracle.
+    pub oracle: VideoStats,
+    /// Per-visibility breakdown `(condition, hardware, oracle)` for the
+    /// conditions that actually occurred.
+    pub by_visibility: Vec<(Visibility, VideoStats, VideoStats)>,
+    /// Scenario hazard context per visibility (the network-plan path).
+    pub context: Vec<ScenarioContext>,
+    /// Fusion decisions answered with a deadline miss (only possible
+    /// when partial results are disallowed); scored as the
+    /// uninformative ½ in [`Self::hardware`].
+    pub deadline_missed: u64,
+    /// Wall-clock duration of the streaming phase.
+    pub wall: Duration,
+    /// Software frames per second actually sustained.
+    pub wall_fps: f64,
+    /// Virtual-hardware decision rate: completed decisions over
+    /// accumulated hardware time (4 µs per streamed bit) — the paper's
+    /// 2,500 fps metric.
+    pub hardware_fps: f64,
+    /// Coordinator metrics at the end of the run.
+    pub snapshot: MetricsSnapshot,
+}
+
+impl PipelineReport {
+    /// |hardware fused rate − oracle fused rate| over the whole run
+    /// (the bench's per-scenario accuracy gap).
+    pub fn fused_rate_gap(&self) -> f64 {
+        (self.hardware.rate(self.hardware.fused_detections)
+            - self.oracle.rate(self.oracle.fused_detections))
+        .abs()
+    }
+
+    /// Render a compact text report.
+    pub fn to_table(&self) -> String {
+        let mut out = String::new();
+        let hw = &self.hardware;
+        let or = &self.oracle;
+        out.push_str(&format!(
+            "scenario '{}': {} frames, {} obstacles, {} context conditions\n",
+            self.scenario,
+            self.frames,
+            hw.obstacles,
+            self.context.len()
+        ));
+        out.push_str(&format!(
+            "detection rates      rgb {:.3}  thermal {:.3}  fused(hw) {:.3}  fused(oracle) {:.3}\n",
+            hw.rate(hw.rgb_detections),
+            hw.rate(hw.thermal_detections),
+            hw.rate(hw.fused_detections),
+            or.rate(or.fused_detections),
+        ));
+        out.push_str(&format!(
+            "fusion gains (hw)    {:+.0} % vs thermal, {:+.0} % vs rgb   (paper: +85 % / +19 %)\n",
+            hw.gain_vs_thermal() * 100.0,
+            hw.gain_vs_rgb() * 100.0,
+        ));
+        for (vis, h, o) in &self.by_visibility {
+            out.push_str(&format!(
+                "  {vis:<10?} {:>4} obstacles: fused hw {:.3} vs oracle {:.3}\n",
+                h.obstacles,
+                h.rate(h.fused_detections),
+                o.rate(o.fused_detections),
+            ));
+        }
+        for c in &self.context {
+            out.push_str(&format!(
+                "  context {:<10?} P(hazard|alert) = {:.3} (exact {:.3})\n",
+                c.visibility, c.posterior, c.exact,
+            ));
+        }
+        out.push_str(&format!(
+            "throughput           {:.0} fps software, {:.0} fps virtual hardware \
+             (paper: 2,500)\n",
+            self.wall_fps, self.hardware_fps,
+        ));
+        out.push_str(&format!(
+            "deadline misses {}  oracle gap {:.4}\n",
+            self.deadline_missed,
+            self.fused_rate_gap(),
+        ));
+        out
+    }
+}
+
+/// The visibility-conditioned scenario hazard network: a 5-node DAG
+/// whose CPTs are conditioned on the ambient [`Visibility`] (degraded
+/// sensing prior from the attenuation, an ambient-light-dependent RGB
+/// head, a light-blind thermal head, and an OR-ish alert). Queried as
+/// `P(hazard | alert = 1)` by the pipeline's context plans.
+pub fn scenario_network(vis: Visibility) -> BayesNet {
+    let mut net = BayesNet::named(&format!("scene-{vis:?}"));
+    // P(hazard): an obstacle on a conflicting path.
+    net.add_root("hazard", 0.35).expect("fresh net");
+    // P(degraded): sensing degradation under this condition.
+    let degraded = (0.05 + 0.9 * vis.attenuation()).min(0.95);
+    net.add_root("degraded", degraded).expect("fresh net");
+    // RGB head: ambient-light-dependent hit rate, halved when degraded.
+    // CPT assignment order: first parent (hazard) is the MSB.
+    let rgb_hit = 0.12 + 0.78 * vis.ambient_light();
+    net.add_node("rgb", &["hazard", "degraded"], &[0.08, 0.05, rgb_hit, rgb_hit * 0.45])
+        .expect("valid cpt");
+    // Thermal head: light-blind, mildly attenuation-sensitive.
+    net.add_node("thermal", &["hazard", "degraded"], &[0.06, 0.05, 0.82, 0.62])
+        .expect("valid cpt");
+    // Alert: OR-ish over the two heads.
+    net.add_node("alert", &["rgb", "thermal"], &[0.02, 0.9, 0.88, 0.98]).expect("valid cpt");
+    net
+}
+
+/// One obstacle's outcome on both paths.
+struct ObstacleOutcome {
+    rgb: f64,
+    thermal: f64,
+    oracle_fused: f64,
+    /// `None` = the hardware decision missed its deadline.
+    hardware_fused: Option<f64>,
+}
+
+/// One frame's resolved outcomes.
+struct FrameOutcome {
+    idx: usize,
+    visibility: Visibility,
+    obstacles: Vec<ObstacleOutcome>,
+}
+
+/// A submitted frame whose decisions are still in flight.
+struct InFlightFrame {
+    idx: usize,
+    visibility: Visibility,
+    raw: Vec<(f64, f64)>,
+    oracle: Vec<f64>,
+    pending: Vec<Option<PendingDecision>>,
+}
+
+/// Stream `config.frames` scenario frames through prepared plans and
+/// report hardware-vs-oracle statistics. See the module docs for the
+/// thread topology and the determinism contract.
+pub fn run(config: &PipelineConfig) -> Result<PipelineReport> {
+    config.validate()?;
+    let mut app = AppConfig { seed: config.seed, ..AppConfig::default() };
+    app.sne.n_bits = config.bits;
+    app.coordinator.workers = config.workers;
+    app.coordinator.max_batch = config.max_batch.max(1);
+    // The batcher must not eat the per-decision deadline waiting for
+    // stragglers: flush partial batches well inside the 400 µs budget.
+    app.coordinator.max_wait = Duration::from_micros(50);
+    app.coordinator.queue_capacity = (config.submitters * config.inflight_frames.max(1) * 16)
+        .max(app.coordinator.max_batch)
+        .max(256);
+    let coord = Coordinator::start(&app)?;
+    let handle = coord.handle();
+
+    let policy = Policy {
+        deadline: config.deadline,
+        threshold: config.anytime.then_some(config.threshold),
+        allow_partial: config.allow_partial,
+        ..Policy::default()
+    };
+    let fusion = handle.prepare(PlanSpec::Fusion { modalities: 2 })?.with_policy(policy);
+
+    // One visibility-conditioned network plan per scenario condition,
+    // prepared AND decided before streaming starts: the order of these
+    // decisions on the worker banks is fixed, which keeps the
+    // single-worker pipeline bit-reproducible.
+    let context_policy = Policy {
+        threshold: config.anytime.then_some(config.threshold),
+        ..Policy::default()
+    };
+    let mut context = Vec::new();
+    for vis in config.scenario.visibilities() {
+        let plan = handle
+            .prepare(PlanSpec::Network {
+                net: Arc::new(scenario_network(vis)),
+                query: "hazard".into(),
+                evidence: vec![("alert".into(), true)],
+            })?
+            .with_policy(context_policy);
+        let d = plan.decide(DecisionParams::Network)?;
+        context.push(ScenarioContext { visibility: vis, posterior: d.posterior, exact: d.exact });
+    }
+
+    let workload =
+        VideoWorkload::with_generator(config.scenario.generator(config.seed), config.seed);
+
+    let started = Instant::now();
+    let outcomes = stream_frames(config, &fusion, workload)?;
+    let wall = started.elapsed();
+
+    // Frame-ordered fold: f64 accumulation order is a function of the
+    // scenario alone, so deterministic configs produce bit-identical
+    // stats.
+    let mut hardware = VideoStats::default();
+    let mut oracle = VideoStats::default();
+    let mut by_vis: [(VideoStats, VideoStats); 5] = Default::default();
+    let mut missed = 0u64;
+    for frame in &outcomes {
+        let vix = Visibility::ALL.iter().position(|&v| v == frame.visibility).unwrap_or(0);
+        hardware.frames += 1;
+        oracle.frames += 1;
+        by_vis[vix].0.frames += 1;
+        by_vis[vix].1.frames += 1;
+        for o in &frame.obstacles {
+            oracle.record(o.rgb, o.thermal, o.oracle_fused, config.threshold);
+            by_vis[vix].1.record(o.rgb, o.thermal, o.oracle_fused, config.threshold);
+            // A missed deadline claims nothing: score the uninformative
+            // prior (= never a detection), exactly like a no-candidate
+            // obstacle.
+            let hw = match o.hardware_fused {
+                Some(p) => p,
+                None => {
+                    missed += 1;
+                    0.5
+                }
+            };
+            hardware.record(o.rgb, o.thermal, hw, config.threshold);
+            by_vis[vix].0.record(o.rgb, o.thermal, hw, config.threshold);
+        }
+    }
+    let by_visibility: Vec<(Visibility, VideoStats, VideoStats)> = Visibility::ALL
+        .iter()
+        .zip(by_vis)
+        .filter(|(_, (h, _))| h.frames > 0)
+        .map(|(&v, (h, o))| (v, h, o))
+        .collect();
+
+    let snapshot = handle.metrics().snapshot();
+    coord.shutdown();
+    let wall_secs = wall.as_secs_f64().max(1e-9);
+    Ok(PipelineReport {
+        scenario: config.scenario.name.to_string(),
+        frames: config.frames,
+        hardware,
+        oracle,
+        by_visibility,
+        context,
+        deadline_missed: missed,
+        wall,
+        wall_fps: config.frames as f64 / wall_secs,
+        hardware_fps: snapshot.virtual_fps(),
+        snapshot,
+    })
+}
+
+/// Producer + submitter topology around the prepared fusion plan.
+fn stream_frames(
+    config: &PipelineConfig,
+    plan: &PlanHandle,
+    mut workload: VideoWorkload,
+) -> Result<Vec<FrameOutcome>> {
+    let frames = config.frames;
+    let inflight = config.inflight_frames.max(1);
+    let channel_cap = (config.submitters * inflight).max(1);
+    let (frame_tx, frame_rx) = mpsc::sync_channel::<(usize, FrameDetections)>(channel_cap);
+    let feed: FrameFeed = Arc::new(Mutex::new(frame_rx));
+    let (out_tx, out_rx) = mpsc::channel::<FrameOutcome>();
+    let fps_target = config.fps_target;
+    let mut results: Vec<Option<FrameOutcome>> = Vec::new();
+    results.resize_with(frames, || None);
+
+    std::thread::scope(|s| -> Result<()> {
+        // Producer: scene generation + detector heads overlap the
+        // in-flight decisions downstream.
+        s.spawn(move || {
+            let start = Instant::now();
+            for idx in 0..frames {
+                if let Some(fps) = fps_target {
+                    // Sleep most of the interval, spin only the tail —
+                    // a pure yield loop would burn a core for the whole
+                    // run and depress the very fps it is pacing.
+                    let due = start + Duration::from_secs_f64(idx as f64 / fps);
+                    loop {
+                        let now = Instant::now();
+                        if now >= due {
+                            break;
+                        }
+                        let left = due - now;
+                        if left > Duration::from_micros(200) {
+                            std::thread::sleep(left - Duration::from_micros(100));
+                        } else {
+                            std::thread::yield_now();
+                        }
+                    }
+                }
+                let det = workload.next_detections();
+                if frame_tx.send((idx, det)).is_err() {
+                    return; // submitters bailed; stop producing
+                }
+            }
+        });
+        let mut submitters = Vec::new();
+        for _ in 0..config.submitters {
+            let feed = Arc::clone(&feed);
+            let tx = out_tx.clone();
+            let plan = plan.clone();
+            submitters.push(s.spawn(move || submit_loop(&plan, &feed, &tx, inflight)));
+        }
+        // Only the submitters hold the feed/out senders now, so both
+        // channels disconnect (and the producer unblocks) when they
+        // finish — on success *or* error.
+        drop(feed);
+        drop(out_tx);
+        for outcome in out_rx {
+            let idx = outcome.idx;
+            results[idx] = Some(outcome);
+        }
+        for sub in submitters {
+            sub.join()
+                .map_err(|_| Error::Coordinator("scene pipeline submitter panicked".into()))??;
+        }
+        Ok(())
+    })?;
+
+    let mut out = Vec::with_capacity(frames);
+    for (idx, slot) in results.into_iter().enumerate() {
+        out.push(slot.ok_or_else(|| {
+            Error::Coordinator(format!("scene pipeline dropped frame {idx}"))
+        })?);
+    }
+    Ok(out)
+}
+
+/// One submitter: pull frames, submit the proposed obstacles against
+/// the prepared plan, keep `inflight` frames pipelined, resolve in
+/// frame order.
+fn submit_loop(
+    plan: &PlanHandle,
+    feed: &FrameFeed,
+    tx: &mpsc::Sender<FrameOutcome>,
+    inflight: usize,
+) -> Result<()> {
+    let mut window: VecDeque<InFlightFrame> = VecDeque::with_capacity(inflight + 1);
+    loop {
+        let msg = feed.lock().expect("scene pipeline feed poisoned").recv();
+        let Ok((idx, det)) = msg else { break };
+        let mut frame = InFlightFrame {
+            idx,
+            visibility: det.frame.visibility,
+            raw: det.confidences.clone(),
+            oracle: Vec::with_capacity(det.confidences.len()),
+            pending: Vec::with_capacity(det.confidences.len()),
+        };
+        for &(p_rgb, p_th) in &det.confidences {
+            let (fr, ft) = (fusion_input(p_rgb), fusion_input(p_th));
+            frame.oracle.push(exact_fusion(fr, ft));
+            // Ref-31 semantics: a fusion decision exists only when at
+            // least one modality proposed a box. With neither firing
+            // there is nothing to fuse — both paths score the obstacle
+            // at the uninformative ½ (never a detection).
+            frame.pending.push(if fr > 0.5 || ft > 0.5 {
+                Some(plan.submit_blocking(DecisionParams::Fusion { posteriors: vec![fr, ft] })?)
+            } else {
+                None
+            });
+        }
+        window.push_back(frame);
+        while window.len() > inflight {
+            resolve_front(&mut window, tx)?;
+        }
+    }
+    while !window.is_empty() {
+        resolve_front(&mut window, tx)?;
+    }
+    Ok(())
+}
+
+/// Wait out the oldest in-flight frame and emit its outcomes.
+fn resolve_front(
+    window: &mut VecDeque<InFlightFrame>,
+    tx: &mpsc::Sender<FrameOutcome>,
+) -> Result<()> {
+    let Some(frame) = window.pop_front() else { return Ok(()) };
+    let InFlightFrame { idx, visibility, raw, oracle, pending } = frame;
+    let mut obstacles = Vec::with_capacity(raw.len());
+    for ((&(rgb, thermal), &oracle_fused), pending) in
+        raw.iter().zip(oracle.iter()).zip(pending)
+    {
+        let hardware_fused = match pending {
+            None => Some(0.5), // no candidate box on either modality
+            Some(p) => match p.wait() {
+                Ok(d) => Some(d.posterior),
+                Err(Error::Deadline(_)) => None,
+                Err(e) => return Err(e),
+            },
+        };
+        obstacles.push(ObstacleOutcome { rgb, thermal, oracle_fused, hardware_fused });
+    }
+    let _ = tx.send(FrameOutcome { idx, visibility, obstacles });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::exact_posterior_by_name;
+
+    #[test]
+    fn scenario_networks_are_valid_and_visibility_conditioned() {
+        let mut posteriors = Vec::new();
+        for vis in Visibility::ALL {
+            let net = scenario_network(vis);
+            net.validate().unwrap();
+            let (p, p_ev) =
+                exact_posterior_by_name(&net, "hazard", &[("alert", true)]).unwrap();
+            assert!((0.0..=1.0).contains(&p), "{vis:?}: posterior {p}");
+            assert!(p_ev > 0.05, "{vis:?}: evidence mass {p_ev}");
+            posteriors.push(p);
+        }
+        // Conditioning is real: the hazard posterior differs across
+        // visibility conditions (fog's attenuation vs clear day).
+        let day = posteriors[0];
+        let fog = posteriors[2];
+        assert!((day - fog).abs() > 0.005, "day {day} vs fog {fog} indistinguishable");
+    }
+
+    #[test]
+    fn default_config_is_throughput_shaped_and_deterministic_preset_is_not() {
+        let d = PipelineConfig::default();
+        assert!(d.max_batch >= 32);
+        assert_eq!(d.bits, 100, "the paper's 0.4 ms operating point");
+        assert!(d.anytime && d.allow_partial);
+        assert!(!d.is_deterministic(), "default overlaps submitters/workers");
+        let det =
+            PipelineConfig::deterministic(ScenarioSpec::mixed_traffic(), 16, 1, 1024);
+        assert!(det.is_deterministic());
+        assert!(det.deadline.is_none());
+    }
+
+    #[test]
+    fn config_validation_rejects_degenerate_runs() {
+        let zero = PipelineConfig { frames: 0, ..PipelineConfig::default() };
+        assert!(run(&zero).is_err());
+        let bad_threshold = PipelineConfig { threshold: 1.5, ..PipelineConfig::default() };
+        assert!(bad_threshold.validate().is_err());
+        let no_workers = PipelineConfig { workers: 0, ..PipelineConfig::default() };
+        assert!(no_workers.validate().is_err());
+    }
+
+    #[test]
+    fn small_run_reports_hardware_and_oracle_stats() {
+        let cfg = PipelineConfig {
+            frames: 12,
+            submitters: 2,
+            workers: 2,
+            bits: 256,
+            fps_target: None,
+            ..PipelineConfig::default()
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.frames, 12);
+        assert_eq!(report.hardware.frames, 12);
+        assert_eq!(report.hardware.obstacles, report.oracle.obstacles);
+        assert!(report.hardware.obstacles >= 12);
+        assert_eq!(report.context.len(), 5, "default mix spans every visibility");
+        assert!(report.hardware_fps > 0.0);
+        assert!(report.wall_fps > 0.0);
+        let table = report.to_table();
+        assert!(table.contains("scenario 'mixed'"), "{table}");
+        assert!(table.contains("fps virtual hardware"), "{table}");
+        // The per-visibility split conserves obstacles.
+        let split: usize =
+            report.by_visibility.iter().map(|(_, h, _)| h.obstacles).sum();
+        assert_eq!(split, report.hardware.obstacles);
+    }
+}

@@ -160,6 +160,191 @@ pub struct SceneFrame {
     pub obstacles: Vec<Obstacle>,
 }
 
+/// One phase of a scenario script: how long it lasts and what the world
+/// looks like while it does. Phases are cycled by [`SceneGenerator`]
+/// (see [`SceneGenerator::scripted`]).
+#[derive(Debug, Clone)]
+pub struct ScenarioPhase {
+    /// Frames this phase lasts before the script advances (min 1).
+    pub frames: usize,
+    /// Visibility mix while the phase is active.
+    pub condition_mix: Vec<(Visibility, f64)>,
+    /// Obstacle-class mix while the phase is active.
+    pub class_mix: Vec<(ObstacleClass, f64)>,
+}
+
+/// A named scenario script: the Movie S1 cases (pedestrian-heavy night,
+/// foggy highway, glare burst, …) as reusable generator programs. Feed
+/// one to [`SceneGenerator::scripted`] via [`Self::generator`], or to
+/// the streaming service layer via
+/// [`crate::scene::pipeline::PipelineConfig`].
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    /// Registry name (`bayes-mem parse-video --scenario <name>`).
+    pub name: &'static str,
+    /// One-line description for `--list-scenarios`.
+    pub description: &'static str,
+    /// Mean obstacles per frame.
+    pub mean_obstacles: f64,
+    /// The phases, cycled in order for as long as frames are drawn.
+    pub phases: Vec<ScenarioPhase>,
+}
+
+/// Uniform weights over every obstacle class (the legacy draw).
+fn uniform_classes() -> Vec<(ObstacleClass, f64)> {
+    ObstacleClass::ALL.iter().map(|&c| (c, 1.0)).collect()
+}
+
+impl ScenarioSpec {
+    /// The default Movie S1 mix: day/night-heavy conditions, uniform
+    /// obstacle classes — identical in distribution to
+    /// [`SceneGenerator::new`].
+    pub fn mixed_traffic() -> Self {
+        Self {
+            name: "mixed",
+            description: "default day/night-heavy mix, uniform obstacle classes",
+            mean_obstacles: 3.0,
+            phases: vec![ScenarioPhase {
+                frames: 1,
+                condition_mix: vec![
+                    (Visibility::Day, 0.4),
+                    (Visibility::Night, 0.3),
+                    (Visibility::Fog, 0.1),
+                    (Visibility::Rain, 0.1),
+                    (Visibility::HarshLight, 0.1),
+                ],
+                class_mix: uniform_classes(),
+            }],
+        }
+    }
+
+    /// Pedestrian-heavy night traffic: the regime where RGB is blind and
+    /// thermal carries the fusion (the paper's biggest gain case).
+    pub fn night_pedestrians() -> Self {
+        Self {
+            name: "night-pedestrians",
+            description: "dense pedestrians/cyclists at night (RGB-blind regime)",
+            mean_obstacles: 3.5,
+            phases: vec![ScenarioPhase {
+                frames: 1,
+                condition_mix: vec![(Visibility::Night, 1.0)],
+                class_mix: vec![
+                    (ObstacleClass::Pedestrian, 0.55),
+                    (ObstacleClass::Cyclist, 0.2),
+                    (ObstacleClass::Vehicle, 0.1),
+                    (ObstacleClass::ParkedVehicle, 0.1),
+                    (ObstacleClass::Debris, 0.05),
+                ],
+            }],
+        }
+    }
+
+    /// Foggy highway: attenuated sensing, cold vehicles and debris —
+    /// the thermal-miss regime.
+    pub fn foggy_highway() -> Self {
+        Self {
+            name: "foggy-highway",
+            description: "fog/rain highway with cold vehicles and debris (thermal-miss regime)",
+            mean_obstacles: 2.5,
+            phases: vec![ScenarioPhase {
+                frames: 1,
+                condition_mix: vec![(Visibility::Fog, 0.8), (Visibility::Rain, 0.2)],
+                class_mix: vec![
+                    (ObstacleClass::Vehicle, 0.45),
+                    (ObstacleClass::ParkedVehicle, 0.25),
+                    (ObstacleClass::Debris, 0.2),
+                    (ObstacleClass::Cyclist, 0.05),
+                    (ObstacleClass::Pedestrian, 0.05),
+                ],
+            }],
+        }
+    }
+
+    /// Glare burst: clear daylight punctuated by harsh-light bursts with
+    /// vulnerable road users (the Movie S1 running-child case).
+    pub fn glare_burst() -> Self {
+        Self {
+            name: "glare-burst",
+            description: "daylight with periodic glare bursts over pedestrians (Movie S1 case)",
+            mean_obstacles: 3.0,
+            phases: vec![
+                ScenarioPhase {
+                    frames: 16,
+                    condition_mix: vec![(Visibility::Day, 1.0)],
+                    class_mix: uniform_classes(),
+                },
+                ScenarioPhase {
+                    frames: 8,
+                    condition_mix: vec![(Visibility::HarshLight, 1.0)],
+                    class_mix: vec![
+                        (ObstacleClass::Pedestrian, 0.5),
+                        (ObstacleClass::Cyclist, 0.25),
+                        (ObstacleClass::Vehicle, 0.15),
+                        (ObstacleClass::ParkedVehicle, 0.05),
+                        (ObstacleClass::Debris, 0.05),
+                    ],
+                },
+            ],
+        }
+    }
+
+    /// Sweep all five [`Visibility`] conditions in fixed-length phases
+    /// (the Fig. 4b columns as one continuous drive).
+    pub fn visibility_sweep() -> Self {
+        Self {
+            name: "visibility-sweep",
+            description: "cycles every visibility condition in 12-frame phases",
+            mean_obstacles: 3.0,
+            phases: Visibility::ALL
+                .iter()
+                .map(|&vis| ScenarioPhase {
+                    frames: 12,
+                    condition_mix: vec![(vis, 1.0)],
+                    class_mix: uniform_classes(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Every registered scenario.
+    pub fn all() -> Vec<ScenarioSpec> {
+        vec![
+            Self::mixed_traffic(),
+            Self::night_pedestrians(),
+            Self::foggy_highway(),
+            Self::glare_burst(),
+            Self::visibility_sweep(),
+        ]
+    }
+
+    /// Look a scenario up by its registry name.
+    pub fn by_name(name: &str) -> Option<ScenarioSpec> {
+        Self::all().into_iter().find(|s| s.name == name)
+    }
+
+    /// The distinct visibility conditions this scenario can produce, in
+    /// [`Visibility::ALL`] order (what the service layer prepares one
+    /// conditioned network plan per).
+    pub fn visibilities(&self) -> Vec<Visibility> {
+        Visibility::ALL
+            .iter()
+            .copied()
+            .filter(|&v| {
+                self.phases
+                    .iter()
+                    .any(|p| p.condition_mix.iter().any(|&(pv, w)| pv == v && w > 0.0))
+            })
+            .collect()
+    }
+
+    /// A scripted generator running this scenario.
+    pub fn generator(&self, seed: u64) -> SceneGenerator {
+        let mut g = SceneGenerator::scripted(seed, self.phases.clone());
+        g.mean_obstacles = self.mean_obstacles;
+        g
+    }
+}
+
 /// Streaming generator of scene frames.
 #[derive(Debug, Clone)]
 pub struct SceneGenerator {
@@ -169,6 +354,14 @@ pub struct SceneGenerator {
     pub mean_obstacles: f64,
     /// Condition mix: `(visibility, weight)`.
     pub condition_mix: Vec<(Visibility, f64)>,
+    /// Obstacle-class mix. `None` keeps the legacy uniform draw — and
+    /// its exact RNG consumption, so pre-scenario seeds stay
+    /// bit-identical.
+    pub class_mix: Option<Vec<(ObstacleClass, f64)>>,
+    /// Scenario script, cycled by frame count (empty = static mixes).
+    script: Vec<ScenarioPhase>,
+    phase: usize,
+    phase_left: usize,
 }
 
 impl SceneGenerator {
@@ -185,6 +378,10 @@ impl SceneGenerator {
                 (Visibility::Rain, 0.1),
                 (Visibility::HarshLight, 0.1),
             ],
+            class_mix: None,
+            script: Vec::new(),
+            phase: 0,
+            phase_left: 0,
         }
     }
 
@@ -192,6 +389,21 @@ impl SceneGenerator {
     pub fn with_condition(seed: u64, vis: Visibility) -> Self {
         let mut g = Self::new(seed);
         g.condition_mix = vec![(vis, 1.0)];
+        g
+    }
+
+    /// Generator driven by a scenario script: each [`ScenarioPhase`]
+    /// supplies the condition and class mixes for `phase.frames` frames,
+    /// then the script advances (cycling back to the first phase). An
+    /// empty script behaves exactly like [`Self::new`].
+    pub fn scripted(seed: u64, phases: Vec<ScenarioPhase>) -> Self {
+        let mut g = Self::new(seed);
+        if let Some(first) = phases.first() {
+            g.condition_mix = first.condition_mix.clone();
+            g.class_mix = Some(first.class_mix.clone());
+            g.phase_left = first.frames.max(1);
+        }
+        g.script = phases;
         g
     }
 
@@ -207,8 +419,41 @@ impl SceneGenerator {
         self.condition_mix.last().map(|&(v, _)| v).unwrap_or(Visibility::Day)
     }
 
+    fn sample_class(&mut self) -> ObstacleClass {
+        let Some(mix) = &self.class_mix else {
+            // The legacy uniform draw, RNG-identical to the
+            // pre-scenario generator.
+            return ObstacleClass::ALL[self.rng.below(ObstacleClass::ALL.len())];
+        };
+        let total: f64 = mix.iter().map(|(_, w)| w).sum();
+        let mut u = self.rng.f64() * total;
+        for &(c, w) in mix {
+            if u < w {
+                return c;
+            }
+            u -= w;
+        }
+        mix.last().map(|&(c, _)| c).unwrap_or(ObstacleClass::Pedestrian)
+    }
+
+    /// Advance the script at a phase boundary (no-op without a script).
+    fn advance_script(&mut self) {
+        if self.script.is_empty() {
+            return;
+        }
+        if self.phase_left == 0 {
+            self.phase = (self.phase + 1) % self.script.len();
+            let ph = &self.script[self.phase];
+            self.condition_mix = ph.condition_mix.clone();
+            self.class_mix = Some(ph.class_mix.clone());
+            self.phase_left = ph.frames.max(1);
+        }
+        self.phase_left -= 1;
+    }
+
     /// Generate the next frame.
     pub fn next_frame(&mut self) -> SceneFrame {
+        self.advance_script();
         let visibility = self.sample_condition();
         // Poisson-ish obstacle count via thinning (knuth for small mean).
         let mut n = 0usize;
@@ -224,7 +469,7 @@ impl SceneGenerator {
         let n = n.clamp(1, 8);
         let obstacles = (0..n)
             .map(|_| {
-                let class = ObstacleClass::ALL[self.rng.below(ObstacleClass::ALL.len())];
+                let class = self.sample_class();
                 Obstacle::sample(class, &mut self.rng)
             })
             .collect();
@@ -320,6 +565,86 @@ mod tests {
         assert!(ObstacleClass::ParkedVehicle.heat() < 0.3);
         assert!(ObstacleClass::ParkedVehicle.contrast() > 0.6);
         assert!(ObstacleClass::Pedestrian.heat() > 0.8);
+    }
+
+    #[test]
+    fn empty_script_matches_the_legacy_generator_bitwise() {
+        // `scripted(seed, vec![])` must consume the RNG exactly like
+        // `new(seed)` — the compatibility contract for existing seeds.
+        let mut legacy = SceneGenerator::new(11);
+        let mut scripted = SceneGenerator::scripted(11, Vec::new());
+        for _ in 0..50 {
+            let a = legacy.next_frame();
+            let b = scripted.next_frame();
+            assert_eq!(a.visibility, b.visibility);
+            assert_eq!(a.obstacles.len(), b.obstacles.len());
+            for (oa, ob) in a.obstacles.iter().zip(&b.obstacles) {
+                assert_eq!(oa.class, ob.class);
+                assert_eq!(oa.heat.to_bits(), ob.heat.to_bits());
+                assert_eq!(oa.distance.to_bits(), ob.distance.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn glare_burst_script_cycles_its_phases() {
+        let mut g = ScenarioSpec::glare_burst().generator(12);
+        // Phase 1: 16 clear-day frames; phase 2: 8 harsh-light frames;
+        // then the script cycles.
+        for i in 0..48 {
+            let f = g.next_frame();
+            let expect = if i % 24 < 16 { Visibility::Day } else { Visibility::HarshLight };
+            assert_eq!(f.visibility, expect, "frame {i}");
+        }
+    }
+
+    #[test]
+    fn visibility_sweep_covers_all_conditions() {
+        let spec = ScenarioSpec::visibility_sweep();
+        assert_eq!(spec.visibilities(), Visibility::ALL.to_vec());
+        let mut g = spec.generator(13);
+        let mut seen = [false; 5];
+        for _ in 0..60 {
+            let f = g.next_frame();
+            let i = Visibility::ALL.iter().position(|&v| v == f.visibility).unwrap();
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "one 60-frame cycle must visit every condition");
+    }
+
+    #[test]
+    fn class_mix_skews_the_obstacle_population() {
+        let mut g = ScenarioSpec::night_pedestrians().generator(14);
+        let mut ped = 0usize;
+        let mut total = 0usize;
+        for _ in 0..200 {
+            for o in g.next_frame().obstacles {
+                total += 1;
+                ped += (o.class == ObstacleClass::Pedestrian) as usize;
+            }
+        }
+        let frac = ped as f64 / total as f64;
+        assert!(frac > 0.4, "pedestrian-heavy mix produced only {frac:.2} pedestrians");
+    }
+
+    #[test]
+    fn scenario_registry_round_trips() {
+        let all = ScenarioSpec::all();
+        assert!(all.len() >= 5);
+        for s in &all {
+            let found = ScenarioSpec::by_name(s.name).unwrap();
+            assert_eq!(found.name, s.name);
+            assert!(!s.phases.is_empty());
+            assert!(!s.visibilities().is_empty());
+            for ph in &s.phases {
+                let w: f64 = ph.class_mix.iter().map(|(_, w)| w).sum();
+                assert!(w > 0.0, "{}: degenerate class mix", s.name);
+            }
+        }
+        assert!(ScenarioSpec::by_name("no-such-scenario").is_none());
+        // Scenario names restricted to a single condition really stick.
+        let mut g = ScenarioSpec::night_pedestrians().generator(15);
+        assert!((0..30).all(|_| g.next_frame().visibility == Visibility::Night));
     }
 
     #[test]

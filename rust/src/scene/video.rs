@@ -40,6 +40,27 @@ pub struct VideoStats {
 }
 
 impl VideoStats {
+    /// Fold one obstacle's per-modality confidences and fused posterior
+    /// into the counters. Shared by the oracle fold
+    /// ([`VideoWorkload::run`]) and the hardware fold
+    /// ([`super::pipeline`]), so the two paths can never drift on what
+    /// counts as a detection.
+    pub fn record(&mut self, rgb_conf: f64, thermal_conf: f64, fused_conf: f64, threshold: f64) {
+        self.obstacles += 1;
+        self.rgb_conf_sum += rgb_conf;
+        self.thermal_conf_sum += thermal_conf;
+        self.fused_conf_sum += fused_conf;
+        if rgb_conf > threshold {
+            self.rgb_detections += 1;
+        }
+        if thermal_conf > threshold {
+            self.thermal_detections += 1;
+        }
+        if fused_conf > threshold {
+            self.fused_detections += 1;
+        }
+    }
+
     /// Detection rate of a modality.
     pub fn rate(&self, hits: usize) -> f64 {
         if self.obstacles == 0 {
@@ -49,22 +70,35 @@ impl VideoStats {
         }
     }
 
-    /// Fusion detection-rate improvement over thermal-only (paper: +85 %).
-    pub fn gain_vs_thermal(&self) -> f64 {
-        if self.thermal_detections == 0 {
-            0.0
+    /// Gain of fused detections over a single-modal baseline. A zero
+    /// baseline with fused detections present is **infinite** gain —
+    /// exactly the night/glare regimes where one sensor is blind and
+    /// fusion recovers everything (the old `0.0` return reported "no
+    /// gain" there). `0.0` only when both counts are zero.
+    fn gain(fused: usize, baseline: usize) -> f64 {
+        if baseline == 0 {
+            if fused == 0 {
+                0.0
+            } else {
+                f64::INFINITY
+            }
         } else {
-            self.fused_detections as f64 / self.thermal_detections as f64 - 1.0
+            fused as f64 / baseline as f64 - 1.0
         }
     }
 
+    /// Fusion detection-rate improvement over thermal-only (paper:
+    /// +85 %). [`f64::INFINITY`] when fusion detects over a blind
+    /// thermal baseline.
+    pub fn gain_vs_thermal(&self) -> f64 {
+        Self::gain(self.fused_detections, self.thermal_detections)
+    }
+
     /// Fusion detection-rate improvement over RGB-only (paper: +19 %).
+    /// [`f64::INFINITY`] when fusion detects over a blind RGB baseline
+    /// (night/glare).
     pub fn gain_vs_rgb(&self) -> f64 {
-        if self.rgb_detections == 0 {
-            0.0
-        } else {
-            self.fused_detections as f64 / self.rgb_detections as f64 - 1.0
-        }
+        Self::gain(self.fused_detections, self.rgb_detections)
     }
 
     /// Mean fused confidence on detected obstacles vs best single modal —
@@ -125,8 +159,13 @@ impl VideoWorkload {
     }
 
     /// Run `n_frames`, folding detections into aggregate statistics using
-    /// closed-form fusion (the stochastic-hardware path is exercised by
-    /// the coordinator benches; this is the workload-level oracle).
+    /// closed-form fusion.
+    ///
+    /// This is the **oracle-only** path: every posterior comes from
+    /// [`exact_fusion`], never from the stochastic hardware. To stream
+    /// the same workload through prepared plans on the serving stack —
+    /// and get [`VideoStats`] measured on the hardware posteriors — use
+    /// [`super::pipeline`] (see `MIGRATION.md`).
     pub fn run(&mut self, n_frames: usize) -> VideoStats {
         let mut stats = VideoStats::default();
         for _ in 0..n_frames {
@@ -136,19 +175,7 @@ impl VideoWorkload {
                 // Ref-31 ensembling: misses contribute the prior, so a
                 // blind modality cannot veto the other.
                 let fused = exact_fusion(fusion_input(p_rgb), fusion_input(p_th));
-                stats.obstacles += 1;
-                stats.rgb_conf_sum += p_rgb;
-                stats.thermal_conf_sum += p_th;
-                stats.fused_conf_sum += fused;
-                if p_rgb > self.threshold {
-                    stats.rgb_detections += 1;
-                }
-                if p_th > self.threshold {
-                    stats.thermal_detections += 1;
-                }
-                if fused > self.threshold {
-                    stats.fused_detections += 1;
-                }
+                stats.record(p_rgb, p_th, fused, self.threshold);
             }
         }
         stats
@@ -199,5 +226,58 @@ mod tests {
         assert_eq!(s.rate(0), 0.0);
         assert_eq!(s.gain_vs_thermal(), 0.0);
         assert_eq!(s.gain_vs_rgb(), 0.0);
+    }
+
+    #[test]
+    fn zero_baseline_gain_is_infinite_not_zero() {
+        // Fused detections over a blind baseline used to report 0.0 —
+        // "no gain" in exactly the regimes where fusion gains the most.
+        let stats = VideoStats {
+            obstacles: 10,
+            frames: 3,
+            rgb_detections: 0,
+            thermal_detections: 3,
+            fused_detections: 7,
+            ..VideoStats::default()
+        };
+        assert_eq!(stats.gain_vs_rgb(), f64::INFINITY);
+        assert!((stats.gain_vs_thermal() - (7.0 / 3.0 - 1.0)).abs() < 1e-12);
+        // Both zero really is "no gain".
+        let none = VideoStats { obstacles: 4, frames: 1, ..VideoStats::default() };
+        assert_eq!(none.gain_vs_rgb(), 0.0);
+        assert_eq!(none.gain_vs_thermal(), 0.0);
+    }
+
+    #[test]
+    fn night_scene_with_blind_rgb_reports_infinite_gain() {
+        // Deterministic night pedestrians (noise-free heads): RGB sees
+        // nothing, thermal sees everything, fusion recovers every
+        // obstacle — gain vs RGB must be infinite, not 0.
+        use crate::scene::{DetectorModel, Modality, Obstacle, ObstacleClass, Visibility};
+        let mut rgb = DetectorModel::new(Modality::Rgb);
+        let mut th = DetectorModel::new(Modality::Thermal);
+        rgb.noise_sigma = 0.0;
+        th.noise_sigma = 0.0;
+        let mut rng = crate::util::Rng::seeded(90);
+        let mut stats = VideoStats { frames: 1, ..VideoStats::default() };
+        for distance in [0.2, 0.4, 0.6] {
+            let ped = Obstacle {
+                class: ObstacleClass::Pedestrian,
+                heat: ObstacleClass::Pedestrian.heat(),
+                contrast: ObstacleClass::Pedestrian.contrast(),
+                distance,
+                size: ObstacleClass::Pedestrian.size(),
+            };
+            let p_rgb = rgb.detect(&ped, Visibility::Night, &mut rng);
+            let p_th = th.detect(&ped, Visibility::Night, &mut rng);
+            assert!(p_rgb < 0.5, "night RGB must miss (d={distance}): {p_rgb}");
+            assert!(p_th > 0.5, "thermal must see the pedestrian (d={distance}): {p_th}");
+            let fused = exact_fusion(fusion_input(p_rgb), fusion_input(p_th));
+            stats.record(p_rgb, p_th, fused, 0.5);
+        }
+        assert_eq!(stats.rgb_detections, 0);
+        assert_eq!(stats.fused_detections, 3);
+        assert_eq!(stats.gain_vs_rgb(), f64::INFINITY);
+        assert!(stats.gain_vs_thermal().abs() < 1e-12, "fusion == thermal here");
     }
 }
