@@ -116,5 +116,53 @@ fn main() {
         );
     }
 
+    // Scene-scale (111-node scene100): optimizer gate reduction and
+    // prepare latency through the serving layer. Both exported so CI can
+    // grep them out of BENCH_network.json.
+    let scene_spec = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../specs/scene100.toml");
+    let scene = BayesNet::load(&scene_spec).expect("specs/scene100.toml parses and validates");
+    let raw = compile_query(&scene, "obj00_hazard", &[("alarm", true)]).unwrap();
+    let (optimized, stats) = bayes_mem::network::optimize(&raw);
+    let reduction = stats.gate_reduction();
+    b.metric("optimizer_gate_reduction", reduction);
+    println!(
+        "  optimizer_gate_reduction: {:.1}% ({} -> {} gates, {} -> {} streams; \
+         acceptance >= 25%)",
+        100.0 * reduction,
+        stats.gates_before,
+        stats.gates_after,
+        stats.streams_before,
+        stats.streams_after,
+    );
+
+    let mut decision_bank = bank(4096, 6);
+    b.bench("scene100_optimized_decision_4096bit", || {
+        std::hint::black_box(eval.evaluate(&mut decision_bank, &optimized).unwrap().posterior);
+    });
+
+    let spec = bayes_mem::coordinator::PlanSpec::Network {
+        net: std::sync::Arc::new(scene),
+        query: "obj00_hazard".into(),
+        evidence: vec![("alarm".into(), true)],
+    };
+    let start = std::time::Instant::now();
+    let mut prepares = 0u32;
+    loop {
+        std::hint::black_box(
+            bayes_mem::coordinator::PreparedPlan::compile(spec.clone()).unwrap(),
+        );
+        prepares += 1;
+        if prepares >= 5 && start.elapsed().as_millis() >= 200 {
+            break;
+        }
+    }
+    let prepare_ms = start.elapsed().as_secs_f64() * 1e3 / f64::from(prepares);
+    b.metric("scene100_prepare_ms", prepare_ms);
+    println!(
+        "  scene100_prepare_ms: {prepare_ms:.2} ms \
+         (validate + compile + optimize + VE exact, {prepares} runs)"
+    );
+
     b.finish_and_export();
 }

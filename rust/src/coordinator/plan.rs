@@ -293,9 +293,14 @@ pub struct PreparedPlan {
     id: u64,
     spec: PlanSpec,
     netlist: Netlist,
-    /// Exact posterior for Network plans, enumerated once at prepare
-    /// time (NaN is unreachable: enumeration errors fail `prepare`).
+    /// Exact posterior for Network plans, computed once at prepare time
+    /// by variable elimination (NaN is unreachable: VE errors fail
+    /// `prepare`).
     exact_network: f64,
+    /// Optimizer statistics for Network plans (`None` for the lowered
+    /// operator netlists, which rebind their inputs per decision and are
+    /// never optimized).
+    opt_stats: Option<network::OptStats>,
 }
 
 impl PreparedPlan {
@@ -304,21 +309,36 @@ impl PreparedPlan {
     /// so equal specs share one plan.
     pub fn compile(spec: PlanSpec) -> Result<Self> {
         spec.validate()?;
-        let (netlist, exact_network) = match &spec {
-            PlanSpec::Inference => (lower::inference_netlist(), f64::NAN),
-            PlanSpec::Fusion { modalities } => (lower::fusion_netlist(*modalities)?, f64::NAN),
+        let (netlist, exact_network, opt_stats) = match &spec {
+            PlanSpec::Inference => (lower::inference_netlist(), f64::NAN, None),
+            PlanSpec::Fusion { modalities } => {
+                (lower::fusion_netlist(*modalities)?, f64::NAN, None)
+            }
             PlanSpec::Network { net, query, evidence } => {
                 let ev: Vec<(&str, bool)> =
                     evidence.iter().map(|(n, v)| (n.as_str(), *v)).collect();
                 let netlist = network::compile_query(net, query, &ev)?;
-                // Enumerate the closed-form reference once, here — a
-                // typed Error::Network at prepare time instead of the
-                // old silent-NaN exact in every response.
+                // Shrink the gate fabric before it serves decisions:
+                // shared CPT streams, folded deterministic rows, CSE'd
+                // subtrees, dead gates dropped. Distribution-preserving
+                // (and structurally identity when nothing fires, which
+                // keeps minimal plans bit-reproducible vs direct
+                // evaluation).
+                let (netlist, stats) = network::optimize(&netlist);
+                // Compute the exact reference once, here, by variable
+                // elimination — a typed Error::Network at prepare time
+                // instead of the old silent-NaN exact in every response.
                 let (exact, _p_ev) = network::exact_posterior_by_name(net, query, &ev)?;
-                (netlist, exact)
+                (netlist, exact, Some(stats))
             }
         };
-        Ok(Self { id: NEXT_PLAN_ID.fetch_add(1, Ordering::Relaxed), spec, netlist, exact_network })
+        Ok(Self {
+            id: NEXT_PLAN_ID.fetch_add(1, Ordering::Relaxed),
+            spec,
+            netlist,
+            exact_network,
+            opt_stats,
+        })
     }
 
     /// Process-unique plan id (the batcher's grouping key).
@@ -331,9 +351,17 @@ impl PreparedPlan {
         &self.spec
     }
 
-    /// The compiled word-parallel netlist.
+    /// The compiled (and, for Network plans, optimized) word-parallel
+    /// netlist.
     pub fn netlist(&self) -> &Netlist {
         &self.netlist
+    }
+
+    /// Optimizer statistics for Network plans: per-pass live gate/stream
+    /// counts and the overall reduction. `None` for operator plans
+    /// (inference/fusion), whose netlists are never optimized.
+    pub fn opt_stats(&self) -> Option<&network::OptStats> {
+        self.opt_stats.as_ref()
     }
 
     /// Metrics family of decisions under this plan.

@@ -36,8 +36,8 @@ use bayes_mem::config::{AppConfig, Backend};
 use bayes_mem::coordinator::{Coordinator, DecisionParams, PlanSpec};
 use bayes_mem::figures;
 use bayes_mem::network::{
-    compile_query, exact_posterior_by_name, lower, BayesNet, NetlistEvaluator, StopPolicy,
-    StopReason,
+    compile_query, evaluate_query_in_domain, exact_posterior_by_name, lower, optimize,
+    BayesNet, NetlistEvaluator, StopPolicy, StopReason, StreamDomain,
 };
 use bayes_mem::runtime::Runtime;
 use bayes_mem::scene::{fusion_input, pipeline, PipelineConfig, ScenarioSpec, VideoWorkload};
@@ -197,6 +197,7 @@ USAGE:
                  [--threshold P] [--half-width H]
   bayes-mem network --spec net.toml --query NODE [--evidence NODE=1 ...]
                     [--bits N] [--seed N] [--threshold P] [--half-width H]
+                    [--no-optimize] [--log-domain R]
   bayes-mem artifacts [--artifacts DIR]
   bayes-mem config
 
@@ -319,14 +320,47 @@ fn cmd_network(flags: &Flags) -> CliResult<()> {
     cfg.sne.n_bits = bits;
     let mut bank = SneBank::new(cfg.sne, flags.u64_or("seed", 42))?;
     let ev_refs: Vec<(&str, bool)> = evidence.iter().map(|(n, v)| (n.as_str(), *v)).collect();
-    let netlist = compile_query(&net, query, &ev_refs)?;
+    let (exact, exact_ev) = exact_posterior_by_name(&net, query, &ev_refs)?;
+
+    // --log-domain <R>: evaluate via additive negative-log-likelihood
+    // accumulation (fully observed evidence only) instead of the
+    // linear-stream netlist.
+    if let Some(r_str) = flags.get("log-domain") {
+        let Ok(exchange_rate) = r_str.parse::<u32>() else {
+            bail!("--log-domain takes an integer exchange rate, got {r_str:?}")
+        };
+        let domain = StreamDomain::Log { exchange_rate };
+        let r = evaluate_query_in_domain(&mut bank, &net, query, &ev_refs, domain)?;
+        println!(
+            "log-domain (R = {exchange_rate}) over {} nodes\n\
+             P({query}=1 | evidence) = {:.4}  (exact {exact:.4}, |err| {:.4})\n\
+             P(evidence)           = {:.3e}  (exact {exact_ev:.3e})\n\
+             hardware: {:.3} ms, {:.2} nJ",
+            net.len(),
+            r.posterior,
+            (r.posterior - exact).abs(),
+            r.marginal,
+            bank.ledger().clock.elapsed_ms(),
+            bank.ledger().energy_nj,
+        );
+        return Ok(());
+    }
+
+    let compiled = compile_query(&net, query, &ev_refs)?;
+    // Optimize by default (--no-optimize restores the raw compile):
+    // stream sharing, constant folding, CSE, dead-gate elimination.
+    let (netlist, opt) = if flags.has("no-optimize") {
+        (compiled, None)
+    } else {
+        let (optimized, stats) = optimize(&compiled);
+        (optimized, Some(stats))
+    };
     let r = NetlistEvaluator::new().evaluate_anytime(
         &mut bank,
         &netlist,
         netlist.inputs(),
         &stop_policy_from_flags(flags)?,
     )?;
-    let (exact, exact_ev) = exact_posterior_by_name(&net, query, &ev_refs)?;
     let given = if evidence.is_empty() {
         "no evidence".to_string()
     } else {
@@ -357,6 +391,30 @@ fn cmd_network(flags: &Flags) -> CliResult<()> {
         bank.ledger().clock.elapsed_ms(),
         bank.ledger().energy_nj,
     );
+    if let Some(stats) = opt {
+        if stats.changed() {
+            println!(
+                "optimizer: gates {} -> {} (-{:.1}%), SNE streams {} -> {} (-{:.1}%)",
+                stats.gates_before,
+                stats.gates_after,
+                100.0 * stats.gate_reduction(),
+                stats.streams_before,
+                stats.streams_after,
+                100.0 * stats.stream_reduction(),
+            );
+            for p in &stats.passes {
+                println!(
+                    "  {:<15} live {:>5} streams, {:>5} gates{}",
+                    p.name,
+                    p.live_streams,
+                    p.live_gates,
+                    if p.changed { "" } else { "  (no-op)" },
+                );
+            }
+        } else {
+            println!("optimizer: no-op (netlist already minimal)");
+        }
+    }
     Ok(())
 }
 

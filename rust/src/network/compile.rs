@@ -62,7 +62,21 @@ pub enum GateOp {
         /// Output slot.
         dst: usize,
     },
+    /// `dst = all-zeros` — produced only by the optimizer
+    /// ([`super::optimize`]) when it folds a deterministic `p = 0` CPT
+    /// row or an AND with an all-zero operand; the compiler itself never
+    /// emits one.
+    Const0 {
+        /// Output slot.
+        dst: usize,
+    },
 }
+
+/// `input_group` marker for input streams that may **not** be shared or
+/// constant-folded: operator netlists ([`super::lower`]) carry
+/// placeholder probabilities rebound per decision, so no structural pass
+/// may assume two equal placeholders stay equal.
+pub(crate) const NO_GROUP: u32 = u32::MAX;
 
 /// A compiled query: SNE input plan, gate netlist, and CORDIV taps.
 ///
@@ -72,6 +86,14 @@ pub enum GateOp {
 #[derive(Debug, Clone, PartialEq)]
 pub struct Netlist {
     pub(crate) inputs: Vec<f64>,
+    /// Which network node each input stream's CPT row belongs to
+    /// ([`NO_GROUP`] = a rebindable operator placeholder). The optimizer
+    /// may only merge duplicate-probability streams **within** one
+    /// group: a node's MUX tree reads exactly one of its row streams per
+    /// bit (mutually exclusive selects), so sharing inside the group is
+    /// bit-exact — while sharing across nodes would correlate
+    /// conditionally-independent children.
+    pub(crate) input_group: Vec<u32>,
     pub(crate) ops: Vec<GateOp>,
     pub(crate) n_slots: usize,
     pub(crate) num: usize,
@@ -183,10 +205,12 @@ pub fn compile(net: &BayesNet, query: usize, evidence: &[(usize, bool)]) -> Resu
     // Pass 1: input slots 0..n_inputs, CPT rows in declaration order,
     // nodes in topological order — the SNE encode plan.
     let mut inputs: Vec<f64> = Vec::new();
+    let mut input_group: Vec<u32> = Vec::new();
     let mut input_base = vec![0usize; n];
     for &i in &order {
         input_base[i] = inputs.len();
         inputs.extend(net.nodes()[i].cpt.iter().map(|&(_, p)| p));
+        input_group.resize(inputs.len(), i as u32);
     }
     let mut n_slots = inputs.len();
 
@@ -258,7 +282,7 @@ pub fn compile(net: &BayesNet, query: usize, evidence: &[(usize, bool)]) -> Resu
     n_slots += 1;
     ops.push(GateOp::And { dst: num, a: node_slot[query], b: den });
 
-    Ok(Netlist { inputs, ops, n_slots, num, den, node_slot })
+    Ok(Netlist { inputs, input_group, ops, n_slots, num, den, node_slot })
 }
 
 #[cfg(test)]

@@ -212,6 +212,9 @@ fn run_gates(scratch: &mut [u64], ops: &[GateOp], stride: usize, words: usize, t
                     scratch[dst * stride + words - 1] &= m;
                 }
             }
+            GateOp::Const0 { dst } => {
+                scratch[dst * stride..dst * stride + words].fill(0);
+            }
         }
     }
 }
@@ -477,6 +480,7 @@ impl NetlistEvaluator {
                     GateOp::And { dst, a, b } => slots[dst] = slots[a] && slots[b],
                     GateOp::Not { dst, a } => slots[dst] = !slots[a],
                     GateOp::Const1 { dst } => slots[dst] = true,
+                    GateOp::Const0 { dst } => slots[dst] = false,
                 }
             }
             let (nb, db) = (slots[netlist.num_slot()], slots[netlist.den_slot()]);

@@ -1,70 +1,130 @@
-//! Full-joint exact inference — the accuracy baseline every compiled
-//! netlist is scored against (generalising [`crate::bayes::exact_posterior`]
-//! from one edge to whole DAGs).
+//! Full-joint exact inference — the brute-force cross-check for the
+//! variable-elimination engine ([`super::ve`]) on small networks
+//! (generalising [`crate::bayes::exact_posterior`] from one edge to
+//! whole DAGs).
 //!
-//! Enumerates all `2^n` assignments (the validator caps `n` at
-//! [`super::MAX_NODES`]), multiplying CPT entries per the chain rule.
+//! Enumerates all `2^n` assignments, multiplying CPT entries per the
+//! chain rule — tractable only for `n ≤` [`FULL_JOINT_MAX_NODES`], a
+//! guard this module enforces itself now that the global validator
+//! admits scene-scale graphs. Serving-path callers use the VE engine
+//! (re-exported as [`super::exact_posterior`]); this one exists so
+//! property tests can pin VE against an implementation too simple to be
+//! wrong.
 
 use crate::{Error, Result};
 
 use super::spec::BayesNet;
 use super::validate;
 
-/// `(P(query=1 | evidence), P(evidence))` by full-joint enumeration,
-/// nodes referenced by index. `P(query=1 | evidence)` is 0 when the
-/// evidence has zero probability — the same convention as
-/// [`crate::bayes::exact_posterior`] and the CORDIV hardware (a cleared
-/// flip-flop dividing by an all-zero stream).
+/// Enumeration cap for this engine only: `2^20` assignments ≈ 1M joint
+/// terms. Larger nets are the VE engine's job ([`super::exact_posterior`]).
+pub const FULL_JOINT_MAX_NODES: usize = 20;
+
+/// A validated network prepared for repeated full-joint queries.
+///
+/// Construction runs the structural validation and builds the per-node
+/// CPT lookup tables **once**; every [`Self::posterior`] call after that
+/// is pure enumeration. (The old free-function path re-validated — and
+/// re-derived the topological order inside validation — on every query.)
+#[derive(Debug, Clone)]
+pub struct FullJoint<'a> {
+    net: &'a BayesNet,
+    /// Per-node `P(node=1 | parent assignment)` indexed by assignment.
+    tables: Vec<Vec<f64>>,
+}
+
+impl<'a> FullJoint<'a> {
+    /// Validate `net` once and prepare the CPT lookup tables.
+    pub fn new(net: &'a BayesNet) -> Result<Self> {
+        validate::validate(net)?;
+        let n = net.len();
+        if n > FULL_JOINT_MAX_NODES {
+            return Err(Error::Network(format!(
+                "{n} nodes exceeds the {FULL_JOINT_MAX_NODES}-node full-joint \
+                 enumeration cap; use the variable-elimination engine \
+                 (exact_posterior) instead"
+            )));
+        }
+        let tables = net
+            .nodes()
+            .iter()
+            .map(|node| {
+                let mut t = vec![0.0; 1 << node.parents.len()];
+                for &(a, p) in &node.cpt {
+                    t[a as usize] = p;
+                }
+                t
+            })
+            .collect();
+        Ok(Self { net, tables })
+    }
+
+    /// `(P(query=1 | evidence), P(evidence))` by enumeration, nodes by
+    /// index. `P(query=1 | evidence)` is 0 when the evidence has zero
+    /// probability — the same convention as
+    /// [`crate::bayes::exact_posterior`] and the CORDIV hardware (a
+    /// cleared flip-flop dividing by an all-zero stream).
+    pub fn posterior(&self, query: usize, evidence: &[(usize, bool)]) -> Result<(f64, f64)> {
+        let n = self.net.len();
+        if query >= n {
+            return Err(Error::Network(format!("query node index {query} out of range")));
+        }
+        for &(e, _) in evidence {
+            if e >= n {
+                return Err(Error::Network(format!("evidence node index {e} out of range")));
+            }
+        }
+        let mut p_ev = 0.0;
+        let mut p_q_ev = 0.0;
+        for assign in 0u32..(1u32 << n) {
+            let val = |i: usize| (assign >> i) & 1 == 1;
+            if evidence.iter().any(|&(e, v)| val(e) != v) {
+                continue;
+            }
+            let mut p = 1.0;
+            for (i, node) in self.net.nodes().iter().enumerate() {
+                let mut a = 0usize;
+                for &pj in &node.parents {
+                    a = (a << 1) | val(pj) as usize;
+                }
+                let pi = self.tables[i][a];
+                p *= if val(i) { pi } else { 1.0 - pi };
+            }
+            p_ev += p;
+            if val(query) {
+                p_q_ev += p;
+            }
+        }
+        let post = if p_ev == 0.0 { 0.0 } else { p_q_ev / p_ev };
+        Ok((post, p_ev))
+    }
+
+    /// [`Self::posterior`] with nodes referenced by name — a typed
+    /// [`Error::Network`] for any unknown name, never a panic.
+    pub fn posterior_by_name(
+        &self,
+        query: &str,
+        evidence: &[(&str, bool)],
+    ) -> Result<(f64, f64)> {
+        let q = self.net.resolve(query)?;
+        let ev: Vec<(usize, bool)> = evidence
+            .iter()
+            .map(|&(name, v)| self.net.resolve(name).map(|i| (i, v)))
+            .collect::<Result<_>>()?;
+        self.posterior(q, &ev)
+    }
+}
+
+/// One-shot `(P(query=1 | evidence), P(evidence))` by full-joint
+/// enumeration, nodes by index. Repeated queries on one net should hold
+/// a [`FullJoint`] instead (validation and table building run per call
+/// here).
 pub fn posterior(
     net: &BayesNet,
     query: usize,
     evidence: &[(usize, bool)],
 ) -> Result<(f64, f64)> {
-    validate::validate(net)?;
-    let n = net.len();
-    if query >= n {
-        return Err(Error::Network(format!("query node index {query} out of range")));
-    }
-    for &(e, _) in evidence {
-        if e >= n {
-            return Err(Error::Network(format!("evidence node index {e} out of range")));
-        }
-    }
-    // Per-node CPT lookup tables indexed by parent assignment.
-    let tables: Vec<Vec<f64>> = net
-        .nodes()
-        .iter()
-        .map(|node| {
-            let mut t = vec![0.0; 1 << node.parents.len()];
-            for &(a, p) in &node.cpt {
-                t[a as usize] = p;
-            }
-            t
-        })
-        .collect();
-    let mut p_ev = 0.0;
-    let mut p_q_ev = 0.0;
-    for assign in 0u32..(1u32 << n) {
-        let val = |i: usize| (assign >> i) & 1 == 1;
-        if evidence.iter().any(|&(e, v)| val(e) != v) {
-            continue;
-        }
-        let mut p = 1.0;
-        for (i, node) in net.nodes().iter().enumerate() {
-            let mut a = 0usize;
-            for &pj in &node.parents {
-                a = (a << 1) | val(pj) as usize;
-            }
-            let pi = tables[i][a];
-            p *= if val(i) { pi } else { 1.0 - pi };
-        }
-        p_ev += p;
-        if val(query) {
-            p_q_ev += p;
-        }
-    }
-    let post = if p_ev == 0.0 { 0.0 } else { p_q_ev / p_ev };
-    Ok((post, p_ev))
+    FullJoint::new(net)?.posterior(query, evidence)
 }
 
 /// [`posterior`] with nodes referenced by name.
@@ -73,12 +133,7 @@ pub fn posterior_by_name(
     query: &str,
     evidence: &[(&str, bool)],
 ) -> Result<(f64, f64)> {
-    let q = net.resolve(query)?;
-    let ev: Vec<(usize, bool)> = evidence
-        .iter()
-        .map(|&(name, v)| net.resolve(name).map(|i| (i, v)))
-        .collect::<Result<_>>()?;
-    posterior(net, q, &ev)
+    FullJoint::new(net)?.posterior_by_name(query, evidence)
 }
 
 #[cfg(test)]
@@ -153,6 +208,40 @@ mod tests {
             posterior(&net, 0, &[(9, true)]).unwrap_err(),
             Error::Network(_)
         ));
-        assert!(posterior_by_name(&net, "zz", &[]).is_err());
+        assert!(matches!(
+            posterior_by_name(&net, "zz", &[]).unwrap_err(),
+            Error::Network(_)
+        ));
+        assert!(matches!(
+            posterior_by_name(&net, "a", &[("zz", true)]).unwrap_err(),
+            Error::Network(_)
+        ));
+    }
+
+    #[test]
+    fn prepared_struct_reuses_validation_across_queries() {
+        let mut net = BayesNet::new();
+        net.add_root("a", 0.3).unwrap();
+        net.add_node("b", &["a"], &[0.2, 0.8]).unwrap();
+        let fj = FullJoint::new(&net).unwrap();
+        let (p1, _) = fj.posterior_by_name("b", &[("a", true)]).unwrap();
+        let (p2, _) = fj.posterior_by_name("b", &[("a", false)]).unwrap();
+        assert!((p1 - 0.8).abs() < 1e-12);
+        assert!((p2 - 0.2).abs() < 1e-12);
+        // One-shot free functions agree with the prepared struct.
+        assert_eq!(posterior_by_name(&net, "b", &[("a", true)]).unwrap().0, p1);
+    }
+
+    #[test]
+    fn node_count_guard_is_local_to_this_engine() {
+        // 21 root nodes pass global validation (the VE engine handles
+        // them) but exceed this engine's enumeration cap.
+        let mut net = BayesNet::new();
+        for i in 0..FULL_JOINT_MAX_NODES + 1 {
+            net.add_root(&format!("n{i}"), 0.5).unwrap();
+        }
+        net.validate().unwrap();
+        let err = FullJoint::new(&net).unwrap_err();
+        assert!(err.to_string().contains("full-joint"), "{err}");
     }
 }

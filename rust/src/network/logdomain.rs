@@ -1,0 +1,404 @@
+//! Log-domain stream encoding: additive accumulation instead of
+//! multiplicative AND chains.
+//!
+//! Linear stochastic streams represent a probability as a bit density,
+//! so a deep evidence chain multiplies densities: thirty 0.5-ish factors
+//! leave `P(evidence) ≈ 1e-9`, and at any practical stream length the
+//! CORDIV denominator simply never fires — the readout collapses to
+//! 0/0. The log-domain machine of the Bayesian-machine line of work
+//! (arXiv 2406.03492) sidesteps this: represent each factor by its
+//! **negative log-likelihood** `L(p) = −R·log2(p)` at an integer
+//! *exchange rate* `R` (bits of stream per unit of log2-likelihood),
+//! split `L` into an integer part (exact, accumulated digitally) and a
+//! fractional residual in `[0, 1)` (encoded as a Bernoulli bitstream on
+//! the SNE bank and **popcounted** — an adder, not an AND tree). The
+//! posterior is then a logistic read-out of the hypothesis gap:
+//!
+//! ```text
+//! P(q=1 | e) = 1 / (1 + 2^((L₁ − L₀)/R))
+//! ```
+//!
+//! The trade: additive accumulation never underflows (the 30-deep chain
+//! costs the same precision as a 3-deep one), but the factorization into
+//! per-node constants only exists when **every non-query node is
+//! observed** — the fully-observed regime of the Bayesian-machine
+//! hardware. Partial evidence would need log-domain *marginalization*
+//! (log-sum-exp trees), which is future work; [`LogPlan::compile`]
+//! rejects it with a typed error. [`evaluate_query`] is the domain knob:
+//! [`StreamDomain::Linear`] routes through the compiled-netlist
+//! evaluator, [`StreamDomain::Log`] through a [`LogPlan`].
+//!
+//! Validated against variable elimination ([`super::ve`]) on ≥30-deep
+//! chains where the linear path underflows to a dead denominator — see
+//! `tests/network_scale.rs`.
+
+use crate::stochastic::SneBank;
+use crate::{Error, Result};
+
+use super::compile::compile_query;
+use super::eval::{NetlistEvaluator, NetworkPosterior};
+use super::spec::BayesNet;
+
+/// Which stream encoding a network query evaluates under.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamDomain {
+    /// Probabilities as bit densities; MUX/AND/CORDIV netlist (the
+    /// paper's native encoding). Exact for any evidence pattern, but
+    /// deep conjunctions underflow the denominator.
+    Linear,
+    /// Negative-log-likelihood accumulation at `exchange_rate` stream
+    /// bits per unit of log2-likelihood. Immune to underflow; requires
+    /// fully observed evidence.
+    Log {
+        /// Stream bits per unit of `−log2(p)`. Larger is finer grained:
+        /// the residual quantization error is `O(1/R)` before stream
+        /// noise. 64 matches the reference Bayesian-machine setting.
+        exchange_rate: u32,
+    },
+}
+
+/// A query compiled to the log domain: per-hypothesis integer
+/// log-likelihood sums plus the fractional residuals awaiting stochastic
+/// encoding. Compile once, [`LogPlan::evaluate`] many.
+#[derive(Debug, Clone)]
+pub struct LogPlan {
+    exchange_rate: u32,
+    /// Exact integer part of `Σ −R·log2(p)` per hypothesis (`[q=0, q=1]`).
+    int_sum: [u64; 2],
+    /// Fractional residuals in `[0, 1)`, one per contributing factor.
+    residuals: [Vec<f64>; 2],
+    /// A zero-probability factor: the hypothesis is impossible and its
+    /// `L` is `+∞` — no stream needed.
+    impossible: [bool; 2],
+}
+
+/// Result of a log-domain evaluation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LogPosterior {
+    /// `P(query=1 | evidence)` via the logistic read-out.
+    pub posterior: f64,
+    /// `P(evidence)` reconstructed as `2^(−L₀/R) + 2^(−L₁/R)` — finite
+    /// even where the linear denominator density would read zero.
+    pub marginal: f64,
+    /// The measured hypothesis gap `(L̂₁ − L̂₀)/R` in log2-likelihood
+    /// units (`±∞` when a hypothesis is impossible).
+    pub delta_log2: f64,
+}
+
+impl LogPlan {
+    /// Compile `P(query | evidence)` at the given exchange rate.
+    ///
+    /// Every node other than `query` must appear in `evidence` exactly
+    /// once — the log factorization has no marginalization stage.
+    pub fn compile(
+        net: &BayesNet,
+        query: &str,
+        evidence: &[(&str, bool)],
+        exchange_rate: u32,
+    ) -> Result<LogPlan> {
+        if exchange_rate == 0 {
+            return Err(Error::Network("log-domain exchange rate must be > 0".into()));
+        }
+        net.validate()?;
+        let qi = net.resolve(query)?;
+        let n = net.len();
+        let mut assign: Vec<Option<bool>> = vec![None; n];
+        for &(name, v) in evidence {
+            let i = net.resolve(name)?;
+            if i == qi {
+                return Err(Error::Network(format!(
+                    "query node '{query}' cannot also be observed"
+                )));
+            }
+            if let Some(prev) = assign[i] {
+                if prev != v {
+                    return Err(Error::Network(format!(
+                        "node '{name}' observed as both true and false"
+                    )));
+                }
+            }
+            assign[i] = Some(v);
+        }
+        if let Some(missing) = (0..n).find(|&i| i != qi && assign[i].is_none()) {
+            return Err(Error::Network(format!(
+                "log-domain evaluation needs fully observed evidence; node '{}' is \
+                 unobserved (only the query may be free)",
+                net.nodes()[missing].name
+            )));
+        }
+
+        let r = f64::from(exchange_rate);
+        let mut int_sum = [0u64; 2];
+        let mut residuals = [Vec::new(), Vec::new()];
+        let mut impossible = [false, false];
+        for (h, hyp) in [false, true].into_iter().enumerate() {
+            assign[qi] = Some(hyp);
+            for (i, node) in net.nodes().iter().enumerate() {
+                let mut row = 0u32;
+                for &pj in &node.parents {
+                    // First declared parent is the MSB (the spec module's
+                    // row-index convention).
+                    row = (row << 1) | u32::from(assign[pj].expect("fully observed"));
+                }
+                let p1 = node.prob_given(row).expect("validated CPT is complete");
+                let p = if assign[i].expect("fully observed") { p1 } else { 1.0 - p1 };
+                if p == 0.0 {
+                    impossible[h] = true;
+                    break;
+                }
+                let scaled = -r * p.log2(); // ≥ 0 since p ∈ (0, 1]
+                let int = scaled.floor();
+                int_sum[h] += int as u64;
+                let frac = scaled - int;
+                if frac > 0.0 {
+                    residuals[h].push(frac);
+                }
+            }
+            if impossible[h] {
+                int_sum[h] = 0;
+                residuals[h].clear();
+            }
+        }
+        assign[qi] = None;
+        Ok(LogPlan { exchange_rate, int_sum, residuals, impossible })
+    }
+
+    /// Exchange rate this plan was compiled at.
+    pub fn exchange_rate(&self) -> u32 {
+        self.exchange_rate
+    }
+
+    /// Residual streams the evaluation will encode (hardware cost: one
+    /// SNE draw each; the integer parts are free digital adds).
+    pub fn residual_streams(&self) -> usize {
+        self.residuals[0].len() + self.residuals[1].len()
+    }
+
+    /// Evaluate on a bank: encode each fractional residual as a
+    /// Bernoulli stream, popcount, add to the integer sums, and read the
+    /// posterior off the hypothesis gap.
+    pub fn evaluate(&self, bank: &mut SneBank) -> Result<LogPosterior> {
+        if self.impossible[0] && self.impossible[1] {
+            return Ok(LogPosterior { posterior: 0.0, marginal: 0.0, delta_log2: f64::NAN });
+        }
+        let n_bits = bank.n_bits();
+        let r = f64::from(self.exchange_rate);
+        let mut l = [0.0f64; 2];
+        for h in 0..2 {
+            if self.impossible[h] {
+                l[h] = f64::INFINITY;
+                continue;
+            }
+            // Popcount-accumulate: Σ ones/n_bits estimates Σ frac — the
+            // counter in the log-domain machine's datapath.
+            let mut ones = 0usize;
+            for &frac in &self.residuals[h] {
+                ones += bank.encode(frac)?.count_ones();
+            }
+            l[h] = self.int_sum[h] as f64 + ones as f64 / n_bits as f64;
+        }
+        // All residual streams pulse in parallel on real hardware: one
+        // stream time on the virtual clock, like the netlist path.
+        bank.finish_decision();
+        let delta_log2 = (l[1] - l[0]) / r;
+        let posterior = if l[1].is_infinite() {
+            0.0
+        } else if l[0].is_infinite() {
+            1.0
+        } else {
+            1.0 / (1.0 + delta_log2.exp2())
+        };
+        let marginal = [0, 1]
+            .into_iter()
+            .filter(|&h| !self.impossible[h])
+            .map(|h| (-l[h] / r).exp2())
+            .sum();
+        Ok(LogPosterior { posterior, marginal, delta_log2 })
+    }
+}
+
+/// Evaluate a network query under the chosen [`StreamDomain`] — the
+/// evaluator-level knob. Linear compiles and runs the stochastic netlist
+/// (any evidence pattern); Log compiles a [`LogPlan`] (fully observed
+/// evidence only) and maps its read-out onto the same
+/// [`NetworkPosterior`] shape.
+pub fn evaluate_query(
+    bank: &mut SneBank,
+    net: &BayesNet,
+    query: &str,
+    evidence: &[(&str, bool)],
+    domain: StreamDomain,
+) -> Result<NetworkPosterior> {
+    match domain {
+        StreamDomain::Linear => {
+            let nl = compile_query(net, query, evidence)?;
+            NetlistEvaluator::new().evaluate(bank, &nl)
+        }
+        StreamDomain::Log { exchange_rate } => {
+            let r = LogPlan::compile(net, query, evidence, exchange_rate)?.evaluate(bank)?;
+            Ok(NetworkPosterior { posterior: r.posterior, marginal: r.marginal })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ve;
+    use super::*;
+    use crate::stochastic::{SneBank, SneConfig};
+
+    fn bank(n_bits: usize, seed: u64) -> SneBank {
+        SneBank::new(SneConfig { n_bits, ..Default::default() }, seed).unwrap()
+    }
+
+    /// `depth`-node chain `c00 → c01 → …` with [0.3, 0.8] coupling.
+    fn chain(depth: usize) -> BayesNet {
+        let mut net = BayesNet::new();
+        net.add_root("c00", 0.4).unwrap();
+        for i in 1..depth {
+            let parent = format!("c{:02}", i - 1);
+            net.add_node(&format!("c{i:02}"), &[parent.as_str()], &[0.3, 0.8]).unwrap();
+        }
+        net
+    }
+
+    fn observe_all_but_query(depth: usize, query: usize) -> Vec<(String, bool)> {
+        (0..depth)
+            .filter(|&i| i != query)
+            .map(|i| (format!("c{i:02}"), i % 2 == 0))
+            .collect()
+    }
+
+    #[test]
+    fn matches_variable_elimination_when_fully_observed() {
+        let depth = 8;
+        let net = chain(depth);
+        let ev_owned = observe_all_but_query(depth, 3);
+        let ev: Vec<(&str, bool)> = ev_owned.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+        let (exact, p_ev) = ve::posterior_by_name(&net, "c03", &ev).unwrap();
+        let plan = LogPlan::compile(&net, "c03", &ev, 64).unwrap();
+        let mut b = bank(1 << 14, 5);
+        let r = plan.evaluate(&mut b).unwrap();
+        assert!((r.posterior - exact).abs() < 0.01, "{} vs {exact}", r.posterior);
+        assert!((r.marginal - p_ev).abs() / p_ev < 0.05, "{} vs {p_ev}", r.marginal);
+    }
+
+    #[test]
+    fn partial_evidence_is_a_typed_error() {
+        let net = chain(5);
+        // c02 unobserved besides the query.
+        let err = LogPlan::compile(
+            &net,
+            "c01",
+            &[("c00", true), ("c03", false), ("c04", true)],
+            64,
+        )
+        .unwrap_err();
+        match err {
+            Error::Network(msg) => {
+                assert!(msg.contains("fully observed"), "{msg}");
+                assert!(msg.contains("c02"), "{msg}");
+            }
+            other => panic!("expected Error::Network, got {other}"),
+        }
+    }
+
+    #[test]
+    fn degenerate_and_conflicting_evidence_are_handled() {
+        let mut net = BayesNet::new();
+        net.add_root("a", 0.4).unwrap();
+        net.add_node("b", &["a"], &[0.0, 1.0]).unwrap(); // b ≡ a
+        // b=1 forces a=1: hypothesis a=0 is impossible.
+        let plan = LogPlan::compile(&net, "a", &[("b", true)], 64).unwrap();
+        let mut b = bank(4096, 7);
+        let r = plan.evaluate(&mut b).unwrap();
+        assert_eq!(r.posterior, 1.0);
+        // One stochastic residual stream backs the surviving hypothesis.
+        assert!((r.marginal - 0.4).abs() < 1e-3, "{}", r.marginal);
+        assert_eq!(r.delta_log2, f64::NEG_INFINITY);
+
+        let err = LogPlan::compile(&net, "a", &[("b", true), ("b", false)], 64).unwrap_err();
+        assert!(matches!(err, Error::Network(_)), "{err}");
+        let err = LogPlan::compile(&net, "a", &[("a", true), ("b", true)], 64).unwrap_err();
+        assert!(matches!(err, Error::Network(_)), "{err}");
+        let err = LogPlan::compile(&net, "zz", &[("b", true)], 64).unwrap_err();
+        assert!(matches!(err, Error::Network(_)), "{err}");
+        let err = LogPlan::compile(&net, "a", &[("b", true)], 0).unwrap_err();
+        assert!(matches!(err, Error::Network(_)), "{err}");
+    }
+
+    #[test]
+    fn exchange_rate_trades_precision() {
+        // Quantization error shrinks with R: at a huge stream length the
+        // residual noise is small and the R=64 read-out must beat R=2.
+        let depth = 12;
+        let net = chain(depth);
+        let ev_owned = observe_all_but_query(depth, 6);
+        let ev: Vec<(&str, bool)> = ev_owned.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+        let (exact, _) = ve::posterior_by_name(&net, "c06", &ev).unwrap();
+        let err_at = |r: u32, seed: u64| {
+            let plan = LogPlan::compile(&net, "c06", &ev, r).unwrap();
+            let mut b = bank(1 << 15, seed);
+            (plan.evaluate(&mut b).unwrap().posterior - exact).abs()
+        };
+        let coarse: f64 = (0..5).map(|s| err_at(2, 40 + s)).sum::<f64>() / 5.0;
+        let fine: f64 = (0..5).map(|s| err_at(64, 40 + s)).sum::<f64>() / 5.0;
+        assert!(
+            fine <= coarse + 1e-3,
+            "finer exchange rate should not be worse: R=64 err {fine} vs R=2 err {coarse}"
+        );
+        assert!(fine < 0.01, "R=64 read-out off by {fine}");
+    }
+
+    #[test]
+    fn domain_knob_routes_both_paths() {
+        let net = chain(4);
+        let ev_owned = observe_all_but_query(4, 0);
+        let ev: Vec<(&str, bool)> = ev_owned.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+        let (exact, _) = ve::posterior_by_name(&net, "c00", &ev).unwrap();
+        let mut b = bank(1 << 14, 3);
+        let lin = evaluate_query(&mut b, &net, "c00", &ev, StreamDomain::Linear).unwrap();
+        let log = evaluate_query(
+            &mut b,
+            &net,
+            "c00",
+            &ev,
+            StreamDomain::Log { exchange_rate: 64 },
+        )
+        .unwrap();
+        assert!((lin.posterior - exact).abs() < 0.05, "{} vs {exact}", lin.posterior);
+        assert!((log.posterior - exact).abs() < 0.01, "{} vs {exact}", log.posterior);
+        // Linear with partial evidence still works through the knob...
+        let partial = evaluate_query(
+            &mut b,
+            &net,
+            "c00",
+            &[("c03", true)],
+            StreamDomain::Linear,
+        )
+        .unwrap();
+        assert!(partial.posterior.is_finite());
+        // ...while log rejects it, typed.
+        let err = evaluate_query(
+            &mut b,
+            &net,
+            "c00",
+            &[("c03", true)],
+            StreamDomain::Log { exchange_rate: 64 },
+        )
+        .unwrap_err();
+        assert!(matches!(err, Error::Network(_)), "{err}");
+    }
+
+    #[test]
+    fn residual_bookkeeping_is_visible() {
+        let net = chain(6);
+        let ev_owned = observe_all_but_query(6, 2);
+        let ev: Vec<(&str, bool)> = ev_owned.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+        let plan = LogPlan::compile(&net, "c02", &ev, 64).unwrap();
+        assert_eq!(plan.exchange_rate(), 64);
+        // Each hypothesis accumulates one factor per node (6 each), all
+        // with nonzero fractional part for these CPT values.
+        assert_eq!(plan.residual_streams(), 12);
+    }
+}

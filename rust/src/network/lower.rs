@@ -27,7 +27,7 @@
 
 use crate::{Error, Result};
 
-use super::compile::{compile_query, GateOp, Netlist};
+use super::compile::{compile_query, GateOp, Netlist, NO_GROUP};
 use super::spec::BayesNet;
 
 /// Input-stream layout of [`inference_netlist`]:
@@ -50,8 +50,13 @@ pub fn inference_net(prior: f64, likelihood: f64, likelihood_not: f64) -> BayesN
 /// [`super::NetlistEvaluator::evaluate_with_inputs`] in
 /// [`INFERENCE_INPUTS`] order.
 pub fn inference_netlist() -> Netlist {
-    compile_query(&inference_net(0.5, 0.5, 0.5), "a", &[("b", true)])
-        .expect("the Eq.-1 chain always compiles")
+    let mut nl = compile_query(&inference_net(0.5, 0.5, 0.5), "a", &[("b", true)])
+        .expect("the Eq.-1 chain always compiles");
+    // The compiled groups describe the placeholder CPT, but these inputs
+    // are rebound per decision — mark them unshareable so an optimizer
+    // pass can never legally merge the two 0.5 placeholders.
+    nl.input_group = vec![NO_GROUP; nl.inputs().len()];
+    nl
 }
 
 /// The M-modal fusion circuit (Eq. 5 with normalization) as a netlist
@@ -99,6 +104,8 @@ pub fn fusion_netlist(m: usize) -> Result<Netlist> {
     ops.push(GateOp::And { dst: num, a: prod, b: half });
     Ok(Netlist {
         inputs: vec![0.5; m + 1],
+        // Placeholders rebound per decision: never shareable/foldable.
+        input_group: vec![NO_GROUP; m + 1],
         ops,
         n_slots,
         num,

@@ -28,16 +28,29 @@
 //!    * the numerator `query ∧ evidence` is a bitwise subset of the
 //!      evidence stream — the CORDIV precondition (Fig. S7/S9) — so the
 //!      posterior readout is one MUX plus one flip-flop.
-//! 4. **Evaluate** ([`NetlistEvaluator`]) — run the netlist over packed
+//! 4. **Optimize** ([`optimize()`]) — pass pipeline over the compiled
+//!    netlist: duplicate CPT rows share one SNE stream (within a node
+//!    only — sharing across nodes would correlate independent
+//!    children), deterministic rows fold to constants, structurally
+//!    equal gates hash-cons (symmetric CPTs collapse), and everything
+//!    unreachable from the CORDIV taps is eliminated. Per-pass
+//!    gate/stream counts surface as [`OptStats`].
+//! 5. **Evaluate** ([`NetlistEvaluator`]) — run the netlist over packed
 //!    `u64` words (the `bayes::batch` conventions: grouped encode,
 //!    shared `cordiv_word`/`tail_word_mask`, zero steady-state
 //!    allocation), bit-serially via the reference walk, or **anytime**
 //!    in word-chunks with confidence-bound early exit
 //!    ([`NetlistEvaluator::evaluate_anytime`] under a [`StopPolicy`] —
-//!    the paper's *timely* property as an engine feature).
-//! 5. **Exact** ([`exact_posterior`]) — full-joint enumeration baseline
-//!    for ≤ [`MAX_NODES`]-node networks.
-//! 6. **Lower** ([`lower`]) — the paper's fixed operators (Eq.-1
+//!    the paper's *timely* property as an engine feature). Deep
+//!    fully-observed chains can instead run in the log domain
+//!    ([`StreamDomain::Log`] via [`evaluate_query_in_domain`]), where
+//!    likelihoods accumulate additively and never underflow.
+//! 6. **Exact** ([`exact_posterior`]) — variable elimination
+//!    ([`ve`]), exact for any admissible network (up to [`MAX_NODES`]
+//!    nodes, treewidth-bounded); the original full-joint enumeration
+//!    survives as [`FullJoint`] / [`full_joint_posterior`], a
+//!    ≤ [`FULL_JOINT_MAX_NODES`]-node cross-check of the VE engine.
+//! 7. **Lower** ([`lower`]) — the paper's fixed operators (Eq.-1
 //!    inference, M-modal fusion) expressed as netlists on the same
 //!    substrate, bit-identical to the dedicated engines; this is what
 //!    lets the coordinator serve every decision kind through one path.
@@ -52,9 +65,12 @@
 mod compile;
 mod eval;
 mod exact;
+mod logdomain;
 pub mod lower;
+mod optimize;
 mod spec;
 mod validate;
+pub mod ve;
 
 pub use compile::{
     check_evidence, check_query_evidence, compile, compile_query, GateOp, Netlist,
@@ -63,6 +79,19 @@ pub use eval::{
     AnytimePosterior, NetlistEvaluator, NetworkPosterior, StopPolicy, StopReason,
     ANYTIME_CHUNK_WORDS, ANYTIME_Z, MIN_ANYTIME_BITS,
 };
-pub use exact::{posterior as exact_posterior, posterior_by_name as exact_posterior_by_name};
+pub use exact::{
+    posterior as full_joint_posterior, posterior_by_name as full_joint_posterior_by_name,
+    FullJoint, FULL_JOINT_MAX_NODES,
+};
+pub use logdomain::{
+    evaluate_query as evaluate_query_in_domain, LogPlan, LogPosterior, StreamDomain,
+};
+pub use optimize::{optimize, OptStats, PassStats};
 pub use spec::{BayesNet, NodeSpec};
-pub use validate::{topo_order, validate, MAX_NODES, MAX_PARENTS};
+pub use validate::{
+    compiled_cost, topo_order, validate, MAX_COMPILED_COST, MAX_NODES, MAX_PARENTS,
+};
+// `exact_posterior` stays the crate-wide name for "the exact engine":
+// it is now backed by variable elimination and scales past the
+// full-joint cap with identical conventions.
+pub use ve::{posterior as exact_posterior, posterior_by_name as exact_posterior_by_name};

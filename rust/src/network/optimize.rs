@@ -1,0 +1,641 @@
+//! Netlist optimizer: the pass pipeline between [`super::compile`] and
+//! [`super::eval`].
+//!
+//! A compiled scene-scale netlist is dominated by structural redundancy:
+//! symmetric CPTs (a 12-parent noisy-OR has 4096 rows but only 13
+//! distinct probabilities), deterministic rows (`p ∈ {0, 1}`), and
+//! whole sub-DAGs barren to the query/evidence. Four passes shrink it:
+//!
+//! 1. **share-streams** — duplicate-probability CPT rows *within one
+//!    node* collapse onto one SNE stream. A node's MUX tree reads
+//!    exactly one row stream per bit (the selects are mutually
+//!    exclusive), so its output law given the parent streams is
+//!    unchanged. Sharing across nodes would be unsound — it would
+//!    correlate conditionally-independent children — and is never done
+//!    (enforced via [`Netlist::input_group`][`super::Netlist`]).
+//! 2. **fold-constants** — `p = 0` / `p = 1` rows become
+//!    [`GateOp::Const0`]/[`GateOp::Const1`], then gate identities
+//!    propagate in one topological sweep (`x∧0 = 0`, `x∧1 = x`,
+//!    `mux(a,a,s) = a`, `mux(0,b,s) = s∧b`, `mux(0,1,s) = s`, …).
+//! 3. **cse** — structurally equal gates (after resolving earlier
+//!    merges; AND operands sorted) hash-cons onto one instance. This is
+//!    what collapses count-symmetric MUX trees: sibling subtrees over
+//!    shared row streams become equal level by level. Bit-exact: gates
+//!    are deterministic functions of their input streams.
+//! 4. **dead-gate-elim** — backward reachability from the CORDIV
+//!    num/den taps; unreachable gates *and unread input streams* are
+//!    dropped and slots compacted.
+//!
+//! Contract: the optimized netlist computes the same posterior
+//! *distribution* (property-pinned in `tests/network_scale.rs`), and is
+//! **structurally identical** to its input when no pass finds anything —
+//! which preserves the serving layer's bit-reproducibility pins on nets
+//! with no foldable structure. When a pass does fire, the SNE encode
+//! order changes (fewer streams), so bit-level identity with the
+//! unoptimized netlist is deliberately given up — that is the
+//! hardware win (fewer stochastizers, smaller MUX fabric; compare the
+//! stochastizer-array sharing of arXiv 2112.10547).
+
+use std::collections::HashMap;
+
+use super::compile::{GateOp, Netlist, NO_GROUP};
+
+/// One optimizer pass's outcome: the live structure size after it ran.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PassStats {
+    /// Pass name (`share-streams`, `fold-constants`, `cse`,
+    /// `dead-gate-elim`).
+    pub name: &'static str,
+    /// Whether the pass changed anything this application.
+    pub changed: bool,
+    /// Input streams still referenced (reachable from num/den) after it.
+    pub live_streams: usize,
+    /// Gates still referenced after it.
+    pub live_gates: usize,
+}
+
+/// Aggregate optimizer statistics, surfaced through
+/// [`crate::coordinator::PreparedPlan::opt_stats`].
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct OptStats {
+    /// Input streams before optimization.
+    pub streams_before: usize,
+    /// Gates before optimization.
+    pub gates_before: usize,
+    /// Input streams in the optimized netlist.
+    pub streams_after: usize,
+    /// Gates in the optimized netlist.
+    pub gates_after: usize,
+    /// Per-pass breakdown, in application order (fold/cse may repeat
+    /// when a round finds new work).
+    pub passes: Vec<PassStats>,
+}
+
+impl OptStats {
+    /// Fraction of gates removed (`0.0` when nothing fired).
+    pub fn gate_reduction(&self) -> f64 {
+        if self.gates_before == 0 {
+            0.0
+        } else {
+            1.0 - self.gates_after as f64 / self.gates_before as f64
+        }
+    }
+
+    /// Fraction of input streams removed.
+    pub fn stream_reduction(&self) -> f64 {
+        if self.streams_before == 0 {
+            0.0
+        } else {
+            1.0 - self.streams_after as f64 / self.streams_before as f64
+        }
+    }
+
+    /// True when any pass changed the netlist (false ⇒ the optimized
+    /// netlist is structurally identical to the input).
+    pub fn changed(&self) -> bool {
+        self.passes.iter().any(|p| p.changed)
+    }
+}
+
+/// Slot-graph node: an input stream or a gate, operands pre-resolution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Node {
+    Input { p: f64, group: u32 },
+    Mux { lo: usize, hi: usize, sel: usize },
+    And { a: usize, b: usize },
+    Not { a: usize },
+    C0,
+    C1,
+}
+
+struct Pipeline {
+    nodes: Vec<Node>,
+    subst: Vec<usize>,
+    num: usize,
+    den: usize,
+}
+
+impl Pipeline {
+    fn rep(&mut self, s: usize) -> usize {
+        let mut r = s;
+        while self.subst[r] != r {
+            r = self.subst[r];
+        }
+        // Path-compress the chain just walked.
+        let mut c = s;
+        while self.subst[c] != r {
+            let next = self.subst[c];
+            self.subst[c] = r;
+            c = next;
+        }
+        r
+    }
+
+    /// Backward reachability from the (resolved) num/den taps:
+    /// `(live flags, live input streams, live gates)`.
+    fn liveness(&mut self) -> (Vec<bool>, usize, usize) {
+        let n = self.nodes.len();
+        let mut live = vec![false; n];
+        let (num, den) = (self.rep(self.num), self.rep(self.den));
+        live[num] = true;
+        live[den] = true;
+        for s in (0..n).rev() {
+            if !live[s] || self.rep(s) != s {
+                continue;
+            }
+            // Copy the node out: the arms call `self.rep`, which needs
+            // `&mut self`, so matching on the vec place directly would
+            // hold its borrow across the arms.
+            let node = self.nodes[s];
+            match node {
+                Node::Mux { lo, hi, sel } => {
+                    for o in [lo, hi, sel] {
+                        let r = self.rep(o);
+                        live[r] = true;
+                    }
+                }
+                Node::And { a, b } => {
+                    for o in [a, b] {
+                        let r = self.rep(o);
+                        live[r] = true;
+                    }
+                }
+                Node::Not { a } => {
+                    let r = self.rep(a);
+                    live[r] = true;
+                }
+                _ => {}
+            }
+        }
+        let mut streams = 0;
+        let mut gates = 0;
+        for s in 0..n {
+            if live[s] && self.rep(s) == s {
+                match self.nodes[s] {
+                    Node::Input { .. } => streams += 1,
+                    _ => gates += 1,
+                }
+            }
+        }
+        (live, streams, gates)
+    }
+
+    /// Pass 1: merge duplicate-probability input streams within one
+    /// CPT group ([`NO_GROUP`] inputs are never touched).
+    fn share_streams(&mut self) -> bool {
+        let mut seen: HashMap<(u32, u64), usize> = HashMap::new();
+        let mut changed = false;
+        for s in 0..self.nodes.len() {
+            if let Node::Input { p, group } = self.nodes[s] {
+                if group == NO_GROUP {
+                    continue;
+                }
+                match seen.entry((group, p.to_bits())) {
+                    std::collections::hash_map::Entry::Occupied(e) => {
+                        self.subst[s] = *e.get();
+                        changed = true;
+                    }
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        e.insert(s);
+                    }
+                }
+            }
+        }
+        changed
+    }
+
+    /// Pass 2: one topological sweep of constant folding and gate
+    /// identities (operands always precede their gate, so a single
+    /// in-order sweep fully propagates).
+    fn fold_constants(&mut self) -> bool {
+        let mut changed = false;
+        for s in 0..self.nodes.len() {
+            if self.rep(s) != s {
+                continue;
+            }
+            let node = self.nodes[s]; // copy out; arms call `self.rep`
+            match node {
+                Node::Input { p, group } => {
+                    if group != NO_GROUP {
+                        if p == 0.0 {
+                            self.nodes[s] = Node::C0;
+                            changed = true;
+                        } else if p == 1.0 {
+                            self.nodes[s] = Node::C1;
+                            changed = true;
+                        }
+                    }
+                }
+                Node::Not { a } => {
+                    let a = self.rep(a);
+                    match self.nodes[a] {
+                        Node::C0 => {
+                            self.nodes[s] = Node::C1;
+                            changed = true;
+                        }
+                        Node::C1 => {
+                            self.nodes[s] = Node::C0;
+                            changed = true;
+                        }
+                        _ => self.nodes[s] = Node::Not { a },
+                    }
+                }
+                Node::And { a, b } => {
+                    let (a, b) = (self.rep(a), self.rep(b));
+                    let (ka, kb) = (self.nodes[a], self.nodes[b]);
+                    if a == b {
+                        self.subst[s] = a;
+                        changed = true;
+                    } else if ka == Node::C0 || kb == Node::C0 {
+                        self.nodes[s] = Node::C0;
+                        changed = true;
+                    } else if ka == Node::C1 {
+                        self.subst[s] = b;
+                        changed = true;
+                    } else if kb == Node::C1 {
+                        self.subst[s] = a;
+                        changed = true;
+                    } else {
+                        self.nodes[s] = Node::And { a, b };
+                    }
+                }
+                Node::Mux { lo, hi, sel } => {
+                    let (lo, hi, sel) = (self.rep(lo), self.rep(hi), self.rep(sel));
+                    let (kl, kh, ks) = (self.nodes[lo], self.nodes[hi], self.nodes[sel]);
+                    if lo == hi {
+                        self.subst[s] = lo;
+                        changed = true;
+                    } else if ks == Node::C1 {
+                        self.subst[s] = hi;
+                        changed = true;
+                    } else if ks == Node::C0 {
+                        self.subst[s] = lo;
+                        changed = true;
+                    } else if kl == Node::C0 && kh == Node::C1 {
+                        self.subst[s] = sel;
+                        changed = true;
+                    } else if kl == Node::C1 && kh == Node::C0 {
+                        self.nodes[s] = Node::Not { a: sel };
+                        changed = true;
+                    } else if kl == Node::C0 {
+                        // mux(0, hi, s) = s ∧ hi, bit-exact incl. tails.
+                        self.nodes[s] = Node::And { a: sel, b: hi };
+                        changed = true;
+                    } else {
+                        self.nodes[s] = Node::Mux { lo, hi, sel };
+                    }
+                }
+                Node::C0 | Node::C1 => {}
+            }
+        }
+        changed
+    }
+
+    /// Pass 3: hash-cons structurally equal gates (AND operands sorted;
+    /// constants unify too).
+    fn cse(&mut self) -> bool {
+        #[derive(Hash, PartialEq, Eq)]
+        enum Key {
+            Mux(usize, usize, usize),
+            And(usize, usize),
+            Not(usize),
+            C0,
+            C1,
+        }
+        let mut table: HashMap<Key, usize> = HashMap::new();
+        let mut changed = false;
+        for s in 0..self.nodes.len() {
+            if self.rep(s) != s {
+                continue;
+            }
+            let node = self.nodes[s]; // copy out; arms call `self.rep`
+            let key = match node {
+                Node::Input { .. } => continue,
+                Node::Mux { lo, hi, sel } => {
+                    Key::Mux(self.rep(lo), self.rep(hi), self.rep(sel))
+                }
+                Node::And { a, b } => {
+                    let (a, b) = (self.rep(a), self.rep(b));
+                    Key::And(a.min(b), a.max(b))
+                }
+                Node::Not { a } => Key::Not(self.rep(a)),
+                Node::C0 => Key::C0,
+                Node::C1 => Key::C1,
+            };
+            match table.entry(key) {
+                std::collections::hash_map::Entry::Occupied(e) => {
+                    self.subst[s] = *e.get();
+                    changed = true;
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(s);
+                }
+            }
+        }
+        changed
+    }
+}
+
+/// Run the pass pipeline over a compiled netlist. Returns the optimized
+/// netlist and per-pass statistics; when no pass finds anything the
+/// result is structurally identical to the input (pinned by tests — the
+/// serving layer relies on it for bit-reproducibility of already-minimal
+/// plans).
+///
+/// Only valid for netlists whose input streams are **baked in** (network
+/// plans). Operator netlists from [`super::lower`] rebind their inputs
+/// per decision and must not be optimized; their inputs carry
+/// [`NO_GROUP`], which disables the stream passes, but dead-gate
+/// elimination could still renumber their slots — the serving layer
+/// simply never routes them here.
+pub fn optimize(netlist: &Netlist) -> (Netlist, OptStats) {
+    let n_in = netlist.inputs.len();
+    let mut nodes: Vec<Node> = Vec::with_capacity(netlist.n_slots);
+    for (j, &p) in netlist.inputs.iter().enumerate() {
+        nodes.push(Node::Input { p, group: netlist.input_group[j] });
+    }
+    for op in &netlist.ops {
+        let (dst, node) = match *op {
+            GateOp::Mux { dst, lo, hi, sel } => (dst, Node::Mux { lo, hi, sel }),
+            GateOp::And { dst, a, b } => (dst, Node::And { a, b }),
+            GateOp::Not { dst, a } => (dst, Node::Not { a }),
+            GateOp::Const1 { dst } => (dst, Node::C1),
+            GateOp::Const0 { dst } => (dst, Node::C0),
+        };
+        // The compilers emit dst slots in order after the inputs; the
+        // passes rely on operands preceding their gate.
+        debug_assert_eq!(dst, nodes.len());
+        nodes.push(node);
+    }
+    let mut p = Pipeline {
+        subst: (0..nodes.len()).collect(),
+        nodes,
+        num: netlist.num,
+        den: netlist.den,
+    };
+    let mut stats = OptStats {
+        streams_before: n_in,
+        gates_before: netlist.ops.len(),
+        ..OptStats::default()
+    };
+    fn record(p: &mut Pipeline, stats: &mut OptStats, name: &'static str, changed: bool) {
+        let (_, streams, gates) = p.liveness();
+        stats.passes.push(PassStats { name, changed, live_streams: streams, live_gates: gates });
+    }
+
+    let ch = p.share_streams();
+    record(&mut p, &mut stats, "share-streams", ch);
+    for round in 0..4 {
+        let fch = p.fold_constants();
+        if round == 0 || fch {
+            record(&mut p, &mut stats, "fold-constants", fch);
+        }
+        let cch = p.cse();
+        if round == 0 || cch {
+            record(&mut p, &mut stats, "cse", cch);
+        }
+        if !fch && !cch {
+            break;
+        }
+    }
+
+    // Pass 4: dead-gate elimination + slot compaction (the rebuild).
+    let (live, _, _) = p.liveness();
+    let n_slots = p.nodes.len();
+    let mut new_index = vec![usize::MAX; n_slots];
+    let mut inputs = Vec::new();
+    let mut input_group = Vec::new();
+    for s in 0..n_in {
+        if live[s] && p.rep(s) == s {
+            if let Node::Input { p: prob, group } = p.nodes[s] {
+                new_index[s] = inputs.len();
+                inputs.push(prob);
+                input_group.push(group);
+            }
+        }
+    }
+    let mut ops = Vec::new();
+    let mut next = inputs.len();
+    for s in 0..n_slots {
+        if !live[s] || p.rep(s) != s || matches!(p.nodes[s], Node::Input { .. }) {
+            continue;
+        }
+        new_index[s] = next;
+        let dst = next;
+        next += 1;
+        let node = p.nodes[s]; // copy out; `idx` below re-borrows `p`
+        let idx = |p: &mut Pipeline, o: usize| {
+            let r = p.rep(o);
+            debug_assert_ne!(new_index[r], usize::MAX);
+            new_index[r]
+        };
+        let op = match node {
+            Node::Mux { lo, hi, sel } => GateOp::Mux {
+                dst,
+                lo: idx(&mut p, lo),
+                hi: idx(&mut p, hi),
+                sel: idx(&mut p, sel),
+            },
+            Node::And { a, b } => GateOp::And { dst, a: idx(&mut p, a), b: idx(&mut p, b) },
+            Node::Not { a } => GateOp::Not { dst, a: idx(&mut p, a) },
+            Node::C0 => GateOp::Const0 { dst },
+            Node::C1 => GateOp::Const1 { dst },
+            Node::Input { .. } => unreachable!("inputs handled above"),
+        };
+        ops.push(op);
+    }
+    let num = new_index[p.rep(netlist.num)];
+    let den = new_index[p.rep(netlist.den)];
+    let node_slot = netlist
+        .node_slot
+        .iter()
+        .map(|&s| {
+            let r = p.rep(s);
+            if live[r] {
+                new_index[r]
+            } else {
+                usize::MAX // the node's sample stream was eliminated
+            }
+        })
+        .collect();
+    stats.streams_after = inputs.len();
+    stats.gates_after = ops.len();
+    let dce_changed = inputs.len() != n_in || ops.len() != netlist.ops.len();
+    stats.passes.push(PassStats {
+        name: "dead-gate-elim",
+        changed: dce_changed,
+        live_streams: inputs.len(),
+        live_gates: ops.len(),
+    });
+    let optimized = Netlist { inputs, input_group, ops, n_slots: next, num, den, node_slot };
+    debug_assert!(
+        stats.changed() || optimized == *netlist,
+        "no pass fired but the rebuild diverged"
+    );
+    (optimized, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::compile::compile_query;
+    use super::super::spec::BayesNet;
+    use super::super::NetlistEvaluator;
+    use super::*;
+    use crate::stochastic::{SneBank, SneConfig};
+
+    fn bank(n_bits: usize, seed: u64) -> SneBank {
+        SneBank::new(SneConfig { n_bits, ..Default::default() }, seed).unwrap()
+    }
+
+    fn diamond() -> BayesNet {
+        let mut net = BayesNet::new();
+        net.add_root("a", 0.4).unwrap();
+        net.add_node("b", &["a"], &[0.2, 0.9]).unwrap();
+        net.add_node("c", &["a"], &[0.7, 0.1]).unwrap();
+        net.add_node("d", &["b", "c"], &[0.1, 0.5, 0.6, 0.95]).unwrap();
+        net
+    }
+
+    #[test]
+    fn identity_on_nets_with_nothing_to_fold() {
+        // These two netlists back bit-reproducibility pins elsewhere
+        // (tests/plan_api.rs, tests/network_integration.rs): the
+        // optimizer must reproduce them exactly, stats and all.
+        let nl = compile_query(&diamond(), "a", &[("d", true)]).unwrap();
+        let (opt, stats) = optimize(&nl);
+        assert!(!stats.changed());
+        assert_eq!(opt, nl);
+        assert_eq!(stats.gate_reduction(), 0.0);
+
+        let toml = std::fs::read_to_string(
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+                .join("../specs/intersection.toml"),
+        )
+        .unwrap();
+        let net = BayesNet::from_toml_str(&toml).unwrap();
+        let nl = compile_query(&net, "fog", &[("alarm", true)]).unwrap();
+        let (opt, stats) = optimize(&nl);
+        assert!(!stats.changed(), "{:?}", stats.passes);
+        assert_eq!(opt, nl);
+    }
+
+    #[test]
+    fn duplicate_rows_share_one_stream() {
+        let mut net = BayesNet::new();
+        net.add_root("a", 0.4).unwrap();
+        net.add_root("b", 0.3).unwrap();
+        // Rows 00/01/10 all carry 0.2: four streams collapse to two.
+        net.add_node("c", &["a", "b"], &[0.2, 0.2, 0.2, 0.9]).unwrap();
+        let nl = compile_query(&net, "c", &[]).unwrap();
+        let (opt, stats) = optimize(&nl);
+        assert!(stats.changed());
+        assert_eq!(opt.inputs().len(), 4, "a, b, and two distinct rows of c");
+        // mux(0.2-stream, 0.2-stream, b) folded away on the lo side:
+        // the tree needs fewer gates too.
+        assert!(opt.ops().len() < nl.ops().len());
+        assert_eq!(stats.streams_before, 6);
+        assert_eq!(stats.streams_after, 4);
+    }
+
+    #[test]
+    fn deterministic_rows_fold_to_constants() {
+        let mut net = BayesNet::new();
+        net.add_root("a", 0.4).unwrap();
+        // Not present -> never fires: row 0 is exactly 0.
+        net.add_node("m", &["a"], &[0.0, 0.7]).unwrap();
+        let nl = compile_query(&net, "m", &[]).unwrap();
+        let (opt, stats) = optimize(&nl);
+        assert!(stats.changed());
+        // mux(C0, row1, a) -> and(a, row1): the zero stream is gone.
+        assert_eq!(opt.inputs().len(), 2);
+        assert!(opt.ops().iter().any(|op| matches!(op, GateOp::And { .. })));
+        assert!(!opt.ops().iter().any(|op| matches!(op, GateOp::Mux { .. })));
+    }
+
+    #[test]
+    fn barren_subtrees_are_eliminated() {
+        let mut net = BayesNet::new();
+        net.add_root("a", 0.4).unwrap();
+        net.add_node("b", &["a"], &[0.2, 0.9]).unwrap();
+        // c hangs off a but is neither queried nor observed.
+        net.add_node("c", &["a"], &[0.3, 0.8]).unwrap();
+        let nl = compile_query(&net, "a", &[("b", true)]).unwrap();
+        let (opt, stats) = optimize(&nl);
+        assert!(stats.changed());
+        assert_eq!(opt.inputs().len(), 3, "c's two rows dropped");
+        let dce = stats.passes.last().unwrap();
+        assert_eq!(dce.name, "dead-gate-elim");
+        assert!(dce.changed);
+        // The query/evidence readout is untouched: same posterior law.
+        let mut b1 = bank(65_536, 11);
+        let r1 = NetlistEvaluator::new().evaluate(&mut b1, &nl).unwrap();
+        let mut b2 = bank(65_536, 11);
+        let r2 = NetlistEvaluator::new().evaluate(&mut b2, &opt).unwrap();
+        assert!((r1.posterior - r2.posterior).abs() < 0.02);
+        assert!((r1.marginal - r2.marginal).abs() < 0.02);
+    }
+
+    #[test]
+    fn symmetric_cpts_collapse_under_cse() {
+        // A 4-parent symmetric (count-based) CPT: 16 rows, 5 distinct
+        // values; sibling MUX subtrees become equal and hash-cons away.
+        let mut net = BayesNet::new();
+        for i in 0..4 {
+            net.add_root(&format!("r{i}"), 0.3).unwrap();
+        }
+        let cpt: Vec<f64> =
+            (0..16u32).map(|a| 0.05 + 0.2 * a.count_ones() as f64).collect();
+        net.add_node("or4", &["r0", "r1", "r2", "r3"], &cpt).unwrap();
+        let nl = compile_query(&net, "or4", &[]).unwrap();
+        let (opt, stats) = optimize(&nl);
+        assert!(stats.changed());
+        // Levels shrink from 8+4+2+1 muxes to 4+3+2+1 (distinct
+        // count-pairs per level) = at most 10 + const1 + numerator AND.
+        let muxes =
+            opt.ops().iter().filter(|op| matches!(op, GateOp::Mux { .. })).count();
+        assert!(muxes <= 10, "expected the symmetric tree to collapse, got {muxes} muxes");
+        assert_eq!(opt.inputs().len(), 4 + 5, "4 roots + 5 distinct rows");
+        // Distribution unchanged.
+        let (exact, _) = super::super::ve::posterior_by_name(&net, "or4", &[]).unwrap();
+        let mut b = bank(65_536, 9);
+        let r = NetlistEvaluator::new().evaluate(&mut b, &opt).unwrap();
+        assert!((r.posterior - exact).abs() < 0.02, "{} vs {exact}", r.posterior);
+    }
+
+    #[test]
+    fn optimized_netlist_still_matches_reference_walk() {
+        // The rebuilt netlist (with Const0 gates) must evaluate
+        // identically on the word-parallel and bit-serial paths.
+        let mut net = BayesNet::new();
+        net.add_root("a", 0.4).unwrap();
+        net.add_node("m", &["a"], &[0.0, 0.7]).unwrap();
+        net.add_node("h", &["a", "m"], &[0.1, 0.1, 0.3, 0.9]).unwrap();
+        let nl = compile_query(&net, "h", &[("m", false)]).unwrap();
+        let (opt, stats) = optimize(&nl);
+        assert!(stats.changed());
+        for n_bits in [100usize, 1024] {
+            let mut bw = bank(n_bits, 31);
+            let word = NetlistEvaluator::new().evaluate(&mut bw, &opt).unwrap();
+            let mut br = bank(n_bits, 31);
+            let bit = NetlistEvaluator::new().evaluate_reference(&mut br, &opt).unwrap();
+            assert_eq!(word, bit, "word/bit diverged at {n_bits} bits");
+        }
+    }
+
+    #[test]
+    fn stats_reductions_are_consistent() {
+        let mut net = BayesNet::new();
+        net.add_root("a", 0.4).unwrap();
+        net.add_node("b", &["a"], &[0.0, 1.0]).unwrap();
+        net.add_node("c", &["b"], &[0.25, 0.75]).unwrap();
+        let nl = compile_query(&net, "c", &[]).unwrap();
+        let (opt, stats) = optimize(&nl);
+        assert_eq!(stats.streams_before, nl.inputs().len());
+        assert_eq!(stats.gates_before, nl.ops().len());
+        assert_eq!(stats.streams_after, opt.inputs().len());
+        assert_eq!(stats.gates_after, opt.ops().len());
+        assert!(stats.gate_reduction() > 0.0);
+        assert!(stats.stream_reduction() > 0.0);
+        assert!(stats.passes.iter().any(|p| p.name == "fold-constants" && p.changed));
+    }
+}

@@ -31,7 +31,10 @@
 //! ```
 //!
 //! CPT arrays are indexed by the parent assignment with the **first**
-//! listed parent as the most-significant bit.
+//! listed parent as the most-significant bit. Scene-scale CPTs (e.g. the
+//! 4096-row, 12-parent alarm of `specs/scene100.toml`) may split the
+//! array across lines — `tomlmini` accumulates from the opening `[` to
+//! the closing `]`, tolerating a trailing comma in that form.
 
 use std::path::Path;
 

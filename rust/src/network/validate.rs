@@ -6,13 +6,38 @@ use crate::{Error, Result};
 
 use super::spec::{BayesNet, NodeSpec};
 
-/// Node-count cap: the full-joint exact baseline ([`super::exact_posterior`])
-/// enumerates `2^n` assignments, so networks are kept enumerable.
-pub const MAX_NODES: usize = 20;
+/// Node-count cap. Scene-scale graphs are admitted because the exact
+/// baseline is variable elimination ([`super::exact_posterior`]), not
+/// the `2^n` full-joint sweep (that engine keeps its own
+/// [`super::FULL_JOINT_MAX_NODES`] guard); what actually bounds a spec
+/// is the compiled-gate budget below.
+pub const MAX_NODES: usize = 256;
 
 /// Per-node parent cap: a node with `k` parents compiles to `2^k`
-/// encoded CPT streams plus a `2^k − 1`-gate MUX tree.
-pub const MAX_PARENTS: usize = 8;
+/// encoded CPT streams plus a `2^k − 1`-gate MUX tree, so each extra
+/// parent doubles that node's hardware. 12 parents (4096 CPT rows) is
+/// the largest fan-in `specs/scene100.toml`'s noisy-OR alarm needs and
+/// still fits comfortably inside the gate budget.
+pub const MAX_PARENTS: usize = 12;
+
+/// Compiled-size budget: the sum over nodes of `2^k` CPT streams plus
+/// `2^k − 1` MUX-tree gates must stay under this, which is what really
+/// bounds admissible specs now that the blanket 20-node cap is gone.
+/// Rejection happens at validation (= plan admission) time, before any
+/// encode buffer is sized.
+pub const MAX_COMPILED_COST: usize = 1 << 17;
+
+/// Streams + MUX-tree gates the compiler will emit for `net` (evidence
+/// chain and CORDIV taps excluded — they add O(observed) more).
+pub fn compiled_cost(net: &BayesNet) -> usize {
+    net.nodes()
+        .iter()
+        .map(|node| {
+            let k = node.parents.len().min(MAX_PARENTS);
+            (1usize << (k + 1)) - 1
+        })
+        .sum()
+}
 
 /// CPT shape check for one node: parent cap, exactly one row per parent
 /// assignment, probabilities inside `[0, 1]`.
@@ -65,7 +90,7 @@ pub fn validate(net: &BayesNet) -> Result<()> {
     }
     if n > MAX_NODES {
         return Err(Error::Network(format!(
-            "{n} nodes exceeds the {MAX_NODES}-node cap (full-joint exact baseline)"
+            "{n} nodes exceeds the {MAX_NODES}-node cap"
         )));
     }
     for (i, node) in net.nodes().iter().enumerate() {
@@ -97,6 +122,14 @@ pub fn validate(net: &BayesNet) -> Result<()> {
             }
         }
         check_cpt(node)?;
+    }
+    let cost = compiled_cost(net);
+    if cost > MAX_COMPILED_COST {
+        return Err(Error::Network(format!(
+            "network compiles to ~{cost} streams+gates, exceeding the \
+             {MAX_COMPILED_COST} compiled-gate budget; reduce per-node fan-in \
+             (each parent doubles a node's MUX tree)"
+        )));
     }
     topo_order(net).map(|_| ())
 }
@@ -271,5 +304,48 @@ mod tests {
         let many: Vec<NodeSpec> =
             (0..MAX_NODES + 1).map(|i| node(&format!("n{i}"), vec![], vec![(0, 0.5)])).collect();
         assert!(validate(&BayesNet::from_parts("", many)).is_err());
+    }
+
+    /// A 12-parent row-for-every-assignment node — the widest fan-in the
+    /// caps admit (4096 CPT rows).
+    fn wide_node(name: &str, parents: Vec<usize>) -> NodeSpec {
+        let rows = (0..1u32 << parents.len()).map(|a| (a, 0.5)).collect();
+        node(name, parents, rows)
+    }
+
+    #[test]
+    fn caps_admit_scene_scale_networks() {
+        // 21 root nodes exceeded the old 20-node cap; the VE-backed
+        // stack admits them (the full-joint engine keeps its own guard).
+        let many: Vec<NodeSpec> =
+            (0..21).map(|i| node(&format!("n{i}"), vec![], vec![(0, 0.5)])).collect();
+        validate(&BayesNet::from_parts("", many)).unwrap();
+        // A 12-parent node (4096 rows) is admissible…
+        let mut nodes: Vec<NodeSpec> =
+            (0..12).map(|i| node(&format!("r{i}"), vec![], vec![(0, 0.5)])).collect();
+        nodes.push(wide_node("fanin", (0..12).collect()));
+        validate(&BayesNet::from_parts("", nodes)).unwrap();
+        // …but a 13th parent is not.
+        let mut nodes: Vec<NodeSpec> =
+            (0..13).map(|i| node(&format!("r{i}"), vec![], vec![(0, 0.5)])).collect();
+        nodes.push(wide_node("fanin", (0..13).collect()));
+        let err = validate(&BayesNet::from_parts("", nodes)).unwrap_err();
+        assert!(err.to_string().contains("parent cap"), "{err}");
+    }
+
+    #[test]
+    fn compiled_gate_budget_bounds_admission() {
+        // 17 twelve-parent nodes cost 17 × (2^13 − 1) ≈ 139k streams+gates,
+        // over the 2^17 budget even though node and parent counts pass.
+        let mut nodes: Vec<NodeSpec> =
+            (0..12).map(|i| node(&format!("r{i}"), vec![], vec![(0, 0.5)])).collect();
+        for j in 0..17 {
+            nodes.push(wide_node(&format!("w{j}"), (0..12).collect()));
+        }
+        let net = BayesNet::from_parts("", nodes);
+        assert!(compiled_cost(&net) > MAX_COMPILED_COST);
+        let err = validate(&net).unwrap_err();
+        assert!(matches!(err, Error::Network(_)));
+        assert!(err.to_string().contains("compiled-gate budget"), "{err}");
     }
 }

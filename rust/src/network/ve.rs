@@ -1,0 +1,435 @@
+//! Variable-elimination exact inference — the scene-scale baseline.
+//!
+//! The full-joint engine ([`super::exact`]) enumerates `2^n` joint
+//! assignments, which is what capped networks at 20 nodes. This engine
+//! computes the same posteriors by factor elimination: one conditioned
+//! factor per node, non-query variables summed out one at a time in a
+//! deterministic greedy **min-degree / min-fill** order (ties broken by
+//! variable index, so the result — and its floating-point rounding — is
+//! a pure function of the spec). Exact for hundreds of nodes whenever
+//! the elimination width stays tractable; a blown width is a typed
+//! [`Error::Network`], not an OOM.
+//!
+//! This is the software twin of how memristor Bayesian machines scale
+//! past toy graphs (arXiv 2112.10547): the stochastic circuit samples
+//! the *whole* DAG, but the exact reference it is scored against must
+//! exploit conditional independence to stay computable. Re-exported as
+//! [`super::exact_posterior`] / [`super::exact_posterior_by_name`], so
+//! every caller that scored against the full joint now scores against
+//! VE unchanged; `ve_posterior == full_joint_posterior` to ≤1e-12 on
+//! all ≤20-node nets is property-pinned in `tests/network_scale.rs`.
+
+use crate::{Error, Result};
+
+use super::spec::BayesNet;
+use super::validate;
+
+/// Width cap: no intermediate factor may span more than this many
+/// variables (`2^20`-entry tables ≈ the full-joint engine's work cap).
+pub const MAX_FACTOR_VARS: usize = 20;
+
+/// A factor over a sorted set of binary variables. `vars[j]` is bit `j`
+/// (the LSB is `vars[0]`) of the index into `table`, whose length is
+/// `2^vars.len()`.
+#[derive(Debug, Clone)]
+struct Factor {
+    vars: Vec<usize>,
+    table: Vec<f64>,
+}
+
+impl Factor {
+    fn scalar(value: f64) -> Self {
+        Factor { vars: Vec::new(), table: vec![value] }
+    }
+}
+
+/// The CPT factor of node `i`, conditioned on the evidence: observed
+/// variables are restricted out of the scope, so the factor only spans
+/// unobserved members of `{i} ∪ parents(i)`.
+fn node_factor(net: &BayesNet, i: usize, ev: &[Option<bool>]) -> Factor {
+    let node = &net.nodes()[i];
+    let mut fvars: Vec<usize> = node.parents.clone();
+    fvars.push(i);
+    fvars.sort_unstable();
+    // CPT rows by parent assignment (declaration order is irrelevant here).
+    let mut cpt = vec![0.0; 1 << node.parents.len()];
+    for &(a, p) in &node.cpt {
+        cpt[a as usize] = p;
+    }
+    let keep: Vec<usize> = fvars.iter().copied().filter(|&v| ev[v].is_none()).collect();
+    let mut table = vec![0.0; 1 << keep.len()];
+    'assign: for a in 0..1usize << fvars.len() {
+        let val = |v: usize| {
+            let j = fvars.iter().position(|&x| x == v).expect("var in scope");
+            (a >> j) & 1 == 1
+        };
+        for (j, &v) in fvars.iter().enumerate() {
+            if let Some(obs) = ev[v] {
+                if ((a >> j) & 1 == 1) != obs {
+                    continue 'assign;
+                }
+            }
+        }
+        let mut pa = 0usize;
+        for &pj in &node.parents {
+            pa = (pa << 1) | val(pj) as usize; // first parent = MSB
+        }
+        let pi = cpt[pa];
+        let p = if val(i) { pi } else { 1.0 - pi };
+        let mut ka = 0usize;
+        for (j, &v) in keep.iter().enumerate() {
+            ka |= (val(v) as usize) << j;
+        }
+        table[ka] = p;
+    }
+    Factor { vars: keep, table }
+}
+
+/// Pointwise product of two factors over the union of their scopes.
+fn product(a: &Factor, b: &Factor) -> Result<Factor> {
+    let mut vars: Vec<usize> = a.vars.iter().chain(b.vars.iter()).copied().collect();
+    vars.sort_unstable();
+    vars.dedup();
+    if vars.len() > MAX_FACTOR_VARS {
+        return Err(Error::Network(format!(
+            "variable elimination width exceeded: intermediate factor spans \
+             {} variables (cap {MAX_FACTOR_VARS}); the network's moralised \
+             treewidth is too large for exact inference",
+            vars.len()
+        )));
+    }
+    // Bit position of each union variable inside a and b (usize::MAX = absent).
+    let pos = |f: &Factor| -> Vec<usize> {
+        vars.iter()
+            .map(|v| f.vars.iter().position(|x| x == v).unwrap_or(usize::MAX))
+            .collect()
+    };
+    let (pa, pb) = (pos(a), pos(b));
+    let mut table = vec![0.0; 1 << vars.len()];
+    for (idx, out) in table.iter_mut().enumerate() {
+        let mut ia = 0usize;
+        let mut ib = 0usize;
+        for j in 0..vars.len() {
+            let bit = (idx >> j) & 1;
+            if pa[j] != usize::MAX {
+                ia |= bit << pa[j];
+            }
+            if pb[j] != usize::MAX {
+                ib |= bit << pb[j];
+            }
+        }
+        *out = a.table[ia] * b.table[ib];
+    }
+    Ok(Factor { vars, table })
+}
+
+/// Marginalize `v` out of `f` (sums the two half-tables).
+fn sum_out(f: &Factor, v: usize) -> Factor {
+    let j = f.vars.iter().position(|&x| x == v).expect("var in scope");
+    let keep: Vec<usize> =
+        f.vars.iter().copied().filter(|&x| x != v).collect();
+    let low_mask = (1usize << j) - 1;
+    let mut table = vec![0.0; 1 << keep.len()];
+    for (idx, &p) in f.table.iter().enumerate() {
+        let ka = (idx & low_mask) | ((idx >> (j + 1)) << j);
+        table[ka] += p;
+    }
+    Factor { vars: keep, table }
+}
+
+/// Word-packed adjacency bitset over `n` variables.
+struct Graph {
+    n: usize,
+    words: usize,
+    adj: Vec<u64>,
+}
+
+impl Graph {
+    fn new(n: usize) -> Self {
+        let words = n.div_ceil(64);
+        Graph { n, words, adj: vec![0; n * words] }
+    }
+    fn connect(&mut self, a: usize, b: usize) {
+        if a != b {
+            self.adj[a * self.words + b / 64] |= 1 << (b % 64);
+            self.adj[b * self.words + a / 64] |= 1 << (a % 64);
+        }
+    }
+    fn linked(&self, a: usize, b: usize) -> bool {
+        self.adj[a * self.words + b / 64] >> (b % 64) & 1 == 1
+    }
+    fn degree(&self, v: usize) -> usize {
+        self.adj[v * self.words..(v + 1) * self.words]
+            .iter()
+            .map(|w| w.count_ones() as usize)
+            .sum()
+    }
+    fn neighbors(&self, v: usize) -> Vec<usize> {
+        (0..self.n).filter(|&u| self.linked(v, u)).collect()
+    }
+    fn remove(&mut self, v: usize) {
+        for u in self.neighbors(v) {
+            self.adj[u * self.words + v / 64] &= !(1 << (v % 64));
+        }
+        self.adj[v * self.words..(v + 1) * self.words].fill(0);
+    }
+}
+
+/// Deterministic greedy elimination order over every unobserved variable
+/// except the query: repeatedly pick the variable minimising
+/// `(degree, fill-in edges, index)` on the interaction graph of the
+/// conditioned factor scopes, then connect its neighborhood (the factor
+/// the elimination would create) and remove it.
+fn elimination_order(scopes: &[&[usize]], n: usize, query: Option<usize>) -> Vec<usize> {
+    let mut g = Graph::new(n);
+    let mut present = vec![false; n];
+    for scope in scopes {
+        for (x, &a) in scope.iter().enumerate() {
+            present[a] = true;
+            for &b in &scope[x + 1..] {
+                g.connect(a, b);
+            }
+        }
+    }
+    let mut alive: Vec<usize> =
+        (0..n).filter(|&v| present[v] && Some(v) != query).collect();
+    let mut order = Vec::with_capacity(alive.len());
+    while !alive.is_empty() {
+        let mut best = (usize::MAX, usize::MAX, usize::MAX);
+        for &v in &alive {
+            let deg = g.degree(v);
+            if deg > best.0 {
+                continue; // fill can't rescue a worse degree under lexicographic order
+            }
+            let nbrs = g.neighbors(v);
+            let mut fill = 0usize;
+            for (x, &a) in nbrs.iter().enumerate() {
+                for &b in &nbrs[x + 1..] {
+                    if !g.linked(a, b) {
+                        fill += 1;
+                    }
+                }
+            }
+            if (deg, fill, v) < best {
+                best = (deg, fill, v);
+            }
+        }
+        let v = best.2;
+        let nbrs = g.neighbors(v);
+        for (x, &a) in nbrs.iter().enumerate() {
+            for &b in &nbrs[x + 1..] {
+                g.connect(a, b);
+            }
+        }
+        g.remove(v);
+        alive.retain(|&u| u != v);
+        order.push(v);
+    }
+    order
+}
+
+/// `(P(query=1 | evidence), P(evidence))` by variable elimination,
+/// nodes referenced by index. Conventions match the full-joint engine
+/// exactly: zero-probability evidence yields a 0 posterior (the cleared
+/// CORDIV flip-flop), observing the query yields the degenerate 1/0,
+/// and contradictory duplicate observations are `(0, 0)`.
+pub fn posterior(
+    net: &BayesNet,
+    query: usize,
+    evidence: &[(usize, bool)],
+) -> Result<(f64, f64)> {
+    validate::validate(net)?;
+    let n = net.len();
+    if query >= n {
+        return Err(Error::Network(format!("query node index {query} out of range")));
+    }
+    let mut ev: Vec<Option<bool>> = vec![None; n];
+    for &(e, v) in evidence {
+        if e >= n {
+            return Err(Error::Network(format!("evidence node index {e} out of range")));
+        }
+        match ev[e] {
+            Some(prev) if prev != v => return Ok((0.0, 0.0)), // contradictory
+            _ => ev[e] = Some(v),
+        }
+    }
+    let mut factors: Vec<Factor> = (0..n).map(|i| node_factor(net, i, &ev)).collect();
+    let scopes: Vec<&[usize]> = factors.iter().map(|f| f.vars.as_slice()).collect();
+    let q = if ev[query].is_none() { Some(query) } else { None };
+    let order = elimination_order(&scopes, n, q);
+    for v in order {
+        let (with_v, rest): (Vec<Factor>, Vec<Factor>) =
+            factors.into_iter().partition(|f| f.vars.contains(&v));
+        let mut prod = Factor::scalar(1.0);
+        for f in &with_v {
+            prod = product(&prod, f)?;
+        }
+        factors = rest;
+        factors.push(sum_out(&prod, v));
+    }
+    let mut res = Factor::scalar(1.0);
+    for f in &factors {
+        res = product(&res, f)?;
+    }
+    match ev[query] {
+        // Query observed: all factors collapsed to scalars; the product
+        // is P(evidence) with the query's own observation included.
+        Some(v) => {
+            let p_ev = res.table[0];
+            Ok((if v && p_ev > 0.0 { 1.0 } else { 0.0 }, p_ev))
+        }
+        None => {
+            debug_assert_eq!(res.vars, vec![query]);
+            let (p0, p1) = (res.table[0], res.table[1]);
+            let p_ev = p0 + p1;
+            Ok((if p_ev == 0.0 { 0.0 } else { p1 / p_ev }, p_ev))
+        }
+    }
+}
+
+/// [`posterior`] with nodes referenced by name — typed
+/// [`Error::Network`] diagnostics for unknown names.
+pub fn posterior_by_name(
+    net: &BayesNet,
+    query: &str,
+    evidence: &[(&str, bool)],
+) -> Result<(f64, f64)> {
+    let q = net.resolve(query)?;
+    let ev: Vec<(usize, bool)> = evidence
+        .iter()
+        .map(|&(name, v)| net.resolve(name).map(|i| (i, v)))
+        .collect::<Result<_>>()?;
+    posterior(net, q, &ev)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::exact;
+    use super::*;
+
+    fn diamond() -> BayesNet {
+        let mut net = BayesNet::new();
+        net.add_root("a", 0.4).unwrap();
+        net.add_node("b", &["a"], &[0.2, 0.9]).unwrap();
+        net.add_node("c", &["a"], &[0.7, 0.1]).unwrap();
+        net.add_node("d", &["b", "c"], &[0.1, 0.5, 0.6, 0.95]).unwrap();
+        net
+    }
+
+    #[test]
+    fn matches_full_joint_on_the_diamond() {
+        let net = diamond();
+        let fj = exact::FullJoint::new(&net).unwrap();
+        for (q, ev) in [
+            ("a", vec![("d", true)]),
+            ("b", vec![("a", true), ("d", false)]),
+            ("d", vec![]),
+            ("c", vec![("b", false)]),
+            ("a", vec![("b", true), ("c", true), ("d", false)]),
+        ] {
+            let (pv, mv) = posterior_by_name(&net, q, &ev).unwrap();
+            let (pf, mf) = fj.posterior_by_name(q, &ev).unwrap();
+            assert!((pv - pf).abs() < 1e-12, "{q}|{ev:?}: {pv} vs {pf}");
+            assert!((mv - mf).abs() < 1e-12, "{q}|{ev:?}: {mv} vs {mf}");
+        }
+    }
+
+    #[test]
+    fn degenerate_evidence_conventions_match_full_joint() {
+        let mut net = BayesNet::new();
+        net.add_root("a", 0.5).unwrap();
+        net.add_node("b", &["a"], &[0.0, 1.0]).unwrap();
+        net.add_node("c", &["a"], &[1.0, 0.0]).unwrap();
+        // Impossible evidence.
+        let (p, m) = posterior_by_name(&net, "a", &[("b", true), ("c", true)]).unwrap();
+        assert_eq!((p, m), (0.0, 0.0));
+        // Query observed (either polarity).
+        assert_eq!(posterior_by_name(&net, "a", &[("a", true)]).unwrap().0, 1.0);
+        assert_eq!(posterior_by_name(&net, "a", &[("a", false)]).unwrap().0, 0.0);
+        // Contradictory duplicate observations collapse to (0, 0);
+        // consistent duplicates are harmless.
+        let (p, m) =
+            posterior_by_name(&net, "a", &[("b", true), ("b", false)]).unwrap();
+        assert_eq!((p, m), (0.0, 0.0));
+        let (p, _) = posterior_by_name(&net, "a", &[("b", true), ("b", true)]).unwrap();
+        let (pf, _) = exact::posterior_by_name(&net, "a", &[("b", true)]).unwrap();
+        assert!((p - pf).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scales_past_the_full_joint_cap() {
+        // A 30-node chain: P(c0=1 | c29=1) by VE vs the forward/backward
+        // closed form computed with plain f64 recurrences.
+        let mut net = BayesNet::new();
+        net.add_root("c00", 0.4).unwrap();
+        for i in 1..30 {
+            net.add_node(&format!("c{i:02}"), &[&format!("c{:02}", i - 1)], &[0.1, 0.9])
+                .unwrap();
+        }
+        assert!(exact::FullJoint::new(&net).is_err(), "past the enumeration cap");
+        // lik[v] = P(c29=1 | c_k=v), recursed backward from c29 where it
+        // is the indicator [0, 1]. The 0.1/0.9 coupling mixes slowly
+        // enough that the posterior measurably differs from the prior.
+        let mut lik = [0.0f64, 1.0];
+        for _ in 1..30 {
+            lik = [0.9 * lik[0] + 0.1 * lik[1], 0.1 * lik[0] + 0.9 * lik[1]];
+        }
+        let expect = 0.4 * lik[1] / (0.6 * lik[0] + 0.4 * lik[1]);
+        let (p, m) = posterior_by_name(&net, "c00", &[("c29", true)]).unwrap();
+        assert!((p - expect).abs() < 1e-12, "{p} vs {expect}");
+        assert!((m - (0.6 * lik[0] + 0.4 * lik[1])).abs() < 1e-12);
+    }
+
+    #[test]
+    fn independent_blocks_stay_exact_at_scale() {
+        // Ten disjoint v-structures (30 nodes): the posterior in one
+        // block equals the 3-node answer, untouched by the other 27.
+        let mut net = BayesNet::new();
+        for b in 0..10 {
+            net.add_root(&format!("x{b}"), 0.3).unwrap();
+            net.add_root(&format!("y{b}"), 0.2).unwrap();
+            net.add_node(
+                &format!("e{b}"),
+                &[&format!("x{b}"), &format!("y{b}")],
+                &[0.05, 0.7, 0.6, 0.9],
+            )
+            .unwrap();
+        }
+        let mut small = BayesNet::new();
+        small.add_root("x", 0.3).unwrap();
+        small.add_root("y", 0.2).unwrap();
+        small.add_node("e", &["x", "y"], &[0.05, 0.7, 0.6, 0.9]).unwrap();
+        let (expect, _) = exact::posterior_by_name(&small, "x", &[("e", true)]).unwrap();
+        let (p, _) = posterior_by_name(&net, "x4", &[("e4", true)]).unwrap();
+        assert!((p - expect).abs() < 1e-12, "{p} vs {expect}");
+    }
+
+    #[test]
+    fn width_cap_is_a_typed_error() {
+        // Two factors over disjoint 11-var scopes: their product would
+        // span 22 > MAX_FACTOR_VARS variables.
+        let a = Factor { vars: (0..11).collect(), table: vec![1.0; 1 << 11] };
+        let b = Factor { vars: (11..22).collect(), table: vec![1.0; 1 << 11] };
+        let err = product(&a, &b).unwrap_err();
+        assert!(matches!(err, Error::Network(_)));
+        assert!(err.to_string().contains("width exceeded"), "{err}");
+    }
+
+    #[test]
+    fn name_and_index_errors_are_typed() {
+        let net = diamond();
+        assert!(matches!(
+            posterior_by_name(&net, "zz", &[]).unwrap_err(),
+            Error::Network(_)
+        ));
+        assert!(matches!(
+            posterior_by_name(&net, "a", &[("zz", true)]).unwrap_err(),
+            Error::Network(_)
+        ));
+        assert!(matches!(posterior(&net, 9, &[]).unwrap_err(), Error::Network(_)));
+        assert!(matches!(
+            posterior(&net, 0, &[(9, true)]).unwrap_err(),
+            Error::Network(_)
+        ));
+    }
+}

@@ -5,6 +5,13 @@
 //! float / boolean / numeric-array values (`key = [0.1, 0.2]`, needed by
 //! the CPT rows of network spec files), `#` comments and blank lines.
 //! Keys are exposed flattened as `section.sub.key`.
+//!
+//! Numeric arrays may span multiple lines: an opening `[` with no `]` on
+//! the same line accumulates subsequent lines (comments stripped, blank
+//! lines skipped) until one *ends* with `]`. Scene-scale CPTs need this —
+//! a 12-parent node has 4096 rows. A single trailing comma before the
+//! closing `]` is tolerated in the multi-line form only; single-line
+//! arrays stay strict.
 
 use std::collections::BTreeMap;
 
@@ -79,8 +86,12 @@ impl Document {
     pub fn parse(text: &str) -> Result<Self> {
         let mut entries = BTreeMap::new();
         let mut section = String::new();
-        for (lineno, raw) in text.lines().enumerate() {
-            let line = strip_comment(raw).trim();
+        let lines: Vec<&str> = text.lines().collect();
+        let mut i = 0;
+        while i < lines.len() {
+            let lineno = i;
+            let line = strip_comment(lines[i]).trim();
+            i += 1;
             if line.is_empty() {
                 continue;
             }
@@ -107,8 +118,38 @@ impl Document {
             } else {
                 format!("{section}.{key}")
             };
-            let parsed = parse_value(value.trim())
-                .ok_or_else(|| Error::Toml(format!("line {}: bad value {value:?}", lineno + 1)))?;
+            let mut value = value.trim().to_string();
+            // Multi-line array: `[` opened but not closed on this line.
+            // Accumulate until a line *ends* with `]` (after comment
+            // stripping); hitting EOF first is a typed error naming the
+            // line the array opened on.
+            let multiline = value.starts_with('[') && !value.ends_with(']');
+            if multiline {
+                loop {
+                    if i >= lines.len() {
+                        return Err(Error::Toml(format!(
+                            "line {}: array opened here is never closed (missing `]`)",
+                            lineno + 1
+                        )));
+                    }
+                    let cont = strip_comment(lines[i]).trim();
+                    i += 1;
+                    if cont.is_empty() {
+                        continue;
+                    }
+                    value.push(' ');
+                    value.push_str(cont);
+                    if cont.ends_with(']') {
+                        break;
+                    }
+                }
+            }
+            let parsed = if multiline {
+                parse_multiline_array(&value)
+            } else {
+                parse_value(&value)
+            }
+            .ok_or_else(|| Error::Toml(format!("line {}: bad value {value:?}", lineno + 1)))?;
             entries.insert(full, parsed);
         }
         Ok(Self { entries })
@@ -198,6 +239,27 @@ fn parse_value(s: &str) -> Option<Value> {
         "false" => return Some(Value::Bool(false)),
         _ => {}
     }
+    parse_scalar_number(s)
+}
+
+/// The reassembled multi-line form: same numeric-array grammar, plus one
+/// tolerated trailing comma before the closing `]` (the natural shape of
+/// a generated row-per-line CPT dump).
+fn parse_multiline_array(s: &str) -> Option<Value> {
+    let inner = s.strip_prefix('[')?.strip_suffix(']')?.trim();
+    let inner = inner.strip_suffix(',').unwrap_or(inner).trim();
+    if inner.is_empty() {
+        return Some(Value::Array(Vec::new()));
+    }
+    let mut vals = Vec::new();
+    for item in inner.split(',') {
+        let cleaned = item.trim().replace('_', "");
+        vals.push(cleaned.parse::<f64>().ok()?);
+    }
+    Some(Value::Array(vals))
+}
+
+fn parse_scalar_number(s: &str) -> Option<Value> {
     let cleaned = s.replace('_', "");
     if let Ok(i) = cleaned.parse::<i64>() {
         return Some(Value::Int(i));
@@ -277,11 +339,43 @@ deadline_us = 1_000
 
     #[test]
     fn malformed_arrays_are_errors() {
-        assert!(Document::parse("x = [0.1, 0.2").is_err()); // unterminated
+        assert!(Document::parse("x = [0.1, 0.2").is_err()); // unterminated at EOF
         assert!(Document::parse("x = [0.1, oops]").is_err()); // non-numeric item
         assert!(Document::parse("x = [0.1 0.2]").is_err()); // missing comma
-        assert!(Document::parse("x = [0.1,]").is_err()); // trailing comma
+        assert!(Document::parse("x = [0.1,]").is_err()); // trailing comma (single-line)
         assert!(Document::parse("x = [,]").is_err()); // empty items
+    }
+
+    #[test]
+    fn multiline_arrays_parse() {
+        let d = Document::parse(
+            "[node]\ncpt = [\n  0.1, 0.2, # first rows\n\n  0.3, 0.4,\n]\nafter = 7",
+        )
+        .unwrap();
+        assert_eq!(
+            d.get("node.cpt").unwrap().as_f64_array(),
+            Some(&[0.1, 0.2, 0.3, 0.4][..])
+        );
+        // The continuation lines were consumed: parsing resumes cleanly.
+        assert_eq!(d.i64_or("node.after", 0), 7);
+        // Items may close on the last item's line, comma or not.
+        let d = Document::parse("x = [1,\n2,\n3]").unwrap();
+        assert_eq!(d.get("x").unwrap().as_f64_array(), Some(&[1.0, 2.0, 3.0][..]));
+        let d = Document::parse("x = [\n]").unwrap();
+        assert_eq!(d.get("x").unwrap().as_f64_array(), Some(&[][..]));
+    }
+
+    #[test]
+    fn multiline_array_errors_name_the_opening_line() {
+        // EOF before `]`: the error points at the line the array opened.
+        let err = Document::parse("a = 1\nx = [\n  0.1, 0.2,").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("line 2"), "{msg}");
+        assert!(msg.contains("never closed"), "{msg}");
+        // Bad items inside a multi-line array still fail.
+        assert!(Document::parse("x = [\n0.1,\noops,\n]").is_err());
+        // Double trailing commas are not tolerated even multi-line.
+        assert!(Document::parse("x = [\n0.1,,\n]").is_err());
     }
 
     #[test]

@@ -1,0 +1,396 @@
+//! Scene-scale acceptance suite — the "lift the 20-node cap" PR:
+//!
+//! * the variable-elimination exact engine agrees with full-joint
+//!   enumeration to ≤1e-12 on random ≤20-node DAGs (including
+//!   deterministic CPT rows and degenerate evidence);
+//! * `specs/scene100.toml` (111 nodes, a 12-parent noisy-OR alarm with a
+//!   4096-row multi-line CPT) loads, validates, compiles, optimizes
+//!   (≥25 % gate reduction) and serves through a prepared plan within
+//!   0.02 MAE of VE at 2¹⁴-bit streams;
+//! * the optimizer preserves posteriors on random fodder DAGs rich in
+//!   duplicate/deterministic rows (optimized vs raw within combined
+//!   Wilson half-widths);
+//! * log-domain streams decide a 31-deep fully-observed chain whose
+//!   evidence mass (≈1e-8) starves the linear CORDIV denominator.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use bayes_mem::coordinator::{DecisionParams, PlanSpec, PreparedPlan};
+use bayes_mem::network::{
+    self, compile_query, evaluate_query_in_domain, exact_posterior_by_name,
+    full_joint_posterior_by_name, optimize, BayesNet, NetlistEvaluator, StopPolicy,
+    StreamDomain, MAX_COMPILED_COST,
+};
+use bayes_mem::stochastic::{SneBank, SneConfig};
+use bayes_mem::util::Rng;
+use bayes_mem::Error;
+
+const N_BITS: usize = 1 << 14;
+
+fn bank(n_bits: usize, seed: u64) -> SneBank {
+    SneBank::new(SneConfig { n_bits, ..Default::default() }, seed).unwrap()
+}
+
+fn scene100_path() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("../specs/scene100.toml")
+}
+
+fn scene100() -> BayesNet {
+    BayesNet::load(&scene100_path()).expect("specs/scene100.toml parses")
+}
+
+/// Random DAG over `n` nodes, ≤3 parents each, CPT entries drawn from a
+/// palette rich in deterministic (0/1) and duplicate values — exactly
+/// the structure the optimizer folds and shares.
+fn random_net(rng: &mut Rng, n: usize, deterministic_rows: bool) -> BayesNet {
+    let mut net = BayesNet::named("rand");
+    for i in 0..n {
+        let name = format!("n{i:02}");
+        let mut parent_names: Vec<String> = Vec::new();
+        for j in 0..i {
+            if rng.bernoulli(2.0 / (i as f64 + 1.0)) {
+                parent_names.push(format!("n{j:02}"));
+            }
+        }
+        parent_names.truncate(3);
+        let parent_refs: Vec<&str> = parent_names.iter().map(String::as_str).collect();
+        let rows = 1usize << parent_refs.len();
+        let mut cpt = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let p = if deterministic_rows && r > 0 && rng.bernoulli(0.25) {
+                // Duplicate an earlier row: share-streams fodder.
+                cpt[rng.below(r)]
+            } else if deterministic_rows && rng.bernoulli(0.2) {
+                // Deterministic row: fold-constants fodder.
+                if rng.bernoulli(0.5) {
+                    0.0
+                } else {
+                    1.0
+                }
+            } else {
+                rng.range_f64(0.05, 0.95)
+            };
+            cpt.push(p);
+        }
+        net.add_node(&name, &parent_refs, &cpt).unwrap();
+    }
+    net
+}
+
+/// Satellite: variable elimination vs full-joint enumeration, ≤1e-12 on
+/// both the posterior and the evidence mass, across random ≤20-node
+/// nets with adversarial CPTs and evidence (incl. impossible evidence).
+#[test]
+fn variable_elimination_matches_full_joint_to_1e12() {
+    let mut rng = Rng::seeded(0xE11E_5EED);
+    let mut cases = 0;
+    for round in 0..40 {
+        let n = rng.range_usize(5, 13);
+        let net = random_net(&mut rng, n, round % 2 == 0);
+        let query = format!("n{:02}", rng.below(n));
+        let mut evidence: Vec<(String, bool)> = Vec::new();
+        for i in 0..n {
+            let name = format!("n{i:02}");
+            if name != query && rng.bernoulli(0.3) {
+                evidence.push((name, rng.bernoulli(0.5)));
+            }
+        }
+        evidence.truncate(3);
+        let ev: Vec<(&str, bool)> = evidence.iter().map(|(s, v)| (s.as_str(), *v)).collect();
+        let (ve_p, ve_ev) = exact_posterior_by_name(&net, &query, &ev).unwrap();
+        let (fj_p, fj_ev) = full_joint_posterior_by_name(&net, &query, &ev).unwrap();
+        assert!(
+            (ve_p - fj_p).abs() <= 1e-12,
+            "round {round}: posterior VE {ve_p} vs full joint {fj_p}"
+        );
+        assert!(
+            (ve_ev - fj_ev).abs() <= 1e-12,
+            "round {round}: P(ev) VE {ve_ev} vs full joint {fj_ev}"
+        );
+        cases += 1;
+    }
+    assert_eq!(cases, 40);
+}
+
+/// Tentpole: the 111-node scene spec loads through the multi-line-array
+/// TOML path, validates under the raised caps, and fits the compiled
+/// gate budget.
+#[test]
+fn scene100_loads_validates_and_fits_the_gate_budget() {
+    let net = scene100();
+    assert_eq!(net.name(), "scene100");
+    assert_eq!(net.len(), 111);
+    net.validate().unwrap();
+    let alarm = &net.nodes()[net.node_index("alarm").unwrap()];
+    assert_eq!(alarm.parents.len(), 12, "noisy-OR alarm has 12 parents");
+    assert_eq!(alarm.cpt.len(), 4096, "4096-row CPT via multi-line arrays");
+    let cost = network::compiled_cost(&net);
+    assert!(
+        cost < MAX_COMPILED_COST,
+        "scene100 compiles to ~{cost} streams+gates, budget {MAX_COMPILED_COST}"
+    );
+}
+
+/// Tentpole: the optimizer collapses the scene100 netlist — the
+/// 12-parent noisy-OR's 4096 rows carry only 13 distinct probabilities,
+/// so share-streams + CSE fold its MUX tree level by level. Acceptance
+/// is ≥25 % gate reduction; the symmetric alarm makes it far larger.
+#[test]
+fn optimizer_reduces_scene100_gates_by_at_least_25_percent() {
+    let net = scene100();
+    let raw = compile_query(&net, "obj00_hazard", &[("alarm", true)]).unwrap();
+    let (opt, stats) = optimize(&raw);
+    assert!(
+        stats.gate_reduction() >= 0.25,
+        "gate reduction {:.3} below the 25% acceptance ({} -> {})",
+        stats.gate_reduction(),
+        stats.gates_before,
+        stats.gates_after
+    );
+    // The symmetric-CPT collapse is dramatic, not marginal.
+    assert!(
+        stats.gates_after < 400,
+        "expected the noisy-OR tree to collapse, still {} gates",
+        stats.gates_after
+    );
+    assert!(stats.streams_after < stats.streams_before);
+    // Per-pass accounting is exposed and consistent.
+    assert!(stats.passes.iter().any(|p| p.name == "share-streams" && p.changed));
+    assert!(stats.passes.iter().any(|p| p.name == "cse" && p.changed));
+    assert_eq!(stats.passes.last().unwrap().name, "dead-gate-elim");
+    assert_eq!(stats.gates_after, opt.ops().len());
+    assert_eq!(stats.streams_after, opt.inputs().len());
+}
+
+/// Tentpole acceptance: scene100 served through a prepared plan stays
+/// within 0.02 MAE of variable elimination at 2¹⁴-bit streams. The VE
+/// references are additionally pinned against an independent Python
+/// implementation of the same eliminator (1e-5), so a Rust-side VE bug
+/// cannot silently re-baseline the stochastic check.
+#[test]
+fn scene100_serves_through_prepared_plans_within_mae() {
+    let net = Arc::new(scene100());
+    // (query, evidence, independently computed posterior, P(ev))
+    let cases: [(&str, Vec<(&str, bool)>, f64, f64); 3] = [
+        ("obj00_hazard", vec![("alarm", true)], 0.030857, 0.389093),
+        ("fog", vec![("alarm", true), ("road_wet", true)], 0.120000, 0.100507),
+        ("traction", vec![("alarm", true), ("night", true)], 0.857158, 0.108952),
+    ];
+    let mut errs = Vec::new();
+    for (i, (query, evidence, py_posterior, py_ev)) in cases.iter().enumerate() {
+        let (exact, p_ev) = exact_posterior_by_name(&net, query, evidence).unwrap();
+        // 5e-5: immune to float summation-order differences between the
+        // two eliminators, far below any real inference bug.
+        assert!(
+            (exact - py_posterior).abs() < 5e-5,
+            "case {i}: Rust VE {exact} vs independent reference {py_posterior}"
+        );
+        assert!((p_ev - py_ev).abs() < 5e-5, "case {i}: P(ev) {p_ev} vs {py_ev}");
+
+        let spec = PlanSpec::Network {
+            net: Arc::clone(&net),
+            query: (*query).into(),
+            evidence: evidence.iter().map(|(n, v)| ((*n).into(), *v)).collect(),
+        };
+        let plan = PreparedPlan::compile(spec).unwrap();
+        let stats = plan.opt_stats().expect("network plans carry optimizer stats");
+        assert!(stats.gate_reduction() > 0.25, "case {i}: {:.3}", stats.gate_reduction());
+        assert!((plan.exact(&DecisionParams::Network) - exact).abs() < 1e-12);
+
+        let mut b = bank(N_BITS, 4200 + i as u64);
+        let mut eval = NetlistEvaluator::new();
+        let posterior =
+            plan.decide_on(&mut b, &mut eval, &DecisionParams::Network).unwrap();
+        let err = (posterior - exact).abs();
+        assert!(err < 0.05, "case {i}: served {posterior} vs exact {exact}");
+        errs.push(err);
+    }
+    let mae = errs.iter().sum::<f64>() / errs.len() as f64;
+    assert!(mae < 0.02, "scene100 MAE {mae:.4} at 2^14 bits (errs {errs:?})");
+}
+
+/// A thin-evidence branch of scene100 (P(ev) ≈ 0.045): still served,
+/// with a proportionally looser stochastic bound.
+#[test]
+fn scene100_thin_evidence_query_stays_in_tolerance() {
+    let net = scene100();
+    let ev = [("obj05_seen", true), ("alarm", true)];
+    let (exact, p_ev) = exact_posterior_by_name(&net, "obj05_present", &ev).unwrap();
+    assert!((exact - 0.854772).abs() < 5e-5, "VE drifted: {exact}");
+    assert!((p_ev - 0.044604).abs() < 5e-5, "P(ev) drifted: {p_ev}");
+    let raw = compile_query(&net, "obj05_present", &ev).unwrap();
+    let (opt, _) = optimize(&raw);
+    let r = NetlistEvaluator::new()
+        .evaluate_anytime(&mut bank(N_BITS, 4300), &opt, opt.inputs(), &StopPolicy::Never)
+        .unwrap();
+    // ~730 effective divisor hits: Wilson half-width ≈ 0.04.
+    assert!(
+        (r.posterior - exact).abs() < 3.0 * r.half_width.max(0.02),
+        "{} vs {exact} (half-width {})",
+        r.posterior,
+        r.half_width
+    );
+}
+
+/// Satellite property: the optimizer preserves posteriors. Random fodder
+/// DAGs rich in duplicate and deterministic CPT rows, evaluated raw and
+/// optimized on independently seeded banks at 2¹⁴ bits — the two
+/// measurements must agree within their combined Wilson half-widths
+/// (plus a small slack for the shared exact reference), and each must
+/// sit within its own interval of the VE exact value.
+#[test]
+fn optimizer_preserves_posteriors_on_random_fodder_nets() {
+    let mut rng = Rng::seeded(0x0F7F_5EED);
+    let mut eval = NetlistEvaluator::new();
+    let mut checked = 0;
+    let mut round = 0;
+    while checked < 12 {
+        round += 1;
+        assert!(round < 200, "could not find enough well-conditioned fodder nets");
+        let n = rng.range_usize(5, 13);
+        let net = random_net(&mut rng, n, true);
+        let query = "n00";
+        let last = format!("n{:02}", n - 1);
+        let evidence = [(last.as_str(), true)];
+        let (exact, p_ev) = exact_posterior_by_name(&net, query, &evidence).unwrap();
+        if p_ev < 0.05 {
+            continue; // starved CORDIV den ⇒ testing noise, not the optimizer
+        }
+        let raw = compile_query(&net, query, &evidence).unwrap();
+        let (opt, stats) = optimize(&raw);
+        let r_raw = eval
+            .evaluate_anytime(
+                &mut bank(N_BITS, 7000 + round),
+                &raw,
+                raw.inputs(),
+                &StopPolicy::Never,
+            )
+            .unwrap();
+        let r_opt = eval
+            .evaluate_anytime(
+                &mut bank(N_BITS, 9000 + round),
+                &opt,
+                opt.inputs(),
+                &StopPolicy::Never,
+            )
+            .unwrap();
+        let combined = r_raw.half_width + r_opt.half_width + 0.02;
+        assert!(
+            (r_raw.posterior - r_opt.posterior).abs() <= combined,
+            "round {round} (reduction {:.2}): raw {} vs optimized {} exceeds \
+             combined Wilson half-widths {combined:.4}",
+            stats.gate_reduction(),
+            r_raw.posterior,
+            r_opt.posterior
+        );
+        for (label, r) in [("raw", &r_raw), ("optimized", &r_opt)] {
+            assert!(
+                (r.posterior - exact).abs() <= r.half_width + 0.03,
+                "round {round}: {label} {} vs exact {exact} (half-width {})",
+                r.posterior,
+                r.half_width
+            );
+        }
+        checked += 1;
+    }
+}
+
+/// Tentpole: a 31-deep fully-observed chain. The linear stream encoding
+/// underflows — P(evidence) ≈ 1e-8, so at 2¹⁴ bits the CORDIV
+/// denominator essentially never fires — while the log-domain encoding
+/// accumulates the same evidence additively and lands on the VE
+/// posterior.
+#[test]
+fn log_domain_survives_a_30_deep_chain_where_linear_underflows() {
+    let depth = 31;
+    let mut net = BayesNet::named("deep-chain");
+    net.add_root("c00", 0.5).unwrap();
+    for i in 1..depth {
+        let parent = format!("c{:02}", i - 1);
+        net.add_node(&format!("c{i:02}"), &[parent.as_str()], &[0.3, 0.8]).unwrap();
+    }
+    let query = "c15";
+    let evidence_owned: Vec<(String, bool)> = (0..depth)
+        .filter(|&i| i != 15)
+        .map(|i| (format!("c{i:02}"), i % 2 == 0))
+        .collect();
+    let ev: Vec<(&str, bool)> =
+        evidence_owned.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+
+    // VE handles the 31-node net exactly (full joint cannot: 2^31).
+    let (exact, p_ev) = exact_posterior_by_name(&net, query, &ev).unwrap();
+    assert!(p_ev < 1e-7, "chain evidence mass should be tiny, got {p_ev}");
+    assert!(
+        network::full_joint_posterior_by_name(&net, query, &ev).is_err(),
+        "full joint must refuse 31 nodes"
+    );
+
+    // Linear: the denominator density *is* P(ev) ≈ 1e-8 — at 2^14 bits
+    // the measured evidence mass reads (essentially) zero.
+    let lin =
+        evaluate_query_in_domain(&mut bank(N_BITS, 31), &net, query, &ev, StreamDomain::Linear)
+            .unwrap();
+    assert!(
+        lin.marginal < 1e-3,
+        "linear evidence mass should starve, measured {}",
+        lin.marginal
+    );
+
+    // Log-domain: additive accumulation at R = 64 recovers the posterior.
+    let log = evaluate_query_in_domain(
+        &mut bank(N_BITS, 31),
+        &net,
+        query,
+        &ev,
+        StreamDomain::Log { exchange_rate: 64 },
+    )
+    .unwrap();
+    assert!(
+        (log.posterior - exact).abs() < 0.02,
+        "log-domain {} vs exact {exact}",
+        log.posterior
+    );
+    // And its reconstructed evidence mass is the right order of
+    // magnitude, where linear read ~0.
+    assert!(log.marginal > 0.0 && (log.marginal.log2() - p_ev.log2()).abs() < 0.5);
+}
+
+/// Satellite: the raised caps thread through plan admission — an
+/// in-cap scene-scale net is admitted, and a net past the compiled-gate
+/// budget is rejected with the typed budget error.
+#[test]
+fn plan_admission_enforces_the_compiled_gate_budget() {
+    // scene100 (111 nodes, ~9k compiled cost) is admitted.
+    let ok = PlanSpec::Network {
+        net: Arc::new(scene100()),
+        query: "alarm".into(),
+        evidence: vec![("fog".into(), true)],
+    };
+    PreparedPlan::compile(ok).unwrap();
+
+    // 12 roots + 17 twelve-parent nodes ≈ 17·(2^13−1) compiled slots:
+    // past the budget, rejected before any compilation work.
+    let mut net = BayesNet::named("too-wide");
+    let roots: Vec<String> = (0..12).map(|i| format!("r{i:02}")).collect();
+    for r in &roots {
+        net.add_root(r, 0.5).unwrap();
+    }
+    let parent_refs: Vec<&str> = roots.iter().map(String::as_str).collect();
+    let cpt = vec![0.5; 1 << 12];
+    for i in 0..17 {
+        net.add_node(&format!("w{i:02}"), &parent_refs, &cpt).unwrap();
+    }
+    let bad = PlanSpec::Network {
+        net: Arc::new(net),
+        query: "w00".into(),
+        evidence: vec![("r00".into(), true)],
+    };
+    let err = PreparedPlan::compile(bad).unwrap_err();
+    match err {
+        Error::Network(msg) => {
+            assert!(msg.contains("compiled-gate budget"), "{msg}")
+        }
+        other => panic!("expected Error::Network, got {other}"),
+    }
+}
