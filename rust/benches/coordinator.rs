@@ -166,6 +166,7 @@ fn main() {
             threshold: None,
             max_half_width: None,
             allow_partial: false,
+            trace: None,
             reply: tx.clone(),
         };
         if let Some(batch) = batcher.push(req) {
@@ -263,6 +264,32 @@ fn main() {
         snap.deadline_missed, snap.early_exits[2],
     );
     coord.shutdown();
+
+    // ISSUE-7 observability: per-stage trace timing must be effectively
+    // free when a request is not sampled. Run the full word-parallel
+    // sweep (10-node DAG, 8192-bit streams) with stage timing off vs on
+    // and pin the relative overhead (acceptance: <= 2%).
+    let netlist = compile_query(&net, query, &ev_refs).unwrap();
+    let mut bank = SneBank::new(
+        SneConfig { n_bits: 8192, wear_policy: WearPolicy::Ignore, ..Default::default() },
+        31,
+    )
+    .unwrap();
+    let mut eval = NetlistEvaluator::new();
+    eval.set_stage_timing(false);
+    let untimed = b.bench("netlist_sweep_8192bit_untraced", || {
+        std::hint::black_box(eval.evaluate(&mut bank, &netlist).unwrap().posterior);
+    });
+    eval.set_stage_timing(true);
+    let timed = b.bench("netlist_sweep_8192bit_traced", || {
+        std::hint::black_box(eval.evaluate(&mut bank, &netlist).unwrap().posterior);
+    });
+    eval.set_stage_timing(false);
+    if let (Some(u), Some(t)) = (untimed, timed) {
+        let pct = ((t.mean_ns - u.mean_ns) / u.mean_ns * 100.0).max(0.0);
+        b.metric("trace_overhead_pct", pct);
+        println!("  trace_overhead_pct: {pct:.2}% (acceptance: <= 2% when not sampled)");
+    }
 
     b.finish_and_export();
 }

@@ -81,7 +81,12 @@ impl Batcher {
     /// empty queue): plan ids are monotone and never reused, so retaining
     /// drained keys would grow the map — and the dispatcher's
     /// `flush_due`/`next_due` scans — without bound over uptime.
-    pub fn push(&mut self, req: DecisionRequest) -> Option<Batch> {
+    pub fn push(&mut self, mut req: DecisionRequest) -> Option<Batch> {
+        // End of queue wait: the request just crossed from the submit
+        // queue into batch formation.
+        if let Some(trace) = req.trace.as_deref_mut() {
+            trace.stamp(crate::obs::Stage::Queue);
+        }
         let key = (req.plan.id(), req.bits);
         let q = self.pending.entry(key).or_default();
         q.push(req);
@@ -95,7 +100,14 @@ impl Batcher {
 
     /// Wrap one plan's drained queue (the plan/bits are read off the
     /// first member — every member shares them by construction).
-    fn batch_from(requests: Vec<DecisionRequest>) -> Batch {
+    fn batch_from(mut requests: Vec<DecisionRequest>) -> Batch {
+        // End of batch formation for every member — the batch is sealed
+        // here whether it filled up or aged out.
+        for req in &mut requests {
+            if let Some(trace) = req.trace.as_deref_mut() {
+                trace.stamp(crate::obs::Stage::Batch);
+            }
+        }
         let first = requests.first().expect("batch_from() on a non-empty queue");
         let plan = Arc::clone(&first.plan);
         let bits = first.bits;
@@ -169,6 +181,7 @@ mod tests {
             threshold: None,
             max_half_width: None,
             allow_partial: false,
+            trace: None,
             reply: tx,
         }
     }

@@ -1,10 +1,17 @@
 //! Metrics registry for the serving layer: lock-free counters plus a
 //! (briefly) locked per-plan latency table.
 //!
-//! Latency sums accumulate in **nanoseconds** (converted at snapshot
-//! time): sub-microsecond decisions used to floor to 0 µs and report a
-//! zero mean for fast native batches. Histogram bucket boundaries are
-//! unchanged (µs upper bounds).
+//! Latency accumulates in **nanoseconds** three ways: a saturating ns
+//! sum (means), the legacy coarse µs buckets ([`LATENCY_BUCKETS_US`],
+//! kept for compatibility), and log-bucketed ns histograms
+//! ([`crate::obs::NsHistogram`]) carrying p50/p99/p999 for the
+//! end-to-end latency, for **each pipeline stage**
+//! ([`crate::obs::Stage`]), and per plan. Stage histograms are fed from
+//! sampled [`crate::obs::DecisionTrace`]s (see
+//! [`Metrics::on_stage_sample`]); the end-to-end histogram sees every
+//! completion. Hardware telemetry (pulses, wear events, energy) flows
+//! in per batch from the worker bank ledgers via
+//! [`Metrics::on_hardware`].
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -12,6 +19,7 @@ use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::network::StopReason;
+use crate::obs::{saturating_fetch_add, saturating_ns_from_f64, AtomicNsHistogram, NsHistogram, Stage};
 
 /// Latency histogram buckets, µs upper bounds (last bucket = overflow).
 pub const LATENCY_BUCKETS_US: [u64; 10] =
@@ -50,7 +58,18 @@ pub struct Metrics {
     batched_requests: AtomicU64,
     latency_ns_sum: AtomicU64,
     latency_buckets: [AtomicU64; 10],
+    /// Log-bucketed end-to-end latency, ns — every completion.
+    latency_hist: AtomicNsHistogram,
+    /// Log-bucketed per-stage durations, ns — traced completions only.
+    stage_hists: [AtomicNsHistogram; Stage::COUNT],
     hardware_ns: AtomicU64,
+    /// Memristor pulses issued (from worker bank ledgers).
+    hw_pulses: AtomicU64,
+    /// Threshold-switching (wear) events.
+    hw_switch_events: AtomicU64,
+    /// Switching energy, picojoules (integer so the counter saturates
+    /// instead of losing mass to float truncation).
+    hw_energy_pj: AtomicU64,
     completed_by_kind: [AtomicU64; N_KINDS],
     plan_hits: AtomicU64,
     plan_misses: AtomicU64,
@@ -73,10 +92,11 @@ struct PerPlanTable {
     entries: BTreeMap<u64, PlanCounters>,
 }
 
-#[derive(Debug, Default, Clone, Copy)]
+#[derive(Debug, Default, Clone)]
 struct PlanCounters {
     completed: u64,
     latency_ns_sum: u64,
+    hist: NsHistogram,
     last_update: u64,
 }
 
@@ -111,15 +131,22 @@ impl Metrics {
     }
 
     /// A decision completed successfully.
+    ///
+    /// All accumulation saturates: `latency` is clamped (not wrapped)
+    /// into `u64` ns, and the virtual-hardware time is **rounded** from
+    /// `f64` ns rather than truncated, so long soaks neither wrap the
+    /// sums nor bleed sub-ns mass on every call.
     pub fn on_complete(&self, latency: Duration, hardware_ns: f64, kind: KindTag) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         self.completed_by_kind[kind as usize].fetch_add(1, Ordering::Relaxed);
         // Accumulate in ns so sub-µs decisions don't floor to a 0 sum.
-        self.latency_ns_sum.fetch_add(latency.as_nanos() as u64, Ordering::Relaxed);
-        let us = latency.as_micros() as u64;
+        let ns = u64::try_from(latency.as_nanos()).unwrap_or(u64::MAX);
+        saturating_fetch_add(&self.latency_ns_sum, ns);
+        self.latency_hist.record(ns);
+        let us = u64::try_from(latency.as_micros()).unwrap_or(u64::MAX);
         let idx = LATENCY_BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(9);
         self.latency_buckets[idx].fetch_add(1, Ordering::Relaxed);
-        self.hardware_ns.fetch_add(hardware_ns as u64, Ordering::Relaxed);
+        saturating_fetch_add(&self.hardware_ns, saturating_ns_from_f64(hardware_ns));
     }
 
     /// A decision failed.
@@ -156,6 +183,28 @@ impl Metrics {
         }
     }
 
+    /// Stage-duration sample from one finished (traced) decision:
+    /// `stamps` are the telescoping end-of-stage offsets of a
+    /// [`crate::obs::DecisionTrace`]. Each consecutive difference lands
+    /// in that stage's histogram.
+    pub fn on_stage_sample(&self, stamps: &[u64; Stage::COUNT]) {
+        let mut prev = 0u64;
+        for (hist, &stamp) in self.stage_hists.iter().zip(stamps.iter()) {
+            let end = stamp.max(prev);
+            hist.record(end - prev);
+            prev = end;
+        }
+    }
+
+    /// Hardware telemetry delta from a worker bank ledger (accumulated
+    /// once per executed batch): memristor pulses issued, threshold
+    /// switching (wear) events, and switching energy in nJ.
+    pub fn on_hardware(&self, pulses: u64, switch_events: u64, energy_nj: f64) {
+        saturating_fetch_add(&self.hw_pulses, pulses);
+        saturating_fetch_add(&self.hw_switch_events, switch_events);
+        saturating_fetch_add(&self.hw_energy_pj, saturating_ns_from_f64(energy_nj * 1_000.0));
+    }
+
     /// A `prepare` was answered from the plan cache.
     pub fn on_plan_hit(&self) {
         self.plan_hits.fetch_add(1, Ordering::Relaxed);
@@ -175,6 +224,7 @@ impl Metrics {
     /// dropped — a long-lived hot plan keeps its history no matter how
     /// old its id, while churned ephemeral plans age out.
     pub fn on_plan_complete(&self, plan_id: u64, latency: Duration) {
+        let ns = u64::try_from(latency.as_nanos()).unwrap_or(u64::MAX);
         let mut table = self.per_plan.lock().expect("metrics poisoned");
         table.tick += 1;
         let tick = table.tick;
@@ -190,7 +240,8 @@ impl Metrics {
         }
         let c = table.entries.entry(plan_id).or_default();
         c.completed += 1;
-        c.latency_ns_sum += latency.as_nanos() as u64;
+        c.latency_ns_sum = c.latency_ns_sum.saturating_add(ns);
+        c.hist.record(ns);
         c.last_update = tick;
     }
 
@@ -212,6 +263,9 @@ impl Metrics {
                 plan_id,
                 completed: c.completed,
                 latency_ns_sum: c.latency_ns_sum,
+                p50_ns: c.hist.p50_ns(),
+                p99_ns: c.hist.p99_ns(),
+                p999_ns: c.hist.p999_ns(),
             })
             .collect();
         let mut early_exits = [0u64; 3];
@@ -229,7 +283,12 @@ impl Metrics {
             batched_requests: self.batched_requests.load(Ordering::Relaxed),
             latency_ns_sum: self.latency_ns_sum.load(Ordering::Relaxed),
             latency_buckets: buckets,
+            latency_hist: self.latency_hist.snapshot(),
+            stage_hists: std::array::from_fn(|i| self.stage_hists[i].snapshot()),
             hardware_ns: self.hardware_ns.load(Ordering::Relaxed),
+            hw_pulses: self.hw_pulses.load(Ordering::Relaxed),
+            hw_switch_events: self.hw_switch_events.load(Ordering::Relaxed),
+            hw_energy_nj: self.hw_energy_pj.load(Ordering::Relaxed) as f64 / 1_000.0,
             completed_by_kind,
             plan_hits: self.plan_hits.load(Ordering::Relaxed),
             plan_misses: self.plan_misses.load(Ordering::Relaxed),
@@ -242,14 +301,25 @@ impl Metrics {
 }
 
 /// Per-plan completion/latency counters in a [`MetricsSnapshot`].
+///
+/// Since the observability release the row is a **quantile summary**
+/// (p50/p99/p999 from a per-plan log-bucketed ns histogram), not just a
+/// mean: [`mean_latency_us`](Self::mean_latency_us) is still exact, but
+/// tail behaviour per plan no longer hides behind it.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PlanLatency {
     /// Plan id (see [`super::PreparedPlan::id`]).
     pub plan_id: u64,
     /// Decisions completed under this plan.
     pub completed: u64,
-    /// Sum of their completion latencies, ns.
+    /// Sum of their completion latencies, ns (saturating).
     pub latency_ns_sum: u64,
+    /// Median latency upper bound, ns (log-bucket resolution).
+    pub p50_ns: u64,
+    /// 99th-percentile latency upper bound, ns.
+    pub p99_ns: u64,
+    /// 99.9th-percentile latency upper bound, ns.
+    pub p999_ns: u64,
 }
 
 impl PlanLatency {
@@ -286,12 +356,24 @@ pub struct MetricsSnapshot {
     /// Total requests across all batches.
     pub batched_requests: u64,
     /// Sum of completion latencies, ns (accumulated in ns so sub-µs
-    /// decisions are not floored away).
+    /// decisions are not floored away; saturating).
     pub latency_ns_sum: u64,
     /// Histogram counts per [`LATENCY_BUCKETS_US`] bucket.
     pub latency_buckets: Vec<u64>,
+    /// Log-bucketed end-to-end latency histogram, ns (every completion;
+    /// p50/p99/p999 via [`NsHistogram::quantile_ns`]).
+    pub latency_hist: NsHistogram,
+    /// Per-stage duration histograms, ns, indexed by
+    /// [`Stage::index`] — fed from sampled decision traces.
+    pub stage_hists: [NsHistogram; Stage::COUNT],
     /// Accumulated virtual hardware time, ns.
     pub hardware_ns: u64,
+    /// Memristor pulses issued across worker banks.
+    pub hw_pulses: u64,
+    /// Threshold-switching (wear) events across worker banks.
+    pub hw_switch_events: u64,
+    /// Switching energy across worker banks, nJ.
+    pub hw_energy_nj: f64,
     /// Completions per decision family, indexed by [`KindTag`].
     pub completed_by_kind: [u64; N_KINDS],
     /// `prepare` calls answered from the plan cache.
@@ -305,7 +387,7 @@ pub struct MetricsSnapshot {
     pub bits_used_sum: u64,
     /// Bits the same decisions would have cost at full stream length.
     pub bits_full_sum: u64,
-    /// Per-plan completion/latency counters, ordered by plan id.
+    /// Per-plan quantile summaries, ordered by plan id.
     pub per_plan: Vec<PlanLatency>,
 }
 
@@ -388,6 +470,17 @@ impl MetricsSnapshot {
         u64::MAX
     }
 
+    /// End-to-end latency quantile from the log-bucketed ns histogram
+    /// (upper bound of the bucket containing the q-quantile).
+    pub fn latency_quantile_ns(&self, q: f64) -> u64 {
+        self.latency_hist.quantile_ns(q)
+    }
+
+    /// Duration histogram of one pipeline stage (traced decisions).
+    pub fn stage_hist(&self, stage: Stage) -> &NsHistogram {
+        &self.stage_hists[stage.index()]
+    }
+
     /// Virtual-hardware decision rate: completed / hardware time (the
     /// paper's fps metric).
     pub fn virtual_fps(&self) -> f64 {
@@ -398,50 +491,82 @@ impl MetricsSnapshot {
         }
     }
 
-    /// Render a compact text report.
+    /// Render a compact text report, grouped into labeled sections
+    /// (admission / execution / anytime / plans / hardware). The
+    /// individual counter lines keep their historical wording.
     pub fn to_table(&self) -> String {
-        format!(
+        let mut out = String::new();
+        out.push_str("== admission ==\n");
+        out.push_str(&format!(
             "submitted {}  completed {}  rejected {}  blocked {}  failed {}  \
-             deadline missed {}\n\
-             by kind: inference {}  fusion {}  network {}\n\
-             plan cache: {} hits / {} misses ({:.0} % hit rate, {} plans served)\n\
-             anytime: {} early exits (reliable {} / converged {} / timely {})  \
-             bits saved {} ({:.0} %)\n\
-             batches {}  mean batch {:.2}\n\
-             latency mean {:.1} µs  p50 ≤{} µs  p99 ≤{} µs\n\
-             virtual hardware fps {:.0}",
+             deadline missed {}\n",
             self.submitted,
             self.completed,
             self.rejected,
             self.blocked,
             self.failed,
             self.deadline_missed,
+        ));
+        out.push_str("== execution ==\n");
+        out.push_str(&format!(
+            "by kind: inference {}  fusion {}  network {}\n",
             self.completed_for(KindTag::Inference),
             self.completed_for(KindTag::Fusion),
             self.completed_for(KindTag::Network),
-            self.plan_hits,
-            self.plan_misses,
-            self.plan_hit_rate() * 100.0,
-            self.per_plan.len(),
+        ));
+        out.push_str(&format!("batches {}  mean batch {:.2}\n", self.batches, self.mean_batch_size()));
+        out.push_str(&format!(
+            "latency mean {:.1} µs  p50 ≤{} µs  p99 ≤{} µs  p999 ≤{} ns\n",
+            self.mean_latency_us(),
+            self.latency_quantile_us(0.5),
+            self.latency_quantile_us(0.99),
+            self.latency_quantile_ns(0.999),
+        ));
+        let traced = self.stage_hists.iter().any(|h| !h.is_empty());
+        if traced {
+            out.push_str("stage p99 ns:");
+            for stage in Stage::ALL {
+                out.push_str(&format!(" {} {}", stage.name(), self.stage_hist(stage).p99_ns()));
+            }
+            out.push('\n');
+        }
+        out.push_str("== anytime ==\n");
+        out.push_str(&format!(
+            "anytime: {} early exits (reliable {} / converged {} / timely {})  \
+             bits saved {} ({:.0} %)\n",
             self.early_exit_total(),
             self.early_exits[0],
             self.early_exits[1],
             self.early_exits[2],
             self.bits_saved(),
             self.bits_saved_ratio() * 100.0,
-            self.batches,
-            self.mean_batch_size(),
-            self.mean_latency_us(),
-            self.latency_quantile_us(0.5),
-            self.latency_quantile_us(0.99),
+        ));
+        out.push_str("== plans ==\n");
+        out.push_str(&format!(
+            "plan cache: {} hits / {} misses ({:.0} % hit rate, {} plans served)\n",
+            self.plan_hits,
+            self.plan_misses,
+            self.plan_hit_rate() * 100.0,
+            self.per_plan.len(),
+        ));
+        out.push_str("== hardware ==\n");
+        out.push_str(&format!(
+            "virtual hardware fps {:.0}\n\
+             bits pulsed {}  wear events {}  energy {:.2} nJ",
             self.virtual_fps(),
-        )
+            self.hw_pulses,
+            self.hw_switch_events,
+            self.hw_energy_nj,
+        ));
+        out
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
 
     #[test]
     fn counters_accumulate() {
@@ -478,7 +603,13 @@ mod tests {
         assert_eq!(plan.completed, 2);
         assert_eq!(plan.latency_ns_sum, 200_000);
         assert!((plan.mean_latency_us() - 100.0).abs() < 1e-9);
+        // Quantile summary: both samples bounded by their buckets.
+        assert!(plan.p50_ns >= 80_000 && plan.p99_ns >= 120_000);
+        assert!(plan.p50_ns <= plan.p99_ns && plan.p99_ns <= plan.p999_ns);
         assert!(s.plan_latency(8).is_none());
+        // End-to-end ns histogram sees every completion.
+        assert_eq!(s.latency_hist.count(), 2);
+        assert_eq!(s.latency_hist.sum, 200_000);
     }
 
     #[test]
@@ -494,6 +625,40 @@ mod tests {
         assert!((s.plan_latency(3).unwrap().mean_latency_us() - 0.5).abs() < 1e-9);
         // Bucket boundaries unchanged: sub-µs lands in the first bucket.
         assert_eq!(s.latency_buckets[0], 2);
+        // The ns histogram resolves them instead of flooring.
+        assert!(s.latency_quantile_ns(0.5) >= 400 && s.latency_quantile_ns(0.5) < 1_000);
+    }
+
+    #[test]
+    fn hardware_ns_rounds_instead_of_truncating() {
+        let m = Metrics::new();
+        // 3 × 0.4 ns of virtual hardware time: truncation would lose all
+        // of it; rounding keeps the mass to within ±0.5 ns per call.
+        for _ in 0..3 {
+            m.on_complete(Duration::from_micros(1), 0.6, KindTag::Inference);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.hardware_ns, 3, "0.6 ns must round to 1, not truncate to 0");
+        // Negative / NaN inputs clamp to zero rather than wrapping.
+        m.on_complete(Duration::from_micros(1), -5.0, KindTag::Inference);
+        m.on_complete(Duration::from_micros(1), f64::NAN, KindTag::Inference);
+        assert_eq!(m.snapshot().hardware_ns, 3);
+    }
+
+    #[test]
+    fn oversized_accumulation_saturates_instead_of_wrapping() {
+        let m = Metrics::new();
+        // A latency whose ns count exceeds u64 (as_nanos() is u128).
+        let huge = Duration::from_secs(u64::MAX / 1_000_000_000 + 1);
+        m.on_complete(huge, f64::INFINITY, KindTag::Fusion);
+        m.on_complete(huge, 1e30, KindTag::Fusion);
+        m.on_plan_complete(1, huge);
+        m.on_plan_complete(1, huge);
+        let s = m.snapshot();
+        assert_eq!(s.latency_ns_sum, u64::MAX);
+        assert_eq!(s.hardware_ns, u64::MAX);
+        assert_eq!(s.plan_latency(1).unwrap().latency_ns_sum, u64::MAX);
+        assert_eq!(s.completed, 2);
     }
 
     #[test]
@@ -519,6 +684,48 @@ mod tests {
         assert!(table.contains("deadline missed 2"), "{table}");
         assert!(table.contains("early exits"), "{table}");
         assert!(table.contains("bits saved"), "{table}");
+    }
+
+    #[test]
+    fn table_has_labeled_sections() {
+        let m = Metrics::new();
+        m.on_complete(Duration::from_micros(100), 400_000.0, KindTag::Fusion);
+        m.on_hardware(100, 60, 1.5);
+        let table = m.snapshot().to_table();
+        for section in ["== admission ==", "== execution ==", "== anytime ==", "== plans ==", "== hardware =="]
+        {
+            assert!(table.contains(section), "missing {section} in:\n{table}");
+        }
+        assert!(table.contains("bits pulsed 100"), "{table}");
+        assert!(table.contains("wear events 60"), "{table}");
+        assert!(table.contains("energy 1.50 nJ"), "{table}");
+        // Sections appear in path order.
+        let adm = table.find("== admission ==").unwrap();
+        let hw = table.find("== hardware ==").unwrap();
+        assert!(adm < hw);
+    }
+
+    #[test]
+    fn stage_samples_feed_stage_histograms() {
+        let m = Metrics::new();
+        // Telescoping offsets: admit 100, queue 400, batch 0, dispatch
+        // 500, encode 200, sweep 1000, readout 50, reply 750.
+        let stamps = [100u64, 500, 500, 1_000, 1_200, 2_200, 2_250, 3_000];
+        m.on_stage_sample(&stamps);
+        m.on_stage_sample(&stamps);
+        let s = m.snapshot();
+        assert_eq!(s.stage_hist(Stage::Admit).count(), 2);
+        assert_eq!(s.stage_hist(Stage::Sweep).count(), 2);
+        assert_eq!(s.stage_hist(Stage::Sweep).sum, 2_000);
+        assert_eq!(s.stage_hist(Stage::Batch).sum, 0, "zero-width stage records 0 ns");
+        assert!(s.stage_hist(Stage::Sweep).p99_ns() >= 1_000);
+        // Non-monotone garbage is clamped, never underflows.
+        m.on_stage_sample(&[500, 100, 0, 0, 0, 0, 0, 0]);
+        let s = m.snapshot();
+        assert_eq!(s.stage_hist(Stage::Queue).count(), 3);
+        let table = s.to_table();
+        assert!(table.contains("stage p99 ns:"), "{table}");
+        assert!(table.contains("sweep"), "{table}");
     }
 
     #[test]
@@ -557,6 +764,9 @@ mod tests {
         assert_eq!(s.latency_quantile_us(0.5), 100);
         assert_eq!(s.latency_quantile_us(0.99), 100);
         assert_eq!(s.latency_quantile_us(1.0), 6_400);
+        // The ns histogram tells the same story at finer resolution.
+        assert!(s.latency_quantile_ns(0.5) >= 60_000 && s.latency_quantile_ns(0.5) < 200_000);
+        assert!(s.latency_quantile_ns(1.0) >= 5_000_000);
     }
 
     #[test]
@@ -564,11 +774,79 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.mean_latency_us(), 0.0);
         assert_eq!(s.latency_quantile_us(0.99), 0);
+        assert_eq!(s.latency_quantile_ns(0.99), 0);
         assert_eq!(s.virtual_fps(), 0.0);
         assert_eq!(s.plan_hit_rate(), 0.0);
         assert!(s.per_plan.is_empty());
+        assert!(s.latency_hist.is_empty());
+        assert!(s.stage_hists.iter().all(|h| h.is_empty()));
         assert!(s.to_table().contains("submitted 0"));
         assert!(s.to_table().contains("network 0"));
         assert!(s.to_table().contains("plan cache"));
+    }
+
+    /// Satellite: N completer threads race M snapshot threads. Totals
+    /// must reconcile exactly once writers quiesce, histogram totals
+    /// must equal completion counts, and every observed quantile triple
+    /// must be monotone — even mid-flight.
+    #[test]
+    fn concurrent_completions_and_snapshots_are_consistent() {
+        const THREADS: u64 = 4;
+        const PER_THREAD: u64 = 500;
+        let m = Arc::new(Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let mut snappers = Vec::new();
+        for _ in 0..2 {
+            let m = Arc::clone(&m);
+            let stop = Arc::clone(&stop);
+            snappers.push(std::thread::spawn(move || {
+                let mut last_count = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let s = m.snapshot();
+                    let count = s.latency_hist.count();
+                    assert!(count <= THREADS * PER_THREAD, "histogram over-counts");
+                    assert!(count >= last_count, "histogram totals must be monotone");
+                    last_count = count;
+                    let (p50, p99, p999) = (
+                        s.latency_quantile_ns(0.5),
+                        s.latency_quantile_ns(0.99),
+                        s.latency_quantile_ns(0.999),
+                    );
+                    assert!(p50 <= p99 && p99 <= p999, "quantiles must be monotone");
+                }
+            }));
+        }
+
+        let mut completers = Vec::new();
+        for t in 0..THREADS {
+            let m = Arc::clone(&m);
+            completers.push(std::thread::spawn(move || {
+                for i in 0..PER_THREAD {
+                    m.on_submit();
+                    let lat = Duration::from_nanos((t * PER_THREAD + i) % 10_000 + 1);
+                    m.on_complete(lat, 400.0, KindTag::Inference);
+                    m.on_plan_complete(7, lat);
+                    m.on_stage_sample(&[10, 20, 30, 40, 50, 60, 70, 80]);
+                }
+            }));
+        }
+        for h in completers {
+            h.join().unwrap();
+        }
+        stop.store(true, Ordering::Relaxed);
+        for h in snappers {
+            h.join().unwrap();
+        }
+
+        let s = m.snapshot();
+        let total = THREADS * PER_THREAD;
+        assert_eq!(s.completed, total);
+        assert_eq!(s.latency_hist.count(), total, "histogram total == completions");
+        assert_eq!(s.latency_buckets.iter().sum::<u64>(), total);
+        assert_eq!(s.plan_latency(7).unwrap().completed, total);
+        for stage in Stage::ALL {
+            assert_eq!(s.stage_hist(stage).count(), total, "stage {} total", stage.name());
+        }
     }
 }

@@ -605,6 +605,20 @@ impl PlanCache {
         self.capacity
     }
 
+    /// Snapshot of every cached plan, in no particular order. (Read-only:
+    /// does not touch recency or the hit/miss counters.) The metrics
+    /// exposition walks this to pair per-plan latency rows with each
+    /// plan's optimizer statistics.
+    pub fn plans(&self) -> Vec<Arc<PreparedPlan>> {
+        self.inner
+            .lock()
+            .expect("plan cache poisoned")
+            .entries
+            .iter()
+            .map(|e| Arc::clone(&e.plan))
+            .collect()
+    }
+
     /// Is a structurally equal spec cached? (Read-only: does not touch
     /// recency or the hit/miss counters.)
     pub fn contains(&self, spec: &PlanSpec) -> bool {

@@ -164,6 +164,11 @@ pub struct DecisionRequest {
     pub max_half_width: Option<f64>,
     /// Deadline-truncated partial results allowed ([`super::Policy`]).
     pub allow_partial: bool,
+    /// Stage-span trace, present only when the coordinator's
+    /// [`crate::obs::TraceRecorder`] is enabled and sampled this
+    /// request at admission — every layer stamps it (batcher, worker,
+    /// evaluator) if and only if it is here.
+    pub trace: Option<Box<crate::obs::DecisionTrace>>,
     /// Reply channel.
     pub reply: mpsc::Sender<Result<Decision>>,
 }

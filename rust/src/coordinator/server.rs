@@ -16,6 +16,7 @@ use std::time::{Duration, Instant};
 
 use crate::config::{AppConfig, Backend};
 use crate::network::{AnytimePosterior, NetlistEvaluator, StopPolicy, StopReason};
+use crate::obs::{self, Stage, TraceRecorder, TRACE_RING_CAPACITY};
 use crate::runtime::Runtime;
 use crate::stochastic::{SneBank, SneConfig};
 use crate::util::Rng;
@@ -40,6 +41,7 @@ pub struct CoordinatorHandle {
     next_id: Arc<AtomicU64>,
     metrics: Arc<Metrics>,
     plans: Arc<PlanCache>,
+    tracer: Arc<TraceRecorder>,
     backend: Backend,
 }
 
@@ -77,17 +79,28 @@ impl CoordinatorHandle {
             ));
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let enqueued = Instant::now();
+        // Sampling is decided exactly once, here: an untraced request
+        // carries `None` and every downstream stamp site is a branch on
+        // that. The trace origin is `enqueued` — the same instant the
+        // latency metric measures from — so traced and reported latency
+        // agree.
+        let mut trace = self.tracer.try_begin(id, plan.id(), enqueued);
+        if let Some(t) = trace.as_deref_mut() {
+            t.stamp(Stage::Admit);
+        }
         let (reply, rx) = mpsc::channel();
         let req = DecisionRequest {
             id,
             plan: Arc::clone(plan),
             params,
-            enqueued: Instant::now(),
+            enqueued,
             deadline: policy.deadline,
             bits: policy.bits,
             threshold: policy.threshold,
             max_half_width: policy.max_half_width,
             allow_partial: policy.allow_partial,
+            trace,
             reply,
         };
         Ok((req, rx))
@@ -190,6 +203,36 @@ impl CoordinatorHandle {
     pub fn plan_cache(&self) -> &PlanCache {
         &self.plans
     }
+
+    /// The shared trace recorder. Disabled by default; turn it on with
+    /// [`TraceRecorder::set_enabled`] to sample per-stage
+    /// [`crate::obs::DecisionTrace`]s into the ring.
+    pub fn trace_recorder(&self) -> &Arc<TraceRecorder> {
+        &self.tracer
+    }
+
+    /// Optimizer statistics for every cached plan, keyed by plan id
+    /// (plans without stats — the fixed inference/fusion operators —
+    /// are skipped).
+    fn plan_opt_stats(&self) -> Vec<(u64, crate::network::OptStats)> {
+        self.plans
+            .plans()
+            .iter()
+            .filter_map(|p| p.opt_stats().map(|s| (p.id(), s.clone())))
+            .collect()
+    }
+
+    /// Prometheus-style text exposition of the current metrics snapshot
+    /// (serving counters, latency/stage quantiles, per-plan summaries,
+    /// optimizer and hardware telemetry).
+    pub fn exposition(&self) -> String {
+        obs::expose::prometheus(&self.metrics.snapshot(), &self.plan_opt_stats())
+    }
+
+    /// JSON flavor of [`Self::exposition`] (same content, one object).
+    pub fn exposition_json(&self) -> String {
+        obs::expose::json(&self.metrics.snapshot(), &self.plan_opt_stats())
+    }
 }
 
 /// The running coordinator (owns the threads).
@@ -214,6 +257,7 @@ impl Coordinator {
             Arc::clone(&metrics),
         ));
         let router = Router::new(config.coordinator.backend);
+        let tracer = Arc::new(TraceRecorder::new(TRACE_RING_CAPACITY));
         let (tx, rx) = mpsc::sync_channel::<Msg>(config.coordinator.queue_capacity);
 
         // Per-worker channels; dispatcher round-robins batches.
@@ -223,13 +267,14 @@ impl Coordinator {
             let (btx, brx) = mpsc::channel::<Batch>();
             worker_txs.push(btx);
             let metrics = Arc::clone(&metrics);
+            let tracer = Arc::clone(&tracer);
             let router = router.clone();
             let config = config.clone();
             // PJRT clients are not Send: each worker builds its own
             // context (bank or runtime) inside its thread.
             workers.push(std::thread::spawn(move || {
                 match WorkerContext::build(&config, &router, w as u64) {
-                    Ok(ctx) => worker_loop(ctx, brx, router, metrics),
+                    Ok(ctx) => worker_loop(ctx, brx, router, metrics, tracer),
                     Err(e) => {
                         // Startup failure: reply the error to every batch.
                         let msg = e.to_string();
@@ -259,6 +304,7 @@ impl Coordinator {
                 next_id: Arc::new(AtomicU64::new(0)),
                 metrics,
                 plans,
+                tracer,
                 backend: config.coordinator.backend,
             },
             dispatcher: Some(dispatcher),
@@ -445,9 +491,10 @@ fn worker_loop(
     rx: mpsc::Receiver<Batch>,
     router: Router,
     metrics: Arc<Metrics>,
+    tracer: Arc<TraceRecorder>,
 ) {
     while let Ok(batch) = rx.recv() {
-        execute_batch(&mut ctx, batch, &router, &metrics);
+        execute_batch(&mut ctx, batch, &router, &metrics, &tracer);
     }
 }
 
@@ -483,7 +530,13 @@ fn stop_policy_for(req: &DecisionRequest) -> StopPolicy {
     }
 }
 
-fn execute_batch(ctx: &mut WorkerContext, batch: Batch, router: &Router, metrics: &Metrics) {
+fn execute_batch(
+    ctx: &mut WorkerContext,
+    mut batch: Batch,
+    router: &Router,
+    metrics: &Metrics,
+    tracer: &TraceRecorder,
+) {
     if batch.is_empty() {
         return;
     }
@@ -498,10 +551,20 @@ fn execute_batch(ctx: &mut WorkerContext, batch: Batch, router: &Router, metrics
             match pool.bank_for(batch.bits) {
                 Ok(bank) => {
                     let full_bits = bank.n_bits();
+                    // The bank's own energy/time ledger is ground truth
+                    // for hardware telemetry: diff it across the batch
+                    // so the exposition's pulsed-bits / wear / energy
+                    // counters match the device model exactly.
+                    let ledger_before = bank.ledger().clone();
                     let results = batch
                         .requests
-                        .iter()
+                        .iter_mut()
                         .map(|req| {
+                            if let Some(trace) = req.trace.as_deref_mut() {
+                                // End of dispatch: the worker picked
+                                // this request up.
+                                trace.stamp(Stage::Dispatch);
+                            }
                             // Already past the deadline with no partial
                             // results allowed: skip the sweep entirely —
                             // a miss must cost nothing, not a discarded
@@ -513,8 +576,16 @@ fn execute_batch(ctx: &mut WorkerContext, batch: Batch, router: &Router, metrics
                             }
                             let stop = stop_policy_for(req);
                             let inputs = plan.bind_inputs(&req.params, inputs_buf);
+                            // Per-stage clock reads only for sampled
+                            // requests: three extra Instant reads would
+                            // be measurable on sub-µs netlists.
+                            evaluator.set_stage_timing(req.trace.is_some());
                             let out = evaluator
                                 .evaluate_anytime(bank, plan.netlist(), inputs, &stop)?;
+                            if let Some(trace) = req.trace.as_deref_mut() {
+                                let s = evaluator.last_stage_ns();
+                                trace.stamp_eval(s.encode_ns, s.sweep_ns, s.readout_ns);
+                            }
                             // Ran out of budget mid-sweep without
                             // permission to return partials: the early
                             // stop saved the wasted bits, but the reply
@@ -527,6 +598,13 @@ fn execute_batch(ctx: &mut WorkerContext, batch: Batch, router: &Router, metrics
                             Ok(out)
                         })
                         .collect();
+                    evaluator.set_stage_timing(false);
+                    let ledger = bank.ledger();
+                    metrics.on_hardware(
+                        ledger.pulses.saturating_sub(ledger_before.pulses),
+                        ledger.switch_events.saturating_sub(ledger_before.switch_events),
+                        (ledger.energy_nj - ledger_before.energy_nj).max(0.0),
+                    );
                     (results, full_bits)
                 }
                 Err(e) => {
@@ -582,7 +660,7 @@ fn execute_batch(ctx: &mut WorkerContext, batch: Batch, router: &Router, metrics
         }
     };
 
-    for (req, result) in batch.requests.into_iter().zip(outcomes) {
+    for (mut req, result) in batch.requests.into_iter().zip(outcomes) {
         let latency = req.enqueued.elapsed();
         let response = match result {
             // Post-hoc miss (queueing or execution overran a deadline
@@ -625,6 +703,14 @@ fn execute_batch(ctx: &mut WorkerContext, batch: Batch, router: &Router, metrics
                 Err(e)
             }
         };
+        if let Some(mut trace) = req.trace.take() {
+            // Reply stamp + forward-fill, then feed the per-stage
+            // histograms and park the trace in the ring — all before
+            // the send so the trace never outlives its request.
+            trace.finish();
+            metrics.on_stage_sample(trace.stamps());
+            tracer.publish(trace);
+        }
         let _ = req.reply.send(response); // caller may have gone away
     }
 }
@@ -1068,6 +1154,52 @@ mod tests {
             "expected a large saving, got {}",
             snap.bits_saved()
         );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn traced_decisions_decompose_and_feed_exposition() {
+        let coord = Coordinator::start(&config(1, 4)).unwrap();
+        let h = coord.handle();
+        h.trace_recorder().set_enabled(true);
+        let plan = h.prepare(PlanSpec::Inference).unwrap();
+        for _ in 0..8 {
+            plan.decide(inference_params()).unwrap();
+        }
+        let traces = h.trace_recorder().snapshot();
+        assert_eq!(traces.len(), 8, "every decision sampled at 1-in-1");
+        for t in &traces {
+            let stamps = t.stamps();
+            let mut prev = 0;
+            for &s in stamps {
+                assert!(s >= prev, "stamps must be monotone: {stamps:?}");
+                prev = s;
+            }
+            // The acceptance invariant: stage durations decompose the
+            // end-to-end latency exactly.
+            let sum: u64 =
+                crate::obs::Stage::ALL.iter().map(|&s| t.stage_ns(s)).sum();
+            assert_eq!(sum, t.end_to_end_ns());
+            assert!(t.end_to_end_ns() > 0);
+            assert!(t.stage_ns(crate::obs::Stage::Sweep) > 0, "sweep span missing: {stamps:?}");
+        }
+        // Traced decisions feed the per-stage histograms and exposition.
+        let snap = h.metrics().snapshot();
+        assert_eq!(snap.stage_hist(crate::obs::Stage::Sweep).count(), 8);
+        assert!(snap.latency_quantile_ns(0.5) > 0);
+        let text = h.exposition();
+        assert!(text.contains("decision_latency_ns{quantile=\"0.99\"}"), "{text}");
+        assert!(text.contains("decision_stage_ns{stage=\"sweep\",quantile=\"0.5\"}"), "{text}");
+        assert!(text.contains("hardware_bits_pulsed_total"), "{text}");
+        let json = h.exposition_json();
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        // The ledger-diff hardware counters advanced: 8 decisions × 100
+        // bits across the plan's streams.
+        assert!(snap.hw_pulses > 0, "hardware pulse telemetry missing");
+        // Untraced requests stay untraced once the recorder is off again.
+        h.trace_recorder().set_enabled(false);
+        plan.decide(inference_params()).unwrap();
+        assert_eq!(h.trace_recorder().snapshot().len(), 8);
         coord.shutdown();
     }
 

@@ -33,6 +33,10 @@
 //! * [`coordinator`] — the plan-centric serving layer (prepare-once /
 //!   decide-many): [`coordinator::PlanCache`], dynamic batcher grouped
 //!   by plan id, worker pool, per-plan policies and metrics.
+//! * [`obs`] — observability: per-stage decision traces with a
+//!   lock-light ring recorder and Chrome `trace_event` export,
+//!   log-bucketed ns histograms (p50/p99/p999), and Prometheus/JSON
+//!   metrics exposition.
 //! * [`figures`] — one harness per paper figure/table (the experiment
 //!   index of `DESIGN.md` §4).
 //!
@@ -58,6 +62,7 @@ pub mod error;
 pub mod figures;
 pub mod logic;
 pub mod network;
+pub mod obs;
 pub mod runtime;
 pub mod scene;
 pub mod stochastic;

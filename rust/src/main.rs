@@ -11,9 +11,16 @@
 //! bayes-mem fuse  --p 0.8 --p 0.7 [...]            one-shot fusion
 //! bayes-mem network --spec net.toml --query A --evidence B=1
 //!                                                  compiled-network query
+//! bayes-mem metrics [--requests N] [--json]        demo load + exposition
 //! bayes-mem artifacts [--dir artifacts]            inspect AOT artifacts
 //! bayes-mem config                                 print an example config
 //! ```
+//!
+//! Observability: `serve` and `parse-video` take `--trace-out FILE`
+//! (Chrome `trace_event` JSON of sampled per-stage decision traces) and
+//! `--metrics-out FILE` (periodically refreshed Prometheus-style
+//! exposition); `metrics` prints the exposition for a self-contained
+//! demo load.
 //!
 //! (Argument parsing and error plumbing are hand-rolled: the offline
 //! build has no clap/anyhow.)
@@ -165,6 +172,7 @@ fn run(args: Vec<String>) -> CliResult<()> {
         "infer" => cmd_infer(&flags),
         "fuse" => cmd_fuse(&flags),
         "network" => cmd_network(&flags),
+        "metrics" => cmd_metrics(&flags),
         "artifacts" => cmd_artifacts(&flags),
         "config" => {
             print!("{}", AppConfig::example_toml());
@@ -185,12 +193,14 @@ USAGE:
                   [--requests N] [--rate-fps F] [--workers N]
                   [--deadline-us N] [--allow-partial] [--bits N]
                   [--threshold P] [--half-width H]
+                  [--trace-out FILE] [--metrics-out FILE]
   bayes-mem parse-scene [--frames N] [--seed N] [--backend native|pjrt]
   bayes-mem parse-video [--frames N] [--scenario NAME | --list-scenarios]
                         [--fps-target F] [--deadline-us N] [--bits N]
                         [--threshold P] [--seed N] [--workers N]
                         [--submitters N] [--batch N] [--inflight N]
                         [--no-anytime] [--strict-deadline]
+                        [--trace-out FILE] [--metrics-out FILE]
   bayes-mem infer --prior P --lik P --lik-not P [--bits N]
                   [--threshold P] [--half-width H]
   bayes-mem fuse --p P --p P [--p P ...] [--bits N]
@@ -198,6 +208,7 @@ USAGE:
   bayes-mem network --spec net.toml --query NODE [--evidence NODE=1 ...]
                     [--bits N] [--seed N] [--threshold P] [--half-width H]
                     [--no-optimize] [--log-domain R]
+  bayes-mem metrics [--requests N] [--workers N] [--json]
   bayes-mem artifacts [--artifacts DIR]
   bayes-mem config
 
@@ -205,6 +216,12 @@ Anytime early exit: --threshold / --half-width stop a decision as soon
 as its Wilson confidence interval clears the threshold or reaches the
 target width; serve's --deadline-us budgets each decision and
 --allow-partial returns best-so-far instead of a deadline error.
+
+Observability: --trace-out FILE dumps sampled per-decision stage spans
+as Chrome trace_event JSON (open in chrome://tracing or Perfetto);
+--metrics-out FILE keeps a Prometheus-style text exposition refreshed
+while the run is live; `metrics` prints the same exposition (text or
+--json) after a short self-contained demo load.
 ";
 
 fn cmd_fig(flags: &Flags) -> CliResult<()> {
@@ -458,6 +475,14 @@ fn cmd_serve(flags: &Flags) -> CliResult<()> {
     );
     let coord = Coordinator::start(&cfg)?;
     let handle = coord.handle();
+    let trace_out = flags.get("trace-out").map(PathBuf::from);
+    let metrics_out = flags.get("metrics-out").map(PathBuf::from);
+    if trace_out.is_some() || metrics_out.is_some() {
+        // Stage quantiles in the exposition are fed by sampled traces,
+        // so both output files want the recorder on.
+        handle.trace_recorder().set_enabled(true);
+    }
+    let metrics_writer = metrics_out.map(|path| spawn_metrics_writer(&handle, path));
     // Prepare once (validation + compilation amortised across the run),
     // then submit per-decision params against the shared plans.
     let inference_plan = handle.prepare(PlanSpec::Inference)?.with_policy(policy);
@@ -502,6 +527,76 @@ fn cmd_serve(flags: &Flags) -> CliResult<()> {
         elapsed.as_secs_f64(),
         snap.completed as f64 / elapsed.as_secs_f64()
     );
+    if let Some(path) = trace_out {
+        let traces = handle.trace_recorder().drain();
+        std::fs::write(&path, bayes_mem::obs::chrome_trace_json(&traces))?;
+        println!("wrote {} decision traces to {}", traces.len(), path.display());
+    }
+    if let Some((stop, join)) = metrics_writer {
+        let _ = stop.send(());
+        let _ = join.join();
+    }
+    coord.shutdown();
+    Ok(())
+}
+
+/// Periodic `--metrics-out` writer: refreshes the exposition file every
+/// 250 ms and once more on stop, so the file is complete even for runs
+/// shorter than one refresh interval.
+fn spawn_metrics_writer(
+    handle: &bayes_mem::coordinator::CoordinatorHandle,
+    path: PathBuf,
+) -> (std::sync::mpsc::Sender<()>, std::thread::JoinHandle<()>) {
+    let handle = handle.clone();
+    let (stop_tx, stop_rx) = std::sync::mpsc::channel::<()>();
+    let join = std::thread::spawn(move || loop {
+        let _ = std::fs::write(&path, handle.exposition());
+        match stop_rx.recv_timeout(Duration::from_millis(250)) {
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+            _ => {
+                let _ = std::fs::write(&path, handle.exposition());
+                break;
+            }
+        }
+    });
+    (stop_tx, join)
+}
+
+/// `metrics`: run a short self-contained demo load (inference + fusion
+/// plans, tracing on so the stage quantiles populate) and print the
+/// exposition — Prometheus-style text by default, JSON with `--json`.
+fn cmd_metrics(flags: &Flags) -> CliResult<()> {
+    let mut cfg = load_config(flags)?;
+    cfg.coordinator.workers = flags.usize_or("workers", cfg.coordinator.workers);
+    let requests = flags.usize_or("requests", 256);
+    let coord = Coordinator::start(&cfg)?;
+    let handle = coord.handle();
+    handle.trace_recorder().set_enabled(true);
+    let inference_plan = handle.prepare(PlanSpec::Inference)?;
+    let fusion_plan = handle.prepare(PlanSpec::Fusion { modalities: 2 })?;
+    let mut pending = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let submitted = if i % 2 == 0 {
+            inference_plan.submit(DecisionParams::Inference {
+                prior: 0.57,
+                likelihood: 0.77,
+                likelihood_not: 0.655,
+            })
+        } else {
+            fusion_plan.submit(DecisionParams::Fusion { posteriors: vec![0.8, 0.7] })
+        };
+        if let Ok(p) = submitted {
+            pending.push(p);
+        }
+    }
+    for p in pending {
+        let _ = p.wait_timeout(Duration::from_secs(30));
+    }
+    if flags.has("json") {
+        print!("{}", handle.exposition_json());
+    } else {
+        print!("{}", handle.exposition());
+    }
     coord.shutdown();
     Ok(())
 }
@@ -540,6 +635,8 @@ fn cmd_parse_video(flags: &Flags) -> CliResult<()> {
         allow_partial: !flags.has("strict-deadline"),
         threshold: flags.f64_or("threshold", defaults.threshold),
         fps_target: (fps > 0.0).then_some(fps),
+        trace: flags.get("trace-out").is_some(),
+        metrics_out: flags.get("metrics-out").map(PathBuf::from),
     };
     println!(
         "parse-video: scenario '{}', {} frames, {} bits/decision, {} workers x {} submitters, \
@@ -557,6 +654,10 @@ fn cmd_parse_video(flags: &Flags) -> CliResult<()> {
     let report = pipeline::run(&cfg)?;
     print!("{}", report.to_table());
     println!("{}", report.snapshot.to_table());
+    if let Some(path) = flags.get("trace-out").map(PathBuf::from) {
+        std::fs::write(&path, bayes_mem::obs::chrome_trace_json(&report.traces))?;
+        println!("wrote {} decision traces to {}", report.traces.len(), path.display());
+    }
     Ok(())
 }
 

@@ -256,10 +256,43 @@ pub struct NetworkPosterior {
     pub marginal: f64,
 }
 
+/// Per-stage wall-clock durations of the evaluator's most recent call,
+/// in ns — only populated while
+/// [`NetlistEvaluator::set_stage_timing`] is on (the serving layer
+/// enables it per *traced* request; three extra clock reads per chunk
+/// would be measurable on sub-µs netlists otherwise). Durations, not
+/// offsets: the caller lays them onto its own trace timeline.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EvalStageNs {
+    /// SNE bitstream encode (grouped or chunked; includes encode setup).
+    pub encode_ns: u64,
+    /// Word-parallel gate sweep across all chunks.
+    pub sweep_ns: u64,
+    /// CORDIV accumulate + posterior readout.
+    pub readout_ns: u64,
+}
+
 /// Reusable netlist evaluator (owns the packed scratch buffer).
 #[derive(Debug, Default)]
 pub struct NetlistEvaluator {
     scratch: Vec<u64>,
+    stage_timing: bool,
+    stage_ns: EvalStageNs,
+}
+
+/// Advance a lap clock, returning the ns since the previous lap (0 when
+/// timing is off, i.e. `clock` is `None`).
+#[inline]
+fn lap_ns(clock: &mut Option<Instant>) -> u64 {
+    match clock {
+        Some(t) => {
+            let now = Instant::now();
+            let ns = u64::try_from(now.duration_since(*t).as_nanos()).unwrap_or(u64::MAX);
+            *t = now;
+            ns
+        }
+        None => 0,
+    }
 }
 
 impl NetlistEvaluator {
@@ -267,6 +300,29 @@ impl NetlistEvaluator {
     /// netlist, then is reused).
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Turn per-stage wall-clock timing on or off (off by default — the
+    /// timed path pays a few `Instant` reads per chunk).
+    pub fn set_stage_timing(&mut self, on: bool) {
+        self.stage_timing = on;
+    }
+
+    /// Stage durations of the most recent evaluation (zeros unless
+    /// [`Self::set_stage_timing`] was on for that call).
+    pub fn last_stage_ns(&self) -> EvalStageNs {
+        self.stage_ns
+    }
+
+    /// Reset the stage counters and start a lap clock when timing is on.
+    #[inline]
+    fn start_clock(&mut self) -> Option<Instant> {
+        if self.stage_timing {
+            self.stage_ns = EvalStageNs::default();
+            Some(Instant::now())
+        } else {
+            None
+        }
     }
 
     /// Evaluate word-parallel on `bank`: one grouped encode, one bitwise
@@ -293,6 +349,7 @@ impl NetlistEvaluator {
         let w = n_bits.div_ceil(64);
         self.scratch.resize(netlist.n_slots() * w, 0);
         let n_in = inputs.len();
+        let mut clock = self.start_clock();
         if let Err(e) = bank.encode_group_into(inputs, &mut self.scratch[..n_in * w]) {
             // Inputs were pre-validated, so a failure here means the
             // encode itself aborted mid-group (device wear): some streams
@@ -302,7 +359,9 @@ impl NetlistEvaluator {
             bank.finish_decision();
             return Err(e);
         }
+        self.stage_ns.encode_ns = lap_ns(&mut clock);
         run_gates(&mut self.scratch, netlist.ops(), w, w, Some(tail_word_mask(n_bits)));
+        self.stage_ns.sweep_ns = lap_ns(&mut clock);
         // CORDIV readout over the num/den taps, accumulating popcounts.
         let mut dff = false;
         let (mut q_ones, mut d_ones) = (0u64, 0u64);
@@ -318,6 +377,7 @@ impl NetlistEvaluator {
             &mut d_ones,
         );
         bank.finish_decision();
+        self.stage_ns.readout_ns = lap_ns(&mut clock);
         Ok(NetworkPosterior {
             posterior: q_ones as f64 / n_bits as f64,
             marginal: d_ones as f64 / n_bits as f64,
@@ -364,6 +424,7 @@ impl NetlistEvaluator {
         // staged nonideal path `begin_group_chunks` walks every pulse,
         // and that time must count against the deadline.
         let started = budget.map(|_| Instant::now());
+        let mut clock = self.start_clock();
         let mut enc = match bank.begin_group_chunks(inputs) {
             Ok(enc) => enc,
             Err(e) => {
@@ -384,6 +445,10 @@ impl NetlistEvaluator {
         let mut chunks = 0u32;
         loop {
             let words = bank.encode_group_chunk_into(&mut enc, &mut self.scratch[..n_in * cw])?;
+            // Lap accounting: stop-criterion checks at the bottom of the
+            // loop are a handful of flops and fold into the next encode
+            // lap rather than paying their own clock read.
+            self.stage_ns.encode_ns = self.stage_ns.encode_ns.saturating_add(lap_ns(&mut clock));
             if words == 0 {
                 break;
             }
@@ -392,6 +457,7 @@ impl NetlistEvaluator {
             let chunk_bits = if is_tail { n_bits - bits_done } else { words * 64 };
             let tail = is_tail.then(|| tail_word_mask(n_bits));
             run_gates(&mut self.scratch, netlist.ops(), cw, words, tail);
+            self.stage_ns.sweep_ns = self.stage_ns.sweep_ns.saturating_add(lap_ns(&mut clock));
             cordiv_accumulate(
                 &self.scratch,
                 num,
@@ -403,6 +469,8 @@ impl NetlistEvaluator {
                 &mut q_ones,
                 &mut d_ones,
             );
+            self.stage_ns.readout_ns =
+                self.stage_ns.readout_ns.saturating_add(lap_ns(&mut clock));
             bits_done += chunk_bits;
             if bits_done >= n_bits {
                 break; // Exhausted — identical to the full sweep.
@@ -436,6 +504,7 @@ impl NetlistEvaluator {
         // begin — energy and time stay mutually consistent).
         let bits_pulsed = enc.bits_pulsed();
         bank.finish_decision_bits(bits_pulsed);
+        self.stage_ns.readout_ns = self.stage_ns.readout_ns.saturating_add(lap_ns(&mut clock));
         Ok(AnytimePosterior {
             posterior: q_ones as f64 / bits_done as f64,
             marginal: d_ones as f64 / bits_done as f64,
@@ -720,6 +789,37 @@ mod tests {
         // The virtual clock reflects only the bits actually streamed.
         let expect_ns = crate::device::DeviceParams::BIT_PERIOD_NS * any.bits_used as f64;
         assert!((b.ledger().clock.elapsed_ns() - expect_ns).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stage_timing_populates_only_when_enabled_and_never_perturbs_results() {
+        let net = diamond();
+        let nl = compile_query(&net, "a", &[("d", true)]).unwrap();
+        let mut eval = NetlistEvaluator::new();
+        // Off (default): stage durations stay zero.
+        let mut b = bank(4096, 23);
+        let plain = eval.evaluate(&mut b, &nl).unwrap();
+        assert_eq!(eval.last_stage_ns(), EvalStageNs::default());
+        // On: every stage gets a duration, full sweep and anytime alike.
+        eval.set_stage_timing(true);
+        let mut b2 = bank(4096, 23);
+        let timed = eval.evaluate(&mut b2, &nl).unwrap();
+        assert_eq!(timed, plain, "timing must not perturb the result");
+        let s = eval.last_stage_ns();
+        assert!(s.encode_ns > 0, "encode span missing: {s:?}");
+        assert!(s.sweep_ns > 0, "sweep span missing: {s:?}");
+        let mut b3 = bank(4096, 23);
+        let any = eval
+            .evaluate_anytime(&mut b3, &nl, nl.inputs(), &StopPolicy::Never)
+            .unwrap();
+        assert_eq!(any.posterior, plain.posterior);
+        let s = eval.last_stage_ns();
+        assert!(s.encode_ns > 0 && s.sweep_ns > 0, "{s:?}");
+        // Off again: counters reset on the next timed call only, and the
+        // untimed call leaves results identical.
+        eval.set_stage_timing(false);
+        let mut b4 = bank(4096, 23);
+        assert_eq!(eval.evaluate(&mut b4, &nl).unwrap(), plain);
     }
 
     #[test]

@@ -76,7 +76,7 @@ pub use compile::{
     check_evidence, check_query_evidence, compile, compile_query, GateOp, Netlist,
 };
 pub use eval::{
-    AnytimePosterior, NetlistEvaluator, NetworkPosterior, StopPolicy, StopReason,
+    AnytimePosterior, EvalStageNs, NetlistEvaluator, NetworkPosterior, StopPolicy, StopReason,
     ANYTIME_CHUNK_WORDS, ANYTIME_Z, MIN_ANYTIME_BITS,
 };
 pub use exact::{

@@ -1,0 +1,343 @@
+//! Metrics exposition: render a [`MetricsSnapshot`] (plus optional
+//! per-plan optimizer stats) as Prometheus-style text or JSON.
+//!
+//! Zero-dependency, hand-rolled encoders in the spirit of the rest of
+//! the crate. The text format follows Prometheus conventions —
+//! `# TYPE` comments, `_total` counters, summary quantile labels —
+//! closely enough to scrape-and-grep:
+//!
+//! ```text
+//! decision_latency_ns{quantile="0.99"} 409599
+//! decision_stage_ns{stage="sweep",quantile="0.5"} 2047
+//! hardware_wear_events_total 182
+//! ```
+//!
+//! Quantiles carry the log-bucket semantics of
+//! [`crate::obs::NsHistogram::quantile_ns`]: each value is the upper
+//! bound of the power-of-two bucket holding that quantile.
+
+use crate::coordinator::{KindTag, MetricsSnapshot};
+use crate::network::OptStats;
+use crate::obs::{NsHistogram, Stage};
+
+const QUANTILES: [(f64, &str); 3] = [(0.5, "0.5"), (0.99, "0.99"), (0.999, "0.999")];
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".to_string()
+    } else if v.is_infinite() {
+        if v > 0.0 { "+Inf".to_string() } else { "-Inf".to_string() }
+    } else if v == v.trunc() && v.abs() < 1e15 {
+        format!("{v:.0}")
+    } else {
+        format!("{v}")
+    }
+}
+
+fn summary(out: &mut String, name: &str, labels: &str, hist: &NsHistogram) {
+    let sep = if labels.is_empty() { "" } else { "," };
+    for (q, label) in QUANTILES {
+        out.push_str(&format!(
+            "{name}{{{labels}{sep}quantile=\"{label}\"}} {}\n",
+            hist.quantile_ns(q)
+        ));
+    }
+    if labels.is_empty() {
+        out.push_str(&format!("{name}_sum {}\n", hist.sum));
+        out.push_str(&format!("{name}_count {}\n", hist.count()));
+    } else {
+        out.push_str(&format!("{name}_sum{{{labels}}} {}\n", hist.sum));
+        out.push_str(&format!("{name}_count{{{labels}}} {}\n", hist.count()));
+    }
+}
+
+/// Render the snapshot as Prometheus-style text. `opt_stats` carries
+/// `(plan_id, OptStats)` rows for plans whose netlist the optimizer
+/// touched (see `PreparedPlan::opt_stats`); pass `&[]` when
+/// unavailable.
+pub fn prometheus(snap: &MetricsSnapshot, opt_stats: &[(u64, OptStats)]) -> String {
+    let mut out = String::with_capacity(4096);
+
+    out.push_str("# TYPE decisions_submitted_total counter\n");
+    out.push_str(&format!("decisions_submitted_total {}\n", snap.submitted));
+    out.push_str("# TYPE decisions_completed_total counter\n");
+    out.push_str(&format!("decisions_completed_total {}\n", snap.completed));
+    for (kind, label) in
+        [(KindTag::Inference, "inference"), (KindTag::Fusion, "fusion"), (KindTag::Network, "network")]
+    {
+        out.push_str(&format!(
+            "decisions_completed_total{{kind=\"{label}\"}} {}\n",
+            snap.completed_for(kind)
+        ));
+    }
+    out.push_str("# TYPE decisions_rejected_total counter\n");
+    out.push_str(&format!("decisions_rejected_total {}\n", snap.rejected));
+    out.push_str("# TYPE decisions_blocked_total counter\n");
+    out.push_str(&format!("decisions_blocked_total {}\n", snap.blocked));
+    out.push_str("# TYPE decisions_failed_total counter\n");
+    out.push_str(&format!("decisions_failed_total {}\n", snap.failed));
+    out.push_str("# TYPE decisions_deadline_missed_total counter\n");
+    out.push_str(&format!("decisions_deadline_missed_total {}\n", snap.deadline_missed));
+
+    out.push_str("# TYPE batches_total counter\n");
+    out.push_str(&format!("batches_total {}\n", snap.batches));
+    out.push_str("# TYPE batched_requests_total counter\n");
+    out.push_str(&format!("batched_requests_total {}\n", snap.batched_requests));
+
+    out.push_str("# TYPE plan_cache_hits_total counter\n");
+    out.push_str(&format!("plan_cache_hits_total {}\n", snap.plan_hits));
+    out.push_str("# TYPE plan_cache_misses_total counter\n");
+    out.push_str(&format!("plan_cache_misses_total {}\n", snap.plan_misses));
+
+    out.push_str("# TYPE anytime_early_exits_total counter\n");
+    for (i, reason) in ["reliable", "converged", "timely"].iter().enumerate() {
+        out.push_str(&format!(
+            "anytime_early_exits_total{{reason=\"{reason}\"}} {}\n",
+            snap.early_exits[i]
+        ));
+    }
+    out.push_str("# TYPE bits_streamed_total counter\n");
+    out.push_str(&format!("bits_streamed_total {}\n", snap.bits_used_sum));
+    out.push_str("# TYPE bits_full_sweep_total counter\n");
+    out.push_str(&format!("bits_full_sweep_total {}\n", snap.bits_full_sum));
+
+    out.push_str("# TYPE decision_latency_ns summary\n");
+    summary(&mut out, "decision_latency_ns", "", &snap.latency_hist);
+
+    out.push_str("# TYPE decision_stage_ns summary\n");
+    for stage in Stage::ALL {
+        summary(
+            &mut out,
+            "decision_stage_ns",
+            &format!("stage=\"{}\"", stage.name()),
+            snap.stage_hist(stage),
+        );
+    }
+
+    out.push_str("# TYPE plan_decision_latency_ns summary\n");
+    for plan in &snap.per_plan {
+        let labels = format!("plan=\"{}\"", plan.plan_id);
+        for (label, v) in [("0.5", plan.p50_ns), ("0.99", plan.p99_ns), ("0.999", plan.p999_ns)] {
+            out.push_str(&format!(
+                "plan_decision_latency_ns{{{labels},quantile=\"{label}\"}} {v}\n"
+            ));
+        }
+        out.push_str(&format!(
+            "plan_decision_latency_ns_sum{{{labels}}} {}\n",
+            plan.latency_ns_sum
+        ));
+        out.push_str(&format!("plan_decision_latency_ns_count{{{labels}}} {}\n", plan.completed));
+    }
+
+    out.push_str("# TYPE hardware_time_ns_total counter\n");
+    out.push_str(&format!("hardware_time_ns_total {}\n", snap.hardware_ns));
+    out.push_str("# TYPE hardware_bits_pulsed_total counter\n");
+    out.push_str(&format!("hardware_bits_pulsed_total {}\n", snap.hw_pulses));
+    out.push_str("# TYPE hardware_wear_events_total counter\n");
+    out.push_str(&format!("hardware_wear_events_total {}\n", snap.hw_switch_events));
+    out.push_str("# TYPE hardware_energy_nj_total counter\n");
+    out.push_str(&format!("hardware_energy_nj_total {}\n", fmt_f64(snap.hw_energy_nj)));
+    out.push_str("# TYPE hardware_virtual_fps gauge\n");
+    out.push_str(&format!("hardware_virtual_fps {}\n", fmt_f64(snap.virtual_fps())));
+
+    if !opt_stats.is_empty() {
+        out.push_str("# TYPE plan_optimizer_gates gauge\n");
+        out.push_str("# TYPE plan_optimizer_streams gauge\n");
+        for (plan_id, stats) in opt_stats {
+            out.push_str(&format!(
+                "plan_optimizer_gates{{plan=\"{plan_id}\",phase=\"before\"}} {}\n",
+                stats.gates_before
+            ));
+            out.push_str(&format!(
+                "plan_optimizer_gates{{plan=\"{plan_id}\",phase=\"after\"}} {}\n",
+                stats.gates_after
+            ));
+            out.push_str(&format!(
+                "plan_optimizer_streams{{plan=\"{plan_id}\",phase=\"before\"}} {}\n",
+                stats.streams_before
+            ));
+            out.push_str(&format!(
+                "plan_optimizer_streams{{plan=\"{plan_id}\",phase=\"after\"}} {}\n",
+                stats.streams_after
+            ));
+        }
+    }
+    out
+}
+
+fn json_hist(hist: &NsHistogram) -> String {
+    format!(
+        "{{\"p50_ns\":{},\"p99_ns\":{},\"p999_ns\":{},\"sum_ns\":{},\"count\":{}}}",
+        hist.p50_ns(),
+        hist.p99_ns(),
+        hist.p999_ns(),
+        hist.sum,
+        hist.count()
+    )
+}
+
+/// Render the snapshot as a single JSON object (same content as
+/// [`prometheus`], machine-shaped).
+pub fn json(snap: &MetricsSnapshot, opt_stats: &[(u64, OptStats)]) -> String {
+    let mut out = String::with_capacity(4096);
+    out.push_str("{\n");
+    out.push_str(&format!(
+        "  \"submitted\": {}, \"completed\": {}, \"rejected\": {}, \"blocked\": {}, \
+         \"failed\": {}, \"deadline_missed\": {},\n",
+        snap.submitted, snap.completed, snap.rejected, snap.blocked, snap.failed,
+        snap.deadline_missed
+    ));
+    out.push_str(&format!(
+        "  \"completed_by_kind\": {{\"inference\": {}, \"fusion\": {}, \"network\": {}}},\n",
+        snap.completed_for(KindTag::Inference),
+        snap.completed_for(KindTag::Fusion),
+        snap.completed_for(KindTag::Network)
+    ));
+    out.push_str(&format!(
+        "  \"batches\": {}, \"batched_requests\": {},\n",
+        snap.batches, snap.batched_requests
+    ));
+    out.push_str(&format!(
+        "  \"plan_cache\": {{\"hits\": {}, \"misses\": {}}},\n",
+        snap.plan_hits, snap.plan_misses
+    ));
+    out.push_str(&format!(
+        "  \"anytime\": {{\"reliable\": {}, \"converged\": {}, \"timely\": {}, \
+         \"bits_streamed\": {}, \"bits_full\": {}}},\n",
+        snap.early_exits[0],
+        snap.early_exits[1],
+        snap.early_exits[2],
+        snap.bits_used_sum,
+        snap.bits_full_sum
+    ));
+    out.push_str(&format!("  \"latency_ns\": {},\n", json_hist(&snap.latency_hist)));
+    out.push_str("  \"stages\": {\n");
+    for (i, stage) in Stage::ALL.iter().enumerate() {
+        let comma = if i + 1 < Stage::ALL.len() { "," } else { "" };
+        out.push_str(&format!(
+            "    \"{}\": {}{comma}\n",
+            stage.name(),
+            json_hist(snap.stage_hist(*stage))
+        ));
+    }
+    out.push_str("  },\n");
+    out.push_str("  \"per_plan\": [");
+    for (i, plan) in snap.per_plan.iter().enumerate() {
+        let comma = if i + 1 < snap.per_plan.len() { "," } else { "" };
+        out.push_str(&format!(
+            "\n    {{\"plan\": {}, \"completed\": {}, \"latency_ns_sum\": {}, \
+             \"p50_ns\": {}, \"p99_ns\": {}, \"p999_ns\": {}}}{comma}",
+            plan.plan_id, plan.completed, plan.latency_ns_sum, plan.p50_ns, plan.p99_ns,
+            plan.p999_ns
+        ));
+    }
+    out.push_str("\n  ],\n");
+    out.push_str(&format!(
+        "  \"hardware\": {{\"time_ns\": {}, \"bits_pulsed\": {}, \"wear_events\": {}, \
+         \"energy_nj\": {}, \"virtual_fps\": {}}},\n",
+        snap.hardware_ns,
+        snap.hw_pulses,
+        snap.hw_switch_events,
+        fmt_f64(snap.hw_energy_nj),
+        fmt_f64(snap.virtual_fps())
+    ));
+    out.push_str("  \"optimizer\": [");
+    for (i, (plan_id, stats)) in opt_stats.iter().enumerate() {
+        let comma = if i + 1 < opt_stats.len() { "," } else { "" };
+        out.push_str(&format!(
+            "\n    {{\"plan\": {plan_id}, \"gates_before\": {}, \"gates_after\": {}, \
+             \"streams_before\": {}, \"streams_after\": {}}}{comma}",
+            stats.gates_before, stats.gates_after, stats.streams_before, stats.streams_after
+        ));
+    }
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Metrics;
+    use crate::network::StopReason;
+    use std::time::Duration;
+
+    fn demo_snapshot() -> MetricsSnapshot {
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_submit();
+        m.on_batch(2);
+        m.on_complete(Duration::from_micros(120), 400_000.0, KindTag::Inference);
+        m.on_complete(Duration::from_micros(80), 400_000.0, KindTag::Fusion);
+        m.on_plan_complete(3, Duration::from_micros(120));
+        m.on_anytime(StopReason::Reliable, 256, 16_384);
+        m.on_stage_sample(&[100, 500, 500, 1_000, 1_200, 2_200, 2_250, 3_000]);
+        m.on_hardware(200, 90, 2.5);
+        m.snapshot()
+    }
+
+    #[test]
+    fn prometheus_text_has_quantile_lines_for_every_stage() {
+        let text = prometheus(&demo_snapshot(), &[]);
+        assert!(text.contains("decisions_completed_total 2"), "{text}");
+        for q in ["0.5", "0.99", "0.999"] {
+            assert!(text.contains(&format!("decision_latency_ns{{quantile=\"{q}\"}}")), "{text}");
+        }
+        for stage in Stage::ALL {
+            for q in ["0.5", "0.99", "0.999"] {
+                let line =
+                    format!("decision_stage_ns{{stage=\"{}\",quantile=\"{q}\"}}", stage.name());
+                assert!(text.contains(&line), "missing {line} in:\n{text}");
+            }
+        }
+        assert!(text.contains("plan_decision_latency_ns{plan=\"3\",quantile=\"0.99\"}"), "{text}");
+        assert!(text.contains("hardware_bits_pulsed_total 200"), "{text}");
+        assert!(text.contains("hardware_wear_events_total 90"), "{text}");
+        assert!(text.contains("hardware_energy_nj_total 2.5"), "{text}");
+        assert!(text.contains("anytime_early_exits_total{reason=\"reliable\"} 1"), "{text}");
+        // Every non-comment line is "name{labels} value" or "name value".
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let (_, value) = line.rsplit_once(' ').expect("line has a value");
+            assert!(
+                value.parse::<f64>().is_ok() || value == "+Inf",
+                "unparseable value in line: {line}"
+            );
+        }
+    }
+
+    #[test]
+    fn prometheus_includes_optimizer_stats_when_given() {
+        let stats = OptStats {
+            streams_before: 20,
+            gates_before: 120,
+            streams_after: 12,
+            gates_after: 40,
+            passes: Vec::new(),
+        };
+        let text = prometheus(&demo_snapshot(), &[(7, stats)]);
+        assert!(text.contains("plan_optimizer_gates{plan=\"7\",phase=\"before\"} 120"), "{text}");
+        assert!(text.contains("plan_optimizer_gates{plan=\"7\",phase=\"after\"} 40"), "{text}");
+        assert!(text.contains("plan_optimizer_streams{plan=\"7\",phase=\"after\"} 12"), "{text}");
+    }
+
+    #[test]
+    fn json_is_balanced_and_carries_stage_quantiles() {
+        let text = json(&demo_snapshot(), &[]);
+        assert_eq!(text.matches('{').count(), text.matches('}').count(), "{text}");
+        assert_eq!(text.matches('[').count(), text.matches(']').count(), "{text}");
+        assert!(text.contains("\"sweep\": {\"p50_ns\":"), "{text}");
+        assert!(text.contains("\"per_plan\": ["), "{text}");
+        assert!(text.contains("\"wear_events\": 90"), "{text}");
+        assert!(!text.contains("NaN"), "empty-fps snapshots must not emit NaN: {text}");
+    }
+
+    #[test]
+    fn empty_snapshot_exposes_cleanly() {
+        let snap = Metrics::new().snapshot();
+        let text = prometheus(&snap, &[]);
+        assert!(text.contains("decision_latency_ns{quantile=\"0.999\"} 0"), "{text}");
+        assert!(text.contains("hardware_virtual_fps 0"), "{text}");
+        let j = json(&snap, &[]);
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert!(!j.contains("NaN"));
+    }
+}

@@ -1,0 +1,284 @@
+//! Log-bucketed nanosecond histograms with quantile readout.
+//!
+//! The serving layer previously kept mean-only latency sums plus one
+//! coarse µs bucket table. These histograms replace that with power-of-two
+//! ns buckets: bucket `i` holds samples whose bit width is `i` (i.e.
+//! `v ∈ [2^(i-1), 2^i)`), so the full `u64` ns range is covered by 64
+//! counters and recording is a `leading_zeros` plus one relaxed
+//! `fetch_add` — cheap enough to sit on the completion path of every
+//! decision. Quantiles are read out as the **upper bound of the bucket**
+//! containing the requested rank (same convention as the legacy µs
+//! buckets): `quantile_ns(0.99)` answers "p99 was at most this many ns",
+//! with factor-of-two resolution.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of power-of-two buckets (one per possible `u64` bit width,
+/// plus bucket 0 for exact zeros).
+pub const NS_BUCKETS: usize = 64;
+
+/// Bucket index for a nanosecond sample: 0 for 0, otherwise the bit
+/// width of the value, clamped into the table.
+#[inline]
+pub fn bucket_index(ns: u64) -> usize {
+    ((64 - ns.leading_zeros()) as usize).min(NS_BUCKETS - 1)
+}
+
+/// Inclusive upper bound of bucket `index` (`u64::MAX` for the last
+/// bucket, which also absorbs the clamp in [`bucket_index`]).
+#[inline]
+pub fn bucket_upper_bound(index: usize) -> u64 {
+    if index >= NS_BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << index) - 1
+    }
+}
+
+/// Add `v` to an atomic counter, sticking at `u64::MAX` instead of
+/// wrapping — long-soak accumulators (ns sums, pulse counts) must never
+/// roll over into nonsense.
+pub fn saturating_fetch_add(counter: &AtomicU64, v: u64) {
+    if v == 0 {
+        return;
+    }
+    let mut cur = counter.load(Ordering::Relaxed);
+    loop {
+        let next = cur.saturating_add(v);
+        match counter.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(actual) => cur = actual,
+        }
+    }
+}
+
+/// Round a floating-point nanosecond quantity to `u64`, saturating at
+/// the ends and mapping NaN / negatives to 0 (rather than the UB-ish
+/// `as` truncation it replaces).
+#[inline]
+pub fn saturating_ns_from_f64(ns: f64) -> u64 {
+    if !(ns > 0.0) {
+        return 0;
+    }
+    let r = ns.round();
+    if r >= u64::MAX as f64 {
+        u64::MAX
+    } else {
+        r as u64
+    }
+}
+
+/// Lock-free histogram: relaxed atomic bucket counters plus a
+/// saturating ns sum. Writers never block; readers take a point-in-time
+/// [`NsHistogram`] via [`snapshot`](Self::snapshot) (relaxed, so a
+/// snapshot racing a writer may be mid-update by a single sample —
+/// totals are exact once writers quiesce).
+#[derive(Debug)]
+pub struct AtomicNsHistogram {
+    counts: [AtomicU64; NS_BUCKETS],
+    sum: AtomicU64,
+}
+
+impl Default for AtomicNsHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AtomicNsHistogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Self { counts: std::array::from_fn(|_| AtomicU64::new(0)), sum: AtomicU64::new(0) }
+    }
+
+    /// Record one sample of `ns` nanoseconds.
+    #[inline]
+    pub fn record(&self, ns: u64) {
+        self.counts[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        saturating_fetch_add(&self.sum, ns);
+    }
+
+    /// Point-in-time copy of the counters.
+    pub fn snapshot(&self) -> NsHistogram {
+        NsHistogram {
+            counts: std::array::from_fn(|i| self.counts[i].load(Ordering::Relaxed)),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain (non-atomic) histogram: the snapshot type of
+/// [`AtomicNsHistogram`], and the mutable form used for per-plan rows
+/// that already live under the metrics registry's table mutex.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NsHistogram {
+    /// Per-bucket sample counts (bucket `i` per [`bucket_index`]).
+    pub counts: [u64; NS_BUCKETS],
+    /// Saturating sum of all recorded nanoseconds.
+    pub sum: u64,
+}
+
+impl Default for NsHistogram {
+    fn default() -> Self {
+        Self { counts: [0; NS_BUCKETS], sum: 0 }
+    }
+}
+
+impl NsHistogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample of `ns` nanoseconds.
+    #[inline]
+    pub fn record(&mut self, ns: u64) {
+        self.counts[bucket_index(ns)] += 1;
+        self.sum = self.sum.saturating_add(ns);
+    }
+
+    /// Total number of recorded samples (saturating).
+    pub fn count(&self) -> u64 {
+        self.counts.iter().fold(0u64, |acc, &c| acc.saturating_add(c))
+    }
+
+    /// True when no samples have been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.counts.iter().all(|&c| c == 0)
+    }
+
+    /// Mean sample in nanoseconds (0.0 when empty).
+    pub fn mean_ns(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum as f64 / n as f64
+        }
+    }
+
+    /// Upper bound (ns) of the bucket holding the `q`-quantile sample —
+    /// "the q-quantile was at most this". `q` is clamped to `[0, 1]`;
+    /// returns 0 for an empty histogram.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen = seen.saturating_add(c);
+            if seen >= rank {
+                return bucket_upper_bound(i);
+            }
+        }
+        bucket_upper_bound(NS_BUCKETS - 1)
+    }
+
+    /// Median upper bound in ns.
+    pub fn p50_ns(&self) -> u64 {
+        self.quantile_ns(0.5)
+    }
+
+    /// 99th-percentile upper bound in ns.
+    pub fn p99_ns(&self) -> u64 {
+        self.quantile_ns(0.99)
+    }
+
+    /// 99.9th-percentile upper bound in ns.
+    pub fn p999_ns(&self) -> u64 {
+        self.quantile_ns(0.999)
+    }
+
+    /// Fold another histogram into this one (bucket-wise, saturating).
+    pub fn merge(&mut self, other: &NsHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a = a.saturating_add(*b);
+        }
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges_are_powers_of_two() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(1023), 10);
+        assert_eq!(bucket_index(1024), 11);
+        assert_eq!(bucket_index(u64::MAX), NS_BUCKETS - 1);
+        // Every value lands in a bucket whose bound contains it.
+        for v in [0u64, 1, 7, 100, 4096, 1 << 40, u64::MAX] {
+            assert!(v <= bucket_upper_bound(bucket_index(v)));
+        }
+    }
+
+    #[test]
+    fn quantiles_are_monotone_and_bound_samples() {
+        let mut h = NsHistogram::new();
+        for v in [100u64, 200, 400, 800, 100_000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum, 101_500);
+        let p50 = h.p50_ns();
+        let p99 = h.p99_ns();
+        let p999 = h.p999_ns();
+        assert!(p50 <= p99 && p99 <= p999);
+        assert!(p50 >= 400, "median sample 400 must be within its bucket bound");
+        assert!(p999 >= 100_000);
+        assert_eq!(h.quantile_ns(0.0), h.quantile_ns(1.0 / 5.0));
+    }
+
+    #[test]
+    fn empty_histogram_is_safe() {
+        let h = NsHistogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_ns(0.5), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+    }
+
+    #[test]
+    fn atomic_and_plain_agree() {
+        let a = AtomicNsHistogram::new();
+        let mut p = NsHistogram::new();
+        for v in 0..2000u64 {
+            a.record(v * 37);
+            p.record(v * 37);
+        }
+        assert_eq!(a.snapshot(), p);
+    }
+
+    #[test]
+    fn saturating_helpers_do_not_wrap() {
+        let c = AtomicU64::new(u64::MAX - 1);
+        saturating_fetch_add(&c, 10);
+        assert_eq!(c.load(Ordering::Relaxed), u64::MAX);
+        assert_eq!(saturating_ns_from_f64(-1.0), 0);
+        assert_eq!(saturating_ns_from_f64(f64::NAN), 0);
+        assert_eq!(saturating_ns_from_f64(0.4), 0);
+        assert_eq!(saturating_ns_from_f64(0.6), 1);
+        assert_eq!(saturating_ns_from_f64(1e30), u64::MAX);
+        assert_eq!(saturating_ns_from_f64(1234.4), 1234);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = NsHistogram::new();
+        let mut b = NsHistogram::new();
+        a.record(10);
+        b.record(10_000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.sum, 10_010);
+    }
+}

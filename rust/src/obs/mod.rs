@@ -1,0 +1,37 @@
+//! Observability: stage-level decision tracing, log-bucketed ns
+//! histograms, and metrics exposition.
+//!
+//! Zero-dependency telemetry for the serving layer, in three pieces:
+//!
+//! * [`histogram`] — power-of-two-bucket nanosecond histograms with
+//!   p50/p99/p999 readout ([`NsHistogram`] / [`AtomicNsHistogram`]),
+//!   plus the saturating-accumulation helpers the metrics registry
+//!   builds on.
+//! * [`trace`] + [`ring`] — a [`DecisionTrace`] rides each sampled
+//!   request from admission to reply, stamping monotonic-ns offsets at
+//!   every [`Stage`] boundary; finished traces land in a fixed-capacity
+//!   lock-light [`TraceRecorder`] ring (publishers **drop on
+//!   contention**, never block) and export to Chrome `trace_event` JSON
+//!   ([`chrome_trace_json`], loadable in `chrome://tracing` /
+//!   Perfetto). The CLI surface is `--trace-out` on `serve` /
+//!   `parse-video`.
+//! * [`expose`] — `MetricsSnapshot` → Prometheus-style text / JSON
+//!   encoders (`bayes-mem metrics`, `--metrics-out`).
+//!
+//! Instrumentation is compiled in but off by default: an untraced
+//! request costs one relaxed atomic load at admission and a handful of
+//! branch checks along the path (the coordinator bench exports
+//! `trace_overhead_pct` pinning the disabled-tracing overhead on the
+//! word-parallel sweep path at ≤ 2%).
+
+pub mod expose;
+pub mod histogram;
+pub mod ring;
+pub mod trace;
+
+pub use histogram::{
+    bucket_index, bucket_upper_bound, saturating_fetch_add, saturating_ns_from_f64,
+    AtomicNsHistogram, NsHistogram, NS_BUCKETS,
+};
+pub use ring::{TraceRecorder, TRACE_RING_CAPACITY};
+pub use trace::{chrome_trace_json, DecisionTrace, Stage};

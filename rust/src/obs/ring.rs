@@ -1,0 +1,240 @@
+//! Fixed-capacity, lock-light trace ring buffer with sampling.
+//!
+//! The recorder sits between the decision hot path and trace consumers.
+//! Its contract: **never block or slow the hot path**. Admission decides
+//! once per request whether a trace exists at all
+//! ([`try_begin`](TraceRecorder::try_begin) — disabled or unsampled
+//! requests pay one relaxed atomic load); publishing a finished trace
+//! uses `try_lock` and *drops the trace* on contention rather than
+//! waiting (counted in [`dropped`](TraceRecorder::dropped)). The ring
+//! keeps the most recent `capacity` traces, evicting the oldest.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::trace::DecisionTrace;
+
+/// Default ring capacity used by the coordinator.
+pub const TRACE_RING_CAPACITY: usize = 4096;
+
+/// Sampling trace recorder over a bounded ring of [`DecisionTrace`]s.
+#[derive(Debug)]
+pub struct TraceRecorder {
+    epoch: Instant,
+    enabled: AtomicBool,
+    sample_every: AtomicU64,
+    started: AtomicU64,
+    dropped: AtomicU64,
+    evicted: AtomicU64,
+    capacity: usize,
+    ring: Mutex<VecDeque<DecisionTrace>>,
+}
+
+impl TraceRecorder {
+    /// Recorder holding at most `capacity` traces (min 1), **disabled**
+    /// by default and sampling every decision once enabled.
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        Self {
+            epoch: Instant::now(),
+            enabled: AtomicBool::new(false),
+            sample_every: AtomicU64::new(1),
+            started: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            evicted: AtomicU64::new(0),
+            capacity,
+            ring: Mutex::new(VecDeque::with_capacity(capacity)),
+        }
+    }
+
+    /// Is tracing currently on?
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Turn tracing on or off (off is the zero-overhead default).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Trace one in `n` admitted requests (clamped to ≥ 1).
+    pub fn set_sample_every(&self, n: u64) {
+        self.sample_every.store(n.max(1), Ordering::Relaxed);
+    }
+
+    /// Configured ring capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Start a trace for request `id` on plan `plan_id` whose latency
+    /// origin is `origin`, or `None` when disabled / not sampled. The
+    /// origin is the same instant the serving layer measures end-to-end
+    /// latency from, so traced and reported latency agree.
+    pub fn try_begin(&self, id: u64, plan_id: u64, origin: Instant) -> Option<Box<DecisionTrace>> {
+        if !self.enabled() {
+            return None;
+        }
+        let n = self.sample_every.load(Ordering::Relaxed).max(1);
+        let tick = self.started.fetch_add(1, Ordering::Relaxed);
+        if tick % n != 0 {
+            return None;
+        }
+        let start_ns =
+            u64::try_from(origin.saturating_duration_since(self.epoch).as_nanos()).unwrap_or(u64::MAX);
+        Some(Box::new(DecisionTrace::begin(id, plan_id, origin, start_ns)))
+    }
+
+    /// Publish a finished trace (callers run [`DecisionTrace::finish`]
+    /// first). Non-blocking: contention drops the trace, a full ring
+    /// evicts its oldest entry.
+    pub fn publish(&self, trace: Box<DecisionTrace>) {
+        match self.ring.try_lock() {
+            Ok(mut ring) => {
+                if ring.len() >= self.capacity {
+                    ring.pop_front();
+                    self.evicted.fetch_add(1, Ordering::Relaxed);
+                }
+                ring.push_back(*trace);
+            }
+            Err(_) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Number of traces currently retained.
+    pub fn len(&self) -> usize {
+        self.ring.lock().expect("trace ring poisoned").len()
+    }
+
+    /// True when no traces are retained.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Traces dropped because a publisher lost the `try_lock` race.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Traces evicted to make room once the ring filled.
+    pub fn evicted(&self) -> u64 {
+        self.evicted.load(Ordering::Relaxed)
+    }
+
+    /// Copy of the retained traces, oldest first (reader-side blocking
+    /// lock — fine off the hot path).
+    pub fn snapshot(&self) -> Vec<DecisionTrace> {
+        self.ring.lock().expect("trace ring poisoned").iter().cloned().collect()
+    }
+
+    /// Take all retained traces, leaving the ring empty.
+    pub fn drain(&self) -> Vec<DecisionTrace> {
+        self.ring.lock().expect("trace ring poisoned").drain(..).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace::Stage;
+    use std::sync::Arc;
+
+    fn finished_trace(rec: &TraceRecorder, id: u64) -> Option<Box<DecisionTrace>> {
+        let mut t = rec.try_begin(id, 1, Instant::now())?;
+        t.stamp(Stage::Admit);
+        t.stamp(Stage::Queue);
+        t.stamp(Stage::Batch);
+        t.stamp(Stage::Dispatch);
+        t.stamp_eval(10, 20, 5);
+        t.finish();
+        Some(t)
+    }
+
+    #[test]
+    fn disabled_recorder_hands_out_nothing() {
+        let rec = TraceRecorder::new(8);
+        assert!(rec.try_begin(1, 1, Instant::now()).is_none());
+        rec.set_enabled(true);
+        assert!(rec.try_begin(1, 1, Instant::now()).is_some());
+    }
+
+    #[test]
+    fn sampling_keeps_one_in_n() {
+        let rec = TraceRecorder::new(64);
+        rec.set_enabled(true);
+        rec.set_sample_every(4);
+        let taken =
+            (0..40).filter(|&i| rec.try_begin(i, 1, Instant::now()).is_some()).count();
+        assert_eq!(taken, 10);
+    }
+
+    #[test]
+    fn ring_never_exceeds_capacity_and_keeps_newest() {
+        let rec = TraceRecorder::new(8);
+        rec.set_enabled(true);
+        for id in 0..50 {
+            let t = finished_trace(&rec, id).unwrap();
+            rec.publish(t);
+            assert!(rec.len() <= 8);
+        }
+        let kept = rec.snapshot();
+        assert_eq!(kept.len(), 8);
+        assert_eq!(rec.evicted(), 42);
+        let ids: Vec<u64> = kept.iter().map(|t| t.id).collect();
+        assert_eq!(ids, (42..50).collect::<Vec<u64>>(), "ring keeps the newest traces in order");
+    }
+
+    #[test]
+    fn retained_traces_keep_head_and_tail_stamps_under_concurrency() {
+        let rec = Arc::new(TraceRecorder::new(32));
+        rec.set_enabled(true);
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let rec = Arc::clone(&rec);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..200u64 {
+                    if let Some(trace) = finished_trace(&rec, t * 1000 + i) {
+                        rec.publish(trace);
+                    }
+                    assert!(rec.len() <= 32);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let kept = rec.snapshot();
+        assert!(!kept.is_empty());
+        assert!(kept.len() <= 32);
+        for trace in &kept {
+            // Head/tail invariant: every retained trace is fully
+            // stamped — monotone offsets ending in a reply stamp that
+            // equals the sum of its stage durations.
+            let stamps = trace.stamps();
+            let mut prev = 0;
+            for &s in stamps {
+                assert!(s >= prev);
+                prev = s;
+            }
+            let sum: u64 = Stage::ALL.iter().map(|&s| trace.stage_ns(s)).sum();
+            assert_eq!(sum, trace.end_to_end_ns());
+            assert!(trace.stage_ns(Stage::Sweep) >= 20);
+        }
+    }
+
+    #[test]
+    fn drain_empties_the_ring() {
+        let rec = TraceRecorder::new(4);
+        rec.set_enabled(true);
+        for id in 0..3 {
+            rec.publish(finished_trace(&rec, id).unwrap());
+        }
+        assert_eq!(rec.drain().len(), 3);
+        assert!(rec.is_empty());
+        assert_eq!(rec.dropped(), 0);
+    }
+}

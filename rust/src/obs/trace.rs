@@ -1,0 +1,277 @@
+//! Stage-level decision traces and Chrome `trace_event` export.
+//!
+//! A [`DecisionTrace`] rides inside a `DecisionRequest` from admission to
+//! reply and stamps a monotonic-ns offset at the **end** of each
+//! pipeline stage. Stamps telescope: the duration of stage `i` is
+//! `stamp[i] - stamp[i-1]`, so the per-stage durations sum *exactly* to
+//! the final reply stamp (the trace's end-to-end latency) — the
+//! decomposition invariant the acceptance tests pin. Stages that a
+//! request skips (e.g. the evaluator stages on a backend that does not
+//! report them) are forward-filled to zero-width spans at
+//! [`finish`](DecisionTrace::finish).
+//!
+//! Traces serialize to the Chrome `trace_event` JSON array format
+//! ([`chrome_trace_json`]) loadable in `chrome://tracing` / Perfetto:
+//! one complete-`"X"` event per decision plus one nested event per
+//! stage, grouped onto one track per plan id.
+
+use std::time::Instant;
+
+/// Pipeline stages of one decision, in path order. Each variant indexes
+/// the end-of-stage stamp slot in a [`DecisionTrace`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Admission: validation + queue hand-off inside `submit`.
+    Admit,
+    /// Queue wait: admission until the dispatcher feeds the batcher.
+    Queue,
+    /// Batch formation: batcher entry until the batch is sealed.
+    Batch,
+    /// Dispatch: sealed batch until a worker starts this request.
+    Dispatch,
+    /// SNE bitstream encode inside the evaluator.
+    Encode,
+    /// Word-parallel gate sweep (including anytime chunk loop).
+    Sweep,
+    /// CORDIV accumulate + posterior readout.
+    Readout,
+    /// Everything after readout until the reply channel send.
+    Reply,
+}
+
+impl Stage {
+    /// Number of stages (length of a trace's stamp array).
+    pub const COUNT: usize = 8;
+
+    /// All stages in pipeline order.
+    pub const ALL: [Stage; Stage::COUNT] = [
+        Stage::Admit,
+        Stage::Queue,
+        Stage::Batch,
+        Stage::Dispatch,
+        Stage::Encode,
+        Stage::Sweep,
+        Stage::Readout,
+        Stage::Reply,
+    ];
+
+    /// Stamp-slot index of this stage.
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Stable lowercase label used in exposition and trace output.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Admit => "admit",
+            Stage::Queue => "queue",
+            Stage::Batch => "batch",
+            Stage::Dispatch => "dispatch",
+            Stage::Encode => "encode",
+            Stage::Sweep => "sweep",
+            Stage::Readout => "readout",
+            Stage::Reply => "reply",
+        }
+    }
+}
+
+fn ns_u64(d: std::time::Duration) -> u64 {
+    u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+}
+
+/// Per-decision span record: origin instant plus one end-offset stamp
+/// per [`Stage`]. Created by `TraceRecorder::try_begin`, stamped along
+/// the decision path, finished and published at reply time.
+#[derive(Debug, Clone)]
+pub struct DecisionTrace {
+    /// Request id the trace belongs to.
+    pub id: u64,
+    /// Prepared-plan id the request ran against.
+    pub plan_id: u64,
+    /// Offset of this trace's origin from the recorder epoch, in ns
+    /// (used as the absolute timeline position on export).
+    pub start_ns: u64,
+    origin: Instant,
+    stamps: [u64; Stage::COUNT],
+}
+
+impl DecisionTrace {
+    /// New trace with origin `origin` sitting `start_ns` after the
+    /// recorder epoch. Normally called through `TraceRecorder::try_begin`.
+    pub fn begin(id: u64, plan_id: u64, origin: Instant, start_ns: u64) -> Self {
+        Self { id, plan_id, start_ns, origin, stamps: [0; Stage::COUNT] }
+    }
+
+    /// Stamp the end of `stage` at "now", clamped so stamps never go
+    /// backwards even across thread hand-offs.
+    #[inline]
+    pub fn stamp(&mut self, stage: Stage) {
+        let i = stage.index();
+        let ns = ns_u64(self.origin.elapsed());
+        let floor = if i == 0 { 0 } else { self.stamps[i - 1] };
+        self.stamps[i] = ns.max(floor).max(self.stamps[i]);
+    }
+
+    /// Fill the evaluator stages from measured durations: the encode /
+    /// sweep / readout spans are laid end-to-end starting at the
+    /// dispatch stamp (clock reads happen inside the evaluator, so only
+    /// durations cross the boundary).
+    pub fn stamp_eval(&mut self, encode_ns: u64, sweep_ns: u64, readout_ns: u64) {
+        let base = self.stamps[Stage::Dispatch.index()];
+        let enc = base.saturating_add(encode_ns);
+        let swp = enc.saturating_add(sweep_ns);
+        let rdo = swp.saturating_add(readout_ns);
+        self.stamps[Stage::Encode.index()] = enc;
+        self.stamps[Stage::Sweep.index()] = swp;
+        self.stamps[Stage::Readout.index()] = rdo;
+    }
+
+    /// Stamp [`Stage::Reply`] and forward-fill any skipped stage so the
+    /// stamp array is monotone non-decreasing and the per-stage
+    /// durations telescope exactly to [`end_to_end_ns`](Self::end_to_end_ns).
+    pub fn finish(&mut self) {
+        self.stamp(Stage::Reply);
+        let mut prev = 0u64;
+        for s in self.stamps.iter_mut() {
+            if *s < prev {
+                *s = prev;
+            }
+            prev = *s;
+        }
+    }
+
+    /// End-of-stage offsets from the trace origin, ns, indexed by
+    /// [`Stage::index`].
+    pub fn stamps(&self) -> &[u64; Stage::COUNT] {
+        &self.stamps
+    }
+
+    /// Duration of one stage in ns (difference of consecutive stamps).
+    pub fn stage_ns(&self, stage: Stage) -> u64 {
+        let i = stage.index();
+        let prev = if i == 0 { 0 } else { self.stamps[i - 1] };
+        self.stamps[i].saturating_sub(prev)
+    }
+
+    /// Total traced latency: the reply stamp.
+    pub fn end_to_end_ns(&self) -> u64 {
+        self.stamps[Stage::Reply.index()]
+    }
+}
+
+fn push_event(
+    out: &mut String,
+    first: &mut bool,
+    name: &str,
+    plan_id: u64,
+    id: u64,
+    ts_ns: u64,
+    dur_ns: u64,
+) {
+    if !*first {
+        out.push_str(",\n");
+    }
+    *first = false;
+    out.push_str(&format!(
+        "  {{\"name\":\"{}\",\"ph\":\"X\",\"cat\":\"decision\",\"pid\":1,\"tid\":{},\
+         \"ts\":{:.3},\"dur\":{:.3},\"args\":{{\"id\":{}}}}}",
+        name,
+        plan_id,
+        ts_ns as f64 / 1e3,
+        dur_ns as f64 / 1e3,
+        id
+    ));
+}
+
+/// Render traces as a Chrome `trace_event` JSON array (µs timestamps,
+/// ns kept as fractional digits). One `"decision"` complete event per
+/// trace with its stages nested inside, one track (`tid`) per plan id.
+pub fn chrome_trace_json(traces: &[DecisionTrace]) -> String {
+    let mut out = String::from("[\n");
+    let mut first = true;
+    for t in traces {
+        push_event(&mut out, &mut first, "decision", t.plan_id, t.id, t.start_ns, t.end_to_end_ns());
+        for stage in Stage::ALL {
+            let dur = t.stage_ns(stage);
+            let i = stage.index();
+            let begin = if i == 0 { 0 } else { t.stamps[i - 1] };
+            push_event(
+                &mut out,
+                &mut first,
+                stage.name(),
+                t.plan_id,
+                t.id,
+                t.start_ns.saturating_add(begin),
+                dur,
+            );
+        }
+    }
+    out.push_str("\n]\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn traced() -> DecisionTrace {
+        let mut t = DecisionTrace::begin(7, 3, Instant::now(), 1000);
+        t.stamp(Stage::Admit);
+        t.stamp(Stage::Queue);
+        t.stamp(Stage::Batch);
+        t.stamp(Stage::Dispatch);
+        t.stamp_eval(100, 2000, 50);
+        t.finish();
+        t
+    }
+
+    #[test]
+    fn stamps_are_monotone_and_telescope_to_end_to_end() {
+        let t = traced();
+        let mut prev = 0;
+        for &s in t.stamps() {
+            assert!(s >= prev, "stamps must be non-decreasing: {:?}", t.stamps());
+            prev = s;
+        }
+        let sum: u64 = Stage::ALL.iter().map(|&s| t.stage_ns(s)).sum();
+        assert_eq!(sum, t.end_to_end_ns(), "stage durations must sum exactly to end-to-end");
+        assert_eq!(t.stage_ns(Stage::Sweep), 2000);
+        assert_eq!(t.stage_ns(Stage::Encode), 100);
+    }
+
+    #[test]
+    fn skipped_stages_forward_fill_to_zero_width() {
+        let mut t = DecisionTrace::begin(1, 1, Instant::now(), 0);
+        t.stamp(Stage::Admit);
+        // No batcher/worker stamps (e.g. request errored early).
+        t.finish();
+        let sum: u64 = Stage::ALL.iter().map(|&s| t.stage_ns(s)).sum();
+        assert_eq!(sum, t.end_to_end_ns());
+        assert_eq!(t.stage_ns(Stage::Sweep), 0);
+    }
+
+    #[test]
+    fn chrome_json_is_well_formed() {
+        let traces = vec![traced(), traced()];
+        let json = chrome_trace_json(&traces);
+        assert!(json.starts_with("[\n"));
+        assert!(json.trim_end().ends_with(']'));
+        // One decision event + one per stage, per trace.
+        let events = json.matches("\"ph\":\"X\"").count();
+        assert_eq!(events, traces.len() * (1 + Stage::COUNT));
+        assert!(json.contains("\"name\":\"sweep\""));
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert!(!json.contains("NaN"));
+    }
+
+    #[test]
+    fn stage_names_are_stable() {
+        let names: Vec<&str> = Stage::ALL.iter().map(|s| s.name()).collect();
+        assert_eq!(
+            names,
+            ["admit", "queue", "batch", "dispatch", "encode", "sweep", "readout", "reply"]
+        );
+        assert_eq!(Stage::ALL.len(), Stage::COUNT);
+    }
+}

@@ -91,6 +91,14 @@ pub struct PipelineConfig {
     pub threshold: f64,
     /// Pace frame arrivals at this rate (`None` = free-run).
     pub fps_target: Option<f64>,
+    /// Record per-stage [`crate::obs::DecisionTrace`]s for the served
+    /// decisions (drained into [`PipelineReport::traces`]; the CLI's
+    /// `--trace-out` writes them as Chrome `trace_event` JSON).
+    pub trace: bool,
+    /// Write the Prometheus-style metrics exposition to this file
+    /// periodically during the run (and once more at the end) — the
+    /// CLI's `--metrics-out`.
+    pub metrics_out: Option<std::path::PathBuf>,
 }
 
 impl Default for PipelineConfig {
@@ -109,6 +117,8 @@ impl Default for PipelineConfig {
             allow_partial: true,
             threshold: 0.5,
             fps_target: None,
+            trace: false,
+            metrics_out: None,
         }
     }
 }
@@ -204,6 +214,10 @@ pub struct PipelineReport {
     pub hardware_fps: f64,
     /// Coordinator metrics at the end of the run.
     pub snapshot: MetricsSnapshot,
+    /// Per-stage decision traces retained by the recorder ring (empty
+    /// unless [`PipelineConfig::trace`] was on). Render with
+    /// [`crate::obs::chrome_trace_json`].
+    pub traces: Vec<crate::obs::DecisionTrace>,
 }
 
 impl PipelineReport {
@@ -334,6 +348,29 @@ pub fn run(config: &PipelineConfig) -> Result<PipelineReport> {
         .max(256);
     let coord = Coordinator::start(&app)?;
     let handle = coord.handle();
+    if config.trace {
+        handle.trace_recorder().set_enabled(true);
+    }
+    // Periodic exposition writer: refresh the metrics file every 250 ms
+    // during the stream, plus one final write after the last decision
+    // completes (so short runs still land their counters).
+    let metrics_writer = config.metrics_out.clone().map(|path| {
+        let h = handle.clone();
+        let (stop_tx, stop_rx) = mpsc::channel::<()>();
+        let jh = std::thread::spawn(move || loop {
+            let _ = std::fs::write(&path, h.exposition());
+            match stop_rx.recv_timeout(Duration::from_millis(250)) {
+                Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                // Stop signal, or the run ended and dropped the sender:
+                // one final write with the settled counters.
+                _ => {
+                    let _ = std::fs::write(&path, h.exposition());
+                    break;
+                }
+            }
+        });
+        (stop_tx, jh)
+    });
 
     let policy = Policy {
         deadline: config.deadline,
@@ -409,6 +446,11 @@ pub fn run(config: &PipelineConfig) -> Result<PipelineReport> {
         .collect();
 
     let snapshot = handle.metrics().snapshot();
+    let traces = handle.trace_recorder().drain();
+    if let Some((stop, jh)) = metrics_writer {
+        let _ = stop.send(());
+        let _ = jh.join();
+    }
     coord.shutdown();
     let wall_secs = wall.as_secs_f64().max(1e-9);
     Ok(PipelineReport {
@@ -423,6 +465,7 @@ pub fn run(config: &PipelineConfig) -> Result<PipelineReport> {
         wall_fps: config.frames as f64 / wall_secs,
         hardware_fps: snapshot.virtual_fps(),
         snapshot,
+        traces,
     })
 }
 
@@ -618,6 +661,36 @@ mod tests {
         assert!(bad_threshold.validate().is_err());
         let no_workers = PipelineConfig { workers: 0, ..PipelineConfig::default() };
         assert!(no_workers.validate().is_err());
+    }
+
+    #[test]
+    fn traced_run_collects_decomposing_traces_and_writes_metrics() {
+        let metrics_path = std::env::temp_dir()
+            .join(format!("bayes-mem-pipeline-metrics-{}.prom", std::process::id()));
+        let cfg = PipelineConfig {
+            frames: 8,
+            submitters: 1,
+            workers: 1,
+            bits: 256,
+            trace: true,
+            metrics_out: Some(metrics_path.clone()),
+            ..PipelineConfig::default()
+        };
+        let report = run(&cfg).unwrap();
+        assert!(!report.traces.is_empty(), "tracing was on but no traces retained");
+        for t in &report.traces {
+            let sum: u64 =
+                crate::obs::Stage::ALL.iter().map(|&s| t.stage_ns(s)).sum();
+            assert_eq!(sum, t.end_to_end_ns(), "stage spans must decompose end-to-end");
+        }
+        let json = crate::obs::chrome_trace_json(&report.traces);
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        // Per-stage quantiles made it into the snapshot via the traces.
+        assert!(report.snapshot.stage_hist(crate::obs::Stage::Sweep).count() > 0);
+        let text = std::fs::read_to_string(&metrics_path).unwrap();
+        let _ = std::fs::remove_file(&metrics_path);
+        assert!(text.contains("decision_latency_ns{quantile="), "{text}");
+        assert!(text.contains("decision_stage_ns{stage=\"sweep\""), "{text}");
     }
 
     #[test]

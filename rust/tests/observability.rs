@@ -1,0 +1,235 @@
+//! Acceptance suite for the observability subsystem (ISSUE-7): stage
+//! spans must decompose exactly to end-to-end latency, the quantile
+//! histograms must populate for every stage, the exposition must carry
+//! p50/p99/p999 for latency and each stage, and the Chrome trace dump
+//! must be well-formed.
+
+use std::time::Duration;
+
+use bayes_mem::config::AppConfig;
+use bayes_mem::coordinator::{Coordinator, DecisionParams, PlanSpec};
+use bayes_mem::obs::{chrome_trace_json, Stage};
+use bayes_mem::scene::{pipeline, PipelineConfig, ScenarioSpec};
+
+/// Minimal structural JSON check (no serde in the offline build):
+/// balanced braces/brackets outside strings and no bare NaN/Inf.
+fn assert_jsonish(s: &str, what: &str) {
+    let (mut brace, mut bracket) = (0i64, 0i64);
+    let mut in_str = false;
+    let mut esc = false;
+    for c in s.chars() {
+        if in_str {
+            if esc {
+                esc = false;
+            } else if c == '\\' {
+                esc = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => in_str = true,
+            '{' => brace += 1,
+            '}' => brace -= 1,
+            '[' => bracket += 1,
+            ']' => bracket -= 1,
+            _ => {}
+        }
+        assert!(brace >= 0 && bracket >= 0, "{what}: unbalanced nesting");
+    }
+    assert_eq!(brace, 0, "{what}: unbalanced braces");
+    assert_eq!(bracket, 0, "{what}: unbalanced brackets");
+    assert!(!in_str, "{what}: unterminated string");
+    assert!(!s.contains("NaN") && !s.contains("Infinity"), "{what}: non-finite number");
+}
+
+/// One-worker config so trace publishing is contention-free and the
+/// sampled-trace counts below are exact (publish drops on `try_lock`
+/// contention by design).
+fn one_worker_config() -> AppConfig {
+    let mut cfg = AppConfig::default();
+    cfg.coordinator.workers = 1;
+    cfg
+}
+
+/// Every sampled decision produces a trace whose stage durations sum
+/// *exactly* to its end-to-end latency, and the stage histograms see
+/// one sample per completed decision.
+#[test]
+fn traces_decompose_exactly_and_fill_stage_histograms() {
+    let coord = Coordinator::start(&one_worker_config()).unwrap();
+    let handle = coord.handle();
+    handle.trace_recorder().set_enabled(true);
+    let plan = handle.prepare(PlanSpec::Inference).unwrap();
+    let n = 16usize;
+    let pending: Vec<_> = (0..n)
+        .map(|_| {
+            plan.submit(DecisionParams::Inference {
+                prior: 0.57,
+                likelihood: 0.77,
+                likelihood_not: 0.655,
+            })
+            .unwrap()
+        })
+        .collect();
+    for p in pending {
+        p.wait_timeout(Duration::from_secs(30)).unwrap();
+    }
+    let traces = handle.trace_recorder().drain();
+    assert_eq!(traces.len(), n, "every decision is sampled at sample_every = 1");
+    for t in &traces {
+        let mut prev = 0u64;
+        for &s in t.stamps() {
+            assert!(s >= prev, "stamps must be monotone: {:?}", t.stamps());
+            prev = s;
+        }
+        let sum: u64 = Stage::ALL.iter().map(|&s| t.stage_ns(s)).sum();
+        assert_eq!(sum, t.end_to_end_ns(), "stage durations must telescope exactly");
+        assert!(t.end_to_end_ns() > 0);
+    }
+    let swept: u64 = traces.iter().map(|t| t.stage_ns(Stage::Sweep)).sum();
+    assert!(swept > 0, "native backend reports real sweep spans");
+    let snap = handle.metrics().snapshot();
+    assert_eq!(snap.completed, n as u64);
+    for stage in Stage::ALL {
+        assert_eq!(
+            snap.stage_hist(stage).count(),
+            n as u64,
+            "stage {} histogram sees every sampled decision",
+            stage.name()
+        );
+    }
+    assert!(snap.latency_quantile_ns(0.99) >= snap.latency_quantile_ns(0.5));
+    coord.shutdown();
+}
+
+/// The exposition carries p50/p99/p999 for end-to-end latency and for
+/// every stage, plus the hardware and plan-cache counter families; the
+/// JSON twin and the Chrome trace dump are structurally well-formed.
+#[test]
+fn exposition_covers_every_stage_and_dumps_valid_chrome_trace() {
+    let coord = Coordinator::start(&AppConfig::default()).unwrap();
+    let handle = coord.handle();
+    handle.trace_recorder().set_enabled(true);
+    let inference = handle.prepare(PlanSpec::Inference).unwrap();
+    let fusion = handle.prepare(PlanSpec::Fusion { modalities: 2 }).unwrap();
+    let pending: Vec<_> = (0..12)
+        .map(|i| {
+            if i % 2 == 0 {
+                inference
+                    .submit(DecisionParams::Inference {
+                        prior: 0.57,
+                        likelihood: 0.77,
+                        likelihood_not: 0.655,
+                    })
+                    .unwrap()
+            } else {
+                fusion
+                    .submit(DecisionParams::Fusion { posteriors: vec![0.8, 0.7] })
+                    .unwrap()
+            }
+        })
+        .collect();
+    for p in pending {
+        p.wait_timeout(Duration::from_secs(30)).unwrap();
+    }
+    let text = handle.exposition();
+    for q in ["0.5", "0.99", "0.999"] {
+        assert!(
+            text.contains(&format!("decision_latency_ns{{quantile=\"{q}\"}}")),
+            "missing latency quantile {q}:\n{text}"
+        );
+    }
+    for stage in Stage::ALL {
+        for q in ["0.5", "0.99", "0.999"] {
+            let line = format!("decision_stage_ns{{stage=\"{}\",quantile=\"{q}\"}}", stage.name());
+            assert!(text.contains(&line), "missing {line}");
+        }
+    }
+    for family in [
+        "decisions_submitted_total",
+        "decisions_completed_total",
+        "plan_cache_hits_total",
+        "hardware_bits_pulsed_total",
+        "hardware_energy_nj_total",
+    ] {
+        assert!(text.contains(family), "missing family {family}:\n{text}");
+    }
+    let json = handle.exposition_json();
+    assert_jsonish(&json, "exposition json");
+    assert!(json.contains("\"stages\""));
+
+    let traces = handle.trace_recorder().drain();
+    assert!(!traces.is_empty());
+    let chrome = chrome_trace_json(&traces);
+    assert_jsonish(&chrome, "chrome trace");
+    assert_eq!(
+        chrome.matches("\"ph\":\"X\"").count(),
+        traces.len() * (1 + Stage::COUNT),
+        "one decision event plus one per stage"
+    );
+    // Two plans -> two tracks in the trace viewer.
+    assert!(chrome.contains(&format!("\"tid\":{}", inference.plan().id())));
+    assert!(chrome.contains(&format!("\"tid\":{}", fusion.plan().id())));
+    coord.shutdown();
+}
+
+/// Tracing is sampled and droppable, never load-bearing: with the
+/// recorder disabled nothing is recorded, and a 1-in-4 sampling rate
+/// traces only its share while *metrics* still see every decision.
+#[test]
+fn sampling_and_disable_gate_recording_without_losing_metrics() {
+    let coord = Coordinator::start(&one_worker_config()).unwrap();
+    let handle = coord.handle();
+    let plan = handle.prepare(PlanSpec::Inference).unwrap();
+    let decide = |k: usize| {
+        let pending: Vec<_> = (0..k)
+            .map(|_| {
+                plan.submit(DecisionParams::Inference {
+                    prior: 0.57,
+                    likelihood: 0.77,
+                    likelihood_not: 0.655,
+                })
+                .unwrap()
+            })
+            .collect();
+        for p in pending {
+            p.wait_timeout(Duration::from_secs(30)).unwrap();
+        }
+    };
+    // Disabled (the default): no traces, full serving metrics.
+    decide(8);
+    assert_eq!(handle.trace_recorder().len(), 0);
+    assert_eq!(handle.metrics().snapshot().completed, 8);
+    // 1-in-4 sampling: a quarter of the load is traced.
+    handle.trace_recorder().set_enabled(true);
+    handle.trace_recorder().set_sample_every(4);
+    decide(16);
+    let traces = handle.trace_recorder().drain();
+    assert_eq!(traces.len(), 4, "1-in-4 sampling over 16 decisions");
+    let snap = handle.metrics().snapshot();
+    assert_eq!(snap.completed, 24, "metrics count every decision regardless of sampling");
+    assert_eq!(snap.stage_hist(Stage::Sweep).count(), 4, "stage quantiles are trace-fed");
+    coord.shutdown();
+}
+
+/// End-to-end through the video pipeline: `parse-video --trace-out`
+/// semantics — the report carries decomposing traces that export to a
+/// well-formed Chrome trace.
+#[test]
+fn video_pipeline_traces_export_to_chrome_format() {
+    let cfg = PipelineConfig {
+        trace: true,
+        ..PipelineConfig::deterministic(ScenarioSpec::mixed_traffic(), 12, 5, 1024)
+    };
+    let report = pipeline::run(&cfg).unwrap();
+    assert!(!report.traces.is_empty(), "traced run must collect traces");
+    for t in &report.traces {
+        let sum: u64 = Stage::ALL.iter().map(|&s| t.stage_ns(s)).sum();
+        assert_eq!(sum, t.end_to_end_ns());
+    }
+    let chrome = chrome_trace_json(&report.traces);
+    assert_jsonish(&chrome, "pipeline chrome trace");
+    assert!(chrome.contains("\"name\":\"sweep\""));
+}

@@ -177,6 +177,7 @@ fn req(cache: &PlanCache, rng: &mut Rng, id: u64) -> DecisionRequest {
         threshold: None,
         max_half_width: None,
         allow_partial: false,
+        trace: None,
         reply: tx,
     }
 }

@@ -136,6 +136,8 @@ fn threaded_pipeline_overlaps_and_stays_accurate() {
         allow_partial: false,
         threshold: 0.5,
         fps_target: None,
+        trace: false,
+        metrics_out: None,
     };
     let r = pipeline::run(&cfg).unwrap();
     assert_eq!(r.hardware.frames, 64);
