@@ -1,0 +1,68 @@
+//! TCP front-door benches: wire-protocol round-trip latency against an
+//! in-process [`Server`], plus the open-loop SLO sweep (1×/2×/4×
+//! overload) whose headline numbers — p50/p99/p999, deadline-miss rate,
+//! saturation throughput — are exported to `BENCH_serving.json`.
+
+use bayes_mem::benchkit::Bench;
+use bayes_mem::config::AppConfig;
+use bayes_mem::device::WearPolicy;
+use bayes_mem::serve::{loadgen, Client, Server, WireParams, WirePolicy, WireSpec};
+
+/// Probe-station config: wear rotation off (benches push banks far past
+/// the endurance budget by design).
+fn bench_config() -> AppConfig {
+    let mut cfg = AppConfig::default();
+    cfg.sne.wear_policy = WearPolicy::Ignore;
+    cfg
+}
+
+fn main() {
+    let fast = std::env::var("BENCH_FAST").is_ok();
+    let mut b = Bench::new("serving");
+
+    let cfg = bench_config();
+    let server = Server::start("127.0.0.1:0", &cfg, Vec::new()).unwrap();
+    let addr = server.local_addr();
+
+    // Closed-loop wire round trip: one decision per call, including
+    // encode, TCP hop, shard dispatch, and decode.
+    let mut client = Client::connect(addr, "bench").unwrap();
+    let policy = WirePolicy { bits: Some(256), ..WirePolicy::default() };
+    let plan = client.prepare(WireSpec::Inference, policy).unwrap();
+    let params = || WireParams::Inference {
+        prior: 0.57,
+        likelihood: 0.77,
+        likelihood_not: 0.655,
+    };
+    b.bench("wire_closed_loop_decide", || {
+        std::hint::black_box(client.decide(plan, params()).unwrap().posterior);
+    });
+
+    // One batch frame of 32 decisions: amortises the round trip and
+    // lets the shard's dynamic batcher form full batches.
+    b.bench_units("wire_decide_batch_32", 32.0, "decisions", || {
+        let batch: Vec<WireParams> = (0..32).map(|_| params()).collect();
+        for r in client.decide_batch(plan, batch).unwrap() {
+            std::hint::black_box(r.unwrap().posterior);
+        }
+    });
+
+    // The SLO sweep the acceptance gate reads: open-loop arrivals at
+    // 1×/2×/4× the nominal rate, latency measured from scheduled
+    // arrival. Every stage metric lands in the export.
+    let lg = loadgen::LoadgenConfig {
+        addr: addr.to_string(),
+        connections: 8,
+        rate: if fast { 2_000.0 } else { 4_000.0 },
+        requests: if fast { 400 } else { 2_000 },
+        ..loadgen::LoadgenConfig::default()
+    };
+    let report = loadgen::run(&lg).unwrap();
+    print!("{}", report.to_table());
+    for (name, value) in report.metric_pairs() {
+        b.metric(&name, value);
+    }
+
+    server.shutdown().unwrap();
+    b.finish_and_export();
+}

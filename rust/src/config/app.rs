@@ -59,6 +59,69 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// Per-tenant admission behavior for the TCP serving front door: what
+/// happens to a decision when the shard's admission queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionPolicy {
+    /// Shed on overflow: fail fast with a typed backpressure error
+    /// (keeps the tenant's tail latency flat under overload).
+    #[default]
+    Shed,
+    /// Block until queue space frees up: absorbs the backlog instead of
+    /// dropping it (streaming tenants that would rather wait than lose
+    /// frames).
+    Block,
+}
+
+impl AdmissionPolicy {
+    /// Parse the config/CLI spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "shed" => Ok(AdmissionPolicy::Shed),
+            "block" => Ok(AdmissionPolicy::Block),
+            other => Err(Error::Config(format!("unknown admission policy {other:?}"))),
+        }
+    }
+
+    /// The config/CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            AdmissionPolicy::Shed => "shed",
+            AdmissionPolicy::Block => "block",
+        }
+    }
+}
+
+/// TCP serving front-door settings (`[serve]` section): coordinator
+/// sharding plus the default per-tenant quota/admission template
+/// applied to tenants that are not pre-registered explicitly.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Coordinator shards behind the listener; tenants are pinned to a
+    /// shard by a stable hash of their id.
+    pub shards: usize,
+    /// Per-tenant in-flight decision quota.
+    pub max_inflight: usize,
+    /// Per-tenant plan-namespace quota (registered wire plans).
+    pub max_plans: usize,
+    /// Per-tenant plan-cache capacity (each tenant owns an LRU view).
+    pub plan_cache_capacity: usize,
+    /// Default queue-full behavior for tenants without an override.
+    pub admission: AdmissionPolicy,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            shards: 2,
+            max_inflight: 1024,
+            max_plans: 32,
+            plan_cache_capacity: 32,
+            admission: AdmissionPolicy::Shed,
+        }
+    }
+}
+
 /// Top-level configuration.
 #[derive(Debug, Clone)]
 pub struct AppConfig {
@@ -71,6 +134,8 @@ pub struct AppConfig {
     /// length override, and the anytime early-exit knobs. All-default
     /// (`Policy::default()`) means the legacy full sweep.
     pub default_policy: Policy,
+    /// TCP serving front-door settings (`[serve]` section).
+    pub serve: ServeConfig,
     /// Where `make artifacts` put the AOT outputs.
     pub artifacts_dir: PathBuf,
     /// Master seed for all banks/workloads.
@@ -83,6 +148,7 @@ impl Default for AppConfig {
             sne: SneConfig::default(),
             coordinator: CoordinatorConfig::default(),
             default_policy: Policy::default(),
+            serve: ServeConfig::default(),
             artifacts_dir: PathBuf::from("artifacts"),
             seed: 42,
         }
@@ -115,6 +181,11 @@ impl AppConfig {
         "policy.threshold",
         "policy.max_half_width",
         "policy.allow_partial",
+        "serve.shards",
+        "serve.max_inflight",
+        "serve.max_plans",
+        "serve.plan_cache_capacity",
+        "serve.admission",
     ];
 
     /// Load from a TOML file.
@@ -190,10 +261,19 @@ impl AppConfig {
             max_half_width: doc.get("policy.max_half_width").and_then(|v| v.as_f64()),
             allow_partial: doc.bool_or("policy.allow_partial", false),
         };
+        let serve = ServeConfig {
+            shards: doc.usize_or("serve.shards", defaults.serve.shards),
+            max_inflight: doc.usize_or("serve.max_inflight", defaults.serve.max_inflight),
+            max_plans: doc.usize_or("serve.max_plans", defaults.serve.max_plans),
+            plan_cache_capacity: doc
+                .usize_or("serve.plan_cache_capacity", defaults.serve.plan_cache_capacity),
+            admission: AdmissionPolicy::parse(doc.str_or("serve.admission", "shed"))?,
+        };
         let cfg = Self {
             sne,
             coordinator,
             default_policy,
+            serve,
             artifacts_dir: PathBuf::from(doc.str_or("artifacts.dir", "artifacts")),
             seed: doc.i64_or("seed", defaults.seed as i64) as u64,
         };
@@ -223,6 +303,19 @@ impl AppConfig {
             return Err(Error::Config(
                 "coordinator.plan_cache_capacity must be > 0".into(),
             ));
+        }
+        let s = &self.serve;
+        if s.shards == 0 {
+            return Err(Error::Config("serve.shards must be > 0".into()));
+        }
+        if s.max_inflight == 0 {
+            return Err(Error::Config("serve.max_inflight must be > 0".into()));
+        }
+        if s.max_plans == 0 {
+            return Err(Error::Config("serve.max_plans must be > 0".into()));
+        }
+        if s.plan_cache_capacity == 0 {
+            return Err(Error::Config("serve.plan_cache_capacity must be > 0".into()));
         }
         Ok(())
     }
@@ -263,6 +356,13 @@ plan_cache_capacity = 32     # prepared-plan LRU (prepare-once/decide-many)
 # threshold = 0.5            # stop once the CI clears this decision bound
 # max_half_width = 0.02      # stop once the CI is this tight
 allow_partial = false        # true: deadline miss -> best-so-far, not error
+
+[serve]                      # TCP front door (`bayes-mem serve --listen`)
+shards = 2                   # coordinator shards behind the listener
+max_inflight = 1024          # per-tenant in-flight decision quota
+max_plans = 32               # per-tenant plan-namespace quota
+plan_cache_capacity = 32     # per-tenant prepared-plan LRU view
+admission = "shed"           # default tenant policy: shed | block
 "#
     }
 }
@@ -331,6 +431,31 @@ mod tests {
         assert_eq!(cfg.sne.n_bits, 256);
         assert_eq!(cfg.coordinator.backend, Backend::Pjrt);
         assert_eq!(cfg.coordinator.max_wait, Duration::from_millis(1));
+    }
+
+    #[test]
+    fn serve_section_parses_and_validates() {
+        let doc = Document::parse(
+            "[serve]\nshards = 4\nmax_inflight = 64\nmax_plans = 8\n\
+             plan_cache_capacity = 16\nadmission = \"block\"",
+        )
+        .unwrap();
+        let cfg = AppConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.serve.shards, 4);
+        assert_eq!(cfg.serve.max_inflight, 64);
+        assert_eq!(cfg.serve.max_plans, 8);
+        assert_eq!(cfg.serve.plan_cache_capacity, 16);
+        assert_eq!(cfg.serve.admission, AdmissionPolicy::Block);
+        for bad in [
+            "[serve]\nshards = 0",
+            "[serve]\nmax_inflight = 0",
+            "[serve]\nmax_plans = 0",
+            "[serve]\nplan_cache_capacity = 0",
+            "[serve]\nadmission = \"drop\"",
+        ] {
+            let doc = Document::parse(bad).unwrap();
+            assert!(AppConfig::from_document(&doc).is_err(), "should reject: {bad}");
+        }
     }
 
     #[test]

@@ -3,4 +3,4 @@
 
 mod app;
 
-pub use app::{AppConfig, Backend, CoordinatorConfig};
+pub use app::{AdmissionPolicy, AppConfig, Backend, CoordinatorConfig, ServeConfig};

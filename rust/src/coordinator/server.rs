@@ -110,6 +110,11 @@ impl CoordinatorHandle {
     /// behavior: wait for space (counted in the `blocked` metric) or
     /// shed with a backpressure error — everything else is shared so
     /// the two submit flavors cannot drift.
+    ///
+    /// A blocking wait parked on a full queue returns a typed
+    /// [`Error::Shutdown`] if the coordinator drops mid-wait (the
+    /// dispatcher's receiver going away unparks the `send`) rather
+    /// than blocking forever or surfacing an untyped string.
     fn enqueue(
         &self,
         req: DecisionRequest,
@@ -117,18 +122,17 @@ impl CoordinatorHandle {
         block: bool,
     ) -> Result<PendingDecision> {
         let id = req.id;
-        let shut_down = || Error::Coordinator("coordinator is shut down".into());
         match self.tx.try_send(Msg::Req(req)) {
             Ok(()) => {}
             Err(mpsc::TrySendError::Full(msg)) if block => {
                 self.metrics.on_block();
-                self.tx.send(msg).map_err(|_| shut_down())?;
+                self.tx.send(msg).map_err(|_| Error::Shutdown)?;
             }
             Err(mpsc::TrySendError::Full(_)) => {
                 self.metrics.on_reject();
                 return Err(Error::Coordinator("admission queue full (backpressure)".into()));
             }
-            Err(mpsc::TrySendError::Disconnected(_)) => return Err(shut_down()),
+            Err(mpsc::TrySendError::Disconnected(_)) => return Err(Error::Shutdown),
         }
         self.metrics.on_submit();
         Ok(PendingDecision { id, rx })
@@ -1230,5 +1234,51 @@ mod tests {
             assert!((d.posterior - 0.903).abs() < 0.25, "posterior {}", d.posterior);
         }
         coord.shutdown();
+    }
+
+    /// Regression (issue 8 satellite): a blocking admission parked on a
+    /// full queue must return a typed [`Error::Shutdown`] when the
+    /// dispatcher's receiver goes away mid-wait — not hang, and not a
+    /// stringly `Error::Coordinator`. Built against a hand-assembled
+    /// handle so the queue-full + receiver-drop interleaving is
+    /// deterministic (a live dispatcher drains too eagerly to pin it).
+    #[test]
+    fn blocking_submit_returns_typed_shutdown_when_coordinator_drops_mid_wait() {
+        let metrics = Arc::new(Metrics::new());
+        let plans = Arc::new(PlanCache::with_metrics(4, Arc::clone(&metrics)));
+        let plan = plans.prepare(PlanSpec::Inference).unwrap();
+        let (tx, rx) = mpsc::sync_channel::<Msg>(1);
+        let handle = CoordinatorHandle {
+            tx,
+            next_id: Arc::new(AtomicU64::new(0)),
+            metrics,
+            plans,
+            tracer: Arc::new(TraceRecorder::new(TRACE_RING_CAPACITY)),
+            backend: Backend::Native,
+        };
+        // Fill the 1-slot queue so the next blocking submit parks.
+        handle.submit_prepared(&plan, inference_params(), Policy::default()).unwrap();
+        let blocked = {
+            let (handle, plan) = (handle.clone(), Arc::clone(&plan));
+            std::thread::spawn(move || {
+                handle.submit_prepared_blocking(&plan, inference_params(), Policy::default())
+            })
+        };
+        // Give the thread time to park inside `send`, then drop the
+        // receiving side — the coordinator going away mid-wait.
+        while handle.metrics().snapshot().blocked == 0 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        std::thread::sleep(Duration::from_millis(20));
+        drop(rx);
+        match blocked.join().unwrap() {
+            Err(Error::Shutdown) => {}
+            other => panic!("expected Err(Error::Shutdown), got {other:?}"),
+        }
+        // The fast-fail disconnect path is typed the same way.
+        match handle.submit_prepared(&plan, inference_params(), Policy::default()) {
+            Err(Error::Shutdown) => {}
+            other => panic!("expected Err(Error::Shutdown), got {other:?}"),
+        }
     }
 }

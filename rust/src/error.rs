@@ -54,6 +54,15 @@ pub enum Error {
     /// Deadline exceeded while waiting for a decision.
     Deadline(std::time::Duration),
 
+    /// The coordinator (or server) shut down while the caller was
+    /// waiting on it — e.g. a blocking admission parked on a full
+    /// queue when the dispatcher dropped its receiver.
+    Shutdown,
+
+    /// Wire-protocol failure (malformed, truncated, oversized, or
+    /// wrong-version frame; or a typed error frame from the server).
+    Wire(String),
+
     /// Underlying I/O error.
     Io(std::io::Error),
 
@@ -79,6 +88,8 @@ impl std::fmt::Display for Error {
             Error::Coordinator(msg) => write!(f, "coordinator error: {msg}"),
             Error::Network(msg) => write!(f, "network error: {msg}"),
             Error::Deadline(d) => write!(f, "deadline exceeded after {d:?}"),
+            Error::Shutdown => write!(f, "coordinator is shut down"),
+            Error::Wire(msg) => write!(f, "wire protocol error: {msg}"),
             Error::Io(e) => write!(f, "{e}"),
             Error::Toml(msg) => write!(f, "toml parse error: {msg}"),
         }

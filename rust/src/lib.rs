@@ -33,6 +33,11 @@
 //! * [`coordinator`] — the plan-centric serving layer (prepare-once /
 //!   decide-many): [`coordinator::PlanCache`], dynamic batcher grouped
 //!   by plan id, worker pool, per-plan policies and metrics.
+//! * [`serve`] — the production front door: a length-prefixed TCP wire
+//!   protocol ([`serve::wire`]), a multi-tenant sharded server with
+//!   per-tenant plan namespaces, quotas, and admission policies
+//!   ([`serve::Server`]), a blocking [`serve::Client`], and an
+//!   open-loop SLO load harness ([`serve::loadgen`]).
 //! * [`obs`] — observability: per-stage decision traces with a
 //!   lock-light ring recorder and Chrome `trace_event` export,
 //!   log-bucketed ns histograms (p50/p99/p999), and Prometheus/JSON
@@ -65,6 +70,7 @@ pub mod network;
 pub mod obs;
 pub mod runtime;
 pub mod scene;
+pub mod serve;
 pub mod stochastic;
 pub mod util;
 

@@ -3,7 +3,9 @@
 //!
 //! ```text
 //! bayes-mem fig --all | --id fig3b [--seed N]      reproduce paper figures
+//! bayes-mem serve --listen 127.0.0.1:7070 [...]    multi-tenant TCP server
 //! bayes-mem serve  [--config cfg.toml] [...]       load-test the coordinator
+//! bayes-mem loadgen --addr HOST:PORT [...]         open-loop SLO load harness
 //! bayes-mem parse-scene [--frames N]               end-to-end scene parsing
 //! bayes-mem parse-video --frames N --fps-target 2500 --deadline-us 400
 //!                       [--scenario <name>]        streaming scene service
@@ -12,6 +14,7 @@
 //! bayes-mem network --spec net.toml --query A --evidence B=1
 //!                                                  compiled-network query
 //! bayes-mem metrics [--requests N] [--json]        demo load + exposition
+//! bayes-mem metrics --tenant NAME                  per-tenant exposition
 //! bayes-mem artifacts [--dir artifacts]            inspect AOT artifacts
 //! bayes-mem config                                 print an example config
 //! ```
@@ -48,6 +51,7 @@ use bayes_mem::network::{
 };
 use bayes_mem::runtime::Runtime;
 use bayes_mem::scene::{fusion_input, pipeline, PipelineConfig, ScenarioSpec, VideoWorkload};
+use bayes_mem::serve::{loadgen, Client, Server, TenantSpec, WireParams, WirePolicy, WireSpec};
 use bayes_mem::stochastic::SneBank;
 
 fn main() -> ExitCode {
@@ -167,6 +171,7 @@ fn run(args: Vec<String>) -> CliResult<()> {
     match cmd {
         "fig" => cmd_fig(&flags),
         "serve" => cmd_serve(&flags),
+        "loadgen" => cmd_loadgen(&flags),
         "parse-scene" => cmd_parse_scene(&flags),
         "parse-video" => cmd_parse_video(&flags),
         "infer" => cmd_infer(&flags),
@@ -189,11 +194,18 @@ const HELP: &str = "bayes-mem — memristor-enabled Bayesian decision-making (pa
 
 USAGE:
   bayes-mem fig (--all | --id <id> | --list) [--seed N]
+  bayes-mem serve --listen HOST:PORT [--config cfg.toml] [--shards N]
+                  [--tenant NAME=block|shed ...] [--admission block|shed]
+                  [--max-inflight N] [--max-plans N] [--workers N]
   bayes-mem serve [--config cfg.toml] [--backend native|pjrt]
                   [--requests N] [--rate-fps F] [--workers N]
                   [--deadline-us N] [--allow-partial] [--bits N]
                   [--threshold P] [--half-width H]
                   [--trace-out FILE] [--metrics-out FILE]
+  bayes-mem loadgen --addr HOST:PORT [--tenant NAME] [--connections N]
+                    [--rate F] [--requests N] [--overload 1,2,4]
+                    [--deadline-us N] [--bits N] [--seed N]
+                    [--export FILE | --no-export]
   bayes-mem parse-scene [--frames N] [--seed N] [--backend native|pjrt]
   bayes-mem parse-video [--frames N] [--scenario NAME | --list-scenarios]
                         [--fps-target F] [--deadline-us N] [--bits N]
@@ -209,6 +221,7 @@ USAGE:
                     [--bits N] [--seed N] [--threshold P] [--half-width H]
                     [--no-optimize] [--log-domain R]
   bayes-mem metrics [--requests N] [--workers N] [--json]
+  bayes-mem metrics --tenant NAME [--requests N]
   bayes-mem artifacts [--artifacts DIR]
   bayes-mem config
 
@@ -222,6 +235,14 @@ as Chrome trace_event JSON (open in chrome://tracing or Perfetto);
 --metrics-out FILE keeps a Prometheus-style text exposition refreshed
 while the run is live; `metrics` prints the same exposition (text or
 --json) after a short self-contained demo load.
+
+Serving: `serve --listen` runs the multi-tenant TCP front door (frame
+header carries the tenant id; each tenant gets its own plan namespace,
+quotas, admission policy, and metrics). `loadgen` drives it with an
+open-loop arrival schedule at 1x/2x/4x overload and writes
+BENCH_serving.json (p50/p99/p999, deadline-miss rate, saturation
+throughput). `metrics --tenant NAME` prints one tenant's exposition
+after a short demo load through the wire.
 ";
 
 fn cmd_fig(flags: &Flags) -> CliResult<()> {
@@ -448,6 +469,9 @@ fn cmd_artifacts(flags: &Flags) -> CliResult<()> {
 }
 
 fn cmd_serve(flags: &Flags) -> CliResult<()> {
+    if flags.get("listen").is_some() {
+        return cmd_serve_listen(flags);
+    }
     let mut cfg = load_config(flags)?;
     cfg.coordinator.workers = flags.usize_or("workers", cfg.coordinator.workers);
     let requests = flags.usize_or("requests", 10_000);
@@ -540,6 +564,137 @@ fn cmd_serve(flags: &Flags) -> CliResult<()> {
     Ok(())
 }
 
+/// `serve --listen`: the multi-tenant TCP front door. Runs until a wire
+/// `Shutdown` frame arrives (e.g. from `Client::shutdown_server`).
+fn cmd_serve_listen(flags: &Flags) -> CliResult<()> {
+    let mut cfg = load_config(flags)?;
+    cfg.coordinator.workers = flags.usize_or("workers", cfg.coordinator.workers);
+    cfg.serve.shards = flags.usize_or("shards", cfg.serve.shards);
+    cfg.serve.max_inflight = flags.usize_or("max-inflight", cfg.serve.max_inflight);
+    cfg.serve.max_plans = flags.usize_or("max-plans", cfg.serve.max_plans);
+    if let Some(adm) = flags.get("admission") {
+        cfg.serve.admission = bayes_mem::config::AdmissionPolicy::parse(adm)?;
+    }
+    let tenants = parse_tenant_overrides(flags, &cfg)?;
+    let listen = flags.get("listen").unwrap_or("127.0.0.1:0");
+    let server = Server::start(listen, &cfg, tenants)?;
+    println!(
+        "serving on {} ({} shards x {} workers, default admission {}, \
+         quotas: {} inflight / {} plans per tenant)",
+        server.local_addr(),
+        cfg.serve.shards,
+        cfg.coordinator.workers,
+        cfg.serve.admission.name(),
+        cfg.serve.max_inflight,
+        cfg.serve.max_plans,
+    );
+    println!("send a Shutdown frame (client.shutdown_server()) to stop");
+    server.run()?;
+    println!("shutdown complete");
+    Ok(())
+}
+
+/// Repeatable `--tenant NAME[=block|shed]` flags → pre-registered
+/// tenant contracts (unlisted tenants get the `[serve]` template on
+/// first use).
+fn parse_tenant_overrides(flags: &Flags, cfg: &AppConfig) -> CliResult<Vec<TenantSpec>> {
+    let mut tenants = Vec::new();
+    for raw in flags.get_all("tenant") {
+        let (name, admission) = match raw.split_once('=') {
+            Some((name, policy)) => {
+                (name.trim(), bayes_mem::config::AdmissionPolicy::parse(policy.trim())?)
+            }
+            None => (raw.trim(), cfg.serve.admission),
+        };
+        if name.is_empty() {
+            bail!("--tenant needs a name, got {raw:?}");
+        }
+        let mut spec = TenantSpec::from_config(name, cfg);
+        spec.admission = admission;
+        tenants.push(spec);
+    }
+    Ok(tenants)
+}
+
+/// `loadgen`: open-loop SLO harness against a live `serve --listen`
+/// server. Sweeps the offered rate at each overload factor and writes
+/// the `BENCH_serving.json` artifact (unless `--no-export`).
+fn cmd_loadgen(flags: &Flags) -> CliResult<()> {
+    let Some(addr) = flags.get("addr") else { bail!("need --addr <host:port>") };
+    let defaults = loadgen::LoadgenConfig::default();
+    let overloads = match flags.get("overload") {
+        None => defaults.overloads.clone(),
+        Some(raw) => {
+            let parsed: Result<Vec<f64>, _> =
+                raw.split(',').map(|s| s.trim().parse::<f64>()).collect();
+            match parsed {
+                Ok(v) if !v.is_empty() => v,
+                _ => bail!("--overload takes comma-separated factors, got {raw:?}"),
+            }
+        }
+    };
+    let cfg = loadgen::LoadgenConfig {
+        addr: addr.to_string(),
+        tenant: flags.get("tenant").unwrap_or(&defaults.tenant).to_string(),
+        connections: flags.usize_or("connections", defaults.connections),
+        rate: flags.f64_or("rate", defaults.rate),
+        requests: flags.u64_or("requests", defaults.requests),
+        overloads,
+        deadline_us: match flags.f64_opt("deadline-us") {
+            Some(us) if us <= 0.0 => None,
+            Some(us) => Some(us as u64),
+            None => defaults.deadline_us,
+        },
+        bits: flags.get("bits").and_then(|v| v.parse().ok()).or(defaults.bits),
+        mix: defaults.mix,
+        seed: flags.u64_or("seed", defaults.seed),
+    };
+    println!(
+        "loadgen: {} connections -> {} as tenant {:?}, {} req at {:.0}/s x {:?} overload",
+        cfg.connections, cfg.addr, cfg.tenant, cfg.requests, cfg.rate, cfg.overloads,
+    );
+    let report = loadgen::run(&cfg)?;
+    print!("{}", report.to_table());
+    if !flags.has("no-export") {
+        let path = flags
+            .get("export")
+            .map(PathBuf::from)
+            .unwrap_or_else(loadgen::default_export_path);
+        report.export_json(&path)?;
+        println!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+/// `metrics --tenant NAME`: spin up an in-process front door, drive a
+/// short demo load through the wire as two tenants, and print the named
+/// tenant's isolated exposition.
+fn cmd_metrics_tenant(flags: &Flags, tenant: &str) -> CliResult<()> {
+    let mut cfg = load_config(flags)?;
+    cfg.coordinator.workers = flags.usize_or("workers", cfg.coordinator.workers);
+    let requests = flags.usize_or("requests", 64);
+    let server = Server::start("127.0.0.1:0", &cfg, Vec::new())?;
+    let addr = server.local_addr();
+    // Two tenants so the printed exposition demonstrably excludes the
+    // other tenant's traffic.
+    for (name, n) in [(tenant, requests), ("background", requests / 2)] {
+        let mut client = Client::connect(addr, name)?;
+        let plan = client.prepare(WireSpec::Inference, WirePolicy::default())?;
+        for _ in 0..n {
+            let _ = client.decide_raw(
+                plan,
+                WireParams::Inference { prior: 0.57, likelihood: 0.77, likelihood_not: 0.655 },
+            )?;
+        }
+    }
+    let Some(text) = server.tenant_exposition(tenant) else {
+        bail!("tenant {tenant:?} has no recorded traffic")
+    };
+    print!("{text}");
+    server.shutdown()?;
+    Ok(())
+}
+
 /// Periodic `--metrics-out` writer: refreshes the exposition file every
 /// 250 ms and once more on stop, so the file is complete even for runs
 /// shorter than one refresh interval.
@@ -566,6 +721,10 @@ fn spawn_metrics_writer(
 /// plans, tracing on so the stage quantiles populate) and print the
 /// exposition — Prometheus-style text by default, JSON with `--json`.
 fn cmd_metrics(flags: &Flags) -> CliResult<()> {
+    if let Some(tenant) = flags.get("tenant") {
+        let tenant = tenant.to_string();
+        return cmd_metrics_tenant(flags, &tenant);
+    }
     let mut cfg = load_config(flags)?;
     cfg.coordinator.workers = flags.usize_or("workers", cfg.coordinator.workers);
     let requests = flags.usize_or("requests", 256);

@@ -165,6 +165,51 @@ pub fn prometheus(snap: &MetricsSnapshot, opt_stats: &[(u64, OptStats)]) -> Stri
     out
 }
 
+/// Render one tenant's snapshot as Prometheus-style text, every line
+/// carrying a `tenant="…"` label under a `tenant_`-prefixed metric
+/// family. This is the per-tenant exposition surface of the TCP
+/// serving front door (`bayes-mem metrics --tenant NAME`, and the
+/// wire protocol's `Metrics` frame): each tenant owns an isolated
+/// metrics registry, so the counters here are that tenant's traffic
+/// only, not a filtered view of a shared registry.
+pub fn prometheus_tenant(tenant: &str, snap: &MetricsSnapshot) -> String {
+    let mut out = String::with_capacity(2048);
+    let t = format!("tenant=\"{tenant}\"");
+
+    out.push_str("# TYPE tenant_decisions_submitted_total counter\n");
+    out.push_str(&format!("tenant_decisions_submitted_total{{{t}}} {}\n", snap.submitted));
+    out.push_str("# TYPE tenant_decisions_completed_total counter\n");
+    out.push_str(&format!("tenant_decisions_completed_total{{{t}}} {}\n", snap.completed));
+    for (kind, label) in [
+        (KindTag::Inference, "inference"),
+        (KindTag::Fusion, "fusion"),
+        (KindTag::Network, "network"),
+    ] {
+        out.push_str(&format!(
+            "tenant_decisions_completed_total{{{t},kind=\"{label}\"}} {}\n",
+            snap.completed_for(kind)
+        ));
+    }
+    out.push_str("# TYPE tenant_decisions_rejected_total counter\n");
+    out.push_str(&format!("tenant_decisions_rejected_total{{{t}}} {}\n", snap.rejected));
+    out.push_str("# TYPE tenant_decisions_blocked_total counter\n");
+    out.push_str(&format!("tenant_decisions_blocked_total{{{t}}} {}\n", snap.blocked));
+    out.push_str("# TYPE tenant_decisions_failed_total counter\n");
+    out.push_str(&format!("tenant_decisions_failed_total{{{t}}} {}\n", snap.failed));
+    out.push_str("# TYPE tenant_decisions_deadline_missed_total counter\n");
+    out.push_str(&format!(
+        "tenant_decisions_deadline_missed_total{{{t}}} {}\n",
+        snap.deadline_missed
+    ));
+    out.push_str("# TYPE tenant_plan_cache_hits_total counter\n");
+    out.push_str(&format!("tenant_plan_cache_hits_total{{{t}}} {}\n", snap.plan_hits));
+    out.push_str("# TYPE tenant_plan_cache_misses_total counter\n");
+    out.push_str(&format!("tenant_plan_cache_misses_total{{{t}}} {}\n", snap.plan_misses));
+    out.push_str("# TYPE tenant_decision_latency_ns summary\n");
+    summary(&mut out, "tenant_decision_latency_ns", &t, &snap.latency_hist);
+    out
+}
+
 fn json_hist(hist: &NsHistogram) -> String {
     format!(
         "{{\"p50_ns\":{},\"p99_ns\":{},\"p999_ns\":{},\"sum_ns\":{},\"count\":{}}}",
@@ -317,6 +362,23 @@ mod tests {
         assert!(text.contains("plan_optimizer_gates{plan=\"7\",phase=\"before\"} 120"), "{text}");
         assert!(text.contains("plan_optimizer_gates{plan=\"7\",phase=\"after\"} 40"), "{text}");
         assert!(text.contains("plan_optimizer_streams{plan=\"7\",phase=\"after\"} 12"), "{text}");
+    }
+
+    #[test]
+    fn tenant_exposition_labels_every_line() {
+        let text = prometheus_tenant("cam-ingest", &demo_snapshot());
+        assert!(
+            text.contains("tenant_decisions_completed_total{tenant=\"cam-ingest\"} 2"),
+            "{text}"
+        );
+        assert!(
+            text.contains("tenant_decision_latency_ns{tenant=\"cam-ingest\",quantile=\"0.99\"}"),
+            "{text}"
+        );
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            assert!(line.contains("tenant=\"cam-ingest\""), "unlabeled line: {line}");
+            assert!(line.starts_with("tenant_"), "unprefixed line: {line}");
+        }
     }
 
     #[test]

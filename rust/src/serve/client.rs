@@ -1,0 +1,129 @@
+//! Blocking wire client: one TCP connection, one in-flight request.
+//!
+//! This is the client the CLI, the load generator, and the integration
+//! tests speak — deliberately minimal (synchronous request/response
+//! over [`super::wire`]) so its behavior under server errors is easy to
+//! reason about. Typed error frames surface two ways:
+//!
+//! * [`Client::decide_raw`] / [`Client::decide_batch`] hand back the
+//!   `(ErrorCode, message)` pair, for callers that branch on the code
+//!   (the load generator counting sheds vs deadline misses);
+//! * the convenience wrappers ([`Client::decide`], …) fold the pair
+//!   into a crate [`Error`]: `Shutdown` frames become
+//!   [`Error::Shutdown`], everything else [`Error::Wire`] tagged with
+//!   the code name.
+
+use std::net::{TcpStream, ToSocketAddrs};
+
+use crate::{Error, Result};
+
+use super::wire::{
+    self, ErrorCode, Frame, WireDecision, WireParams, WirePolicy, WireSpec,
+};
+
+/// A typed error frame as seen by the client.
+pub type FrameError = (ErrorCode, String);
+
+/// Blocking TCP client bound to one tenant id.
+#[derive(Debug)]
+pub struct Client {
+    stream: TcpStream,
+    tenant: String,
+}
+
+impl Client {
+    /// Connect to a [`super::Server`] and speak as `tenant`.
+    pub fn connect<A: ToSocketAddrs>(addr: A, tenant: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Client { stream, tenant: tenant.to_string() })
+    }
+
+    /// The tenant id stamped into every frame header.
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+
+    /// One request/response exchange.
+    fn call(&mut self, frame: &Frame) -> Result<Frame> {
+        wire::write_frame(&mut self.stream, &self.tenant, frame)?;
+        let (_tenant, reply) = wire::read_frame(&mut self.stream)?;
+        Ok(reply)
+    }
+
+    /// Compile a plan into this tenant's namespace; every decision on
+    /// the returned plan id runs under `policy`.
+    pub fn prepare(&mut self, spec: WireSpec, policy: WirePolicy) -> Result<u32> {
+        match self.call(&Frame::Prepare { spec, policy })? {
+            Frame::Prepared { plan } => Ok(plan),
+            Frame::Error { code, message } => Err(error_from_frame(code, message)),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// One decision; typed error frames stay `(code, message)` so the
+    /// caller can branch on the code. The outer `Result` is transport
+    /// failures only.
+    pub fn decide_raw(
+        &mut self,
+        plan: u32,
+        params: WireParams,
+    ) -> Result<std::result::Result<WireDecision, FrameError>> {
+        match self.call(&Frame::Decide { plan, params })? {
+            Frame::Decision(d) => Ok(Ok(d)),
+            Frame::Error { code, message } => Ok(Err((code, message))),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// One decision, folded into a crate [`Error`] on failure.
+    pub fn decide(&mut self, plan: u32, params: WireParams) -> Result<WireDecision> {
+        self.decide_raw(plan, params)?
+            .map_err(|(code, message)| error_from_frame(code, message))
+    }
+
+    /// A batch against one plan, answered in order; per-entry failures
+    /// stay typed.
+    #[allow(clippy::type_complexity)]
+    pub fn decide_batch(
+        &mut self,
+        plan: u32,
+        params: Vec<WireParams>,
+    ) -> Result<Vec<std::result::Result<WireDecision, FrameError>>> {
+        match self.call(&Frame::DecideBatch { plan, params })? {
+            Frame::DecisionBatch(items) => Ok(items),
+            Frame::Error { code, message } => Err(error_from_frame(code, message)),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// This tenant's Prometheus-style exposition.
+    pub fn metrics_text(&mut self) -> Result<String> {
+        match self.call(&Frame::Metrics)? {
+            Frame::MetricsText(text) => Ok(text),
+            Frame::Error { code, message } => Err(error_from_frame(code, message)),
+            other => Err(unexpected(&other)),
+        }
+    }
+
+    /// Ask the server to shut down; resolves once it acknowledges.
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        match self.call(&Frame::Shutdown)? {
+            Frame::ShutdownAck => Ok(()),
+            Frame::Error { code, message } => Err(error_from_frame(code, message)),
+            other => Err(unexpected(&other)),
+        }
+    }
+}
+
+/// Fold a typed error frame into a crate error.
+pub fn error_from_frame(code: ErrorCode, message: String) -> Error {
+    match code {
+        ErrorCode::Shutdown => Error::Shutdown,
+        _ => Error::Wire(format!("{}: {message}", code.name())),
+    }
+}
+
+fn unexpected(frame: &Frame) -> Error {
+    Error::Wire(format!("unexpected reply frame type {:#04x}", frame.frame_type()))
+}

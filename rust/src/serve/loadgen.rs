@@ -1,0 +1,511 @@
+//! Open-loop SLO load harness for the TCP front door.
+//!
+//! **Open loop**: every request has a scheduled arrival time fixed up
+//! front (`start + j·interval`), independent of how fast the server
+//! answers. Worker threads sleep until each arrival, fire, and measure
+//! latency **from the scheduled arrival** — so a server that falls
+//! behind pays the schedule slip in its tail, exactly the coordinated
+//! omission a closed-loop harness would hide. Load is an aggregate
+//! arrival schedule striped across `connections` blocking clients
+//! (connection `i` owns arrivals `i, i+C, i+2C, …`).
+//!
+//! A run sweeps the same schedule at each overload factor (1×/2×/4× by
+//! default), driving a mixed plan set (inference / fusion / network)
+//! with per-request random parameters, and reports per-stage
+//! p50/p99/p999 completed-decision latency, achieved throughput,
+//! shed/deadline-miss counts, and the saturation throughput across
+//! stages. [`LoadReport::export_json`] writes the `BENCH_serving.json`
+//! artifact CI greps.
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::obs::NsHistogram;
+use crate::util::Rng;
+use crate::{Error, Result};
+
+use super::client::Client;
+use super::wire::{ErrorCode, WireParams, WirePolicy, WireSpec};
+
+/// The embedded network spec the mixed workload queries (a 3-node
+/// chain: fog → visibility → alarm, query `fog` given `alarm`).
+pub const MIX_NETWORK_TOML: &str = "[network]\nname = \"loadgen\"\n\n[nodes.fog]\nprior = 0.15\n\n\
+[nodes.visibility]\nparents = \"fog\"\ncpt = [0.9, 0.3]\n\n\
+[nodes.alarm]\nparents = \"visibility\"\ncpt = [0.05, 0.8]\n";
+
+/// Load-generator settings.
+#[derive(Debug, Clone)]
+pub struct LoadgenConfig {
+    /// Server address (`host:port`).
+    pub addr: String,
+    /// Tenant id every connection speaks as.
+    pub tenant: String,
+    /// Simulated clients (one blocking connection each).
+    pub connections: usize,
+    /// Aggregate offered rate at 1×, decisions/s.
+    pub rate: f64,
+    /// Total requests at 1× (scaled by the overload factor per stage).
+    pub requests: u64,
+    /// Overload factors to sweep (offered rate = `rate × factor`).
+    pub overloads: Vec<f64>,
+    /// Per-decision deadline baked into the prepared plans' policy.
+    pub deadline_us: Option<u64>,
+    /// Stream-length override baked into the prepared plans' policy.
+    pub bits: Option<u32>,
+    /// Workload mix weights: (inference, fusion, network).
+    pub mix: (u32, u32, u32),
+    /// Schedule/parameter RNG seed.
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            addr: String::new(),
+            tenant: "loadgen".into(),
+            connections: 16,
+            rate: 5_000.0,
+            requests: 2_000,
+            overloads: vec![1.0, 2.0, 4.0],
+            deadline_us: Some(2_000),
+            bits: Some(256),
+            mix: (2, 1, 1),
+            seed: 42,
+        }
+    }
+}
+
+/// Outcome of one overload stage.
+#[derive(Debug, Clone)]
+pub struct StageReport {
+    /// Overload factor this stage ran at.
+    pub overload: f64,
+    /// Offered rate, decisions/s.
+    pub offered_rps: f64,
+    /// Requests fired.
+    pub sent: u64,
+    /// Decisions answered.
+    pub ok: u64,
+    /// Typed backpressure / quota rejections (shed admission).
+    pub shed: u64,
+    /// Typed deadline-miss errors.
+    pub deadline_missed: u64,
+    /// Anything else (transport failures, internal errors).
+    pub other_errors: u64,
+    /// Wall-clock stage duration, seconds.
+    pub elapsed_s: f64,
+    /// Completed decisions per second of wall clock.
+    pub achieved_rps: f64,
+    /// Completed-decision latency quantiles, measured from the
+    /// *scheduled* arrival (µs).
+    pub p50_us: f64,
+    /// 99th percentile (µs).
+    pub p99_us: f64,
+    /// 99.9th percentile (µs).
+    pub p999_us: f64,
+    /// `deadline_missed / sent`.
+    pub deadline_miss_rate: f64,
+}
+
+impl StageReport {
+    /// `"1x"`, `"2x"`, `"4x"`, … (the metric-key suffix).
+    pub fn label(&self) -> String {
+        overload_label(self.overload)
+    }
+}
+
+/// Outcome of a full sweep.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// One entry per overload factor, in sweep order.
+    pub stages: Vec<StageReport>,
+    /// Highest achieved throughput across stages, decisions/s.
+    pub saturation_rps: f64,
+}
+
+fn overload_label(o: f64) -> String {
+    if o == o.trunc() && o >= 0.0 {
+        format!("{}x", o as u64)
+    } else {
+        format!("{o}x")
+    }
+}
+
+impl LoadReport {
+    /// Flat metric list for export (`BENCH_serving.json` keys). The
+    /// unsuffixed SLO headline metrics come from the first stage
+    /// (nominal load); every stage also exports suffixed copies.
+    pub fn metric_pairs(&self) -> Vec<(String, f64)> {
+        let mut pairs = Vec::new();
+        if let Some(first) = self.stages.first() {
+            pairs.push(("p50_latency_us".into(), first.p50_us));
+            pairs.push(("p99_latency_us".into(), first.p99_us));
+            pairs.push(("p999_latency_us".into(), first.p999_us));
+            pairs.push(("deadline_miss_rate".into(), first.deadline_miss_rate));
+        }
+        pairs.push(("saturation_throughput_rps".into(), self.saturation_rps));
+        for stage in &self.stages {
+            let l = stage.label();
+            pairs.push((format!("p50_latency_us_{l}"), stage.p50_us));
+            pairs.push((format!("p99_latency_us_{l}"), stage.p99_us));
+            pairs.push((format!("p999_latency_us_{l}"), stage.p999_us));
+            pairs.push((format!("deadline_miss_rate_{l}"), stage.deadline_miss_rate));
+            pairs.push((format!("achieved_rps_{l}"), stage.achieved_rps));
+            pairs.push((format!("offered_rps_{l}"), stage.offered_rps));
+        }
+        pairs
+    }
+
+    /// Render the sweep as an aligned text table.
+    pub fn to_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            "stage     offered/s   achieved/s     sent       ok     shed   missed   errors \
+             p50_us    p99_us   p999_us  miss_rate\n",
+        );
+        for s in &self.stages {
+            out.push_str(&format!(
+                "{:<8} {:>10.0} {:>12.0} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8.1} {:>9.1} {:>9.1} \
+                 {:>10.4}\n",
+                s.label(),
+                s.offered_rps,
+                s.achieved_rps,
+                s.sent,
+                s.ok,
+                s.shed,
+                s.deadline_missed,
+                s.other_errors,
+                s.p50_us,
+                s.p99_us,
+                s.p999_us,
+                s.deadline_miss_rate,
+            ));
+        }
+        out.push_str(&format!("saturation throughput: {:.0} decisions/s\n", self.saturation_rps));
+        out
+    }
+
+    /// Write the `BENCH_serving.json` artifact: a `metrics` map (flat
+    /// SLO numbers, 4-decimal) plus the per-stage breakdown.
+    pub fn export_json(&self, path: &Path) -> std::io::Result<()> {
+        let mut out = String::from("{\n  \"group\": \"serving\",\n  \"metrics\": {\n");
+        let pairs = self.metric_pairs();
+        for (i, (name, value)) in pairs.iter().enumerate() {
+            let comma = if i + 1 < pairs.len() { "," } else { "" };
+            out.push_str(&format!("    \"{name}\": {value:.4}{comma}\n"));
+        }
+        out.push_str("  },\n  \"stages\": [\n");
+        for (i, s) in self.stages.iter().enumerate() {
+            let comma = if i + 1 < self.stages.len() { "," } else { "" };
+            out.push_str(&format!(
+                "    {{\"overload\": \"{}\", \"offered_rps\": {:.1}, \"achieved_rps\": {:.1}, \
+                 \"sent\": {}, \"ok\": {}, \"shed\": {}, \"deadline_missed\": {}, \
+                 \"other_errors\": {}, \"elapsed_s\": {:.3}, \"p50_us\": {:.1}, \
+                 \"p99_us\": {:.1}, \"p999_us\": {:.1}, \"deadline_miss_rate\": {:.4}}}{comma}\n",
+                s.label(),
+                s.offered_rps,
+                s.achieved_rps,
+                s.sent,
+                s.ok,
+                s.shed,
+                s.deadline_missed,
+                s.other_errors,
+                s.elapsed_s,
+                s.p50_us,
+                s.p99_us,
+                s.p999_us,
+                s.deadline_miss_rate,
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(out.as_bytes())
+    }
+}
+
+/// Where `bayes-mem loadgen` writes its artifact by default: next to
+/// the other `BENCH_*.json` exports at the repository root.
+pub fn default_export_path() -> PathBuf {
+    let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().unwrap_or(manifest).join("BENCH_serving.json")
+}
+
+/// The three mixed-workload plan ids, prepared once per run.
+#[derive(Clone, Copy)]
+struct MixPlans {
+    inference: u32,
+    fusion: u32,
+    network: u32,
+}
+
+fn prepare_mix(client: &mut Client, cfg: &LoadgenConfig) -> Result<MixPlans> {
+    let policy = WirePolicy {
+        deadline_us: cfg.deadline_us,
+        bits: cfg.bits,
+        threshold: None,
+        max_half_width: None,
+        allow_partial: false,
+    };
+    Ok(MixPlans {
+        inference: client.prepare(WireSpec::Inference, policy)?,
+        fusion: client.prepare(WireSpec::Fusion { modalities: 2 }, policy)?,
+        network: client.prepare(
+            WireSpec::Network {
+                spec_toml: MIX_NETWORK_TOML.into(),
+                query: "fog".into(),
+                evidence: vec![("alarm".into(), true)],
+            },
+            policy,
+        )?,
+    })
+}
+
+/// Per-thread stage tallies, merged after join.
+#[derive(Default)]
+struct Tally {
+    sent: u64,
+    ok: u64,
+    shed: u64,
+    deadline_missed: u64,
+    other_errors: u64,
+    hist: NsHistogram,
+}
+
+impl Tally {
+    fn merge(&mut self, other: &Tally) {
+        self.sent += other.sent;
+        self.ok += other.ok;
+        self.shed += other.shed;
+        self.deadline_missed += other.deadline_missed;
+        self.other_errors += other.other_errors;
+        self.hist.merge(&other.hist);
+    }
+}
+
+fn pick_request(rng: &mut Rng, mix: (u32, u32, u32), plans: &MixPlans) -> (u32, WireParams) {
+    let total = (mix.0 + mix.1 + mix.2).max(1);
+    let r = (rng.next_u64() % total as u64) as u32;
+    if r < mix.0 {
+        (
+            plans.inference,
+            WireParams::Inference {
+                prior: rng.range_f64(0.2, 0.8),
+                likelihood: rng.range_f64(0.55, 0.95),
+                likelihood_not: rng.range_f64(0.05, 0.45),
+            },
+        )
+    } else if r < mix.0 + mix.1 {
+        (
+            plans.fusion,
+            WireParams::Fusion {
+                posteriors: vec![rng.range_f64(0.3, 0.9), rng.range_f64(0.3, 0.9)],
+            },
+        )
+    } else {
+        (plans.network, WireParams::Network)
+    }
+}
+
+fn run_stage(cfg: &LoadgenConfig, overload: f64, plans: &MixPlans) -> Result<StageReport> {
+    let offered_rps = cfg.rate * overload;
+    let total = ((cfg.requests as f64) * overload).round() as u64;
+    let interval = Duration::from_secs_f64(1.0 / offered_rps.max(1.0));
+    let conns = cfg.connections.clamp(1, total.max(1) as usize);
+    let start = Instant::now() + Duration::from_millis(5);
+
+    let mut threads = Vec::with_capacity(conns);
+    for i in 0..conns {
+        let cfg = cfg.clone();
+        let mix = *plans;
+        let handle = thread::Builder::new().name(format!("loadgen-{i}")).spawn(
+            move || -> Result<Tally> {
+                let mut client = Client::connect(&cfg.addr, &cfg.tenant)?;
+                let mut rng =
+                    Rng::seeded(cfg.seed ^ (overload.to_bits()) ^ ((i as u64) << 17));
+                let mut tally = Tally::default();
+                let mut j = i as u64;
+                while j < total {
+                    let target = start + interval.mul_f64(j as f64);
+                    let now = Instant::now();
+                    if target > now {
+                        thread::sleep(target - now);
+                    }
+                    let (plan, params) = pick_request(&mut rng, cfg.mix, &mix);
+                    tally.sent += 1;
+                    match client.decide_raw(plan, params) {
+                        Ok(Ok(_decision)) => {
+                            tally.ok += 1;
+                            let ns = target.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+                            tally.hist.record(ns);
+                        }
+                        Ok(Err((ErrorCode::Deadline, _))) => tally.deadline_missed += 1,
+                        Ok(Err((
+                            ErrorCode::Backpressure | ErrorCode::QuotaExhausted,
+                            _,
+                        ))) => tally.shed += 1,
+                        Ok(Err(_)) => tally.other_errors += 1,
+                        Err(_) => {
+                            // Transport failure: the connection is gone;
+                            // count the rest of this stripe as errors.
+                            tally.other_errors += 1 + (total.saturating_sub(j) / conns as u64);
+                            break;
+                        }
+                    }
+                    j += conns as u64;
+                }
+                Ok(tally)
+            },
+        );
+        threads.push(handle?);
+    }
+
+    let mut tally = Tally::default();
+    for t in threads {
+        let part = t
+            .join()
+            .map_err(|_| Error::Runtime("loadgen worker panicked".into()))??;
+        tally.merge(&part);
+    }
+    let elapsed_s = start.elapsed().as_secs_f64().max(1e-9);
+    Ok(StageReport {
+        overload,
+        offered_rps,
+        sent: tally.sent,
+        ok: tally.ok,
+        shed: tally.shed,
+        deadline_missed: tally.deadline_missed,
+        other_errors: tally.other_errors,
+        elapsed_s,
+        achieved_rps: tally.ok as f64 / elapsed_s,
+        p50_us: tally.hist.quantile_ns(0.5) as f64 / 1_000.0,
+        p99_us: tally.hist.quantile_ns(0.99) as f64 / 1_000.0,
+        p999_us: tally.hist.quantile_ns(0.999) as f64 / 1_000.0,
+        deadline_miss_rate: if tally.sent == 0 {
+            0.0
+        } else {
+            tally.deadline_missed as f64 / tally.sent as f64
+        },
+    })
+}
+
+/// Run the sweep: prepare the mixed plan set once, then drive the
+/// open-loop schedule at every overload factor in turn.
+pub fn run(cfg: &LoadgenConfig) -> Result<LoadReport> {
+    if cfg.rate <= 0.0 || !cfg.rate.is_finite() {
+        return Err(Error::Config(format!("loadgen rate must be > 0, got {}", cfg.rate)));
+    }
+    if cfg.requests == 0 {
+        return Err(Error::Config("loadgen requests must be > 0".into()));
+    }
+    let overloads = if cfg.overloads.is_empty() { vec![1.0] } else { cfg.overloads.clone() };
+    if let Some(bad) = overloads.iter().find(|o| !o.is_finite() || **o <= 0.0) {
+        return Err(Error::Config(format!("overload factors must be > 0, got {bad}")));
+    }
+    let mut control = Client::connect(&cfg.addr, &cfg.tenant)?;
+    let plans = prepare_mix(&mut control, cfg)?;
+    let mut stages = Vec::with_capacity(overloads.len());
+    for overload in overloads {
+        stages.push(run_stage(cfg, overload, &plans)?);
+    }
+    let saturation_rps = stages.iter().map(|s| s.achieved_rps).fold(0.0, f64::max);
+    Ok(LoadReport { stages, saturation_rps })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overload_labels_are_stable() {
+        assert_eq!(overload_label(1.0), "1x");
+        assert_eq!(overload_label(4.0), "4x");
+        assert_eq!(overload_label(0.5), "0.5x");
+    }
+
+    #[test]
+    fn metric_pairs_carry_slo_keys_per_stage() {
+        let stage = |o: f64| StageReport {
+            overload: o,
+            offered_rps: 1000.0 * o,
+            sent: 100,
+            ok: 90,
+            shed: 8,
+            deadline_missed: 2,
+            other_errors: 0,
+            elapsed_s: 0.1,
+            achieved_rps: 900.0,
+            p50_us: 100.0,
+            p99_us: 400.0,
+            p999_us: 800.0,
+            deadline_miss_rate: 0.02,
+        };
+        let report =
+            LoadReport { stages: vec![stage(1.0), stage(2.0), stage(4.0)], saturation_rps: 900.0 };
+        let pairs = report.metric_pairs();
+        let has = |k: &str| pairs.iter().any(|(n, _)| n == k);
+        for key in [
+            "p50_latency_us",
+            "p99_latency_us",
+            "p999_latency_us",
+            "deadline_miss_rate",
+            "saturation_throughput_rps",
+            "p99_latency_us_1x",
+            "p99_latency_us_2x",
+            "p99_latency_us_4x",
+            "deadline_miss_rate_4x",
+            "achieved_rps_2x",
+        ] {
+            assert!(has(key), "missing metric {key}");
+        }
+    }
+
+    #[test]
+    fn export_json_is_balanced_and_greppable() {
+        let report = LoadReport {
+            stages: vec![StageReport {
+                overload: 1.0,
+                offered_rps: 2500.0,
+                sent: 10,
+                ok: 10,
+                shed: 0,
+                deadline_missed: 0,
+                other_errors: 0,
+                elapsed_s: 0.004,
+                achieved_rps: 2500.0,
+                p50_us: 120.0,
+                p99_us: 300.0,
+                p999_us: 350.0,
+                deadline_miss_rate: 0.0,
+            }],
+            saturation_rps: 2500.0,
+        };
+        let dir = std::env::temp_dir().join("bayes_mem_loadgen_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_serving.json");
+        report.export_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.matches('{').count(), text.matches('}').count());
+        assert!(text.contains("\"p99_latency_us\""), "{text}");
+        assert!(text.contains("\"deadline_miss_rate\""), "{text}");
+        assert!(text.contains("\"saturation_throughput_rps\""), "{text}");
+        let table = report.to_table();
+        assert!(table.contains("1x"), "{table}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn bad_config_is_rejected() {
+        let cfg = LoadgenConfig { rate: 0.0, ..LoadgenConfig::default() };
+        assert!(run(&cfg).is_err());
+        let cfg = LoadgenConfig { requests: 0, ..LoadgenConfig::default() };
+        assert!(run(&cfg).is_err());
+        let cfg = LoadgenConfig {
+            overloads: vec![-1.0],
+            addr: "127.0.0.1:1".into(),
+            ..LoadgenConfig::default()
+        };
+        assert!(run(&cfg).is_err());
+    }
+}

@@ -1,0 +1,39 @@
+//! Production front door: TCP wire protocol, multi-tenant sharded
+//! serving, and an open-loop SLO load harness.
+//!
+//! Everything in-process stays on [`crate::coordinator`] handles; this
+//! module is the network boundary in front of them:
+//!
+//! * [`wire`] — the length-prefixed binary protocol (magic + version +
+//!   frame type + tenant id), with strict bounds-checked decoding:
+//!   malformed, truncated, or oversized frames become typed error
+//!   frames, never panics or unbounded allocations.
+//! * [`server`] — `bayes-mem serve`: a [`Server`] accepts concurrent
+//!   connections, pins each tenant to one of N coordinator shards, and
+//!   gives every tenant its own plan namespace, plan cache, quotas,
+//!   admission policy (block vs shed), and metrics registry — one
+//!   tenant exhausting its quota cannot evict another tenant's plans
+//!   or starve its queue.
+//! * [`client`] — the blocking [`Client`] the CLI, tests, and load
+//!   generator speak.
+//! * [`loadgen`] — `bayes-mem loadgen`: an open-loop arrival schedule
+//!   (latency measured from *scheduled* arrival, so schedule slip is
+//!   charged to the server) swept at 1×/2×/4× overload, exporting
+//!   p50/p99/p999, deadline-miss rate, and saturation throughput to
+//!   `BENCH_serving.json`.
+//!
+//! Control plane (prepare, metrics, shutdown) and data plane (decide,
+//! decide-batch) share one connection; requests on a connection are
+//! answered in order.
+
+pub mod client;
+pub mod loadgen;
+pub mod server;
+pub mod wire;
+
+pub use client::{error_from_frame, Client, FrameError};
+pub use loadgen::{LoadReport, LoadgenConfig, StageReport};
+pub use server::{Server, TenantSpec};
+pub use wire::{
+    ErrorCode, Frame, WireDecision, WireError, WireParams, WirePolicy, WireSpec,
+};

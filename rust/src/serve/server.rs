@@ -1,0 +1,610 @@
+//! The TCP front door: a `std::net` listener fanning concurrent client
+//! connections onto **sharded coordinators** with per-tenant isolation.
+//!
+//! Every request frame names a tenant. A tenant owns:
+//!
+//! * a **plan namespace** — its own [`PlanCache`] view plus a
+//!   wire-plan-id registry, so one tenant churning plans cannot evict
+//!   another tenant's compiled netlists;
+//! * **quotas** — a plan-count cap and an in-flight decision cap,
+//!   enforced at the front door before the shard's admission queue is
+//!   touched;
+//! * an **admission policy** — shed-on-overflow (typed backpressure
+//!   error, flat tail latency) or blocking admission (absorb the
+//!   backlog, PR 5 semantics), chosen per tenant;
+//! * a **metrics registry** — an isolated [`Metrics`] instance behind
+//!   the wire `Metrics` frame and `bayes-mem metrics --tenant`.
+//!
+//! Tenants are pinned to one of `serve.shards` coordinators by a
+//! stable hash of the tenant id, so a tenant's decisions always meet
+//! the same admission queue (its backpressure story is coherent) while
+//! aggregate load spreads across shards. The control plane (Prepare)
+//! compiles on the connection thread; the data plane (Decide /
+//! DecideBatch) only binds parameters and rides the shard's batcher.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use crate::config::{AdmissionPolicy, AppConfig};
+use crate::coordinator::{
+    Coordinator, CoordinatorHandle, Metrics, MetricsSnapshot, PlanCache, PlanSpec, Policy,
+    PreparedPlan,
+};
+use crate::network::BayesNet;
+use crate::obs::expose;
+use crate::{Error, Result};
+
+use super::wire::{self, ErrorCode, Frame, WireDecision, WireParams, WireSpec};
+
+/// Per-tenant serving contract: admission behavior plus quotas.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    /// Tenant id as it appears in frame headers.
+    pub name: String,
+    /// Queue-full behavior for this tenant's decisions.
+    pub admission: AdmissionPolicy,
+    /// In-flight decision quota.
+    pub max_inflight: usize,
+    /// Plan-namespace quota (registered wire plans).
+    pub max_plans: usize,
+    /// Capacity of the tenant's private plan-cache view.
+    pub plan_cache_capacity: usize,
+}
+
+impl TenantSpec {
+    /// The default tenant contract from the `[serve]` config section.
+    pub fn from_config(name: &str, cfg: &AppConfig) -> Self {
+        TenantSpec {
+            name: name.to_string(),
+            admission: cfg.serve.admission,
+            max_inflight: cfg.serve.max_inflight,
+            max_plans: cfg.serve.max_plans,
+            plan_cache_capacity: cfg.serve.plan_cache_capacity,
+        }
+    }
+}
+
+/// A registered wire plan: the compiled netlist plus the policy every
+/// decision on it runs under.
+struct PlanEntry {
+    plan: Arc<PreparedPlan>,
+    policy: Policy,
+}
+
+/// One tenant's isolated serving state.
+struct Tenant {
+    spec: TenantSpec,
+    /// Which coordinator shard this tenant's decisions ride.
+    shard: usize,
+    /// Isolated metrics registry (per-tenant exposition).
+    metrics: Arc<Metrics>,
+    /// Private plan-cache view: this tenant's churn evicts only here.
+    cache: PlanCache,
+    /// Wire plan id → compiled plan + policy.
+    plans: Mutex<HashMap<u32, PlanEntry>>,
+    next_plan: AtomicU32,
+    inflight: AtomicU64,
+}
+
+impl Tenant {
+    fn new(spec: TenantSpec, shard: usize) -> Self {
+        let metrics = Arc::new(Metrics::new());
+        let cache = PlanCache::with_metrics(spec.plan_cache_capacity, Arc::clone(&metrics));
+        Tenant {
+            spec,
+            shard,
+            metrics,
+            cache,
+            plans: Mutex::new(HashMap::new()),
+            next_plan: AtomicU32::new(1),
+            inflight: AtomicU64::new(0),
+        }
+    }
+
+    /// Reserve `n` in-flight slots against the quota, or fail without
+    /// disturbing other tenants.
+    fn acquire_inflight(
+        &self,
+        n: u64,
+    ) -> std::result::Result<InflightGuard<'_>, (ErrorCode, String)> {
+        let prev = self.inflight.fetch_add(n, Ordering::AcqRel);
+        if prev + n > self.spec.max_inflight as u64 {
+            self.inflight.fetch_sub(n, Ordering::AcqRel);
+            return Err((
+                ErrorCode::QuotaExhausted,
+                format!(
+                    "tenant {:?} in-flight quota exhausted ({} + {n} > {})",
+                    self.spec.name, prev, self.spec.max_inflight
+                ),
+            ));
+        }
+        Ok(InflightGuard { tenant: self, n })
+    }
+}
+
+/// RAII release of reserved in-flight slots.
+struct InflightGuard<'a> {
+    tenant: &'a Tenant,
+    n: u64,
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.tenant.inflight.fetch_sub(self.n, Ordering::AcqRel);
+    }
+}
+
+/// Shared server state reachable from every connection thread.
+struct Inner {
+    app: AppConfig,
+    handles: Vec<CoordinatorHandle>,
+    tenants: Mutex<HashMap<String, Arc<Tenant>>>,
+    /// Pre-registered tenant contracts (overrides of the config
+    /// template), applied when the tenant first appears on the wire.
+    overrides: HashMap<String, TenantSpec>,
+    stop: AtomicBool,
+}
+
+/// The TCP serving front door. Binds at [`Server::start`], serves until
+/// a wire `Shutdown` frame (or [`Server::shutdown`]), and joins its
+/// coordinator shards on the way down.
+pub struct Server {
+    inner: Arc<Inner>,
+    addr: SocketAddr,
+    accept: Option<JoinHandle<()>>,
+    shards: Vec<Coordinator>,
+}
+
+impl Server {
+    /// Bind `listen` (e.g. `"127.0.0.1:0"`) and start `app.serve.shards`
+    /// coordinator shards behind it. `tenants` pre-registers per-tenant
+    /// contracts; tenants not listed get the `[serve]` template on
+    /// first use.
+    pub fn start(listen: &str, app: &AppConfig, tenants: Vec<TenantSpec>) -> Result<Self> {
+        app.validate()?;
+        let listener = TcpListener::bind(listen)?;
+        let addr = listener.local_addr()?;
+        let mut shards = Vec::with_capacity(app.serve.shards);
+        let mut handles = Vec::with_capacity(app.serve.shards);
+        for _ in 0..app.serve.shards {
+            let shard = Coordinator::start(app)?;
+            handles.push(shard.handle());
+            shards.push(shard);
+        }
+        let overrides = tenants.into_iter().map(|t| (t.name.clone(), t)).collect();
+        let inner = Arc::new(Inner {
+            app: app.clone(),
+            handles,
+            tenants: Mutex::new(HashMap::new()),
+            overrides,
+            stop: AtomicBool::new(false),
+        });
+        let accept = {
+            let inner = Arc::clone(&inner);
+            thread::Builder::new()
+                .name("serve-accept".into())
+                .spawn(move || accept_loop(listener, inner))
+                .map_err(Error::Io)?
+        };
+        Ok(Server { inner, addr, accept: Some(accept), shards })
+    }
+
+    /// The bound address (use with `"127.0.0.1:0"` to discover the
+    /// ephemeral port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// `true` once a shutdown has been requested (wire frame or local).
+    pub fn shutdown_requested(&self) -> bool {
+        self.inner.stop.load(Ordering::Acquire)
+    }
+
+    /// Names of tenants that have appeared on the wire so far.
+    pub fn tenant_names(&self) -> Vec<String> {
+        let mut names: Vec<String> =
+            self.inner.tenants.lock().unwrap().keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// One tenant's isolated metrics snapshot.
+    pub fn tenant_snapshot(&self, name: &str) -> Option<MetricsSnapshot> {
+        let tenants = self.inner.tenants.lock().unwrap();
+        tenants.get(name).map(|t| t.metrics.snapshot())
+    }
+
+    /// One tenant's Prometheus-style exposition
+    /// ([`expose::prometheus_tenant`]).
+    pub fn tenant_exposition(&self, name: &str) -> Option<String> {
+        self.tenant_snapshot(name).map(|snap| expose::prometheus_tenant(name, &snap))
+    }
+
+    /// Aggregate exposition of one coordinator shard (shard-level
+    /// counters cut across tenants).
+    pub fn shard_exposition(&self, shard: usize) -> Option<String> {
+        self.inner.handles.get(shard).map(|h| h.exposition())
+    }
+
+    /// Which coordinator shard `name`'s decisions would ride (stable
+    /// across restarts — useful for capacity planning and for tests
+    /// that need tenants on distinct shards).
+    pub fn shard_of(&self, name: &str) -> usize {
+        shard_for(name, self.inner.handles.len())
+    }
+
+    /// Block until a shutdown is requested (a wire `Shutdown` frame),
+    /// then tear down listener and shards.
+    pub fn run(self) -> Result<()> {
+        while !self.inner.stop.load(Ordering::Acquire) {
+            thread::sleep(Duration::from_millis(25));
+        }
+        self.shutdown()
+    }
+
+    /// Stop accepting, join the accept thread, and shut the coordinator
+    /// shards down (draining their queues).
+    pub fn shutdown(mut self) -> Result<()> {
+        self.inner.stop.store(true, Ordering::Release);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(accept) = self.accept.take() {
+            let _ = accept.join();
+        }
+        for shard in self.shards.drain(..) {
+            shard.shutdown();
+        }
+        Ok(())
+    }
+}
+
+/// Stable tenant → shard pinning.
+fn shard_for(name: &str, shards: usize) -> usize {
+    let mut h = DefaultHasher::new();
+    name.hash(&mut h);
+    (h.finish() % shards.max(1) as u64) as usize
+}
+
+fn accept_loop(listener: TcpListener, inner: Arc<Inner>) {
+    for stream in listener.incoming() {
+        if inner.stop.load(Ordering::Acquire) {
+            break;
+        }
+        let Ok(stream) = stream else { continue };
+        let inner = Arc::clone(&inner);
+        // Connection threads are detached: they exit when the client
+        // closes (or on an unrecoverable wire error), and a server
+        // shutdown fails their submissions with typed errors.
+        let _ = thread::Builder::new()
+            .name("serve-conn".into())
+            .spawn(move || handle_conn(stream, inner));
+    }
+}
+
+fn handle_conn(mut stream: TcpStream, inner: Arc<Inner>) {
+    let _ = stream.set_nodelay(true);
+    loop {
+        match wire::read_frame(&mut stream) {
+            Ok((tenant, frame)) => {
+                let (reply, close) = inner.serve_frame(&tenant, frame);
+                if wire::write_frame(&mut stream, &tenant, &reply).is_err() || close {
+                    break;
+                }
+            }
+            Err(wire::WireError::Closed) => break,
+            Err(e) => {
+                // Typed error frame back to the peer; carry on only if
+                // the stream is still frame-aligned.
+                let reply = Frame::Error { code: e.code(), message: e.to_string() };
+                let aligned = e.recoverable();
+                if wire::write_frame(&mut stream, "", &reply).is_err() || !aligned {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+impl Inner {
+    /// Fetch or lazily create the tenant for `name`.
+    fn tenant(&self, name: &str) -> std::result::Result<Arc<Tenant>, (ErrorCode, String)> {
+        if name.is_empty() {
+            return Err((ErrorCode::UnknownTenant, "empty tenant id".into()));
+        }
+        let mut tenants = self.tenants.lock().unwrap();
+        if let Some(t) = tenants.get(name) {
+            return Ok(Arc::clone(t));
+        }
+        let spec = self
+            .overrides
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| TenantSpec::from_config(name, &self.app));
+        let tenant = Arc::new(Tenant::new(spec, shard_for(name, self.handles.len())));
+        tenants.insert(name.to_string(), Arc::clone(&tenant));
+        Ok(tenant)
+    }
+
+    /// Serve one request frame; returns the reply and whether the
+    /// connection should close afterwards.
+    fn serve_frame(&self, tenant_name: &str, frame: Frame) -> (Frame, bool) {
+        if self.stop.load(Ordering::Acquire) && !matches!(frame, Frame::Shutdown) {
+            return (err_frame((ErrorCode::Shutdown, "server is shutting down".into())), true);
+        }
+        match frame {
+            Frame::Shutdown => {
+                self.stop.store(true, Ordering::Release);
+                (Frame::ShutdownAck, true)
+            }
+            Frame::Metrics => match self.tenant(tenant_name) {
+                Ok(t) => {
+                    let text = expose::prometheus_tenant(&t.spec.name, &t.metrics.snapshot());
+                    (Frame::MetricsText(text), false)
+                }
+                Err(e) => (err_frame(e), false),
+            },
+            Frame::Prepare { spec, policy } => match self.prepare(tenant_name, spec, policy) {
+                Ok(plan) => (Frame::Prepared { plan }, false),
+                Err(e) => (err_frame(e), false),
+            },
+            Frame::Decide { plan, params } => match self.decide(tenant_name, plan, &params) {
+                Ok(d) => (Frame::Decision(d), false),
+                Err(e) => (err_frame(e), false),
+            },
+            Frame::DecideBatch { plan, params } => {
+                match self.decide_batch(tenant_name, plan, &params) {
+                    Ok(items) => (Frame::DecisionBatch(items), false),
+                    Err(e) => (err_frame(e), false),
+                }
+            }
+            // A response frame arriving as a request is a peer bug; the
+            // stream is aligned, so answer typed and keep serving.
+            other => (
+                err_frame((
+                    ErrorCode::Malformed,
+                    format!("frame type {:#04x} is not a request", other.frame_type()),
+                )),
+                false,
+            ),
+        }
+    }
+
+    /// Control plane: compile `spec` into the tenant's namespace.
+    fn prepare(
+        &self,
+        tenant_name: &str,
+        spec: WireSpec,
+        policy: wire::WirePolicy,
+    ) -> std::result::Result<u32, (ErrorCode, String)> {
+        let tenant = self.tenant(tenant_name)?;
+        let policy = policy.to_policy();
+        policy.validate().map_err(|e| (ErrorCode::Rejected, e.to_string()))?;
+        {
+            let plans = tenant.plans.lock().unwrap();
+            if plans.len() >= tenant.spec.max_plans {
+                return Err((
+                    ErrorCode::QuotaExhausted,
+                    format!(
+                        "tenant {:?} plan quota exhausted ({} plans)",
+                        tenant.spec.name, tenant.spec.max_plans
+                    ),
+                ));
+            }
+        }
+        let spec = lower_spec(spec).map_err(|e| (ErrorCode::Rejected, e.to_string()))?;
+        let plan = tenant
+            .cache
+            .prepare(spec)
+            .map_err(|e| (ErrorCode::Rejected, e.to_string()))?;
+        let id = tenant.next_plan.fetch_add(1, Ordering::AcqRel);
+        tenant.plans.lock().unwrap().insert(id, PlanEntry { plan, policy });
+        Ok(id)
+    }
+
+    /// Data plane: one decision against a registered plan.
+    fn decide(
+        &self,
+        tenant_name: &str,
+        plan: u32,
+        params: &WireParams,
+    ) -> std::result::Result<WireDecision, (ErrorCode, String)> {
+        let tenant = self.tenant(tenant_name)?;
+        let _slot = tenant.acquire_inflight(1).inspect_err(|_| tenant.metrics.on_reject())?;
+        let (prepared, policy) = lookup_plan(&tenant, plan)?;
+        self.decide_on_shard(&tenant, &prepared, policy, params)
+    }
+
+    /// Data plane: a batch against one plan, answered in order. The
+    /// whole batch reserves in-flight quota up front; per-decision
+    /// failures are reported per entry without failing the frame.
+    #[allow(clippy::type_complexity)]
+    fn decide_batch(
+        &self,
+        tenant_name: &str,
+        plan: u32,
+        params: &[WireParams],
+    ) -> std::result::Result<
+        Vec<std::result::Result<WireDecision, (ErrorCode, String)>>,
+        (ErrorCode, String),
+    > {
+        let tenant = self.tenant(tenant_name)?;
+        let _slots = tenant
+            .acquire_inflight(params.len() as u64)
+            .inspect_err(|_| tenant.metrics.on_reject())?;
+        let (prepared, policy) = lookup_plan(&tenant, plan)?;
+        let handle = &self.handles[tenant.shard];
+        // Submit everything up front so the shard's dynamic batcher can
+        // form full batches, then collect in order.
+        let pendings: Vec<_> = params
+            .iter()
+            .map(|p| self.submit_one(&tenant, handle, &prepared, policy, p))
+            .collect();
+        Ok(pendings
+            .into_iter()
+            .map(|pending| pending.and_then(|p| self.wait_one(&tenant, &prepared, p)))
+            .collect())
+    }
+
+    fn decide_on_shard(
+        &self,
+        tenant: &Tenant,
+        prepared: &Arc<PreparedPlan>,
+        policy: Policy,
+        params: &WireParams,
+    ) -> std::result::Result<WireDecision, (ErrorCode, String)> {
+        let handle = &self.handles[tenant.shard];
+        let pending = self.submit_one(tenant, handle, prepared, policy, params)?;
+        self.wait_one(tenant, prepared, pending)
+    }
+
+    fn submit_one(
+        &self,
+        tenant: &Tenant,
+        handle: &CoordinatorHandle,
+        prepared: &Arc<PreparedPlan>,
+        policy: Policy,
+        params: &WireParams,
+    ) -> std::result::Result<crate::coordinator::PendingDecision, (ErrorCode, String)> {
+        let params = params.to_params();
+        let submitted = match tenant.spec.admission {
+            AdmissionPolicy::Block => handle.submit_prepared_blocking(prepared, params, policy),
+            AdmissionPolicy::Shed => handle.submit_prepared(prepared, params, policy),
+        };
+        match submitted {
+            Ok(pending) => {
+                tenant.metrics.on_submit();
+                Ok(pending)
+            }
+            Err(e) => {
+                tenant.metrics.on_reject();
+                Err(classify(&e))
+            }
+        }
+    }
+
+    fn wait_one(
+        &self,
+        tenant: &Tenant,
+        prepared: &Arc<PreparedPlan>,
+        pending: crate::coordinator::PendingDecision,
+    ) -> std::result::Result<WireDecision, (ErrorCode, String)> {
+        match pending.wait() {
+            Ok(d) => {
+                tenant.metrics.on_complete(d.latency, d.hardware_ns, prepared.tag());
+                Ok(WireDecision::from_decision(&d))
+            }
+            Err(e @ Error::Deadline(_)) => {
+                tenant.metrics.on_deadline_miss();
+                Err(classify(&e))
+            }
+            Err(e) => {
+                tenant.metrics.on_fail();
+                Err(classify(&e))
+            }
+        }
+    }
+}
+
+fn lookup_plan(
+    tenant: &Tenant,
+    plan: u32,
+) -> std::result::Result<(Arc<PreparedPlan>, Policy), (ErrorCode, String)> {
+    let plans = tenant.plans.lock().unwrap();
+    match plans.get(&plan) {
+        Some(entry) => Ok((Arc::clone(&entry.plan), entry.policy)),
+        None => Err((
+            ErrorCode::UnknownPlan,
+            format!("tenant {:?} has no plan {plan}", tenant.spec.name),
+        )),
+    }
+}
+
+/// Lower a wire spec into the coordinator's [`PlanSpec`] (network specs
+/// compile through the same TOML parser as the CLI's `--spec` files).
+fn lower_spec(spec: WireSpec) -> Result<PlanSpec> {
+    Ok(match spec {
+        WireSpec::Inference => PlanSpec::Inference,
+        WireSpec::Fusion { modalities } => PlanSpec::Fusion { modalities: modalities as usize },
+        WireSpec::Network { spec_toml, query, evidence } => {
+            let net = BayesNet::from_toml_str(&spec_toml)?;
+            PlanSpec::Network { net: Arc::new(net), query, evidence }
+        }
+    })
+}
+
+fn err_frame((code, message): (ErrorCode, String)) -> Frame {
+    Frame::Error { code, message }
+}
+
+/// Map crate errors onto wire error codes.
+fn classify(e: &Error) -> (ErrorCode, String) {
+    let code = match e {
+        Error::Shutdown => ErrorCode::Shutdown,
+        Error::Deadline(_) => ErrorCode::Deadline,
+        Error::Coordinator(msg) if msg.contains("backpressure") => ErrorCode::Backpressure,
+        Error::ProbabilityRange { .. }
+        | Error::LengthMismatch { .. }
+        | Error::Config(_)
+        | Error::Network(_)
+        | Error::Toml(_) => ErrorCode::Rejected,
+        _ => ErrorCode::Internal,
+    };
+    (code, e.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_pinning_is_stable_and_in_range() {
+        for shards in 1..6 {
+            for name in ["alpha", "beta", "cam-ingest", "x"] {
+                let s = shard_for(name, shards);
+                assert!(s < shards);
+                assert_eq!(s, shard_for(name, shards), "pinning must be deterministic");
+            }
+        }
+    }
+
+    #[test]
+    fn classify_maps_typed_errors() {
+        assert_eq!(classify(&Error::Shutdown).0, ErrorCode::Shutdown);
+        assert_eq!(classify(&Error::Deadline(Duration::from_micros(1))).0, ErrorCode::Deadline);
+        assert_eq!(
+            classify(&Error::Coordinator("admission queue full (backpressure)".into())).0,
+            ErrorCode::Backpressure
+        );
+        assert_eq!(classify(&Error::Network("bad dag".into())).0, ErrorCode::Rejected);
+        assert_eq!(classify(&Error::Runtime("boom".into())).0, ErrorCode::Internal);
+    }
+
+    #[test]
+    fn lower_spec_compiles_network_toml() {
+        let toml = "[network]\nname = \"mini\"\n\n[nodes.a]\nprior = 0.3\n";
+        let spec = lower_spec(WireSpec::Network {
+            spec_toml: toml.into(),
+            query: "a".into(),
+            evidence: vec![],
+        });
+        match spec {
+            Ok(PlanSpec::Network { net, query, .. }) => {
+                assert_eq!(net.len(), 1);
+                assert_eq!(query, "a");
+            }
+            other => panic!("unexpected: {other:?}"),
+        }
+        assert!(lower_spec(WireSpec::Network {
+            spec_toml: "not toml [".into(),
+            query: "a".into(),
+            evidence: vec![],
+        })
+        .is_err());
+    }
+}

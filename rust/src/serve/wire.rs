@@ -1,0 +1,1247 @@
+//! Length-prefixed binary wire protocol for the TCP serving front door.
+//!
+//! Every frame is `header ‖ tenant ‖ payload`:
+//!
+//! | offset | size | field |
+//! |---|---|---|
+//! | 0 | 4 | magic `b"BMWP"` |
+//! | 4 | 1 | protocol version ([`VERSION`]) |
+//! | 5 | 1 | frame type code |
+//! | 6 | 1 | tenant-id length (bytes, ≤ [`MAX_TENANT_LEN`]) |
+//! | 7 | 1 | reserved (must be 0) |
+//! | 8 | 4 | payload length, u32 LE (≤ [`MAX_PAYLOAD`]) |
+//! | 12 | n | tenant id (UTF-8) |
+//! | 12+n | m | payload |
+//!
+//! Integers are little-endian; floats are IEEE-754 bit patterns;
+//! strings are `u32 length ‖ UTF-8 bytes`. Decoding is strict and
+//! bounds-checked end to end: oversized frames are rejected **before**
+//! any allocation, truncated or garbage input yields a typed
+//! [`WireError`] (never a panic), and payloads with trailing bytes are
+//! malformed. Errors split into two recovery classes (see
+//! [`WireError::recoverable`]): a stream that is still frame-aligned
+//! (the bad bytes were fully consumed) can carry on after an error
+//! frame; a desynchronized stream must be closed.
+
+use std::io::{self, Read, Write};
+use std::time::Duration;
+
+use crate::coordinator::{Decision, StopReason};
+
+/// Frame magic: first four bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"BMWP";
+/// Protocol version carried in byte 4.
+pub const VERSION: u8 = 1;
+/// Fixed header length in bytes.
+pub const HEADER_LEN: usize = 12;
+/// Hard cap on payload length — decode rejects anything larger before
+/// allocating, so a hostile length prefix cannot balloon memory.
+pub const MAX_PAYLOAD: u32 = 1 << 20;
+/// Hard cap on the tenant-id field.
+pub const MAX_TENANT_LEN: usize = 64;
+/// Hard cap on `DecideBatch` arity (both directions).
+pub const MAX_WIRE_BATCH: usize = 4096;
+
+/// Frame type codes (request frames are `0x0n`, responses `0x8n`).
+mod ftype {
+    pub const PREPARE: u8 = 0x01;
+    pub const DECIDE: u8 = 0x02;
+    pub const DECIDE_BATCH: u8 = 0x03;
+    pub const METRICS: u8 = 0x04;
+    pub const SHUTDOWN: u8 = 0x05;
+    pub const PREPARED: u8 = 0x81;
+    pub const DECISION: u8 = 0x82;
+    pub const DECISION_BATCH: u8 = 0x83;
+    pub const METRICS_TEXT: u8 = 0x84;
+    pub const SHUTDOWN_ACK: u8 = 0x85;
+    pub const ERROR: u8 = 0xFF;
+}
+
+/// Typed error codes carried by [`Frame::Error`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u16)]
+pub enum ErrorCode {
+    /// Payload failed strict decode (or a response frame was sent as a
+    /// request). The stream stays aligned.
+    Malformed = 1,
+    /// Header version byte did not match [`VERSION`].
+    WrongVersion = 2,
+    /// Declared payload or tenant length exceeded the protocol caps.
+    Oversized = 3,
+    /// Unknown frame type code (payload was consumed; stream aligned).
+    UnknownFrame = 4,
+    /// Decide referenced a plan id this tenant never prepared.
+    UnknownPlan = 5,
+    /// Empty or otherwise unusable tenant id.
+    UnknownTenant = 6,
+    /// Tenant plan or in-flight quota exhausted.
+    QuotaExhausted = 7,
+    /// Shed-policy admission queue was full.
+    Backpressure = 8,
+    /// Decision missed its deadline.
+    Deadline = 9,
+    /// Request failed validation at admission.
+    Rejected = 10,
+    /// Server (or its coordinator shard) is shutting down.
+    Shutdown = 11,
+    /// Anything else — the message says what.
+    Internal = 12,
+}
+
+impl ErrorCode {
+    /// Decode from the wire representation.
+    pub fn from_u16(v: u16) -> Option<Self> {
+        Some(match v {
+            1 => ErrorCode::Malformed,
+            2 => ErrorCode::WrongVersion,
+            3 => ErrorCode::Oversized,
+            4 => ErrorCode::UnknownFrame,
+            5 => ErrorCode::UnknownPlan,
+            6 => ErrorCode::UnknownTenant,
+            7 => ErrorCode::QuotaExhausted,
+            8 => ErrorCode::Backpressure,
+            9 => ErrorCode::Deadline,
+            10 => ErrorCode::Rejected,
+            11 => ErrorCode::Shutdown,
+            12 => ErrorCode::Internal,
+            _ => return None,
+        })
+    }
+
+    /// Stable lowercase name (used in error messages and reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrorCode::Malformed => "malformed",
+            ErrorCode::WrongVersion => "wrong-version",
+            ErrorCode::Oversized => "oversized",
+            ErrorCode::UnknownFrame => "unknown-frame",
+            ErrorCode::UnknownPlan => "unknown-plan",
+            ErrorCode::UnknownTenant => "unknown-tenant",
+            ErrorCode::QuotaExhausted => "quota-exhausted",
+            ErrorCode::Backpressure => "backpressure",
+            ErrorCode::Deadline => "deadline",
+            ErrorCode::Rejected => "rejected",
+            ErrorCode::Shutdown => "shutdown",
+            ErrorCode::Internal => "internal",
+        }
+    }
+}
+
+/// Decode/transport failure. Every variant is a typed rejection — the
+/// codec never panics and never allocates past [`MAX_PAYLOAD`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// The peer closed the connection cleanly between frames.
+    Closed,
+    /// First four bytes were not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// Version byte mismatch.
+    WrongVersion(u8),
+    /// Unknown frame type code.
+    UnknownFrameType(u8),
+    /// Declared payload/tenant length exceeds protocol caps.
+    Oversized {
+        /// Length the header declared.
+        declared: u32,
+        /// The protocol cap it exceeded.
+        max: u32,
+    },
+    /// The stream ended mid-frame.
+    Truncated,
+    /// Frame was well-framed but the payload failed strict decode.
+    Malformed(String),
+    /// Underlying socket/stream error.
+    Io(String),
+}
+
+impl WireError {
+    /// Error frame code for this failure.
+    pub fn code(&self) -> ErrorCode {
+        match self {
+            WireError::Closed | WireError::Io(_) | WireError::Truncated => ErrorCode::Internal,
+            WireError::BadMagic(_) => ErrorCode::Malformed,
+            WireError::WrongVersion(_) => ErrorCode::WrongVersion,
+            WireError::UnknownFrameType(_) => ErrorCode::UnknownFrame,
+            WireError::Oversized { .. } => ErrorCode::Oversized,
+            WireError::Malformed(_) => ErrorCode::Malformed,
+        }
+    }
+
+    /// `true` when the stream is still frame-aligned after this error
+    /// (the offending frame's bytes were fully consumed), so the
+    /// connection can answer with an error frame and keep serving.
+    /// Desynchronized or transport-level failures must close.
+    pub fn recoverable(&self) -> bool {
+        matches!(self, WireError::UnknownFrameType(_) | WireError::Malformed(_))
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Closed => write!(f, "connection closed"),
+            WireError::BadMagic(m) => write!(f, "bad magic {m:02x?}"),
+            WireError::WrongVersion(v) => {
+                write!(f, "unsupported protocol version {v} (want {VERSION})")
+            }
+            WireError::UnknownFrameType(t) => write!(f, "unknown frame type {t:#04x}"),
+            WireError::Oversized { declared, max } => {
+                write!(f, "declared length {declared} exceeds cap {max}")
+            }
+            WireError::Truncated => write!(f, "stream ended mid-frame"),
+            WireError::Malformed(msg) => write!(f, "malformed payload: {msg}"),
+            WireError::Io(msg) => write!(f, "io: {msg}"),
+        }
+    }
+}
+
+impl From<WireError> for crate::Error {
+    fn from(e: WireError) -> Self {
+        crate::Error::Wire(e.to_string())
+    }
+}
+
+impl From<io::Error> for WireError {
+    fn from(e: io::Error) -> Self {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            WireError::Truncated
+        } else {
+            WireError::Io(e.to_string())
+        }
+    }
+}
+
+/// Plan specification as it travels over the wire. Network plans carry
+/// their spec as TOML text (the on-disk `specs/*.toml` format) so the
+/// server compiles them with the same parser as the CLI.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireSpec {
+    /// Single-cue Bayes update.
+    Inference,
+    /// Multi-cue fusion of `modalities` posteriors.
+    Fusion {
+        /// Fusion arity.
+        modalities: u32,
+    },
+    /// Compiled Bayesian-network query.
+    Network {
+        /// Network spec, TOML source text.
+        spec_toml: String,
+        /// Queried node name.
+        query: String,
+        /// Observed `(node, value)` evidence.
+        evidence: Vec<(String, bool)>,
+    },
+}
+
+/// Per-plan decision policy as it travels over the wire (the encoded
+/// form of [`crate::coordinator::Policy`]).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct WirePolicy {
+    /// Timeliness budget in microseconds.
+    pub deadline_us: Option<u64>,
+    /// Stream-length override.
+    pub bits: Option<u32>,
+    /// Reliable-stop decision threshold.
+    pub threshold: Option<f64>,
+    /// Converged-stop half-width target.
+    pub max_half_width: Option<f64>,
+    /// Answer best-so-far on deadline instead of erroring.
+    pub allow_partial: bool,
+}
+
+impl WirePolicy {
+    /// Lower to the coordinator's [`crate::coordinator::Policy`].
+    pub fn to_policy(self) -> crate::coordinator::Policy {
+        crate::coordinator::Policy {
+            deadline: self.deadline_us.map(Duration::from_micros),
+            bits: self.bits.map(|b| b as usize),
+            threshold: self.threshold,
+            max_half_width: self.max_half_width,
+            allow_partial: self.allow_partial,
+        }
+    }
+}
+
+/// Per-decision parameters as they travel over the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireParams {
+    /// Prior + likelihoods for a single-cue update.
+    Inference {
+        /// P(H).
+        prior: f64,
+        /// P(E|H).
+        likelihood: f64,
+        /// P(E|¬H).
+        likelihood_not: f64,
+    },
+    /// Per-modality posteriors for a fusion plan.
+    Fusion {
+        /// One posterior per modality.
+        posteriors: Vec<f64>,
+    },
+    /// Network plans bind everything at prepare time.
+    Network,
+}
+
+impl WireParams {
+    /// Lower to the coordinator's [`crate::coordinator::DecisionParams`].
+    pub fn to_params(&self) -> crate::coordinator::DecisionParams {
+        match self {
+            WireParams::Inference { prior, likelihood, likelihood_not } => {
+                crate::coordinator::DecisionParams::Inference {
+                    prior: *prior,
+                    likelihood: *likelihood,
+                    likelihood_not: *likelihood_not,
+                }
+            }
+            WireParams::Fusion { posteriors } => {
+                crate::coordinator::DecisionParams::Fusion { posteriors: posteriors.clone() }
+            }
+            WireParams::Network => crate::coordinator::DecisionParams::Network,
+        }
+    }
+}
+
+/// A served decision as it travels over the wire.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WireDecision {
+    /// Server-side request id.
+    pub id: u64,
+    /// Stochastic posterior read out from the netlist sweep.
+    pub posterior: f64,
+    /// Closed-form reference posterior.
+    pub exact: f64,
+    /// End-to-end latency observed by the shard, nanoseconds.
+    pub latency_ns: u64,
+    /// Stochastic bits actually streamed.
+    pub bits_used: u64,
+    /// Wilson half-width at `bits_used`.
+    pub confidence: f64,
+    /// Stop reason code (see [`stop_code`]).
+    pub stop: u8,
+    /// Size of the dynamic batch the decision rode in.
+    pub batch_size: u32,
+}
+
+impl WireDecision {
+    /// Build from a coordinator [`Decision`].
+    pub fn from_decision(d: &Decision) -> Self {
+        WireDecision {
+            id: d.id,
+            posterior: d.posterior,
+            exact: d.exact,
+            latency_ns: d.latency.as_nanos().min(u64::MAX as u128) as u64,
+            bits_used: d.bits_used as u64,
+            confidence: d.confidence,
+            stop: stop_code(d.stop),
+            batch_size: d.batch_size as u32,
+        }
+    }
+
+    /// Decode the stop-reason code.
+    pub fn stop_reason(&self) -> Option<StopReason> {
+        stop_from_code(self.stop)
+    }
+}
+
+/// [`StopReason`] → wire code.
+pub fn stop_code(stop: StopReason) -> u8 {
+    match stop {
+        StopReason::Exhausted => 0,
+        StopReason::Reliable => 1,
+        StopReason::Converged => 2,
+        StopReason::Timely => 3,
+    }
+}
+
+/// Wire code → [`StopReason`].
+pub fn stop_from_code(code: u8) -> Option<StopReason> {
+    Some(match code {
+        0 => StopReason::Exhausted,
+        1 => StopReason::Reliable,
+        2 => StopReason::Converged,
+        3 => StopReason::Timely,
+        _ => return None,
+    })
+}
+
+/// One protocol frame (request or response).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Compile a plan into the tenant's namespace.
+    Prepare {
+        /// What to compile.
+        spec: WireSpec,
+        /// Policy applied to every decision on the plan.
+        policy: WirePolicy,
+    },
+    /// One decision against a prepared plan.
+    Decide {
+        /// Tenant-scoped plan id from [`Frame::Prepared`].
+        plan: u32,
+        /// Per-decision parameters.
+        params: WireParams,
+    },
+    /// A batch of decisions against one plan, answered in order.
+    DecideBatch {
+        /// Tenant-scoped plan id.
+        plan: u32,
+        /// One entry per decision.
+        params: Vec<WireParams>,
+    },
+    /// Fetch the tenant's metrics exposition.
+    Metrics,
+    /// Ask the server to shut down.
+    Shutdown,
+    /// Prepare succeeded.
+    Prepared {
+        /// Tenant-scoped plan id to decide against.
+        plan: u32,
+    },
+    /// Decide succeeded.
+    Decision(WireDecision),
+    /// DecideBatch response: one entry per request, in order; failed
+    /// entries carry their typed code + message.
+    DecisionBatch(Vec<std::result::Result<WireDecision, (ErrorCode, String)>>),
+    /// Metrics response (Prometheus-style text).
+    MetricsText(String),
+    /// Shutdown acknowledged; the server stops accepting.
+    ShutdownAck,
+    /// Typed failure for the preceding request frame.
+    Error {
+        /// What class of failure.
+        code: ErrorCode,
+        /// Human-readable detail.
+        message: String,
+    },
+}
+
+impl Frame {
+    /// Wire code for this frame's type.
+    pub fn frame_type(&self) -> u8 {
+        match self {
+            Frame::Prepare { .. } => ftype::PREPARE,
+            Frame::Decide { .. } => ftype::DECIDE,
+            Frame::DecideBatch { .. } => ftype::DECIDE_BATCH,
+            Frame::Metrics => ftype::METRICS,
+            Frame::Shutdown => ftype::SHUTDOWN,
+            Frame::Prepared { .. } => ftype::PREPARED,
+            Frame::Decision(_) => ftype::DECISION,
+            Frame::DecisionBatch(_) => ftype::DECISION_BATCH,
+            Frame::MetricsText(_) => ftype::METRICS_TEXT,
+            Frame::ShutdownAck => ftype::SHUTDOWN_ACK,
+            Frame::Error { .. } => ftype::ERROR,
+        }
+    }
+
+    /// `true` for the request half of the protocol.
+    pub fn is_request(&self) -> bool {
+        self.frame_type() < 0x80
+    }
+
+    /// Encode `self` (with `tenant` in the header) into one contiguous
+    /// frame. Fails if the tenant id or encoded payload exceeds the
+    /// protocol caps.
+    pub fn encode(&self, tenant: &str) -> Result<Vec<u8>, WireError> {
+        if tenant.len() > MAX_TENANT_LEN {
+            return Err(WireError::Oversized {
+                declared: tenant.len() as u32,
+                max: MAX_TENANT_LEN as u32,
+            });
+        }
+        let payload = self.encode_payload();
+        if payload.len() > MAX_PAYLOAD as usize {
+            return Err(WireError::Oversized { declared: payload.len() as u32, max: MAX_PAYLOAD });
+        }
+        let mut out = Vec::with_capacity(HEADER_LEN + tenant.len() + payload.len());
+        out.extend_from_slice(&MAGIC);
+        out.push(VERSION);
+        out.push(self.frame_type());
+        out.push(tenant.len() as u8);
+        out.push(0); // reserved
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(tenant.as_bytes());
+        out.extend_from_slice(&payload);
+        Ok(out)
+    }
+
+    fn encode_payload(&self) -> Vec<u8> {
+        let mut p = Vec::new();
+        match self {
+            Frame::Prepare { spec, policy } => {
+                match spec {
+                    WireSpec::Inference => p.push(0),
+                    WireSpec::Fusion { modalities } => {
+                        p.push(1);
+                        put_u32(&mut p, *modalities);
+                    }
+                    WireSpec::Network { spec_toml, query, evidence } => {
+                        p.push(2);
+                        put_str(&mut p, spec_toml);
+                        put_str(&mut p, query);
+                        put_u32(&mut p, evidence.len() as u32);
+                        for (node, value) in evidence {
+                            put_str(&mut p, node);
+                            p.push(u8::from(*value));
+                        }
+                    }
+                }
+                put_policy(&mut p, policy);
+            }
+            Frame::Decide { plan, params } => {
+                put_u32(&mut p, *plan);
+                put_params(&mut p, params);
+            }
+            Frame::DecideBatch { plan, params } => {
+                put_u32(&mut p, *plan);
+                put_u32(&mut p, params.len() as u32);
+                for item in params {
+                    put_params(&mut p, item);
+                }
+            }
+            Frame::Metrics | Frame::Shutdown | Frame::ShutdownAck => {}
+            Frame::Prepared { plan } => put_u32(&mut p, *plan),
+            Frame::Decision(d) => put_decision(&mut p, d),
+            Frame::DecisionBatch(items) => {
+                put_u32(&mut p, items.len() as u32);
+                for item in items {
+                    match item {
+                        Ok(d) => {
+                            p.push(1);
+                            put_decision(&mut p, d);
+                        }
+                        Err((code, message)) => {
+                            p.push(0);
+                            put_u16(&mut p, *code as u16);
+                            put_str(&mut p, message);
+                        }
+                    }
+                }
+            }
+            Frame::MetricsText(text) => put_str(&mut p, text),
+            Frame::Error { code, message } => {
+                put_u16(&mut p, *code as u16);
+                put_str(&mut p, message);
+            }
+        }
+        p
+    }
+
+    /// Strict payload decode for a known frame type. Every read is
+    /// bounds-checked; trailing bytes are malformed.
+    pub fn decode(ftype_code: u8, payload: &[u8]) -> Result<Frame, WireError> {
+        let mut c = Cursor::new(payload);
+        let frame = match ftype_code {
+            ftype::PREPARE => {
+                let spec = match c.u8()? {
+                    0 => WireSpec::Inference,
+                    1 => WireSpec::Fusion { modalities: c.u32()? },
+                    2 => {
+                        let spec_toml = c.str()?;
+                        let query = c.str()?;
+                        let n = c.len_capped(MAX_WIRE_BATCH, "evidence")?;
+                        let mut evidence = Vec::with_capacity(n);
+                        for _ in 0..n {
+                            let node = c.str()?;
+                            let value = match c.u8()? {
+                                0 => false,
+                                1 => true,
+                                v => {
+                                    return Err(WireError::Malformed(format!(
+                                        "evidence value byte {v}"
+                                    )))
+                                }
+                            };
+                            evidence.push((node, value));
+                        }
+                        WireSpec::Network { spec_toml, query, evidence }
+                    }
+                    t => return Err(WireError::Malformed(format!("spec tag {t}"))),
+                };
+                Frame::Prepare { spec, policy: get_policy(&mut c)? }
+            }
+            ftype::DECIDE => Frame::Decide { plan: c.u32()?, params: get_params(&mut c)? },
+            ftype::DECIDE_BATCH => {
+                let plan = c.u32()?;
+                let n = c.len_capped(MAX_WIRE_BATCH, "batch")?;
+                let mut params = Vec::with_capacity(n);
+                for _ in 0..n {
+                    params.push(get_params(&mut c)?);
+                }
+                Frame::DecideBatch { plan, params }
+            }
+            ftype::METRICS => Frame::Metrics,
+            ftype::SHUTDOWN => Frame::Shutdown,
+            ftype::PREPARED => Frame::Prepared { plan: c.u32()? },
+            ftype::DECISION => Frame::Decision(get_decision(&mut c)?),
+            ftype::DECISION_BATCH => {
+                let n = c.len_capped(MAX_WIRE_BATCH, "batch")?;
+                let mut items = Vec::with_capacity(n);
+                for _ in 0..n {
+                    items.push(match c.u8()? {
+                        1 => Ok(get_decision(&mut c)?),
+                        0 => {
+                            let code = get_code(&mut c)?;
+                            Err((code, c.str()?))
+                        }
+                        v => return Err(WireError::Malformed(format!("result tag {v}"))),
+                    });
+                }
+                Frame::DecisionBatch(items)
+            }
+            ftype::METRICS_TEXT => Frame::MetricsText(c.str()?),
+            ftype::SHUTDOWN_ACK => Frame::ShutdownAck,
+            ftype::ERROR => {
+                let code = get_code(&mut c)?;
+                Frame::Error { code, message: c.str()? }
+            }
+            t => return Err(WireError::UnknownFrameType(t)),
+        };
+        c.finish()?;
+        Ok(frame)
+    }
+}
+
+/// Write one frame to `w` (single buffered write).
+pub fn write_frame(w: &mut impl Write, tenant: &str, frame: &Frame) -> Result<(), WireError> {
+    let bytes = frame.encode(tenant)?;
+    w.write_all(&bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame from `r`, returning `(tenant, frame)`.
+///
+/// A clean close **between** frames is [`WireError::Closed`]; a close
+/// mid-frame is [`WireError::Truncated`]. Oversized declared lengths
+/// are rejected before any payload allocation. An unknown frame type
+/// or undecodable payload still consumes the whole frame, so those
+/// errors leave the stream aligned ([`WireError::recoverable`]).
+pub fn read_frame(r: &mut impl Read) -> Result<(String, Frame), WireError> {
+    let mut header = [0u8; HEADER_LEN];
+    // First byte separately: 0 bytes here is a clean close, not a
+    // truncation.
+    let n = r.read(&mut header[..1])?;
+    if n == 0 {
+        return Err(WireError::Closed);
+    }
+    r.read_exact(&mut header[1..])?;
+    if header[..4] != MAGIC {
+        return Err(WireError::BadMagic([header[0], header[1], header[2], header[3]]));
+    }
+    if header[4] != VERSION {
+        return Err(WireError::WrongVersion(header[4]));
+    }
+    let ftype_code = header[5];
+    let tenant_len = header[6] as usize;
+    if tenant_len > MAX_TENANT_LEN {
+        return Err(WireError::Oversized {
+            declared: tenant_len as u32,
+            max: MAX_TENANT_LEN as u32,
+        });
+    }
+    if header[7] != 0 {
+        return Err(WireError::Malformed(format!("reserved byte {}", header[7])));
+    }
+    let payload_len = u32::from_le_bytes([header[8], header[9], header[10], header[11]]);
+    if payload_len > MAX_PAYLOAD {
+        return Err(WireError::Oversized { declared: payload_len, max: MAX_PAYLOAD });
+    }
+    let mut tenant_bytes = vec![0u8; tenant_len];
+    r.read_exact(&mut tenant_bytes)?;
+    let mut payload = vec![0u8; payload_len as usize];
+    r.read_exact(&mut payload)?;
+    // From here on the frame is fully consumed: failures are typed but
+    // the stream stays aligned.
+    let tenant = String::from_utf8(tenant_bytes)
+        .map_err(|_| WireError::Malformed("tenant id is not UTF-8".into()))?;
+    let frame = Frame::decode(ftype_code, &payload)?;
+    Ok((tenant, frame))
+}
+
+// ---------------------------------------------------------------- codec
+
+fn put_u16(p: &mut Vec<u8>, v: u16) {
+    p.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(p: &mut Vec<u8>, v: u32) {
+    p.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(p: &mut Vec<u8>, v: u64) {
+    p.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(p: &mut Vec<u8>, v: f64) {
+    p.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn put_str(p: &mut Vec<u8>, s: &str) {
+    put_u32(p, s.len() as u32);
+    p.extend_from_slice(s.as_bytes());
+}
+
+fn put_opt_u64(p: &mut Vec<u8>, v: Option<u64>) {
+    match v {
+        Some(v) => {
+            p.push(1);
+            put_u64(p, v);
+        }
+        None => p.push(0),
+    }
+}
+
+fn put_opt_f64(p: &mut Vec<u8>, v: Option<f64>) {
+    match v {
+        Some(v) => {
+            p.push(1);
+            put_f64(p, v);
+        }
+        None => p.push(0),
+    }
+}
+
+fn put_policy(p: &mut Vec<u8>, policy: &WirePolicy) {
+    put_opt_u64(p, policy.deadline_us);
+    put_opt_u64(p, policy.bits.map(u64::from));
+    put_opt_f64(p, policy.threshold);
+    put_opt_f64(p, policy.max_half_width);
+    p.push(u8::from(policy.allow_partial));
+}
+
+fn put_params(p: &mut Vec<u8>, params: &WireParams) {
+    match params {
+        WireParams::Inference { prior, likelihood, likelihood_not } => {
+            p.push(0);
+            put_f64(p, *prior);
+            put_f64(p, *likelihood);
+            put_f64(p, *likelihood_not);
+        }
+        WireParams::Fusion { posteriors } => {
+            p.push(1);
+            put_u32(p, posteriors.len() as u32);
+            for v in posteriors {
+                put_f64(p, *v);
+            }
+        }
+        WireParams::Network => p.push(2),
+    }
+}
+
+fn put_decision(p: &mut Vec<u8>, d: &WireDecision) {
+    put_u64(p, d.id);
+    put_f64(p, d.posterior);
+    put_f64(p, d.exact);
+    put_u64(p, d.latency_ns);
+    put_u64(p, d.bits_used);
+    put_f64(p, d.confidence);
+    p.push(d.stop);
+    put_u32(p, d.batch_size);
+}
+
+/// Bounds-checked payload reader: every accessor verifies the remaining
+/// length before touching the buffer, so garbage input can only yield
+/// typed [`WireError`]s.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.buf.len() - self.pos < n {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Length-prefixed count, capped both by `cap` and by the bytes
+    /// actually remaining (each element is ≥ 1 byte), so a hostile
+    /// count cannot drive a large `Vec::with_capacity`.
+    fn len_capped(&mut self, cap: usize, what: &str) -> Result<usize, WireError> {
+        let n = self.u32()? as usize;
+        if n > cap {
+            return Err(WireError::Malformed(format!("{what} count {n} exceeds cap {cap}")));
+        }
+        if n > self.buf.len() - self.pos {
+            return Err(WireError::Truncated);
+        }
+        Ok(n)
+    }
+
+    fn str(&mut self) -> Result<String, WireError> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| WireError::Malformed("string is not UTF-8".into()))
+    }
+
+    fn finish(&self) -> Result<(), WireError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(WireError::Malformed(format!(
+                "{} trailing bytes after payload",
+                self.buf.len() - self.pos
+            )))
+        }
+    }
+}
+
+fn get_code(c: &mut Cursor<'_>) -> Result<ErrorCode, WireError> {
+    let raw = c.u16()?;
+    ErrorCode::from_u16(raw).ok_or_else(|| WireError::Malformed(format!("error code {raw}")))
+}
+
+fn get_opt_u64(c: &mut Cursor<'_>) -> Result<Option<u64>, WireError> {
+    match c.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(c.u64()?)),
+        v => Err(WireError::Malformed(format!("option tag {v}"))),
+    }
+}
+
+fn get_opt_f64(c: &mut Cursor<'_>) -> Result<Option<f64>, WireError> {
+    match c.u8()? {
+        0 => Ok(None),
+        1 => Ok(Some(c.f64()?)),
+        v => Err(WireError::Malformed(format!("option tag {v}"))),
+    }
+}
+
+fn get_policy(c: &mut Cursor<'_>) -> Result<WirePolicy, WireError> {
+    let deadline_us = get_opt_u64(c)?;
+    let bits = match get_opt_u64(c)? {
+        Some(v) if v > u32::MAX as u64 => {
+            return Err(WireError::Malformed(format!("bits {v} exceeds u32")))
+        }
+        Some(v) => Some(v as u32),
+        None => None,
+    };
+    let threshold = get_opt_f64(c)?;
+    let max_half_width = get_opt_f64(c)?;
+    let allow_partial = match c.u8()? {
+        0 => false,
+        1 => true,
+        v => return Err(WireError::Malformed(format!("bool byte {v}"))),
+    };
+    Ok(WirePolicy { deadline_us, bits, threshold, max_half_width, allow_partial })
+}
+
+fn get_params(c: &mut Cursor<'_>) -> Result<WireParams, WireError> {
+    match c.u8()? {
+        0 => Ok(WireParams::Inference {
+            prior: c.f64()?,
+            likelihood: c.f64()?,
+            likelihood_not: c.f64()?,
+        }),
+        1 => {
+            let n = c.len_capped(MAX_WIRE_BATCH, "posteriors")?;
+            let mut posteriors = Vec::with_capacity(n);
+            for _ in 0..n {
+                posteriors.push(c.f64()?);
+            }
+            Ok(WireParams::Fusion { posteriors })
+        }
+        2 => Ok(WireParams::Network),
+        t => Err(WireError::Malformed(format!("params tag {t}"))),
+    }
+}
+
+fn get_decision(c: &mut Cursor<'_>) -> Result<WireDecision, WireError> {
+    Ok(WireDecision {
+        id: c.u64()?,
+        posterior: c.f64()?,
+        exact: c.f64()?,
+        latency_ns: c.u64()?,
+        bits_used: c.u64()?,
+        confidence: c.f64()?,
+        stop: c.u8()?,
+        batch_size: c.u32()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest_lite;
+    use crate::util::Rng;
+
+    fn roundtrip(frame: &Frame, tenant: &str) {
+        let bytes = frame.encode(tenant).expect("encode");
+        let mut r = io::Cursor::new(bytes);
+        let (t, decoded) = read_frame(&mut r).expect("decode");
+        assert_eq!(t, tenant);
+        assert_eq!(&decoded, frame);
+    }
+
+    fn arb_string(rng: &mut Rng, max_len: usize) -> String {
+        let n = rng.range_usize(0, max_len + 1);
+        (0..n).map(|_| char::from(b'a' + (rng.next_u64() % 26) as u8)).collect()
+    }
+
+    fn arb_policy(rng: &mut Rng) -> WirePolicy {
+        WirePolicy {
+            deadline_us: (rng.f64() > 0.5).then(|| rng.next_u64() % 1_000_000),
+            bits: (rng.f64() > 0.5).then(|| (rng.next_u64() % (1 << 20)) as u32),
+            threshold: (rng.f64() > 0.5).then(|| rng.f64()),
+            max_half_width: (rng.f64() > 0.5).then(|| rng.f64()),
+            allow_partial: rng.f64() > 0.5,
+        }
+    }
+
+    fn arb_params(rng: &mut Rng) -> WireParams {
+        match rng.next_u64() % 3 {
+            0 => WireParams::Inference {
+                prior: rng.f64(),
+                likelihood: rng.f64(),
+                likelihood_not: rng.f64(),
+            },
+            1 => {
+                let n = rng.range_usize(1, 9);
+                WireParams::Fusion { posteriors: (0..n).map(|_| rng.f64()).collect() }
+            }
+            _ => WireParams::Network,
+        }
+    }
+
+    fn arb_decision(rng: &mut Rng) -> WireDecision {
+        WireDecision {
+            id: rng.next_u64(),
+            posterior: rng.f64(),
+            exact: rng.f64(),
+            latency_ns: rng.next_u64() % (1 << 40),
+            bits_used: rng.next_u64() % (1 << 24),
+            confidence: rng.f64(),
+            stop: (rng.next_u64() % 4) as u8,
+            batch_size: (rng.next_u64() % 64) as u32,
+        }
+    }
+
+    fn arb_frame(rng: &mut Rng) -> Frame {
+        match rng.next_u64() % 11 {
+            0 => {
+                let spec = match rng.next_u64() % 3 {
+                    0 => WireSpec::Inference,
+                    1 => WireSpec::Fusion { modalities: 1 + (rng.next_u64() % 16) as u32 },
+                    _ => WireSpec::Network {
+                        spec_toml: arb_string(rng, 64),
+                        query: arb_string(rng, 16),
+                        evidence: (0..rng.range_usize(0, 4))
+                            .map(|_| (arb_string(rng, 8), rng.f64() > 0.5))
+                            .collect(),
+                    },
+                };
+                Frame::Prepare { spec, policy: arb_policy(rng) }
+            }
+            1 => Frame::Decide { plan: rng.next_u64() as u32, params: arb_params(rng) },
+            2 => Frame::DecideBatch {
+                plan: rng.next_u64() as u32,
+                params: (0..rng.range_usize(0, 8)).map(|_| arb_params(rng)).collect(),
+            },
+            3 => Frame::Metrics,
+            4 => Frame::Shutdown,
+            5 => Frame::Prepared { plan: rng.next_u64() as u32 },
+            6 => Frame::Decision(arb_decision(rng)),
+            7 => Frame::DecisionBatch(
+                (0..rng.range_usize(0, 6))
+                    .map(|_| {
+                        if rng.f64() > 0.3 {
+                            Ok(arb_decision(rng))
+                        } else {
+                            Err((ErrorCode::Rejected, arb_string(rng, 24)))
+                        }
+                    })
+                    .collect(),
+            ),
+            8 => Frame::MetricsText(arb_string(rng, 200)),
+            9 => Frame::ShutdownAck,
+            _ => Frame::Error { code: ErrorCode::UnknownPlan, message: arb_string(rng, 32) },
+        }
+    }
+
+    #[test]
+    fn every_frame_type_round_trips() {
+        // One deterministic instance of each frame type first...
+        let frames = [
+            Frame::Prepare {
+                spec: WireSpec::Network {
+                    spec_toml: "[net]\nname = \"x\"".into(),
+                    query: "hazard".into(),
+                    evidence: vec![("alarm".into(), true), ("vis".into(), false)],
+                },
+                policy: WirePolicy {
+                    deadline_us: Some(400),
+                    bits: Some(4096),
+                    threshold: Some(0.7),
+                    max_half_width: None,
+                    allow_partial: true,
+                },
+            },
+            Frame::Decide {
+                plan: 3,
+                params: WireParams::Inference {
+                    prior: 0.57,
+                    likelihood: 0.77,
+                    likelihood_not: 0.655,
+                },
+            },
+            Frame::DecideBatch {
+                plan: 9,
+                params: vec![
+                    WireParams::Fusion { posteriors: vec![0.8, 0.7] },
+                    WireParams::Network,
+                ],
+            },
+            Frame::Metrics,
+            Frame::Shutdown,
+            Frame::Prepared { plan: 42 },
+            Frame::Decision(WireDecision {
+                id: 7,
+                posterior: 0.61,
+                exact: 0.609,
+                latency_ns: 123_456,
+                bits_used: 4096,
+                confidence: 0.01,
+                stop: 1,
+                batch_size: 4,
+            }),
+            Frame::DecisionBatch(vec![
+                Ok(WireDecision {
+                    id: 1,
+                    posterior: 0.5,
+                    exact: 0.5,
+                    latency_ns: 10,
+                    bits_used: 64,
+                    confidence: 0.1,
+                    stop: 0,
+                    batch_size: 1,
+                }),
+                Err((ErrorCode::Deadline, "missed".into())),
+            ]),
+            Frame::MetricsText("tenant_decisions_completed_total 3\n".into()),
+            Frame::ShutdownAck,
+            Frame::Error { code: ErrorCode::Backpressure, message: "queue full".into() },
+        ];
+        for frame in &frames {
+            roundtrip(frame, "tenant-a");
+            roundtrip(frame, "");
+        }
+    }
+
+    #[test]
+    fn random_frames_round_trip() {
+        proptest_lite::check("wire_roundtrip", 400, |rng| {
+            let frame = arb_frame(rng);
+            let tenant = arb_string(rng, MAX_TENANT_LEN);
+            roundtrip(&frame, &tenant);
+        });
+    }
+
+    #[test]
+    fn garbage_never_panics_and_is_typed() {
+        proptest_lite::check("wire_garbage", 600, |rng| {
+            let n = rng.range_usize(0, 64);
+            let bytes: Vec<u8> = (0..n).map(|_| (rng.next_u64() & 0xFF) as u8).collect();
+            let mut r = io::Cursor::new(bytes);
+            // Any outcome but a panic is fine; empty input must be a
+            // clean close.
+            let _ = read_frame(&mut r);
+        });
+        let mut empty = io::Cursor::new(Vec::new());
+        assert_eq!(read_frame(&mut empty).unwrap_err(), WireError::Closed);
+    }
+
+    #[test]
+    fn corrupted_valid_frames_never_panic() {
+        // Flip bytes inside otherwise-valid frames: decode must stay
+        // typed (this walks the payload decoders, not just the header).
+        proptest_lite::check("wire_corruption", 400, |rng| {
+            let mut bytes = arb_frame(rng).encode("t").expect("encode");
+            let flips = rng.range_usize(1, 4);
+            for _ in 0..flips {
+                let i = rng.range_usize(0, bytes.len());
+                bytes[i] ^= (rng.next_u64() & 0xFF) as u8;
+            }
+            let mut r = io::Cursor::new(bytes);
+            let _ = read_frame(&mut r);
+        });
+    }
+
+    #[test]
+    fn oversized_frames_are_rejected_before_allocation() {
+        // Declared payload length far beyond the cap: the error must
+        // come from the header check (no payload read, no allocation).
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.push(VERSION);
+        bytes.push(0x02);
+        bytes.push(0);
+        bytes.push(0);
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut r = io::Cursor::new(bytes);
+        assert_eq!(
+            read_frame(&mut r).unwrap_err(),
+            WireError::Oversized { declared: u32::MAX, max: MAX_PAYLOAD }
+        );
+
+        // Oversized tenant length likewise.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC);
+        bytes.push(VERSION);
+        bytes.push(0x02);
+        bytes.push(200);
+        bytes.push(0);
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        let mut r = io::Cursor::new(bytes);
+        assert!(matches!(read_frame(&mut r).unwrap_err(), WireError::Oversized { .. }));
+    }
+
+    #[test]
+    fn truncated_and_wrong_version_frames_are_typed() {
+        let full = Frame::Metrics.encode("t").unwrap();
+        for cut in 1..full.len() {
+            let mut r = io::Cursor::new(full[..cut].to_vec());
+            let err = read_frame(&mut r).unwrap_err();
+            assert_eq!(err, WireError::Truncated, "cut at {cut}");
+            assert!(!err.recoverable());
+        }
+
+        let mut versioned = full.clone();
+        versioned[4] = 99;
+        let mut r = io::Cursor::new(versioned);
+        assert_eq!(read_frame(&mut r).unwrap_err(), WireError::WrongVersion(99));
+
+        let mut magicked = full;
+        magicked[0] = b'X';
+        let mut r = io::Cursor::new(magicked);
+        assert!(matches!(read_frame(&mut r).unwrap_err(), WireError::BadMagic(_)));
+    }
+
+    #[test]
+    fn malformed_payload_is_recoverable_and_consumes_the_frame() {
+        // A Decide frame with a bogus params tag: typed error, and the
+        // next frame on the same stream still decodes.
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&MAGIC);
+        bad.push(VERSION);
+        bad.push(0x02); // Decide
+        bad.push(0);
+        bad.push(0);
+        let payload = {
+            let mut p = Vec::new();
+            put_u32(&mut p, 7);
+            p.push(9); // bogus params tag
+            p
+        };
+        bad.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        bad.extend_from_slice(&payload);
+        bad.extend_from_slice(&Frame::Metrics.encode("t").unwrap());
+        let mut r = io::Cursor::new(bad);
+        let err = read_frame(&mut r).unwrap_err();
+        assert!(matches!(err, WireError::Malformed(_)), "{err:?}");
+        assert!(err.recoverable());
+        let (tenant, frame) = read_frame(&mut r).expect("stream stays aligned");
+        assert_eq!(tenant, "t");
+        assert_eq!(frame, Frame::Metrics);
+    }
+
+    #[test]
+    fn unknown_frame_type_is_recoverable() {
+        let mut bytes = Frame::Metrics.encode("t").unwrap();
+        bytes[5] = 0x66;
+        bytes.extend_from_slice(&Frame::Shutdown.encode("t").unwrap());
+        let mut r = io::Cursor::new(bytes);
+        let err = read_frame(&mut r).unwrap_err();
+        assert_eq!(err, WireError::UnknownFrameType(0x66));
+        assert!(err.recoverable());
+        assert_eq!(read_frame(&mut r).unwrap().1, Frame::Shutdown);
+    }
+
+    #[test]
+    fn trailing_bytes_are_malformed() {
+        let mut bytes = Frame::Prepared { plan: 1 }.encode("t").unwrap();
+        // Grow the declared payload by one byte of junk.
+        bytes.push(0xAB);
+        let len = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) + 1;
+        bytes[8..12].copy_from_slice(&len.to_le_bytes());
+        let mut r = io::Cursor::new(bytes);
+        assert!(matches!(read_frame(&mut r).unwrap_err(), WireError::Malformed(_)));
+    }
+
+    #[test]
+    fn hostile_counts_cannot_balloon_allocation() {
+        // A DecideBatch declaring 2^31 entries in a 16-byte payload
+        // must fail without reserving capacity for them.
+        let mut p = Vec::new();
+        put_u32(&mut p, 1);
+        put_u32(&mut p, 1 << 31);
+        let err = Frame::decode(0x03, &p).unwrap_err();
+        assert!(matches!(err, WireError::Malformed(_)), "{err:?}");
+
+        // ... and a count that passes the cap but not the remaining
+        // bytes is a truncation, also pre-allocation.
+        let mut p = Vec::new();
+        put_u32(&mut p, 1);
+        put_u32(&mut p, 64);
+        assert_eq!(Frame::decode(0x03, &p).unwrap_err(), WireError::Truncated);
+    }
+
+    #[test]
+    fn policy_lowering_matches_fields() {
+        let wp = WirePolicy {
+            deadline_us: Some(400),
+            bits: Some(1 << 12),
+            threshold: Some(0.7),
+            max_half_width: Some(0.05),
+            allow_partial: true,
+        };
+        let p = wp.to_policy();
+        assert_eq!(p.deadline, Some(Duration::from_micros(400)));
+        assert_eq!(p.bits, Some(1 << 12));
+        assert_eq!(p.threshold, Some(0.7));
+        assert_eq!(p.max_half_width, Some(0.05));
+        assert!(p.allow_partial);
+    }
+
+    #[test]
+    fn stop_codes_round_trip() {
+        for stop in
+            [StopReason::Exhausted, StopReason::Reliable, StopReason::Converged, StopReason::Timely]
+        {
+            assert_eq!(stop_from_code(stop_code(stop)), Some(stop));
+        }
+        assert_eq!(stop_from_code(99), None);
+    }
+}

@@ -1,0 +1,518 @@
+//! End-to-end tests for the TCP serving front door: live-socket
+//! request/response for every decision kind, wire-level robustness
+//! against hostile bytes, tenant isolation (namespaces, quotas,
+//! metrics), and the overload SLO contract (shed vs blocking admission
+//! at calibrated 1×/4× offered rates).
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use bayes_mem::config::{AdmissionPolicy, AppConfig};
+use bayes_mem::device::WearPolicy;
+use bayes_mem::serve::{
+    loadgen, wire, Client, ErrorCode, Frame, Server, TenantSpec, WireParams, WirePolicy,
+    WireSpec,
+};
+
+/// Wear rotation off: overload stages push banks past the endurance
+/// budget by design.
+fn test_config() -> AppConfig {
+    let mut cfg = AppConfig::default();
+    cfg.sne.wear_policy = WearPolicy::Ignore;
+    cfg
+}
+
+fn inference_params() -> WireParams {
+    WireParams::Inference { prior: 0.57, likelihood: 0.77, likelihood_not: 0.655 }
+}
+
+const NETWORK_TOML: &str = "[network]\nname = \"chain\"\n\n[nodes.fog]\nprior = 0.15\n\n\
+[nodes.vis]\nparents = \"fog\"\ncpt = [0.9, 0.3]\n";
+
+#[test]
+fn wire_end_to_end_all_plan_kinds() {
+    let server = Server::start("127.0.0.1:0", &test_config(), Vec::new()).unwrap();
+    let addr = server.local_addr();
+    let mut client = Client::connect(addr, "e2e").unwrap();
+    let policy = WirePolicy { bits: Some(2048), ..WirePolicy::default() };
+
+    let inference = client.prepare(WireSpec::Inference, policy).unwrap();
+    let fusion = client.prepare(WireSpec::Fusion { modalities: 2 }, policy).unwrap();
+    let network = client
+        .prepare(
+            WireSpec::Network {
+                spec_toml: NETWORK_TOML.into(),
+                query: "fog".into(),
+                evidence: vec![("vis".into(), true)],
+            },
+            policy,
+        )
+        .unwrap();
+
+    let d = client.decide(inference, inference_params()).unwrap();
+    assert!(d.posterior > 0.0 && d.posterior < 1.0);
+    assert!((d.posterior - d.exact).abs() < 0.2, "stochastic {} vs exact {}", d.posterior, d.exact);
+    assert!(d.bits_used > 0);
+
+    let d = client
+        .decide(fusion, WireParams::Fusion { posteriors: vec![0.8, 0.7] })
+        .unwrap();
+    assert!(d.posterior > 0.5, "agreeing cues must reinforce, got {}", d.posterior);
+
+    let d = client.decide(network, WireParams::Network).unwrap();
+    assert!(d.posterior > 0.0 && d.posterior < 1.0);
+    // P(fog | vis) must exceed the 0.15 prior (vis is strong evidence).
+    assert!(d.exact > 0.15, "exact {}", d.exact);
+
+    // Batch frame: answered in order, all on one plan.
+    let batch: Vec<WireParams> = (0..16).map(|_| inference_params()).collect();
+    let replies = client.decide_batch(inference, batch).unwrap();
+    assert_eq!(replies.len(), 16);
+    for r in replies {
+        let d = r.expect("batch entry failed");
+        assert!(d.posterior > 0.0 && d.posterior < 1.0);
+    }
+
+    // Typed deadline miss: a 1 µs budget on a long sweep cannot be met.
+    let doomed = client
+        .prepare(
+            WireSpec::Inference,
+            WirePolicy { deadline_us: Some(1), bits: Some(1 << 20), ..WirePolicy::default() },
+        )
+        .unwrap();
+    match client.decide_raw(doomed, inference_params()).unwrap() {
+        Err((ErrorCode::Deadline, _)) => {}
+        other => panic!("expected typed deadline miss, got {other:?}"),
+    }
+    let snap = server.tenant_snapshot("e2e").unwrap();
+    assert!(snap.deadline_missed >= 1);
+
+    // Unknown plan ids are typed, not fatal.
+    match client.decide_raw(9999, inference_params()).unwrap() {
+        Err((ErrorCode::UnknownPlan, _)) => {}
+        other => panic!("expected unknown-plan, got {other:?}"),
+    }
+
+    // Per-tenant metrics over the wire, labeled with the tenant id.
+    let text = client.metrics_text().unwrap();
+    assert!(text.contains("tenant=\"e2e\""), "{text}");
+    assert!(text.contains("tenant_decisions_completed_total"), "{text}");
+
+    // Wire shutdown: acknowledged, then the server unwinds.
+    client.shutdown_server().unwrap();
+    assert!(server.shutdown_requested());
+    server.run().unwrap();
+}
+
+/// Raw 12-byte header (magic ‖ version ‖ ftype ‖ tenant_len ‖ reserved
+/// ‖ payload_len LE).
+fn raw_header(version: u8, ftype: u8, tenant_len: u8, payload_len: u32) -> [u8; 12] {
+    let mut h = [0u8; 12];
+    h[..4].copy_from_slice(&wire::MAGIC);
+    h[4] = version;
+    h[5] = ftype;
+    h[6] = tenant_len;
+    h[8..12].copy_from_slice(&payload_len.to_le_bytes());
+    h
+}
+
+fn expect_error_frame(stream: &mut TcpStream, want: ErrorCode) {
+    match wire::read_frame(stream) {
+        Ok((_, Frame::Error { code, .. })) => assert_eq!(code, want),
+        other => panic!("expected {want:?} error frame, got {other:?}"),
+    }
+}
+
+#[test]
+fn hostile_bytes_get_typed_errors_and_the_server_survives() {
+    let server = Server::start("127.0.0.1:0", &test_config(), Vec::new()).unwrap();
+    let addr = server.local_addr();
+
+    // Garbage magic: typed malformed error, then the (desynchronized)
+    // connection closes.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(b"XXXXXXXXXXXXXXXX").unwrap();
+    expect_error_frame(&mut s, ErrorCode::Malformed);
+    assert!(wire::read_frame(&mut s).is_err(), "desynchronized stream must close");
+
+    // Wrong protocol version: typed error, connection closes.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(&raw_header(wire::VERSION + 1, 0x04, 0, 0)).unwrap();
+    expect_error_frame(&mut s, ErrorCode::WrongVersion);
+    assert!(wire::read_frame(&mut s).is_err());
+
+    // Oversized declared payload: rejected up front — the reply arrives
+    // even though we never send a single payload byte, so the server
+    // cannot have tried to read (or allocate) the declared megabytes.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(&raw_header(wire::VERSION, 0x02, 0, wire::MAX_PAYLOAD + 1)).unwrap();
+    expect_error_frame(&mut s, ErrorCode::Oversized);
+    assert!(wire::read_frame(&mut s).is_err());
+
+    // Well-framed but undecodable payload: typed error AND the
+    // connection stays frame-aligned — a valid request still works.
+    let mut s = TcpStream::connect(addr).unwrap();
+    let junk = [0xABu8; 8];
+    s.write_all(&raw_header(wire::VERSION, 0x02, 4, junk.len() as u32)).unwrap();
+    s.write_all(b"fuzz").unwrap();
+    s.write_all(&junk).unwrap();
+    expect_error_frame(&mut s, ErrorCode::Malformed);
+    wire::write_frame(&mut s, "fuzz", &Frame::Metrics).unwrap();
+    match wire::read_frame(&mut s) {
+        Ok((_, Frame::MetricsText(text))) => assert!(text.contains("tenant=\"fuzz\"")),
+        other => panic!("connection should have recovered, got {other:?}"),
+    }
+
+    // Unknown frame type: same recoverable contract.
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(&raw_header(wire::VERSION, 0x77, 4, 2)).unwrap();
+    s.write_all(b"fuzz\0\0").unwrap();
+    expect_error_frame(&mut s, ErrorCode::UnknownFrame);
+    wire::write_frame(&mut s, "fuzz", &Frame::Metrics).unwrap();
+    assert!(matches!(wire::read_frame(&mut s), Ok((_, Frame::MetricsText(_)))));
+
+    // Mid-frame disconnect: drop after half a header.
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(&raw_header(wire::VERSION, 0x02, 0, 64)[..5]).unwrap();
+    }
+    // A response frame sent as a request: typed, recoverable.
+    let mut s = TcpStream::connect(addr).unwrap();
+    wire::write_frame(&mut s, "fuzz", &Frame::Prepared { plan: 1 }).unwrap();
+    expect_error_frame(&mut s, ErrorCode::Malformed);
+
+    // After all of the above, the server still serves real work.
+    let mut client = Client::connect(addr, "survivor").unwrap();
+    let plan = client.prepare(WireSpec::Inference, WirePolicy::default()).unwrap();
+    assert!(client.decide(plan, inference_params()).unwrap().posterior > 0.0);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn tenant_namespaces_quotas_and_metrics_are_isolated() {
+    let mut cfg = test_config();
+    cfg.serve.shards = 2;
+    let hog = TenantSpec {
+        name: "hog".into(),
+        admission: AdmissionPolicy::Shed,
+        max_inflight: 4,
+        max_plans: 2,
+        plan_cache_capacity: 2,
+    };
+    let server = Server::start("127.0.0.1:0", &cfg, vec![hog]).unwrap();
+    let addr = server.local_addr();
+
+    // The quiet tenant registers a plan and does a little work.
+    let mut quiet = Client::connect(addr, "quiet").unwrap();
+    let quiet_plan = quiet.prepare(WireSpec::Inference, WirePolicy::default()).unwrap();
+    for _ in 0..5 {
+        quiet.decide(quiet_plan, inference_params()).unwrap();
+    }
+
+    // The hog exhausts its plan quota; the third prepare is a typed
+    // quota error, not a failure of anyone else's namespace.
+    let mut hog = Client::connect(addr, "hog").unwrap();
+    let hog_plan = hog.prepare(WireSpec::Inference, WirePolicy::default()).unwrap();
+    hog.prepare(WireSpec::Fusion { modalities: 2 }, WirePolicy::default()).unwrap();
+    let err = hog
+        .prepare(WireSpec::Fusion { modalities: 3 }, WirePolicy::default())
+        .unwrap_err();
+    assert!(err.to_string().contains("quota-exhausted"), "{err}");
+
+    // Plan ids are namespaced per tenant: both tenants hold an id `1`,
+    // and an id only the hog registered is unknown to the quiet tenant.
+    assert_eq!(quiet_plan, 1);
+    assert_eq!(hog_plan, 1);
+    match quiet.decide_raw(2, inference_params()).unwrap() {
+        Err((ErrorCode::UnknownPlan, _)) => {}
+        other => panic!("plan 2 must not leak across tenants, got {other:?}"),
+    }
+
+    // Both tenants still decide fine on their own plans after the
+    // hog's quota exhaustion.
+    assert!(hog.decide(hog_plan, inference_params()).unwrap().posterior > 0.0);
+    assert!(quiet.decide(quiet_plan, inference_params()).unwrap().posterior > 0.0);
+
+    // Metrics are isolated: the quiet tenant's registry saw exactly its
+    // own traffic (6 decisions), none of the hog's submissions or
+    // rejections.
+    let quiet_snap = server.tenant_snapshot("quiet").unwrap();
+    assert_eq!(quiet_snap.submitted, 6);
+    assert_eq!(quiet_snap.completed, 6);
+    assert_eq!(quiet_snap.rejected, 0);
+    let hog_snap = server.tenant_snapshot("hog").unwrap();
+    assert!(hog_snap.rejected >= 1, "the quota rejection must land on the hog");
+    server.shutdown().unwrap();
+}
+
+/// Outcome tallies plus reply latencies (measured from the *scheduled*
+/// arrival) for one open-loop stage of one tenant.
+#[derive(Default)]
+struct StageOutcome {
+    ok: u64,
+    shed: u64,
+    other: u64,
+    latencies_ns: Vec<u64>,
+}
+
+impl StageOutcome {
+    fn p99_ns(&self) -> u64 {
+        let mut v = self.latencies_ns.clone();
+        assert!(!v.is_empty(), "stage produced no replies");
+        v.sort_unstable();
+        v[(v.len() - 1) * 99 / 100]
+    }
+}
+
+/// Drive `n` open-loop arrivals at `rate_rps` across `conns`
+/// connections (connection `i` owns arrivals `i, i+conns, …`). Every
+/// reply — decision or typed shed — is timed from its scheduled
+/// arrival, so schedule slip shows up as latency.
+fn drive(
+    addr: std::net::SocketAddr,
+    tenant: &str,
+    plan: u32,
+    conns: usize,
+    rate_rps: f64,
+    n: u64,
+) -> StageOutcome {
+    let interval = Duration::from_secs_f64(1.0 / rate_rps);
+    let start = Instant::now() + Duration::from_millis(5);
+    let mut threads = Vec::new();
+    for i in 0..conns {
+        let tenant = tenant.to_string();
+        threads.push(thread::spawn(move || {
+            let mut client = Client::connect(addr, &tenant).unwrap();
+            let mut out = StageOutcome::default();
+            let mut j = i as u64;
+            while j < n {
+                let target = start + interval.mul_f64(j as f64);
+                let now = Instant::now();
+                if target > now {
+                    thread::sleep(target - now);
+                }
+                match client.decide_raw(plan, inference_params()).unwrap() {
+                    Ok(_) => out.ok += 1,
+                    Err((ErrorCode::QuotaExhausted | ErrorCode::Backpressure, _)) => {
+                        out.shed += 1
+                    }
+                    Err(_) => out.other += 1,
+                }
+                out.latencies_ns.push(target.elapsed().as_nanos() as u64);
+                j += conns as u64;
+            }
+            out
+        }));
+    }
+    let mut total = StageOutcome::default();
+    for t in threads {
+        let part = t.join().unwrap();
+        total.ok += part.ok;
+        total.shed += part.shed;
+        total.other += part.other;
+        total.latencies_ns.extend(part.latencies_ns);
+    }
+    total
+}
+
+/// The overload SLO contract: under 4× overload a shed-policy tenant
+/// (tight in-flight quota, shed admission) keeps its p99 reply latency
+/// within 2× of its 1× value (plus an absolute floor absorbing CI
+/// noise), while a blocking tenant on its own shard absorbs the whole
+/// backlog — zero rejections, every request answered — and pays for it
+/// in schedule slip. Offered rates are calibrated against the measured
+/// closed-loop service time so the 4× stage genuinely oversubscribes
+/// the shard on any machine.
+#[test]
+fn overload_slo_shed_tenant_stays_flat_while_blocking_tenant_absorbs() {
+    let mut cfg = test_config();
+    cfg.serve.shards = 2;
+    cfg.coordinator.workers = 1;
+    // Long sweeps make the per-decision service time dominate socket /
+    // scheduler noise.
+    let policy = WirePolicy { bits: Some(200_000), ..WirePolicy::default() };
+
+    // Pick tenant names pinned to *different* shards, so the blocking
+    // tenant's backlog cannot sit in front of the shed tenant's work.
+    let probe = Server::start("127.0.0.1:0", &cfg, Vec::new()).unwrap();
+    let shed_name = "shed-tenant".to_string();
+    let block_name = (0..100)
+        .map(|i| format!("block-tenant-{i}"))
+        .find(|n| probe.shard_of(n) != probe.shard_of(&shed_name))
+        .expect("some candidate must hash to the other shard");
+    probe.shutdown().unwrap();
+
+    let tenants = vec![
+        TenantSpec {
+            name: shed_name.clone(),
+            admission: AdmissionPolicy::Shed,
+            max_inflight: 2,
+            max_plans: 8,
+            plan_cache_capacity: 8,
+        },
+        TenantSpec {
+            name: block_name.clone(),
+            admission: AdmissionPolicy::Block,
+            max_inflight: 4096,
+            max_plans: 8,
+            plan_cache_capacity: 8,
+        },
+    ];
+    let server = Server::start("127.0.0.1:0", &cfg, tenants).unwrap();
+    let addr = server.local_addr();
+
+    // Register one plan per tenant and calibrate the closed-loop
+    // service time on the shed tenant's shard.
+    let mut shed_client = Client::connect(addr, &shed_name).unwrap();
+    let shed_plan = shed_client.prepare(WireSpec::Inference, policy).unwrap();
+    let mut block_client = Client::connect(addr, &block_name).unwrap();
+    let block_plan = block_client.prepare(WireSpec::Inference, policy).unwrap();
+    let mut samples: Vec<u64> = (0..15)
+        .map(|_| {
+            let t0 = Instant::now();
+            shed_client.decide(shed_plan, inference_params()).unwrap();
+            t0.elapsed().as_nanos() as u64
+        })
+        .collect();
+    samples.sort_unstable();
+    let service_ns = samples[samples.len() / 2].max(50_000);
+    let capacity_rps = 1e9 / service_ns as f64;
+    let rate_1x = 0.5 * capacity_rps;
+    let rate_4x = 4.0 * rate_1x;
+    let (n_1x, n_4x) = (60u64, 240u64);
+
+    // Stage 1: nominal load, both tenants concurrently.
+    let shed_h = {
+        let (a, t) = (addr, shed_name.clone());
+        thread::spawn(move || drive(a, &t, shed_plan, 4, rate_1x, n_1x))
+    };
+    let block_1x = drive(addr, &block_name, block_plan, 8, rate_1x, n_1x);
+    let shed_1x = shed_h.join().unwrap();
+
+    // Stage 2: 4× overload — double the shard's capacity — both
+    // tenants concurrently.
+    let shed_h = {
+        let (a, t) = (addr, shed_name.clone());
+        thread::spawn(move || drive(a, &t, shed_plan, 4, rate_4x, n_4x))
+    };
+    let block_4x = drive(addr, &block_name, block_plan, 8, rate_4x, n_4x);
+    let shed_4x = shed_h.join().unwrap();
+
+    // The shed tenant actually shed under overload, and never saw a
+    // transport or internal failure.
+    assert!(shed_4x.shed > 0, "4x overload must trigger quota sheds");
+    assert_eq!(shed_1x.other + shed_4x.other, 0);
+    assert!(shed_1x.ok > 0 && shed_4x.ok > 0);
+
+    // SLO pin: p99 reply latency at 4× within 2× of the 1× value
+    // (10 ms absolute floor absorbs scheduler noise on loaded CI).
+    let (p99_1x, p99_4x) = (shed_1x.p99_ns(), shed_4x.p99_ns());
+    let budget = (2 * p99_1x).max(10_000_000);
+    assert!(
+        p99_4x <= budget,
+        "shed tenant p99 blew up under overload: {p99_4x} ns vs budget {budget} ns \
+         (1x p99 {p99_1x} ns, service {service_ns} ns)"
+    );
+
+    // The blocking tenant absorbed everything: no rejections, every
+    // arrival answered with a decision — and the backlog shows up as
+    // schedule slip at 4×.
+    assert_eq!(block_1x.shed + block_4x.shed, 0, "blocking tenant must never shed");
+    assert_eq!(block_1x.other + block_4x.other, 0);
+    assert_eq!(block_1x.ok, n_1x);
+    assert_eq!(block_4x.ok, n_4x);
+    assert!(
+        block_4x.p99_ns() > 4 * block_1x.p99_ns(),
+        "2x-capacity oversubscription must show up as slip: 4x p99 {} ns vs 1x p99 {} ns",
+        block_4x.p99_ns(),
+        block_1x.p99_ns()
+    );
+    let snap = server.tenant_snapshot(&block_name).unwrap();
+    assert_eq!(snap.rejected, 0);
+
+    server.shutdown().unwrap();
+}
+
+/// Aggregate serving throughput: batched wire decisions across two
+/// tenants must clear the paper's 2,500 decisions/s line end to end
+/// (TCP hop, sharded dispatch, stochastic execution).
+#[test]
+fn aggregate_wire_throughput_clears_2500_dps() {
+    let mut cfg = test_config();
+    cfg.serve.shards = 2;
+    cfg.coordinator.workers = 2;
+    let server = Server::start("127.0.0.1:0", &cfg, Vec::new()).unwrap();
+    let addr = server.local_addr();
+    let policy = WirePolicy { bits: Some(64), ..WirePolicy::default() };
+
+    const BATCHES: usize = 16;
+    const BATCH: usize = 256;
+    let t0 = Instant::now();
+    let threads: Vec<_> = ["tp-a", "tp-b"]
+        .into_iter()
+        .map(|tenant| {
+            thread::spawn(move || {
+                let mut client = Client::connect(addr, tenant).unwrap();
+                let plan = client.prepare(WireSpec::Inference, policy).unwrap();
+                let mut ok = 0u64;
+                for _ in 0..BATCHES {
+                    let batch: Vec<WireParams> =
+                        (0..BATCH).map(|_| inference_params()).collect();
+                    for r in client.decide_batch(plan, batch).unwrap() {
+                        r.expect("batch entry failed");
+                        ok += 1;
+                    }
+                }
+                ok
+            })
+        })
+        .collect();
+    let total: u64 = threads.into_iter().map(|t| t.join().unwrap()).sum();
+    let rate = total as f64 / t0.elapsed().as_secs_f64();
+    assert_eq!(total, (2 * BATCHES * BATCH) as u64);
+    assert!(rate >= 2_500.0, "aggregate wire throughput {rate:.0} decisions/s < 2500");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn loadgen_sweep_reports_and_exports_slo_metrics() {
+    let mut cfg = test_config();
+    cfg.serve.shards = 2;
+    let server = Server::start("127.0.0.1:0", &cfg, Vec::new()).unwrap();
+    let lg = loadgen::LoadgenConfig {
+        addr: server.local_addr().to_string(),
+        connections: 4,
+        rate: 2_000.0,
+        requests: 300,
+        overloads: vec![1.0, 2.0],
+        ..loadgen::LoadgenConfig::default()
+    };
+    let report = loadgen::run(&lg).unwrap();
+    assert_eq!(report.stages.len(), 2);
+    assert_eq!(report.stages[0].sent, 300);
+    assert_eq!(report.stages[1].sent, 600, "2x stage scales the schedule");
+    for s in &report.stages {
+        assert_eq!(s.sent, s.ok + s.shed + s.deadline_missed + s.other_errors);
+        assert_eq!(s.other_errors, 0, "stage {} saw transport errors", s.label());
+        assert!(s.p99_us >= s.p50_us);
+    }
+    assert!(report.saturation_rps > 0.0);
+
+    let dir = std::env::temp_dir().join(format!("bayes_mem_serving_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("BENCH_serving.json");
+    report.export_json(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    for key in [
+        "\"p99_latency_us\"",
+        "\"deadline_miss_rate\"",
+        "\"saturation_throughput_rps\"",
+        "\"p999_latency_us_2x\"",
+    ] {
+        assert!(text.contains(key), "export missing {key}: {text}");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    server.shutdown().unwrap();
+}
