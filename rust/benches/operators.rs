@@ -136,10 +136,18 @@ fn main() {
 
     // SC primitives: encode (SNE array), gate ops, CORDIV, correlation.
     let mut bank64k = bank(65_536, 3);
-    b.bench_units("sne_encode_64kbit", 65_536.0, "bits", || {
+    let encode = b.bench_units("sne_encode_64kbit", 65_536.0, "bits", || {
         let s = bank64k.encode(0.57).unwrap();
         std::hint::black_box(s.count_ones());
     });
+    // ISSUE-9 acceptance: raw bitstream generation rate in Gbit/s
+    // (bits per ns), exported so CI can grep it out of
+    // BENCH_operators.json.
+    if let Some(e) = &encode {
+        let gbps = 65_536.0 / e.mean_ns;
+        b.metric("bitstream_gbps", gbps);
+        println!("  bitstream_gbps: {gbps:.2} Gbit/s (64-kbit SNE encode)");
+    }
     let a = bank64k.encode(0.6).unwrap();
     let c = bank64k.encode(0.7).unwrap();
     b.bench_units("bitstream_and_64kbit", 65_536.0, "bits", || {

@@ -28,16 +28,35 @@
 //! step 2 computes the same Boolean network word-for-word, the batched
 //! engine is **bit-identical** to looping the single-decision operators
 //! over the same bank — guarded by unit tests here and an integration
-//! test (`tests/determinism.rs`) through the whole coordinator. The
+//! test (`tests/determinism.rs`) through the whole coordinator. Step 2
+//! can additionally fan out across scoped threads (`set_threads`) for
+//! large batches: each decision's readout is a pure function of its
+//! packed words, so intra-batch parallelism cannot change a bit either. The
 //! speedup (≥2× at batch 32, 100-bit streams; see
 //! `benches/coordinator.rs`) comes purely from eliding allocation and
 //! per-decision bookkeeping, not from cutting corners.
 
 use crate::logic::cordiv_word;
+use crate::network::BLOCK_WORDS;
 use crate::stochastic::{tail_word_mask, SneBank};
 use crate::{Error, Result};
 
 use super::exact::{exact_fusion_m, exact_marginal, exact_posterior};
+
+/// Minimum packed words of phase-2 readout work per scoped thread
+/// before the batched engines fan out: below this the thread-spawn
+/// overhead dwarfs the word sweep (the batch twin of the evaluator's
+/// one-[`BLOCK_WORDS`]-block shard floor).
+const MIN_WORDS_PER_BATCH_SHARD: usize = 4 * BLOCK_WORDS;
+
+/// Shards phase 2 of a batched engine actually uses for `n` decisions
+/// of `work_words` packed words each, given a configured budget.
+fn batch_shards(threads: usize, n: usize, work_words: usize) -> usize {
+    if threads <= 1 {
+        return 1;
+    }
+    threads.min(n * work_words / MIN_WORDS_PER_BATCH_SHARD).clamp(1, n.max(1))
+}
 
 /// One inference decision's inputs (Eq. 1): prior and the two likelihoods.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -89,12 +108,23 @@ fn word_mask(k: usize, n_words: usize, n_bits: usize) -> u64 {
 #[derive(Debug, Default)]
 pub struct BatchedInference {
     scratch: Vec<u64>,
+    threads: usize,
 }
 
 impl BatchedInference {
     /// Engine with an empty scratch buffer (grows to fit the first batch).
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Set the intra-batch thread budget (clamped to ≥ 1; default 1).
+    /// Phase 1 (the grouped encode) is inherently serial — it owns the
+    /// bank's RNG/round-robin — but phase 2's per-decision readouts are
+    /// pure functions of the packed words, so large batches split
+    /// across scoped threads with **bit-identical** results (pinned by
+    /// tests); tiny batches saturate to 1 and never pay spawn overhead.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
     }
 
     /// Evaluate every query in order on `bank`. Failures (invalid
@@ -132,31 +162,57 @@ impl BatchedInference {
             }
         }
 
-        // Phase 2: word-parallel dataflow over the packed streams.
-        for (i, slot) in results.iter_mut().enumerate() {
-            if slot.is_err() {
-                continue;
-            }
-            let base = i * 3 * w;
-            let (mut quot_ones, mut den_ones) = (0u64, 0u64);
-            let mut dff = false;
-            for k in 0..w {
-                let mask = word_mask(k, w, n_bits);
-                let a = self.scratch[base + k];
-                let b1 = self.scratch[base + w + k];
-                let b0 = self.scratch[base + 2 * w + k];
-                // Numerator: P(A)·P(B|A); denominator: MUX(b0, b1; sel=a).
-                let num = a & b1;
-                let den = (num | (!a & b0)) & mask;
-                den_ones += den.count_ones() as u64;
-                quot_ones += (cordiv_word(num & mask, den, &mut dff) & mask).count_ones() as u64;
-            }
-            *slot = Ok(BatchedPosterior {
-                posterior: quot_ones as f64 / n_bits as f64,
-                marginal: den_ones as f64 / n_bits as f64,
+        // Phase 2: word-parallel dataflow over the packed streams —
+        // fanned out across scoped threads when a budget is configured
+        // and the batch is big enough ([`Self::set_threads`]); each
+        // readout is a pure function of its decision's packed words, so
+        // the split cannot change a single bit.
+        let scratch = &self.scratch;
+        let shards = batch_shards(self.threads, results.len(), 3 * w);
+        if shards > 1 {
+            let chunk = results.len().div_ceil(shards);
+            std::thread::scope(|scope| {
+                for (c, slots) in results.chunks_mut(chunk).enumerate() {
+                    scope.spawn(move || {
+                        for (j, slot) in slots.iter_mut().enumerate() {
+                            if slot.is_ok() {
+                                let base = (c * chunk + j) * 3 * w;
+                                *slot = Ok(Self::readout(scratch, base, w, n_bits));
+                            }
+                        }
+                    });
+                }
             });
+        } else {
+            for (i, slot) in results.iter_mut().enumerate() {
+                if slot.is_ok() {
+                    *slot = Ok(Self::readout(scratch, i * 3 * w, w, n_bits));
+                }
+            }
         }
         results
+    }
+
+    /// One decision's word-parallel AND/MUX/CORDIV readout over its
+    /// packed streams at `base` (prior, likelihood, likelihood_not).
+    fn readout(scratch: &[u64], base: usize, w: usize, n_bits: usize) -> BatchedPosterior {
+        let (mut quot_ones, mut den_ones) = (0u64, 0u64);
+        let mut dff = false;
+        for k in 0..w {
+            let mask = word_mask(k, w, n_bits);
+            let a = scratch[base + k];
+            let b1 = scratch[base + w + k];
+            let b0 = scratch[base + 2 * w + k];
+            // Numerator: P(A)·P(B|A); denominator: MUX(b0, b1; sel=a).
+            let num = a & b1;
+            let den = (num | (!a & b0)) & mask;
+            den_ones += den.count_ones() as u64;
+            quot_ones += (cordiv_word(num & mask, den, &mut dff) & mask).count_ones() as u64;
+        }
+        BatchedPosterior {
+            posterior: quot_ones as f64 / n_bits as f64,
+            marginal: den_ones as f64 / n_bits as f64,
+        }
     }
 }
 
@@ -166,12 +222,20 @@ impl BatchedInference {
 #[derive(Debug, Default)]
 pub struct BatchedFusion {
     scratch: Vec<u64>,
+    threads: usize,
 }
 
 impl BatchedFusion {
     /// Engine with an empty scratch buffer.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Set the intra-batch thread budget — the
+    /// [`BatchedInference::set_threads`] contract: phase-2 readouts fan
+    /// out across scoped threads, bit-identical at any budget.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
     }
 
     /// Closed-form fused posterior for one row (convenience re-export).
@@ -216,33 +280,64 @@ impl BatchedFusion {
             }
         }
 
-        // Phase 2: word-parallel ∏pᵢ / ∏(1−pᵢ) / normalize / CORDIV.
-        for (i, slot) in results.iter_mut().enumerate() {
-            if slot.is_err() {
-                continue;
-            }
-            let m = rows[i].len();
-            let base = offsets[i];
-            let mut quot_ones = 0u64;
-            let mut dff = false;
-            for k in 0..w {
-                let mask = word_mask(k, w, n_bits);
-                let mut prod = self.scratch[base + k];
-                let mut cprod = !prod;
-                for j in 1..m {
-                    let s = self.scratch[base + j * w + k];
-                    prod &= s;
-                    cprod &= !s;
+        // Phase 2: word-parallel ∏pᵢ / ∏(1−pᵢ) / normalize / CORDIV —
+        // same scoped-thread fan-out contract as
+        // [`BatchedInference::infer_batch`] phase 2.
+        let scratch = &self.scratch;
+        let avg_words = if rows.is_empty() { 0 } else { total / rows.len() };
+        let shards = batch_shards(self.threads, results.len(), avg_words);
+        if shards > 1 {
+            let chunk = results.len().div_ceil(shards);
+            std::thread::scope(|scope| {
+                for (c, slots) in results.chunks_mut(chunk).enumerate() {
+                    let (rows, offsets) = (&rows, &offsets);
+                    scope.spawn(move || {
+                        for (j, slot) in slots.iter_mut().enumerate() {
+                            let i = c * chunk + j;
+                            if slot.is_ok() {
+                                *slot = Ok(Self::readout_row(
+                                    scratch,
+                                    offsets[i],
+                                    rows[i].len(),
+                                    w,
+                                    n_bits,
+                                ));
+                            }
+                        }
+                    });
                 }
-                let half = self.scratch[base + m * w + k];
-                // num = ∏p · sel½ ; den = MUX(∏(1−p), ∏p; sel½).
-                let num = prod & half;
-                let den = (num | (!half & cprod)) & mask;
-                quot_ones += (cordiv_word(num & mask, den, &mut dff) & mask).count_ones() as u64;
+            });
+        } else {
+            for (i, slot) in results.iter_mut().enumerate() {
+                if slot.is_ok() {
+                    *slot = Ok(Self::readout_row(scratch, offsets[i], rows[i].len(), w, n_bits));
+                }
             }
-            *slot = Ok(quot_ones as f64 / n_bits as f64);
         }
         results
+    }
+
+    /// One row's word-parallel fusion readout over its `m` modality
+    /// streams plus the ½ select at `base`.
+    fn readout_row(scratch: &[u64], base: usize, m: usize, w: usize, n_bits: usize) -> f64 {
+        let mut quot_ones = 0u64;
+        let mut dff = false;
+        for k in 0..w {
+            let mask = word_mask(k, w, n_bits);
+            let mut prod = scratch[base + k];
+            let mut cprod = !prod;
+            for j in 1..m {
+                let s = scratch[base + j * w + k];
+                prod &= s;
+                cprod &= !s;
+            }
+            let half = scratch[base + m * w + k];
+            // num = ∏p · sel½ ; den = MUX(∏(1−p), ∏p; sel½).
+            let num = prod & half;
+            let den = (num | (!half & cprod)) & mask;
+            quot_ones += (cordiv_word(num & mask, den, &mut dff) & mask).count_ones() as u64;
+        }
+        quot_ones as f64 / n_bits as f64
     }
 
     fn validate(row: &[f64]) -> Result<()> {
@@ -390,6 +485,50 @@ mod tests {
         let mut engine = BatchedFusion::new();
         let short: Vec<&[f64]> = vec![&[0.5]];
         assert!(engine.fuse_batch(&mut batched_bank, &short)[0].is_err());
+    }
+
+    #[test]
+    fn threaded_batches_are_bit_identical_to_sequential() {
+        // Phase-2 fan-out must not change a bit at any thread budget,
+        // including odd lengths and a mid-batch per-decision error.
+        let mut qs = queries(48);
+        qs[17].likelihood = -0.2;
+        for n_bits in [100usize, 1000] {
+            let mut seq_bank = bank(n_bits, 321);
+            let mut seq = BatchedInference::new();
+            let base = seq.infer_batch(&mut seq_bank, &qs);
+            for threads in [2usize, 8] {
+                let mut par_bank = bank(n_bits, 321);
+                let mut par = BatchedInference::new();
+                par.set_threads(threads);
+                let got = par.infer_batch(&mut par_bank, &qs);
+                for (i, (g, b)) in got.iter().zip(&base).enumerate() {
+                    match (g, b) {
+                        (Ok(g), Ok(b)) => assert_eq!(g, b, "decision {i} @ {threads} threads"),
+                        (Err(_), Err(_)) => assert_eq!(i, 17),
+                        _ => panic!("decision {i}: threaded/sequential disagree"),
+                    }
+                }
+                assert_eq!(seq_bank.ledger().pulses, par_bank.ledger().pulses);
+            }
+        }
+        // Fusion rows of mixed arity through the same contract.
+        let rows: Vec<Vec<f64>> = (0..24)
+            .map(|i| {
+                let p = 0.3 + 0.02 * i as f64;
+                if i % 2 == 0 { vec![p, 0.9 - 0.01 * i as f64] } else { vec![p, 0.6, 0.8] }
+            })
+            .collect();
+        let row_refs: Vec<&[f64]> = rows.iter().map(Vec::as_slice).collect();
+        let mut seq_bank = bank(250, 55);
+        let base = BatchedFusion::new().fuse_batch(&mut seq_bank, &row_refs);
+        let mut par_bank = bank(250, 55);
+        let mut par = BatchedFusion::new();
+        par.set_threads(8);
+        let got = par.fuse_batch(&mut par_bank, &row_refs);
+        for (g, b) in got.iter().zip(&base) {
+            assert_eq!(g.as_ref().unwrap(), b.as_ref().unwrap());
+        }
     }
 
     #[test]

@@ -300,20 +300,89 @@ mod tests {
                 );
             }
         });
-        let mut bank = SneBank::new(cfg, 1).unwrap();
+        let mut bank = SneBank::new(cfg.clone(), 1).unwrap();
         let mut engine = BatchedInference::new();
         b.bench("inference_batched_32_100bit", || {
             for r in engine.infer_batch(&mut bank, &queries) {
                 std::hint::black_box(r.unwrap().posterior);
             }
         });
+        // Raw bitstream generation rate (Gbit/s = bits per ns): the
+        // ISSUE-9 headline operator metric, seeded from the same smoke
+        // so BENCH_operators.json always carries `bitstream_gbps`.
+        let mut bank64k =
+            SneBank::new(SneConfig { n_bits: 65_536, ..cfg }, 3).unwrap();
+        let encode = b.bench("sne_encode_64kbit", || {
+            std::hint::black_box(bank64k.encode(0.57).unwrap().count_ones());
+        });
+        if let Some(e) = &encode {
+            b.metric("bitstream_gbps", 65_536.0 / e.mean_ns);
+        }
         let path = Bench::export_path("operators");
-        let results = if path.exists() { b.finish() } else { b.finish_and_export() };
-        assert_eq!(results.len(), 2);
+        let seeded = !path.exists();
+        let results = if seeded { b.finish_and_export() } else { b.finish() };
+        assert_eq!(results.len(), 3);
         // Read-only checkouts can't take the export; that's an
         // environment limitation, not a failure of the harness.
         if let Ok(json) = std::fs::read_to_string(&path) {
             assert!(json.contains("\"group\": \"operators\""), "{json}");
+            if seeded {
+                assert!(json.contains("bitstream_gbps"), "{json}");
+            }
+        }
+    }
+
+    #[test]
+    fn network_json_seeds_the_perf_trajectory() {
+        // Smoke counterpart for the network group: seeds
+        // BENCH_network.json (when absent) with the blocked-word-path
+        // vs bit-serial-reference `word_block_speedup` metric, so CI
+        // can assert the ≥4× acceptance from plain `cargo test`.
+        use crate::device::WearPolicy;
+        use crate::network::{compile_query, BayesNet, NetlistEvaluator};
+        use crate::stochastic::{SneBank, SneConfig};
+        if std::env::var("BENCH_FILTER").is_ok() {
+            return; // a filter would suppress the benches below
+        }
+        let mut b = Bench::with_windows(
+            "network",
+            Duration::from_millis(10),
+            Duration::from_millis(60),
+        );
+        let mut net = BayesNet::named("smoke");
+        net.add_root("a", 0.5).unwrap();
+        net.add_root("b", 0.35).unwrap();
+        net.add_node("c", &["a", "b"], &[0.15, 0.4, 0.6, 0.85]).unwrap();
+        net.add_node("d", &["c"], &[0.2, 0.8]).unwrap();
+        let netlist = compile_query(&net, "a", &[("d", true)]).unwrap();
+        let cfg = SneConfig {
+            n_bits: 4096,
+            wear_policy: WearPolicy::Ignore,
+            ..Default::default()
+        };
+        let mut eval = NetlistEvaluator::new();
+        let mut bank_word = SneBank::new(cfg.clone(), 2).unwrap();
+        let word = b.bench("network_eval_word_parallel_4096bit", || {
+            std::hint::black_box(eval.evaluate(&mut bank_word, &netlist).unwrap().posterior);
+        });
+        let mut bank_bit = SneBank::new(cfg, 2).unwrap();
+        let per_bit = b.bench("network_eval_per_bit_4096bit", || {
+            std::hint::black_box(
+                eval.evaluate_reference(&mut bank_bit, &netlist).unwrap().posterior,
+            );
+        });
+        if let (Some(w), Some(p)) = (&word, &per_bit) {
+            b.metric("word_block_speedup", p.mean_ns / w.mean_ns);
+        }
+        let path = Bench::export_path("network");
+        let seeded = !path.exists();
+        let results = if seeded { b.finish_and_export() } else { b.finish() };
+        assert_eq!(results.len(), 2);
+        if let Ok(json) = std::fs::read_to_string(&path) {
+            assert!(json.contains("\"group\": \"network\""), "{json}");
+            if seeded {
+                assert!(json.contains("word_block_speedup"), "{json}");
+            }
         }
     }
 

@@ -44,6 +44,11 @@ pub struct CoordinatorConfig {
     /// Prepared-plan cache capacity (structural-key LRU shared by all
     /// handle clones; see [`crate::coordinator::PlanCache`]).
     pub plan_cache_capacity: usize,
+    /// Threads each native worker may fan a *single* decision across
+    /// (intra-decision stream sharding; see
+    /// [`crate::network::NetlistEvaluator::set_threads`]). `1` keeps
+    /// the classic one-thread-per-decision behavior.
+    pub intra_decision_threads: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -55,6 +60,7 @@ impl Default for CoordinatorConfig {
             queue_capacity: 4096,
             backend: Backend::Native,
             plan_cache_capacity: 32,
+            intra_decision_threads: 1,
         }
     }
 }
@@ -176,6 +182,7 @@ impl AppConfig {
         "coordinator.queue_capacity",
         "coordinator.backend",
         "coordinator.plan_cache_capacity",
+        "coordinator.intra_decision_threads",
         "policy.deadline_us",
         "policy.bits",
         "policy.threshold",
@@ -242,6 +249,10 @@ impl AppConfig {
                 "coordinator.plan_cache_capacity",
                 defaults.coordinator.plan_cache_capacity,
             ),
+            intra_decision_threads: doc.usize_or(
+                "coordinator.intra_decision_threads",
+                defaults.coordinator.intra_decision_threads,
+            ),
         };
         let deadline = match doc.get("policy.deadline_us").and_then(|v| v.as_i64()) {
             Some(us) if us < 0 => {
@@ -304,6 +315,24 @@ impl AppConfig {
                 "coordinator.plan_cache_capacity must be > 0".into(),
             ));
         }
+        if c.intra_decision_threads == 0 {
+            return Err(Error::Config(
+                "coordinator.intra_decision_threads must be > 0".into(),
+            ));
+        }
+        // Oversubscribing the machine silently serializes the shards and
+        // only adds spawn overhead — reject it like any other bad knob.
+        // When the parallelism probe itself fails, skip the upper check.
+        if let Ok(avail) = std::thread::available_parallelism() {
+            if c.intra_decision_threads > avail.get() {
+                return Err(Error::Config(format!(
+                    "coordinator.intra_decision_threads must be <= available \
+                     parallelism ({}), got {}",
+                    avail.get(),
+                    c.intra_decision_threads
+                )));
+            }
+        }
         let s = &self.serve;
         if s.shards == 0 {
             return Err(Error::Config("serve.shards must be > 0".into()));
@@ -349,6 +378,7 @@ max_wait_us = 400            # one 100-bit frame time at 4 us/bit
 queue_capacity = 4096
 backend = "native"           # native | pjrt
 plan_cache_capacity = 32     # prepared-plan LRU (prepare-once/decide-many)
+intra_decision_threads = 1   # shard one decision's streams across N cores
 
 [policy]                     # default serving policy (anytime early exit)
 # deadline_us = 400          # reply budget; late decisions stop early
@@ -473,11 +503,34 @@ mod tests {
             "[coordinator]\nqueue_capacity = 2\nmax_batch = 16",
             "[coordinator]\nbackend = \"gpu\"",
             "[coordinator]\nplan_cache_capacity = 0",
+            "[coordinator]\nintra_decision_threads = 0",
             "[sne]\nwear_policy = \"explode\"",
             "[sne]\nn_bits = 0",
         ] {
             let doc = Document::parse(bad).unwrap();
             assert!(AppConfig::from_document(&doc).is_err(), "should reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn intra_decision_threads_parses_and_bounds() {
+        // Defaults to 1 (single-threaded decisions, the classic path).
+        let cfg = AppConfig::from_document(&Document::parse("").unwrap()).unwrap();
+        assert_eq!(cfg.coordinator.intra_decision_threads, 1);
+        // An in-range override parses. 1 is always <= available
+        // parallelism, so keep the positive case portable.
+        let doc =
+            Document::parse("[coordinator]\nintra_decision_threads = 1").unwrap();
+        let cfg = AppConfig::from_document(&doc).unwrap();
+        assert_eq!(cfg.coordinator.intra_decision_threads, 1);
+        // Oversubscription beyond the machine is a typed config error
+        // (65536 exceeds any plausible core count).
+        if std::thread::available_parallelism().is_ok() {
+            let doc =
+                Document::parse("[coordinator]\nintra_decision_threads = 65536").unwrap();
+            let err = AppConfig::from_document(&doc).unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "{err}");
+            assert!(err.to_string().contains("available parallelism"), "{err}");
         }
     }
 }

@@ -470,11 +470,18 @@ impl BankPool {
 impl WorkerContext {
     fn build(config: &AppConfig, router: &Router, worker_idx: u64) -> Result<Self> {
         match router.backend() {
-            Backend::Native => Ok(WorkerContext::Native {
-                pool: BankPool::new(config, worker_idx)?,
-                evaluator: NetlistEvaluator::new(),
-                inputs_buf: Vec::new(),
-            }),
+            Backend::Native => {
+                let mut evaluator = NetlistEvaluator::new();
+                // The knob is validated at config load; the evaluator
+                // still saturates per decision (stream length, device
+                // nonidealities) via its own shard planning.
+                evaluator.set_threads(config.coordinator.intra_decision_threads);
+                Ok(WorkerContext::Native {
+                    pool: BankPool::new(config, worker_idx)?,
+                    evaluator,
+                    inputs_buf: Vec::new(),
+                })
+            }
             Backend::Pjrt => {
                 let runtime = Runtime::load_subset(
                     &config.artifacts_dir,
@@ -589,6 +596,7 @@ fn execute_batch(
                             if let Some(trace) = req.trace.as_deref_mut() {
                                 let s = evaluator.last_stage_ns();
                                 trace.stamp_eval(s.encode_ns, s.sweep_ns, s.readout_ns);
+                                trace.set_shards(evaluator.last_shards());
                             }
                             // Ran out of budget mid-sweep without
                             // permission to return partials: the early
@@ -1186,6 +1194,9 @@ mod tests {
             assert_eq!(sum, t.end_to_end_ns());
             assert!(t.end_to_end_ns() > 0);
             assert!(t.stage_ns(crate::obs::Stage::Sweep) > 0, "sweep span missing: {stamps:?}");
+            // Default config runs single-threaded decisions; the shard
+            // count the evaluator reports must say so.
+            assert_eq!(t.shards(), 1, "default intra_decision_threads = 1");
         }
         // Traced decisions feed the per-stage histograms and exposition.
         let snap = h.metrics().snapshot();

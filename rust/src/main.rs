@@ -197,6 +197,7 @@ USAGE:
   bayes-mem serve --listen HOST:PORT [--config cfg.toml] [--shards N]
                   [--tenant NAME=block|shed ...] [--admission block|shed]
                   [--max-inflight N] [--max-plans N] [--workers N]
+                  [--threads N]
   bayes-mem serve [--config cfg.toml] [--backend native|pjrt]
                   [--requests N] [--rate-fps F] [--workers N]
                   [--deadline-us N] [--allow-partial] [--bits N]
@@ -569,21 +570,30 @@ fn cmd_serve(flags: &Flags) -> CliResult<()> {
 fn cmd_serve_listen(flags: &Flags) -> CliResult<()> {
     let mut cfg = load_config(flags)?;
     cfg.coordinator.workers = flags.usize_or("workers", cfg.coordinator.workers);
+    // `--threads`: intra-decision shard parallelism per native worker
+    // (config key `coordinator.intra_decision_threads`).
+    cfg.coordinator.intra_decision_threads =
+        flags.usize_or("threads", cfg.coordinator.intra_decision_threads);
     cfg.serve.shards = flags.usize_or("shards", cfg.serve.shards);
     cfg.serve.max_inflight = flags.usize_or("max-inflight", cfg.serve.max_inflight);
     cfg.serve.max_plans = flags.usize_or("max-plans", cfg.serve.max_plans);
     if let Some(adm) = flags.get("admission") {
         cfg.serve.admission = bayes_mem::config::AdmissionPolicy::parse(adm)?;
     }
+    // Flag overrides bypass `from_document`; re-check the invariants so
+    // e.g. `--threads 0` fails with the same typed error the config
+    // file would produce.
+    cfg.validate()?;
     let tenants = parse_tenant_overrides(flags, &cfg)?;
     let listen = flags.get("listen").unwrap_or("127.0.0.1:0");
     let server = Server::start(listen, &cfg, tenants)?;
     println!(
-        "serving on {} ({} shards x {} workers, default admission {}, \
-         quotas: {} inflight / {} plans per tenant)",
+        "serving on {} ({} shards x {} workers x {} threads/decision, \
+         default admission {}, quotas: {} inflight / {} plans per tenant)",
         server.local_addr(),
         cfg.serve.shards,
         cfg.coordinator.workers,
+        cfg.coordinator.intra_decision_threads,
         cfg.serve.admission.name(),
         cfg.serve.max_inflight,
         cfg.serve.max_plans,

@@ -5,11 +5,23 @@
 //!
 //! The word-parallel path follows the `bayes::batch` conventions: one
 //! grouped SNE encode ([`SneBank::encode_group_into`]) straight into a
-//! reusable packed scratch buffer, every gate a bitwise op over `u64`
-//! lanes, the CORDIV readout through the shared
+//! reusable packed scratch buffer, every gate a bitwise op over
+//! [`BLOCK_WORDS`]-wide `[u64; 8]` lane blocks (one 64-byte cache line;
+//! the fixed-trip inner loops autovectorize without any SIMD
+//! intrinsics), the CORDIV readout through the shared
 //! [`crate::logic::cordiv_word`] Hillis–Steele word step, and tails
 //! masked by the shared `tail_word_mask` convention. The steady state
-//! allocates nothing: the scratch buffer is reused across calls.
+//! allocates nothing: the scratch buffers are reused across calls.
+//!
+//! On top of the block interpreter sits **intra-decision sharding**
+//! ([`NetlistEvaluator::set_threads`]): one decision's stream is split
+//! into contiguous block-aligned word spans, each encoded and swept on
+//! its own scoped thread from a repositioned per-stream RNG cursor
+//! ([`SneBank::begin_group_shards`]), then merged deterministically —
+//! CORDIV's flip-flop is the only serial dependency, and each shard
+//! reports its readout for a cleared incoming flip-flop plus the count
+//! of slots that would flip under a carried one, so the in-order fold
+//! reconstructs the single-thread sweep bit for bit (ledger included).
 //!
 //! The anytime path ([`NetlistEvaluator::evaluate_anytime`]) sweeps the
 //! same netlist in word-chunks — CORDIV's flip-flop already carries
@@ -33,10 +45,18 @@ use crate::{Error, Result};
 
 use super::compile::{GateOp, Netlist};
 
-/// Words per anytime chunk (256 bits): coarse enough that the per-chunk
-/// Wilson check is noise, fine enough that an early exit lands within a
-/// few hundred bits of the ideal stopping point.
-pub const ANYTIME_CHUNK_WORDS: usize = 4;
+/// Words per SIMD block: 8 × `u64` = one 64-byte cache line (512 bits).
+/// The gate interpreter and CORDIV readout process `[u64; BLOCK_WORDS]`
+/// lanes with fixed-trip inner loops the compiler keeps in vector
+/// registers; it is also the shard-granularity floor — spans shorter
+/// than a block never pay thread-spawn overhead.
+pub const BLOCK_WORDS: usize = 8;
+
+/// Words per anytime chunk (one [`BLOCK_WORDS`] block, 512 bits):
+/// coarse enough that the per-chunk Wilson check is noise — and that
+/// every chunk is pure block work — fine enough that an early exit
+/// lands within a few hundred bits of the ideal stopping point.
+pub const ANYTIME_CHUNK_WORDS: usize = BLOCK_WORDS;
 
 /// Standard-normal quantile used for anytime confidence intervals
 /// (`z = 3` ≈ 99.7 % two-sided coverage of the quotient density).
@@ -175,29 +195,83 @@ fn quotient_half_width(q_ones: u64, bits: u64, d_ones: u64) -> f64 {
     wilson_half_width(ones_eff, d_ones, ANYTIME_Z)
 }
 
+/// Load one `[u64; BLOCK_WORDS]` lane block of slot `slot` at word
+/// offset `k`. A 64-byte copy into a fixed-size local keeps the compute
+/// loops alias-free and fixed-trip — exactly what the autovectorizer
+/// needs (§Tentpole 9: no SIMD intrinsics, no new deps).
+#[inline(always)]
+fn load_block(scratch: &[u64], slot: usize, stride: usize, k: usize) -> [u64; BLOCK_WORDS] {
+    let mut b = [0u64; BLOCK_WORDS];
+    b.copy_from_slice(&scratch[slot * stride + k..slot * stride + k + BLOCK_WORDS]);
+    b
+}
+
+/// Store one lane block back to slot `slot` at word offset `k`.
+#[inline(always)]
+fn store_block(scratch: &mut [u64], slot: usize, stride: usize, k: usize, b: [u64; BLOCK_WORDS]) {
+    scratch[dst_range(slot, stride, k)].copy_from_slice(&b);
+}
+
+#[inline(always)]
+fn dst_range(slot: usize, stride: usize, k: usize) -> std::ops::Range<usize> {
+    slot * stride + k..slot * stride + k + BLOCK_WORDS
+}
+
 /// One word-parallel pass of the netlist gates over `words` words of
 /// `scratch` at slot stride `stride`; `tail` carries the final-word
-/// mask when this span contains the stream's last word. Shared by the
-/// one-shot sweep and the anytime chunked sweep so the interpreter
-/// exists exactly once (the bit-identity pins depend on that).
+/// mask when this span contains the stream's last word. Full
+/// [`BLOCK_WORDS`] blocks run through fixed-trip lane loops (the
+/// autovectorized fast path); the sub-block remainder falls back to the
+/// scalar word walk with identical semantics. Shared by the one-shot
+/// sweep, the anytime chunked sweep, and every shard worker so the
+/// interpreter exists exactly once (the bit-identity pins depend on
+/// that).
 fn run_gates(scratch: &mut [u64], ops: &[GateOp], stride: usize, words: usize, tail: Option<u64>) {
+    let blocked = words - words % BLOCK_WORDS;
     for op in ops {
         match *op {
             GateOp::Mux { dst, lo, hi, sel } => {
-                for k in 0..words {
+                for k in (0..blocked).step_by(BLOCK_WORDS) {
+                    let s = load_block(scratch, sel, stride, k);
+                    let h = load_block(scratch, hi, stride, k);
+                    let l = load_block(scratch, lo, stride, k);
+                    let mut o = [0u64; BLOCK_WORDS];
+                    for i in 0..BLOCK_WORDS {
+                        o[i] = (s[i] & h[i]) | (!s[i] & l[i]);
+                    }
+                    store_block(scratch, dst, stride, k, o);
+                }
+                for k in blocked..words {
                     let s = scratch[sel * stride + k];
                     scratch[dst * stride + k] =
                         (s & scratch[hi * stride + k]) | (!s & scratch[lo * stride + k]);
                 }
             }
             GateOp::And { dst, a, b } => {
-                for k in 0..words {
+                for k in (0..blocked).step_by(BLOCK_WORDS) {
+                    let x = load_block(scratch, a, stride, k);
+                    let y = load_block(scratch, b, stride, k);
+                    let mut o = [0u64; BLOCK_WORDS];
+                    for i in 0..BLOCK_WORDS {
+                        o[i] = x[i] & y[i];
+                    }
+                    store_block(scratch, dst, stride, k, o);
+                }
+                for k in blocked..words {
                     scratch[dst * stride + k] =
                         scratch[a * stride + k] & scratch[b * stride + k];
                 }
             }
             GateOp::Not { dst, a } => {
-                for k in 0..words {
+                for k in (0..blocked).step_by(BLOCK_WORDS) {
+                    let x = load_block(scratch, a, stride, k);
+                    let mut o = [0u64; BLOCK_WORDS];
+                    for i in 0..BLOCK_WORDS {
+                        o[i] = !x[i];
+                    }
+                    store_block(scratch, dst, stride, k, o);
+                }
+                for k in blocked..words {
                     scratch[dst * stride + k] = !scratch[a * stride + k];
                 }
                 if let Some(m) = tail {
@@ -205,9 +279,7 @@ fn run_gates(scratch: &mut [u64], ops: &[GateOp], stride: usize, words: usize, t
                 }
             }
             GateOp::Const1 { dst } => {
-                for k in 0..words {
-                    scratch[dst * stride + k] = u64::MAX;
-                }
+                scratch[dst * stride..dst * stride + words].fill(u64::MAX);
                 if let Some(m) = tail {
                     scratch[dst * stride + words - 1] &= m;
                 }
@@ -221,7 +293,12 @@ fn run_gates(scratch: &mut [u64], ops: &[GateOp], stride: usize, words: usize, t
 
 /// CORDIV readout over `words` words of the num/den slots, accumulating
 /// quotient/divisor popcounts into `q_ones`/`d_ones` with the flip-flop
-/// carried in `dff`. Same sharing rationale as [`run_gates`].
+/// carried in `dff`. Loads and the divisor popcount run block-at-a-time
+/// ([`BLOCK_WORDS`] lanes); the per-word [`cordiv_word`] step stays
+/// serial because the flip-flop carries across words — that serial
+/// dependency is exactly what the shard merge
+/// ([`cordiv_shard_readout`]) factors out. Same sharing rationale as
+/// [`run_gates`].
 #[allow(clippy::too_many_arguments)]
 fn cordiv_accumulate(
     scratch: &[u64],
@@ -234,7 +311,30 @@ fn cordiv_accumulate(
     q_ones: &mut u64,
     d_ones: &mut u64,
 ) {
-    for k in 0..words {
+    let blocked = words - words % BLOCK_WORDS;
+    for k in (0..blocked).step_by(BLOCK_WORDS) {
+        let mut nb = load_block(scratch, num, stride, k);
+        let mut db = load_block(scratch, den, stride, k);
+        if let Some(m) = tail {
+            if k + BLOCK_WORDS == words {
+                nb[BLOCK_WORDS - 1] &= m;
+                db[BLOCK_WORDS - 1] &= m;
+            }
+        }
+        let mut d = 0u64;
+        for i in 0..BLOCK_WORDS {
+            d += db[i].count_ones() as u64;
+        }
+        *d_ones += d;
+        for i in 0..BLOCK_WORDS {
+            let mask = match tail {
+                Some(m) if k + i + 1 == words => m,
+                _ => u64::MAX,
+            };
+            *q_ones += (cordiv_word(nb[i], db[i], dff) & mask).count_ones() as u64;
+        }
+    }
+    for k in blocked..words {
         let mask = match tail {
             Some(m) if k + 1 == words => m,
             _ => u64::MAX,
@@ -244,6 +344,94 @@ fn cordiv_accumulate(
         *d_ones += dw.count_ones() as u64;
         *q_ones += (cordiv_word(nw, dw, dff) & mask).count_ones() as u64;
     }
+}
+
+/// One shard's CORDIV readout, computed **without** the incoming
+/// flip-flop: the quotient popcount assuming a cleared carry (`q0`),
+/// the number of *valid* slots before the shard's first divisor hit
+/// (`prefix_bits` — exactly the slots whose quotient bit equals the
+/// carried flip-flop), the divisor popcount, and the outgoing flip-flop.
+/// [`merge_shard_readouts`] folds these in shard order to reconstruct
+/// the serial sweep exactly: slots at or after the first divisor hit
+/// are independent of the incoming carry, and slots before it
+/// contribute `prefix_bits` extra ones iff the carry arrives set.
+#[derive(Debug, Clone, Copy, Default)]
+struct ShardReadout {
+    q0: u64,
+    prefix_bits: u64,
+    d_ones: u64,
+    has_hit: bool,
+    dff_out: bool,
+}
+
+/// Compute a [`ShardReadout`] over `words` words of the num/den slots
+/// (the shard-worker twin of [`cordiv_accumulate`]; both step the same
+/// [`cordiv_word`] kernel).
+fn cordiv_shard_readout(
+    scratch: &[u64],
+    num: usize,
+    den: usize,
+    stride: usize,
+    words: usize,
+    tail: Option<u64>,
+) -> ShardReadout {
+    let mut out = ShardReadout::default();
+    let mut dff = false;
+    let mut counting_prefix = true;
+    for k in 0..words {
+        let mask = match tail {
+            Some(m) if k + 1 == words => m,
+            _ => u64::MAX,
+        };
+        let nw = scratch[num * stride + k] & mask;
+        let dw = scratch[den * stride + k] & mask;
+        out.d_ones += dw.count_ones() as u64;
+        if counting_prefix {
+            if dw == 0 {
+                // No divisor hit in this word: every *valid* slot echoes
+                // the carried flip-flop.
+                out.prefix_bits += mask.count_ones() as u64;
+            } else {
+                out.prefix_bits += dw.trailing_zeros() as u64;
+                counting_prefix = false;
+            }
+        }
+        out.q0 += (cordiv_word(nw, dw, &mut dff) & mask).count_ones() as u64;
+    }
+    out.has_hit = !counting_prefix;
+    out.dff_out = dff;
+    out
+}
+
+/// Split a `w`-word stream into at most `shards` contiguous spans whose
+/// boundaries are [`BLOCK_WORDS`]-aligned, so every shard's interior is
+/// pure block work (only the global tail span may carry a remainder).
+fn shard_bounds(w: usize, shards: usize) -> Vec<(usize, usize)> {
+    let blocks = w.div_ceil(BLOCK_WORDS);
+    let per = blocks.div_ceil(shards) * BLOCK_WORDS;
+    let mut bounds = Vec::with_capacity(shards);
+    let mut start = 0usize;
+    while start < w {
+        let end = (start + per).min(w);
+        bounds.push((start, end));
+        start = end;
+    }
+    bounds
+}
+
+/// Fold per-shard readouts in shard order, reconstructing the serial
+/// CORDIV sweep's quotient/divisor popcounts bit for bit.
+fn merge_shard_readouts(shards: &[ShardReadout]) -> (u64, u64) {
+    let mut dff = false;
+    let (mut q_ones, mut d_ones) = (0u64, 0u64);
+    for s in shards {
+        q_ones += s.q0 + if dff { s.prefix_bits } else { 0 };
+        d_ones += s.d_ones;
+        if s.has_hit {
+            dff = s.dff_out;
+        }
+    }
+    (q_ones, d_ones)
 }
 
 /// Measured outputs of one compiled-network decision.
@@ -272,12 +460,33 @@ pub struct EvalStageNs {
     pub readout_ns: u64,
 }
 
-/// Reusable netlist evaluator (owns the packed scratch buffer).
-#[derive(Debug, Default)]
+/// Reusable netlist evaluator (owns the packed scratch buffers).
+#[derive(Debug)]
 pub struct NetlistEvaluator {
     scratch: Vec<u64>,
+    /// Per-shard scratch buffers, reused across sharded calls.
+    shard_scratch: Vec<Vec<u64>>,
+    /// Intra-decision thread budget ([`Self::set_threads`]; 1 = the
+    /// classic single-thread sweep).
+    threads: usize,
+    /// Shards used by the most recent evaluation (1 whenever the
+    /// sequential path ran) — surfaced into `obs` stage traces.
+    last_shards: usize,
     stage_timing: bool,
     stage_ns: EvalStageNs,
+}
+
+impl Default for NetlistEvaluator {
+    fn default() -> Self {
+        Self {
+            scratch: Vec::new(),
+            shard_scratch: Vec::new(),
+            threads: 1,
+            last_shards: 1,
+            stage_timing: false,
+            stage_ns: EvalStageNs::default(),
+        }
+    }
 }
 
 /// Advance a lap clock, returning the ns since the previous lap (0 when
@@ -300,6 +509,38 @@ impl NetlistEvaluator {
     /// netlist, then is reused).
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Set the intra-decision thread budget (clamped to ≥ 1; default 1).
+    ///
+    /// With `n > 1` a full-sweep decision splits its stream into up to
+    /// `n` contiguous block-aligned shards, each encoded and swept on
+    /// its own scoped thread, then merged deterministically — results
+    /// and ledger are **bit-identical** to the single-thread sweep at
+    /// any shard count (pinned by tests). The evaluator saturates the
+    /// shard count to one [`BLOCK_WORDS`] block per shard (tiny
+    /// decisions never pay thread-spawn overhead) and falls back to the
+    /// sequential path entirely for nonideal devices
+    /// (`drift_coupling != 0` stages pulses at begin — single-shard
+    /// staging) and for criterion-driven anytime sweeps (the stop rule
+    /// is causal in the bit stream).
+    ///
+    /// Callers validate the budget against the machine
+    /// ([`crate::config::CoordinatorConfig::intra_decision_threads`]);
+    /// this setter only enforces the ≥ 1 floor.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
+    /// The configured intra-decision thread budget.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Shards used by the most recent evaluation (1 whenever the
+    /// sequential path ran).
+    pub fn last_shards(&self) -> usize {
+        self.last_shards
     }
 
     /// Turn per-stage wall-clock timing on or off (off by default — the
@@ -347,6 +588,11 @@ impl NetlistEvaluator {
         check_inputs(netlist, inputs)?;
         let n_bits = bank.n_bits();
         let w = n_bits.div_ceil(64);
+        let shards = self.plan_shards(bank, w);
+        if shards > 1 {
+            return self.evaluate_sharded(bank, netlist, inputs, w, shards);
+        }
+        self.last_shards = 1;
         self.scratch.resize(netlist.n_slots() * w, 0);
         let n_in = inputs.len();
         let mut clock = self.start_clock();
@@ -384,6 +630,95 @@ impl NetlistEvaluator {
         })
     }
 
+    /// How many shards a `w`-word decision on `bank` actually gets:
+    /// saturated to one [`BLOCK_WORDS`] block per shard (streams shorter
+    /// than a block stay sequential — no thread-spawn overhead on tiny
+    /// decisions) and forced to 1 for nonideal devices, whose staged
+    /// pulse walk cannot reposition RNG cursors (single-shard staging).
+    fn plan_shards(&self, bank: &SneBank, w: usize) -> usize {
+        if self.threads <= 1 || bank.config().params.drift_coupling != 0.0 {
+            return 1;
+        }
+        self.threads.min(w / BLOCK_WORDS).max(1)
+    }
+
+    /// The full sweep, split across `shards` scoped threads: per-shard
+    /// RNG cursors from [`SneBank::begin_group_shards`], one private
+    /// scratch buffer per shard, and a deterministic in-order merge
+    /// ([`merge_shard_readouts`] for CORDIV,
+    /// [`SneBank::finish_group_shards`] for wear/ledger) that
+    /// reconstructs the single-thread sweep bit for bit.
+    fn evaluate_sharded(
+        &mut self,
+        bank: &mut SneBank,
+        netlist: &Netlist,
+        inputs: &[f64],
+        w: usize,
+        shards: usize,
+    ) -> Result<NetworkPosterior> {
+        let n_bits = bank.n_bits();
+        let bounds = shard_bounds(w, shards);
+        self.last_shards = bounds.len();
+        let n_in = inputs.len();
+        let n_slots = netlist.n_slots();
+        let (num, den) = (netlist.num_slot(), netlist.den_slot());
+        let mut clock = self.start_clock();
+        let session = match bank.begin_group_shards(inputs, &bounds) {
+            Ok(s) => s,
+            Err(e) => {
+                // Same contract as the sequential path: pre-validated
+                // inputs mean this is a mid-group device failure (wear);
+                // close the decision so the ledger stays aligned.
+                bank.finish_decision();
+                return Err(e);
+            }
+        };
+        self.stage_ns.encode_ns = lap_ns(&mut clock);
+        let (mut encs, snes) = session.into_parts();
+        self.shard_scratch.resize_with(bounds.len(), Vec::new);
+        let mut outs: Vec<(ShardReadout, Vec<u64>)> =
+            bounds.iter().map(|_| (ShardReadout::default(), vec![0u64; n_in])).collect();
+        let ops = netlist.ops();
+        std::thread::scope(|scope| {
+            for (((enc, scratch), out), &(start, end)) in encs
+                .iter_mut()
+                .zip(self.shard_scratch.iter_mut())
+                .zip(outs.iter_mut())
+                .zip(&bounds)
+            {
+                scope.spawn(move || {
+                    let span = end - start;
+                    scratch.resize(n_slots * span, 0);
+                    let words = enc.encode_chunk_detached(&mut scratch[..n_in * span], &mut out.1);
+                    // A zero-input netlist (everything folded to
+                    // constants) has no streams to emit.
+                    debug_assert!(n_in == 0 || words == span);
+                    let tail = (end == w).then(|| tail_word_mask(n_bits));
+                    run_gates(scratch, ops, span, span, tail);
+                    out.0 = cordiv_shard_readout(scratch, num, den, span, span, tail);
+                });
+            }
+        });
+        // Deterministic merge, in shard order (threads only ever wrote
+        // their own slots; nothing below depends on finish order).
+        let readouts: Vec<ShardReadout> = outs.iter().map(|(r, _)| *r).collect();
+        let (q_ones, d_ones) = merge_shard_readouts(&readouts);
+        let mut switches = vec![0u64; n_in];
+        for (_, sw) in &outs {
+            for (t, s) in switches.iter_mut().zip(sw) {
+                *t += s;
+            }
+        }
+        self.stage_ns.sweep_ns = lap_ns(&mut clock);
+        bank.finish_group_shards(&snes, &switches);
+        bank.finish_decision();
+        self.stage_ns.readout_ns = lap_ns(&mut clock);
+        Ok(NetworkPosterior {
+            posterior: q_ones as f64 / n_bits as f64,
+            marginal: d_ones as f64 / n_bits as f64,
+        })
+    }
+
     /// **Anytime** evaluation: sweep the netlist in
     /// [`ANYTIME_CHUNK_WORDS`]-word chunks over a chunked grouped encode
     /// ([`SneBank::begin_group_chunks`], bit-identical draw order to the
@@ -412,10 +747,20 @@ impl NetlistEvaluator {
     ) -> Result<AnytimePosterior> {
         let n_bits = bank.n_bits();
         let StopPolicy::Anytime { threshold, max_half_width, budget } = *policy else {
+            // `Never` *is* the full sweep — and therefore shards when a
+            // thread budget is configured.
             let r = self.evaluate_with_inputs(bank, netlist, inputs)?;
             return Ok(AnytimePosterior::exhausted(r.posterior, r.marginal, n_bits));
         };
         check_inputs(netlist, inputs)?;
+        // Criterion-driven sweeps stay sequential regardless of the
+        // thread budget: the stop rule is causal in the bit stream
+        // (which bits are read depends on the decision taken after each
+        // chunk), so sharding ahead of the stop point would change the
+        // result. Keeping this path single-shard is what makes anytime
+        // stop decisions bit-identical at every `set_threads` value
+        // (pinned by tests).
+        self.last_shards = 1;
         let w = n_bits.div_ceil(64);
         let cw = ANYTIME_CHUNK_WORDS.min(w);
         let n_in = inputs.len();
@@ -518,8 +863,11 @@ impl NetlistEvaluator {
     /// Bit-serial reference walk of the same netlist: identical encode
     /// (same SNE/RNG draws), then every gate and the CORDIV flip-flop
     /// stepped one bit at a time — the "conventional" dataflow the
-    /// word-parallel sweep must beat ≥2× (`benches/network.rs`) while
-    /// matching bit-for-bit (pinned by tests here).
+    /// block-parallel sweep must beat ≥4× (`benches/network.rs`, the
+    /// `word_block_speedup` export) while matching bit-for-bit (pinned
+    /// by tests here). This walk is the pinned oracle: it never blocks,
+    /// never shards, and is deliberately left untouched by the SIMD
+    /// refactor.
     pub fn evaluate_reference(
         &mut self,
         bank: &mut SneBank,
@@ -886,6 +1234,124 @@ mod tests {
             .unwrap_err();
         assert!(matches!(err, crate::Error::DeviceWorn { .. }));
         assert_eq!(b.ledger().decisions, 1, "anytime error path must close the decision");
+    }
+
+    #[test]
+    fn sharded_sweep_is_bit_identical_to_single_thread() {
+        // The tentpole pin: 1-, 2- and 8-shard evaluation produce
+        // bit-identical posteriors AND ledgers on shared seeds,
+        // including odd stream lengths (tail mask inside the last
+        // shard) and lengths that don't divide evenly across shards.
+        let net = diamond();
+        for (query, evidence) in [
+            ("a", vec![("d", true)]),
+            ("b", vec![("a", true), ("d", false)]),
+            ("d", vec![]),
+        ] {
+            let nl = compile_query(&net, query, &evidence).unwrap();
+            for n_bits in [1024usize, 1000, 4096, 5000, 8192] {
+                let mut b1 = bank(n_bits, 31);
+                let base = NetlistEvaluator::new().evaluate(&mut b1, &nl).unwrap();
+                for threads in [2usize, 8] {
+                    let mut bt = bank(n_bits, 31);
+                    let mut eval = NetlistEvaluator::new();
+                    eval.set_threads(threads);
+                    let got = eval.evaluate(&mut bt, &nl).unwrap();
+                    assert_eq!(got, base, "{query} @ {n_bits} bits, {threads} threads");
+                    assert!(eval.last_shards() >= 1 && eval.last_shards() <= threads);
+                    assert_eq!(b1.ledger().pulses, bt.ledger().pulses);
+                    assert_eq!(b1.ledger().switch_events, bt.ledger().switch_events);
+                    assert_eq!(
+                        b1.ledger().energy_nj.to_bits(),
+                        bt.ledger().energy_nj.to_bits(),
+                        "ledger energy must match bit-for-bit"
+                    );
+                    assert_eq!(
+                        b1.ledger().clock.elapsed_ns(),
+                        bt.ledger().clock.elapsed_ns()
+                    );
+                    // Post-decision bank state identical: the next
+                    // decision matches on both banks.
+                    let a = NetlistEvaluator::new().evaluate(&mut b1, &nl).unwrap();
+                    let b = NetlistEvaluator::new().evaluate(&mut bt, &nl).unwrap();
+                    assert_eq!(a, b, "post-shard bank state diverged");
+                    b1 = bank(n_bits, 31);
+                    NetlistEvaluator::new().evaluate(&mut b1, &nl).unwrap();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_count_saturates_for_tiny_streams_and_drift() {
+        use crate::device::DeviceParams;
+        let net = diamond();
+        let nl = compile_query(&net, "a", &[("d", true)]).unwrap();
+        // 100 bits = 2 words < one BLOCK_WORDS block: stays sequential.
+        let mut eval = NetlistEvaluator::new();
+        eval.set_threads(8);
+        let mut tiny = bank(100, 3);
+        let got = eval.evaluate(&mut tiny, &nl).unwrap();
+        assert_eq!(eval.last_shards(), 1, "sub-block stream must not shard");
+        let mut fresh = bank(100, 3);
+        assert_eq!(got, NetlistEvaluator::new().evaluate(&mut fresh, &nl).unwrap());
+        // 1024 bits = 16 words with 8 threads saturates at 2 shards
+        // (one block minimum per shard).
+        let mut mid = bank(1024, 3);
+        eval.evaluate(&mut mid, &nl).unwrap();
+        assert_eq!(eval.last_shards(), 2);
+        // set_threads clamps 0 to the sequential floor.
+        eval.set_threads(0);
+        assert_eq!(eval.threads(), 1);
+        // Nonideal devices fall back to single-shard staging, still
+        // bit-identical to the sequential nonideal sweep.
+        let params = DeviceParams { drift_coupling: 0.05, ..Default::default() };
+        let cfg = SneConfig { n_bits: 1024, params, ..Default::default() };
+        let mut d1 = SneBank::new(cfg.clone(), 9).unwrap();
+        let base = NetlistEvaluator::new().evaluate(&mut d1, &nl).unwrap();
+        let mut d8 = SneBank::new(cfg, 9).unwrap();
+        eval.set_threads(8);
+        let got = eval.evaluate(&mut d8, &nl).unwrap();
+        assert_eq!(eval.last_shards(), 1, "drifted devices must stage single-shard");
+        assert_eq!(got, base);
+        assert_eq!(d1.ledger().pulses, d8.ledger().pulses);
+    }
+
+    #[test]
+    fn anytime_stops_are_identical_at_every_thread_budget() {
+        // Criterion-driven anytime sweeps stay sequential by design, so
+        // the stop decision, bits used, and posterior are identical no
+        // matter the configured thread budget; Never-policy sweeps
+        // shard and still match bit for bit.
+        let net = diamond();
+        let nl = compile_query(&net, "a", &[("d", true)]).unwrap();
+        let n_bits = 32_768;
+        let mut b1 = bank(n_bits, 5);
+        let base = NetlistEvaluator::new()
+            .evaluate_anytime(&mut b1, &nl, nl.inputs(), &StopPolicy::converged(0.02))
+            .unwrap();
+        for threads in [2usize, 8] {
+            let mut bt = bank(n_bits, 5);
+            let mut eval = NetlistEvaluator::new();
+            eval.set_threads(threads);
+            let got = eval
+                .evaluate_anytime(&mut bt, &nl, nl.inputs(), &StopPolicy::converged(0.02))
+                .unwrap();
+            assert_eq!(got, base, "anytime stop diverged at {threads} threads");
+            assert_eq!(eval.last_shards(), 1);
+            assert_eq!(b1.ledger().pulses, bt.ledger().pulses);
+
+            let mut bn = bank(n_bits, 5);
+            let never = eval
+                .evaluate_anytime(&mut bn, &nl, nl.inputs(), &StopPolicy::Never)
+                .unwrap();
+            assert!(eval.last_shards() > 1, "Never-policy full sweep should shard");
+            let mut bf = bank(n_bits, 5);
+            let full = NetlistEvaluator::new()
+                .evaluate_anytime(&mut bf, &nl, nl.inputs(), &StopPolicy::Never)
+                .unwrap();
+            assert_eq!(never, full);
+        }
     }
 
     #[test]

@@ -77,7 +77,7 @@ pub use compile::{
 };
 pub use eval::{
     AnytimePosterior, EvalStageNs, NetlistEvaluator, NetworkPosterior, StopPolicy, StopReason,
-    ANYTIME_CHUNK_WORDS, ANYTIME_Z, MIN_ANYTIME_BITS,
+    ANYTIME_CHUNK_WORDS, ANYTIME_Z, BLOCK_WORDS, MIN_ANYTIME_BITS,
 };
 pub use exact::{
     posterior as full_joint_posterior, posterior_by_name as full_joint_posterior_by_name,

@@ -94,13 +94,30 @@ pub struct DecisionTrace {
     pub start_ns: u64,
     origin: Instant,
     stamps: [u64; Stage::COUNT],
+    /// Intra-decision shard count the evaluator actually used for this
+    /// decision (1 = classic single-thread sweep; see
+    /// `NetlistEvaluator::last_shards`).
+    shards: usize,
 }
 
 impl DecisionTrace {
     /// New trace with origin `origin` sitting `start_ns` after the
     /// recorder epoch. Normally called through `TraceRecorder::try_begin`.
     pub fn begin(id: u64, plan_id: u64, origin: Instant, start_ns: u64) -> Self {
-        Self { id, plan_id, start_ns, origin, stamps: [0; Stage::COUNT] }
+        Self { id, plan_id, start_ns, origin, stamps: [0; Stage::COUNT], shards: 1 }
+    }
+
+    /// Record how many intra-decision shards the evaluator fanned this
+    /// decision across (clamped to >= 1 so untouched traces read as the
+    /// classic single-thread sweep).
+    #[inline]
+    pub fn set_shards(&mut self, shards: usize) {
+        self.shards = shards.max(1);
+    }
+
+    /// Intra-decision shard count recorded for this decision.
+    pub fn shards(&self) -> usize {
+        self.shards
     }
 
     /// Stamp the end of `stage` at "now", clamped so stamps never go
@@ -168,19 +185,25 @@ fn push_event(
     id: u64,
     ts_ns: u64,
     dur_ns: u64,
+    shards: Option<usize>,
 ) {
     if !*first {
         out.push_str(",\n");
     }
     *first = false;
+    let shards_arg = match shards {
+        Some(s) => format!(",\"shards\":{s}"),
+        None => String::new(),
+    };
     out.push_str(&format!(
         "  {{\"name\":\"{}\",\"ph\":\"X\",\"cat\":\"decision\",\"pid\":1,\"tid\":{},\
-         \"ts\":{:.3},\"dur\":{:.3},\"args\":{{\"id\":{}}}}}",
+         \"ts\":{:.3},\"dur\":{:.3},\"args\":{{\"id\":{}{}}}}}",
         name,
         plan_id,
         ts_ns as f64 / 1e3,
         dur_ns as f64 / 1e3,
-        id
+        id,
+        shards_arg
     ));
 }
 
@@ -191,7 +214,16 @@ pub fn chrome_trace_json(traces: &[DecisionTrace]) -> String {
     let mut out = String::from("[\n");
     let mut first = true;
     for t in traces {
-        push_event(&mut out, &mut first, "decision", t.plan_id, t.id, t.start_ns, t.end_to_end_ns());
+        push_event(
+            &mut out,
+            &mut first,
+            "decision",
+            t.plan_id,
+            t.id,
+            t.start_ns,
+            t.end_to_end_ns(),
+            Some(t.shards()),
+        );
         for stage in Stage::ALL {
             let dur = t.stage_ns(stage);
             let i = stage.index();
@@ -204,6 +236,7 @@ pub fn chrome_trace_json(traces: &[DecisionTrace]) -> String {
                 t.id,
                 t.start_ns.saturating_add(begin),
                 dur,
+                None,
             );
         }
     }
@@ -222,6 +255,7 @@ mod tests {
         t.stamp(Stage::Batch);
         t.stamp(Stage::Dispatch);
         t.stamp_eval(100, 2000, 50);
+        t.set_shards(4);
         t.finish();
         t
     }
@@ -263,6 +297,18 @@ mod tests {
         assert!(json.contains("\"name\":\"sweep\""));
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert!(!json.contains("NaN"));
+        // Shard counts ride on the decision event only.
+        assert_eq!(json.matches("\"shards\":4").count(), traces.len());
+    }
+
+    #[test]
+    fn shards_default_to_one_and_clamp() {
+        let mut t = DecisionTrace::begin(1, 1, Instant::now(), 0);
+        assert_eq!(t.shards(), 1);
+        t.set_shards(0);
+        assert_eq!(t.shards(), 1, "0 clamps to the single-thread reading");
+        t.set_shards(8);
+        assert_eq!(t.shards(), 8);
     }
 
     #[test]

@@ -19,4 +19,4 @@ pub use bitstream::{Bitstream, BitstreamPool};
 pub(crate) use bitstream::tail_word_mask;
 pub use correlation::{pair_counts, pearson, scc, CorrelationReport, PairCounts};
 pub use lfsr::{Lfsr, LfsrEncoder};
-pub use sne::{GroupChunkEncoder, Sne, SneBank, SneConfig};
+pub use sne::{GroupChunkEncoder, GroupShardSession, Sne, SneBank, SneConfig};

@@ -264,6 +264,12 @@ pub struct GroupChunkEncoder {
     n_streams: usize,
     n_bits: usize,
     words_total: usize,
+    /// First word this encoder emits: 0 for whole-stream encoders, a
+    /// shard offset for encoders from [`SneBank::begin_group_shards`].
+    start_word: usize,
+    /// One past the last word this encoder emits (`words_total` unless
+    /// this is an interior shard).
+    end_word: usize,
     next_word: usize,
 }
 
@@ -286,20 +292,62 @@ struct StreamCursor {
     lo: u32,
 }
 
+impl StreamCursor {
+    /// Replay the binary-expansion construction of
+    /// [`Sne::encode_into_words`] from this cursor into `dst`, applying
+    /// `tail` to the final word when given; returns the switch count
+    /// (set bits after masking).
+    fn emit(&mut self, dst: &mut [u64], tail: Option<u64>) -> u64 {
+        if self.q >= 65536 {
+            dst.iter_mut().for_each(|w| *w = u64::MAX);
+        } else if self.q == 0 {
+            dst.iter_mut().for_each(|w| *w = 0);
+        } else {
+            for word in dst.iter_mut() {
+                let mut z = 0u64;
+                for i in self.lo..16 {
+                    let r = self.rng.next_u64();
+                    z = if (self.q >> i) & 1 == 1 { z | r } else { z & !r };
+                }
+                *word = z;
+            }
+        }
+        if let Some(m) = tail {
+            if let Some(last) = dst.last_mut() {
+                *last &= m;
+            }
+        }
+        dst.iter().map(|w| w.count_ones() as u64).sum()
+    }
+}
+
+/// Fast-path quantisation shared by every cursor-based encoder: `p`
+/// rounds to `q / 2^16`, and `lo` is the lowest set bit of `q` (16 when
+/// the stream needs no RNG draws at all — constant 0 or 1), so a packed
+/// word costs exactly `16 − lo` draws. This fixed per-word draw count is
+/// what lets a cursor be repositioned at an arbitrary word offset.
+fn quantize(p: f64) -> (u32, u32) {
+    let prob = p.clamp(1e-9, 1.0 - 1e-9);
+    let q = (prob * 65536.0).round() as u32;
+    let lo = if q == 0 || q >= 65536 { 16 } else { q.trailing_zeros() };
+    (q, lo)
+}
+
 impl GroupChunkEncoder {
     /// Total bits per stream at exhaustion (the bank's configured length).
     pub fn bits_total(&self) -> usize {
         self.n_bits
     }
 
-    /// Bits emitted per stream so far.
+    /// Bits emitted per stream so far (by *this* encoder — a shard
+    /// encoder counts only its own span).
     pub fn bits_done(&self) -> usize {
-        (self.next_word * 64).min(self.n_bits)
+        (self.next_word * 64).min(self.n_bits) - (self.start_word * 64).min(self.n_bits)
     }
 
-    /// Have all words been emitted?
+    /// Have all of this encoder's words been emitted?
     pub fn is_done(&self) -> bool {
-        self.next_word >= self.words_total
+        self.next_word >= self.end_word
     }
 
     /// Bits whose device pulses have actually been issued so far: equal
@@ -318,6 +366,60 @@ impl GroupChunkEncoder {
     /// Number of streams in the group.
     pub fn n_streams(&self) -> usize {
         self.n_streams
+    }
+
+    /// Bank-free chunk encode for shard workers
+    /// ([`SneBank::begin_group_shards`]): emits the next chunk exactly
+    /// like [`SneBank::encode_group_chunk_into`] — stream `j`'s words at
+    /// `out[j*cw ..]`, `cw = out.len() / n_streams` — but records
+    /// nothing; per-stream switch counts accumulate into `switches` for
+    /// the owner to settle via [`SneBank::finish_group_shards`] once the
+    /// shards join. Only Live (ideal-device) encoders support this;
+    /// staged encoders are served through the bank.
+    pub(crate) fn encode_chunk_detached(
+        &mut self,
+        out: &mut [u64],
+        switches: &mut [u64],
+    ) -> usize {
+        if self.n_streams == 0 || self.is_done() {
+            return 0;
+        }
+        debug_assert_eq!(out.len() % self.n_streams, 0);
+        debug_assert_eq!(switches.len(), self.n_streams);
+        let cw = out.len() / self.n_streams;
+        let words = cw.min(self.end_word - self.next_word);
+        let is_tail = self.next_word + words == self.words_total;
+        let tail = is_tail.then(|| tail_word_mask(self.n_bits));
+        let ChunkSource::Live(streams) = &mut self.source else {
+            return 0;
+        };
+        for (j, cur) in streams.iter_mut().enumerate() {
+            switches[j] += cur.emit(&mut out[j * cw..j * cw + words], tail);
+        }
+        self.next_word += words;
+        words
+    }
+}
+
+/// An in-flight sharded grouped encode from
+/// [`SneBank::begin_group_shards`]: one positioned [`GroupChunkEncoder`]
+/// per shard plus the per-stream device assignments the owner feeds back
+/// to [`SneBank::finish_group_shards`] once the shards join.
+#[derive(Debug)]
+pub struct GroupShardSession {
+    shards: Vec<GroupChunkEncoder>,
+    snes: Vec<usize>,
+}
+
+impl GroupShardSession {
+    /// Number of shards.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Split into the per-shard encoders and the per-stream SNE indices.
+    pub fn into_parts(self) -> (Vec<GroupChunkEncoder>, Vec<usize>) {
+        (self.shards, self.snes)
     }
 }
 
@@ -488,6 +590,8 @@ impl SneBank {
                 n_streams: probs.len(),
                 n_bits,
                 words_total: w,
+                start_word: 0,
+                end_word: w,
                 next_word: 0,
             });
         }
@@ -500,9 +604,7 @@ impl SneBank {
             // so the next stream's cursor, and the bank's final state,
             // match the whole-stream encode.
             let rng = self.rng.clone();
-            let prob = p.clamp(1e-9, 1.0 - 1e-9);
-            let q = (prob * 65536.0).round() as u32;
-            let lo = if q == 0 || q >= 65536 { 16 } else { q.trailing_zeros() };
+            let (q, lo) = quantize(p);
             for _ in 0..(16 - lo) as usize * w {
                 self.rng.next_u64();
             }
@@ -513,8 +615,117 @@ impl SneBank {
             n_streams: probs.len(),
             n_bits,
             words_total: w,
+            start_word: 0,
+            end_word: w,
             next_word: 0,
         })
+    }
+
+    /// Begin a **sharded** grouped encode — the intra-decision parallel
+    /// evaluator's entry
+    /// ([`crate::network::NetlistEvaluator::set_threads`]). `bounds`
+    /// must partition the packed word range `[0, W)` into contiguous
+    /// non-empty spans; each span gets its own [`GroupChunkEncoder`]
+    /// whose per-stream RNG cursors are positioned exactly where the
+    /// whole-stream encode would read that span's first word — the
+    /// chunk-cursor machinery of [`Self::begin_group_chunks`],
+    /// generalized to arbitrary shard offsets. The shard encoders
+    /// together emit the bit-identical stream set, and the bank RNG and
+    /// SNE round-robin advance exactly as the whole-stream encode would,
+    /// so later decisions are unaffected.
+    ///
+    /// Shard workers record nothing (they run bank-free through
+    /// [`GroupChunkEncoder`]); wear and ledger are settled by
+    /// [`Self::finish_group_shards`] after the shards join, in stream
+    /// order, making the totals independent of shard interleaving. Wear
+    /// *checks* all happen here at begin — the chunked path's documented
+    /// timing.
+    ///
+    /// Only the ideal-device fast path can reposition cursors: with
+    /// `drift_coupling != 0` the pulse walk's RNG consumption is
+    /// data-dependent, and callers must fall back to single-shard
+    /// staging via [`Self::begin_group_chunks`].
+    pub fn begin_group_shards(
+        &mut self,
+        probs: &[f64],
+        bounds: &[(usize, usize)],
+    ) -> Result<GroupShardSession> {
+        for &p in probs {
+            Error::check_prob("p", p)?;
+        }
+        if self.config.params.drift_coupling != 0.0 {
+            return Err(Error::Config(
+                "begin_group_shards requires ideal devices (drift_coupling == 0); \
+                 use begin_group_chunks (single-shard staging) instead"
+                    .into(),
+            ));
+        }
+        let n_bits = self.config.n_bits;
+        let w = n_bits.div_ceil(64);
+        let contiguous = bounds.first().is_some_and(|b| b.0 == 0)
+            && bounds.last().is_some_and(|b| b.1 == w)
+            && bounds.windows(2).all(|p| p[0].1 == p[1].0)
+            && bounds.iter().all(|b| b.0 < b.1);
+        if !contiguous {
+            return Err(Error::Config(format!(
+                "shard bounds must partition the {w}-word stream contiguously"
+            )));
+        }
+        let mut snes = Vec::with_capacity(probs.len());
+        let mut cursors: Vec<Vec<StreamCursor>> =
+            bounds.iter().map(|_| Vec::with_capacity(probs.len())).collect();
+        for &p in probs {
+            let sne = self.next_sne()?;
+            let (q, lo) = quantize(p);
+            let draws = (16 - lo) as usize;
+            // Walk this stream's RNG span once, snapshotting a cursor at
+            // every shard boundary: total consumption matches the
+            // whole-stream encode exactly.
+            let mut word = 0usize;
+            for (cur, &(start, _)) in cursors.iter_mut().zip(bounds) {
+                for _ in 0..(start - word) * draws {
+                    self.rng.next_u64();
+                }
+                word = start;
+                cur.push(StreamCursor { rng: self.rng.clone(), sne, q, lo });
+            }
+            for _ in 0..(w - word) * draws {
+                self.rng.next_u64();
+            }
+            snes.push(sne);
+        }
+        let shards = cursors
+            .into_iter()
+            .zip(bounds)
+            .map(|(streams, &(start, end))| GroupChunkEncoder {
+                source: ChunkSource::Live(streams),
+                n_streams: probs.len(),
+                n_bits,
+                words_total: w,
+                start_word: start,
+                end_word: end,
+                next_word: start,
+            })
+            .collect();
+        Ok(GroupShardSession { shards, snes })
+    }
+
+    /// Settle the wear and ledger accounting of a sharded grouped encode
+    /// ([`Self::begin_group_shards`]): `snes` are the session's
+    /// per-stream device indices and `switches[j]` is stream `j`'s
+    /// switch total summed across shards. Applied in stream order with
+    /// one energy add per stream — the exact accounting sequence of
+    /// [`Self::encode_group_into`] — so the ledger is bit-identical to
+    /// the single-thread sweep no matter how many shards ran.
+    pub fn finish_group_shards(&mut self, snes: &[usize], switches: &[u64]) {
+        let energy = self.config.params.switch_energy_nj;
+        let n_bits = self.config.n_bits as u64;
+        for (&sne, &sw) in snes.iter().zip(switches) {
+            self.snes[sne].device.record_switches(sw);
+            self.ledger.pulses += n_bits;
+            self.ledger.switch_events += sw;
+            self.ledger.energy_nj += sw as f64 * energy;
+        }
     }
 
     /// Encode the next chunk of every stream in `enc` into `out`:
@@ -546,35 +757,18 @@ impl SneBank {
             return Err(Error::LengthMismatch { lhs: out.len(), rhs: enc.n_streams });
         }
         let cw = out.len() / enc.n_streams;
-        let words = cw.min(enc.words_total - enc.next_word);
+        let words = cw.min(enc.end_word - enc.next_word);
         let is_tail = enc.next_word + words == enc.words_total;
+        let tail = is_tail.then(|| tail_word_mask(enc.n_bits));
         let chunk_bits = if is_tail { enc.n_bits - enc.next_word * 64 } else { words * 64 };
         match &mut enc.source {
             ChunkSource::Live(streams) => {
                 let energy = self.config.params.switch_energy_nj;
                 for (j, cur) in streams.iter_mut().enumerate() {
-                    let dst = &mut out[j * cw..j * cw + words];
-                    if cur.q >= 65536 {
-                        dst.iter_mut().for_each(|w| *w = u64::MAX);
-                    } else if cur.q == 0 {
-                        dst.iter_mut().for_each(|w| *w = 0);
-                    } else {
-                        for word in dst.iter_mut() {
-                            // The binary-expansion construction of
-                            // `encode_into_words`, replayed from this
-                            // stream's cursor.
-                            let mut z = 0u64;
-                            for i in cur.lo..16 {
-                                let r = cur.rng.next_u64();
-                                z = if (cur.q >> i) & 1 == 1 { z | r } else { z & !r };
-                            }
-                            *word = z;
-                        }
-                    }
-                    if is_tail {
-                        dst[words - 1] &= tail_word_mask(enc.n_bits);
-                    }
-                    let switches: u64 = dst.iter().map(|w| w.count_ones() as u64).sum();
+                    // The binary-expansion construction of
+                    // `encode_into_words`, replayed from this stream's
+                    // cursor.
+                    let switches = cur.emit(&mut out[j * cw..j * cw + words], tail);
                     self.snes[cur.sne].device.record_switches(switches);
                     self.ledger.pulses += chunk_bits as u64;
                     self.ledger.switch_events += switches;
@@ -856,6 +1050,87 @@ mod tests {
             done += n;
         }
         assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn sharded_group_encode_is_bit_identical_to_whole_stream() {
+        // Shard-offset cursors must reproduce the whole-stream bits,
+        // the ledger (via deferred settlement), and the bank's
+        // post-group RNG/round-robin state, at every shard layout and
+        // odd tail length.
+        let probs = [0.3, 0.0, 0.57, 1.0, 0.72];
+        for n_bits in [512usize, 530, 1000, 1024, 4096] {
+            let w = n_bits.div_ceil(64);
+            for bounds in [vec![(0, w)], vec![(0, w / 2), (w / 2, w)], {
+                // Uneven three-way split.
+                let a = w / 3;
+                let b = 2 * w / 3;
+                vec![(0, a.max(1)), (a.max(1), b.max(2)), (b.max(2), w)]
+            }] {
+                let cfg = SneConfig { n_bits, ..Default::default() };
+                let mut whole = SneBank::new(cfg.clone(), 99).unwrap();
+                let mut sharded = SneBank::new(cfg, 99).unwrap();
+                let mut expect = vec![0u64; probs.len() * w];
+                whole.encode_group_into(&probs, &mut expect).unwrap();
+
+                let session = sharded.begin_group_shards(&probs, &bounds).unwrap();
+                assert_eq!(session.n_shards(), bounds.len());
+                let (mut shards, snes) = session.into_parts();
+                let mut got = vec![0u64; probs.len() * w];
+                let mut switches = vec![0u64; probs.len()];
+                for (enc, &(start, end)) in shards.iter_mut().zip(&bounds) {
+                    let span = end - start;
+                    let mut buf = vec![0u64; probs.len() * span];
+                    let n = enc.encode_chunk_detached(&mut buf, &mut switches);
+                    assert_eq!(n, span);
+                    assert!(enc.is_done());
+                    assert_eq!(enc.bits_done(), (end * 64).min(n_bits) - start * 64);
+                    for j in 0..probs.len() {
+                        got[j * w + start..j * w + end]
+                            .copy_from_slice(&buf[j * span..(j + 1) * span]);
+                    }
+                }
+                sharded.finish_group_shards(&snes, &switches);
+                assert_eq!(got, expect, "sharded bits diverged at {n_bits} bits");
+                assert_eq!(whole.ledger().pulses, sharded.ledger().pulses);
+                assert_eq!(whole.ledger().switch_events, sharded.ledger().switch_events);
+                assert_eq!(
+                    whole.ledger().energy_nj.to_bits(),
+                    sharded.ledger().energy_nj.to_bits(),
+                    "ledger energy must match bit-for-bit"
+                );
+                // Identical post-group bank state: next decision matches.
+                let a = whole.encode(0.41).unwrap();
+                let b = sharded.encode(0.41).unwrap();
+                assert_eq!(a, b, "post-shard bank state diverged at {n_bits} bits");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_begin_rejects_bad_bounds_and_drift() {
+        let mut bank = SneBank::seeded(4); // 100 bits -> 2 words
+        for bad in [
+            vec![],                  // empty
+            vec![(0, 1)],            // does not reach the end
+            vec![(1, 2)],            // does not start at 0
+            vec![(0, 1), (1, 1)],    // empty span
+            vec![(0, 2), (1, 2)],    // overlap
+            vec![(0, 1), (2, 2)],    // gap (and empty)
+        ] {
+            let err = bank.begin_group_shards(&[0.5], &bad).unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "{bad:?} not rejected");
+        }
+        // Sanity: a valid partition on the same bank succeeds…
+        assert!(bank.begin_group_shards(&[0.5], &[(0, 1), (1, 2)]).is_ok());
+        // …and probabilities are validated before the bank is touched.
+        assert!(bank.begin_group_shards(&[1.5], &[(0, 2)]).is_err());
+        // Nonideal devices cannot reposition cursors: typed config error.
+        let params = DeviceParams { drift_coupling: 0.05, ..Default::default() };
+        let cfg = SneConfig { n_bits: 128, params, ..Default::default() };
+        let mut drifty = SneBank::new(cfg, 5).unwrap();
+        let err = drifty.begin_group_shards(&[0.5], &[(0, 2)]).unwrap_err();
+        assert!(matches!(err, Error::Config(_)));
     }
 
     #[test]

@@ -1,0 +1,176 @@
+//! Intra-decision sharding determinism (ISSUE-9 acceptance):
+//!
+//! * the shard-parallel evaluator must be **bit-identical** to the
+//!   single-thread sweep — posteriors, energy/time ledgers, and anytime
+//!   stop decisions — at every thread budget, on shared seeds, including
+//!   stream lengths that do not divide evenly into blocks or shards;
+//! * `drift_coupling != 0` (staged nonideal encode) falls back to the
+//!   single-shard path rather than silently changing device semantics;
+//! * the `[coordinator] intra_decision_threads` knob is validated as a
+//!   typed config error (0 and oversubscription both rejected), and the
+//!   coordinator serves bit-identical decision streams under it.
+
+use std::time::Duration;
+
+use bayes_mem::config::AppConfig;
+use bayes_mem::coordinator::{Coordinator, Decision, DecisionParams, PlanSpec, Policy};
+use bayes_mem::device::WearPolicy;
+use bayes_mem::network::{compile_query, BayesNet, NetlistEvaluator, StopPolicy};
+use bayes_mem::stochastic::{SneBank, SneConfig};
+use bayes_mem::util::tomlmini::Document;
+use bayes_mem::Error;
+
+fn bank(n_bits: usize, seed: u64) -> SneBank {
+    let cfg = SneConfig { n_bits, wear_policy: WearPolicy::Ignore, ..Default::default() };
+    SneBank::new(cfg, seed).unwrap()
+}
+
+/// A 5-node diamond-ish scene exercising shared parent streams, a
+/// 2-parent MUX tree, and an evidence-conditioned CORDIV readout.
+fn scene() -> BayesNet {
+    let mut net = BayesNet::named("shard_scene");
+    net.add_root("fog", 0.3).unwrap();
+    net.add_root("night", 0.45).unwrap();
+    net.add_node("visibility", &["fog", "night"], &[0.9, 0.55, 0.5, 0.1]).unwrap();
+    net.add_node("detection", &["visibility"], &[0.2, 0.85]).unwrap();
+    net.add_node("alarm", &["detection"], &[0.08, 0.9]).unwrap();
+    net
+}
+
+#[test]
+fn sharded_sweeps_are_bit_identical_across_thread_budgets() {
+    let net = scene();
+    let netlist = compile_query(&net, "fog", &[("alarm", true)]).unwrap();
+    // Odd lengths on purpose: 1000 bits is a partial last word, 5000
+    // bits is a partial last block, 8192 is block- and shard-aligned.
+    for n_bits in [1000usize, 4096, 5000, 8192] {
+        let mut eval = NetlistEvaluator::new();
+        let mut b1 = bank(n_bits, 99);
+        let base = eval.evaluate(&mut b1, &netlist).unwrap();
+        assert_eq!(eval.last_shards(), 1);
+        let ledger1 = b1.ledger().clone();
+        for threads in [2usize, 8] {
+            let mut ev = NetlistEvaluator::new();
+            ev.set_threads(threads);
+            let mut bt = bank(n_bits, 99);
+            let out = ev.evaluate(&mut bt, &netlist).unwrap();
+            // f64 equality on purpose: sharding must be bit-exact.
+            assert_eq!(out.posterior, base.posterior, "{n_bits} bits x {threads} threads");
+            assert_eq!(out.marginal, base.marginal, "{n_bits} bits x {threads} threads");
+            let lt = bt.ledger();
+            assert_eq!(lt.pulses, ledger1.pulses, "{n_bits} bits x {threads} threads");
+            assert_eq!(
+                lt.switch_events, ledger1.switch_events,
+                "{n_bits} bits x {threads} threads"
+            );
+            assert_eq!(
+                lt.energy_nj.to_bits(),
+                ledger1.energy_nj.to_bits(),
+                "{n_bits} bits x {threads} threads: energy must match to the bit"
+            );
+        }
+    }
+}
+
+#[test]
+fn anytime_stop_decisions_match_at_every_thread_budget() {
+    let net = scene();
+    let netlist = compile_query(&net, "fog", &[("alarm", true)]).unwrap();
+    let policy = StopPolicy::converged(0.02);
+    let mut eval = NetlistEvaluator::new();
+    let mut b1 = bank(32_768, 7);
+    let base = eval.evaluate_anytime(&mut b1, &netlist, netlist.inputs(), &policy).unwrap();
+    for threads in [2usize, 8] {
+        let mut ev = NetlistEvaluator::new();
+        ev.set_threads(threads);
+        let mut bt = bank(32_768, 7);
+        let out = ev.evaluate_anytime(&mut bt, &netlist, netlist.inputs(), &policy).unwrap();
+        assert_eq!(out.posterior, base.posterior, "{threads} threads");
+        assert_eq!(out.bits_used, base.bits_used, "{threads} threads: stop point moved");
+        assert_eq!(out.stop, base.stop, "{threads} threads: stop reason changed");
+        assert_eq!(out.half_width, base.half_width, "{threads} threads");
+    }
+}
+
+#[test]
+fn drift_coupling_falls_back_to_single_shard() {
+    let net = scene();
+    let netlist = compile_query(&net, "fog", &[("alarm", true)]).unwrap();
+    let mut cfg = SneConfig { n_bits: 4096, wear_policy: WearPolicy::Ignore, ..Default::default() };
+    cfg.params.drift_coupling = 0.05;
+    let mut b1 = SneBank::new(cfg.clone(), 5).unwrap();
+    let mut eval = NetlistEvaluator::new();
+    let base = eval.evaluate(&mut b1, &netlist).unwrap();
+    let mut bt = SneBank::new(cfg, 5).unwrap();
+    let mut ev = NetlistEvaluator::new();
+    ev.set_threads(8);
+    let out = ev.evaluate(&mut bt, &netlist).unwrap();
+    assert_eq!(ev.last_shards(), 1, "nonideal devices must stage on one shard");
+    assert_eq!(out.posterior, base.posterior);
+    assert_eq!(bt.ledger().energy_nj.to_bits(), b1.ledger().energy_nj.to_bits());
+}
+
+#[test]
+fn intra_decision_threads_knob_is_validated() {
+    // 0 is a typed config error.
+    let doc = Document::parse("[coordinator]\nintra_decision_threads = 0").unwrap();
+    let err = AppConfig::from_document(&doc).unwrap_err();
+    assert!(matches!(err, Error::Config(_)), "{err}");
+    assert!(err.to_string().contains("intra_decision_threads"), "{err}");
+    // Oversubscription beyond the machine is rejected the same way.
+    if std::thread::available_parallelism().is_ok() {
+        let doc = Document::parse("[coordinator]\nintra_decision_threads = 65536").unwrap();
+        let err = AppConfig::from_document(&doc).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+    }
+    // 1 (the default) always validates.
+    let doc = Document::parse("[coordinator]\nintra_decision_threads = 1").unwrap();
+    assert_eq!(AppConfig::from_document(&doc).unwrap().coordinator.intra_decision_threads, 1);
+}
+
+/// Serve the same decision stream through a 1-worker coordinator at two
+/// intra-decision thread budgets; the replies must be bit-identical.
+fn serve_with_threads(threads: usize, bits: usize) -> Vec<Decision> {
+    let mut cfg = AppConfig::default();
+    cfg.seed = 4242;
+    cfg.coordinator.workers = 1;
+    cfg.coordinator.intra_decision_threads = threads;
+    let coord = Coordinator::start(&cfg).unwrap();
+    let h = coord.handle();
+    let plan = h
+        .prepare(PlanSpec::Inference)
+        .unwrap()
+        .with_policy(Policy { bits: Some(bits), ..Policy::default() });
+    let pending: Vec<_> = (0..12)
+        .map(|i| {
+            let x = (i as f64 + 0.5) / 12.0;
+            plan.submit(DecisionParams::Inference {
+                prior: 0.2 + 0.6 * x,
+                likelihood: 0.9 - 0.5 * x,
+                likelihood_not: 0.2 + 0.4 * x,
+            })
+            .unwrap()
+        })
+        .collect();
+    let out = pending
+        .into_iter()
+        .map(|p| p.wait_timeout(Duration::from_secs(30)).unwrap())
+        .collect();
+    coord.shutdown();
+    out
+}
+
+#[test]
+fn coordinator_decisions_are_bit_identical_under_the_thread_knob() {
+    let threads = match std::thread::available_parallelism() {
+        Ok(n) if n.get() >= 2 => 2,
+        _ => return, // single-core runner: nothing to compare
+    };
+    let base = serve_with_threads(1, 4096);
+    let sharded = serve_with_threads(threads, 4096);
+    assert_eq!(base.len(), sharded.len());
+    for (i, (a, b)) in base.iter().zip(&sharded).enumerate() {
+        assert_eq!(a.posterior, b.posterior, "decision {i} diverged under sharding");
+        assert_eq!(a.exact, b.exact, "decision {i}");
+    }
+}
