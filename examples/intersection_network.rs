@@ -135,7 +135,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     })?;
     let mut stream = plan.stream();
     for _ in 0..32 {
-        stream.push(DecisionParams::Network)?;
+        stream.push(DecisionParams::Network { overrides: vec![] })?;
     }
     let decisions: Vec<_> = stream.drain().into_iter().collect::<Result<_, _>>()?;
     let mean: f64 =

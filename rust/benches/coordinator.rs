@@ -215,7 +215,8 @@ fn main() {
                 // The serving hit path: structural lookup + evaluate.
                 let plan = plan_cache.prepare(spec()).unwrap();
                 std::hint::black_box(
-                    plan.decide_on(&mut bank, &mut eval, &DecisionParams::Network).unwrap(),
+                    plan.decide_on(&mut bank, &mut eval, &DecisionParams::Network { overrides: vec![] })
+                        .unwrap(),
                 );
             }
         },

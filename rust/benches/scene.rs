@@ -9,15 +9,30 @@
 //!   (completed decisions over accumulated hardware time at 4 µs/bit;
 //!   full 100-bit sweeps = the paper's 2,500 fps, early exits push it
 //!   higher), plus the software `wall_fps` actually sustained.
-//! * **Accuracy** — every registered scenario at 2^14-bit streams on the
+//! * **Accuracy** — every per-frame scenario at 2^14-bit streams on the
 //!   deterministic preset. Exports `fused_rate_mae_vs_oracle` (mean
 //!   per-scenario |hardware − oracle| fused detection-rate gap) and the
 //!   hardware-measured `fusion_gain_vs_thermal` / `fusion_gain_vs_rgb`
 //!   on the default mix (paper: +85 % / +19 %).
+//! * **Tracking** — the `tracked-*` family through the recursive filter
+//!   (`scene::tracker`): per-decision prior rebinding on one prepared
+//!   plan. Exports `tracker_mae_vs_reference` (served belief chain vs
+//!   the closed-form forward algorithm, acceptance ≤ 0.03) and
+//!   `track_continuity_gain` (filtered vs memoryless continuity on the
+//!   acceptance scenario).
+//! * **Rebind vs re-prepare** — same-structure specs served through the
+//!   `PlanCache` rebind path vs full `PreparedPlan::compile` per spec.
+//!   Exports `rebind_vs_reprepare_speedup` (acceptance ≥ 10×): the
+//!   whole point of splitting structure from bindings.
+
+use std::sync::Arc;
+use std::time::Instant;
 
 use bayes_mem::benchkit::Bench;
-use bayes_mem::scene::pipeline;
-use bayes_mem::scene::{PipelineConfig, ScenarioSpec};
+use bayes_mem::coordinator::{PlanCache, PlanSpec, PreparedPlan};
+use bayes_mem::network::BayesNet;
+use bayes_mem::scene::tracker;
+use bayes_mem::scene::{pipeline, PipelineConfig, ScenarioSpec, TrackerConfig};
 
 fn main() {
     let fast = std::env::var("BENCH_FAST").is_ok();
@@ -54,7 +69,7 @@ fn main() {
     let mut gaps = Vec::new();
     let mut gain_th = f64::NAN;
     let mut gain_rgb = f64::NAN;
-    for spec in ScenarioSpec::all() {
+    for spec in ScenarioSpec::all().into_iter().filter(|s| !s.is_tracked()) {
         let name = spec.name;
         let cfg = PipelineConfig::deterministic(spec, acc_frames, 4242, 1 << 14);
         let r = pipeline::run(&cfg).unwrap();
@@ -84,5 +99,92 @@ fn main() {
         gain_rgb * 100.0,
     );
 
+    // Tracking pass: the recursive filter over the tracked-* family at
+    // the same 2^14-bit operating point. The acceptance numbers come
+    // from tracked-foggy-highway.
+    let mut tracker_mae = f64::NAN;
+    let mut continuity_gain = f64::NAN;
+    for spec in ScenarioSpec::all().into_iter().filter(ScenarioSpec::is_tracked) {
+        let name = spec.name;
+        let cfg = TrackerConfig::for_scenario(spec, acc_frames, 4242);
+        let r = tracker::run(&cfg).unwrap();
+        println!(
+            "  {:<24} mae vs reference {:.4}, continuity {:.3} vs baseline {:.3} ({:+.3})",
+            name,
+            r.mae_vs_reference,
+            r.track_continuity,
+            r.baseline_continuity,
+            r.track_continuity_gain(),
+        );
+        if name == "tracked-foggy-highway" {
+            tracker_mae = r.mae_vs_reference;
+            continuity_gain = r.track_continuity_gain();
+        }
+    }
+    b.metric("tracker_mae_vs_reference", tracker_mae);
+    b.metric("track_continuity_gain", continuity_gain);
+
+    // Rebind vs re-prepare: the same-structure specs every tracked run
+    // leans on, bound through the cache vs compiled from scratch. Specs
+    // are prebuilt so both loops time the plan layer, not BayesNet
+    // construction; the cold compile includes the eager VE reference,
+    // the rebind defers it (it is recomputed lazily per binding anyway).
+    let reps = if fast { 16 } else { 64 };
+    let specs: Vec<PlanSpec> = (0..reps)
+        .map(|i| layered_spec(0.1 + 0.8 * i as f64 / reps as f64))
+        .collect();
+    let t0 = Instant::now();
+    for s in &specs {
+        std::hint::black_box(PreparedPlan::compile(s.clone()).unwrap());
+    }
+    let cold = t0.elapsed();
+    let cache = PlanCache::new(reps + 8);
+    // Pay the one structural compile outside the timer: every timed
+    // prepare below is a same-structure rebind.
+    cache.prepare(layered_spec(0.95)).unwrap();
+    let t1 = Instant::now();
+    for s in &specs {
+        std::hint::black_box(cache.prepare(s.clone()).unwrap());
+    }
+    let warm = t1.elapsed();
+    let speedup = cold.as_secs_f64() / warm.as_secs_f64().max(1e-12);
+    println!(
+        "  rebind vs re-prepare: {:.1} us cold compile vs {:.1} us rebind per spec \
+         ({speedup:.0}x, acceptance >= 10x)",
+        cold.as_secs_f64() * 1e6 / reps as f64,
+        warm.as_secs_f64() * 1e6 / reps as f64,
+    );
+    b.metric("prepare_cold_us", cold.as_secs_f64() * 1e6 / reps as f64);
+    b.metric("plan_rebind_us", warm.as_secs_f64() * 1e6 / reps as f64);
+    b.metric("rebind_vs_reprepare_speedup", speedup);
+
     b.finish_and_export();
+}
+
+/// A 15-node layered DAG for the rebind timing: three roots feeding four
+/// 3-wide layers of 2-parent nodes. Only the first root's prior varies
+/// with `prior`, so every spec shares one structure (and the cache's
+/// full-spec equality scan fails fast on the first node).
+fn layered_spec(prior: f64) -> PlanSpec {
+    let mut net = BayesNet::named("bench-layered");
+    net.add_root("r0", prior).unwrap();
+    net.add_root("r1", 0.4).unwrap();
+    net.add_root("r2", 0.6).unwrap();
+    let mut prev = ["r0".to_string(), "r1".to_string(), "r2".to_string()];
+    for layer in 0..4 {
+        let mut next = prev.clone();
+        for lane in 0..3 {
+            let name = format!("n{layer}{lane}");
+            let a = prev[lane].as_str();
+            let b = prev[(lane + 1) % 3].as_str();
+            net.add_node(&name, &[a, b], &[0.1, 0.3, 0.6, 0.9]).unwrap();
+            next[lane] = name;
+        }
+        prev = next;
+    }
+    PlanSpec::Network {
+        net: Arc::new(net),
+        query: prev[0].clone(),
+        evidence: vec![(prev[2].clone(), true)],
+    }
 }

@@ -73,6 +73,10 @@ pub struct Metrics {
     completed_by_kind: [AtomicU64; N_KINDS],
     plan_hits: AtomicU64,
     plan_misses: AtomicU64,
+    /// `prepare` calls answered by rebinding a cached same-structure
+    /// plan's parameter table (no recompile — see
+    /// [`super::PlanCache::prepare`]).
+    plan_rebinds: AtomicU64,
     /// Early exits by reason: `[reliable, converged, timely]`.
     early_exits: [AtomicU64; 3],
     /// Bits actually streamed across completed decisions.
@@ -215,6 +219,12 @@ impl Metrics {
         self.plan_misses.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A `prepare` found a cached plan with the same structure and
+    /// rebound its parameter table instead of recompiling.
+    pub fn on_plan_rebind(&self) {
+        self.plan_rebinds.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// A decision under plan `plan_id` completed (per-plan latency).
     ///
     /// The table is bounded: plan ids are monotone and never reused, so
@@ -292,6 +302,7 @@ impl Metrics {
             completed_by_kind,
             plan_hits: self.plan_hits.load(Ordering::Relaxed),
             plan_misses: self.plan_misses.load(Ordering::Relaxed),
+            plan_rebinds: self.plan_rebinds.load(Ordering::Relaxed),
             early_exits,
             bits_used_sum: self.bits_used_sum.load(Ordering::Relaxed),
             bits_full_sum: self.bits_full_sum.load(Ordering::Relaxed),
@@ -380,6 +391,9 @@ pub struct MetricsSnapshot {
     pub plan_hits: u64,
     /// `prepare` calls that compiled a fresh plan.
     pub plan_misses: u64,
+    /// `prepare` calls answered by rebinding a cached same-structure
+    /// plan (clone + parameter rewrite, no recompile).
+    pub plan_rebinds: u64,
     /// Anytime early exits by reason: `[reliable, converged, timely]`
     /// (see [`crate::network::StopReason`]).
     pub early_exits: [u64; 3],
@@ -543,9 +557,10 @@ impl MetricsSnapshot {
         ));
         out.push_str("== plans ==\n");
         out.push_str(&format!(
-            "plan cache: {} hits / {} misses ({:.0} % hit rate, {} plans served)\n",
+            "plan cache: {} hits / {} misses / {} rebinds ({:.0} % hit rate, {} plans served)\n",
             self.plan_hits,
             self.plan_misses,
+            self.plan_rebinds,
             self.plan_hit_rate() * 100.0,
             self.per_plan.len(),
         ));
@@ -582,6 +597,7 @@ mod tests {
         m.on_plan_miss();
         m.on_plan_hit();
         m.on_plan_hit();
+        m.on_plan_rebind();
         m.on_plan_complete(7, Duration::from_micros(120));
         m.on_plan_complete(7, Duration::from_micros(80));
         let s = m.snapshot();
@@ -597,8 +613,8 @@ mod tests {
         assert!((s.mean_latency_us() - 100.0).abs() < 1e-9);
         // 2 decisions over 0.8 ms of virtual hardware time = 2,500 fps.
         assert!((s.virtual_fps() - 2_500.0).abs() < 1.0);
-        assert_eq!((s.plan_hits, s.plan_misses), (2, 1));
-        assert!((s.plan_hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!((s.plan_hits, s.plan_misses, s.plan_rebinds), (2, 1, 1));
+        assert!((s.plan_hit_rate() - 2.0 / 3.0).abs() < 1e-12, "rebinds don't skew the rate");
         let plan = s.plan_latency(7).unwrap();
         assert_eq!(plan.completed, 2);
         assert_eq!(plan.latency_ns_sum, 200_000);
@@ -777,6 +793,7 @@ mod tests {
         assert_eq!(s.latency_quantile_ns(0.99), 0);
         assert_eq!(s.virtual_fps(), 0.0);
         assert_eq!(s.plan_hit_rate(), 0.0);
+        assert_eq!(s.plan_rebinds, 0);
         assert!(s.per_plan.is_empty());
         assert!(s.latency_hist.is_empty());
         assert!(s.stage_hists.iter().all(|h| h.is_empty()));

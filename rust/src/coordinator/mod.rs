@@ -18,7 +18,7 @@
 //!                                               │
 //!                                               ▼
 //!                            reply channels + metrics registry
-//!                            (plan-cache hit/miss, per-plan latency)
+//!                            (plan-cache hit/miss/rebind, per-plan latency)
 //! ```
 //!
 //! Validation and netlist compilation happen once per distinct
@@ -60,8 +60,8 @@ pub use metrics::{
     KindTag, Metrics, MetricsSnapshot, PlanLatency, LATENCY_BUCKETS_US, PER_PLAN_TABLE_CAP,
 };
 pub use plan::{
-    DecisionParams, DecisionStream, PlanCache, PlanHandle, PlanSpec, Policy, PreparedPlan,
-    MAX_FUSION_MODALITIES, MAX_POLICY_BITS,
+    DecisionParams, DecisionStream, NetworkOverride, PlanCache, PlanHandle, PlanSpec, Policy,
+    PreparedPlan, MAX_FUSION_MODALITIES, MAX_NETWORK_OVERRIDES, MAX_POLICY_BITS,
 };
 pub use request::{Decision, DecisionKind, DecisionRequest, PendingDecision};
 pub use router::{ExecPlan, Router};

@@ -32,7 +32,7 @@ use std::collections::hash_map::DefaultHasher;
 use std::collections::VecDeque;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Duration;
 
 use crate::network::{self, lower, BayesNet, Netlist, NetlistEvaluator};
@@ -69,8 +69,12 @@ pub enum PlanSpec {
         modalities: usize,
     },
     /// One posterior query against a declarative Bayesian network,
-    /// compiled to a netlist at prepare time. Fully baked: decisions
-    /// take [`DecisionParams::Network`] (no per-decision parameters).
+    /// compiled to a netlist at prepare time. The spec's CPT values are
+    /// the plan's **default bindings**; decisions may rebind individual
+    /// `(node, cpt_row)` probabilities per decision through
+    /// [`DecisionParams::Network`] overrides — zero recompile, the
+    /// fixed-structure / rebindable-probability split of the memristor
+    /// Bayesian machine (arXiv 2112.10547).
     Network {
         /// The network spec (cloning is an `Arc` bump; cache identity is
         /// structural, not pointer-based).
@@ -93,9 +97,13 @@ impl PlanSpec {
     }
 
     /// Structural cache key: a content hash over everything that decides
-    /// the compiled netlist (two `Arc<BayesNet>`s with equal contents
-    /// share a key). Collisions are resolved by full [`PartialEq`]
-    /// comparison in the cache.
+    /// the compiled netlist **structure** (two `Arc<BayesNet>`s with
+    /// equal contents share a key). CPT probability *values* are
+    /// deliberately left out: two Network specs differing only in their
+    /// floats share a key — and a compiled gate structure — so the cache
+    /// can rebind instead of recompile ([`PlanCache::prepare`]).
+    /// Collisions are resolved by full [`PartialEq`] /
+    /// [`Self::same_structure`] comparison in the cache.
     pub fn structural_key(&self) -> u64 {
         let mut h = DefaultHasher::new();
         match self {
@@ -109,9 +117,9 @@ impl PlanSpec {
                 for node in net.nodes() {
                     node.name.hash(&mut h);
                     node.parents.hash(&mut h);
-                    for &(a, p) in &node.cpt {
+                    node.cpt.len().hash(&mut h);
+                    for &(a, _) in &node.cpt {
                         a.hash(&mut h);
-                        p.to_bits().hash(&mut h);
                     }
                 }
                 query.hash(&mut h);
@@ -122,6 +130,32 @@ impl PlanSpec {
             }
         }
         h.finish()
+    }
+
+    /// Structure equality: everything [`Self::structural_key`] hashes.
+    /// Two Network specs that agree on topology, node names, CPT row
+    /// layout, query, and evidence — but not necessarily on the CPT
+    /// probability values — have the same structure and can share one
+    /// compiled plan via a rebind. For Inference/Fusion specs this is
+    /// plain equality (they carry no baked values).
+    pub fn same_structure(&self, other: &PlanSpec) -> bool {
+        match (self, other) {
+            (
+                PlanSpec::Network { net: a, query: qa, evidence: ea },
+                PlanSpec::Network { net: b, query: qb, evidence: eb },
+            ) => {
+                qa == qb
+                    && ea == eb
+                    && a.len() == b.len()
+                    && a.nodes().iter().zip(b.nodes()).all(|(x, y)| {
+                        x.name == y.name
+                            && x.parents == y.parents
+                            && x.cpt.len() == y.cpt.len()
+                            && x.cpt.iter().zip(&y.cpt).all(|(&(ax, _), &(ay, _))| ax == ay)
+                    })
+            }
+            _ => self == other,
+        }
     }
 
     /// Structural validation (the prepare-time half; parameter ranges are
@@ -174,6 +208,34 @@ pub(crate) fn check_fusion_arity(m: usize) -> Result<()> {
     Ok(())
 }
 
+/// Cap on per-decision overrides, mirrored by the wire protocol's
+/// bounds-checked decode (`serve::wire`): no client-controlled length
+/// reaches allocation unchecked.
+pub const MAX_NETWORK_OVERRIDES: usize = 1024;
+
+/// One per-decision probability rebind against a parameterized network
+/// plan: set the stream encoding `(node, cpt_row)` to `value` for this
+/// decision only. The compiled gate structure is untouched — only the
+/// SNE input bindings change (the stochastizer-array rewrite of
+/// arXiv 2112.10547).
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkOverride {
+    /// Target node name (resolved against the plan's network spec).
+    pub node: String,
+    /// CPT row index within the node, declaration order (a root's prior
+    /// is row 0).
+    pub row: u32,
+    /// Replacement probability, in `[0, 1]`.
+    pub value: f64,
+}
+
+impl NetworkOverride {
+    /// Convenience constructor.
+    pub fn new(node: impl Into<String>, row: u32, value: f64) -> Self {
+        Self { node: node.into(), row, value }
+    }
+}
+
 /// Per-decision parameters bound against a prepared plan at submit time.
 #[derive(Debug, Clone, PartialEq)]
 pub enum DecisionParams {
@@ -192,9 +254,17 @@ pub enum DecisionParams {
         /// `P(y|xᵢ)` per modality.
         posteriors: Vec<f64>,
     },
-    /// A [`PlanSpec::Network`] decision — everything is baked into the
-    /// plan.
-    Network,
+    /// A [`PlanSpec::Network`] decision. Empty `overrides` serve the
+    /// plan's baked CPT values — bit-identical to the pre-parameterized
+    /// path. Non-empty `overrides` rebind individual `(node, cpt_row)`
+    /// probabilities for this decision only (validated against the
+    /// plan's parameter table; the exact reference is re-derived per
+    /// binding by variable elimination).
+    Network {
+        /// Per-decision probability rebinds
+        /// (≤ [`MAX_NETWORK_OVERRIDES`], no duplicate targets).
+        overrides: Vec<NetworkOverride>,
+    },
 }
 
 /// Upper bound on [`Policy::bits`]. Worker scratch scales with
@@ -293,10 +363,18 @@ pub struct PreparedPlan {
     id: u64,
     spec: PlanSpec,
     netlist: Netlist,
-    /// Exact posterior for Network plans, computed once at prepare time
-    /// by variable elimination (NaN is unreachable: VE errors fail
-    /// `prepare`).
-    exact_network: f64,
+    /// The value-independent variant for Network plans: optimized by the
+    /// structural passes only ([`network::optimize_structural`]), so
+    /// every CPT row keeps its own rebindable input slot. Decisions
+    /// carrying overrides evaluate this netlist; `None` when `netlist`
+    /// itself is already structural (rebound plans) or the plan is an
+    /// operator plan.
+    param_netlist: Option<Netlist>,
+    /// Exact posterior for Network plans under the baked bindings, by
+    /// variable elimination. Filled at compile time (VE errors fail
+    /// `prepare`, typed); rebound plans fill it lazily on first use so a
+    /// rebind costs O(inputs), not a VE run.
+    exact_network: OnceLock<f64>,
     /// Optimizer statistics for Network plans (`None` for the lowered
     /// operator netlists, which rebind their inputs per decision and are
     /// never optimized).
@@ -309,35 +387,71 @@ impl PreparedPlan {
     /// so equal specs share one plan.
     pub fn compile(spec: PlanSpec) -> Result<Self> {
         spec.validate()?;
-        let (netlist, exact_network, opt_stats) = match &spec {
-            PlanSpec::Inference => (lower::inference_netlist(), f64::NAN, None),
-            PlanSpec::Fusion { modalities } => {
-                (lower::fusion_netlist(*modalities)?, f64::NAN, None)
-            }
+        let exact_network = OnceLock::new();
+        let (netlist, param_netlist, opt_stats) = match &spec {
+            PlanSpec::Inference => (lower::inference_netlist(), None, None),
+            PlanSpec::Fusion { modalities } => (lower::fusion_netlist(*modalities)?, None, None),
             PlanSpec::Network { net, query, evidence } => {
                 let ev: Vec<(&str, bool)> =
                     evidence.iter().map(|(n, v)| (n.as_str(), *v)).collect();
-                let netlist = network::compile_query(net, query, &ev)?;
+                let compiled = network::compile_query(net, query, &ev)?;
                 // Shrink the gate fabric before it serves decisions:
                 // shared CPT streams, folded deterministic rows, CSE'd
                 // subtrees, dead gates dropped. Distribution-preserving
                 // (and structurally identity when nothing fires, which
                 // keeps minimal plans bit-reproducible vs direct
                 // evaluation).
-                let (netlist, stats) = network::optimize(&netlist);
+                let (netlist, stats) = network::optimize(&compiled);
+                // The rebindable twin: value-independent passes only, so
+                // overridden decisions have a slot per CPT row to bind.
+                let (param_netlist, _) = network::optimize_structural(&compiled);
                 // Compute the exact reference once, here, by variable
                 // elimination — a typed Error::Network at prepare time
                 // instead of the old silent-NaN exact in every response.
                 let (exact, _p_ev) = network::exact_posterior_by_name(net, query, &ev)?;
-                (netlist, exact, Some(stats))
+                exact_network.set(exact).expect("freshly created");
+                (netlist, Some(param_netlist), Some(stats))
             }
         };
         Ok(Self {
             id: NEXT_PLAN_ID.fetch_add(1, Ordering::Relaxed),
             spec,
             netlist,
+            param_netlist,
             exact_network,
             opt_stats,
+        })
+    }
+
+    /// Derive a plan for `spec` from this plan's compiled structure
+    /// **without recompiling**: clone the structural netlist, rewrite
+    /// its input bindings from the new spec's CPT values through the
+    /// parameter table, and defer the exact reference to first use.
+    /// Caller guarantees `spec` [`PlanSpec::same_structure`] with this
+    /// plan's spec (the [`PlanCache`] rebind path).
+    pub(crate) fn rebind(&self, spec: PlanSpec) -> Result<Self> {
+        spec.validate()?;
+        debug_assert!(self.spec.same_structure(&spec), "rebind requires equal structure");
+        let net = match &spec {
+            PlanSpec::Network { net, .. } => net,
+            _ => {
+                return Err(Error::Coordinator(
+                    "only network plans carry rebindable parameters".into(),
+                ))
+            }
+        };
+        let mut netlist = self.rebindable_netlist().clone();
+        for (slot, id) in netlist.params().to_vec().into_iter().enumerate() {
+            let node = &net.nodes()[id.node as usize];
+            netlist.inputs[slot] = node.cpt[id.row as usize].1;
+        }
+        Ok(Self {
+            id: NEXT_PLAN_ID.fetch_add(1, Ordering::Relaxed),
+            spec,
+            netlist,
+            param_netlist: None,
+            exact_network: OnceLock::new(),
+            opt_stats: self.opt_stats.clone(),
         })
     }
 
@@ -352,9 +466,69 @@ impl PreparedPlan {
     }
 
     /// The compiled (and, for Network plans, optimized) word-parallel
-    /// netlist.
+    /// netlist serving **default-binding** decisions. Decisions carrying
+    /// overrides evaluate the structural twin — use [`Self::netlist_for`]
+    /// on the serving path.
     pub fn netlist(&self) -> &Netlist {
         &self.netlist
+    }
+
+    /// The netlist a decision with `params` evaluates: the baked,
+    /// fully-optimized netlist for default bindings (bit-identical to
+    /// the pre-parameterized path), or the structurally-optimized twin —
+    /// one rebindable slot per CPT row — when overrides are present.
+    pub fn netlist_for(&self, params: &DecisionParams) -> &Netlist {
+        match params {
+            DecisionParams::Network { overrides } if !overrides.is_empty() => {
+                self.rebindable_netlist()
+            }
+            _ => &self.netlist,
+        }
+    }
+
+    /// The netlist whose input slots carry the full parameter table
+    /// (every CPT row rebindable). For rebound plans `netlist` itself is
+    /// structural.
+    fn rebindable_netlist(&self) -> &Netlist {
+        self.param_netlist.as_ref().unwrap_or(&self.netlist)
+    }
+
+    /// Variable-elimination exact posterior under `overrides` applied to
+    /// the plan's network spec (empty = the baked bindings).
+    fn ve_exact(&self, overrides: &[NetworkOverride]) -> Result<f64> {
+        let (net, query, evidence) = match &self.spec {
+            PlanSpec::Network { net, query, evidence } => (net, query, evidence),
+            _ => {
+                return Err(Error::Coordinator(
+                    "operator plans have no network exact reference".into(),
+                ))
+            }
+        };
+        let ev: Vec<(&str, bool)> = evidence.iter().map(|(n, v)| (n.as_str(), *v)).collect();
+        if overrides.is_empty() {
+            let (exact, _p_ev) = network::exact_posterior_by_name(net, query, &ev)?;
+            return Ok(exact);
+        }
+        let mut nodes = net.nodes().to_vec();
+        for ov in overrides {
+            let i = net.resolve(&ov.node)?;
+            let row = nodes[i].cpt.get_mut(ov.row as usize).ok_or_else(|| {
+                Error::Coordinator(format!(
+                    "override row {} out of range for node '{}'",
+                    ov.row, ov.node
+                ))
+            })?;
+            row.1 = ov.value;
+        }
+        let bound = BayesNet::from_parts(net.name(), nodes);
+        let (exact, _p_ev) = network::exact_posterior_by_name(&bound, query, &ev)?;
+        Ok(exact)
+    }
+
+    /// The baked-binding exact reference (lazily derived for rebound
+    /// plans; NaN only on the unreachable operator-plan path).
+    fn baked_exact(&self) -> f64 {
+        *self.exact_network.get_or_init(|| self.ve_exact(&[]).unwrap_or(f64::NAN))
     }
 
     /// Optimizer statistics for Network plans: per-pass live gate/stream
@@ -393,7 +567,42 @@ impl PreparedPlan {
                 }
                 Ok(())
             }
-            (PlanSpec::Network { .. }, DecisionParams::Network) => Ok(()),
+            (PlanSpec::Network { net, .. }, DecisionParams::Network { overrides }) => {
+                if overrides.len() > MAX_NETWORK_OVERRIDES {
+                    return Err(Error::Coordinator(format!(
+                        "{} overrides exceed the {MAX_NETWORK_OVERRIDES}-override cap",
+                        overrides.len()
+                    )));
+                }
+                let nl = self.rebindable_netlist();
+                let mut seen: Vec<(u32, u32)> = Vec::with_capacity(overrides.len());
+                for ov in overrides {
+                    let node = net.resolve(&ov.node)? as u32;
+                    let rows = net.nodes()[node as usize].cpt.len() as u32;
+                    if ov.row >= rows {
+                        return Err(Error::Coordinator(format!(
+                            "override row {} out of range for node '{}' ({rows} rows)",
+                            ov.row, ov.node
+                        )));
+                    }
+                    Error::check_prob("override", ov.value)?;
+                    if seen.contains(&(node, ov.row)) {
+                        return Err(Error::Coordinator(format!(
+                            "duplicate override for node '{}' row {}",
+                            ov.node, ov.row
+                        )));
+                    }
+                    seen.push((node, ov.row));
+                    if nl.param_slot(node, ov.row).is_none() {
+                        return Err(Error::Coordinator(format!(
+                            "override targets node '{}' row {}, which the compiled plan \
+                             eliminated as dead (barren to the query/evidence)",
+                            ov.node, ov.row
+                        )));
+                    }
+                }
+                Ok(())
+            }
             _ => Err(Error::Coordinator(
                 "decision params do not match the prepared plan".into(),
             )),
@@ -402,7 +611,10 @@ impl PreparedPlan {
 
     /// Closed-form posterior for `params` (the accuracy reference carried
     /// in every [`Decision`]). Network plans return the value enumerated
-    /// at prepare time.
+    /// at prepare time for default bindings; overridden decisions
+    /// re-derive it by variable elimination against the bound
+    /// probabilities (admission validation makes failure unreachable —
+    /// the baked reference is the fallback).
     pub fn exact(&self, params: &DecisionParams) -> f64 {
         match (&self.spec, params) {
             (
@@ -412,14 +624,20 @@ impl PreparedPlan {
             (PlanSpec::Fusion { .. }, DecisionParams::Fusion { posteriors }) => {
                 crate::bayes::exact_fusion_m(posteriors)
             }
-            _ => self.exact_network,
+            (PlanSpec::Network { .. }, DecisionParams::Network { overrides })
+                if !overrides.is_empty() =>
+            {
+                self.ve_exact(overrides).unwrap_or_else(|_| self.baked_exact())
+            }
+            _ => self.baked_exact(),
         }
     }
 
     /// Fill the netlist input probabilities for `params`. Returns the
     /// bound slice (borrowed from `buf`, or from the plan itself for
-    /// fully-baked Network plans). Callers must have run
-    /// [`Self::validate_params`].
+    /// default-binding Network decisions — the zero-copy fast path).
+    /// Callers must have run [`Self::validate_params`]; evaluate the
+    /// result against [`Self::netlist_for`]`(params)`.
     pub fn bind_inputs<'a>(
         &'a self,
         params: &DecisionParams,
@@ -437,7 +655,26 @@ impl PreparedPlan {
                 buf.push(0.5); // the normalization MUX select
                 buf
             }
-            DecisionParams::Network => self.netlist.inputs(),
+            DecisionParams::Network { overrides } => {
+                if overrides.is_empty() {
+                    return self.netlist.inputs();
+                }
+                let nl = self.rebindable_netlist();
+                buf.clear();
+                buf.extend_from_slice(nl.inputs());
+                if let PlanSpec::Network { net, .. } = &self.spec {
+                    for ov in overrides {
+                        // Admission validated both lookups; a miss here
+                        // (unvalidated caller) leaves the baked value.
+                        if let Ok(node) = net.resolve(&ov.node) {
+                            if let Some(slot) = nl.param_slot(node as u32, ov.row) {
+                                buf[slot] = ov.value;
+                            }
+                        }
+                    }
+                }
+                buf
+            }
         }
     }
 
@@ -453,8 +690,9 @@ impl PreparedPlan {
     ) -> Result<f64> {
         self.validate_params(params)?;
         let mut buf = Vec::new();
+        let netlist = self.netlist_for(params);
         let inputs = self.bind_inputs(params, &mut buf);
-        evaluator.evaluate_with_inputs(bank, &self.netlist, inputs).map(|r| r.posterior)
+        evaluator.evaluate_with_inputs(bank, netlist, inputs).map(|r| r.posterior)
     }
 }
 
@@ -541,8 +779,15 @@ impl PlanCache {
     /// structurally equal spec prepared earlier. Same-spec concurrent
     /// prepares wait for the one in-flight compile; everything else
     /// proceeds without blocking on it.
+    ///
+    /// A spec that matches a cached Network plan's **structure** but not
+    /// its CPT values takes the rebind path: the compiled gate fabric is
+    /// reused and only the input bindings (plus the lazily-derived exact
+    /// reference) change — counted as a `plan_rebinds` metric, not a
+    /// miss, and never recompiled.
     pub fn prepare(&self, spec: PlanSpec) -> Result<Arc<PreparedPlan>> {
         let key = spec.structural_key();
+        let mut base: Option<Arc<PreparedPlan>> = None;
         {
             let mut inner = self.inner.lock().expect("plan cache poisoned");
             loop {
@@ -562,15 +807,30 @@ impl PlanCache {
                     inner = self.ready.wait(inner).expect("plan cache poisoned");
                     continue;
                 }
+                // Same structure, different CPT values: rebind off the
+                // cached plan instead of compiling (outside the lock).
+                base = inner
+                    .entries
+                    .iter()
+                    .find(|e| e.key == key && e.plan.spec().same_structure(&spec))
+                    .map(|e| Arc::clone(&e.plan));
                 inner.in_flight.push((key, spec.clone()));
                 break;
             }
         }
-        // Compile with the lock RELEASED.
+        // Compile (or rebind) with the lock RELEASED.
         let guard = InFlightGuard { cache: self, key, spec: spec.clone() };
-        let plan = Arc::new(PreparedPlan::compile(spec)?);
+        let rebound = base.is_some();
+        let plan = Arc::new(match base {
+            Some(base) => base.rebind(spec)?,
+            None => PreparedPlan::compile(spec)?,
+        });
         let mut inner = self.inner.lock().expect("plan cache poisoned");
-        self.metrics.on_plan_miss();
+        if rebound {
+            self.metrics.on_plan_rebind();
+        } else {
+            self.metrics.on_plan_miss();
+        }
         inner.tick += 1;
         let tick = inner.tick;
         if inner.entries.len() >= self.capacity {
@@ -879,7 +1139,9 @@ mod tests {
             .validate_params(&DecisionParams::Fusion { posteriors: vec![0.8, 0.7, 0.6] })
             .is_err());
         // Wrong kind.
-        assert!(plan.validate_params(&DecisionParams::Network).is_err());
+        assert!(plan
+            .validate_params(&DecisionParams::Network { overrides: vec![] })
+            .is_err());
         // Out-of-range probability.
         assert!(matches!(
             plan.validate_params(&DecisionParams::Fusion { posteriors: vec![0.8, 1.7] })
@@ -906,9 +1168,123 @@ mod tests {
         assert!(matches!(PreparedPlan::compile(bad).unwrap_err(), Error::Network(_)));
         // A good plan bakes a finite exact reference.
         let plan = PreparedPlan::compile(network_spec()).unwrap();
-        let exact = plan.exact(&DecisionParams::Network);
+        let exact = plan.exact(&DecisionParams::Network { overrides: vec![] });
         let want = crate::bayes::exact_posterior(0.3, 0.9, 0.2);
         assert!((exact - want).abs() < 1e-12);
+    }
+
+    /// `network_spec()` with a different root prior: same structure,
+    /// different CPT floats.
+    fn network_spec_with_prior(prior: f64) -> PlanSpec {
+        let mut net = BayesNet::named("chain");
+        net.add_root("a", prior).unwrap();
+        net.add_node("b", &["a"], &[0.2, 0.9]).unwrap();
+        PlanSpec::Network {
+            net: Arc::new(net),
+            query: "a".into(),
+            evidence: vec![("b".into(), true)],
+        }
+    }
+
+    #[test]
+    fn same_structure_ignores_cpt_values_only() {
+        let a = network_spec();
+        let b = network_spec_with_prior(0.7);
+        assert_ne!(a, b, "different floats: not equal");
+        assert!(a.same_structure(&b), "but structurally the same");
+        assert_eq!(a.structural_key(), b.structural_key(), "and they share a key");
+        // Different evidence is a different structure.
+        let c = PlanSpec::Network { net: chain_net(), query: "a".into(), evidence: vec![] };
+        assert!(!a.same_structure(&c));
+        // Operator specs fall back to plain equality.
+        let f2 = PlanSpec::Fusion { modalities: 2 };
+        assert!(f2.same_structure(&PlanSpec::Fusion { modalities: 2 }));
+        assert!(!f2.same_structure(&PlanSpec::Fusion { modalities: 3 }));
+    }
+
+    #[test]
+    fn overrides_are_validated_against_the_parameter_table() {
+        let plan = PreparedPlan::compile(network_spec()).unwrap();
+        let ok = DecisionParams::Network {
+            overrides: vec![NetworkOverride::new("a", 0, 0.8)],
+        };
+        plan.validate_params(&ok).unwrap();
+        // Unknown node.
+        let bad = DecisionParams::Network {
+            overrides: vec![NetworkOverride::new("zz", 0, 0.5)],
+        };
+        assert!(matches!(plan.validate_params(&bad).unwrap_err(), Error::Network(_)));
+        // Row out of range ("a" is a root: one row).
+        let bad = DecisionParams::Network {
+            overrides: vec![NetworkOverride::new("a", 1, 0.5)],
+        };
+        let err = plan.validate_params(&bad).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        // Out-of-range probability.
+        let bad = DecisionParams::Network {
+            overrides: vec![NetworkOverride::new("a", 0, 1.5)],
+        };
+        assert!(matches!(
+            plan.validate_params(&bad).unwrap_err(),
+            Error::ProbabilityRange { .. }
+        ));
+        // Duplicate target.
+        let bad = DecisionParams::Network {
+            overrides: vec![
+                NetworkOverride::new("a", 0, 0.4),
+                NetworkOverride::new("a", 0, 0.6),
+            ],
+        };
+        let err = plan.validate_params(&bad).unwrap_err();
+        assert!(err.to_string().contains("duplicate override"), "{err}");
+    }
+
+    #[test]
+    fn overridden_decisions_rebind_without_recompiling() {
+        use crate::stochastic::SneConfig;
+        let plan = PreparedPlan::compile(network_spec()).unwrap();
+        let cfg = SneConfig { n_bits: 1 << 14, ..Default::default() };
+        // Overriding the prior to its baked value must reproduce the
+        // structural netlist's posterior for that binding...
+        for prior in [0.3, 0.7] {
+            let params = DecisionParams::Network {
+                overrides: vec![NetworkOverride::new("a", 0, prior)],
+            };
+            let exact = plan.exact(&params);
+            let want = crate::bayes::exact_posterior(prior, 0.9, 0.2);
+            assert!((exact - want).abs() < 1e-12, "prior {prior}: {exact} vs {want}");
+            let mut bank = SneBank::new(cfg.clone(), 7).unwrap();
+            let mut eval = NetlistEvaluator::new();
+            let served = plan.decide_on(&mut bank, &mut eval, &params).unwrap();
+            assert!(
+                (served - exact).abs() < 0.05,
+                "prior {prior}: served {served} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn cache_rebinds_same_structure_specs_instead_of_recompiling() {
+        let metrics = Arc::new(Metrics::new());
+        let cache = PlanCache::with_metrics(8, Arc::clone(&metrics));
+        let base = cache.prepare(network_spec()).unwrap();
+        let rebound = cache.prepare(network_spec_with_prior(0.7)).unwrap();
+        assert!(!Arc::ptr_eq(&base, &rebound), "distinct specs, distinct plans");
+        assert_eq!(cache.len(), 2, "the rebound plan is its own entry");
+        // Accounting: one miss (the base compile), one rebind, and a
+        // repeat prepare of either spec is a plain hit.
+        let snap = metrics.snapshot();
+        assert_eq!(snap.plan_misses, 1);
+        assert_eq!(snap.plan_rebinds, 1);
+        cache.prepare(network_spec_with_prior(0.7)).unwrap();
+        let snap = metrics.snapshot();
+        assert_eq!(snap.plan_hits, 1);
+        assert_eq!(snap.plan_misses, 1, "rebound specs never recompile");
+        // The rebound plan serves its own exact reference and bindings.
+        let exact = rebound.exact(&DecisionParams::Network { overrides: vec![] });
+        let want = crate::bayes::exact_posterior(0.7, 0.9, 0.2);
+        assert!((exact - want).abs() < 1e-12, "{exact} vs {want}");
+        assert_eq!(rebound.netlist().inputs()[0], 0.7, "prior slot rebound");
     }
 
     #[test]
@@ -918,7 +1294,9 @@ mod tests {
         let cfg = SneConfig { n_bits: 1000, ..Default::default() };
         let mut bank = SneBank::new(cfg.clone(), 5).unwrap();
         let mut eval = NetlistEvaluator::new();
-        let via_plan = plan.decide_on(&mut bank, &mut eval, &DecisionParams::Network).unwrap();
+        let via_plan = plan
+            .decide_on(&mut bank, &mut eval, &DecisionParams::Network { overrides: vec![] })
+            .unwrap();
         let mut bank2 = SneBank::new(cfg, 5).unwrap();
         let nl = network::compile_query(&chain_net(), "a", &[("b", true)]).unwrap();
         let direct = NetlistEvaluator::new().evaluate(&mut bank2, &nl).unwrap();

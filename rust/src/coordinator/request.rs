@@ -92,9 +92,12 @@ impl DecisionKind {
                 PlanSpec::Fusion { modalities: posteriors.len() },
                 DecisionParams::Fusion { posteriors },
             ),
-            DecisionKind::Network { net, query, evidence } => {
-                (PlanSpec::Network { net, query, evidence }, DecisionParams::Network)
-            }
+            DecisionKind::Network { net, query, evidence } => (
+                PlanSpec::Network { net, query, evidence },
+                // The legacy shim always serves the baked CPT values;
+                // per-decision overrides exist only on the plan API.
+                DecisionParams::Network { overrides: Vec::new() },
+            ),
         }
     }
 
@@ -377,7 +380,7 @@ mod tests {
         assert_eq!(params, DecisionParams::Fusion { posteriors: vec![0.8, 0.7] });
         let (spec, params) = network_kind().into_plan_parts();
         assert!(matches!(spec, PlanSpec::Network { .. }));
-        assert_eq!(params, DecisionParams::Network);
+        assert_eq!(params, DecisionParams::Network { overrides: vec![] });
         let (spec, _) =
             DecisionKind::Inference { prior: 0.5, likelihood: 0.7, likelihood_not: 0.2 }
                 .into_plan_parts();

@@ -586,13 +586,14 @@ fn execute_batch(
                                 }
                             }
                             let stop = stop_policy_for(req);
+                            let netlist = plan.netlist_for(&req.params);
                             let inputs = plan.bind_inputs(&req.params, inputs_buf);
                             // Per-stage clock reads only for sampled
                             // requests: three extra Instant reads would
                             // be measurable on sub-µs netlists.
                             evaluator.set_stage_timing(req.trace.is_some());
                             let out = evaluator
-                                .evaluate_anytime(bank, plan.netlist(), inputs, &stop)?;
+                                .evaluate_anytime(bank, netlist, inputs, &stop)?;
                             if let Some(trace) = req.trace.as_deref_mut() {
                                 let s = evaluator.last_stage_ns();
                                 trace.stamp_eval(s.encode_ns, s.sweep_ns, s.readout_ns);
@@ -788,7 +789,7 @@ fn execute_pjrt(
                 }
                 // Cannot appear under an Inference/Fusion plan (params
                 // are validated at submit); leave the row zero.
-                DecisionParams::Network => {}
+                DecisionParams::Network { .. } => {}
             }
         }
         let result = if is_inference {

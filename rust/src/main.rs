@@ -50,7 +50,9 @@ use bayes_mem::network::{
     BayesNet, NetlistEvaluator, StopPolicy, StopReason, StreamDomain,
 };
 use bayes_mem::runtime::Runtime;
-use bayes_mem::scene::{fusion_input, pipeline, PipelineConfig, ScenarioSpec, VideoWorkload};
+use bayes_mem::scene::{
+    fusion_input, pipeline, tracker, PipelineConfig, ScenarioSpec, TrackerConfig, VideoWorkload,
+};
 use bayes_mem::serve::{loadgen, Client, Server, TenantSpec, WireParams, WirePolicy, WireSpec};
 use bayes_mem::stochastic::SneBank;
 
@@ -214,6 +216,8 @@ USAGE:
                         [--submitters N] [--batch N] [--inflight N]
                         [--no-anytime] [--strict-deadline]
                         [--trace-out FILE] [--metrics-out FILE]
+                        (tracked-* scenarios run the recursive filter:
+                         only --frames/--seed/--bits/--threshold apply)
   bayes-mem infer --prior P --lik P --lik-not P [--bits N]
                   [--threshold P] [--half-width H]
   bayes-mem fuse --p P --p P [--p P ...] [--bits N]
@@ -773,7 +777,9 @@ fn cmd_metrics(flags: &Flags) -> CliResult<()> {
 /// `parse-video`: the Movie S1 video workload streamed through prepared
 /// plans on the serving stack (hardware posteriors, per-frame deadlines,
 /// anytime early exit), reported against the closed-form oracle. See
-/// `scene::pipeline`.
+/// `scene::pipeline`. `tracked-*` scenarios instead run the recursive
+/// Bayesian filter (`scene::tracker`): each frame's served posterior is
+/// rebound as the next frame's prior on one prepared plan.
 fn cmd_parse_video(flags: &Flags) -> CliResult<()> {
     if flags.has("list-scenarios") {
         for s in ScenarioSpec::all() {
@@ -785,6 +791,33 @@ fn cmd_parse_video(flags: &Flags) -> CliResult<()> {
     let Some(scenario) = ScenarioSpec::by_name(name) else {
         bail!("unknown scenario {name:?} (try --list-scenarios)")
     };
+    // The tracked-* family is consumed by the recursive Bayesian filter
+    // (per-decision prior rebinding), not the per-frame pipeline.
+    if scenario.is_tracked() {
+        let defaults = TrackerConfig::default();
+        let cfg = TrackerConfig {
+            scenario,
+            frames: flags.usize_or("frames", defaults.frames),
+            seed: flags.u64_or("seed", defaults.seed),
+            bits: flags.usize_or("bits", defaults.bits),
+            threshold: flags.f64_or("threshold", defaults.threshold),
+            ..defaults
+        };
+        println!(
+            "parse-video (tracked): scenario '{}', {} frames, {} bits/decision, \
+             prior grid 1/{:.0} clamped to [{}, {}]",
+            cfg.scenario.name,
+            cfg.frames,
+            cfg.bits,
+            1.0 / cfg.quantum,
+            cfg.prior_floor,
+            cfg.prior_ceil,
+        );
+        let report = tracker::run(&cfg)?;
+        print!("{}", report.to_table());
+        println!("{}", report.snapshot.to_table());
+        return Ok(());
+    }
     let defaults = PipelineConfig::default();
     let deadline_us = flags.f64_or("deadline-us", 400.0);
     let fps = flags.f64_or("fps-target", 2_500.0);

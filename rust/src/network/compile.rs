@@ -78,6 +78,28 @@ pub enum GateOp {
 /// may assume two equal placeholders stay equal.
 pub(crate) const NO_GROUP: u32 = u32::MAX;
 
+/// Stable identity of an input slot's probability: which network node
+/// and which CPT row (declaration order) the stream encodes. The table
+/// survives structural optimization, so a caller can rebind a row's
+/// probability on a compiled plan without recompiling — the
+/// fixed-structure / rebindable-probability split of the memristor
+/// Bayesian-machine architecture (stochastizer arrays are rewritten,
+/// the gate fabric is not).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ParamId {
+    /// Network node index (as declared in the [`BayesNet`]).
+    pub node: u32,
+    /// CPT row index within the node, declaration order.
+    pub row: u32,
+}
+
+impl ParamId {
+    /// Sentinel for slots with no network identity: operator-netlist
+    /// placeholders ([`super::lower`]) are rebound positionally, never
+    /// through the parameter table.
+    pub(crate) const FREE: ParamId = ParamId { node: u32::MAX, row: u32::MAX };
+}
+
 /// A compiled query: SNE input plan, gate netlist, and CORDIV taps.
 ///
 /// Slots `0..inputs.len()` hold the encoded input streams (one grouped
@@ -94,6 +116,11 @@ pub struct Netlist {
     /// bit-exact — while sharing across nodes would correlate
     /// conditionally-independent children.
     pub(crate) input_group: Vec<u32>,
+    /// Stable `(node, cpt_row)` identity per input slot, parallel to
+    /// `inputs` ([`ParamId::FREE`] for operator placeholders). Kept
+    /// consistent through [`super::optimize`]'s structural rebuild so a
+    /// prepared plan can map a rebind target to its surviving slot.
+    pub(crate) params: Vec<ParamId>,
     pub(crate) ops: Vec<GateOp>,
     pub(crate) n_slots: usize,
     pub(crate) num: usize,
@@ -105,6 +132,20 @@ impl Netlist {
     /// SNE input probabilities, in encode order.
     pub fn inputs(&self) -> &[f64] {
         &self.inputs
+    }
+
+    /// Per-slot parameter identities, parallel to [`Self::inputs`].
+    pub fn params(&self) -> &[ParamId] {
+        &self.params
+    }
+
+    /// Input slot currently carrying `(node, row)`, if it survived
+    /// optimization (a structurally-optimized netlist keeps every
+    /// rebindable row; the full value-specializing pipeline may fold or
+    /// share slots away).
+    pub fn param_slot(&self, node: u32, row: u32) -> Option<usize> {
+        let want = ParamId { node, row };
+        self.params.iter().position(|&id| id == want)
     }
 
     /// The gates, in evaluation order.
@@ -206,10 +247,14 @@ pub fn compile(net: &BayesNet, query: usize, evidence: &[(usize, bool)]) -> Resu
     // nodes in topological order — the SNE encode plan.
     let mut inputs: Vec<f64> = Vec::new();
     let mut input_group: Vec<u32> = Vec::new();
+    let mut params: Vec<ParamId> = Vec::new();
     let mut input_base = vec![0usize; n];
     for &i in &order {
         input_base[i] = inputs.len();
-        inputs.extend(net.nodes()[i].cpt.iter().map(|&(_, p)| p));
+        for (r, &(_, p)) in net.nodes()[i].cpt.iter().enumerate() {
+            inputs.push(p);
+            params.push(ParamId { node: i as u32, row: r as u32 });
+        }
         input_group.resize(inputs.len(), i as u32);
     }
     let mut n_slots = inputs.len();
@@ -282,7 +327,7 @@ pub fn compile(net: &BayesNet, query: usize, evidence: &[(usize, bool)]) -> Resu
     n_slots += 1;
     ops.push(GateOp::And { dst: num, a: node_slot[query], b: den });
 
-    Ok(Netlist { inputs, input_group, ops, n_slots, num, den, node_slot })
+    Ok(Netlist { inputs, input_group, params, ops, n_slots, num, den, node_slot })
 }
 
 #[cfg(test)]
@@ -367,6 +412,24 @@ mod tests {
             })
             .collect();
         assert_eq!(d_muxes, vec![c_slot, c_slot, b_slot]);
+    }
+
+    #[test]
+    fn param_table_tags_every_input_slot() {
+        let net = diamond();
+        let nl = compile_query(&net, "a", &[("d", true)]).unwrap();
+        assert_eq!(nl.params().len(), nl.inputs().len());
+        // Root a: one row; b and c: two rows each; d: four rows —
+        // rows in declaration order within each node.
+        assert_eq!(nl.params()[0], ParamId { node: 0, row: 0 });
+        assert_eq!(nl.params()[1], ParamId { node: 1, row: 0 });
+        assert_eq!(nl.params()[2], ParamId { node: 1, row: 1 });
+        assert_eq!(nl.params()[8], ParamId { node: 3, row: 3 });
+        // Lookup resolves to the same slot pass 1 assigned.
+        assert_eq!(nl.param_slot(0, 0), Some(0));
+        assert_eq!(nl.param_slot(3, 3), Some(8));
+        assert_eq!(nl.param_slot(3, 4), None, "row out of range");
+        assert_eq!(nl.param_slot(9, 0), None, "unknown node");
     }
 
     #[test]

@@ -27,7 +27,7 @@
 
 use crate::{Error, Result};
 
-use super::compile::{compile_query, GateOp, Netlist, NO_GROUP};
+use super::compile::{compile_query, GateOp, Netlist, ParamId, NO_GROUP};
 use super::spec::BayesNet;
 
 /// Input-stream layout of [`inference_netlist`]:
@@ -54,8 +54,11 @@ pub fn inference_netlist() -> Netlist {
         .expect("the Eq.-1 chain always compiles");
     // The compiled groups describe the placeholder CPT, but these inputs
     // are rebound per decision — mark them unshareable so an optimizer
-    // pass can never legally merge the two 0.5 placeholders.
+    // pass can never legally merge the two 0.5 placeholders, and strip
+    // their network identities: operator slots bind positionally, never
+    // through the parameter table.
     nl.input_group = vec![NO_GROUP; nl.inputs().len()];
+    nl.params = vec![ParamId::FREE; nl.inputs().len()];
     nl
 }
 
@@ -104,8 +107,10 @@ pub fn fusion_netlist(m: usize) -> Result<Netlist> {
     ops.push(GateOp::And { dst: num, a: prod, b: half });
     Ok(Netlist {
         inputs: vec![0.5; m + 1],
-        // Placeholders rebound per decision: never shareable/foldable.
+        // Placeholders rebound per decision: never shareable/foldable,
+        // and positionally bound (no network parameter identities).
         input_group: vec![NO_GROUP; m + 1],
+        params: vec![ParamId::FREE; m + 1],
         ops,
         n_slots,
         num,

@@ -34,7 +34,10 @@
 //!    children), deterministic rows fold to constants, structurally
 //!    equal gates hash-cons (symmetric CPTs collapse), and everything
 //!    unreachable from the CORDIV taps is eliminated. Per-pass
-//!    gate/stream counts surface as [`OptStats`].
+//!    gate/stream counts surface as [`OptStats`]. Parameterized plans
+//!    compile through the value-independent subset
+//!    ([`optimize_structural()`]), which keeps every CPT-row slot
+//!    rebindable by its stable [`ParamId`].
 //! 5. **Evaluate** ([`NetlistEvaluator`]) — run the netlist over packed
 //!    `u64` words (the `bayes::batch` conventions: grouped encode,
 //!    shared `cordiv_word`/`tail_word_mask`, zero steady-state
@@ -73,7 +76,7 @@ mod validate;
 pub mod ve;
 
 pub use compile::{
-    check_evidence, check_query_evidence, compile, compile_query, GateOp, Netlist,
+    check_evidence, check_query_evidence, compile, compile_query, GateOp, Netlist, ParamId,
 };
 pub use eval::{
     AnytimePosterior, EvalStageNs, NetlistEvaluator, NetworkPosterior, StopPolicy, StopReason,
@@ -86,7 +89,7 @@ pub use exact::{
 pub use logdomain::{
     evaluate_query as evaluate_query_in_domain, LogPlan, LogPosterior, StreamDomain,
 };
-pub use optimize::{optimize, OptStats, PassStats};
+pub use optimize::{optimize, optimize_structural, OptStats, PassStats};
 pub use spec::{BayesNet, NodeSpec};
 pub use validate::{
     compiled_cost, topo_order, validate, MAX_COMPILED_COST, MAX_NODES, MAX_PARENTS,

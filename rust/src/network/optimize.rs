@@ -35,6 +35,14 @@
 //! unoptimized netlist is deliberately given up — that is the
 //! hardware win (fewer stochastizers, smaller MUX fabric; compare the
 //! stochastizer-array sharing of arXiv 2112.10547).
+//!
+//! Two entry points split on whether the CPT *values* may be baked in:
+//! [`optimize`] runs everything (stream sharing and 0/1-row folding
+//! specialize the fabric to the current probabilities), while
+//! [`optimize_structural`] runs only the value-independent passes (gate
+//! identities, CSE, dead-gate elimination) so the result stays valid for
+//! **any** probability binding — the compiled-once / rebound-per-decision
+//! contract behind parameterized plans ([`crate::coordinator`]).
 
 use std::collections::HashMap;
 
@@ -206,8 +214,10 @@ impl Pipeline {
 
     /// Pass 2: one topological sweep of constant folding and gate
     /// identities (operands always precede their gate, so a single
-    /// in-order sweep fully propagates).
-    fn fold_constants(&mut self) -> bool {
+    /// in-order sweep fully propagates). `value_fold` gates the only
+    /// value-dependent rewrite (0/1 CPT rows → constants): structural
+    /// mode must keep those slots rebindable.
+    fn fold_constants(&mut self, value_fold: bool) -> bool {
         let mut changed = false;
         for s in 0..self.nodes.len() {
             if self.rep(s) != s {
@@ -216,7 +226,7 @@ impl Pipeline {
             let node = self.nodes[s]; // copy out; arms call `self.rep`
             match node {
                 Node::Input { p, group } => {
-                    if group != NO_GROUP {
+                    if value_fold && group != NO_GROUP {
                         if p == 0.0 {
                             self.nodes[s] = Node::C0;
                             changed = true;
@@ -349,6 +359,22 @@ impl Pipeline {
 /// elimination could still renumber their slots — the serving layer
 /// simply never routes them here.
 pub fn optimize(netlist: &Netlist) -> (Netlist, OptStats) {
+    run(netlist, true)
+}
+
+/// The value-independent subset of the pipeline: gate identities, CSE,
+/// and dead-gate elimination, but **no** stream sharing and **no** 0/1
+/// row folding. Every CPT row keeps its own input slot (with its
+/// [`super::ParamId`] tag), so the compiled structure is correct for any
+/// per-decision probability binding — this is the pass set parameterized
+/// network plans compile through. Same identity contract as
+/// [`optimize`]: when nothing fires, the result is structurally
+/// identical to the input.
+pub fn optimize_structural(netlist: &Netlist) -> (Netlist, OptStats) {
+    run(netlist, false)
+}
+
+fn run(netlist: &Netlist, value_fold: bool) -> (Netlist, OptStats) {
     let n_in = netlist.inputs.len();
     let mut nodes: Vec<Node> = Vec::with_capacity(netlist.n_slots);
     for (j, &p) in netlist.inputs.iter().enumerate() {
@@ -383,10 +409,12 @@ pub fn optimize(netlist: &Netlist) -> (Netlist, OptStats) {
         stats.passes.push(PassStats { name, changed, live_streams: streams, live_gates: gates });
     }
 
-    let ch = p.share_streams();
-    record(&mut p, &mut stats, "share-streams", ch);
+    if value_fold {
+        let ch = p.share_streams();
+        record(&mut p, &mut stats, "share-streams", ch);
+    }
     for round in 0..4 {
-        let fch = p.fold_constants();
+        let fch = p.fold_constants(value_fold);
         if round == 0 || fch {
             record(&mut p, &mut stats, "fold-constants", fch);
         }
@@ -405,12 +433,19 @@ pub fn optimize(netlist: &Netlist) -> (Netlist, OptStats) {
     let mut new_index = vec![usize::MAX; n_slots];
     let mut inputs = Vec::new();
     let mut input_group = Vec::new();
+    let mut params = Vec::new();
     for s in 0..n_in {
         if live[s] && p.rep(s) == s {
             if let Node::Input { p: prob, group } = p.nodes[s] {
                 new_index[s] = inputs.len();
                 inputs.push(prob);
                 input_group.push(group);
+                // Only original input slots survive as inputs, so `s`
+                // indexes the source parameter table directly. A merged
+                // slot inherits its representative's identity (sharing
+                // only fires in value-fold mode, where rebinding is off
+                // the table anyway).
+                params.push(netlist.params[s]);
             }
         }
     }
@@ -467,7 +502,8 @@ pub fn optimize(netlist: &Netlist) -> (Netlist, OptStats) {
         live_streams: inputs.len(),
         live_gates: ops.len(),
     });
-    let optimized = Netlist { inputs, input_group, ops, n_slots: next, num, den, node_slot };
+    let optimized =
+        Netlist { inputs, input_group, params, ops, n_slots: next, num, den, node_slot };
     debug_assert!(
         stats.changed() || optimized == *netlist,
         "no pass fired but the rebuild diverged"
@@ -620,6 +656,72 @@ mod tests {
             let bit = NetlistEvaluator::new().evaluate_reference(&mut br, &opt).unwrap();
             assert_eq!(word, bit, "word/bit diverged at {n_bits} bits");
         }
+    }
+
+    #[test]
+    fn structural_mode_keeps_every_rebindable_row() {
+        // Duplicate and deterministic rows are exactly what the full
+        // pipeline specializes away — structural mode must keep them
+        // all as distinct rebindable slots.
+        let mut net = BayesNet::new();
+        net.add_root("a", 0.4).unwrap();
+        net.add_root("b", 0.3).unwrap();
+        net.add_node("c", &["a", "b"], &[0.2, 0.2, 0.0, 1.0]).unwrap();
+        let nl = compile_query(&net, "c", &[]).unwrap();
+        let (opt, _) = optimize_structural(&nl);
+        assert_eq!(opt.inputs().len(), nl.inputs().len(), "no slot may fold or share");
+        assert_eq!(opt.params(), nl.params());
+        // The full pipeline, by contrast, collapses all four rows.
+        let (full, full_stats) = optimize(&nl);
+        assert!(full_stats.changed());
+        assert!(full.inputs().len() < nl.inputs().len());
+    }
+
+    #[test]
+    fn structural_mode_threads_params_through_dce() {
+        // Barren-subtree elimination still fires structurally; surviving
+        // slots must keep their original (node, row) identities.
+        let mut net = BayesNet::new();
+        net.add_root("a", 0.4).unwrap();
+        net.add_node("b", &["a"], &[0.2, 0.9]).unwrap();
+        net.add_node("c", &["a"], &[0.3, 0.8]).unwrap();
+        let nl = compile_query(&net, "a", &[("b", true)]).unwrap();
+        let (opt, stats) = optimize_structural(&nl);
+        assert!(stats.changed(), "c's rows are dead even structurally");
+        assert_eq!(opt.inputs().len(), 3);
+        assert_eq!(opt.params().len(), 3);
+        assert_eq!(opt.param_slot(0, 0), Some(0), "a's prior survives");
+        assert_eq!(opt.param_slot(1, 0), Some(1));
+        assert_eq!(opt.param_slot(1, 1), Some(2));
+        assert_eq!(opt.param_slot(2, 0), None, "c row 0 eliminated");
+    }
+
+    #[test]
+    fn structural_mode_is_identity_when_nothing_fires() {
+        let nl = compile_query(&diamond(), "a", &[("d", true)]).unwrap();
+        let (opt, stats) = optimize_structural(&nl);
+        assert!(!stats.changed(), "{:?}", stats.passes);
+        assert_eq!(opt, nl);
+    }
+
+    #[test]
+    fn structural_cse_preserves_the_posterior_law() {
+        // The symmetric CPT still collapses its MUX fabric under CSE
+        // alone... once duplicate rows share — which structural mode
+        // refuses. So gates stay put but the distribution must too.
+        let mut net = BayesNet::new();
+        for i in 0..3 {
+            net.add_root(&format!("r{i}"), 0.3).unwrap();
+        }
+        let cpt: Vec<f64> = (0..8u32).map(|a| 0.05 + 0.25 * a.count_ones() as f64).collect();
+        net.add_node("or3", &["r0", "r1", "r2"], &cpt).unwrap();
+        let nl = compile_query(&net, "or3", &[]).unwrap();
+        let (opt, _) = optimize_structural(&nl);
+        assert_eq!(opt.inputs().len(), 3 + 8, "all rows kept");
+        let (exact, _) = super::super::ve::posterior_by_name(&net, "or3", &[]).unwrap();
+        let mut b = bank(65_536, 9);
+        let r = NetlistEvaluator::new().evaluate(&mut b, &opt).unwrap();
+        assert!((r.posterior - exact).abs() < 0.02, "{} vs {exact}", r.posterior);
     }
 
     #[test]

@@ -88,6 +88,8 @@ pub fn prometheus(snap: &MetricsSnapshot, opt_stats: &[(u64, OptStats)]) -> Stri
     out.push_str(&format!("plan_cache_hits_total {}\n", snap.plan_hits));
     out.push_str("# TYPE plan_cache_misses_total counter\n");
     out.push_str(&format!("plan_cache_misses_total {}\n", snap.plan_misses));
+    out.push_str("# TYPE plan_cache_rebinds_total counter\n");
+    out.push_str(&format!("plan_cache_rebinds_total {}\n", snap.plan_rebinds));
 
     out.push_str("# TYPE anytime_early_exits_total counter\n");
     for (i, reason) in ["reliable", "converged", "timely"].iter().enumerate() {
@@ -205,6 +207,8 @@ pub fn prometheus_tenant(tenant: &str, snap: &MetricsSnapshot) -> String {
     out.push_str(&format!("tenant_plan_cache_hits_total{{{t}}} {}\n", snap.plan_hits));
     out.push_str("# TYPE tenant_plan_cache_misses_total counter\n");
     out.push_str(&format!("tenant_plan_cache_misses_total{{{t}}} {}\n", snap.plan_misses));
+    out.push_str("# TYPE tenant_plan_cache_rebinds_total counter\n");
+    out.push_str(&format!("tenant_plan_cache_rebinds_total{{{t}}} {}\n", snap.plan_rebinds));
     out.push_str("# TYPE tenant_decision_latency_ns summary\n");
     summary(&mut out, "tenant_decision_latency_ns", &t, &snap.latency_hist);
     out
@@ -243,8 +247,8 @@ pub fn json(snap: &MetricsSnapshot, opt_stats: &[(u64, OptStats)]) -> String {
         snap.batches, snap.batched_requests
     ));
     out.push_str(&format!(
-        "  \"plan_cache\": {{\"hits\": {}, \"misses\": {}}},\n",
-        snap.plan_hits, snap.plan_misses
+        "  \"plan_cache\": {{\"hits\": {}, \"misses\": {}, \"rebinds\": {}}},\n",
+        snap.plan_hits, snap.plan_misses, snap.plan_rebinds
     ));
     out.push_str(&format!(
         "  \"anytime\": {{\"reliable\": {}, \"converged\": {}, \"timely\": {}, \

@@ -16,21 +16,29 @@
 //! the native Rust path compute the same function (verified by an
 //! integration test).
 //!
-//! Two consumption paths exist for the video workload:
-//! [`VideoWorkload::run`] is the **closed-form oracle** fold, while
+//! Three consumption paths exist for the video workload:
+//! [`VideoWorkload::run`] is the **closed-form oracle** fold,
 //! [`pipeline`] streams the same frames through prepared plans on the
 //! serving stack — hardware posteriors, per-frame deadlines, anytime
-//! early exit, and scenario scripts ([`ScenarioSpec`]).
+//! early exit, and scenario scripts ([`ScenarioSpec`]) — and
+//! [`tracker`] closes the loop: recursive Bayesian filtering where each
+//! frame's served posterior is rebound as the next frame's prior on one
+//! prepared plan (the `tracked-*` scenario family).
 
 mod detector;
 pub mod pipeline;
 mod scenario;
+pub mod tracker;
 mod video;
 
 pub use detector::{detector_logits, fusion_input, DetectorModel, Modality, CONFIDENCE_CEIL, FEATURE_DIM};
-pub use pipeline::{scenario_network, PipelineConfig, PipelineReport, ScenarioContext};
+pub use pipeline::{
+    scenario_network, scenario_network_with_prior, PipelineConfig, PipelineReport,
+    ScenarioContext, HAZARD_BAKED_PRIOR,
+};
 pub use scenario::{
     LaneChangeScenario, Obstacle, ObstacleClass, ScenarioPhase, ScenarioSpec, SceneFrame,
     SceneGenerator, Visibility,
 };
+pub use tracker::{TrackStep, TrackerConfig, TrackerReport};
 pub use video::{FrameDetections, VideoStats, VideoWorkload};

@@ -281,15 +281,30 @@ impl PipelineReport {
     }
 }
 
+/// The baked `P(hazard)` prior of [`scenario_network`] — the value a
+/// [`crate::coordinator::NetworkOverride`] on `("hazard", row 0)`
+/// replaces, and the starting belief of the recursive filter
+/// ([`super::tracker`]).
+pub const HAZARD_BAKED_PRIOR: f64 = 0.35;
+
 /// The visibility-conditioned scenario hazard network: a 5-node DAG
 /// whose CPTs are conditioned on the ambient [`Visibility`] (degraded
 /// sensing prior from the attenuation, an ambient-light-dependent RGB
 /// head, a light-blind thermal head, and an OR-ish alert). Queried as
 /// `P(hazard | alert = 1)` by the pipeline's context plans.
 pub fn scenario_network(vis: Visibility) -> BayesNet {
+    scenario_network_with_prior(vis, HAZARD_BAKED_PRIOR)
+}
+
+/// [`scenario_network`] with an explicit hazard prior — the closed-form
+/// counterpart of overriding `("hazard", row 0)` on a prepared plan.
+/// The tracker's forward-algorithm reference rebuilds the net with its
+/// own filtered belief here, so the reference chain never touches the
+/// plan layer it is checking.
+pub fn scenario_network_with_prior(vis: Visibility, hazard_prior: f64) -> BayesNet {
     let mut net = BayesNet::named(&format!("scene-{vis:?}"));
     // P(hazard): an obstacle on a conflicting path.
-    net.add_root("hazard", 0.35).expect("fresh net");
+    net.add_root("hazard", hazard_prior).expect("fresh net");
     // P(degraded): sensing degradation under this condition.
     let degraded = (0.05 + 0.9 * vis.attenuation()).min(0.95);
     net.add_root("degraded", degraded).expect("fresh net");
@@ -397,7 +412,7 @@ pub fn run(config: &PipelineConfig) -> Result<PipelineReport> {
                 evidence: vec![("alert".into(), true)],
             })?
             .with_policy(context_policy);
-        let d = plan.decide(DecisionParams::Network)?;
+        let d = plan.decide(DecisionParams::Network { overrides: vec![] })?;
         context.push(ScenarioContext { visibility: vis, posterior: d.posterior, exact: d.exact });
     }
 

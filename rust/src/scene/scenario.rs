@@ -306,6 +306,45 @@ impl ScenarioSpec {
         }
     }
 
+    /// Tracked foggy highway: the [`Self::foggy_highway`] world consumed
+    /// by the recursive filtering loop ([`crate::scene::tracker`]) —
+    /// each frame's served posterior becomes the next frame's prior
+    /// binding on one prepared plan.
+    pub fn tracked_foggy_highway() -> Self {
+        Self {
+            name: "tracked-foggy-highway",
+            description: "foggy highway under recursive per-frame belief tracking",
+            ..Self::foggy_highway()
+        }
+    }
+
+    /// Tracked night pedestrians: [`Self::night_pedestrians`] under the
+    /// recursive filtering loop.
+    pub fn tracked_night_pedestrians() -> Self {
+        Self {
+            name: "tracked-night-pedestrians",
+            description: "night pedestrians under recursive per-frame belief tracking",
+            ..Self::night_pedestrians()
+        }
+    }
+
+    /// Tracked glare burst: [`Self::glare_burst`] under the recursive
+    /// filtering loop (belief carried through the harsh-light bursts).
+    pub fn tracked_glare_burst() -> Self {
+        Self {
+            name: "tracked-glare-burst",
+            description: "glare bursts under recursive per-frame belief tracking",
+            ..Self::glare_burst()
+        }
+    }
+
+    /// `true` for the `tracked-*` family: scenarios whose frames are
+    /// folded through the recursive Bayesian filter instead of decided
+    /// independently.
+    pub fn is_tracked(&self) -> bool {
+        self.name.starts_with("tracked-")
+    }
+
     /// Every registered scenario.
     pub fn all() -> Vec<ScenarioSpec> {
         vec![
@@ -314,6 +353,9 @@ impl ScenarioSpec {
             Self::foggy_highway(),
             Self::glare_burst(),
             Self::visibility_sweep(),
+            Self::tracked_foggy_highway(),
+            Self::tracked_night_pedestrians(),
+            Self::tracked_glare_burst(),
         ]
     }
 
@@ -628,9 +670,29 @@ mod tests {
     }
 
     #[test]
+    fn tracked_variants_share_their_base_world() {
+        let base = ScenarioSpec::foggy_highway();
+        let tracked = ScenarioSpec::tracked_foggy_highway();
+        assert!(tracked.is_tracked() && !base.is_tracked());
+        assert_eq!(tracked.phases.len(), base.phases.len());
+        assert_eq!(tracked.visibilities(), base.visibilities());
+        assert_eq!(tracked.mean_obstacles, base.mean_obstacles);
+        // Same seed, same script → bit-identical worlds: tracking changes
+        // how frames are consumed, never what happens in them.
+        let mut a = base.generator(33);
+        let mut b = tracked.generator(33);
+        for _ in 0..20 {
+            let (fa, fb) = (a.next_frame(), b.next_frame());
+            assert_eq!(fa.visibility, fb.visibility);
+            assert_eq!(fa.obstacles.len(), fb.obstacles.len());
+        }
+        assert_eq!(ScenarioSpec::all().iter().filter(|s| s.is_tracked()).count(), 3);
+    }
+
+    #[test]
     fn scenario_registry_round_trips() {
         let all = ScenarioSpec::all();
-        assert!(all.len() >= 5);
+        assert!(all.len() >= 8);
         for s in &all {
             let found = ScenarioSpec::by_name(s.name).unwrap();
             assert_eq!(found.name, s.name);

@@ -304,7 +304,7 @@ fn pick_request(rng: &mut Rng, mix: (u32, u32, u32), plans: &MixPlans) -> (u32, 
             },
         )
     } else {
-        (plans.network, WireParams::Network)
+        (plans.network, WireParams::Network { overrides: vec![] })
     }
 }
 

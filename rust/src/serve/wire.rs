@@ -280,8 +280,14 @@ pub enum WireParams {
         /// One posterior per modality.
         posteriors: Vec<f64>,
     },
-    /// Network plans bind everything at prepare time.
-    Network,
+    /// Per-decision CPT overrides against a network plan's parameter
+    /// table. Empty = serve the baked (prepare-time) bindings; each
+    /// entry is `(node, cpt_row, probability)`. Capped at
+    /// [`crate::coordinator::MAX_NETWORK_OVERRIDES`] on decode.
+    Network {
+        /// `(node, cpt_row, probability)` rebindings.
+        overrides: Vec<(String, u32, f64)>,
+    },
 }
 
 impl WireParams {
@@ -298,7 +304,14 @@ impl WireParams {
             WireParams::Fusion { posteriors } => {
                 crate::coordinator::DecisionParams::Fusion { posteriors: posteriors.clone() }
             }
-            WireParams::Network => crate::coordinator::DecisionParams::Network,
+            WireParams::Network { overrides } => crate::coordinator::DecisionParams::Network {
+                overrides: overrides
+                    .iter()
+                    .map(|(node, row, value)| {
+                        crate::coordinator::NetworkOverride::new(node.clone(), *row, *value)
+                    })
+                    .collect(),
+            },
         }
     }
 }
@@ -726,7 +739,15 @@ fn put_params(p: &mut Vec<u8>, params: &WireParams) {
                 put_f64(p, *v);
             }
         }
-        WireParams::Network => p.push(2),
+        WireParams::Network { overrides } => {
+            p.push(2);
+            put_u32(p, overrides.len() as u32);
+            for (node, row, value) in overrides {
+                put_str(p, node);
+                put_u32(p, *row);
+                put_f64(p, *value);
+            }
+        }
     }
 }
 
@@ -874,7 +895,17 @@ fn get_params(c: &mut Cursor<'_>) -> Result<WireParams, WireError> {
             }
             Ok(WireParams::Fusion { posteriors })
         }
-        2 => Ok(WireParams::Network),
+        2 => {
+            let n = c.len_capped(crate::coordinator::MAX_NETWORK_OVERRIDES, "overrides")?;
+            let mut overrides = Vec::with_capacity(n);
+            for _ in 0..n {
+                let node = c.str()?;
+                let row = c.u32()?;
+                let value = c.f64()?;
+                overrides.push((node, row, value));
+            }
+            Ok(WireParams::Network { overrides })
+        }
         t => Err(WireError::Malformed(format!("params tag {t}"))),
     }
 }
@@ -932,7 +963,11 @@ mod tests {
                 let n = rng.range_usize(1, 9);
                 WireParams::Fusion { posteriors: (0..n).map(|_| rng.f64()).collect() }
             }
-            _ => WireParams::Network,
+            _ => WireParams::Network {
+                overrides: (0..rng.range_usize(0, 4))
+                    .map(|_| (arb_string(rng, 8), (rng.next_u64() % 8) as u32, rng.f64()))
+                    .collect(),
+            },
         }
     }
 
@@ -1021,7 +1056,10 @@ mod tests {
                 plan: 9,
                 params: vec![
                     WireParams::Fusion { posteriors: vec![0.8, 0.7] },
-                    WireParams::Network,
+                    WireParams::Network { overrides: vec![] },
+                    WireParams::Network {
+                        overrides: vec![("hazard".into(), 0, 0.42), ("fog".into(), 1, 0.9)],
+                    },
                 ],
             },
             Frame::Metrics,
@@ -1216,6 +1254,59 @@ mod tests {
         put_u32(&mut p, 1);
         put_u32(&mut p, 64);
         assert_eq!(Frame::decode(0x03, &p).unwrap_err(), WireError::Truncated);
+    }
+
+    #[test]
+    fn hostile_override_fields_decode_to_typed_errors() {
+        // A Decide frame declaring 2^30 overrides in a tiny payload:
+        // rejected at the count check, before any allocation.
+        let mut p = Vec::new();
+        put_u32(&mut p, 7); // plan id
+        p.push(2); // Network params tag
+        put_u32(&mut p, 1 << 30);
+        let err = Frame::decode(0x02, &p).unwrap_err();
+        assert!(matches!(err, WireError::Malformed(_)), "{err:?}");
+
+        // A count within the cap but past the remaining bytes is a
+        // truncation.
+        let mut p = Vec::new();
+        put_u32(&mut p, 7);
+        p.push(2);
+        put_u32(&mut p, 64);
+        assert_eq!(Frame::decode(0x02, &p).unwrap_err(), WireError::Truncated);
+
+        // An override whose node-name length runs past the payload.
+        let mut p = Vec::new();
+        put_u32(&mut p, 7);
+        p.push(2);
+        put_u32(&mut p, 1);
+        put_u32(&mut p, 1 << 20); // hostile string length
+        assert_eq!(Frame::decode(0x02, &p).unwrap_err(), WireError::Truncated);
+
+        // Non-UTF-8 node names are malformed, not panics.
+        let mut p = Vec::new();
+        put_u32(&mut p, 7);
+        p.push(2);
+        put_u32(&mut p, 1);
+        put_u32(&mut p, 2);
+        p.extend_from_slice(&[0xFF, 0xFE]);
+        put_u32(&mut p, 0);
+        put_f64(&mut p, 0.5);
+        let err = Frame::decode(0x02, &p).unwrap_err();
+        assert!(matches!(err, WireError::Malformed(_)), "{err:?}");
+
+        // Random bytes after a valid Network-params prefix: never a
+        // panic, always a typed error or a (valid) decode.
+        proptest_lite::check("wire_override_fuzz", 400, |rng| {
+            let mut p = Vec::new();
+            put_u32(&mut p, rng.next_u64() as u32);
+            p.push(2);
+            let n = rng.range_usize(0, 48);
+            for _ in 0..n {
+                p.push((rng.next_u64() & 0xFF) as u8);
+            }
+            let _ = Frame::decode(0x02, &p);
+        });
     }
 
     #[test]

@@ -196,12 +196,12 @@ fn scene100_serves_through_prepared_plans_within_mae() {
         let plan = PreparedPlan::compile(spec).unwrap();
         let stats = plan.opt_stats().expect("network plans carry optimizer stats");
         assert!(stats.gate_reduction() > 0.25, "case {i}: {:.3}", stats.gate_reduction());
-        assert!((plan.exact(&DecisionParams::Network) - exact).abs() < 1e-12);
+        let baked = DecisionParams::Network { overrides: vec![] };
+        assert!((plan.exact(&baked) - exact).abs() < 1e-12);
 
         let mut b = bank(N_BITS, 4200 + i as u64);
         let mut eval = NetlistEvaluator::new();
-        let posterior =
-            plan.decide_on(&mut b, &mut eval, &DecisionParams::Network).unwrap();
+        let posterior = plan.decide_on(&mut b, &mut eval, &baked).unwrap();
         let err = (posterior - exact).abs();
         assert!(err < 0.05, "case {i}: served {posterior} vs exact {exact}");
         errs.push(err);

@@ -17,7 +17,8 @@ use std::time::Duration;
 use bayes_mem::bayes::{BatchedFusion, BatchedInference, InferenceQuery};
 use bayes_mem::config::AppConfig;
 use bayes_mem::coordinator::{
-    Coordinator, Decision, DecisionKind, DecisionParams, PlanSpec, Policy,
+    Coordinator, Decision, DecisionKind, DecisionParams, NetworkOverride, PlanSpec, Policy,
+    PreparedPlan,
 };
 use bayes_mem::network::BayesNet;
 use bayes_mem::stochastic::SneBank;
@@ -172,7 +173,7 @@ fn diamond_spec() -> PlanSpec {
 #[test]
 fn prepared_network_plan_matches_direct_evaluation_stream() {
     let cfg = single_worker_config(99);
-    let params = vec![DecisionParams::Network; 8];
+    let params = vec![DecisionParams::Network { overrides: vec![] }; 8];
     let served = serve_plan(&cfg, diamond_spec(), &params);
 
     // Direct netlist evaluation on an identically-seeded bank, decision
@@ -356,12 +357,12 @@ fn anytime_policy_applies_through_plan_handles() {
     let anytime = base
         .clone()
         .with_policy(Policy { max_half_width: Some(0.05), ..Policy::default() });
-    let d = anytime.decide(DecisionParams::Network).unwrap();
+    let d = anytime.decide(DecisionParams::Network { overrides: vec![] }).unwrap();
     assert!(d.stopped_early(), "stop {:?}", d.stop);
     assert!(d.bits_used < 16_384);
     assert!(d.confidence <= 0.05);
     assert!((d.posterior - d.exact).abs() < 0.25, "{} vs {}", d.posterior, d.exact);
-    let full = base.decide(DecisionParams::Network).unwrap();
+    let full = base.decide(DecisionParams::Network { overrides: vec![] }).unwrap();
     assert_eq!(full.bits_used, 16_384);
     assert!(!full.stopped_early());
     let snap = h.metrics().snapshot();
@@ -390,7 +391,79 @@ fn network_prepare_propagates_typed_errors() {
     assert!(matches!(h.prepare(bad).unwrap_err(), bayes_mem::Error::Network(_)));
     // Served network decisions always carry a finite exact reference.
     let plan = h.prepare(diamond_spec()).unwrap();
-    let d = plan.decide(DecisionParams::Network).unwrap();
+    let d = plan.decide(DecisionParams::Network { overrides: vec![] }).unwrap();
     assert!(d.exact.is_finite());
+    coord.shutdown();
+}
+
+/// The diamond with a different root prior — structurally identical to
+/// [`diamond_spec`], so preparing it must **rebind** the cached plan.
+fn diamond_spec_with_prior(prior: f64) -> PlanSpec {
+    let mut net = BayesNet::named("diamond");
+    net.add_root("a", prior).unwrap();
+    net.add_node("b", &["a"], &[0.2, 0.9]).unwrap();
+    net.add_node("c", &["a"], &[0.7, 0.1]).unwrap();
+    net.add_node("d", &["b", "c"], &[0.1, 0.5, 0.6, 0.95]).unwrap();
+    PlanSpec::Network { net: Arc::new(net), query: "a".into(), evidence: vec![("d".into(), true)] }
+}
+
+#[test]
+fn overridden_decisions_are_served_and_baked_bits_stay_identical() {
+    // A stream mixing baked decisions (empty overrides — the
+    // pre-parameterization path, bit-for-bit) with per-decision prior
+    // overrides on the same prepared plan.
+    let cfg = single_worker_config(91);
+    let baked = DecisionParams::Network { overrides: vec![] };
+    let hot = DecisionParams::Network { overrides: vec![NetworkOverride::new("a", 0, 0.75)] };
+    let params =
+        vec![baked.clone(), hot.clone(), baked.clone(), hot.clone(), baked, hot.clone()];
+    let served = serve_plan(&cfg, diamond_spec(), &params);
+
+    // Mirror the exact worker-bank stream through the plan's own
+    // decide_on path on an identically-seeded bank: baked decisions run
+    // the value-optimized netlist (bit-identical to pre-refactor),
+    // overridden ones run the structural twin with rewritten inputs.
+    let plan = PreparedPlan::compile(diamond_spec()).unwrap();
+    let mut bank = SneBank::new(cfg.sne.clone(), cfg.seed).unwrap();
+    let mut eval = bayes_mem::network::NetlistEvaluator::new();
+    for (i, (p, d)) in params.iter().zip(&served).enumerate() {
+        let direct = plan.decide_on(&mut bank, &mut eval, p).unwrap();
+        assert_eq!(d.posterior, direct, "decision {i} diverged from the direct plan path");
+    }
+
+    // The exact annotation moves with the binding: overridden decisions
+    // carry VE on the overridden network, baked ones the prepare-time
+    // reference.
+    let PlanSpec::Network { net: hot_net, .. } = diamond_spec_with_prior(0.75) else {
+        unreachable!()
+    };
+    let (exact_hot, _) =
+        bayes_mem::network::exact_posterior_by_name(&hot_net, "a", &[("d", true)]).unwrap();
+    let net = diamond();
+    let (exact_baked, _) =
+        bayes_mem::network::exact_posterior_by_name(&net, "a", &[("d", true)]).unwrap();
+    for (p, d) in params.iter().zip(&served) {
+        let expect = match p {
+            DecisionParams::Network { overrides } if overrides.is_empty() => exact_baked,
+            _ => exact_hot,
+        };
+        assert_eq!(d.exact, expect);
+    }
+    assert!((exact_hot - exact_baked).abs() > 0.05, "override must actually move the posterior");
+}
+
+#[test]
+fn same_structure_prepares_rebind_with_zero_misses_after_warmup() {
+    let coord = Coordinator::start(&single_worker_config(92)).unwrap();
+    let h = coord.handle();
+    h.prepare(diamond_spec()).unwrap(); // cold: the one compile
+    h.prepare(diamond_spec_with_prior(0.55)).unwrap(); // same structure: rebind
+    h.prepare(diamond_spec()).unwrap(); // warm: full-spec hit
+    h.prepare(diamond_spec_with_prior(0.55)).unwrap(); // warm: rebound entry hit
+    let snap = h.metrics().snapshot();
+    assert_eq!(snap.plan_misses, 1, "zero plan-cache misses after warmup");
+    assert_eq!(snap.plan_rebinds, 1, "one structural rebind, never a recompile");
+    assert_eq!(snap.plan_hits, 2, "warm prepares of both bindings are hits");
+    assert_eq!(h.plan_cache().len(), 2, "baked and rebound bindings are distinct entries");
     coord.shutdown();
 }

@@ -61,10 +61,31 @@ fn wire_end_to_end_all_plan_kinds() {
         .unwrap();
     assert!(d.posterior > 0.5, "agreeing cues must reinforce, got {}", d.posterior);
 
-    let d = client.decide(network, WireParams::Network).unwrap();
+    let d = client.decide(network, WireParams::Network { overrides: vec![] }).unwrap();
     assert!(d.posterior > 0.0 && d.posterior < 1.0);
     // P(fog | vis) must exceed the 0.15 prior (vis is strong evidence).
     assert!(d.exact > 0.15, "exact {}", d.exact);
+    let exact_baked = d.exact;
+
+    // The same plan with a per-decision prior override: the exact
+    // reference moves with the binding, no re-prepare.
+    let d = client
+        .decide(
+            network,
+            WireParams::Network { overrides: vec![("fog".into(), 0, 0.6)] },
+        )
+        .unwrap();
+    assert!(d.posterior > 0.0 && d.posterior < 1.0);
+    assert!(d.exact > exact_baked, "raising the prior must raise the posterior: {}", d.exact);
+
+    // Overrides failing plan validation are typed rejections.
+    let err = client
+        .decide(
+            network,
+            WireParams::Network { overrides: vec![("no-such-node".into(), 0, 0.5)] },
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("unknown node"), "{err}");
 
     // Batch frame: answered in order, all on one plan.
     let batch: Vec<WireParams> = (0..16).map(|_| inference_params()).collect();
